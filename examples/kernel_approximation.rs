@@ -1,0 +1,73 @@
+//! Gaussian-kernel approximation quality: structured vs unstructured
+//! random features across projection counts (the workload motivating
+//! random-feature kernel methods in the paper's introduction).
+//!
+//! ```bash
+//! cargo run --release --example kernel_approximation
+//! ```
+
+use strembed::data;
+use strembed::exact;
+use strembed::pmodel::StructureKind;
+use strembed::rng::Rng;
+use strembed::transform::{estimate_lambda, EmbeddingConfig, Nonlinearity, StructuredEmbedding};
+use strembed::util::{mean, table::fnum, Table};
+
+fn kernel_mse(kind: StructureKind, m: usize, n: usize, pts: &[Vec<f64>], seeds: u64) -> f64 {
+    let mut errs = Vec::new();
+    for seed in 0..seeds {
+        let emb = StructuredEmbedding::sample(
+            EmbeddingConfig::new(kind, m, n, Nonlinearity::CosSin).with_seed(seed),
+        );
+        let feats: Vec<Vec<f64>> = pts.iter().map(|p| emb.embed(p)).collect();
+        for i in 0..pts.len() {
+            for j in (i + 1)..pts.len() {
+                let est = estimate_lambda(Nonlinearity::CosSin, &feats[i], &feats[j]);
+                let want = exact::gaussian_kernel(&pts[i], &pts[j]);
+                errs.push((est - want) * (est - want));
+            }
+        }
+    }
+    mean(&errs)
+}
+
+fn main() {
+    let n = 128;
+    let mut rng = Rng::new(11);
+    let pts = data::unit_sphere(16, n, &mut rng);
+
+    let kinds = [
+        StructureKind::Dense,
+        StructureKind::Circulant,
+        StructureKind::Toeplitz,
+        StructureKind::Hankel,
+        StructureKind::Ldr(4),
+    ];
+    let mut t = Table::new(
+        "Gaussian-kernel MSE vs m (n=128, 16 points, 3 seeds)",
+        &["m", "dense", "circulant", "toeplitz", "hankel", "ldr(4)"],
+    );
+    for &m in &[32usize, 64, 128, 256, 512] {
+        let mut row = vec![m.to_string()];
+        for &k in &kinds {
+            row.push(fnum(kernel_mse(k, m, n, &pts, 3)));
+        }
+        t.row(row);
+    }
+    println!("{t}");
+
+    let mut s = Table::new(
+        "storage cost at m=512 (floats)",
+        &["family", "floats", "vs dense"],
+    );
+    for &k in &kinds {
+        let mut rng = Rng::new(1);
+        let model = k.build(512, n, &mut rng);
+        s.row(vec![
+            k.label(),
+            model.storage_floats().to_string(),
+            format!("{:.1}%", 100.0 * model.storage_floats() as f64 / (512.0 * n as f64)),
+        ]);
+    }
+    println!("{s}");
+}

@@ -1,0 +1,86 @@
+//! Quickstart: estimate three kernels with one structured embedding each
+//! and compare against the exact closed forms.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use strembed::exact;
+use strembed::pmodel::StructureKind;
+use strembed::rng::Rng;
+use strembed::transform::{
+    estimate_angle, estimate_lambda, EmbeddingConfig, Nonlinearity, StructuredEmbedding,
+};
+use strembed::util::{table::fnum, Table};
+
+fn main() {
+    let n = 128; // input dimension (power of two for the Hadamard step)
+    let m = 512; // number of random projections
+
+    // two vectors with a known angle
+    let mut rng = Rng::new(7);
+    let pts = strembed::data::unit_sphere(2, n, &mut rng);
+    let (u, v) = (&pts[0], &pts[1]);
+
+    let mut table = Table::new(
+        "structured estimates vs exact (circulant, n=128, m=512, 1 seed)",
+        &["quantity", "exact", "estimate", "abs err"],
+    );
+
+    // 1. angular similarity (f = heaviside)
+    let emb = StructuredEmbedding::sample(
+        EmbeddingConfig::new(StructureKind::Circulant, m, n, Nonlinearity::Heaviside)
+            .with_seed(1),
+    );
+    let (fu, fv) = (emb.embed(u), emb.embed(v));
+    let est = estimate_lambda(Nonlinearity::Heaviside, &fu, &fv);
+    let exact_v = exact::heaviside_kernel(u, v);
+    table.row(vec![
+        "P[both signs +]".into(),
+        fnum(exact_v),
+        fnum(est),
+        fnum((est - exact_v).abs()),
+    ]);
+    let theta_est = estimate_angle(&fu, &fv);
+    let theta = exact::angle(u, v);
+    table.row(vec![
+        "angle θ".into(),
+        fnum(theta),
+        fnum(theta_est),
+        fnum((theta_est - theta).abs()),
+    ]);
+
+    // 2. Gaussian kernel (f = cos/sin random features)
+    let emb = StructuredEmbedding::sample(
+        EmbeddingConfig::new(StructureKind::Circulant, m, n, Nonlinearity::CosSin).with_seed(2),
+    );
+    let est = estimate_lambda(Nonlinearity::CosSin, &emb.embed(u), &emb.embed(v));
+    let exact_v = exact::gaussian_kernel(u, v);
+    table.row(vec![
+        "gaussian kernel".into(),
+        fnum(exact_v),
+        fnum(est),
+        fnum((est - exact_v).abs()),
+    ]);
+
+    // 3. inner product (f = id — the JL transform)
+    let emb = StructuredEmbedding::sample(
+        EmbeddingConfig::new(StructureKind::Circulant, m, n, Nonlinearity::Identity).with_seed(3),
+    );
+    let est = estimate_lambda(Nonlinearity::Identity, &emb.embed(u), &emb.embed(v));
+    let exact_v = exact::inner_product(u, v);
+    table.row(vec![
+        "inner product".into(),
+        fnum(exact_v),
+        fnum(est),
+        fnum((est - exact_v).abs()),
+    ]);
+
+    println!("{table}");
+    println!(
+        "storage: structured = {} floats vs dense = {} floats ({}x smaller)",
+        emb.storage_floats(),
+        m * n,
+        m * n / emb.storage_floats().max(1)
+    );
+}

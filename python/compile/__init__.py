@@ -1,0 +1,1 @@
+"""Build-time compile path (L2): never imported at runtime."""

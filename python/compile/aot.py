@@ -1,0 +1,92 @@
+"""AOT export: lower each embedding variant to HLO *text* + manifest.
+
+HLO text (NOT lowered.compiler_ir(...).serialize() / proto bytes) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the rust
+`xla` crate) rejects; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--small]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import STRUCTURES, embed_fn, make_params
+
+# (structure, f) variants exported by default. Keep the matrix small but
+# covering: every structure with its flagship nonlinearity + extras.
+DEFAULT_VARIANTS = [
+    ("circulant", "heaviside"),
+    ("circulant", "cossin"),
+    ("circulant", "identity"),
+    ("toeplitz", "cossin"),
+    ("toeplitz", "relu"),
+    ("dense", "cossin"),
+]
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_variant(structure, f, n, m, batch, seed, out_dir):
+    """Lower one variant; returns its manifest entry."""
+    params = make_params(structure, f, n, m, seed)
+    fn = embed_fn(params)
+    spec = jax.ShapeDtypeStruct((batch, n), jnp.float32)
+    lowered = jax.jit(fn).lower(spec)
+    text = to_hlo_text(lowered)
+    name = f"embed_{structure}_{f}_n{n}_m{m}_b{batch}"
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as fh:
+        fh.write(text)
+    return {
+        "name": name,
+        "file": os.path.basename(path),
+        "structure": structure,
+        "f": f,
+        "n": n,
+        "m": m,
+        "batch": batch,
+        "out_dim": params.out_dim,
+        "seed": seed,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--n", type=int, default=128)
+    ap.add_argument("--m", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=2016)
+    ap.add_argument(
+        "--small", action="store_true", help="tiny shapes for smoke testing"
+    )
+    args = ap.parse_args()
+    n, m, batch = (16, 8, 4) if args.small else (args.n, args.m, args.batch)
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = []
+    for structure, f in DEFAULT_VARIANTS:
+        e = export_variant(structure, f, n, m, batch, args.seed, args.out_dir)
+        entries.append(e)
+        print(f"wrote {e['file']}")
+    manifest = {"version": 1, "variants": entries}
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"wrote manifest.json ({len(entries)} variants)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Pallas kernels (L1) for the structured-embedding pipeline."""
+
+from .diag_mul import diag_mul
+from .feature_map import feature_map, KINDS
+from .fwht import fwht
+from .matmul import matmul
+
+__all__ = ["diag_mul", "feature_map", "fwht", "matmul", "KINDS"]

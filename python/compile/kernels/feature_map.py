@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: fused pointwise nonlinearity f (the paper's feature map).
+
+Applies f elementwise to the projections z = A @ D1 H D0 x. "cossin"
+(Gaussian-kernel random features) is dimension-doubling: the kernel
+writes [cos(z), sin(z)] into a (batch, 2m) output tile in one pass -
+the fusion the paper's pipeline wants on the projection epilogue.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+KINDS = ("identity", "heaviside", "relu", "sqrelu", "cossin")
+
+
+def _feature_kernel(z_ref, o_ref, *, kind, m):
+    z = z_ref[...]
+    if kind == "identity":
+        o_ref[...] = z
+    elif kind == "heaviside":
+        o_ref[...] = (z >= 0).astype(z.dtype)
+    elif kind == "relu":
+        o_ref[...] = jnp.maximum(z, 0)
+    elif kind == "sqrelu":
+        o_ref[...] = jnp.where(z >= 0, z * z, jnp.zeros_like(z))
+    elif kind == "cossin":
+        o_ref[..., :m] = jnp.cos(z)
+        o_ref[..., m:] = jnp.sin(z)
+    else:  # pragma: no cover - guarded by feature_map()
+        raise ValueError(kind)
+
+
+def _pick_block(b, target=8):
+    for cand in range(min(b, target), 0, -1):
+        if b % cand == 0:
+            return cand
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def feature_map(z, kind):
+    """Apply nonlinearity `kind` to projections z (batch, m)."""
+    if kind not in KINDS:
+        raise ValueError(f"unknown feature kind {kind!r}; expected one of {KINDS}")
+    b, m = z.shape
+    out_m = 2 * m if kind == "cossin" else m
+    bb = _pick_block(b)
+    return pl.pallas_call(
+        functools.partial(_feature_kernel, kind=kind, m=m),
+        out_shape=jax.ShapeDtypeStruct((b, out_m), z.dtype),
+        grid=(b // bb,),
+        in_specs=[pl.BlockSpec((bb, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bb, out_m), lambda i: (i, 0)),
+        interpret=True,
+    )(z)

@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: fast Walsh-Hadamard transform.
+
+The H in the paper's D1*H*D0 preprocessing step. TPU mapping: each grid
+step loads a (block_b, n) tile of rows into VMEM and runs all log2(n)
+butterfly stages in-register before a single store - no HBM round trips
+between stages (this is the core of the hardware adaptation described in
+DESIGN.md: the GPU version would stage through shared memory per
+threadblock; on TPU the whole transform fits the VMEM scratchpad for the
+n used by the paper's pipelines).
+
+interpret=True always: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _fwht_kernel(x_ref, o_ref, *, n):
+    x = x_ref[...]
+    b = x.shape[0]
+    h = 1
+    # log2(n) statically-unrolled butterfly stages, all in VMEM
+    while h < n:
+        x = x.reshape(b, n // (2 * h), 2, h)
+        a, c = x[:, :, 0, :], x[:, :, 1, :]
+        x = jnp.stack([a + c, a - c], axis=2).reshape(b, n)
+        h *= 2
+    o_ref[...] = x * (1.0 / np.sqrt(n)).astype(x.dtype)
+
+
+def _pick_block(b, target=8):
+    """Largest divisor of b that is <= target (keeps the grid exact)."""
+    for cand in range(min(b, target), 0, -1):
+        if b % cand == 0:
+            return cand
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def fwht(x, block_b=None):
+    """Normalized WHT of each row of x (batch, n); n must be a power of 2."""
+    b, n = x.shape
+    assert n & (n - 1) == 0 and n > 0, f"n must be a power of two, got {n}"
+    bb = block_b or _pick_block(b)
+    return pl.pallas_call(
+        functools.partial(_fwht_kernel, n=n),
+        out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
+        grid=(b // bb,),
+        in_specs=[pl.BlockSpec((bb, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bb, n), lambda i: (i, 0)),
+        interpret=True,
+    )(x)

@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (the CORE correctness signal).
+
+Each function here is the mathematically transparent reference the
+Pallas kernels in this package are tested against (pytest + hypothesis).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def fwht_ref(x):
+    """Normalized Walsh-Hadamard transform of each row of x (batch, n)."""
+    x = jnp.asarray(x)
+    b, n = x.shape
+    assert n & (n - 1) == 0, "n must be a power of two"
+    h = 1
+    while h < n:
+        x = x.reshape(b, n // (2 * h), 2, h)
+        a, c = x[:, :, 0, :], x[:, :, 1, :]
+        x = jnp.stack([a + c, a - c], axis=2).reshape(b, n)
+        h *= 2
+    return x / np.sqrt(n)
+
+
+def diag_mul_ref(x, d):
+    """Row-wise diagonal scaling: y[b, j] = x[b, j] * d[j]."""
+    return jnp.asarray(x) * jnp.asarray(d)[None, :]
+
+
+def feature_map_ref(z, kind):
+    """Pointwise nonlinearity f applied to projections z (batch, m).
+
+    kind in {"identity", "heaviside", "relu", "sqrelu", "cossin"};
+    "cossin" doubles the feature dimension: [cos(z), sin(z)].
+    """
+    z = jnp.asarray(z)
+    if kind == "identity":
+        return z
+    if kind == "heaviside":
+        return (z >= 0).astype(z.dtype)
+    if kind == "relu":
+        return jnp.maximum(z, 0)
+    if kind == "sqrelu":
+        return jnp.where(z >= 0, z * z, 0)
+    if kind == "cossin":
+        return jnp.concatenate([jnp.cos(z), jnp.sin(z)], axis=-1)
+    raise ValueError(f"unknown feature kind {kind!r}")
+
+
+def matmul_ref(x, y):
+    """Plain matrix product."""
+    return jnp.asarray(x) @ jnp.asarray(y)
+
+
+def circulant_project_ref(x, g, m):
+    """Rows of the circulant projection: y[b, i] = sum_j g[(j-i) mod n] x[b, j].
+
+    Materializes A explicitly - O(n^2) oracle.
+    """
+    x = np.asarray(x)
+    g = np.asarray(g)
+    n = g.shape[0]
+    # np.roll(g, i)[j] = g[(j-i) mod n] = A[i][j]
+    A = np.stack([np.roll(g, i) for i in range(m)])
+    return x @ A.T
+
+
+def toeplitz_project_ref(x, g, m):
+    """Toeplitz projection oracle: A[i][j] = g[j-i] if j>=i else g[n-1+i-j]."""
+    x = np.asarray(x)
+    g = np.asarray(g)
+    n = x.shape[1]
+    A = np.zeros((m, n), dtype=g.dtype)
+    for i in range(m):
+        for j in range(n):
+            A[i, j] = g[j - i] if j >= i else g[n - 1 + i - j]
+    return x @ A.T

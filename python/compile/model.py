@@ -1,0 +1,129 @@
+"""L2: the paper's embedding pipeline as a JAX computation.
+
+    x -> D0 -> H (pallas fwht) -> D1 -> A (structured) -> f (pallas)
+
+Structured projection variants:
+  - "circulant": y = irfft(rfft(x_pre) * conj(rfft(g)))[:, :m]   (t = n)
+  - "toeplitz":  circulant embedding of size next_pow2(n + m - 1) (t = n+m-1)
+  - "dense":     y = x_pre @ A.T via the Pallas blocked matmul    (t = m*n)
+
+All randomness (diagonals, budgets) is generated here at build time from
+an explicit seed and baked into the lowered HLO as constants: the rust
+request path never generates or loads weights separately.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import diag_mul, feature_map, fwht
+
+STRUCTURES = ("circulant", "toeplitz", "dense")
+
+
+def _next_pow2(v):
+    p = 1
+    while p < v:
+        p *= 2
+    return p
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbedParams:
+    """Baked parameters of one embedding variant."""
+
+    structure: str
+    f: str
+    n: int
+    m: int
+    d0: np.ndarray
+    d1: np.ndarray
+    weights: np.ndarray  # budget g (structured) or dense A
+
+    @property
+    def out_dim(self):
+        return 2 * self.m if self.f == "cossin" else self.m
+
+
+def make_params(structure, f, n, m, seed):
+    """Sample the diagonals and budget for one variant."""
+    assert structure in STRUCTURES, structure
+    assert n & (n - 1) == 0, f"n must be a power of two, got {n}"
+    rng = np.random.default_rng(seed)
+    d0 = rng.choice([-1.0, 1.0], size=n).astype(np.float32)
+    d1 = rng.choice([-1.0, 1.0], size=n).astype(np.float32)
+    if structure == "circulant":
+        assert m <= n, "circulant needs m <= n"
+        w = rng.standard_normal(n).astype(np.float32)
+    elif structure == "toeplitz":
+        w = rng.standard_normal(n + m - 1).astype(np.float32)
+    else:  # dense
+        w = rng.standard_normal((m, n)).astype(np.float32)
+    return EmbedParams(structure, f, n, m, d0, d1, w)
+
+
+def _circulant_project(x, g, m):
+    """y[b, i] = sum_j g[(j-i) mod n] x[b, j] via real FFT correlation."""
+    gspec = jnp.conj(jnp.fft.rfft(g))
+    y = jnp.fft.irfft(jnp.fft.rfft(x, axis=1) * gspec[None, :], n=x.shape[1], axis=1)
+    return y[:, :m]
+
+
+def _toeplitz_project(x, g, n, m):
+    """Embed the (m, n) Toeplitz matrix into an N-point circulant."""
+    big = _next_pow2(n + m - 1)
+    c = jnp.zeros(big, dtype=x.dtype)
+    c = c.at[:n].set(g[:n])
+    for e in range(1, m):
+        c = c.at[big - e].set(g[n - 1 + e])
+    xp = jnp.pad(x, ((0, 0), (0, big - n)))
+    cspec = jnp.conj(jnp.fft.rfft(c))
+    y = jnp.fft.irfft(jnp.fft.rfft(xp, axis=1) * cspec[None, :], n=big, axis=1)
+    return y[:, :m]
+
+
+def embed_fn(params):
+    """Build the jittable embedding function for `params`.
+
+    Returns fn(x: (batch, n) f32) -> (batch, out_dim) f32.
+    """
+
+    p = params
+
+    def fn(x):
+        x = diag_mul(x, p.d0)
+        x = fwht(x)
+        x = diag_mul(x, p.d1)
+        if p.structure == "circulant":
+            z = _circulant_project(x, jnp.asarray(p.weights), p.m)
+        elif p.structure == "toeplitz":
+            z = _toeplitz_project(x, jnp.asarray(p.weights), p.n, p.m)
+        else:
+            # dense: pallas blocked matmul against A^T
+            from .kernels import matmul
+
+            z = matmul(x, jnp.asarray(p.weights).T)
+        return feature_map(z, p.f)
+
+    return fn
+
+
+def reference_embed(params, x):
+    """Pure-numpy oracle of the full pipeline (no pallas, no jit)."""
+    from .kernels import ref
+
+    x = np.asarray(x, dtype=np.float64)
+    x = x * params.d0[None, :].astype(np.float64)
+    x = np.asarray(ref.fwht_ref(jnp.asarray(x)))
+    x = x * params.d1[None, :].astype(np.float64)
+    w = params.weights.astype(np.float64)
+    if params.structure == "circulant":
+        z = ref.circulant_project_ref(x, w, params.m)
+    elif params.structure == "toeplitz":
+        z = ref.toeplitz_project_ref(x, w, params.m)
+    else:
+        z = x @ w.T
+    return np.asarray(ref.feature_map_ref(jnp.asarray(z), params.f))

@@ -1,0 +1,53 @@
+"""AOT export: HLO text artifacts + manifest."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile.aot import export_variant, to_hlo_text
+from compile.model import embed_fn, make_params
+
+import jax
+import jax.numpy as jnp
+
+
+def test_to_hlo_text_produces_parseable_module(tmp_path):
+    params = make_params("circulant", "heaviside", 16, 8, seed=1)
+    lowered = jax.jit(embed_fn(params)).lower(
+        jax.ShapeDtypeStruct((2, 16), jnp.float32)
+    )
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[2,16]" in text  # input shape present
+
+
+def test_export_variant_writes_file_and_entry(tmp_path):
+    e = export_variant("toeplitz", "cossin", 16, 8, 2, 3, str(tmp_path))
+    path = tmp_path / e["file"]
+    assert path.exists()
+    assert e["out_dim"] == 16
+    assert e["structure"] == "toeplitz"
+    text = path.read_text()
+    assert "HloModule" in text
+
+
+def test_cli_small_export(tmp_path):
+    env = dict(os.environ)
+    out = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path), "--small"],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    assert len(manifest["variants"]) >= 4
+    for v in manifest["variants"]:
+        assert (tmp_path / v["file"]).exists()
+        assert v["n"] == 16 and v["m"] == 8

@@ -1,0 +1,71 @@
+"""diag_mul + feature_map Pallas kernels vs oracles."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import diag_mul, feature_map, KINDS
+from compile.kernels.ref import diag_mul_ref, feature_map_ref
+
+
+@hypothesis.settings(deadline=None, max_examples=20)
+@hypothesis.given(
+    b=st.integers(1, 9),
+    n=st.sampled_from([1, 3, 8, 64, 130]),
+    seed=st.integers(0, 10**6),
+)
+def test_diag_mul_matches_ref(b, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((b, n)).astype(np.float32)
+    d = rng.choice([-1.0, 1.0], size=n).astype(np.float32)
+    got = np.asarray(diag_mul(jnp.asarray(x), jnp.asarray(d)))
+    want = np.asarray(diag_mul_ref(x, d))
+    assert_allclose(got, want, rtol=1e-6)
+
+
+def test_diag_mul_is_involution_for_signs():
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((4, 16)).astype(np.float32)
+    d = rng.choice([-1.0, 1.0], size=16).astype(np.float32)
+    y = diag_mul(diag_mul(jnp.asarray(x), d), d)
+    assert_allclose(np.asarray(y), x, rtol=1e-6)
+
+
+@hypothesis.settings(deadline=None, max_examples=30)
+@hypothesis.given(
+    kind=st.sampled_from(KINDS),
+    b=st.integers(1, 6),
+    m=st.sampled_from([1, 4, 16, 33]),
+    seed=st.integers(0, 10**6),
+)
+def test_feature_map_matches_ref(kind, b, m, seed):
+    rng = np.random.default_rng(seed)
+    z = (3.0 * rng.standard_normal((b, m))).astype(np.float32)
+    got = np.asarray(feature_map(jnp.asarray(z), kind))
+    want = np.asarray(feature_map_ref(jnp.asarray(z), kind))
+    expected_m = 2 * m if kind == "cossin" else m
+    assert got.shape == (b, expected_m)
+    assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_heaviside_is_binary_and_includes_zero():
+    z = jnp.asarray([[-1.0, 0.0, 2.0]], jnp.float32)
+    out = np.asarray(feature_map(z, "heaviside"))
+    assert_allclose(out, [[0.0, 1.0, 1.0]])
+
+
+def test_cossin_identity():
+    # cos^2 + sin^2 == 1 per projection
+    rng = np.random.default_rng(5)
+    z = rng.standard_normal((3, 8)).astype(np.float32)
+    out = np.asarray(feature_map(jnp.asarray(z), "cossin"))
+    c, s = out[:, :8], out[:, 8:]
+    assert_allclose(c * c + s * s, np.ones_like(c), rtol=1e-5)
+
+
+def test_unknown_kind_raises():
+    with pytest.raises(ValueError):
+        feature_map(jnp.zeros((1, 4), jnp.float32), "tanh")

@@ -1,0 +1,72 @@
+"""Pallas FWHT kernel vs pure-jnp oracle (hypothesis shape/value sweeps)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import fwht
+from compile.kernels.ref import fwht_ref
+
+SHAPES = st.tuples(
+    st.integers(min_value=1, max_value=9),  # batch
+    st.sampled_from([1, 2, 4, 8, 32, 128, 256]),  # n (power of two)
+)
+
+
+@hypothesis.settings(deadline=None, max_examples=25)
+@hypothesis.given(shape=SHAPES, seed=st.integers(0, 2**31 - 1))
+def test_fwht_matches_ref(shape, seed):
+    b, n = shape
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((b, n)).astype(np.float32)
+    got = np.asarray(fwht(jnp.asarray(x)))
+    want = np.asarray(fwht_ref(jnp.asarray(x)))
+    assert got.shape == (b, n)
+    assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.settings(deadline=None, max_examples=15)
+@hypothesis.given(
+    n=st.sampled_from([2, 8, 64]), b=st.integers(1, 5), seed=st.integers(0, 10**6)
+)
+def test_fwht_is_involution(n, b, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((b, n)).astype(np.float32)
+    back = np.asarray(fwht(fwht(jnp.asarray(x))))
+    assert_allclose(back, x, rtol=1e-4, atol=1e-5)
+
+
+def test_fwht_preserves_norm():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((4, 64)).astype(np.float32)
+    y = np.asarray(fwht(jnp.asarray(x)))
+    assert_allclose(
+        np.linalg.norm(y, axis=1), np.linalg.norm(x, axis=1), rtol=1e-5
+    )
+
+
+def test_fwht_matches_dense_hadamard():
+    n = 16
+    # H[i,j] = (-1)^{popcount(i&j)} / sqrt(n)
+    i = np.arange(n)
+    H = ((-1.0) ** np.array([[bin(a & b).count("1") for b in i] for a in i])) / np.sqrt(n)
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((3, n)).astype(np.float32)
+    want = x @ H.T
+    got = np.asarray(fwht(jnp.asarray(x)))
+    assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_fwht_rejects_non_pow2():
+    with pytest.raises(AssertionError):
+        fwht(jnp.zeros((2, 12), jnp.float32))
+
+
+def test_fwht_dtype_preserved():
+    # float32 only: jax x64 is disabled in this build, float64 inputs are
+    # canonicalized to float32 on entry
+    x = np.ones((2, 8), dtype=np.float32)
+    assert np.asarray(fwht(jnp.asarray(x))).dtype == np.float32

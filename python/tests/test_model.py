@@ -1,0 +1,85 @@
+"""L2 pipeline: embed_fn variants vs the pure-numpy reference pipeline."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.model import STRUCTURES, embed_fn, make_params, reference_embed
+
+FS = ("identity", "heaviside", "relu", "sqrelu", "cossin")
+
+
+@pytest.mark.parametrize("structure", STRUCTURES)
+@pytest.mark.parametrize("f", FS)
+def test_embed_matches_reference(structure, f):
+    n, m, b = 32, 16, 4
+    params = make_params(structure, f, n, m, seed=7)
+    fn = jax.jit(embed_fn(params))
+    rng = np.random.default_rng(11)
+    x = rng.standard_normal((b, n)).astype(np.float32)
+    got = np.asarray(fn(jnp.asarray(x)))
+    want = reference_embed(params, x)
+    assert got.shape == (b, params.out_dim)
+    # heaviside is discontinuous at 0: exact match expected anyway since
+    # float32 projections are identical to ~1e-6 and never exactly 0 here
+    assert_allclose(got, want.astype(np.float32), rtol=2e-3, atol=2e-3)
+
+
+@hypothesis.settings(deadline=None, max_examples=10)
+@hypothesis.given(
+    structure=st.sampled_from(STRUCTURES),
+    n=st.sampled_from([16, 64]),
+    seed=st.integers(0, 10**6),
+)
+def test_embed_shapes_sweep(structure, n, seed):
+    m = n // 2
+    params = make_params(structure, "cossin", n, m, seed=seed)
+    fn = embed_fn(params)
+    x = np.random.default_rng(seed).standard_normal((2, n)).astype(np.float32)
+    out = np.asarray(fn(jnp.asarray(x)))
+    assert out.shape == (2, 2 * m)
+    assert np.isfinite(out).all()
+
+
+def test_projection_marginals_are_gaussian():
+    # each projection coordinate of a fixed unit vector should be ~N(0,1)
+    # across seeds (structured rows are marginally standard Gaussian)
+    n, m = 16, 8
+    x = np.zeros((1, n), dtype=np.float32)
+    x[0, 0] = 1.0
+    vals = []
+    for seed in range(300):
+        params = make_params("circulant", "identity", n, m, seed=seed)
+        fn = embed_fn(params)
+        vals.append(np.asarray(fn(jnp.asarray(x)))[0, 0])
+    vals = np.array(vals)
+    assert abs(vals.mean()) < 0.15
+    assert abs(vals.var() - 1.0) < 0.3
+
+
+def test_gaussian_kernel_estimate_from_model():
+    # cossin features estimate exp(-||u-v||^2/2)
+    n, m = 64, 64
+    rng = np.random.default_rng(3)
+    u = rng.standard_normal(n).astype(np.float32) * 0.2
+    v = rng.standard_normal(n).astype(np.float32) * 0.2
+    exact = np.exp(-np.sum((u - v) ** 2) / 2)
+    ests = []
+    for seed in range(40):
+        params = make_params("toeplitz", "cossin", n, m, seed=seed)
+        fn = embed_fn(params)
+        feats = np.asarray(fn(jnp.asarray(np.stack([u, v]))))
+        ests.append(np.dot(feats[0], feats[1]) / m)
+    est = float(np.mean(ests))
+    assert abs(est - exact) < 0.05, f"est {est} exact {exact}"
+
+
+def test_make_params_validates():
+    with pytest.raises(AssertionError):
+        make_params("circulant", "identity", 12, 4, 0)  # non-pow2 n
+    with pytest.raises(AssertionError):
+        make_params("nope", "identity", 16, 4, 0)

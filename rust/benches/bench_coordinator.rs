@@ -1,0 +1,74 @@
+//! Coordinator overhead: queue/batcher/dispatch cost with a native
+//! backend (isolates L3 from the compute).
+
+mod common;
+
+use common::{bench, report};
+use std::sync::Arc;
+use std::time::Duration;
+use strembed::coordinator::{BackendSpec, BatchQueue, Coordinator, CoordinatorConfig};
+use strembed::rng::Rng;
+use strembed::util::Timer;
+
+fn main() {
+    // raw queue ops
+    let q: BatchQueue<u64> = BatchQueue::new(1 << 20);
+    let results = vec![
+        bench("queue push+pop1", || {
+            q.push(1).unwrap();
+            std::hint::black_box(q.pop_batch(1, Duration::from_millis(0)));
+        }),
+        bench("queue push+pop16", || {
+            for i in 0..16 {
+                q.push(i).unwrap();
+            }
+            std::hint::black_box(q.pop_batch(16, Duration::from_millis(0)));
+        }),
+    ];
+    report("batch queue", &results);
+
+    // end-to-end coordinator with native backend
+    let spec = BackendSpec::native("circulant", "rff", 64, 128, 1).unwrap();
+    let coordinator = Arc::new(
+        Coordinator::start(
+            vec![("v".into(), spec)],
+            CoordinatorConfig {
+                max_batch: 32,
+                linger: Duration::from_micros(200),
+                queue_capacity: 1 << 16,
+            },
+        )
+        .unwrap(),
+    );
+    // warmup
+    coordinator.embed_blocking("v", vec![0.1f32; 128]).unwrap();
+
+    for &clients in &[1usize, 8, 32] {
+        let reqs = 500usize;
+        let timer = Timer::start();
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let coord = coordinator.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(c as u64);
+                for _ in 0..reqs {
+                    let v: Vec<f32> = (0..128).map(|_| rng.gaussian() as f32).collect();
+                    coord.embed_blocking("v", v).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let wall = timer.secs();
+        let snap = coordinator.metrics().snapshot();
+        println!(
+            "clients={clients:3} reqs={} wall={wall:.3}s rps={:.0} p50={:.2}ms p99={:.2}ms mean_batch={:.1}",
+            clients * reqs,
+            (clients * reqs) as f64 / wall,
+            snap.p50 * 1e3,
+            snap.p99 * 1e3,
+            snap.mean_batch_size,
+        );
+    }
+}

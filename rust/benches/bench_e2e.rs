@@ -1,0 +1,92 @@
+//! End-to-end PJRT path: artifact execution throughput + full serving
+//! stack with PJRT workers (skips gracefully if artifacts are missing).
+
+mod common;
+
+use common::{bench, report};
+use std::sync::Arc;
+use std::time::Duration;
+use strembed::coordinator::{BackendSpec, Coordinator, CoordinatorConfig};
+use strembed::rng::Rng;
+use strembed::runtime::{default_artifact_dir, load_manifest, Engine};
+use strembed::util::Timer;
+
+fn main() {
+    let dir = default_artifact_dir();
+    let manifest = match load_manifest(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("skipping e2e bench: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+
+    // raw engine throughput per variant
+    let mut results = Vec::new();
+    for meta in manifest.variants.iter().take(3) {
+        let engine = Engine::load(&dir, meta.clone()).unwrap();
+        let mut rng = Rng::new(1);
+        let rows: Vec<Vec<f32>> = (0..meta.batch)
+            .map(|_| (0..meta.n).map(|_| rng.gaussian() as f32 * 0.3).collect())
+            .collect();
+        // warmup
+        engine.embed_batch(&rows).unwrap();
+        results.push(bench(&format!("pjrt {}", meta.name), || {
+            std::hint::black_box(engine.embed_batch(std::hint::black_box(&rows)).unwrap());
+        }));
+    }
+    report("raw PJRT engine (full batch per op)", &results);
+    for (r, meta) in results.iter().zip(manifest.variants.iter()) {
+        println!(
+            "{}: {:.1} µs/batch = {:.2} µs/row",
+            meta.name,
+            r.ns_per_op / 1e3,
+            r.ns_per_op / 1e3 / meta.batch as f64
+        );
+    }
+
+    // full serving stack on the first variant
+    let meta = manifest.variants[0].clone();
+    let coordinator = Arc::new(
+        Coordinator::start(
+            vec![(meta.name.clone(), BackendSpec::Pjrt { dir: dir.clone(), meta: meta.clone() })],
+            CoordinatorConfig {
+                max_batch: meta.batch,
+                linger: Duration::from_micros(500),
+                queue_capacity: 1 << 14,
+            },
+        )
+        .unwrap(),
+    );
+    coordinator.embed_blocking(&meta.name, vec![0.1f32; meta.n]).unwrap();
+    for &clients in &[1usize, 8, 32] {
+        let reqs = 200usize;
+        let timer = Timer::start();
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let coord = coordinator.clone();
+            let name = meta.name.clone();
+            let n = meta.n;
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(c as u64);
+                for _ in 0..reqs {
+                    let v: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32 * 0.3).collect();
+                    coord.embed_blocking(&name, v).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let wall = timer.secs();
+        let snap = coordinator.metrics().snapshot();
+        println!(
+            "serve clients={clients:3} reqs={} wall={wall:.3}s rps={:.0} p50={:.2}ms p99={:.2}ms mean_batch={:.1}",
+            clients * reqs,
+            (clients * reqs) as f64 / wall,
+            snap.p50 * 1e3,
+            snap.p99 * 1e3,
+            snap.mean_batch_size,
+        );
+    }
+}

@@ -1,0 +1,43 @@
+//! Full embedding pipeline throughput per structure × nonlinearity.
+
+mod common;
+
+use common::{bench, report};
+use strembed::pmodel::StructureKind;
+use strembed::rng::Rng;
+use strembed::transform::{EmbeddingConfig, Nonlinearity, StructuredEmbedding};
+
+fn main() {
+    let n = 1024;
+    let m = 512;
+    let mut rng = Rng::new(1);
+    let x = rng.gaussian_vec(n);
+
+    let mut results = Vec::new();
+    for kind in [StructureKind::Dense, StructureKind::Circulant, StructureKind::Toeplitz] {
+        for f in [Nonlinearity::Heaviside, Nonlinearity::CosSin, Nonlinearity::Identity] {
+            let emb = StructuredEmbedding::sample(
+                EmbeddingConfig::new(kind, m, n, f).with_seed(3),
+            );
+            results.push(bench(&format!("{} / {}", kind.label(), f.label()), || {
+                std::hint::black_box(emb.embed(std::hint::black_box(&x)));
+            }));
+        }
+    }
+    report(&format!("embedding pipeline n={n} m={m}"), &results);
+
+    // batch embedding (amortized per row)
+    let mut rng = Rng::new(2);
+    let batch: Vec<Vec<f64>> = (0..64).map(|_| rng.gaussian_vec(n)).collect();
+    let emb = StructuredEmbedding::sample(
+        EmbeddingConfig::new(StructureKind::Circulant, m, n, Nonlinearity::CosSin).with_seed(3),
+    );
+    let r = bench("circulant/cos-sin batch-64", || {
+        std::hint::black_box(emb.embed_batch(std::hint::black_box(&batch)));
+    });
+    println!(
+        "\nbatch-64 embed: {:.0} ns/batch = {:.0} ns/row",
+        r.ns_per_op,
+        r.ns_per_op / 64.0
+    );
+}

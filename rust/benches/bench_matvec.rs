@@ -1,0 +1,35 @@
+//! T5 regeneration: structured vs dense matvec across sizes.
+//! The paper's Remarks (§2.3): circulant/Toeplitz/Hankel matvec is
+//! O(n log n) vs O(mn) dense — who wins, and where the crossover falls.
+
+mod common;
+
+use common::{bench, report};
+use strembed::pmodel::StructureKind;
+use strembed::rng::Rng;
+
+fn main() {
+    for &n in &[64usize, 256, 1024, 4096] {
+        let mut results = Vec::new();
+        let kinds = [
+            StructureKind::Dense,
+            StructureKind::Circulant,
+            StructureKind::SkewCirculant,
+            StructureKind::Toeplitz,
+            StructureKind::Hankel,
+            StructureKind::Ldr(2),
+        ];
+        for kind in kinds {
+            let mut rng = Rng::new(n as u64);
+            let model = kind.build(n, n, &mut rng);
+            let x = rng.gaussian_vec(n);
+            results.push(bench(&format!("{} n={n}", kind.label()), || {
+                std::hint::black_box(model.matvec(std::hint::black_box(&x)));
+            }));
+        }
+        report(&format!("matvec m=n={n}"), &results);
+        let dense = results[0].ns_per_op;
+        let circ = results[1].ns_per_op;
+        println!("\ncirculant speedup over dense at n={n}: {:.1}x", dense / circ);
+    }
+}

@@ -1,0 +1,38 @@
+//! Substrate scaling: FFT, FWHT, negacyclic convolution, preprocessing.
+
+mod common;
+
+use common::{bench, report};
+use strembed::dsp::{circular_convolve, negacyclic_convolve, Fft};
+use strembed::rng::Rng;
+use strembed::transform::Preprocessor;
+
+fn main() {
+    for &n in &[256usize, 1024, 4096, 16384] {
+        let mut rng = Rng::new(n as u64);
+        let x = rng.gaussian_vec(n);
+        let g = rng.gaussian_vec(n);
+        let fft = Fft::new(n);
+        let pre = Preprocessor::new(n, &mut rng);
+        let results = vec![
+            bench(&format!("fft fwd n={n}"), || {
+                std::hint::black_box(fft.forward_real(std::hint::black_box(&x)));
+            }),
+            bench(&format!("fwht n={n}"), || {
+                let mut y = x.clone();
+                strembed::dsp::fwht_inplace(std::hint::black_box(&mut y));
+                std::hint::black_box(y);
+            }),
+            bench(&format!("circ conv n={n}"), || {
+                std::hint::black_box(circular_convolve(&g, std::hint::black_box(&x)));
+            }),
+            bench(&format!("negacyclic n={n}"), || {
+                std::hint::black_box(negacyclic_convolve(std::hint::black_box(&x), &g));
+            }),
+            bench(&format!("preprocess D1HD0 n={n}"), || {
+                std::hint::black_box(pre.apply(std::hint::black_box(&x)));
+            }),
+        ];
+        report(&format!("transforms n={n}"), &results);
+    }
+}

@@ -1,0 +1,61 @@
+//! Shared micro-bench harness (criterion is unavailable offline).
+//!
+//! Methodology: warmup runs, then timed batches sized so each sample is
+//! ≥ ~1ms of work; reports ns/op median with spread.
+
+use strembed::util::{percentile, Timer};
+
+/// One benchmark row.
+pub struct BenchResult {
+    /// label
+    pub name: String,
+    /// median ns per op
+    pub ns_per_op: f64,
+    /// p10..p90 spread in ns
+    pub spread: (f64, f64),
+    /// ops per second
+    pub ops_per_sec: f64,
+}
+
+/// Run `f` repeatedly; auto-calibrates batch size.
+pub fn bench(name: &str, mut f: impl FnMut()) -> BenchResult {
+    // calibrate: how many ops fit in ~2ms?
+    let t = Timer::start();
+    f();
+    let single = t.secs().max(1e-9);
+    let batch = ((2e-3 / single) as usize).clamp(1, 100_000);
+    // warmup
+    for _ in 0..batch.min(100) {
+        f();
+    }
+    // sample
+    let samples = 15usize;
+    let mut per_op = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Timer::start();
+        for _ in 0..batch {
+            f();
+        }
+        per_op.push(t.secs() / batch as f64 * 1e9);
+    }
+    let med = percentile(&per_op, 50.0);
+    BenchResult {
+        name: name.to_string(),
+        ns_per_op: med,
+        spread: (percentile(&per_op, 10.0), percentile(&per_op, 90.0)),
+        ops_per_sec: 1e9 / med,
+    }
+}
+
+/// Print a group of results as a markdown table.
+pub fn report(title: &str, results: &[BenchResult]) {
+    println!("\n### {title}\n");
+    println!("| bench | ns/op (median) | p10..p90 ns | ops/s |");
+    println!("| --- | --- | --- | --- |");
+    for r in results {
+        println!(
+            "| {} | {:.0} | {:.0}..{:.0} | {:.0} |",
+            r.name, r.ns_per_op, r.spread.0, r.spread.1, r.ops_per_sec
+        );
+    }
+}

@@ -1,0 +1,113 @@
+//! Tiny argument parser (clap is unavailable offline): positional
+//! subcommand + `--key value` / `--flag` options.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// first positional token (subcommand)
+    pub command: Option<String>,
+    /// remaining positionals
+    pub positional: Vec<String>,
+    /// --key value and --flag options
+    pub options: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                let value = match it.peek() {
+                    Some(next) if !next.starts_with("--") => it.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                args.options.insert(key.to_string(), value);
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// String option with default.
+    pub fn get<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.options.get(key).map(String::as_str).unwrap_or(default)
+    }
+
+    /// Required string option.
+    pub fn require(&self, key: &str) -> Result<&str, String> {
+        self.options.get(key).map(String::as_str).ok_or_else(|| format!("missing --{key}"))
+    }
+
+    /// usize option with default.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    /// u64 option with default.
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    /// Boolean flag.
+    pub fn flag(&self, key: &str) -> bool {
+        self.options.get(key).map(|v| v != "false").unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("eval --exp angular --out results");
+        assert_eq!(a.command.as_deref(), Some("eval"));
+        assert_eq!(a.get("exp", ""), "angular");
+        assert_eq!(a.get("out", ""), "results");
+    }
+
+    #[test]
+    fn flags_without_values() {
+        let a = parse("serve --native --addr 1.2.3.4:5");
+        assert!(a.flag("native"));
+        assert_eq!(a.get("addr", ""), "1.2.3.4:5");
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn numeric_options() {
+        let a = parse("embed --m 8 --seed 42");
+        assert_eq!(a.get_usize("m", 0).unwrap(), 8);
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 42);
+        assert_eq!(a.get_usize("n", 16).unwrap(), 16);
+        assert!(parse("x --m abc").get_usize("m", 0).is_err());
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse("cmd one two --k v three");
+        assert_eq!(a.positional, vec!["one", "two", "three"]);
+    }
+
+    #[test]
+    fn require_reports_missing() {
+        assert!(parse("cmd").require("x").is_err());
+    }
+}

@@ -1,0 +1,251 @@
+//! `strembed` command-line interface.
+//!
+//! ```text
+//! strembed coherence --structure circulant --n 5 [--m 5] [--i1 0 --i2 1]
+//! strembed eval --exp angular|gaussian|...|all [--out results/]
+//! strembed embed --structure circulant --f sign --m 8 --n 16 --seed 0 --input 0.1,0.2,...
+//! strembed list [--artifacts DIR]
+//! strembed serve [--addr 127.0.0.1:7878] [--native] [--artifacts DIR]
+//! ```
+
+mod args;
+
+pub use args::Args;
+
+use crate::coherence::{coherence_graph, pmodel_stats};
+use crate::coordinator::{serve_tcp, BackendSpec, Coordinator, CoordinatorConfig};
+use crate::eval::{run_experiment, EXPERIMENTS};
+use crate::pmodel::StructureKind;
+use crate::rng::Rng;
+use crate::transform::{EmbeddingConfig, Nonlinearity, StructuredEmbedding};
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+/// CLI entrypoint (returns process exit code semantics via panic-free Result).
+pub fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    match run(&args) {
+        Ok(out) => print!("{out}"),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Dispatch a parsed command; returns the text to print (testable).
+pub fn run(args: &Args) -> Result<String, String> {
+    match args.command.as_deref() {
+        None | Some("help") => Ok(usage()),
+        Some("coherence") => cmd_coherence(args),
+        Some("eval") => cmd_eval(args),
+        Some("embed") => cmd_embed(args),
+        Some("list") => cmd_list(args),
+        Some("serve") => cmd_serve(args),
+        Some(other) => Err(format!("unknown command '{other}'\n{}", usage())),
+    }
+}
+
+fn usage() -> String {
+    let mut s = String::from(
+        "strembed — fast nonlinear embeddings via structured matrices\n\n\
+         commands:\n\
+         \x20 coherence  --structure S --n N [--m M] [--i1 I --i2 J]   coherence graph + chi/mu stats\n\
+         \x20 eval       --exp ID|all [--out DIR]                      run paper experiments\n\
+         \x20 embed      --structure S --f F --m M --n N --input CSV   one-off embedding\n\
+         \x20 list       [--artifacts DIR]                             list AOT artifact variants\n\
+         \x20 serve      [--addr A] [--native] [--artifacts DIR]       TCP embedding service\n\n\
+         experiments:\n",
+    );
+    for e in EXPERIMENTS {
+        s.push_str(&format!("  {:10} {}\n", e.id, e.description));
+    }
+    s
+}
+
+fn cmd_coherence(args: &Args) -> Result<String, String> {
+    let kind = StructureKind::parse(args.get("structure", "circulant"))
+        .ok_or("bad --structure")?;
+    let n = args.get_usize("n", 5)?;
+    let m = args.get_usize("m", n)?;
+    let i1 = args.get_usize("i1", 0)?;
+    let i2 = args.get_usize("i2", 1.min(m - 1))?;
+    let mut rng = Rng::new(args.get_u64("seed", 0)?);
+    let model = kind.build(m, n, &mut rng);
+    let g = coherence_graph(model.as_ref(), i1, i2);
+    let stats = pmodel_stats(model.as_ref());
+    Ok(format!(
+        "{} m={} n={} t={}\ncoherence graph G_{{{i1},{i2}}}:\n{}\nchi[P]={} mu[P]={:.4} mu~[P]={:.4}\n",
+        kind.label(),
+        m,
+        n,
+        model.t(),
+        g.describe(),
+        stats.chi,
+        stats.mu,
+        stats.mu_tilde
+    ))
+}
+
+fn cmd_eval(args: &Args) -> Result<String, String> {
+    let exp = args.get("exp", "all");
+    let ids: Vec<&str> = if exp == "all" {
+        EXPERIMENTS.iter().map(|e| e.id).collect()
+    } else {
+        exp.split(',').collect()
+    };
+    let mut out = String::new();
+    for id in ids {
+        let r = run_experiment(id).ok_or_else(|| format!("unknown experiment '{id}'"))?;
+        out.push_str(&format!("## experiment: {id}\n\n{}\n", r.to_markdown()));
+        if let Some(dir) = args.options.get("out") {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+            std::fs::write(format!("{dir}/{id}.md"), r.to_markdown())
+                .map_err(|e| e.to_string())?;
+            for (i, t) in r.tables.iter().enumerate() {
+                std::fs::write(format!("{dir}/{id}_{i}.csv"), t.to_csv())
+                    .map_err(|e| e.to_string())?;
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn cmd_embed(args: &Args) -> Result<String, String> {
+    let kind = StructureKind::parse(args.get("structure", "circulant"))
+        .ok_or("bad --structure")?;
+    let f = Nonlinearity::parse(args.get("f", "sign")).ok_or("bad --f")?;
+    let n = args.get_usize("n", 16)?;
+    let m = args.get_usize("m", 8)?;
+    let seed = args.get_u64("seed", 0)?;
+    let input = args.require("input")?;
+    let v: Vec<f64> = input
+        .split(',')
+        .map(|t| t.trim().parse::<f64>().map_err(|e| format!("bad input: {e}")))
+        .collect::<Result<_, _>>()?;
+    if v.len() != n {
+        return Err(format!("input has {} values, expected n={n}", v.len()));
+    }
+    let emb =
+        StructuredEmbedding::sample(EmbeddingConfig::new(kind, m, n, f).with_seed(seed));
+    let feats = emb.embed(&v);
+    let cells: Vec<String> = feats.iter().map(|x| format!("{x:.6}")).collect();
+    Ok(format!("{}\n", cells.join(",")))
+}
+
+fn cmd_list(args: &Args) -> Result<String, String> {
+    let dir = match args.options.get("artifacts") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => crate::runtime::default_artifact_dir(),
+    };
+    let manifest = crate::runtime::load_manifest(&dir).map_err(|e| format!("{e:#}"))?;
+    let mut out = format!("artifacts in {}:\n", dir.display());
+    for v in &manifest.variants {
+        out.push_str(&format!(
+            "  {:44} {} f={} n={} m={} batch={} out_dim={}\n",
+            v.name, v.structure, v.f, v.n, v.m, v.batch, v.out_dim
+        ));
+    }
+    Ok(out)
+}
+
+fn cmd_serve(args: &Args) -> Result<String, String> {
+    let addr = args.get("addr", "127.0.0.1:7878").to_string();
+    let mut specs: Vec<(String, BackendSpec)> = Vec::new();
+    if args.flag("native") {
+        // a representative native variant set
+        for (name, structure, f) in [
+            ("circulant-sign", "circulant", "sign"),
+            ("circulant-rff", "circulant", "rff"),
+            ("toeplitz-rff", "toeplitz", "rff"),
+        ] {
+            let spec = BackendSpec::native(
+                structure,
+                f,
+                args.get_usize("m", 64)?,
+                args.get_usize("n", 128)?,
+                args.get_u64("seed", 2016)?,
+            )
+            .map_err(|e| format!("{e:#}"))?;
+            specs.push((name.to_string(), spec));
+        }
+    } else {
+        let dir = match args.options.get("artifacts") {
+            Some(d) => std::path::PathBuf::from(d),
+            None => crate::runtime::default_artifact_dir(),
+        };
+        let manifest = crate::runtime::load_manifest(&dir).map_err(|e| format!("{e:#}"))?;
+        for v in manifest.variants {
+            specs.push((
+                v.name.clone(),
+                BackendSpec::Pjrt { dir: dir.clone(), meta: v },
+            ));
+        }
+    }
+    let coordinator = Arc::new(
+        Coordinator::start(specs, CoordinatorConfig::default()).map_err(|e| format!("{e:#}"))?,
+    );
+    println!("serving {} variants on {addr}", coordinator.variant_names().len());
+    let stop = Arc::new(AtomicBool::new(false));
+    serve_tcp(coordinator, &addr, stop, |bound| println!("listening on {bound}"))
+        .map_err(|e| e.to_string())?;
+    Ok(String::new())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_cmd(s: &str) -> Result<String, String> {
+        run(&Args::parse(s.split_whitespace().map(str::to_string)))
+    }
+
+    #[test]
+    fn help_lists_experiments() {
+        let out = run_cmd("help").unwrap();
+        assert!(out.contains("angular"));
+        assert!(out.contains("coherence"));
+    }
+
+    #[test]
+    fn coherence_fig1() {
+        let out = run_cmd("coherence --structure circulant --n 5").unwrap();
+        assert!(out.contains("chi[P]=3"), "{out}");
+        assert!(out.contains("vertices=5"), "{out}");
+    }
+
+    #[test]
+    fn coherence_fig2() {
+        let out = run_cmd("coherence --structure toeplitz --n 5").unwrap();
+        assert!(out.contains("chi[P]=2"), "{out}");
+    }
+
+    #[test]
+    fn embed_roundtrip() {
+        let out = run_cmd(
+            "embed --structure circulant --f sign --m 4 --n 8 --seed 1 \
+             --input 1,0,0,0,0,0,0,0",
+        )
+        .unwrap();
+        let feats: Vec<f64> =
+            out.trim().split(',').map(|t| t.parse().unwrap()).collect();
+        assert_eq!(feats.len(), 4);
+        assert!(feats.iter().all(|&x| x == 0.0 || x == 1.0));
+    }
+
+    #[test]
+    fn embed_validates_input_len() {
+        assert!(run_cmd("embed --n 8 --input 1,2").is_err());
+    }
+
+    #[test]
+    fn eval_single_experiment() {
+        let out = run_cmd("eval --exp fig1").unwrap();
+        assert!(out.contains("F1"));
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run_cmd("frobnicate").is_err());
+    }
+}

@@ -1,0 +1,231 @@
+//! Graph coloring: greedy/DSATUR heuristics plus exact chromatic number
+//! for small graphs (branch and bound on top of a clique lower bound).
+//!
+//! The paper uses the chromatic number of coherence graphs to partition
+//! correlated terms into independent sets before applying Azuma's
+//! inequality — small χ means few partitions and tight concentration.
+
+use super::CoherenceGraph;
+
+/// Greedy coloring in DSATUR order; returns a proper coloring (vector of
+/// color ids). Upper-bounds the chromatic number.
+pub fn greedy_coloring(g: &CoherenceGraph) -> Vec<usize> {
+    let n = g.n_vertices();
+    let mut color = vec![usize::MAX; n];
+    let mut saturation = vec![0usize; n];
+    let degrees = g.degrees();
+    for _ in 0..n {
+        // pick uncolored vertex with max saturation, ties by degree
+        let mut best: Option<usize> = None;
+        for v in 0..n {
+            if color[v] != usize::MAX {
+                continue;
+            }
+            match best {
+                None => best = Some(v),
+                Some(b) => {
+                    if (saturation[v], degrees[v]) > (saturation[b], degrees[b]) {
+                        best = Some(v);
+                    }
+                }
+            }
+        }
+        let v = best.unwrap();
+        // smallest color absent among neighbors
+        let mut used: Vec<bool> = vec![false; n + 1];
+        for &w in g.neighbors(v) {
+            if color[w] != usize::MAX {
+                used[color[w]] = true;
+            }
+        }
+        let c = (0..).find(|&c| !used[c]).unwrap();
+        color[v] = c;
+        for &w in g.neighbors(v) {
+            saturation[w] += 1; // approximation of true saturation; fine for ordering
+        }
+    }
+    color
+}
+
+/// Check whether `coloring` is proper for `g`.
+pub fn is_proper_coloring(g: &CoherenceGraph, coloring: &[usize]) -> bool {
+    for v in 0..g.n_vertices() {
+        for &w in g.neighbors(v) {
+            if coloring[v] == coloring[w] {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// A greedy maximal clique (lower bound on χ).
+fn clique_lower_bound(g: &CoherenceGraph) -> usize {
+    let n = g.n_vertices();
+    if n == 0 {
+        return 0;
+    }
+    // start from max-degree vertex, greedily extend
+    let degrees = g.degrees();
+    let start = (0..n).max_by_key(|&v| degrees[v]).unwrap();
+    let mut clique = vec![start];
+    for v in 0..n {
+        if v == start {
+            continue;
+        }
+        if clique.iter().all(|&u| g.neighbors(u).contains(&v)) {
+            clique.push(v);
+        }
+    }
+    clique.len()
+}
+
+/// Is `g` colorable with `k` colors? Exact backtracking (small graphs).
+fn k_colorable(g: &CoherenceGraph, k: usize, color: &mut Vec<usize>, v: usize) -> bool {
+    let n = g.n_vertices();
+    if v == n {
+        return true;
+    }
+    for c in 0..k {
+        if g.neighbors(v).iter().all(|&w| color[w] != c) {
+            color[v] = c;
+            if k_colorable(g, k, color, v + 1) {
+                return true;
+            }
+            color[v] = usize::MAX;
+        }
+        // symmetry breaking: don't try colors beyond first-unused
+        if color[..v].iter().all(|&x| x != c) {
+            break;
+        }
+    }
+    false
+}
+
+/// Exact vertex limit for the branch-and-bound chromatic number.
+const EXACT_LIMIT: usize = 64;
+
+/// Chromatic number: exact for graphs with ≤ EXACT_LIMIT vertices,
+/// otherwise the DSATUR upper bound. Empty graph has χ = 0.
+pub fn chromatic_number(g: &CoherenceGraph) -> usize {
+    let n = g.n_vertices();
+    if n == 0 {
+        return 0;
+    }
+    if g.n_edges() == 0 {
+        return 1;
+    }
+    if g.is_bipartite() {
+        return 2;
+    }
+    let greedy = greedy_coloring(g);
+    let upper = greedy.iter().max().unwrap() + 1;
+    if n > EXACT_LIMIT {
+        return upper;
+    }
+    let lower = clique_lower_bound(g).max(3); // non-bipartite ⇒ ≥ 3
+    for k in lower..upper {
+        let mut color = vec![usize::MAX; n];
+        if k_colorable(g, k, &mut color, 0) {
+            return k;
+        }
+    }
+    upper
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cycle(n: usize) -> CoherenceGraph {
+        // pairs {i, i+1 mod n} over column universe 0..n intersect
+        // consecutively, forming an n-cycle of vertices.
+        let pairs: Vec<(usize, usize)> = (0..n)
+            .map(|i| {
+                let a = i;
+                let b = (i + 1) % n;
+                (a.min(b), a.max(b))
+            })
+            .collect();
+        CoherenceGraph::from_pairs(pairs)
+    }
+
+    #[test]
+    fn even_cycle_needs_2() {
+        let g = cycle(6);
+        assert_eq!(g.n_edges(), 6);
+        assert_eq!(chromatic_number(&g), 2);
+    }
+
+    #[test]
+    fn odd_cycle_needs_3() {
+        let g = cycle(5);
+        assert_eq!(chromatic_number(&g), 3);
+        let g7 = cycle(7);
+        assert_eq!(chromatic_number(&g7), 3);
+    }
+
+    #[test]
+    fn triangle_is_3_chromatic() {
+        let g = CoherenceGraph::from_pairs(vec![(0, 1), (1, 2), (0, 2)]);
+        assert_eq!(chromatic_number(&g), 3);
+    }
+
+    #[test]
+    fn k4_needs_4() {
+        // vertices sharing column 0 pairwise: {0,1},{0,2},{0,3},{0,4} form K4
+        let g = CoherenceGraph::from_pairs(vec![(0, 1), (0, 2), (0, 3), (0, 4)]);
+        assert_eq!(chromatic_number(&g), 4);
+    }
+
+    #[test]
+    fn empty_and_edgeless() {
+        assert_eq!(chromatic_number(&CoherenceGraph::from_pairs(vec![])), 0);
+        let g = CoherenceGraph::from_pairs(vec![(0, 1), (2, 3)]);
+        assert_eq!(chromatic_number(&g), 1);
+    }
+
+    #[test]
+    fn greedy_coloring_is_proper() {
+        crate::prop::forall("greedy proper", 40, |gen| {
+            // random pair set over a small column universe
+            let ncols = gen.usize_in(3, 10);
+            let npairs = gen.usize_in(0, 12);
+            let mut pairs = Vec::new();
+            for _ in 0..npairs {
+                let a = gen.usize_in(0, ncols - 2);
+                let b = gen.usize_in(a + 1, ncols - 1);
+                if !pairs.contains(&(a, b)) {
+                    pairs.push((a, b));
+                }
+            }
+            let g = CoherenceGraph::from_pairs(pairs);
+            let coloring = greedy_coloring(&g);
+            assert!(is_proper_coloring(&g, &coloring));
+        });
+    }
+
+    #[test]
+    fn exact_never_exceeds_greedy() {
+        crate::prop::forall("exact <= greedy", 30, |gen| {
+            let ncols = gen.usize_in(3, 9);
+            let npairs = gen.usize_in(1, 10);
+            let mut pairs = Vec::new();
+            for _ in 0..npairs {
+                let a = gen.usize_in(0, ncols - 2);
+                let b = gen.usize_in(a + 1, ncols - 1);
+                if !pairs.contains(&(a, b)) {
+                    pairs.push((a, b));
+                }
+            }
+            let g = CoherenceGraph::from_pairs(pairs);
+            let greedy = greedy_coloring(&g).iter().max().map(|m| m + 1).unwrap_or(0);
+            let exact = chromatic_number(&g);
+            assert!(exact <= greedy.max(1) || g.n_vertices() == 0);
+            // chromatic number >= 2 whenever there is an edge
+            if g.n_edges() > 0 {
+                assert!(exact >= 2);
+            }
+        });
+    }
+}

@@ -1,0 +1,194 @@
+//! The coherence graph data structure (paper Definition 2).
+//!
+//! Vertices are unordered column pairs `{n1, n2}` with nonzero σ; edges
+//! connect vertices whose pairs share a column index.
+
+use std::collections::HashMap;
+
+/// An undirected graph over column-pair vertices.
+#[derive(Debug, Clone)]
+pub struct CoherenceGraph {
+    /// the column pair behind each vertex id
+    pairs: Vec<(usize, usize)>,
+    /// adjacency lists by vertex id
+    adj: Vec<Vec<usize>>,
+}
+
+impl CoherenceGraph {
+    /// Build from the list of nonzero-σ column pairs. Edges are derived:
+    /// two vertices are adjacent iff their pairs intersect.
+    pub fn from_pairs(pairs: Vec<(usize, usize)>) -> CoherenceGraph {
+        let nv = pairs.len();
+        let mut by_column: HashMap<usize, Vec<usize>> = HashMap::new();
+        for (v, &(a, b)) in pairs.iter().enumerate() {
+            debug_assert!(a < b, "pairs must be ordered");
+            by_column.entry(a).or_default().push(v);
+            by_column.entry(b).or_default().push(v);
+        }
+        let mut adj = vec![Vec::new(); nv];
+        for members in by_column.values() {
+            for (x, &u) in members.iter().enumerate() {
+                for &w in &members[x + 1..] {
+                    adj[u].push(w);
+                    adj[w].push(u);
+                }
+            }
+        }
+        for l in adj.iter_mut() {
+            l.sort_unstable();
+            l.dedup();
+        }
+        CoherenceGraph { pairs, adj }
+    }
+
+    /// Number of vertices.
+    pub fn n_vertices(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// Number of edges.
+    pub fn n_edges(&self) -> usize {
+        self.adj.iter().map(|l| l.len()).sum::<usize>() / 2
+    }
+
+    /// The column pair behind vertex `v`.
+    pub fn pair(&self, v: usize) -> (usize, usize) {
+        self.pairs[v]
+    }
+
+    /// Neighbors of vertex `v`.
+    pub fn neighbors(&self, v: usize) -> &[usize] {
+        &self.adj[v]
+    }
+
+    /// Degree sequence.
+    pub fn degrees(&self) -> Vec<usize> {
+        self.adj.iter().map(|l| l.len()).collect()
+    }
+
+    /// Maximum degree (0 for the empty graph).
+    pub fn max_degree(&self) -> usize {
+        self.degrees().into_iter().max().unwrap_or(0)
+    }
+
+    /// Number of connected components.
+    pub fn connected_components(&self) -> usize {
+        let n = self.n_vertices();
+        let mut seen = vec![false; n];
+        let mut comps = 0;
+        for start in 0..n {
+            if seen[start] {
+                continue;
+            }
+            comps += 1;
+            let mut stack = vec![start];
+            seen[start] = true;
+            while let Some(u) = stack.pop() {
+                for &w in &self.adj[u] {
+                    if !seen[w] {
+                        seen[w] = true;
+                        stack.push(w);
+                    }
+                }
+            }
+        }
+        comps
+    }
+
+    /// True when the graph contains no odd cycle (bipartite ⇒ χ ≤ 2).
+    pub fn is_bipartite(&self) -> bool {
+        let n = self.n_vertices();
+        let mut color = vec![-1i8; n];
+        for start in 0..n {
+            if color[start] != -1 {
+                continue;
+            }
+            color[start] = 0;
+            let mut queue = std::collections::VecDeque::from([start]);
+            while let Some(u) = queue.pop_front() {
+                for &w in &self.adj[u] {
+                    if color[w] == -1 {
+                        color[w] = 1 - color[u];
+                        queue.push_back(w);
+                    } else if color[w] == color[u] {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    /// Render a small graph for the CLI `coherence` subcommand.
+    pub fn describe(&self) -> String {
+        let mut out = format!(
+            "vertices={} edges={} components={} max_degree={} bipartite={}\n",
+            self.n_vertices(),
+            self.n_edges(),
+            self.connected_components(),
+            self.max_degree(),
+            self.is_bipartite()
+        );
+        for v in 0..self.n_vertices().min(64) {
+            let (a, b) = self.pairs[v];
+            let nbrs: Vec<String> = self.adj[v]
+                .iter()
+                .map(|&w| {
+                    let (x, y) = self.pairs[w];
+                    format!("{{{x},{y}}}")
+                })
+                .collect();
+            out.push_str(&format!("  {{{a},{b}}} -- {}\n", nbrs.join(", ")));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edges_iff_pairs_intersect() {
+        // pairs {0,1},{1,2},{2,3}: path of length 2
+        let g = CoherenceGraph::from_pairs(vec![(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(g.n_vertices(), 3);
+        assert_eq!(g.n_edges(), 2);
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert!(g.is_bipartite());
+        assert_eq!(g.connected_components(), 1);
+    }
+
+    #[test]
+    fn disjoint_pairs_give_empty_graph() {
+        let g = CoherenceGraph::from_pairs(vec![(0, 1), (2, 3), (4, 5)]);
+        assert_eq!(g.n_edges(), 0);
+        assert_eq!(g.connected_components(), 3);
+        assert_eq!(g.max_degree(), 0);
+    }
+
+    #[test]
+    fn triangle_detected_as_non_bipartite() {
+        // {0,1},{1,2},{0,2} pairwise intersect → triangle
+        let g = CoherenceGraph::from_pairs(vec![(0, 1), (1, 2), (0, 2)]);
+        assert_eq!(g.n_edges(), 3);
+        assert!(!g.is_bipartite());
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = CoherenceGraph::from_pairs(vec![]);
+        assert_eq!(g.n_vertices(), 0);
+        assert_eq!(g.connected_components(), 0);
+        assert!(g.is_bipartite());
+    }
+
+    #[test]
+    fn describe_contains_counts() {
+        let g = CoherenceGraph::from_pairs(vec![(0, 1), (1, 2)]);
+        let d = g.describe();
+        assert!(d.contains("vertices=2"));
+        assert!(d.contains("edges=1"));
+    }
+}

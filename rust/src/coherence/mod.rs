@@ -1,0 +1,200 @@
+//! Coherence graphs and the combinatorial quality statistics of a
+//! P-model (paper Definitions 2–4).
+//!
+//! For rows `i1, i2` the coherence graph `G_{i1,i2}` has a vertex for
+//! every unordered column pair `{n1,n2}` (n1 < n2) with
+//! `σ_{i1,i2}(n1,n2) ≠ 0`, and an edge between vertices whose pairs
+//! intersect. The paper's concentration bounds are driven by:
+//!
+//! - `χ[P]`  — max chromatic number over all coherence graphs (Def. 3),
+//! - `μ[P]`  — coherence, rms of off-diagonal σ (Def. 4),
+//! - `μ̃[P]` — unicoherence, max L1 of same-index σ across row pairs.
+//!
+//! Figure 1: circulant, n = 5 ⇒ G is a 5-cycle, χ = 3.
+//! Figure 2: Toeplitz ⇒ unions of paths, χ = 2.
+
+mod coloring;
+mod graph;
+
+pub use coloring::{chromatic_number, greedy_coloring, is_proper_coloring};
+pub use graph::CoherenceGraph;
+
+use crate::pmodel::PModel;
+
+/// The three P-model statistics of Definitions 3–4.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PModelStats {
+    /// χ[P] — max chromatic number over all coherence graphs.
+    pub chi: usize,
+    /// μ[P] — coherence.
+    pub mu: f64,
+    /// μ̃[P] — unicoherence.
+    pub mu_tilde: f64,
+}
+
+/// Build the coherence graph `G_{i1,i2}` of a model.
+pub fn coherence_graph(model: &dyn PModel, i1: usize, i2: usize) -> CoherenceGraph {
+    let n = model.n();
+    let mut vertices = Vec::new();
+    for n1 in 0..n {
+        for n2 in (n1 + 1)..n {
+            // the unordered pair {n1,n2} is correlated if either
+            // orientation carries a nonzero cross-correlation (Figure 1's
+            // 5-cycle includes the wrapped pair {0,4}, whose nonzero σ
+            // appears in the (n2,n1) orientation)
+            if model.sigma(i1, i2, n1, n2).abs() > 1e-12
+                || model.sigma(i1, i2, n2, n1).abs() > 1e-12
+            {
+                vertices.push((n1, n2));
+            }
+        }
+    }
+    CoherenceGraph::from_pairs(vertices)
+}
+
+/// χ(i1,i2): chromatic number of one coherence graph (exact for small
+/// graphs, DSATUR upper bound beyond the exact threshold).
+pub fn chi_pair(model: &dyn PModel, i1: usize, i2: usize) -> usize {
+    chromatic_number(&coherence_graph(model, i1, i2))
+}
+
+/// Compute χ[P], μ[P], μ̃[P] for a model by exhaustive enumeration —
+/// O(m²·n²) σ-queries, intended for the moderate sizes used in the
+/// paper's combinatorial analysis.
+pub fn pmodel_stats(model: &dyn PModel) -> PModelStats {
+    let m = model.m();
+    let n = model.n();
+    let mut chi = 0usize;
+    let mut mu_sq: f64 = 0.0;
+    let mut mu_tilde: f64 = 0.0;
+    for i1 in 0..m {
+        for i2 in 0..m {
+            // χ and μ range over all (i,j) pairs (Defs. 3 & 5)
+            let g = coherence_graph(model, i1, i2);
+            chi = chi.max(chromatic_number(&g));
+            let mut ssum = 0.0;
+            for n1 in 0..n {
+                for n2 in (n1 + 1)..n {
+                    let s = model.sigma(i1, i2, n1, n2);
+                    ssum += s * s;
+                }
+            }
+            mu_sq = mu_sq.max(ssum / n as f64);
+            // μ̃ ranges over i1 < i2 only (Def. 4, eq. (6))
+            if i1 < i2 {
+                let diag: f64 =
+                    (0..n).map(|n1| model.sigma(i1, i2, n1, n1).abs()).sum();
+                mu_tilde = mu_tilde.max(diag);
+            }
+        }
+    }
+    PModelStats { chi, mu: mu_sq.sqrt(), mu_tilde }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmodel::{Circulant, DenseGaussian, Hankel, StructureKind, Toeplitz};
+    use crate::rng::Rng;
+
+    /// Paper Figure 1: for circulant matrices the coherence graph of two
+    /// distinct rows over n=5 columns is a single 5-cycle with χ = 3.
+    #[test]
+    fn figure1_circulant_5cycle() {
+        let mut rng = Rng::new(1);
+        let c = Circulant::new(5, 5, &mut rng);
+        let g = coherence_graph(&c, 0, 1);
+        assert_eq!(g.n_vertices(), 5);
+        // every vertex has degree exactly 2 and the graph is one cycle
+        assert!(g.degrees().iter().all(|&d| d == 2));
+        assert_eq!(g.connected_components(), 1);
+        assert_eq!(chromatic_number(&g), 3); // odd cycle
+    }
+
+    /// Paper Figure 2: Toeplitz coherence graphs are unions of paths
+    /// (and isolated vertices), 2-colorable.
+    #[test]
+    fn figure2_toeplitz_paths() {
+        let mut rng = Rng::new(2);
+        let t = Toeplitz::new(5, 5, &mut rng);
+        for i1 in 0..5 {
+            for i2 in 0..5 {
+                if i1 == i2 {
+                    continue;
+                }
+                let g = coherence_graph(&t, i1, i2);
+                // paths: max degree ≤ 2, no odd cycle ⇒ χ ≤ 2
+                assert!(g.degrees().iter().all(|&d| d <= 2));
+                assert!(chromatic_number(&g) <= 2, "i1={i1} i2={i2}");
+            }
+        }
+    }
+
+    #[test]
+    fn circulant_chi_at_most_3() {
+        // paper: each G is a union of vertex-disjoint cycles ⇒ χ[P] ≤ 3
+        let mut rng = Rng::new(3);
+        for &n in &[4usize, 6, 8] {
+            let c = Circulant::new(n, n, &mut rng);
+            let stats = pmodel_stats(&c);
+            assert!(stats.chi <= 3, "n={n}: chi={}", stats.chi);
+            assert!(stats.mu_tilde.abs() < 1e-12, "circulant has zero unicoherence");
+        }
+    }
+
+    #[test]
+    fn toeplitz_beats_circulant_chi() {
+        // Figure 1 vs Figure 2: Toeplitz's larger budget lowers χ[P].
+        let mut rng = Rng::new(4);
+        let c = Circulant::new(5, 5, &mut rng);
+        let t = Toeplitz::new(5, 5, &mut rng);
+        let sc = pmodel_stats(&c);
+        let st = pmodel_stats(&t);
+        assert_eq!(sc.chi, 3);
+        assert_eq!(st.chi, 2);
+        assert!(st.chi < sc.chi);
+    }
+
+    #[test]
+    fn hankel_shares_toeplitz_bounds() {
+        let mut rng = Rng::new(5);
+        let h = Hankel::new(5, 5, &mut rng);
+        let s = pmodel_stats(&h);
+        assert!(s.chi <= 2);
+        assert!(s.mu <= 1.5);
+        assert!(s.mu_tilde.abs() < 1e-12);
+    }
+
+    #[test]
+    fn dense_has_empty_graphs() {
+        let mut rng = Rng::new(6);
+        let d = DenseGaussian::new(4, 6, &mut rng);
+        let s = pmodel_stats(&d);
+        assert_eq!(s.chi, 0);
+        assert_eq!(s.mu, 0.0);
+        assert_eq!(s.mu_tilde, 0.0);
+    }
+
+    #[test]
+    fn mu_is_order_one_for_theorem_families() {
+        // paper: μ[P] = O(1) for circulant/Toeplitz/Hankel
+        let mut rng = Rng::new(7);
+        for kind in StructureKind::theorem_families() {
+            let model = kind.build(8, 8, &mut rng);
+            let s = pmodel_stats(model.as_ref());
+            assert!(s.mu <= 1.5, "{}: mu = {}", kind.label(), s.mu);
+            assert!(s.mu_tilde < 1e-9, "{}: mu_tilde = {}", kind.label(), s.mu_tilde);
+        }
+    }
+
+    #[test]
+    fn grouped_chi_nonincreasing_in_budget() {
+        // more groups (bigger budget) can only shrink coherence graphs
+        let mut rng = Rng::new(8);
+        let coarse = StructureKind::Grouped(8).build(8, 8, &mut rng);
+        let fine = StructureKind::Grouped(2).build(8, 8, &mut rng);
+        let sc = pmodel_stats(coarse.as_ref());
+        let sf = pmodel_stats(fine.as_ref());
+        assert!(sf.chi <= sc.chi, "fine {} vs coarse {}", sf.chi, sc.chi);
+    }
+}

@@ -1,0 +1,148 @@
+//! Worker backends: PJRT (AOT artifact) or native rust pipeline.
+//!
+//! A `BackendSpec` is `Send` plain data; the actual backend is built
+//! *inside* the worker thread because PJRT handles are not `Send`.
+
+use crate::pmodel::StructureKind;
+use crate::runtime::{Engine, VariantMeta};
+use crate::transform::{EmbeddingConfig, Nonlinearity, StructuredEmbedding};
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+
+/// Where a variant's compute comes from.
+#[derive(Debug, Clone)]
+pub enum BackendSpec {
+    /// Load + compile an AOT artifact through PJRT.
+    Pjrt {
+        /// artifact directory
+        dir: PathBuf,
+        /// variant metadata from the manifest
+        meta: VariantMeta,
+    },
+    /// Run the pure-rust structured pipeline.
+    Native {
+        /// embedding configuration (structure, m, n, f, seed)
+        config: EmbeddingConfig,
+    },
+}
+
+impl BackendSpec {
+    /// Input dimension this backend expects.
+    pub fn n(&self) -> usize {
+        match self {
+            BackendSpec::Pjrt { meta, .. } => meta.n,
+            BackendSpec::Native { config } => config.n,
+        }
+    }
+
+    /// Output feature dimension.
+    pub fn out_dim(&self) -> usize {
+        match self {
+            BackendSpec::Pjrt { meta, .. } => meta.out_dim,
+            BackendSpec::Native { config } => config.f.out_dim(config.m),
+        }
+    }
+
+    /// Largest batch a single backend call may take (PJRT artifacts are
+    /// compiled for a fixed batch; native is unbounded).
+    pub fn max_exec_batch(&self) -> usize {
+        match self {
+            BackendSpec::Pjrt { meta, .. } => meta.batch,
+            BackendSpec::Native { .. } => usize::MAX,
+        }
+    }
+
+    /// Build the backend (call from the owning worker thread).
+    pub fn build(&self) -> Result<Backend> {
+        match self {
+            BackendSpec::Pjrt { dir, meta } => {
+                Ok(Backend::Pjrt(Engine::load(dir, meta.clone())?))
+            }
+            BackendSpec::Native { config } => {
+                Ok(Backend::Native(StructuredEmbedding::sample(config.clone())))
+            }
+        }
+    }
+
+    /// A native spec from manifest-style names (used by the CLI).
+    pub fn native(
+        structure: &str,
+        f: &str,
+        m: usize,
+        n: usize,
+        seed: u64,
+    ) -> Result<BackendSpec> {
+        let kind = StructureKind::parse(structure)
+            .ok_or_else(|| anyhow!("unknown structure '{structure}'"))?;
+        let nl = Nonlinearity::parse(f).ok_or_else(|| anyhow!("unknown nonlinearity '{f}'"))?;
+        Ok(BackendSpec::Native { config: EmbeddingConfig::new(kind, m, n, nl).with_seed(seed) })
+    }
+}
+
+/// A live backend owned by one worker thread.
+pub enum Backend {
+    /// compiled PJRT executable
+    Pjrt(Engine),
+    /// pure-rust pipeline
+    Native(StructuredEmbedding),
+}
+
+impl Backend {
+    /// Embed a batch of rows (each length n) into feature vectors.
+    pub fn embed_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        match self {
+            Backend::Pjrt(engine) => engine.embed_batch(rows),
+            Backend::Native(emb) => rows
+                .iter()
+                .map(|r| {
+                    let v64: Vec<f64> = r.iter().map(|&x| x as f64).collect();
+                    if v64.len() != emb.config().n {
+                        return Err(anyhow!(
+                            "row dim {} != {}",
+                            v64.len(),
+                            emb.config().n
+                        ));
+                    }
+                    Ok(emb.embed(&v64).into_iter().map(|x| x as f32).collect())
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_spec_builds_and_embeds() {
+        let spec = BackendSpec::native("circulant", "sign", 8, 16, 3).unwrap();
+        assert_eq!(spec.n(), 16);
+        assert_eq!(spec.out_dim(), 8);
+        assert_eq!(spec.max_exec_batch(), usize::MAX);
+        let b = spec.build().unwrap();
+        let out = b.embed_batch(&[vec![0.5f32; 16], vec![-1.0f32; 16]]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].len(), 8);
+        assert!(out[0].iter().all(|&x| x == 0.0 || x == 1.0));
+    }
+
+    #[test]
+    fn native_spec_cossin_out_dim() {
+        let spec = BackendSpec::native("toeplitz", "rff", 8, 16, 3).unwrap();
+        assert_eq!(spec.out_dim(), 16);
+    }
+
+    #[test]
+    fn native_rejects_bad_names() {
+        assert!(BackendSpec::native("nope", "sign", 8, 16, 0).is_err());
+        assert!(BackendSpec::native("circulant", "nope", 8, 16, 0).is_err());
+    }
+
+    #[test]
+    fn native_rejects_bad_dim() {
+        let spec = BackendSpec::native("circulant", "sign", 8, 16, 3).unwrap();
+        let b = spec.build().unwrap();
+        assert!(b.embed_batch(&[vec![0.0f32; 15]]).is_err());
+    }
+}

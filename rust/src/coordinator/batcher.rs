@@ -1,0 +1,217 @@
+//! Dynamic batching queue: bounded, with size- and deadline-triggered
+//! batch formation (the "continuous batching" policy serving systems
+//! use — fill a batch up to `max_batch`, but never hold the first
+//! request longer than `linger`).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a push was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueError {
+    /// queue at capacity (backpressure): caller should retry/shed load
+    Full,
+    /// queue shut down
+    Closed,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded MPMC queue with batch-oriented pop.
+pub struct BatchQueue<T> {
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+impl<T> BatchQueue<T> {
+    /// New queue holding at most `capacity` pending items.
+    pub fn new(capacity: usize) -> BatchQueue<T> {
+        BatchQueue {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Push one item; `Err(Full)` applies backpressure.
+    pub fn push(&self, item: T) -> Result<(), QueueError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(QueueError::Closed);
+        }
+        if g.items.len() >= self.capacity {
+            return Err(QueueError::Full);
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Pop a batch: blocks until at least one item is available (or the
+    /// queue closes), then keeps gathering until `max_batch` items are
+    /// in hand or `linger` has elapsed since the first item was taken.
+    /// Returns `None` only when closed *and* drained.
+    pub fn pop_batch(&self, max_batch: usize, linger: Duration) -> Option<Vec<T>> {
+        let mut g = self.inner.lock().unwrap();
+        // wait for the first item
+        loop {
+            if !g.items.is_empty() {
+                break;
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+        let mut batch = Vec::with_capacity(max_batch.min(g.items.len()));
+        while batch.len() < max_batch {
+            if let Some(x) = g.items.pop_front() {
+                batch.push(x);
+            } else {
+                break;
+            }
+        }
+        // linger for more if there is room
+        let deadline = Instant::now() + linger;
+        while batch.len() < max_batch && !g.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (ng, timeout) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+            while batch.len() < max_batch {
+                if let Some(x) = g.items.pop_front() {
+                    batch.push(x);
+                } else {
+                    break;
+                }
+            }
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        Some(batch)
+    }
+
+    /// Close the queue: pushes fail, poppers drain then get `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Current depth (diagnostics).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    /// True when no items are pending.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn push_pop_roundtrip() {
+        let q = BatchQueue::new(8);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let b = q.pop_batch(10, Duration::from_millis(1)).unwrap();
+        assert_eq!(b, vec![1, 2]);
+    }
+
+    #[test]
+    fn backpressure_when_full() {
+        let q = BatchQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.push(3), Err(QueueError::Full));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn closed_queue_rejects_and_drains() {
+        let q = BatchQueue::new(4);
+        q.push(7).unwrap();
+        q.close();
+        assert_eq!(q.push(8), Err(QueueError::Closed));
+        assert_eq!(q.pop_batch(4, Duration::from_millis(1)), Some(vec![7]));
+        assert_eq!(q.pop_batch(4, Duration::from_millis(1)), None);
+    }
+
+    #[test]
+    fn batch_respects_max() {
+        let q = BatchQueue::new(16);
+        for i in 0..10 {
+            q.push(i).unwrap();
+        }
+        let b = q.pop_batch(4, Duration::from_millis(0)).unwrap();
+        assert_eq!(b.len(), 4);
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn linger_gathers_late_arrivals() {
+        let q = Arc::new(BatchQueue::new(16));
+        let q2 = q.clone();
+        q.push(0).unwrap();
+        let h = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(20));
+            q2.push(1).unwrap();
+        });
+        let b = q.pop_batch(2, Duration::from_millis(500)).unwrap();
+        h.join().unwrap();
+        assert_eq!(b, vec![0, 1], "linger should pick up the late push");
+    }
+
+    #[test]
+    fn blocking_pop_wakes_on_push() {
+        let q = Arc::new(BatchQueue::new(4));
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.pop_batch(4, Duration::from_millis(1)));
+        thread::sleep(Duration::from_millis(20));
+        q.push(42).unwrap();
+        let b = h.join().unwrap().unwrap();
+        assert_eq!(b, vec![42]);
+    }
+
+    #[test]
+    fn concurrent_producers_no_loss() {
+        let q = Arc::new(BatchQueue::new(10_000));
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let q = q.clone();
+            handles.push(thread::spawn(move || {
+                for i in 0..100 {
+                    q.push(t * 1000 + i).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut got = Vec::new();
+        while let Some(mut b) = {
+            if q.is_empty() {
+                None
+            } else {
+                q.pop_batch(64, Duration::from_millis(0))
+            }
+        } {
+            got.append(&mut b);
+        }
+        assert_eq!(got.len(), 800);
+    }
+}

@@ -1,0 +1,176 @@
+//! Serving metrics: counters + latency reservoir with percentile
+//! snapshots.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Shared metrics sink (cheap to clone via Arc at the call sites).
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    rejected: AtomicU64,
+    failed: AtomicU64,
+    batches: AtomicU64,
+    batch_rows: AtomicU64,
+    /// per-request latencies in seconds (bounded reservoir)
+    latencies: Mutex<Vec<f64>>,
+}
+
+/// Frozen view of the metrics.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    /// seconds since coordinator start
+    pub uptime: f64,
+    /// requests accepted into a queue
+    pub submitted: u64,
+    /// responses delivered
+    pub completed: u64,
+    /// requests shed by backpressure
+    pub rejected: u64,
+    /// requests that failed in the backend
+    pub failed: u64,
+    /// batches executed
+    pub batches: u64,
+    /// mean rows per batch
+    pub mean_batch_size: f64,
+    /// completed / uptime
+    pub throughput_rps: f64,
+    /// latency percentiles (seconds)
+    pub p50: f64,
+    /// 90th percentile latency
+    pub p90: f64,
+    /// 99th percentile latency
+    pub p99: f64,
+}
+
+const RESERVOIR: usize = 100_000;
+
+impl Metrics {
+    /// Fresh metrics.
+    pub fn new() -> Metrics {
+        Metrics {
+            started: Instant::now(),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_rows: AtomicU64::new(0),
+            latencies: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Record an accepted request.
+    pub fn on_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a shed request.
+    pub fn on_reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a backend failure.
+    pub fn on_fail(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an executed batch of `rows` requests.
+    pub fn on_batch(&self, rows: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_rows.fetch_add(rows as u64, Ordering::Relaxed);
+    }
+
+    /// Record a completed request with its end-to-end latency.
+    pub fn on_complete(&self, latency_secs: f64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let mut g = self.latencies.lock().unwrap();
+        if g.len() < RESERVOIR {
+            g.push(latency_secs);
+        }
+    }
+
+    /// Take a snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let lat = self.latencies.lock().unwrap().clone();
+        let uptime = self.started.elapsed().as_secs_f64().max(1e-9);
+        let completed = self.completed.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let rows = self.batch_rows.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            uptime,
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed,
+            rejected: self.rejected.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            batches,
+            mean_batch_size: if batches > 0 { rows as f64 / batches as f64 } else { 0.0 },
+            throughput_rps: completed as f64 / uptime,
+            p50: crate::util::percentile(&lat, 50.0),
+            p90: crate::util::percentile(&lat, 90.0),
+            p99: crate::util::percentile(&lat, 99.0),
+        }
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "up={:.1}s submitted={} completed={} rejected={} failed={} batches={} \
+             mean_batch={:.2} rps={:.1} p50={:.3}ms p90={:.3}ms p99={:.3}ms",
+            self.uptime,
+            self.submitted,
+            self.completed,
+            self.rejected,
+            self.failed,
+            self.batches,
+            self.mean_batch_size,
+            self.throughput_rps,
+            self.p50 * 1e3,
+            self.p90 * 1e3,
+            self.p99 * 1e3
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_reject();
+        m.on_batch(2);
+        m.on_complete(0.010);
+        m.on_complete(0.020);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.batches, 1);
+        assert!((s.mean_batch_size - 2.0).abs() < 1e-12);
+        assert!(s.p50 >= 0.010 && s.p50 <= 0.020);
+    }
+
+    #[test]
+    fn snapshot_display_formats() {
+        let m = Metrics::new();
+        m.on_complete(0.001);
+        let text = format!("{}", m.snapshot());
+        assert!(text.contains("completed=1"));
+        assert!(text.contains("p99"));
+    }
+}

@@ -1,0 +1,30 @@
+//! L3 coordinator: an embedding-serving system in the style of a
+//! vLLM-class router, built entirely on std (threads + channels — the
+//! offline environment has no tokio).
+//!
+//! Architecture:
+//!
+//! ```text
+//!  clients ──submit()──▶ router ──▶ per-variant BatchQueue (bounded)
+//!                                        │  dynamic batching:
+//!                                        │  max_batch / linger deadline
+//!                                        ▼
+//!                               worker thread (owns Backend)
+//!                               ├─ PJRT engine (AOT artifact)   ← request path
+//!                               └─ native rust pipeline (fallback)
+//! ```
+//!
+//! Python never appears on the request path: PJRT workers execute the
+//! AOT-compiled HLO; the native backend is pure rust.
+
+mod backend;
+mod batcher;
+mod metrics;
+mod server;
+mod tcp;
+
+pub use backend::{Backend, BackendSpec};
+pub use batcher::{BatchQueue, QueueError};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use server::{Coordinator, CoordinatorConfig, EmbedError, EmbedResponse};
+pub use tcp::serve_tcp;

@@ -1,0 +1,311 @@
+//! The coordinator proper: routes requests to per-variant batch queues,
+//! each drained by a dedicated worker thread that owns its backend.
+
+use super::backend::BackendSpec;
+use super::batcher::{BatchQueue, QueueError};
+use super::metrics::Metrics;
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Coordinator tuning knobs.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// max rows per executed batch (PJRT variants are additionally
+    /// capped by their compiled batch size)
+    pub max_batch: usize,
+    /// how long the batcher waits for stragglers after the first request
+    pub linger: Duration,
+    /// bounded queue depth per variant (backpressure beyond this)
+    pub queue_capacity: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            max_batch: 16,
+            linger: Duration::from_millis(2),
+            queue_capacity: 1024,
+        }
+    }
+}
+
+/// A served embedding result.
+#[derive(Debug, Clone)]
+pub struct EmbedResponse {
+    /// feature vector
+    pub features: Vec<f32>,
+    /// end-to-end latency
+    pub latency: Duration,
+}
+
+/// Submission failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EmbedError {
+    /// no such variant registered
+    UnknownVariant(String),
+    /// queue full (backpressure)
+    Overloaded,
+    /// coordinator shutting down
+    Closed,
+    /// backend error text
+    Backend(String),
+}
+
+impl std::fmt::Display for EmbedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EmbedError::UnknownVariant(v) => write!(f, "unknown variant '{v}'"),
+            EmbedError::Overloaded => write!(f, "queue full"),
+            EmbedError::Closed => write!(f, "coordinator closed"),
+            EmbedError::Backend(e) => write!(f, "backend error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for EmbedError {}
+
+struct Pending {
+    vector: Vec<f32>,
+    enqueued: Instant,
+    reply: mpsc::Sender<Result<EmbedResponse, EmbedError>>,
+}
+
+struct Variant {
+    queue: Arc<BatchQueue<Pending>>,
+    spec: BackendSpec,
+}
+
+/// The embedding-serving coordinator.
+pub struct Coordinator {
+    variants: HashMap<String, Variant>,
+    workers: Vec<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Start a coordinator serving the given named variants.
+    pub fn start(
+        specs: Vec<(String, BackendSpec)>,
+        config: CoordinatorConfig,
+    ) -> anyhow::Result<Coordinator> {
+        let metrics = Arc::new(Metrics::new());
+        let mut variants = HashMap::new();
+        let mut workers = Vec::new();
+        for (name, spec) in specs {
+            let queue = Arc::new(BatchQueue::<Pending>::new(config.queue_capacity));
+            let max_batch = config.max_batch.min(spec.max_exec_batch());
+            let linger = config.linger;
+            let wq = queue.clone();
+            let wspec = spec.clone();
+            let wmetrics = metrics.clone();
+            let wname = name.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("strembed-worker-{wname}"))
+                .spawn(move || {
+                    // backend built in-thread: PJRT handles are not Send
+                    let backend = match wspec.build() {
+                        Ok(b) => b,
+                        Err(e) => {
+                            eprintln!("worker {wname}: backend init failed: {e:#}");
+                            wq.close();
+                            return;
+                        }
+                    };
+                    while let Some(batch) = wq.pop_batch(max_batch, linger) {
+                        if batch.is_empty() {
+                            continue;
+                        }
+                        wmetrics.on_batch(batch.len());
+                        let rows: Vec<Vec<f32>> =
+                            batch.iter().map(|p| p.vector.clone()).collect();
+                        match backend.embed_batch(&rows) {
+                            Ok(features) => {
+                                for (p, f) in batch.into_iter().zip(features) {
+                                    let latency = p.enqueued.elapsed();
+                                    wmetrics.on_complete(latency.as_secs_f64());
+                                    let _ = p
+                                        .reply
+                                        .send(Ok(EmbedResponse { features: f, latency }));
+                                }
+                            }
+                            Err(e) => {
+                                let msg = format!("{e:#}");
+                                for p in batch {
+                                    wmetrics.on_fail();
+                                    let _ =
+                                        p.reply.send(Err(EmbedError::Backend(msg.clone())));
+                                }
+                            }
+                        }
+                    }
+                })
+                .expect("spawn worker");
+            workers.push(handle);
+            variants.insert(name, Variant { queue, spec });
+        }
+        Ok(Coordinator { variants, workers, metrics })
+    }
+
+    /// Registered variant names.
+    pub fn variant_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.variants.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Backend spec of a variant.
+    pub fn spec(&self, variant: &str) -> Option<&BackendSpec> {
+        self.variants.get(variant).map(|v| &v.spec)
+    }
+
+    /// Submit asynchronously; the receiver yields the response.
+    pub fn submit(
+        &self,
+        variant: &str,
+        vector: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Result<EmbedResponse, EmbedError>>, EmbedError> {
+        let v = self
+            .variants
+            .get(variant)
+            .ok_or_else(|| EmbedError::UnknownVariant(variant.to_string()))?;
+        if vector.len() != v.spec.n() {
+            return Err(EmbedError::Backend(format!(
+                "input dim {} != {}",
+                vector.len(),
+                v.spec.n()
+            )));
+        }
+        let (tx, rx) = mpsc::channel();
+        let pending = Pending { vector, enqueued: Instant::now(), reply: tx };
+        match v.queue.push(pending) {
+            Ok(()) => {
+                self.metrics.on_submit();
+                Ok(rx)
+            }
+            Err(QueueError::Full) => {
+                self.metrics.on_reject();
+                Err(EmbedError::Overloaded)
+            }
+            Err(QueueError::Closed) => Err(EmbedError::Closed),
+        }
+    }
+
+    /// Blocking convenience wrapper.
+    pub fn embed_blocking(
+        &self,
+        variant: &str,
+        vector: Vec<f32>,
+    ) -> Result<EmbedResponse, EmbedError> {
+        let rx = self.submit(variant, vector)?;
+        rx.recv().map_err(|_| EmbedError::Closed)?
+    }
+
+    /// Metrics handle.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// Graceful shutdown: close queues, join workers.
+    pub fn shutdown(mut self) {
+        for v in self.variants.values() {
+            v.queue.close();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        for v in self.variants.values() {
+            v.queue.close();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn native_coordinator(max_batch: usize, capacity: usize) -> Coordinator {
+        let spec = BackendSpec::native("circulant", "sign", 8, 16, 42).unwrap();
+        Coordinator::start(
+            vec![("circ-sign".into(), spec)],
+            CoordinatorConfig {
+                max_batch,
+                linger: Duration::from_millis(1),
+                queue_capacity: capacity,
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn serves_blocking_requests() {
+        let c = native_coordinator(8, 64);
+        let resp = c.embed_blocking("circ-sign", vec![0.25f32; 16]).unwrap();
+        assert_eq!(resp.features.len(), 8);
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.completed, 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn unknown_variant_rejected() {
+        let c = native_coordinator(8, 64);
+        assert!(matches!(
+            c.embed_blocking("nope", vec![0.0; 16]),
+            Err(EmbedError::UnknownVariant(_))
+        ));
+    }
+
+    #[test]
+    fn wrong_dim_rejected() {
+        let c = native_coordinator(8, 64);
+        assert!(matches!(
+            c.embed_blocking("circ-sign", vec![0.0; 4]),
+            Err(EmbedError::Backend(_))
+        ));
+    }
+
+    #[test]
+    fn batches_multiple_concurrent_requests() {
+        let c = Arc::new(native_coordinator(16, 256));
+        let mut rxs = Vec::new();
+        for i in 0..32 {
+            let v = vec![i as f32 / 32.0; 16];
+            rxs.push(c.submit("circ-sign", v).unwrap());
+        }
+        for rx in rxs {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.features.len(), 8);
+        }
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.completed, 32);
+        assert!(snap.batches < 32, "batching should group requests: {}", snap.batches);
+        assert!(snap.mean_batch_size > 1.0);
+    }
+
+    #[test]
+    fn deterministic_across_requests() {
+        let c = native_coordinator(4, 64);
+        let v = vec![0.7f32; 16];
+        let a = c.embed_blocking("circ-sign", v.clone()).unwrap();
+        let b = c.embed_blocking("circ-sign", v).unwrap();
+        assert_eq!(a.features, b.features);
+    }
+
+    #[test]
+    fn shutdown_closes_cleanly() {
+        let c = native_coordinator(4, 64);
+        c.embed_blocking("circ-sign", vec![0.0; 16]).unwrap();
+        c.shutdown();
+    }
+}

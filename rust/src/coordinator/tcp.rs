@@ -1,0 +1,154 @@
+//! Minimal TCP front-end: newline-delimited text protocol.
+//!
+//! ```text
+//! → EMBED <variant> <f32,f32,...>
+//! ← OK <f32,f32,...>
+//! ← ERR <message>
+//! → VARIANTS            ← OK <name,name,...>
+//! → METRICS             ← OK <snapshot text>
+//! → QUIT                (closes the connection)
+//! ```
+
+use super::server::Coordinator;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Serve `coordinator` on `addr` (e.g. "127.0.0.1:7878") until `stop`
+/// becomes true. Returns the bound local address through the callback
+/// before blocking (port 0 picks a free port).
+pub fn serve_tcp(
+    coordinator: Arc<Coordinator>,
+    addr: &str,
+    stop: Arc<AtomicBool>,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> std::io::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    on_bound(listener.local_addr()?);
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let c = coordinator.clone();
+                conns.push(std::thread::spawn(move || {
+                    let _ = handle_conn(stream, &c);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, c: &Coordinator) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client hung up
+        }
+        let reply = dispatch(line.trim(), c);
+        if reply.is_empty() {
+            return Ok(()); // QUIT
+        }
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+}
+
+fn dispatch(line: &str, c: &Coordinator) -> String {
+    let mut parts = line.splitn(3, ' ');
+    match parts.next().unwrap_or("") {
+        "QUIT" => String::new(),
+        "VARIANTS" => format!("OK {}", c.variant_names().join(",")),
+        "METRICS" => format!("OK {}", c.metrics().snapshot()),
+        "EMBED" => {
+            let Some(variant) = parts.next() else {
+                return "ERR missing variant".into();
+            };
+            let Some(csv) = parts.next() else {
+                return "ERR missing vector".into();
+            };
+            let vector: Result<Vec<f32>, _> =
+                csv.split(',').map(|t| t.trim().parse::<f32>()).collect();
+            match vector {
+                Err(e) => format!("ERR bad vector: {e}"),
+                Ok(v) => match c.embed_blocking(variant, v) {
+                    Ok(resp) => {
+                        let out: Vec<String> =
+                            resp.features.iter().map(|x| format!("{x}")).collect();
+                        format!("OK {}", out.join(","))
+                    }
+                    Err(e) => format!("ERR {e}"),
+                },
+            }
+        }
+        other => format!("ERR unknown command '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BackendSpec, CoordinatorConfig};
+    use std::io::{BufRead, BufReader, Write};
+    use std::sync::mpsc;
+
+    fn start_server() -> (std::net::SocketAddr, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+        let spec = BackendSpec::native("circulant", "sign", 4, 8, 1).unwrap();
+        let c = Arc::new(
+            Coordinator::start(vec![("v".into(), spec)], CoordinatorConfig::default()).unwrap(),
+        );
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let (tx, rx) = mpsc::channel();
+        let h = std::thread::spawn(move || {
+            serve_tcp(c, "127.0.0.1:0", stop2, move |addr| {
+                let _ = tx.send(addr);
+            })
+            .unwrap();
+        });
+        (rx.recv().unwrap(), stop, h)
+    }
+
+    fn roundtrip(addr: std::net::SocketAddr, msg: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(msg.as_bytes()).unwrap();
+        s.write_all(b"\n").unwrap();
+        let mut reader = BufReader::new(s);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        line.trim().to_string()
+    }
+
+    #[test]
+    fn tcp_embed_roundtrip() {
+        let (addr, stop, h) = start_server();
+        let reply = roundtrip(addr, "EMBED v 0.1,0.2,0.3,0.4,0.5,0.6,0.7,0.8");
+        assert!(reply.starts_with("OK "), "{reply}");
+        let feats: Vec<f32> =
+            reply[3..].split(',').map(|t| t.parse().unwrap()).collect();
+        assert_eq!(feats.len(), 4);
+        let v = roundtrip(addr, "VARIANTS");
+        assert_eq!(v, "OK v");
+        let m = roundtrip(addr, "METRICS");
+        assert!(m.contains("completed="), "{m}");
+        let e = roundtrip(addr, "EMBED nope 1,2");
+        assert!(e.starts_with("ERR"), "{e}");
+        let bad = roundtrip(addr, "EMBED v 1,notanumber");
+        assert!(bad.starts_with("ERR bad vector"), "{bad}");
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,105 @@
+//! A deterministic multi-class classification corpus ("digits-like"):
+//! class prototypes on the unit sphere plus bounded Gaussian noise.
+//! Used by the downstream-task example (T7) to show that structured
+//! random features match unstructured ones on a real learning task.
+
+use crate::rng::Rng;
+
+/// A labeled dataset with train/test split.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    /// feature dimension
+    pub dim: usize,
+    /// number of classes
+    pub n_classes: usize,
+    /// training points
+    pub train: Vec<(Vec<f64>, usize)>,
+    /// held-out test points
+    pub test: Vec<(Vec<f64>, usize)>,
+}
+
+impl Corpus {
+    /// Generate a corpus: `n_classes` prototypes on S^{dim-1}, points =
+    /// normalize(prototype + noise·σ), split train/test.
+    pub fn generate(
+        dim: usize,
+        n_classes: usize,
+        per_class: usize,
+        noise: f64,
+        seed: u64,
+    ) -> Corpus {
+        let mut rng = Rng::new(seed);
+        let protos = crate::data::unit_sphere(n_classes, dim, &mut rng);
+        let mut all: Vec<(Vec<f64>, usize)> = Vec::new();
+        for (label, proto) in protos.iter().enumerate() {
+            for _ in 0..per_class {
+                let mut p: Vec<f64> = proto
+                    .iter()
+                    .map(|&x| x + noise * rng.gaussian())
+                    .collect();
+                let norm: f64 = p.iter().map(|x| x * x).sum::<f64>().sqrt();
+                for x in p.iter_mut() {
+                    *x /= norm.max(1e-300);
+                }
+                all.push((p, label));
+            }
+        }
+        rng.shuffle(&mut all);
+        let n_test = all.len() / 5;
+        let test = all.split_off(all.len() - n_test);
+        Corpus { dim, n_classes, train: all, test }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_split() {
+        let c = Corpus::generate(16, 4, 25, 0.3, 1);
+        assert_eq!(c.train.len() + c.test.len(), 100);
+        assert_eq!(c.test.len(), 20);
+        assert!(c.train.iter().all(|(p, l)| p.len() == 16 && *l < 4));
+    }
+
+    #[test]
+    fn points_are_unit_norm() {
+        let c = Corpus::generate(8, 3, 10, 0.2, 2);
+        for (p, _) in c.train.iter().chain(&c.test) {
+            let n: f64 = p.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((n - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn low_noise_is_separable_by_prototype_distance() {
+        // sanity: with small noise, nearest-prototype classifies well
+        let c = Corpus::generate(16, 4, 25, 0.15, 3);
+        let mut rng = Rng::new(3);
+        let protos = crate::data::unit_sphere(4, 16, &mut rng);
+        let mut correct = 0;
+        for (p, l) in &c.test {
+            let best = (0..4)
+                .max_by(|&a, &b| {
+                    let da: f64 = protos[a].iter().zip(p).map(|(x, y)| x * y).sum();
+                    let db: f64 = protos[b].iter().zip(p).map(|(x, y)| x * y).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == *l {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / c.test.len() as f64;
+        assert!(acc > 0.8, "nearest-prototype accuracy {acc}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = Corpus::generate(8, 2, 5, 0.1, 9);
+        let b = Corpus::generate(8, 2, 5, 0.1, 9);
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.test, b.test);
+    }
+}

@@ -1,0 +1,108 @@
+//! LIBSVM text-format parser — the standard sparse interchange format
+//! (`<label> <index>:<value> ...` per line, 1-based indices), so real
+//! datasets can be fed through the same embedding/eval code paths.
+
+/// One parsed record: label and dense feature vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LibsvmRecord {
+    /// class / regression label
+    pub label: f64,
+    /// dense features (length = requested dim)
+    pub features: Vec<f64>,
+}
+
+/// Parse LIBSVM-format text into dense records of dimension `dim`.
+/// Indices beyond `dim` are rejected; malformed lines produce errors.
+pub fn parse_libsvm(text: &str, dim: usize) -> Result<Vec<LibsvmRecord>, String> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label: f64 = parts
+            .next()
+            .ok_or_else(|| format!("line {}: empty", lineno + 1))?
+            .parse()
+            .map_err(|e| format!("line {}: bad label: {e}", lineno + 1))?;
+        let mut features = vec![0.0; dim];
+        for tok in parts {
+            let (idx_s, val_s) = tok
+                .split_once(':')
+                .ok_or_else(|| format!("line {}: bad token '{tok}'", lineno + 1))?;
+            let idx: usize = idx_s
+                .parse()
+                .map_err(|e| format!("line {}: bad index '{idx_s}': {e}", lineno + 1))?;
+            let val: f64 = val_s
+                .parse()
+                .map_err(|e| format!("line {}: bad value '{val_s}': {e}", lineno + 1))?;
+            if idx == 0 || idx > dim {
+                return Err(format!("line {}: index {idx} out of range 1..={dim}", lineno + 1));
+            }
+            features[idx - 1] = val;
+        }
+        out.push(LibsvmRecord { label, features });
+    }
+    Ok(out)
+}
+
+/// Serialize records back to LIBSVM text (sparse: zeros omitted).
+pub fn to_libsvm(records: &[LibsvmRecord]) -> String {
+    let mut out = String::new();
+    for r in records {
+        out.push_str(&format!("{}", r.label));
+        for (i, &v) in r.features.iter().enumerate() {
+            if v != 0.0 {
+                out.push_str(&format!(" {}:{}", i + 1, v));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_lines() {
+        let text = "1 1:0.5 3:-2.0\n-1 2:1.25\n";
+        let recs = parse_libsvm(text, 4).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].label, 1.0);
+        assert_eq!(recs[0].features, vec![0.5, 0.0, -2.0, 0.0]);
+        assert_eq!(recs[1].features, vec![0.0, 1.25, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let text = "# comment\n\n1 1:1\n";
+        let recs = parse_libsvm(text, 2).unwrap();
+        assert_eq!(recs.len(), 1);
+    }
+
+    #[test]
+    fn rejects_out_of_range_index() {
+        assert!(parse_libsvm("1 5:1.0\n", 4).is_err());
+        assert!(parse_libsvm("1 0:1.0\n", 4).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_libsvm("1 nocolon\n", 4).is_err());
+        assert!(parse_libsvm("notalabel 1:1\n", 4).is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let recs = vec![
+            LibsvmRecord { label: 1.0, features: vec![0.5, 0.0, 1.0] },
+            LibsvmRecord { label: -1.0, features: vec![0.0, 2.0, 0.0] },
+        ];
+        let text = to_libsvm(&recs);
+        let back = parse_libsvm(&text, 3).unwrap();
+        assert_eq!(back, recs);
+    }
+}

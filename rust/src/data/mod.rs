@@ -1,0 +1,15 @@
+//! Dataset substrates.
+//!
+//! The paper is distribution-free over datapoints, so experiments run on
+//! deterministic synthetic generators ([`synthetic`]); a LIBSVM-format
+//! parser ([`libsvm`]) lets users feed real data through the identical
+//! code path, and [`corpus`] provides a small, fully deterministic
+//! classification corpus for the downstream-task example.
+
+pub mod corpus;
+pub mod libsvm;
+pub mod synthetic;
+
+pub use corpus::Corpus;
+pub use libsvm::{parse_libsvm, LibsvmRecord};
+pub use synthetic::{clustered_pairs, gaussian_cloud, unit_sphere};

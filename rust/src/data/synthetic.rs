@@ -1,0 +1,119 @@
+//! Deterministic synthetic dataset generators.
+
+use crate::rng::Rng;
+
+/// `count` iid standard Gaussian points in R^dim.
+pub fn gaussian_cloud(count: usize, dim: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    (0..count).map(|_| rng.gaussian_vec(dim)).collect()
+}
+
+/// `count` points uniform on the unit sphere S^{dim-1}.
+pub fn unit_sphere(count: usize, dim: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    (0..count)
+        .map(|_| {
+            let mut v = rng.gaussian_vec(dim);
+            let norm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            for x in v.iter_mut() {
+                *x /= norm.max(1e-300);
+            }
+            v
+        })
+        .collect()
+}
+
+/// Pairs of unit vectors with a controlled spread of angles: for each
+/// pair, draw u uniform on the sphere and rotate toward an independent
+/// direction by an angle sampled uniformly in (0, π). Exercises the full
+/// range of the angular estimators.
+pub fn clustered_pairs(count: usize, dim: usize, rng: &mut Rng) -> Vec<(Vec<f64>, Vec<f64>)> {
+    assert!(dim >= 2);
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let u = unit_sphere(1, dim, rng).pop().unwrap();
+        // gram-schmidt an independent direction against u
+        let mut w = rng.gaussian_vec(dim);
+        let proj: f64 = u.iter().zip(&w).map(|(a, b)| a * b).sum();
+        for (wi, ui) in w.iter_mut().zip(&u) {
+            *wi -= proj * ui;
+        }
+        let wn: f64 = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+        for x in w.iter_mut() {
+            *x /= wn.max(1e-300);
+        }
+        let theta = rng.uniform_in(0.05, std::f64::consts::PI - 0.05);
+        let v: Vec<f64> =
+            u.iter().zip(&w).map(|(a, b)| a * theta.cos() + b * theta.sin()).collect();
+        out.push((u, v));
+    }
+    out
+}
+
+/// Scale all points to have L2 norm at most `r` (Theorem 12's bounded
+/// domain assumption).
+pub fn clamp_to_ball(points: &mut [Vec<f64>], r: f64) {
+    for p in points.iter_mut() {
+        let norm: f64 = p.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm > r {
+            let s = r / norm;
+            for x in p.iter_mut() {
+                *x *= s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cloud_shapes() {
+        let mut rng = Rng::new(1);
+        let pts = gaussian_cloud(10, 16, &mut rng);
+        assert_eq!(pts.len(), 10);
+        assert!(pts.iter().all(|p| p.len() == 16));
+    }
+
+    #[test]
+    fn sphere_points_are_unit() {
+        let mut rng = Rng::new(2);
+        for p in unit_sphere(50, 8, &mut rng) {
+            let n: f64 = p.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((n - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn pairs_have_expected_angles() {
+        let mut rng = Rng::new(3);
+        let pairs = clustered_pairs(100, 8, &mut rng);
+        let mut min_t = f64::INFINITY;
+        let mut max_t: f64 = 0.0;
+        for (u, v) in &pairs {
+            let t = crate::exact::angle(u, v);
+            min_t = min_t.min(t);
+            max_t = max_t.max(t);
+        }
+        // angles should cover a broad range
+        assert!(min_t < 0.7, "min angle {min_t}");
+        assert!(max_t > 2.2, "max angle {max_t}");
+    }
+
+    #[test]
+    fn clamp_respects_radius() {
+        let mut rng = Rng::new(4);
+        let mut pts = gaussian_cloud(20, 8, &mut rng);
+        clamp_to_ball(&mut pts, 1.0);
+        for p in &pts {
+            let n: f64 = p.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!(n <= 1.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = gaussian_cloud(3, 4, &mut Rng::new(7));
+        let b = gaussian_cloud(3, 4, &mut Rng::new(7));
+        assert_eq!(a, b);
+    }
+}

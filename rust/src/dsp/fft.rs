@@ -1,0 +1,377 @@
+//! Iterative radix-2 Cooley–Tukey FFT with precomputed twiddles and
+//! bit-reversal permutation. Power-of-two sizes only (callers zero-pad).
+//!
+//! The plan object (`Fft`) caches twiddle factors and the bit-reversal
+//! table so the hot loop (structured matvec on the serving path) performs
+//! no trigonometry and no allocation beyond the output buffer.
+
+/// Minimal complex number (no external num crate available offline).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Complex {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Complex {
+    /// Construct.
+    pub const fn new(re: f64, im: f64) -> Complex {
+        Complex { re, im }
+    }
+
+    /// Additive identity.
+    pub const ZERO: Complex = Complex::new(0.0, 0.0);
+
+    /// Complex multiplication.
+    #[inline]
+    pub fn mul(self, o: Complex) -> Complex {
+        Complex::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
+    }
+
+    /// Complex addition.
+    #[inline]
+    pub fn add(self, o: Complex) -> Complex {
+        Complex::new(self.re + o.re, self.im + o.im)
+    }
+
+    /// Complex subtraction.
+    #[inline]
+    pub fn sub(self, o: Complex) -> Complex {
+        Complex::new(self.re - o.re, self.im - o.im)
+    }
+
+    /// Complex conjugate.
+    #[inline]
+    pub fn conj(self) -> Complex {
+        Complex::new(self.re, -self.im)
+    }
+
+    /// Scale by a real.
+    #[inline]
+    pub fn scale(self, s: f64) -> Complex {
+        Complex::new(self.re * s, self.im * s)
+    }
+
+    /// Squared magnitude.
+    #[inline]
+    pub fn norm_sq(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+}
+
+/// An FFT plan for a fixed power-of-two size.
+#[derive(Debug, Clone)]
+pub struct Fft {
+    n: usize,
+    /// twiddles[s] holds the n/2 factors e^{-2πi k / 2^(s+1)} laid out per stage
+    twiddles: Vec<Complex>,
+    bitrev: Vec<u32>,
+}
+
+impl Fft {
+    /// Build a plan for size `n` (must be a power of two).
+    pub fn new(n: usize) -> Fft {
+        assert!(crate::util::is_pow2(n), "FFT size must be a power of two, got {n}");
+        // Precompute forward twiddles for the largest stage; smaller
+        // stages stride through the same table.
+        let half = n / 2;
+        let mut twiddles = Vec::with_capacity(half.max(1));
+        for k in 0..half.max(1) {
+            let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+            twiddles.push(Complex::new(ang.cos(), ang.sin()));
+        }
+        let bits = crate::util::log2_exact(n);
+        let bitrev = (0..n as u32).map(|i| i.reverse_bits() >> (32 - bits.max(1)) as u32).collect::<Vec<_>>();
+        // For n == 1, bits == 0; fix the table to identity.
+        let bitrev = if n == 1 { vec![0] } else { bitrev };
+        Fft { n, twiddles, bitrev }
+    }
+
+    /// Plan size.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True if the plan size is 1 (degenerate).
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// In-place forward DFT: X[k] = Σ_j x[j] e^{-2πi jk/n}.
+    pub fn forward_inplace(&self, buf: &mut [Complex]) {
+        assert_eq!(buf.len(), self.n);
+        self.permute(buf);
+        self.butterflies(buf, false);
+    }
+
+    /// In-place inverse DFT (includes the 1/n normalization).
+    pub fn inverse_inplace(&self, buf: &mut [Complex]) {
+        assert_eq!(buf.len(), self.n);
+        self.permute(buf);
+        self.butterflies(buf, true);
+        let inv = 1.0 / self.n as f64;
+        for v in buf.iter_mut() {
+            *v = v.scale(inv);
+        }
+    }
+
+    fn permute(&self, buf: &mut [Complex]) {
+        for i in 0..self.n {
+            let j = self.bitrev[i] as usize;
+            if i < j {
+                buf.swap(i, j);
+            }
+        }
+    }
+
+    fn butterflies(&self, buf: &mut [Complex], inverse: bool) {
+        let n = self.n;
+        let mut len = 2usize;
+        while len <= n {
+            let half = len / 2;
+            let stride = n / len; // stride into the twiddle table
+            for start in (0..n).step_by(len) {
+                for k in 0..half {
+                    let mut w = self.twiddles[k * stride];
+                    if inverse {
+                        w = w.conj();
+                    }
+                    let a = buf[start + k];
+                    let b = buf[start + k + half].mul(w);
+                    buf[start + k] = a.add(b);
+                    buf[start + k + half] = a.sub(b);
+                }
+            }
+            len <<= 1;
+        }
+    }
+
+    /// Forward DFT of a real signal; returns the full complex spectrum.
+    pub fn forward_real(&self, x: &[f64]) -> Vec<Complex> {
+        assert_eq!(x.len(), self.n);
+        let mut buf: Vec<Complex> = x.iter().map(|&v| Complex::new(v, 0.0)).collect();
+        self.forward_inplace(&mut buf);
+        buf
+    }
+
+    /// Inverse DFT returning the real part (input spectrum assumed
+    /// conjugate-symmetric, i.e. spectrum of a real signal).
+    pub fn inverse_real(&self, spec: &[Complex]) -> Vec<f64> {
+        assert_eq!(spec.len(), self.n);
+        let mut buf = spec.to_vec();
+        self.inverse_inplace(&mut buf);
+        buf.into_iter().map(|c| c.re).collect()
+    }
+}
+
+/// Real-input FFT via the packed half-size complex transform (§Perf).
+///
+/// Packs the even/odd samples of a length-N real signal into an N/2
+/// complex signal, runs one half-size FFT and unpacks with the standard
+/// split formulas — ~1.7× faster than a full complex transform for the
+/// real convolutions on the structured-matvec hot path. Spectra are the
+/// non-redundant half: indices 0..=N/2.
+pub struct RealFft {
+    half: Fft,
+    /// W^k = e^{-2πik/N} for k = 0..=N/2
+    w: Vec<Complex>,
+    n: usize,
+}
+
+impl RealFft {
+    /// Plan for even power-of-two size `n >= 2`.
+    pub fn new(n: usize) -> RealFft {
+        assert!(crate::util::is_pow2(n) && n >= 2, "RealFft needs pow2 n >= 2, got {n}");
+        let m = n / 2;
+        let w = (0..=m)
+            .map(|k| {
+                let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+                Complex::new(ang.cos(), ang.sin())
+            })
+            .collect();
+        RealFft { half: Fft::new(m), w, n }
+    }
+
+    /// Transform size.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True if size 0 (never: constructor requires n ≥ 2).
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Forward transform: returns the half-spectrum X[0..=n/2].
+    pub fn forward(&self, x: &[f64]) -> Vec<Complex> {
+        assert_eq!(x.len(), self.n);
+        let m = self.n / 2;
+        let mut z: Vec<Complex> =
+            (0..m).map(|k| Complex::new(x[2 * k], x[2 * k + 1])).collect();
+        self.half.forward_inplace(&mut z);
+        let mut out = Vec::with_capacity(m + 1);
+        for k in 0..=m {
+            let zk = z[k % m];
+            let zmk = z[(m - k) % m].conj();
+            let xe = zk.add(zmk).scale(0.5);
+            // Xo = -i (zk - zmk)/2
+            let d = zk.sub(zmk).scale(0.5);
+            let xo = Complex::new(d.im, -d.re);
+            out.push(xe.add(self.w[k].mul(xo)));
+        }
+        out
+    }
+
+    /// Inverse transform from a half-spectrum (length n/2 + 1) back to
+    /// the real signal (includes 1/n normalization).
+    pub fn inverse(&self, spec: &[Complex]) -> Vec<f64> {
+        let m = self.n / 2;
+        assert_eq!(spec.len(), m + 1);
+        let mut z = Vec::with_capacity(m);
+        for k in 0..m {
+            let xk = spec[k];
+            let xmk = spec[m - k].conj();
+            let xe = xk.add(xmk).scale(0.5);
+            let rot = xk.sub(xmk).scale(0.5); // = W^k · Xo
+            // Xo = conj(W^k) · rot
+            let xo = self.w[k].conj().mul(rot);
+            // z[k] = Xe + i·Xo
+            z.push(xe.add(Complex::new(-xo.im, xo.re)));
+        }
+        self.half.inverse_inplace(&mut z);
+        let mut out = Vec::with_capacity(self.n);
+        for c in z {
+            out.push(c.re);
+            out.push(c.im);
+        }
+        out
+    }
+}
+
+/// Naive O(n²) DFT used as a test oracle.
+#[cfg(test)]
+pub fn dft_naive(x: &[Complex]) -> Vec<Complex> {
+    let n = x.len();
+    (0..n)
+        .map(|k| {
+            let mut acc = Complex::ZERO;
+            for (j, &v) in x.iter().enumerate() {
+                let ang = -2.0 * std::f64::consts::PI * (j * k) as f64 / n as f64;
+                acc = acc.add(v.mul(Complex::new(ang.cos(), ang.sin())));
+            }
+            acc
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn matches_naive_dft() {
+        let mut rng = Rng::new(1);
+        for &n in &[1usize, 2, 4, 8, 16, 64] {
+            let x: Vec<Complex> =
+                (0..n).map(|_| Complex::new(rng.gaussian(), rng.gaussian())).collect();
+            let fft = Fft::new(n);
+            let mut got = x.clone();
+            fft.forward_inplace(&mut got);
+            let want = dft_naive(&x);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g.re - w.re).abs() < 1e-9 && (g.im - w.im).abs() < 1e-9, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_inverse_roundtrip() {
+        let mut rng = Rng::new(2);
+        for &n in &[2usize, 8, 32, 256, 1024] {
+            let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let fft = Fft::new(n);
+            let spec = fft.forward_real(&x);
+            let back = fft.inverse_real(&spec);
+            crate::util::assert_close(&back, &x, 1e-9);
+        }
+    }
+
+    #[test]
+    fn parseval_energy_conserved() {
+        let mut rng = Rng::new(3);
+        let n = 512;
+        let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let fft = Fft::new(n);
+        let spec = fft.forward_real(&x);
+        let time_energy: f64 = x.iter().map(|v| v * v).sum();
+        let freq_energy: f64 = spec.iter().map(|c| c.norm_sq()).sum::<f64>() / n as f64;
+        assert!((time_energy - freq_energy).abs() < 1e-8 * time_energy.max(1.0));
+    }
+
+    #[test]
+    fn impulse_has_flat_spectrum() {
+        let n = 16;
+        let mut x = vec![0.0; n];
+        x[0] = 1.0;
+        let spec = Fft::new(n).forward_real(&x);
+        for c in spec {
+            assert!((c.re - 1.0).abs() < 1e-12 && c.im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn real_spectrum_is_conjugate_symmetric() {
+        let mut rng = Rng::new(4);
+        let n = 64;
+        let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let spec = Fft::new(n).forward_real(&x);
+        for k in 1..n {
+            let a = spec[k];
+            let b = spec[n - k].conj();
+            assert!((a.re - b.re).abs() < 1e-9 && (a.im - b.im).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_pow2() {
+        Fft::new(12);
+    }
+
+    #[test]
+    fn real_fft_matches_full_fft() {
+        let mut rng = Rng::new(7);
+        for &n in &[2usize, 4, 8, 64, 512] {
+            let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let full = Fft::new(n).forward_real(&x);
+            let half = RealFft::new(n).forward(&x);
+            assert_eq!(half.len(), n / 2 + 1);
+            for k in 0..=n / 2 {
+                assert!(
+                    (half[k].re - full[k].re).abs() < 1e-9
+                        && (half[k].im - full[k].im).abs() < 1e-9,
+                    "n={n} k={k}: {:?} vs {:?}",
+                    half[k],
+                    full[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn real_fft_roundtrip() {
+        let mut rng = Rng::new(8);
+        for &n in &[2usize, 16, 256, 2048] {
+            let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let plan = RealFft::new(n);
+            let back = plan.inverse(&plan.forward(&x));
+            crate::util::assert_close(&back, &x, 1e-9);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn real_fft_rejects_n1() {
+        RealFft::new(1);
+    }
+}

@@ -1,0 +1,188 @@
+//! Signal-processing substrate: FFT, fast Walsh–Hadamard transform and
+//! circular convolution.
+//!
+//! These are the primitives that make the paper's structured matrices
+//! *fast*: circulant/Toeplitz/Hankel matvec reduces to FFT-based circular
+//! convolution (`O(n log n)` instead of `O(mn)`), and the preprocessing
+//! step `D₁ H D₀` uses the Walsh–Hadamard transform (`O(n log n)`,
+//! computed on the fly — H is never stored, per the paper's Remark in
+//! §2.3). Implemented from scratch: no FFT crate is available offline.
+
+pub mod fft;
+pub mod fwht;
+pub mod plan;
+
+pub use fft::{Complex, Fft};
+pub use fwht::fwht_inplace;
+pub use plan::{ConvPlan, NegacyclicPlan};
+
+/// Circular convolution of two equal-length real vectors via FFT.
+/// `out[k] = Σ_j a[j] · b[(k - j) mod n]`.
+pub fn circular_convolve(a: &[f64], b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let m = crate::util::next_pow2(n.max(1));
+    if n == m {
+        let fft = Fft::new(n);
+        let fa = fft.forward_real(a);
+        let fb = fft.forward_real(b);
+        let prod: Vec<Complex> = fa.iter().zip(&fb).map(|(x, y)| x.mul(*y)).collect();
+        fft.inverse_real(&prod)
+    } else {
+        // Non-power-of-two length: use Bluestein-free fallback — zero-pad
+        // to 2m and wrap. Circular convolution of period n equals the
+        // aperiodic (linear) convolution folded mod n.
+        let lin = linear_convolve(a, b);
+        let mut out = vec![0.0; n];
+        for (k, &v) in lin.iter().enumerate() {
+            out[k % n] += v;
+        }
+        out
+    }
+}
+
+/// Negacyclic (skew-circular) convolution of two equal-length real
+/// vectors: `out[k] = Σ_{j≤k} a[j]·b[k-j] − Σ_{j>k} a[j]·b[n+k-j]`.
+/// This is the matvec core of skew-circulant matrices. Power-of-two
+/// lengths use the ω = e^{iπ/n} twisting trick (O(n log n)); other
+/// lengths fall back to the naive O(n²) form.
+pub fn negacyclic_convolve(a: &[f64], b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if !crate::util::is_pow2(n) {
+        let mut out = vec![0.0; n];
+        for k in 0..n {
+            for j in 0..n {
+                let term = a[j] * b[(k + n - j) % n];
+                if j <= k {
+                    out[k] += term;
+                } else {
+                    out[k] -= term;
+                }
+            }
+        }
+        return out;
+    }
+    let fft = Fft::new(n);
+    // twist by ω^j, convolve cyclically, untwist by ω^{-k}
+    let twist = |v: &[f64]| -> Vec<Complex> {
+        v.iter()
+            .enumerate()
+            .map(|(j, &x)| {
+                let ang = std::f64::consts::PI * j as f64 / n as f64;
+                Complex::new(ang.cos(), ang.sin()).scale(x)
+            })
+            .collect()
+    };
+    let mut fa = twist(a);
+    let mut fb = twist(b);
+    fft.forward_inplace(&mut fa);
+    fft.forward_inplace(&mut fb);
+    let mut prod: Vec<Complex> = fa.iter().zip(&fb).map(|(x, y)| x.mul(*y)).collect();
+    fft.inverse_inplace(&mut prod);
+    prod.iter()
+        .enumerate()
+        .map(|(k, c)| {
+            let ang = -std::f64::consts::PI * k as f64 / n as f64;
+            let w = Complex::new(ang.cos(), ang.sin());
+            c.mul(w).re
+        })
+        .collect()
+}
+
+/// Linear (aperiodic) convolution via zero-padded power-of-two FFT.
+pub fn linear_convolve(a: &[f64], b: &[f64]) -> Vec<f64> {
+    let out_len = a.len() + b.len() - 1;
+    let m = crate::util::next_pow2(out_len);
+    let fft = Fft::new(m);
+    let mut pa = a.to_vec();
+    pa.resize(m, 0.0);
+    let mut pb = b.to_vec();
+    pb.resize(m, 0.0);
+    let fa = fft.forward_real(&pa);
+    let fb = fft.forward_real(&pb);
+    let prod: Vec<Complex> = fa.iter().zip(&fb).map(|(x, y)| x.mul(*y)).collect();
+    let mut out = fft.inverse_real(&prod);
+    out.truncate(out_len);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_circular(a: &[f64], b: &[f64]) -> Vec<f64> {
+        let n = a.len();
+        (0..n)
+            .map(|k| (0..n).map(|j| a[j] * b[(k + n - j) % n]).sum())
+            .collect()
+    }
+
+    #[test]
+    fn circular_matches_naive_pow2() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let b = [0.5, -1.0, 2.0, 0.0, 1.0, -0.5, 3.0, 1.5];
+        let got = circular_convolve(&a, &b);
+        let want = naive_circular(&a, &b);
+        crate::util::assert_close(&got, &want, 1e-10);
+    }
+
+    #[test]
+    fn circular_matches_naive_non_pow2() {
+        let a = [1.0, -2.0, 0.5, 3.0, 1.0];
+        let b = [2.0, 1.0, -1.0, 0.0, 0.5];
+        let got = circular_convolve(&a, &b);
+        let want = naive_circular(&a, &b);
+        crate::util::assert_close(&got, &want, 1e-10);
+    }
+
+    #[test]
+    fn linear_convolution_known() {
+        // [1,2] * [3,4] = [3, 10, 8]
+        let got = linear_convolve(&[1.0, 2.0], &[3.0, 4.0]);
+        crate::util::assert_close(&got, &[3.0, 10.0, 8.0], 1e-12);
+    }
+
+    fn naive_negacyclic(a: &[f64], b: &[f64]) -> Vec<f64> {
+        let n = a.len();
+        let mut out = vec![0.0; n];
+        for k in 0..n {
+            for j in 0..n {
+                let term = a[j] * b[(k + n - j) % n];
+                if j <= k {
+                    out[k] += term;
+                } else {
+                    out[k] -= term;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn negacyclic_matches_naive_pow2() {
+        let a = [1.0, -2.0, 0.5, 3.0, 1.0, 0.25, -1.5, 2.0];
+        let b = [2.0, 1.0, -1.0, 0.0, 0.5, 1.5, -0.25, 1.0];
+        let got = negacyclic_convolve(&a, &b);
+        let want = naive_negacyclic(&a, &b);
+        crate::util::assert_close(&got, &want, 1e-10);
+    }
+
+    #[test]
+    fn negacyclic_non_pow2_fallback() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        let got = negacyclic_convolve(&a, &b);
+        let want = naive_negacyclic(&a, &b);
+        crate::util::assert_close(&got, &want, 1e-12);
+    }
+
+    #[test]
+    fn convolution_with_delta_is_identity() {
+        let a = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut delta = [0.0; 8];
+        delta[0] = 1.0;
+        let got = circular_convolve(&a, &delta);
+        crate::util::assert_close(&got, &a, 1e-12);
+    }
+}

@@ -1,0 +1,129 @@
+//! Precomputed convolution plans — the hot-path optimization for
+//! structured matvec (EXPERIMENTS.md §Perf).
+//!
+//! The naive helpers in [`super`] re-plan an FFT and re-transform the
+//! (fixed!) kernel on every call. Structured matrices apply the *same*
+//! kernel thousands of times per second on the serving path, so these
+//! plans cache the FFT twiddles and the kernel spectrum at construction:
+//! one forward FFT, one pointwise multiply and one inverse per matvec.
+
+use super::fft::{Complex, Fft, RealFft};
+
+/// Circular convolution with a fixed kernel: `apply(x) = kernel ⊛ x`.
+/// Power-of-two length only. Uses the packed real FFT (half-spectrum)
+/// since both operands and the result are real.
+pub struct ConvPlan {
+    fft: Option<RealFft>, // None for the trivial n = 1 case
+    kspec: Vec<Complex>,
+    k1: f64,
+}
+
+impl ConvPlan {
+    /// Plan for a fixed kernel (length must be a power of two).
+    pub fn new(kernel: &[f64]) -> ConvPlan {
+        if kernel.len() < 2 {
+            return ConvPlan { fft: None, kspec: Vec::new(), k1: kernel.first().copied().unwrap_or(0.0) };
+        }
+        let fft = RealFft::new(kernel.len());
+        let kspec = fft.forward(kernel);
+        ConvPlan { fft: Some(fft), kspec, k1: 0.0 }
+    }
+
+    /// `kernel ⊛ x` (same length as the kernel).
+    pub fn apply(&self, x: &[f64]) -> Vec<f64> {
+        match &self.fft {
+            None => vec![self.k1 * x[0]],
+            Some(fft) => {
+                let mut xs = fft.forward(x);
+                for (v, k) in xs.iter_mut().zip(&self.kspec) {
+                    *v = v.mul(*k);
+                }
+                fft.inverse(&xs)
+            }
+        }
+    }
+}
+
+/// Negacyclic convolution with a fixed kernel b: `apply(a) = negaconv(a, b)`
+/// via the ω = e^{iπ/n} twisting trick, with the twist table and the
+/// twisted kernel spectrum precomputed. Power-of-two length only.
+pub struct NegacyclicPlan {
+    fft: Fft,
+    /// ω^j for j = 0..n
+    twist: Vec<Complex>,
+    /// FFT of the twisted kernel
+    kspec: Vec<Complex>,
+}
+
+impl NegacyclicPlan {
+    /// Plan for a fixed kernel (length must be a power of two).
+    pub fn new(kernel: &[f64]) -> NegacyclicPlan {
+        let n = kernel.len();
+        let fft = Fft::new(n);
+        let twist: Vec<Complex> = (0..n)
+            .map(|j| {
+                let ang = std::f64::consts::PI * j as f64 / n as f64;
+                Complex::new(ang.cos(), ang.sin())
+            })
+            .collect();
+        let mut kb: Vec<Complex> =
+            kernel.iter().zip(&twist).map(|(&x, w)| w.scale(x)).collect();
+        fft.forward_inplace(&mut kb);
+        NegacyclicPlan { fft, twist, kspec: kb }
+    }
+
+    /// `negaconv(a, kernel)` — sign −1 on wrapped index sums.
+    pub fn apply(&self, a: &[f64]) -> Vec<f64> {
+        let mut fa: Vec<Complex> =
+            a.iter().zip(&self.twist).map(|(&x, w)| w.scale(x)).collect();
+        self.fft.forward_inplace(&mut fa);
+        for (v, k) in fa.iter_mut().zip(&self.kspec) {
+            *v = v.mul(*k);
+        }
+        self.fft.inverse_inplace(&mut fa);
+        fa.iter()
+            .zip(&self.twist)
+            .map(|(c, w)| c.mul(w.conj()).re)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::{circular_convolve, negacyclic_convolve};
+    use crate::rng::Rng;
+
+    #[test]
+    fn conv_plan_matches_oneshot() {
+        let mut rng = Rng::new(1);
+        for &n in &[2usize, 8, 64, 256] {
+            let k = rng.gaussian_vec(n);
+            let x = rng.gaussian_vec(n);
+            let plan = ConvPlan::new(&k);
+            crate::util::assert_close(&plan.apply(&x), &circular_convolve(&k, &x), 1e-9);
+        }
+    }
+
+    #[test]
+    fn negacyclic_plan_matches_oneshot() {
+        let mut rng = Rng::new(2);
+        for &n in &[2usize, 8, 64, 256] {
+            let k = rng.gaussian_vec(n);
+            let x = rng.gaussian_vec(n);
+            let plan = NegacyclicPlan::new(&k);
+            crate::util::assert_close(&plan.apply(&x), &negacyclic_convolve(&x, &k), 1e-9);
+        }
+    }
+
+    #[test]
+    fn plans_are_reusable() {
+        let mut rng = Rng::new(3);
+        let k = rng.gaussian_vec(32);
+        let plan = ConvPlan::new(&k);
+        let x1 = rng.gaussian_vec(32);
+        let x2 = rng.gaussian_vec(32);
+        crate::util::assert_close(&plan.apply(&x1), &circular_convolve(&k, &x1), 1e-9);
+        crate::util::assert_close(&plan.apply(&x2), &circular_convolve(&k, &x2), 1e-9);
+    }
+}

@@ -1,0 +1,130 @@
+//! Experiment registry and result plumbing.
+
+use crate::util::Table;
+
+/// A named experiment.
+pub struct Experiment {
+    /// id used on the CLI (`strembed eval --exp <id>`)
+    pub id: &'static str,
+    /// one-line description (paper source)
+    pub description: &'static str,
+    /// runner
+    pub run: fn() -> ExperimentResult,
+}
+
+/// Output of one experiment.
+#[derive(Debug, Clone)]
+pub struct ExperimentResult {
+    /// experiment id
+    pub id: String,
+    /// result tables
+    pub tables: Vec<Table>,
+    /// free-text observations (assertions about the paper's claims that
+    /// were checked programmatically)
+    pub notes: Vec<String>,
+}
+
+impl ExperimentResult {
+    /// Render markdown (tables + notes).
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        for t in &self.tables {
+            out.push_str(&t.to_markdown());
+            out.push('\n');
+        }
+        if !self.notes.is_empty() {
+            out.push_str("Notes:\n");
+            for n in &self.notes {
+                out.push_str(&format!("- {n}\n"));
+            }
+        }
+        out
+    }
+}
+
+/// All registered experiments (DESIGN.md §5).
+pub const EXPERIMENTS: &[Experiment] = &[
+    Experiment {
+        id: "fig1",
+        description: "Figure 1: circulant coherence graph (odd cycle, chi=3)",
+        run: super::experiments::fig1,
+    },
+    Experiment {
+        id: "fig2",
+        description: "Figure 2: Toeplitz coherence graphs (paths, chi=2)",
+        run: super::experiments::fig2,
+    },
+    Experiment {
+        id: "stats",
+        description: "chi/mu/unicoherence across all families and sizes",
+        run: super::experiments::stats_sweep,
+    },
+    Experiment {
+        id: "unbiased",
+        description: "Lemma 5: structured estimators are unbiased",
+        run: super::experiments::unbiased,
+    },
+    Experiment {
+        id: "angular",
+        description: "Theorem 11: angular distance sup-error vs m",
+        run: super::experiments::angular,
+    },
+    Experiment {
+        id: "gaussian",
+        description: "Theorem 12: Gaussian-kernel sup-error vs m",
+        run: super::experiments::gaussian,
+    },
+    Experiment {
+        id: "budget",
+        description: "Budget-of-randomness dial: LDR rank / group size vs error",
+        run: super::experiments::budget,
+    },
+    Experiment {
+        id: "jl",
+        description: "f=id special case: inner-product preservation (JL)",
+        run: super::experiments::jl,
+    },
+    Experiment {
+        id: "arccos",
+        description: "Arc-cosine kernels b=0,1,2 vs closed form",
+        run: super::experiments::arccos,
+    },
+    Experiment {
+        id: "speed",
+        description: "Matvec time + storage: structured vs dense",
+        run: super::experiments::speed,
+    },
+];
+
+/// Run one experiment by id.
+pub fn run_experiment(id: &str) -> Option<ExperimentResult> {
+    EXPERIMENTS.iter().find(|e| e.id == id).map(|e| (e.run)())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_unique() {
+        let mut ids: Vec<&str> = EXPERIMENTS.iter().map(|e| e.id).collect();
+        let n = ids.len();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+        assert!(n >= 10);
+    }
+
+    #[test]
+    fn unknown_experiment_is_none() {
+        assert!(run_experiment("nope").is_none());
+    }
+
+    #[test]
+    fn fig1_runs_and_renders() {
+        let r = run_experiment("fig1").unwrap();
+        assert!(!r.tables.is_empty());
+        let md = r.to_markdown();
+        assert!(md.contains('|'));
+    }
+}

@@ -1,0 +1,10 @@
+//! Experiment harness: every figure/claim of the paper mapped to a
+//! runnable experiment that emits markdown + CSV tables.
+//!
+//! See DESIGN.md §5 for the experiment index (F1, F2, T1–T8) and
+//! EXPERIMENTS.md for recorded results.
+
+pub mod experiments;
+pub mod harness;
+
+pub use harness::{run_experiment, Experiment, ExperimentResult, EXPERIMENTS};

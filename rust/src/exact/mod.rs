@@ -1,0 +1,187 @@
+//! Exact closed-form kernels — the ground truth every randomized
+//! estimator is judged against.
+//!
+//! All are instances of the paper's eq. (2):
+//! `Λ_f(v¹,v²) = E[f(⟨r,v¹⟩)·f(⟨r,v²⟩)]`, r ~ N(0, I_n):
+//!
+//! - f = id            → Euclidean inner product ⟨v¹,v²⟩,
+//! - f = heaviside     → (π−θ)/(2π)  (angular similarity; paper's
+//!                       "angular distance" example, see note below),
+//! - f = x^b·1{x≥0}    → arc-cosine kernel of order b (Cho & Saul 2009),
+//! - f = cos/sin pair  → Gaussian kernel exp(−‖v¹−v²‖²/2).
+//!
+//! Note: the paper writes `Λ_f = θ/(2π)` for the heaviside case; the
+//! standard Gaussian-orthant identity gives `P[x≥0 ∧ y≥0] = (π−θ)/(2π)`
+//! (equivalently 1/2 − θ/(2π)). We implement the orthant identity —
+//! θ is still recoverable linearly from Λ_f either way, and our Monte
+//! Carlo unit tests pin the implemented form against simulation.
+
+use crate::pmodel::dot;
+
+/// L2 norm.
+pub fn norm(v: &[f64]) -> f64 {
+    dot(v, v).sqrt()
+}
+
+/// Angle θ ∈ [0, π] between two nonzero vectors.
+pub fn angle(v1: &[f64], v2: &[f64]) -> f64 {
+    let c = dot(v1, v2) / (norm(v1) * norm(v2));
+    c.clamp(-1.0, 1.0).acos()
+}
+
+/// Exact Λ_f for f = heaviside: P[⟨r,v¹⟩ ≥ 0 ∧ ⟨r,v²⟩ ≥ 0] = (π−θ)/(2π).
+pub fn heaviside_kernel(v1: &[f64], v2: &[f64]) -> f64 {
+    (std::f64::consts::PI - angle(v1, v2)) / (2.0 * std::f64::consts::PI)
+}
+
+/// Recover the angle from a heaviside-kernel value: θ = π − 2π·Λ.
+pub fn angle_from_heaviside(lambda: f64) -> f64 {
+    std::f64::consts::PI - 2.0 * std::f64::consts::PI * lambda
+}
+
+/// The angular *distance* normalized to [0,1]: θ/π (what sign-hashes
+/// estimate via the Hamming distance of their bit codes).
+pub fn angular_distance(v1: &[f64], v2: &[f64]) -> f64 {
+    angle(v1, v2) / std::f64::consts::PI
+}
+
+/// Cho & Saul J_b(θ) for b = 0, 1, 2.
+fn j_b(b: u32, theta: f64) -> f64 {
+    let (s, c) = theta.sin_cos();
+    let pi = std::f64::consts::PI;
+    match b {
+        0 => pi - theta,
+        1 => s + (pi - theta) * c,
+        2 => 3.0 * s * c + (pi - theta) * (1.0 + 2.0 * c * c),
+        _ => panic!("arc-cosine kernel implemented for b in 0..=2, got {b}"),
+    }
+}
+
+/// Exact arc-cosine kernel of order b:
+/// `Λ_f(v¹,v²) = (1/2π)·‖v¹‖^b·‖v²‖^b·J_b(θ)` with f(x) = x^b·1{x≥0}.
+pub fn arc_cosine_kernel(b: u32, v1: &[f64], v2: &[f64]) -> f64 {
+    let theta = angle(v1, v2);
+    (norm(v1).powi(b as i32) * norm(v2).powi(b as i32)) * j_b(b, theta)
+        / (2.0 * std::f64::consts::PI)
+}
+
+/// Exact Gaussian kernel `exp(−‖v¹−v²‖²/2)` — what the paired cos/sin
+/// random-feature map estimates.
+pub fn gaussian_kernel(v1: &[f64], v2: &[f64]) -> f64 {
+    let d2: f64 = v1.iter().zip(v2).map(|(a, b)| (a - b) * (a - b)).sum();
+    (-d2 / 2.0).exp()
+}
+
+/// Exact Euclidean inner product (f = id case; the JL target).
+pub fn inner_product(v1: &[f64], v2: &[f64]) -> f64 {
+    dot(v1, v2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Monte-Carlo check of a Λ_f against its closed form.
+    fn mc_lambda(f: impl Fn(f64) -> f64, v1: &[f64], v2: &[f64], trials: usize, seed: u64) -> f64 {
+        let mut rng = Rng::new(seed);
+        let n = v1.len();
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let r = rng.gaussian_vec(n);
+            acc += f(dot(&r, v1)) * f(dot(&r, v2));
+        }
+        acc / trials as f64
+    }
+
+    #[test]
+    fn angle_basics() {
+        assert!((angle(&[1.0, 0.0], &[0.0, 1.0]) - std::f64::consts::FRAC_PI_2).abs() < 1e-12);
+        assert!(angle(&[1.0, 0.0], &[1.0, 0.0]).abs() < 1e-6);
+        assert!((angle(&[1.0, 0.0], &[-1.0, 0.0]) - std::f64::consts::PI).abs() < 1e-6);
+    }
+
+    #[test]
+    fn heaviside_matches_monte_carlo() {
+        let v1 = [1.0, 0.0, 0.0];
+        let v2 = [0.6, 0.8, 0.0];
+        let exact = heaviside_kernel(&v1, &v2);
+        let mc = mc_lambda(|x| if x >= 0.0 { 1.0 } else { 0.0 }, &v1, &v2, 200_000, 1);
+        assert!((exact - mc).abs() < 0.005, "exact {exact} mc {mc}");
+    }
+
+    #[test]
+    fn heaviside_extremes() {
+        // identical vectors: θ=0 → 1/2 ; antipodal: θ=π → 0
+        let v = [0.3, -0.4, 1.2];
+        let negv: Vec<f64> = v.iter().map(|x| -x).collect();
+        // acos near ±1 loses precision quadratically: tolerance 1e-6
+        assert!((heaviside_kernel(&v, &v) - 0.5).abs() < 1e-6);
+        assert!(heaviside_kernel(&v, &negv).abs() < 1e-6);
+    }
+
+    #[test]
+    fn angle_recovery_roundtrip() {
+        let v1 = [1.0, 2.0, -0.5];
+        let v2 = [0.2, 1.0, 0.7];
+        let lam = heaviside_kernel(&v1, &v2);
+        assert!((angle_from_heaviside(lam) - angle(&v1, &v2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn arccos_b0_equals_heaviside() {
+        let v1 = [1.0, 2.0, 3.0];
+        let v2 = [-1.0, 0.5, 2.0];
+        assert!((arc_cosine_kernel(0, &v1, &v2) - heaviside_kernel(&v1, &v2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn arccos_b1_matches_monte_carlo() {
+        let v1 = [0.8, 0.6];
+        let v2 = [0.0, 1.0];
+        let exact = arc_cosine_kernel(1, &v1, &v2);
+        let mc = mc_lambda(|x| x.max(0.0), &v1, &v2, 400_000, 2);
+        assert!((exact - mc).abs() < 0.01, "exact {exact} mc {mc}");
+    }
+
+    #[test]
+    fn arccos_b2_matches_monte_carlo() {
+        let v1 = [0.8, 0.6];
+        let v2 = [0.6, 0.8];
+        let exact = arc_cosine_kernel(2, &v1, &v2);
+        let mc = mc_lambda(|x| if x >= 0.0 { x * x } else { 0.0 }, &v1, &v2, 400_000, 3);
+        assert!((exact - mc).abs() < 0.02, "exact {exact} mc {mc}");
+    }
+
+    #[test]
+    fn gaussian_matches_monte_carlo_cos_identity() {
+        // E[cos(⟨r, v1-v2⟩)] = exp(-||v1-v2||²/2)
+        let v1 = [0.5, 0.2, -0.3];
+        let v2 = [0.1, 0.4, 0.0];
+        let exact = gaussian_kernel(&v1, &v2);
+        let mut rng = Rng::new(4);
+        let mut acc = 0.0;
+        let trials = 200_000;
+        for _ in 0..trials {
+            let r = rng.gaussian_vec(3);
+            let z1 = dot(&r, &v1);
+            let z2 = dot(&r, &v2);
+            acc += z1.cos() * z2.cos() + z1.sin() * z2.sin();
+        }
+        let mc = acc / trials as f64;
+        assert!((exact - mc).abs() < 0.005, "exact {exact} mc {mc}");
+    }
+
+    #[test]
+    fn gaussian_kernel_bounds() {
+        let v = [1.0, 1.0];
+        assert!((gaussian_kernel(&v, &v) - 1.0).abs() < 1e-12);
+        assert!(gaussian_kernel(&[10.0, 0.0], &[-10.0, 0.0]) < 1e-10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arccos_b3_unimplemented() {
+        arc_cosine_kernel(3, &[1.0], &[1.0]);
+    }
+}

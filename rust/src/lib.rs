@@ -1,0 +1,37 @@
+//! # strembed — Fast nonlinear embeddings via structured matrices
+//!
+//! A production-quality reproduction of Choromanski & Fagan,
+//! *"Fast nonlinear embeddings via structured matrices"* (STAT.ML 2016).
+//!
+//! The paper proposes a general **P-model** for building structured Gaussian
+//! matrices from a small "budget of randomness" `t`, covering circulant,
+//! Toeplitz, Hankel, skew-circulant and low-displacement-rank matrices as
+//! special cases, and proves concentration results for nonlinear embeddings
+//! computed through them. Quality is governed by combinatorial properties of
+//! *coherence graphs* (chromatic number χ[P], coherence μ[P], unicoherence
+//! μ̃[P]).
+//!
+//! This crate implements:
+//! - the P-model and all structured matrix families ([`pmodel`]),
+//! - fast transforms: FFT, FWHT ([`dsp`]),
+//! - coherence graphs + their combinatorial statistics ([`coherence`]),
+//! - the full embedding pipeline `x → D₀ → H → D₁ → A → f` ([`transform`]),
+//! - exact kernels for ground truth ([`exact`]),
+//! - an experiment/eval harness regenerating the paper's figures and
+//!   validating its theorems ([`eval`]),
+//! - a PJRT runtime that loads JAX/Pallas AOT artifacts ([`runtime`]),
+//! - an embedding-serving coordinator: router, dynamic batcher, metrics
+//!   ([`coordinator`]).
+pub mod cli;
+pub mod coherence;
+pub mod coordinator;
+pub mod data;
+pub mod dsp;
+pub mod eval;
+pub mod exact;
+pub mod pmodel;
+pub mod prop;
+pub mod rng;
+pub mod runtime;
+pub mod transform;
+pub mod util;

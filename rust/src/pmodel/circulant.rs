@@ -1,0 +1,217 @@
+//! Circulant Gaussian matrices (paper §2.2, example 1).
+//!
+//! `A[i][j] = g[(j - i) mod n]` — each row is a right-shift of the budget
+//! vector `g ∈ R^n` (t = n). Matvec is a circular cross-correlation, done
+//! in `O(n log n)` through the FFT: `ŷ = conj(ĝ) · x̂`.
+//!
+//! σ structure (paper eq. (8)): `σ_{i1,i2}(n1,n2) = 1` iff
+//! `n1 − n2 ≡ i1 − i2 (mod n)`, else 0 — every coherence graph is a union
+//! of vertex-disjoint cycles, so `χ[P] ≤ 3` (Figure 1).
+
+use super::PModel;
+use crate::dsp::fft::RealFft;
+use crate::dsp::Complex;
+use crate::rng::Rng;
+
+/// Circulant structured matrix, m ≤ n rows over budget g ∈ R^n.
+pub struct Circulant {
+    m: usize,
+    n: usize,
+    g: Vec<f64>,
+    /// packed real-FFT plan + precomputed conj(half-spectrum of g) when
+    /// n is a power of two (§Perf: half-size transform, cached kernel)
+    plan: Option<(RealFft, Vec<Complex>)>,
+}
+
+impl Circulant {
+    /// Sample a circulant matrix with budget drawn from `rng`.
+    pub fn new(m: usize, n: usize, rng: &mut Rng) -> Circulant {
+        assert!(m <= n, "circulant requires m <= n (got m={m}, n={n})");
+        let g = rng.gaussian_vec(n);
+        Circulant::from_budget(m, g)
+    }
+
+    /// Build from an explicit budget vector (deterministic; tests).
+    pub fn from_budget(m: usize, g: Vec<f64>) -> Circulant {
+        let n = g.len();
+        assert!(m <= n);
+        let plan = if crate::util::is_pow2(n) && n >= 2 {
+            let fft = RealFft::new(n);
+            let spec: Vec<Complex> = fft.forward(&g).iter().map(|c| c.conj()).collect();
+            Some((fft, spec))
+        } else {
+            None
+        };
+        Circulant { m, n, g, plan }
+    }
+
+    /// The budget vector g.
+    pub fn budget(&self) -> &[f64] {
+        &self.g
+    }
+}
+
+impl PModel for Circulant {
+    fn name(&self) -> &'static str {
+        "circulant"
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn t(&self) -> usize {
+        self.n
+    }
+
+    fn sigma(&self, i1: usize, i2: usize, n1: usize, n2: usize) -> f64 {
+        // column j of P_i is the unit vector e_{(j - i) mod n}
+        let n = self.n as isize;
+        let a = ((n1 as isize - i1 as isize) % n + n) % n;
+        let b = ((n2 as isize - i2 as isize) % n + n) % n;
+        if a == b {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    fn row(&self, i: usize) -> Vec<f64> {
+        assert!(i < self.m);
+        (0..self.n).map(|j| self.g[(j + self.n - i) % self.n]).collect()
+    }
+
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        match &self.plan {
+            Some((fft, gspec)) => {
+                // y[i] = Σ_j x[j] g[(j-i) mod n]  — correlation: ŷ = conj(ĝ)·x̂
+                let mut xs = fft.forward(x);
+                for (v, w) in xs.iter_mut().zip(gspec) {
+                    *v = v.mul(*w);
+                }
+                let mut y = fft.inverse(&xs);
+                y.truncate(self.m);
+                y
+            }
+            None => self.matvec_naive(x),
+        }
+    }
+
+    fn matvec_flops(&self) -> usize {
+        // 2 real-packed FFTs + pointwise product + inverse ≈ 3·(5 n log n) + 6n
+        let n = self.n.max(2) as f64;
+        (15.0 * n * n.log2() + 6.0 * n) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmodel::test_support::{check_matvec, check_row_marginals, check_sigma_basics};
+    use crate::pmodel::StructureKind;
+
+    #[test]
+    fn rows_match_paper_layout() {
+        // paper eq. (7): row0 = g0..g4; row1 = g4 g0 g1 g2 g3; ...
+        let g: Vec<f64> = (0..5).map(|i| i as f64).collect();
+        let c = Circulant::from_budget(5, g);
+        assert_eq!(c.row(0), vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(c.row(1), vec![4.0, 0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(c.row(4), vec![1.0, 2.0, 3.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn fast_matvec_matches_naive_pow2() {
+        let mut rng = Rng::new(31);
+        let c = Circulant::new(8, 16, &mut rng);
+        check_matvec(&c, 1);
+        let c2 = Circulant::new(64, 64, &mut rng);
+        check_matvec(&c2, 2);
+    }
+
+    #[test]
+    fn fast_matvec_matches_naive_non_pow2() {
+        let mut rng = Rng::new(32);
+        let c = Circulant::new(5, 7, &mut rng);
+        check_matvec(&c, 3);
+    }
+
+    #[test]
+    fn sigma_matches_paper_equation_8() {
+        let mut rng = Rng::new(33);
+        let c = Circulant::new(6, 8, &mut rng);
+        check_sigma_basics(&c);
+        for i1 in 0..6 {
+            for i2 in 0..6 {
+                for n1 in 0..8 {
+                    for n2 in 0..8 {
+                        let want = if ((n1 as isize - n2 as isize) - (i1 as isize - i2 as isize))
+                            .rem_euclid(8)
+                            == 0
+                        {
+                            1.0
+                        } else {
+                            0.0
+                        };
+                        assert_eq!(c.sigma(i1, i2, n1, n2), want);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sigma_agrees_with_explicit_p_columns() {
+        // Recover P_i columns from linearity: a^i = g·P_i with the
+        // standard basis budgets recovers P_i's rows; column dot products
+        // must equal sigma.
+        let n = 6usize;
+        let m = 4usize;
+        let mut cols = vec![vec![vec![0.0f64; n]; n]; m]; // cols[i][j][l] = P_i[l][j]
+        for l in 0..n {
+            let mut e = vec![0.0; n];
+            e[l] = 1.0;
+            let c = Circulant::from_budget(m, e);
+            for (i, col) in cols.iter_mut().enumerate() {
+                let row = c.row(i);
+                for j in 0..n {
+                    col[j][l] = row[j];
+                }
+            }
+        }
+        let mut rng = Rng::new(34);
+        let c = Circulant::new(m, n, &mut rng);
+        for i1 in 0..m {
+            for i2 in 0..m {
+                for n1 in 0..n {
+                    for n2 in 0..n {
+                        let dot: f64 =
+                            (0..n).map(|l| cols[i1][n1][l] * cols[i2][n2][l]).sum();
+                        assert!(
+                            (dot - c.sigma(i1, i2, n1, n2)).abs() < 1e-12,
+                            "i1={i1} i2={i2} n1={n1} n2={n2}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn marginals_are_standard_gaussian() {
+        check_row_marginals(StructureKind::Circulant, 4, 8);
+    }
+
+    #[test]
+    fn budget_is_linear_storage() {
+        let mut rng = Rng::new(35);
+        let c = Circulant::new(16, 32, &mut rng);
+        assert_eq!(c.storage_floats(), 32);
+        assert_eq!(c.t(), 32);
+    }
+}

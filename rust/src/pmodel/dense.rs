@@ -1,0 +1,118 @@
+//! Fully unstructured iid Gaussian matrix — the paper's baseline.
+//!
+//! Budget t = m·n (one fresh Gaussian per entry, `P_i` selects the i-th
+//! block of n). All coherence graphs are empty: σ_{i1,i2}(n1,n2) = 0 for
+//! any (i1,n1) ≠ (i2,n2), so χ[P] = 0, μ[P] = 0, μ̃[P] = 0 — the strongest
+//! concentration, at quadratic time/space cost.
+
+use super::PModel;
+use crate::rng::Rng;
+
+/// Unstructured Gaussian matrix (row-major storage).
+pub struct DenseGaussian {
+    m: usize,
+    n: usize,
+    a: Vec<f64>,
+}
+
+impl DenseGaussian {
+    /// Sample an m×n iid N(0,1) matrix.
+    pub fn new(m: usize, n: usize, rng: &mut Rng) -> DenseGaussian {
+        DenseGaussian { m, n, a: rng.gaussian_vec(m * n) }
+    }
+
+    /// Entry accessor.
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.n + j]
+    }
+}
+
+impl PModel for DenseGaussian {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn t(&self) -> usize {
+        self.m * self.n
+    }
+
+    fn sigma(&self, i1: usize, i2: usize, n1: usize, n2: usize) -> f64 {
+        // P_i places column j at budget coordinate i*n + j.
+        if i1 == i2 && n1 == n2 {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    fn row(&self, i: usize) -> Vec<f64> {
+        self.a[i * self.n..(i + 1) * self.n].to_vec()
+    }
+
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let mut y = vec![0.0; self.m];
+        for i in 0..self.m {
+            let row = &self.a[i * self.n..(i + 1) * self.n];
+            let mut acc = 0.0;
+            for (r, v) in row.iter().zip(x) {
+                acc += r * v;
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    fn matvec_flops(&self) -> usize {
+        2 * self.m * self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmodel::test_support::{check_matvec, check_sigma_basics};
+
+    #[test]
+    fn matvec_is_plain_gemv() {
+        let mut rng = Rng::new(71);
+        let d = DenseGaussian::new(6, 10, &mut rng);
+        check_matvec(&d, 1);
+    }
+
+    #[test]
+    fn sigma_is_kronecker() {
+        let mut rng = Rng::new(72);
+        let d = DenseGaussian::new(4, 5, &mut rng);
+        check_sigma_basics(&d);
+        assert_eq!(d.sigma(0, 1, 2, 2), 0.0);
+        assert_eq!(d.sigma(0, 0, 1, 2), 0.0);
+        assert_eq!(d.sigma(2, 2, 3, 3), 1.0);
+    }
+
+    #[test]
+    fn storage_is_quadratic() {
+        let mut rng = Rng::new(73);
+        let d = DenseGaussian::new(8, 16, &mut rng);
+        assert_eq!(d.storage_floats(), 128);
+    }
+
+    #[test]
+    fn entries_iid() {
+        // all m*n entries distinct with probability 1
+        let mut rng = Rng::new(74);
+        let d = DenseGaussian::new(4, 4, &mut rng);
+        let mut vals: Vec<f64> = (0..4).flat_map(|i| d.row(i)).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        vals.dedup();
+        assert_eq!(vals.len(), 16);
+    }
+}

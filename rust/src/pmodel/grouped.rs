@@ -1,0 +1,151 @@
+//! Grouped-circulant family: the budget-of-randomness dial.
+//!
+//! The paper's central narrative is a *smooth transition* between the
+//! fully structured setting (small t, fast, weaker concentration) and the
+//! unstructured one (t = mn, slow, strongest concentration). This family
+//! realizes the dial concretely: rows are split into groups of `B`
+//! consecutive rows; each group is an independent circulant block with
+//! its own fresh budget. `B = m` recovers a single circulant (t = n);
+//! `B = 1` makes every row an independent Gaussian vector — exactly the
+//! unstructured matrix (t = m·n).
+//!
+//! Cross-group σ vanishes, so coherence graphs shrink as B decreases —
+//! the mechanism by which a larger budget buys better concentration
+//! (paper §2.2.4 discussion).
+
+use super::{Circulant, PModel};
+use crate::rng::Rng;
+
+/// Block-circulant matrix with independent per-group budgets.
+pub struct GroupedCirculant {
+    m: usize,
+    n: usize,
+    rows_per_group: usize,
+    blocks: Vec<Circulant>,
+}
+
+impl GroupedCirculant {
+    /// `rows_per_group = B`; ceil(m/B) groups, each with budget n.
+    pub fn new(m: usize, n: usize, rows_per_group: usize, rng: &mut Rng) -> GroupedCirculant {
+        assert!(rows_per_group >= 1);
+        assert!(rows_per_group <= n, "group of {rows_per_group} rows needs n >= B");
+        let n_groups = m.div_ceil(rows_per_group);
+        let blocks = (0..n_groups)
+            .map(|b| {
+                let rows = rows_per_group.min(m - b * rows_per_group);
+                Circulant::new(rows, n, rng)
+            })
+            .collect();
+        GroupedCirculant { m, n, rows_per_group, blocks }
+    }
+
+    /// Number of independent circulant blocks.
+    pub fn n_groups(&self) -> usize {
+        self.blocks.len()
+    }
+
+    fn locate(&self, i: usize) -> (usize, usize) {
+        (i / self.rows_per_group, i % self.rows_per_group)
+    }
+}
+
+impl PModel for GroupedCirculant {
+    fn name(&self) -> &'static str {
+        "grouped-circulant"
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn t(&self) -> usize {
+        self.n * self.blocks.len()
+    }
+
+    fn sigma(&self, i1: usize, i2: usize, n1: usize, n2: usize) -> f64 {
+        let (b1, l1) = self.locate(i1);
+        let (b2, l2) = self.locate(i2);
+        if b1 != b2 {
+            return 0.0; // independent budgets never share coordinates
+        }
+        self.blocks[b1].sigma(l1, l2, n1, n2)
+    }
+
+    fn row(&self, i: usize) -> Vec<f64> {
+        let (b, l) = self.locate(i);
+        self.blocks[b].row(l)
+    }
+
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let mut y = Vec::with_capacity(self.m);
+        for block in &self.blocks {
+            y.extend(block.matvec(x));
+        }
+        y
+    }
+
+    fn matvec_flops(&self) -> usize {
+        self.blocks.iter().map(|b| b.matvec_flops()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmodel::test_support::{check_matvec, check_sigma_basics};
+
+    #[test]
+    fn b_equals_m_is_single_circulant() {
+        let mut rng = Rng::new(81);
+        let g = GroupedCirculant::new(8, 8, 8, &mut rng);
+        assert_eq!(g.n_groups(), 1);
+        assert_eq!(g.t(), 8);
+    }
+
+    #[test]
+    fn b_equals_1_is_unstructured_budget() {
+        let mut rng = Rng::new(82);
+        let g = GroupedCirculant::new(8, 16, 1, &mut rng);
+        assert_eq!(g.n_groups(), 8);
+        assert_eq!(g.t(), 8 * 16); // t = m·n, same as dense
+        // rows in different groups are independent draws (distinct values)
+        assert_ne!(g.row(0), g.row(1));
+    }
+
+    #[test]
+    fn matvec_matches_naive() {
+        let mut rng = Rng::new(83);
+        for &b in &[1usize, 2, 4, 8] {
+            let g = GroupedCirculant::new(8, 16, b, &mut rng);
+            check_matvec(&g, b as u64);
+        }
+    }
+
+    #[test]
+    fn sigma_zero_across_groups() {
+        let mut rng = Rng::new(84);
+        let g = GroupedCirculant::new(8, 8, 2, &mut rng);
+        check_sigma_basics(&g);
+        // rows 0 and 1 share a group; rows 0 and 2 do not
+        assert_eq!(g.sigma(0, 2, 3, 3), 0.0);
+        assert_eq!(g.sigma(0, 2, 0, 5), 0.0);
+        // within the first group circulant structure applies:
+        // n1 - n2 ≡ i1 - i2 (mod n) ⇒ σ = 1
+        assert_eq!(g.sigma(0, 1, 0, 1), 1.0);
+        assert_eq!(g.sigma(0, 1, 1, 0), 0.0);
+    }
+
+    #[test]
+    fn uneven_last_group() {
+        let mut rng = Rng::new(85);
+        let g = GroupedCirculant::new(7, 8, 3, &mut rng);
+        assert_eq!(g.n_groups(), 3);
+        assert_eq!(g.m(), 7);
+        check_matvec(&g, 9);
+    }
+}

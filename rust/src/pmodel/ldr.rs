@@ -1,0 +1,274 @@
+//! Low-displacement-rank matrices (paper §2.2, example 4).
+//!
+//! `A = Σ_{b=1}^{r} Z₁(g^b) · Z₋₁(h^b)` where `Z₁(v)` is the circulant
+//! matrix with first column `v`, `Z₋₁(h)` the skew-circulant with first
+//! column `h`, `g^b` independent Gaussian budgets (t = n·r) and `h^b`
+//! structural sparse sign vectors: `a` nonzero coordinates of value
+//! `±1/√(a·r)` — which makes every column of every `P_i` exactly unit
+//! norm (paper's normalization property).
+//!
+//! Displacement rank r is the paper's budget dial: larger r ⇒ larger t ⇒
+//! smaller |σ| ⇒ smaller μ[P], μ̃[P] ⇒ better concentration.
+//!
+//! Matvec: r circulant+negacyclic convolutions, O(r·n log n).
+
+use super::PModel;
+use crate::dsp::{circular_convolve, negacyclic_convolve, ConvPlan, NegacyclicPlan};
+use crate::rng::Rng;
+
+/// Low-displacement-rank structured matrix (m ≤ n rows of the n×n product).
+pub struct LowDisplacementRank {
+    m: usize,
+    n: usize,
+    r: usize,
+    /// Gaussian budgets g^1..g^r, each length n.
+    g: Vec<Vec<f64>>,
+    /// structural sparse sign vectors h^1..h^r, each length n.
+    h: Vec<Vec<f64>>,
+    /// per-block cached plans (§Perf): negacyclic plan for h^b and
+    /// circulant-convolution plan for g^b; None for non-pow2 n
+    plans: Option<Vec<(NegacyclicPlan, ConvPlan)>>,
+}
+
+impl LowDisplacementRank {
+    /// Number of nonzeros per h-vector (the paper's constant `a`).
+    pub const SPARSITY: usize = 4;
+
+    /// Sample with displacement rank `r`.
+    pub fn new(m: usize, n: usize, r: usize, rng: &mut Rng) -> LowDisplacementRank {
+        assert!(m <= n, "ldr requires m <= n");
+        assert!(r >= 1);
+        let a = Self::SPARSITY.min(n);
+        let val = 1.0 / ((a * r) as f64).sqrt();
+        let g: Vec<Vec<f64>> = (0..r).map(|_| rng.gaussian_vec(n)).collect();
+        let h: Vec<Vec<f64>> = (0..r)
+            .map(|_| {
+                let mut hv = vec![0.0; n];
+                for idx in rng.sample_indices(n, a) {
+                    hv[idx] = val * rng.rademacher();
+                }
+                hv
+            })
+            .collect();
+        let plans = if crate::util::is_pow2(n) {
+            Some(
+                g.iter()
+                    .zip(&h)
+                    .map(|(gb, hb)| (NegacyclicPlan::new(hb), ConvPlan::new(gb)))
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        LowDisplacementRank { m, n, r, g, h, plans }
+    }
+
+    /// Displacement rank.
+    pub fn rank(&self) -> usize {
+        self.r
+    }
+
+    /// Entry of the skew-circulant S_b = Z₋₁(h^b).
+    fn s_entry(&self, b: usize, i: usize, j: usize) -> f64 {
+        let n = self.n;
+        if i >= j {
+            self.h[b][i - j]
+        } else {
+            -self.h[b][n + i - j]
+        }
+    }
+}
+
+impl PModel for LowDisplacementRank {
+    fn name(&self) -> &'static str {
+        "ldr"
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn t(&self) -> usize {
+        self.n * self.r
+    }
+
+    fn sigma(&self, i1: usize, i2: usize, n1: usize, n2: usize) -> f64 {
+        // P_i[(b,u)][j] = S_b[(i-u) mod n][j]  ⇒
+        // σ = Σ_b Σ_k S_b[k][n1] · S_b[(k - i1 + i2) mod n][n2]
+        let n = self.n as isize;
+        let mut acc = 0.0;
+        for b in 0..self.r {
+            for k in 0..self.n {
+                let k2 = ((k as isize - i1 as isize + i2 as isize) % n + n) % n;
+                acc += self.s_entry(b, k, n1) * self.s_entry(b, k2 as usize, n2);
+            }
+        }
+        acc
+    }
+
+    fn row(&self, i: usize) -> Vec<f64> {
+        assert!(i < self.m);
+        // row_i = Σ_b Σ_k Z₁(g^b)[i][k] · S_b[k][:] with Z₁(g)[i][k] = g[(i-k) mod n]
+        let n = self.n;
+        let mut out = vec![0.0; n];
+        for b in 0..self.r {
+            for k in 0..n {
+                let gz = self.g[b][(i + n - k) % n];
+                if gz == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out[j] += gz * self.s_entry(b, k, j);
+                }
+            }
+        }
+        out
+    }
+
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let mut y = vec![0.0; self.n];
+        for b in 0..self.r {
+            // w = Z₋₁(h^b)·x = negaconv(x, h^b); y += Z₁(g^b)·w = g^b ⊛ w
+            let yb = match &self.plans {
+                Some(plans) => {
+                    let (neg, conv) = &plans[b];
+                    conv.apply(&neg.apply(x))
+                }
+                None => {
+                    let w = negacyclic_convolve(x, &self.h[b]);
+                    circular_convolve(&self.g[b], &w)
+                }
+            };
+            for (yi, v) in y.iter_mut().zip(&yb) {
+                *yi += v;
+            }
+        }
+        y.truncate(self.m);
+        y
+    }
+
+    fn matvec_flops(&self) -> usize {
+        let n = self.n.max(2) as f64;
+        (self.r as f64 * 30.0 * n * n.log2()) as usize
+    }
+
+    fn orthogonality_condition(&self) -> bool {
+        // Holds in expectation only (random h construction) — Lemma 5's
+        // exact orthogonality is not guaranteed per-sample.
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmodel::test_support::check_matvec;
+
+    #[test]
+    fn fast_matvec_matches_naive() {
+        let mut rng = Rng::new(91);
+        for &(m, n, r) in &[(4usize, 8usize, 1usize), (8, 8, 2), (6, 16, 4)] {
+            let l = LowDisplacementRank::new(m, n, r, &mut rng);
+            check_matvec(&l, (m + n + r) as u64);
+        }
+    }
+
+    #[test]
+    fn columns_are_unit_norm() {
+        // normalization property (Def. 1): every column of every P_i has
+        // unit L2 norm ⇒ sigma(i,i,j,j) == 1.
+        let mut rng = Rng::new(92);
+        let l = LowDisplacementRank::new(4, 8, 2, &mut rng);
+        for i in 0..4 {
+            for j in 0..8 {
+                let s = l.sigma(i, i, j, j);
+                assert!((s - 1.0).abs() < 1e-9, "sigma(i,i,{j},{j}) = {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn sigma_symmetry() {
+        let mut rng = Rng::new(93);
+        let l = LowDisplacementRank::new(4, 8, 2, &mut rng);
+        for i1 in 0..4 {
+            for i2 in 0..4 {
+                for n1 in 0..8 {
+                    for n2 in 0..8 {
+                        let a = l.sigma(i1, i2, n1, n2);
+                        let b = l.sigma(i2, i1, n2, n1);
+                        assert!((a - b).abs() < 1e-9);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn budget_scales_with_rank() {
+        let mut rng = Rng::new(94);
+        let l1 = LowDisplacementRank::new(4, 16, 1, &mut rng);
+        let l4 = LowDisplacementRank::new(4, 16, 4, &mut rng);
+        assert_eq!(l1.t(), 16);
+        assert_eq!(l4.t(), 64);
+        assert_eq!(l4.rank(), 4);
+    }
+
+    #[test]
+    fn larger_rank_decreases_offdiag_sigma() {
+        // The paper's claim: larger r ⇒ smaller |σ| off-diagonal (better
+        // concentration). Check the rms of σ_{i1,i2}(n1,n2) over i1≠i2.
+        let rms = |r: usize| -> f64 {
+            let mut acc = 0.0;
+            let mut cnt = 0usize;
+            let mut total = 0.0;
+            for seed in 0..10u64 {
+                let mut rng = Rng::new(200 + seed);
+                let l = LowDisplacementRank::new(4, 8, r, &mut rng);
+                for i1 in 0..4 {
+                    for i2 in 0..4 {
+                        if i1 == i2 {
+                            continue;
+                        }
+                        for n1 in 0..8 {
+                            for n2 in 0..8 {
+                                let s = l.sigma(i1, i2, n1, n2);
+                                acc += s * s;
+                                cnt += 1;
+                            }
+                        }
+                    }
+                }
+                total += (acc / cnt as f64).sqrt();
+            }
+            total / 10.0
+        };
+        let r1 = rms(1);
+        let r8 = rms(8);
+        assert!(r8 < r1, "rms sigma should shrink with rank: r1={r1} r8={r8}");
+    }
+
+    #[test]
+    fn row_marginals_are_n01() {
+        // each entry of A is a Gaussian with variance Σ_b Σ_k S_b[k][j]² ... = 1
+        let trials = 600;
+        let mut acc = 0.0;
+        let mut acc2 = 0.0;
+        for s in 0..trials {
+            let mut rng = Rng::new(400 + s as u64);
+            let l = LowDisplacementRank::new(2, 8, 2, &mut rng);
+            let v = l.row(1)[3];
+            acc += v;
+            acc2 += v * v;
+        }
+        let mean = acc / trials as f64;
+        let var = acc2 / trials as f64 - mean * mean;
+        assert!(mean.abs() < 0.15, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.25, "var {var}");
+    }
+}

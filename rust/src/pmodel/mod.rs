@@ -1,0 +1,316 @@
+//! The paper's **P-model**: structured Gaussian matrices built from a
+//! budget of randomness.
+//!
+//! A P-model is a budget `g = (g_0..g_{t-1})` of iid N(0,1) variables and
+//! a sequence of normalized matrices `P = (P_1..P_m)`, `P_i ∈ R^{t×n}`;
+//! row `i` of the structured matrix is `a^i = g · P_i` (paper eq. (3)).
+//! Correlations between rows are captured by
+//! `σ_{i1,i2}(n1,n2) = ⟨p^{i1}_{n1}, p^{i2}_{n2}⟩` — the inputs to the
+//! coherence-graph statistics of [`crate::coherence`].
+//!
+//! Families implemented (paper §2.2): circulant, skew-circulant,
+//! Toeplitz, Hankel, low-displacement-rank (r blocks), plus the fully
+//! unstructured Gaussian baseline and a grouped-circulant family that
+//! interpolates budgets between the two extremes.
+//!
+//! Every family provides both a *naive* row materialization (test oracle,
+//! storage baseline) and a *fast* FFT-based matvec — the paper's claimed
+//! `O(n log n)` speedup (Remarks in §2.3).
+
+mod circulant;
+mod dense;
+mod grouped;
+mod hankel;
+mod ldr;
+mod skew_circulant;
+mod stacked;
+mod toeplitz;
+
+pub use circulant::Circulant;
+pub use dense::DenseGaussian;
+pub use grouped::GroupedCirculant;
+pub use hankel::Hankel;
+pub use ldr::LowDisplacementRank;
+pub use skew_circulant::SkewCirculant;
+pub use stacked::Stacked;
+pub use toeplitz::Toeplitz;
+
+use crate::rng::Rng;
+
+/// A structured Gaussian matrix produced by the P-model mechanism.
+pub trait PModel: Send + Sync {
+    /// Family name (for tables and CLI).
+    fn name(&self) -> &'static str;
+    /// Number of rows m (output dimension of the projection).
+    fn m(&self) -> usize;
+    /// Number of columns n (input dimension).
+    fn n(&self) -> usize;
+    /// Budget of randomness t — how many iid Gaussians were consumed.
+    fn t(&self) -> usize;
+
+    /// Column cross-correlation `σ_{i1,i2}(n1,n2) = ⟨p^{i1}_{n1}, p^{i2}_{n2}⟩`
+    /// (0-based row indices `i1,i2 ∈ [0,m)`, column indices `n1,n2 ∈ [0,n)`).
+    fn sigma(&self, i1: usize, i2: usize, n1: usize, n2: usize) -> f64;
+
+    /// Materialize row `i` of the structured matrix `A`.
+    fn row(&self, i: usize) -> Vec<f64>;
+
+    /// Fast structured matvec `y = A·x` (length-m output).
+    fn matvec(&self, x: &[f64]) -> Vec<f64>;
+
+    /// Number of f64s that must be *stored* to represent A (the paper's
+    /// space-complexity claim; dense needs m·n, structured need O(t)).
+    fn storage_floats(&self) -> usize {
+        self.t()
+    }
+
+    /// Estimated flop count of one fast matvec (for roofline tables).
+    fn matvec_flops(&self) -> usize {
+        // default: FFT-based pipelines are ~ c · N log N with N ≈ n
+        let n = self.n().max(2);
+        10 * n * (n as f64).log2() as usize
+    }
+
+    /// Whether the orthogonality condition of Lemma 5 holds exactly
+    /// (columns of each P_i pairwise orthogonal AND same-index columns of
+    /// different P_i orthogonal ⇒ unbiased estimator).
+    fn orthogonality_condition(&self) -> bool {
+        true
+    }
+
+    /// Naive O(mn) matvec through materialized rows (test oracle).
+    fn matvec_naive(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n());
+        (0..self.m()).map(|i| dot(&self.row(i), x)).collect()
+    }
+
+    /// Materialize the full matrix (small sizes only; tests/visualization).
+    fn materialize(&self) -> Vec<Vec<f64>> {
+        (0..self.m()).map(|i| self.row(i)).collect()
+    }
+}
+
+/// Dot product helper.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Structure families selectable from the CLI / eval harness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StructureKind {
+    /// Fully unstructured iid Gaussian (t = m·n) — the paper's baseline.
+    Dense,
+    /// Circulant (t = n), paper §2.2.1.
+    Circulant,
+    /// Skew-circulant (t = n), sign-flipped wrap-around.
+    SkewCirculant,
+    /// Toeplitz (t = n+m-1), paper §2.2.2.
+    Toeplitz,
+    /// Hankel (t = n+m-1), paper §2.2.3.
+    Hankel,
+    /// Low displacement rank with r blocks (t = n·r), paper §2.2.4.
+    Ldr(usize),
+    /// Circulant blocks of `rows_per_group` rows, each with an
+    /// independent budget (t = n·ceil(m/B)); interpolates circulant → dense.
+    Grouped(usize),
+}
+
+impl StructureKind {
+    /// Parse a CLI name like `circulant`, `ldr:4`, `grouped:2`.
+    pub fn parse(s: &str) -> Option<StructureKind> {
+        let lower = s.to_ascii_lowercase();
+        if let Some(rest) = lower.strip_prefix("ldr:") {
+            return rest.parse().ok().map(StructureKind::Ldr);
+        }
+        if let Some(rest) = lower.strip_prefix("grouped:") {
+            return rest.parse().ok().map(StructureKind::Grouped);
+        }
+        match lower.as_str() {
+            "dense" | "unstructured" | "gaussian" => Some(StructureKind::Dense),
+            "circulant" | "circ" => Some(StructureKind::Circulant),
+            "skew" | "skew-circulant" | "skew_circulant" => Some(StructureKind::SkewCirculant),
+            "toeplitz" | "toep" => Some(StructureKind::Toeplitz),
+            "hankel" => Some(StructureKind::Hankel),
+            "ldr" => Some(StructureKind::Ldr(2)),
+            _ => None,
+        }
+    }
+
+    /// Human-readable name.
+    pub fn label(&self) -> String {
+        match self {
+            StructureKind::Dense => "dense".into(),
+            StructureKind::Circulant => "circulant".into(),
+            StructureKind::SkewCirculant => "skew-circulant".into(),
+            StructureKind::Toeplitz => "toeplitz".into(),
+            StructureKind::Hankel => "hankel".into(),
+            StructureKind::Ldr(r) => format!("ldr(r={r})"),
+            StructureKind::Grouped(b) => format!("grouped(B={b})"),
+        }
+    }
+
+    /// Build an instance of this family. Square-constrained families
+    /// (circulant / skew-circulant / LDR require m ≤ n) are vertically
+    /// stacked with independent budgets when m > n.
+    pub fn build(&self, m: usize, n: usize, rng: &mut Rng) -> Box<dyn PModel> {
+        match *self {
+            StructureKind::Dense => Box::new(DenseGaussian::new(m, n, rng)),
+            StructureKind::Circulant => {
+                if m <= n {
+                    Box::new(Circulant::new(m, n, rng))
+                } else {
+                    Box::new(Stacked::new("circulant", m, n, rng, |rows, r| {
+                        Box::new(Circulant::new(rows, n, r))
+                    }))
+                }
+            }
+            StructureKind::SkewCirculant => {
+                if m <= n {
+                    Box::new(SkewCirculant::new(m, n, rng))
+                } else {
+                    Box::new(Stacked::new("skew-circulant", m, n, rng, |rows, r| {
+                        Box::new(SkewCirculant::new(rows, n, r))
+                    }))
+                }
+            }
+            StructureKind::Toeplitz => Box::new(Toeplitz::new(m, n, rng)),
+            StructureKind::Hankel => Box::new(Hankel::new(m, n, rng)),
+            StructureKind::Ldr(r) => {
+                if m <= n {
+                    Box::new(LowDisplacementRank::new(m, n, r, rng))
+                } else {
+                    Box::new(Stacked::new("ldr", m, n, rng, move |rows, rg| {
+                        Box::new(LowDisplacementRank::new(rows, n, r, rg))
+                    }))
+                }
+            }
+            StructureKind::Grouped(b) => Box::new(GroupedCirculant::new(m, n, b, rng)),
+        }
+    }
+
+    /// The families covered by Theorems 11/12.
+    pub fn theorem_families() -> Vec<StructureKind> {
+        vec![
+            StructureKind::Circulant,
+            StructureKind::SkewCirculant,
+            StructureKind::Toeplitz,
+            StructureKind::Hankel,
+        ]
+    }
+
+    /// All families (for sweeps).
+    pub fn all() -> Vec<StructureKind> {
+        vec![
+            StructureKind::Dense,
+            StructureKind::Circulant,
+            StructureKind::SkewCirculant,
+            StructureKind::Toeplitz,
+            StructureKind::Hankel,
+            StructureKind::Ldr(2),
+            StructureKind::Grouped(4),
+        ]
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+
+    /// Check fast matvec against naive materialized matvec.
+    pub fn check_matvec(model: &dyn PModel, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let x = rng.gaussian_vec(model.n());
+        let fast = model.matvec(&x);
+        let naive = model.matvec_naive(&x);
+        assert_eq!(fast.len(), model.m());
+        crate::util::assert_close(&fast, &naive, 1e-8);
+    }
+
+    /// Check that every matrix entry is ~N(0,1) distributed across seeds
+    /// (first two moments) — the normalization property of Def. 1.
+    pub fn check_row_marginals(kind: StructureKind, m: usize, n: usize) {
+        let trials = 400;
+        let mut acc = vec![0.0f64; m * n];
+        let mut acc2 = vec![0.0f64; m * n];
+        for s in 0..trials {
+            let mut rng = Rng::new(1000 + s as u64);
+            let model = kind.build(m, n, &mut rng);
+            for i in 0..m {
+                let row = model.row(i);
+                for j in 0..n {
+                    acc[i * n + j] += row[j];
+                    acc2[i * n + j] += row[j] * row[j];
+                }
+            }
+        }
+        for idx in 0..m * n {
+            let mean = acc[idx] / trials as f64;
+            let var = acc2[idx] / trials as f64 - mean * mean;
+            assert!(mean.abs() < 0.2, "{:?} entry {idx} mean {mean}", kind);
+            assert!((var - 1.0).abs() < 0.35, "{:?} entry {idx} var {var}", kind);
+        }
+    }
+
+    /// Verify `sigma` against a brute-force inner product of implicit
+    /// P-columns recovered numerically: since a^i = g·P_i is linear in g,
+    /// column (p^i_j) can be recovered by feeding unit budgets. Models
+    /// expose this via `row` being deterministic in the budget — instead
+    /// we check the *identity* sigma(i,i,j,j) == 1 (normalization) and
+    /// symmetry sigma(i1,i2,n1,n2) == sigma(i2,i1,n2,n1).
+    pub fn check_sigma_basics(model: &dyn PModel) {
+        let m = model.m();
+        let n = model.n();
+        for i in 0..m {
+            for j in 0..n {
+                let s = model.sigma(i, i, j, j);
+                assert!((s - 1.0).abs() < 1e-9, "{} sigma(i,i,j,j)={s}", model.name());
+            }
+        }
+        for i1 in 0..m.min(4) {
+            for i2 in 0..m.min(4) {
+                for n1 in 0..n.min(5) {
+                    for n2 in 0..n.min(5) {
+                        let a = model.sigma(i1, i2, n1, n2);
+                        let b = model.sigma(i2, i1, n2, n1);
+                        assert!((a - b).abs() < 1e-9, "sigma symmetry {}", model.name());
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure_kind_parsing() {
+        assert_eq!(StructureKind::parse("circulant"), Some(StructureKind::Circulant));
+        assert_eq!(StructureKind::parse("TOEPLITZ"), Some(StructureKind::Toeplitz));
+        assert_eq!(StructureKind::parse("ldr:4"), Some(StructureKind::Ldr(4)));
+        assert_eq!(StructureKind::parse("grouped:2"), Some(StructureKind::Grouped(2)));
+        assert_eq!(StructureKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn labels_are_distinct() {
+        let labels: Vec<String> = StructureKind::all().iter().map(|k| k.label()).collect();
+        let mut dedup = labels.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(labels.len(), dedup.len());
+    }
+
+    #[test]
+    fn builds_all_families() {
+        let mut rng = Rng::new(5);
+        for kind in StructureKind::all() {
+            let model = kind.build(6, 8, &mut rng);
+            assert_eq!(model.m(), 6);
+            assert_eq!(model.n(), 8);
+            assert!(model.t() > 0);
+        }
+    }
+}

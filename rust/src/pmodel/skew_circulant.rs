@@ -1,0 +1,157 @@
+//! Skew-circulant Gaussian matrices.
+//!
+//! Like circulant, but wrapped entries change sign:
+//! `A[i][j] = g[j−i]` for `j ≥ i`, `A[i][j] = −g[n+j−i]` for `j < i`.
+//! t = n. Covered by Theorems 11/12 alongside circulant/Toeplitz/Hankel.
+//! Fast matvec is a negacyclic convolution (ω-twisted FFT).
+
+use super::PModel;
+use crate::dsp::{negacyclic_convolve, NegacyclicPlan};
+use crate::rng::Rng;
+
+/// Skew-circulant structured matrix, m ≤ n rows over budget g ∈ R^n.
+pub struct SkewCirculant {
+    m: usize,
+    n: usize,
+    g: Vec<f64>,
+    /// cached twisted-spectrum plan for the column-form generator g′
+    /// (§Perf: twist tables + kernel FFT computed once); None for
+    /// non-power-of-two n (naive fallback)
+    plan: Option<NegacyclicPlan>,
+}
+
+impl SkewCirculant {
+    /// Sample with iid N(0,1) budget.
+    pub fn new(m: usize, n: usize, rng: &mut Rng) -> SkewCirculant {
+        assert!(m <= n, "skew-circulant requires m <= n");
+        SkewCirculant::from_budget(m, rng.gaussian_vec(n))
+    }
+
+    /// Build from an explicit budget.
+    pub fn from_budget(m: usize, g: Vec<f64>) -> SkewCirculant {
+        let n = g.len();
+        assert!(m <= n);
+        let plan = if crate::util::is_pow2(n) {
+            // column-form generator: g'[0] = g[0], g'[k] = -g[n-k]
+            let mut g2 = vec![0.0; n];
+            g2[0] = g[0];
+            for k in 1..n {
+                g2[k] = -g[n - k];
+            }
+            Some(NegacyclicPlan::new(&g2))
+        } else {
+            None
+        };
+        SkewCirculant { m, n, g, plan }
+    }
+
+    /// Signed budget coefficient of entry (i, j): (index, sign).
+    fn coeff(&self, i: usize, j: usize) -> (usize, f64) {
+        if j >= i {
+            (j - i, 1.0)
+        } else {
+            (self.n + j - i, -1.0)
+        }
+    }
+}
+
+impl PModel for SkewCirculant {
+    fn name(&self) -> &'static str {
+        "skew-circulant"
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn t(&self) -> usize {
+        self.n
+    }
+
+    fn sigma(&self, i1: usize, i2: usize, n1: usize, n2: usize) -> f64 {
+        let (a, sa) = self.coeff(i1, n1);
+        let (b, sb) = self.coeff(i2, n2);
+        if a == b {
+            sa * sb
+        } else {
+            0.0
+        }
+    }
+
+    fn row(&self, i: usize) -> Vec<f64> {
+        assert!(i < self.m);
+        (0..self.n)
+            .map(|j| {
+                let (k, s) = self.coeff(i, j);
+                s * self.g[k]
+            })
+            .collect()
+    }
+
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        // Writing the negacyclic shift Z (Z e_j = e_{j+1}, Z e_{n-1} = -e_0),
+        // our A equals Σ_k g'[k] Z^k with g'[0] = g[0], g'[k] = -g[n-k] —
+        // i.e. a column-form skew-circulant whose matvec is exactly the
+        // negacyclic convolution negaconv(x, g').
+        let mut y = match &self.plan {
+            Some(plan) => plan.apply(x),
+            None => {
+                let n = self.n;
+                let mut g2 = vec![0.0; n];
+                g2[0] = self.g[0];
+                for k in 1..n {
+                    g2[k] = -self.g[n - k];
+                }
+                negacyclic_convolve(x, &g2)
+            }
+        };
+        y.truncate(self.m);
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmodel::test_support::{check_matvec, check_row_marginals, check_sigma_basics};
+    use crate::pmodel::StructureKind;
+
+    #[test]
+    fn rows_have_signed_wrap() {
+        let g: Vec<f64> = vec![1.0, 2.0, 3.0, 4.0];
+        let s = SkewCirculant::from_budget(4, g);
+        assert_eq!(s.row(0), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.row(1), vec![-4.0, 1.0, 2.0, 3.0]);
+        assert_eq!(s.row(3), vec![-2.0, -3.0, -4.0, 1.0]);
+    }
+
+    #[test]
+    fn fast_matvec_matches_naive() {
+        let mut rng = Rng::new(61);
+        for &(m, n) in &[(4usize, 4usize), (8, 16), (16, 16), (5, 7)] {
+            let s = SkewCirculant::new(m, n, &mut rng);
+            check_matvec(&s, m as u64 * 13 + n as u64);
+        }
+    }
+
+    #[test]
+    fn sigma_signs() {
+        let mut rng = Rng::new(62);
+        let s = SkewCirculant::new(4, 4, &mut rng);
+        check_sigma_basics(&s);
+        // (i=0,j=3) uses +g3; (i=1,j=0) uses -g3 → sigma = -1
+        assert_eq!(s.sigma(0, 1, 3, 0), -1.0);
+        // (i=1,j=2) uses +g1; (i=0,j=1) uses +g1 → sigma = +1
+        assert_eq!(s.sigma(1, 0, 2, 1), 1.0);
+    }
+
+    #[test]
+    fn marginals_are_standard_gaussian() {
+        check_row_marginals(StructureKind::SkewCirculant, 4, 8);
+    }
+}

@@ -1,0 +1,151 @@
+//! Vertical stacking adapter: extends square-constrained families
+//! (circulant, skew-circulant, LDR have m ≤ n) to arbitrary m by
+//! stacking independent blocks, each with its own fresh budget.
+//!
+//! This is the standard construction in the structured-projection
+//! literature when the target dimension exceeds n; independence across
+//! blocks means σ vanishes between blocks, so all coherence statistics
+//! are inherited from the base family.
+
+use super::PModel;
+use crate::rng::Rng;
+
+/// A stack of independent structured blocks over the same input dim.
+pub struct Stacked {
+    blocks: Vec<Box<dyn PModel>>,
+    name: &'static str,
+    m: usize,
+    n: usize,
+}
+
+impl Stacked {
+    /// Build ceil(m/n) blocks via `make(rows, rng)`; all but possibly the
+    /// last have n rows.
+    pub fn new(
+        name: &'static str,
+        m: usize,
+        n: usize,
+        rng: &mut Rng,
+        make: impl Fn(usize, &mut Rng) -> Box<dyn PModel>,
+    ) -> Stacked {
+        assert!(m > 0 && n > 0);
+        let mut blocks = Vec::new();
+        let mut remaining = m;
+        while remaining > 0 {
+            let rows = remaining.min(n);
+            blocks.push(make(rows, rng));
+            remaining -= rows;
+        }
+        Stacked { blocks, name, m, n }
+    }
+
+    /// Number of stacked blocks.
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    fn locate(&self, i: usize) -> (usize, usize) {
+        (i / self.n, i % self.n)
+    }
+}
+
+impl PModel for Stacked {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn t(&self) -> usize {
+        self.blocks.iter().map(|b| b.t()).sum()
+    }
+
+    fn sigma(&self, i1: usize, i2: usize, n1: usize, n2: usize) -> f64 {
+        let (b1, l1) = self.locate(i1);
+        let (b2, l2) = self.locate(i2);
+        if b1 != b2 {
+            return 0.0; // independent budgets
+        }
+        self.blocks[b1].sigma(l1, l2, n1, n2)
+    }
+
+    fn row(&self, i: usize) -> Vec<f64> {
+        let (b, l) = self.locate(i);
+        self.blocks[b].row(l)
+    }
+
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = Vec::with_capacity(self.m);
+        for b in &self.blocks {
+            y.extend(b.matvec(x));
+        }
+        y
+    }
+
+    fn matvec_flops(&self) -> usize {
+        self.blocks.iter().map(|b| b.matvec_flops()).sum()
+    }
+
+    fn orthogonality_condition(&self) -> bool {
+        self.blocks.iter().all(|b| b.orthogonality_condition())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmodel::test_support::check_matvec;
+    use crate::pmodel::{Circulant, StructureKind};
+
+    fn stacked_circ(m: usize, n: usize, seed: u64) -> Stacked {
+        let mut rng = Rng::new(seed);
+        Stacked::new("circulant", m, n, &mut rng, |rows, r| Box::new(Circulant::new(rows, n, r)))
+    }
+
+    #[test]
+    fn block_count_and_dims() {
+        let s = stacked_circ(20, 8, 1);
+        assert_eq!(s.n_blocks(), 3); // 8 + 8 + 4
+        assert_eq!(s.m(), 20);
+        assert_eq!(s.t(), 24);
+    }
+
+    #[test]
+    fn matvec_matches_naive() {
+        let s = stacked_circ(20, 8, 2);
+        check_matvec(&s, 3);
+    }
+
+    #[test]
+    fn sigma_zero_across_blocks() {
+        let s = stacked_circ(16, 8, 3);
+        // rows 0 and 8 live in different blocks
+        for n1 in 0..8 {
+            for n2 in 0..8 {
+                assert_eq!(s.sigma(0, 8, n1, n2), 0.0);
+            }
+        }
+        // within a block the circulant identity applies
+        assert_eq!(s.sigma(0, 1, 0, 1), 1.0);
+    }
+
+    #[test]
+    fn build_handles_m_greater_than_n() {
+        let mut rng = Rng::new(4);
+        for kind in [
+            StructureKind::Circulant,
+            StructureKind::SkewCirculant,
+            StructureKind::Ldr(2),
+        ] {
+            let model = kind.build(20, 8, &mut rng);
+            assert_eq!(model.m(), 20);
+            check_matvec(model.as_ref(), 5);
+        }
+    }
+}

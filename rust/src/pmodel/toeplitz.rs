@@ -1,0 +1,197 @@
+//! Toeplitz Gaussian matrices (paper §2.2, example 2).
+//!
+//! Constant along diagonals with budget t = n + m − 1 (paper eq. (9)):
+//! `A[i][j] = g[j−i]` for `j ≥ i` and `A[i][j] = g[n−1+(i−j)]` for `j < i`.
+//! The larger budget kills the wrap-around correlations of the circulant
+//! case: coherence graphs become unions of *paths*, so `χ[P] ≤ 2`
+//! (Figure 2) — strictly better concentration than circulant's `χ[P] ≤ 3`.
+//!
+//! Fast matvec embeds A into an N-point circulant (N = next_pow2(n+m−1))
+//! and reuses the FFT correlation path.
+
+use super::PModel;
+use crate::dsp::fft::RealFft;
+use crate::dsp::Complex;
+use crate::rng::Rng;
+
+/// Toeplitz structured matrix over budget g ∈ R^{n+m-1}.
+pub struct Toeplitz {
+    m: usize,
+    n: usize,
+    g: Vec<f64>,
+    /// circulant-embedding packed-real-FFT plan: (plan, conj half-spectrum)
+    plan: (RealFft, Vec<Complex>),
+    embed_n: usize,
+}
+
+impl Toeplitz {
+    /// Sample with iid N(0,1) budget.
+    pub fn new(m: usize, n: usize, rng: &mut Rng) -> Toeplitz {
+        let g = rng.gaussian_vec(n + m - 1);
+        Toeplitz::from_budget(m, n, g)
+    }
+
+    /// Build from an explicit budget (layout of paper eq. (9)).
+    pub fn from_budget(m: usize, n: usize, g: Vec<f64>) -> Toeplitz {
+        assert_eq!(g.len(), n + m - 1);
+        let embed_n = crate::util::next_pow2(n + m - 1);
+        // Circulant embedding: c[(j-i) mod N] must equal A[i][j].
+        //   d = j-i ∈ [0, n-1]   → c[d]     = g[d]
+        //   e = i-j ∈ [1, m-1]   → c[N-e]   = g[n-1+e]
+        let mut c = vec![0.0; embed_n];
+        c[..n].copy_from_slice(&g[..n]);
+        for e in 1..m {
+            c[embed_n - e] = g[n - 1 + e];
+        }
+        let fft = RealFft::new(embed_n.max(2));
+        let embed_n = embed_n.max(2);
+        let mut c = c;
+        c.resize(embed_n, 0.0);
+        let spec: Vec<Complex> = fft.forward(&c).iter().map(|v| v.conj()).collect();
+        Toeplitz { m, n, g, plan: (fft, spec), embed_n }
+    }
+
+    fn budget_index(&self, i: usize, j: usize) -> usize {
+        if j >= i {
+            j - i
+        } else {
+            self.n - 1 + (i - j)
+        }
+    }
+}
+
+impl PModel for Toeplitz {
+    fn name(&self) -> &'static str {
+        "toeplitz"
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn t(&self) -> usize {
+        self.n + self.m - 1
+    }
+
+    fn sigma(&self, i1: usize, i2: usize, n1: usize, n2: usize) -> f64 {
+        // column n1 of P_{i1} is e_{budget_index(i1,n1)}
+        if self.budget_index(i1, n1) == self.budget_index(i2, n2) {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    fn row(&self, i: usize) -> Vec<f64> {
+        assert!(i < self.m);
+        (0..self.n).map(|j| self.g[self.budget_index(i, j)]).collect()
+    }
+
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let (fft, cspec) = &self.plan;
+        let mut xp = x.to_vec();
+        xp.resize(self.embed_n, 0.0);
+        let mut xs = fft.forward(&xp);
+        for (v, w) in xs.iter_mut().zip(cspec) {
+            *v = v.mul(*w);
+        }
+        let mut y = fft.inverse(&xs);
+        y.truncate(self.m);
+        y
+    }
+
+    fn matvec_flops(&self) -> usize {
+        let nn = self.embed_n.max(2) as f64;
+        (15.0 * nn * nn.log2() + 6.0 * nn) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmodel::test_support::{check_matvec, check_row_marginals, check_sigma_basics};
+    use crate::pmodel::StructureKind;
+
+    #[test]
+    fn rows_match_paper_layout() {
+        // paper eq. (9) with n=4, m=3:
+        // row0 = g0 g1 g2 g3; row1 = g4 g0 g1 g2; row2 = g5 g4 g0 g1
+        let g: Vec<f64> = (0..6).map(|i| i as f64).collect();
+        let t = Toeplitz::from_budget(3, 4, g);
+        assert_eq!(t.row(0), vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(t.row(1), vec![4.0, 0.0, 1.0, 2.0]);
+        assert_eq!(t.row(2), vec![5.0, 4.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn fast_matvec_matches_naive() {
+        let mut rng = Rng::new(41);
+        for &(m, n) in &[(3usize, 4usize), (8, 16), (16, 16), (5, 12), (32, 33)] {
+            let t = Toeplitz::new(m, n, &mut rng);
+            check_matvec(&t, m as u64 * 100 + n as u64);
+        }
+    }
+
+    #[test]
+    fn sigma_no_wraparound() {
+        // Unlike circulant, sigma(i1,i2,n1,n2) = 1 requires the *un-wrapped*
+        // diagonal identity: n1-n2 == i1-i2 with both on the same side.
+        let mut rng = Rng::new(42);
+        let t = Toeplitz::new(4, 6, &mut rng);
+        check_sigma_basics(&t);
+        // same diagonal, no wrap:
+        assert_eq!(t.sigma(0, 1, 2, 3), 1.0);
+        // circulant would also link wrapped pairs; Toeplitz must not:
+        // (i1=0,n1=5),(i2=1,n2=0): circ: 5-0=5 ≡ 0-1 ≡ 5 (mod 6) → linked.
+        assert_eq!(t.sigma(0, 1, 5, 0), 0.0);
+    }
+
+    #[test]
+    fn sigma_agrees_with_explicit_p_columns() {
+        let (m, n) = (3usize, 4usize);
+        let t_budget = n + m - 1;
+        let mut cols = vec![vec![vec![0.0f64; t_budget]; n]; m];
+        for l in 0..t_budget {
+            let mut e = vec![0.0; t_budget];
+            e[l] = 1.0;
+            let t = Toeplitz::from_budget(m, n, e);
+            for (i, col) in cols.iter_mut().enumerate() {
+                let row = t.row(i);
+                for j in 0..n {
+                    col[j][l] = row[j];
+                }
+            }
+        }
+        let mut rng = Rng::new(43);
+        let t = Toeplitz::new(m, n, &mut rng);
+        for i1 in 0..m {
+            for i2 in 0..m {
+                for n1 in 0..n {
+                    for n2 in 0..n {
+                        let dot: f64 =
+                            (0..t_budget).map(|l| cols[i1][n1][l] * cols[i2][n2][l]).sum();
+                        assert!((dot - t.sigma(i1, i2, n1, n2)).abs() < 1e-12);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn marginals_are_standard_gaussian() {
+        check_row_marginals(StructureKind::Toeplitz, 4, 8);
+    }
+
+    #[test]
+    fn budget_larger_than_circulant() {
+        let mut rng = Rng::new(44);
+        let t = Toeplitz::new(8, 32, &mut rng);
+        assert_eq!(t.t(), 39);
+        assert_eq!(t.storage_floats(), 39);
+    }
+}

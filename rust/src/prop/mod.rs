@@ -1,0 +1,190 @@
+//! A minimal property-based testing framework (proptest is not available
+//! in the offline environment, so we build the substrate ourselves).
+//!
+//! Usage:
+//! ```no_run
+//! use strembed::prop::{forall, Gen};
+//! forall("dot is symmetric", 100, |g| {
+//!     let n = g.usize_in(1, 32);
+//!     let a = g.f64_vec(n, -10.0, 10.0);
+//!     let b = g.f64_vec(n, -10.0, 10.0);
+//!     let d1: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+//!     let d2: f64 = b.iter().zip(&a).map(|(x, y)| x * y).sum();
+//!     assert!((d1 - d2).abs() < 1e-9);
+//! });
+//! ```
+//!
+//! Each case receives a deterministic generator seeded from the property
+//! name and the case index, so failures print a reproducible case id.
+
+use crate::rng::Rng;
+
+/// Random input generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Gen {
+        Gen { rng: Rng::new(seed) }
+    }
+
+    /// Uniform usize in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// A power of two in [2^lo_exp, 2^hi_exp].
+    pub fn pow2_in(&mut self, lo_exp: u32, hi_exp: u32) -> usize {
+        1usize << self.usize_in(lo_exp as usize, hi_exp as usize)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    /// Vector of uniform f64s.
+    pub fn f64_vec(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    /// Vector of standard Gaussians.
+    pub fn gaussian_vec(&mut self, n: usize) -> Vec<f64> {
+        self.rng.gaussian_vec(n)
+    }
+
+    /// A non-zero vector (retries until the norm is comfortably nonzero).
+    pub fn nonzero_vec(&mut self, n: usize) -> Vec<f64> {
+        loop {
+            let v = self.gaussian_vec(n);
+            let norm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm > 1e-6 {
+                return v;
+            }
+        }
+    }
+
+    /// A unit-norm vector.
+    pub fn unit_vec(&mut self, n: usize) -> Vec<f64> {
+        let mut v = self.nonzero_vec(n);
+        let norm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+        v
+    }
+
+    /// Bernoulli(p).
+    pub fn bool_p(&mut self, p: f64) -> bool {
+        self.rng.uniform() < p
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    /// Access the underlying RNG (e.g. to seed structures under test).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// A fresh u64 (e.g. to use as a seed for the code under test).
+    pub fn seed(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+}
+
+fn name_hash(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Run `cases` randomized cases of the property `f`. Panics with the case
+/// index on failure so it can be reproduced with [`run_case`].
+pub fn forall(name: &str, cases: usize, mut f: impl FnMut(&mut Gen)) {
+    let base = name_hash(name);
+    for case in 0..cases {
+        let seed = base ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen::new(seed);
+            f(&mut g);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single case of a property by name + case index (reproduction
+/// helper for failures reported by [`forall`]).
+pub fn run_case(name: &str, case: usize, mut f: impl FnMut(&mut Gen)) {
+    let seed = name_hash(name) ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let mut g = Gen::new(seed);
+    f(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("trivial", 50, |g| {
+            let n = g.usize_in(1, 8);
+            assert!(n >= 1 && n <= 8);
+        });
+    }
+
+    #[test]
+    fn forall_reports_failing_case() {
+        let r = std::panic::catch_unwind(|| {
+            forall("always-fails", 3, |_| panic!("boom"));
+        });
+        let msg = match r {
+            Err(e) => e.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(_) => panic!("expected failure"),
+        };
+        assert!(msg.contains("always-fails"), "{msg}");
+        assert!(msg.contains("case 0"), "{msg}");
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<usize> = Vec::new();
+        forall("det", 10, |g| first.push(g.usize_in(0, 1000)));
+        let mut second: Vec<usize> = Vec::new();
+        forall("det", 10, |g| second.push(g.usize_in(0, 1000)));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn unit_vec_has_unit_norm() {
+        forall("unit norm", 30, |g| {
+            let n = g.usize_in(1, 64);
+            let v = g.unit_vec(n);
+            let norm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn pow2_in_is_pow2() {
+        forall("pow2 gen", 30, |g| {
+            let n = g.pow2_in(0, 10);
+            assert!(crate::util::is_pow2(n));
+            assert!(n <= 1024);
+        });
+    }
+}

@@ -1,0 +1,59 @@
+//! Streaming Gaussian source with reproducible indexing.
+//!
+//! Some constructions (e.g. rebuilding a single row `a^i = g·P_i` without
+//! materializing `A`) need random access into the budget of randomness.
+//! `GaussianSource` materializes the budget lazily and caches it.
+
+use super::Rng;
+
+/// Lazily-materialized vector of iid N(0,1) variables with random access.
+#[derive(Debug, Clone)]
+pub struct GaussianSource {
+    rng: Rng,
+    cache: Vec<f64>,
+}
+
+impl GaussianSource {
+    /// New source over the given stream.
+    pub fn new(rng: Rng) -> GaussianSource {
+        GaussianSource { rng, cache: Vec::new() }
+    }
+
+    /// The i-th Gaussian in the stream (extends the cache as needed).
+    pub fn get(&mut self, i: usize) -> f64 {
+        while self.cache.len() <= i {
+            let g = self.rng.gaussian();
+            self.cache.push(g);
+        }
+        self.cache[i]
+    }
+
+    /// First `t` entries as a slice (the budget of randomness g_0..g_{t-1}).
+    pub fn prefix(&mut self, t: usize) -> &[f64] {
+        self.get(t.saturating_sub(1));
+        &self.cache[..t]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_access_consistent_with_stream() {
+        let mut a = GaussianSource::new(Rng::new(4));
+        let mut b = GaussianSource::new(Rng::new(4));
+        // access out of order
+        let x5 = a.get(5);
+        let x0 = a.get(0);
+        assert_eq!(b.get(0), x0);
+        assert_eq!(b.get(5), x5);
+    }
+
+    #[test]
+    fn prefix_returns_t_entries() {
+        let mut s = GaussianSource::new(Rng::new(8));
+        assert_eq!(s.prefix(16).len(), 16);
+        assert_eq!(s.prefix(4).len(), 4);
+    }
+}

@@ -1,0 +1,83 @@
+//! xoshiro256++ core generator (Blackman & Vigna), implemented from the
+//! reference algorithm description. Passes BigCrush; more than adequate
+//! for Monte-Carlo reproduction work.
+
+use super::splitmix64;
+
+/// xoshiro256++ state.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Seed through splitmix64 as recommended by the authors (avoids
+    /// low-entropy states).
+    pub fn seeded(seed: u64) -> Xoshiro256 {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for slot in s.iter_mut() {
+            *slot = splitmix64(&mut sm);
+        }
+        // All-zero state is invalid; splitmix64 cannot produce 4 zeros
+        // from any seed, but guard anyway.
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x9E37_79B9_7F4A_7C15;
+        }
+        Xoshiro256 { s }
+    }
+
+    /// A stable fingerprint of the current state (used to derive
+    /// substreams without advancing this generator).
+    pub fn fingerprint(&self) -> u64 {
+        self.s[0]
+            .rotate_left(7)
+            .wrapping_add(self.s[1].rotate_left(21))
+            .wrapping_add(self.s[2].rotate_left(43))
+            .wrapping_add(self.s[3])
+    }
+
+    /// Next 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0].wrapping_add(self.s[3]).rotate_left(23).wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nonzero_state_and_progress() {
+        let mut g = Xoshiro256::seeded(0);
+        let a = g.next_u64();
+        let b = g.next_u64();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn bit_balance() {
+        // Popcount over many draws should be ~32/64 per word.
+        let mut g = Xoshiro256::seeded(123);
+        let total: u32 = (0..10_000).map(|_| g.next_u64().count_ones()).sum();
+        let avg = total as f64 / 10_000.0;
+        assert!((avg - 32.0).abs() < 0.5, "avg popcount {avg}");
+    }
+
+    #[test]
+    fn fingerprint_stable() {
+        let g = Xoshiro256::seeded(77);
+        assert_eq!(g.fingerprint(), g.fingerprint());
+        let h = Xoshiro256::seeded(78);
+        assert_ne!(g.fingerprint(), h.fingerprint());
+    }
+}

@@ -1,0 +1,104 @@
+//! Artifact manifest: metadata for each AOT-compiled embedding variant.
+
+use crate::util::json::Json;
+
+/// One embedding variant exported by `python -m compile.aot`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantMeta {
+    /// unique variant name
+    pub name: String,
+    /// HLO text filename (relative to the artifact dir)
+    pub file: String,
+    /// structure family ("circulant" | "toeplitz" | "dense")
+    pub structure: String,
+    /// nonlinearity ("identity" | "heaviside" | "relu" | "sqrelu" | "cossin")
+    pub f: String,
+    /// input dim
+    pub n: usize,
+    /// projections
+    pub m: usize,
+    /// compiled batch size
+    pub batch: usize,
+    /// feature dim (2m for cossin)
+    pub out_dim: usize,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    /// all exported variants
+    pub variants: Vec<VariantMeta>,
+}
+
+impl Manifest {
+    /// Parse manifest.json text.
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let root = Json::parse(text)?;
+        let version = root.get("version").and_then(Json::as_usize).ok_or("missing version")?;
+        if version != 1 {
+            return Err(format!("unsupported manifest version {version}"));
+        }
+        let raw = root.get("variants").and_then(Json::as_arr).ok_or("missing variants")?;
+        let mut variants = Vec::new();
+        for (i, v) in raw.iter().enumerate() {
+            let s = |k: &str| -> Result<String, String> {
+                v.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| format!("variant {i}: missing string '{k}'"))
+            };
+            let u = |k: &str| -> Result<usize, String> {
+                v.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| format!("variant {i}: missing int '{k}'"))
+            };
+            variants.push(VariantMeta {
+                name: s("name")?,
+                file: s("file")?,
+                structure: s("structure")?,
+                f: s("f")?,
+                n: u("n")?,
+                m: u("m")?,
+                batch: u("batch")?,
+                out_dim: u("out_dim")?,
+            });
+        }
+        Ok(Manifest { variants })
+    }
+
+    /// Lookup by variant name.
+    pub fn get(&self, name: &str) -> Option<&VariantMeta> {
+        self.variants.iter().find(|v| v.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"version": 1, "variants": [
+      {"name": "a", "file": "a.hlo.txt", "structure": "circulant",
+       "f": "cossin", "n": 16, "m": 8, "batch": 4, "out_dim": 16, "seed": 1}]}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.variants.len(), 1);
+        let v = m.get("a").unwrap();
+        assert_eq!(v.out_dim, 16);
+        assert_eq!(v.structure, "circulant");
+        assert!(m.get("missing").is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let text = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&text).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let text = SAMPLE.replace("\"n\": 16,", "");
+        assert!(Manifest::parse(&text).is_err());
+    }
+}

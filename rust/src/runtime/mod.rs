@@ -1,0 +1,166 @@
+//! PJRT runtime: load the JAX/Pallas AOT artifacts (`artifacts/*.hlo.txt`
+//! + `manifest.json`) and execute them from rust.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits HloModuleProto with 64-bit
+//! instruction ids which the crate's xla_extension 0.5.1 rejects;
+//! `HloModuleProto::from_text_file` reassigns ids and round-trips
+//! cleanly (see /opt/xla-example/README.md).
+//!
+//! PJRT handles are not `Send` (raw pointers), so each coordinator
+//! worker thread builds its own [`Engine`]; the [`Manifest`] metadata is
+//! plain data and freely shared.
+
+mod manifest;
+
+pub use manifest::{Manifest, VariantMeta};
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A compiled embedding executable bound to a PJRT client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    meta: VariantMeta,
+}
+
+impl Engine {
+    /// Compile the artifact for `meta` found in `dir` on a fresh CPU
+    /// PJRT client.
+    pub fn load(dir: &Path, meta: VariantMeta) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt client: {e:?}"))?;
+        let path = dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("compile {}: {e:?}", meta.name))?;
+        Ok(Engine { client, exe, meta })
+    }
+
+    /// Variant metadata.
+    pub fn meta(&self) -> &VariantMeta {
+        &self.meta
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Embed a batch. `rows` must contain between 1 and `meta.batch`
+    /// vectors of length `meta.n`; short batches are zero-padded to the
+    /// compiled batch size and the padding rows are dropped from the
+    /// output. Returns `rows.len()` feature vectors of `meta.out_dim`.
+    pub fn embed_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let b = self.meta.batch;
+        let n = self.meta.n;
+        anyhow::ensure!(!rows.is_empty(), "empty batch");
+        anyhow::ensure!(rows.len() <= b, "batch {} exceeds compiled batch {b}", rows.len());
+        for (i, r) in rows.iter().enumerate() {
+            anyhow::ensure!(r.len() == n, "row {i} has dim {} (want {n})", r.len());
+        }
+        let mut flat = vec![0f32; b * n];
+        for (i, r) in rows.iter().enumerate() {
+            flat[i * n..(i + 1) * n].copy_from_slice(r);
+        }
+        let lit = xla::Literal::vec1(&flat)
+            .reshape(&[b as i64, n as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // lowered with return_tuple=True → unwrap the 1-tuple
+        let out = result.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        let values: Vec<f32> = out.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        let d = self.meta.out_dim;
+        anyhow::ensure!(values.len() == b * d, "output len {} != {}", values.len(), b * d);
+        Ok(rows
+            .iter()
+            .enumerate()
+            .map(|(i, _)| values[i * d..(i + 1) * d].to_vec())
+            .collect())
+    }
+}
+
+/// Locate the artifacts directory: `$STREMBED_ARTIFACTS` or `artifacts/`
+/// relative to the workspace root.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("STREMBED_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Load the manifest from a directory.
+pub fn load_manifest(dir: &Path) -> Result<Manifest> {
+    let path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+    Manifest::parse(&text).map_err(|e| anyhow!("manifest: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> bool {
+        default_artifact_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_loads() {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = load_manifest(&default_artifact_dir()).unwrap();
+        assert!(m.variants.len() >= 4);
+        assert!(m.get("embed_circulant_cossin_n128_m64_b16").is_some());
+    }
+
+    #[test]
+    fn engine_runs_circulant_identity() {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let dir = default_artifact_dir();
+        let m = load_manifest(&dir).unwrap();
+        let meta = m
+            .variants
+            .iter()
+            .find(|v| v.structure == "circulant" && v.f == "identity")
+            .expect("identity variant in manifest")
+            .clone();
+        let eng = Engine::load(&dir, meta.clone()).unwrap();
+        // short batch (2 rows) gets padded internally
+        let rows = vec![vec![0.5f32; meta.n], vec![-0.25f32; meta.n]];
+        let out = eng.embed_batch(&rows).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].len(), meta.out_dim);
+        assert!(out[0].iter().all(|v| v.is_finite()));
+        // identity features scale linearly with the input: row1 = -0.5·row0
+        for (a, b) in out[0].iter().zip(&out[1]) {
+            assert!((b - (-0.5) * a).abs() < 1e-4, "{a} {b}");
+        }
+    }
+
+    #[test]
+    fn engine_rejects_bad_shapes() {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let dir = default_artifact_dir();
+        let m = load_manifest(&dir).unwrap();
+        let meta = m.variants[0].clone();
+        let eng = Engine::load(&dir, meta.clone()).unwrap();
+        assert!(eng.embed_batch(&[]).is_err());
+        assert!(eng.embed_batch(&[vec![0.0; meta.n + 1]]).is_err());
+        let too_many = vec![vec![0.0f32; meta.n]; meta.batch + 1];
+        assert!(eng.embed_batch(&too_many).is_err());
+    }
+}

@@ -1,0 +1,182 @@
+//! The end-to-end structured embedding of the paper's algorithm (§2.3):
+//! `v ↦ f(A · D₁ H D₀ · v)`.
+
+use crate::pmodel::{PModel, StructureKind};
+use crate::rng::Rng;
+use crate::transform::{Nonlinearity, Preprocessor};
+
+/// Configuration for a structured embedding.
+#[derive(Debug, Clone)]
+pub struct EmbeddingConfig {
+    /// structured-matrix family
+    pub structure: StructureKind,
+    /// number of projections m
+    pub m: usize,
+    /// input dimension n (power of two when preprocessing is on)
+    pub n: usize,
+    /// pointwise nonlinearity
+    pub f: Nonlinearity,
+    /// whether to apply the D₁HD₀ preprocessing (paper Step 1)
+    pub preprocess: bool,
+    /// RNG seed for all randomness (budget, diagonals)
+    pub seed: u64,
+}
+
+impl EmbeddingConfig {
+    /// A reasonable default configuration.
+    pub fn new(structure: StructureKind, m: usize, n: usize, f: Nonlinearity) -> EmbeddingConfig {
+        EmbeddingConfig { structure, m, n, f, preprocess: true, seed: 0 }
+    }
+
+    /// Builder: set seed.
+    pub fn with_seed(mut self, seed: u64) -> EmbeddingConfig {
+        self.seed = seed;
+        self
+    }
+
+    /// Builder: toggle preprocessing.
+    pub fn with_preprocess(mut self, on: bool) -> EmbeddingConfig {
+        self.preprocess = on;
+        self
+    }
+}
+
+/// A sampled structured embedding: holds the structured matrix A, the
+/// preprocessing diagonals and the nonlinearity.
+pub struct StructuredEmbedding {
+    config: EmbeddingConfig,
+    pre: Option<Preprocessor>,
+    model: Box<dyn PModel>,
+}
+
+impl StructuredEmbedding {
+    /// Sample an embedding from its configuration.
+    pub fn sample(config: EmbeddingConfig) -> StructuredEmbedding {
+        let root = Rng::new(config.seed);
+        let pre = if config.preprocess {
+            let mut prng = root.substream("preprocess", 0);
+            Some(Preprocessor::new(config.n, &mut prng))
+        } else {
+            None
+        };
+        let mut mrng = root.substream("budget", 0);
+        let model = config.structure.build(config.m, config.n, &mut mrng);
+        StructuredEmbedding { config, pre, model }
+    }
+
+    /// The configuration.
+    pub fn config(&self) -> &EmbeddingConfig {
+        &self.config
+    }
+
+    /// The underlying structured matrix.
+    pub fn model(&self) -> &dyn PModel {
+        self.model.as_ref()
+    }
+
+    /// Feature dimension of the output.
+    pub fn out_dim(&self) -> usize {
+        self.config.f.out_dim(self.config.m)
+    }
+
+    /// Raw projections `A·D₁HD₀·v` (before the nonlinearity).
+    pub fn project(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.config.n, "input dim mismatch");
+        match &self.pre {
+            Some(p) => self.model.matvec(&p.apply(v)),
+            None => self.model.matvec(v),
+        }
+    }
+
+    /// Full embedding `f(A·D₁HD₀·v)`.
+    pub fn embed(&self, v: &[f64]) -> Vec<f64> {
+        self.config.f.apply(&self.project(v))
+    }
+
+    /// Embed a batch of vectors.
+    pub fn embed_batch(&self, vs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        vs.iter().map(|v| self.embed(v)).collect()
+    }
+
+    /// Storage cost in floats (structured matrix + diagonals).
+    pub fn storage_floats(&self) -> usize {
+        self.model.storage_floats() + if self.pre.is_some() { 2 * self.config.n } else { 0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn projections_match_manual_pipeline() {
+        let cfg = EmbeddingConfig::new(StructureKind::Circulant, 8, 16, Nonlinearity::Identity)
+            .with_seed(3);
+        let emb = StructuredEmbedding::sample(cfg);
+        let mut rng = Rng::new(99);
+        let v = rng.gaussian_vec(16);
+        // manual: preprocess then naive matvec
+        let root = Rng::new(3);
+        let mut prng = root.substream("preprocess", 0);
+        let pre = Preprocessor::new(16, &mut prng);
+        let pv = pre.apply(&v);
+        let manual = emb.model().matvec_naive(&pv);
+        crate::util::assert_close(&emb.project(&v), &manual, 1e-9);
+    }
+
+    #[test]
+    fn embed_applies_nonlinearity() {
+        let cfg = EmbeddingConfig::new(StructureKind::Toeplitz, 4, 8, Nonlinearity::Heaviside)
+            .with_seed(4);
+        let emb = StructuredEmbedding::sample(cfg);
+        let v = vec![1.0, 0.5, -0.25, 0.0, 2.0, -1.0, 0.75, 0.1];
+        let out = emb.embed(&v);
+        assert_eq!(out.len(), 4);
+        assert!(out.iter().all(|&x| x == 0.0 || x == 1.0));
+    }
+
+    #[test]
+    fn cossin_output_dim() {
+        let cfg = EmbeddingConfig::new(StructureKind::Circulant, 8, 8, Nonlinearity::CosSin)
+            .with_seed(5);
+        let emb = StructuredEmbedding::sample(cfg);
+        assert_eq!(emb.out_dim(), 16);
+        let v = vec![0.1; 8];
+        assert_eq!(emb.embed(&v).len(), 16);
+    }
+
+    #[test]
+    fn same_seed_same_embedding() {
+        let mk = || {
+            StructuredEmbedding::sample(
+                EmbeddingConfig::new(StructureKind::Hankel, 6, 8, Nonlinearity::Relu).with_seed(7),
+            )
+        };
+        let a = mk();
+        let b = mk();
+        let v = vec![0.3, -0.2, 0.9, 0.0, 1.0, 0.5, -0.7, 0.2];
+        crate::util::assert_close(&a.embed(&v), &b.embed(&v), 1e-15);
+    }
+
+    #[test]
+    fn no_preprocess_mode() {
+        let cfg = EmbeddingConfig::new(StructureKind::Dense, 4, 10, Nonlinearity::Identity)
+            .with_preprocess(false)
+            .with_seed(8);
+        // n=10 is not a power of two: allowed when preprocessing is off
+        let emb = StructuredEmbedding::sample(cfg);
+        let v = vec![1.0; 10];
+        assert_eq!(emb.embed(&v).len(), 4);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let cfg = EmbeddingConfig::new(StructureKind::Circulant, 4, 8, Nonlinearity::Relu)
+            .with_seed(9);
+        let emb = StructuredEmbedding::sample(cfg);
+        let vs = vec![vec![1.0; 8], vec![-1.0; 8]];
+        let batch = emb.embed_batch(&vs);
+        crate::util::assert_close(&batch[0], &emb.embed(&vs[0]), 1e-15);
+        crate::util::assert_close(&batch[1], &emb.embed(&vs[1]), 1e-15);
+    }
+}

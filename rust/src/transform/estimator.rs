@@ -1,0 +1,164 @@
+//! Λ_f estimators: turning pairs of feature vectors back into kernel /
+//! distance estimates (paper eq. (13) with Ψ = mean, β = product).
+
+use crate::transform::Nonlinearity;
+
+/// Estimate `Λ_f(v¹,v²)` from the two feature vectors produced by the
+/// same [`super::StructuredEmbedding`]:
+/// `Λ̂ = (1/m)·Σ_i β(f(y_i,1), f(y_i,2))` with β = product.
+///
+/// For `CosSin` features (length 2m), the cos·cos + sin·sin pairing sums
+/// to m terms of cos(z₁−z₂), so the same 1/m normalization applies.
+pub fn estimate_lambda(f: Nonlinearity, feat1: &[f64], feat2: &[f64]) -> f64 {
+    assert_eq!(feat1.len(), feat2.len());
+    let dot: f64 = feat1.iter().zip(feat2).map(|(a, b)| a * b).sum();
+    let m = match f {
+        Nonlinearity::CosSin => feat1.len() / 2,
+        _ => feat1.len(),
+    };
+    dot / m as f64
+}
+
+/// Estimate the angle θ between the original vectors from heaviside
+/// features: Λ̂ ≈ (π−θ)/(2π) ⇒ θ̂ = π − 2π·Λ̂.
+pub fn estimate_angle(feat1: &[f64], feat2: &[f64]) -> f64 {
+    let lambda = estimate_lambda(Nonlinearity::Heaviside, feat1, feat2);
+    crate::exact::angle_from_heaviside(lambda).clamp(0.0, std::f64::consts::PI)
+}
+
+/// Estimate the normalized angular distance θ/π from sign features via
+/// Hamming disagreement (the hashing view: fraction of differing bits).
+pub fn estimate_angular_distance_hamming(feat1: &[f64], feat2: &[f64]) -> f64 {
+    assert_eq!(feat1.len(), feat2.len());
+    let disagreements =
+        feat1.iter().zip(feat2).filter(|(a, b)| (*a - *b).abs() > 0.5).count();
+    disagreements as f64 / feat1.len() as f64
+}
+
+/// Estimate the Euclidean inner product from identity features (JL).
+pub fn estimate_inner_product(feat1: &[f64], feat2: &[f64]) -> f64 {
+    estimate_lambda(Nonlinearity::Identity, feat1, feat2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmodel::StructureKind;
+    use crate::transform::{EmbeddingConfig, StructuredEmbedding};
+
+    fn avg_over_seeds(
+        structure: StructureKind,
+        f: Nonlinearity,
+        m: usize,
+        v1: &[f64],
+        v2: &[f64],
+        seeds: u64,
+        est: impl Fn(&[f64], &[f64]) -> f64,
+    ) -> f64 {
+        let n = v1.len();
+        let mut acc = 0.0;
+        for s in 0..seeds {
+            let emb = StructuredEmbedding::sample(
+                EmbeddingConfig::new(structure, m, n, f).with_seed(s),
+            );
+            acc += est(&emb.embed(v1), &emb.embed(v2));
+        }
+        acc / seeds as f64
+    }
+
+    #[test]
+    fn angular_estimate_converges_circulant() {
+        // m must be large enough that the [0,π] clamp in estimate_angle
+        // almost never binds (small m ⇒ clamping bias).
+        let v1 = [1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let v2 = [0.6, 0.8, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let theta = crate::exact::angle(&v1, &v2);
+        let mut acc_theta = 0.0;
+        let mut acc_lambda = 0.0;
+        let seeds = 300u64;
+        for s in 0..seeds {
+            let emb = StructuredEmbedding::sample(
+                EmbeddingConfig::new(StructureKind::Circulant, 8, 8, Nonlinearity::Heaviside)
+                    .with_seed(s),
+            );
+            let f1 = emb.embed(&v1);
+            let f2 = emb.embed(&v2);
+            acc_theta += estimate_angle(&f1, &f2);
+            acc_lambda += estimate_lambda(Nonlinearity::Heaviside, &f1, &f2);
+        }
+        // Λ̂ itself is unbiased (Lemma 5): tight check
+        let exact_lambda = crate::exact::heaviside_kernel(&v1, &v2);
+        let mean_lambda = acc_lambda / seeds as f64;
+        assert!((mean_lambda - exact_lambda).abs() < 0.02, "Λ̂ {mean_lambda} vs {exact_lambda}");
+        // θ̂ carries a small clamping bias at m=8: loose check
+        let mean_theta = acc_theta / seeds as f64;
+        assert!((mean_theta - theta).abs() < 0.25, "θ̂ {mean_theta} vs {theta}");
+    }
+
+    #[test]
+    fn gaussian_kernel_estimate_converges_toeplitz() {
+        let v1 = [0.5, 0.2, -0.3, 0.1, 0.0, 0.4, -0.2, 0.3];
+        let v2 = [0.1, 0.4, 0.0, -0.2, 0.3, 0.0, 0.1, 0.2];
+        let exact = crate::exact::gaussian_kernel(&v1, &v2);
+        let est = avg_over_seeds(
+            StructureKind::Toeplitz,
+            Nonlinearity::CosSin,
+            8,
+            &v1,
+            &v2,
+            300,
+            |a, b| estimate_lambda(Nonlinearity::CosSin, a, b),
+        );
+        assert!((est - exact).abs() < 0.05, "est {est} exact {exact}");
+    }
+
+    #[test]
+    fn inner_product_estimate_converges_hankel() {
+        let v1 = [1.0, -0.5, 0.25, 0.0, 0.75, -1.0, 0.5, 0.3];
+        let v2 = [0.2, 0.4, -0.6, 0.8, -0.1, 0.3, 0.0, 0.7];
+        let exact = crate::exact::inner_product(&v1, &v2);
+        let est = avg_over_seeds(
+            StructureKind::Hankel,
+            Nonlinearity::Identity,
+            8,
+            &v1,
+            &v2,
+            500,
+            estimate_inner_product,
+        );
+        assert!((est - exact).abs() < 0.15, "est {est} exact {exact}");
+    }
+
+    #[test]
+    fn hamming_distance_equals_theta_over_pi() {
+        let v1 = [1.0, 0.0, 0.0, 0.0];
+        let v2 = [0.0, 1.0, 0.0, 0.0]; // θ = π/2 ⇒ θ/π = 0.5
+        let est = avg_over_seeds(
+            StructureKind::Circulant,
+            Nonlinearity::Heaviside,
+            4,
+            &v1,
+            &v2,
+            800,
+            estimate_angular_distance_hamming,
+        );
+        assert!((est - 0.5).abs() < 0.05, "est {est}");
+    }
+
+    #[test]
+    fn arccos1_estimate_converges_dense() {
+        let v1 = [0.8, 0.6, 0.0, 0.0];
+        let v2 = [0.0, 1.0, 0.0, 0.0];
+        let exact = crate::exact::arc_cosine_kernel(1, &v1, &v2);
+        let est = avg_over_seeds(
+            StructureKind::Dense,
+            Nonlinearity::Relu,
+            16,
+            &v1,
+            &v2,
+            300,
+            |a, b| estimate_lambda(Nonlinearity::Relu, a, b),
+        );
+        assert!((est - exact).abs() < 0.03, "est {est} exact {exact}");
+    }
+}

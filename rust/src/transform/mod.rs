@@ -1,0 +1,23 @@
+//! The paper's embedding pipeline (Algorithm of §2.3):
+//!
+//! ```text
+//! x  →  D₀  →  H  →  D₁  →  A (structured)  →  f (pointwise)  →  features
+//! ```
+//!
+//! - [`preprocess`]: the randomized Hadamard step `D₁ H D₀`,
+//! - [`nonlinearity`]: the pointwise maps f (identity, heaviside, ReLU,
+//!   arc-cosine powers, paired cos/sin),
+//! - [`embedding`]: the end-to-end `StructuredEmbedding`,
+//! - [`estimator`]: turning feature vectors back into Λ_f estimates.
+
+pub mod embedding;
+pub mod estimator;
+pub mod multivariate;
+pub mod nonlinearity;
+pub mod preprocess;
+
+pub use embedding::{EmbeddingConfig, StructuredEmbedding};
+pub use estimator::{estimate_angle, estimate_lambda};
+pub use multivariate::{estimate_lambda_k, heaviside_kernel3};
+pub use nonlinearity::Nonlinearity;
+pub use preprocess::Preprocessor;

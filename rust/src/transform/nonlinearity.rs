@@ -1,0 +1,169 @@
+//! The pointwise nonlinearities f of the paper's examples (§2.1).
+//!
+//! | f            | Λ_f it induces                      |
+//! |--------------|-------------------------------------|
+//! | identity     | Euclidean inner product (JL)        |
+//! | heaviside    | angular similarity / sign hashing   |
+//! | ReLU (b=1)   | arc-cosine kernel order 1           |
+//! | x²·1{x≥0}    | arc-cosine kernel order 2           |
+//! | cos & sin    | Gaussian kernel (random features)   |
+//!
+//! `CosSin` is *dimension-doubling*: each projection z contributes the
+//! pair (cos z, sin z) so that the feature dot product estimates
+//! `E[cos⟨r, v¹−v²⟩]` exactly.
+
+/// A pointwise feature nonlinearity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Nonlinearity {
+    /// f(x) = x — linear JL embedding.
+    Identity,
+    /// f(x) = 1{x ≥ 0} — binary sign hash.
+    Heaviside,
+    /// f(x) = max(x, 0) — arc-cosine order 1.
+    Relu,
+    /// f(x) = x²·1{x ≥ 0} — arc-cosine order 2.
+    SquaredRelu,
+    /// paired cos/sin — Gaussian-kernel random features (doubles dim).
+    CosSin,
+}
+
+impl Nonlinearity {
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Nonlinearity> {
+        match s.to_ascii_lowercase().as_str() {
+            "identity" | "id" | "linear" => Some(Nonlinearity::Identity),
+            "heaviside" | "sign" | "angular" => Some(Nonlinearity::Heaviside),
+            "relu" | "arccos1" => Some(Nonlinearity::Relu),
+            "sqrelu" | "arccos2" => Some(Nonlinearity::SquaredRelu),
+            "cossin" | "gaussian" | "rff" => Some(Nonlinearity::CosSin),
+            _ => None,
+        }
+    }
+
+    /// Display name.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Nonlinearity::Identity => "identity",
+            Nonlinearity::Heaviside => "heaviside",
+            Nonlinearity::Relu => "relu",
+            Nonlinearity::SquaredRelu => "sq-relu",
+            Nonlinearity::CosSin => "cos-sin",
+        }
+    }
+
+    /// Output dimension given m projections.
+    pub fn out_dim(&self, m: usize) -> usize {
+        match self {
+            Nonlinearity::CosSin => 2 * m,
+            _ => m,
+        }
+    }
+
+    /// Scalar f (not defined for CosSin, which is vector-valued).
+    pub fn scalar(&self, x: f64) -> f64 {
+        match self {
+            Nonlinearity::Identity => x,
+            Nonlinearity::Heaviside => {
+                if x >= 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Nonlinearity::Relu => x.max(0.0),
+            Nonlinearity::SquaredRelu => {
+                if x >= 0.0 {
+                    x * x
+                } else {
+                    0.0
+                }
+            }
+            Nonlinearity::CosSin => panic!("CosSin is vector-valued; use apply()"),
+        }
+    }
+
+    /// Apply to a projection vector z (length m), producing features of
+    /// length `out_dim(m)`. No scaling: estimators divide by m.
+    pub fn apply(&self, z: &[f64]) -> Vec<f64> {
+        match self {
+            Nonlinearity::CosSin => {
+                let mut out = Vec::with_capacity(2 * z.len());
+                out.extend(z.iter().map(|x| x.cos()));
+                out.extend(z.iter().map(|x| x.sin()));
+                out
+            }
+            _ => z.iter().map(|&x| self.scalar(x)).collect(),
+        }
+    }
+
+    /// The `y_diff` bound of Definition 6 for bounded f (None if unbounded).
+    pub fn bounded_range(&self) -> Option<f64> {
+        match self {
+            Nonlinearity::Heaviside => Some(1.0),
+            Nonlinearity::CosSin => Some(2.0),
+            _ => None,
+        }
+    }
+
+    /// All nonlinearities (sweeps).
+    pub fn all() -> Vec<Nonlinearity> {
+        vec![
+            Nonlinearity::Identity,
+            Nonlinearity::Heaviside,
+            Nonlinearity::Relu,
+            Nonlinearity::SquaredRelu,
+            Nonlinearity::CosSin,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_values() {
+        assert_eq!(Nonlinearity::Identity.scalar(-2.5), -2.5);
+        assert_eq!(Nonlinearity::Heaviside.scalar(-0.1), 0.0);
+        assert_eq!(Nonlinearity::Heaviside.scalar(0.0), 1.0);
+        assert_eq!(Nonlinearity::Relu.scalar(-1.0), 0.0);
+        assert_eq!(Nonlinearity::Relu.scalar(2.0), 2.0);
+        assert_eq!(Nonlinearity::SquaredRelu.scalar(3.0), 9.0);
+        assert_eq!(Nonlinearity::SquaredRelu.scalar(-3.0), 0.0);
+    }
+
+    #[test]
+    fn cossin_doubles_dim() {
+        let z = [0.0, std::f64::consts::FRAC_PI_2];
+        let f = Nonlinearity::CosSin.apply(&z);
+        assert_eq!(f.len(), 4);
+        assert!((f[0] - 1.0).abs() < 1e-12); // cos 0
+        assert!(f[1].abs() < 1e-12); // cos π/2
+        assert!(f[2].abs() < 1e-12); // sin 0
+        assert!((f[3] - 1.0).abs() < 1e-12); // sin π/2
+        assert_eq!(Nonlinearity::CosSin.out_dim(8), 16);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for f in Nonlinearity::all() {
+            assert_eq!(Nonlinearity::parse(f.label().replace('-', "")
+                .replace("sq", "sq").as_str())
+                .or_else(|| Nonlinearity::parse(f.label())), Some(f));
+        }
+        assert_eq!(Nonlinearity::parse("rff"), Some(Nonlinearity::CosSin));
+        assert_eq!(Nonlinearity::parse("nope"), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn cossin_scalar_panics() {
+        Nonlinearity::CosSin.scalar(1.0);
+    }
+
+    #[test]
+    fn bounded_ranges() {
+        assert_eq!(Nonlinearity::Heaviside.bounded_range(), Some(1.0));
+        assert_eq!(Nonlinearity::Identity.bounded_range(), None);
+    }
+}

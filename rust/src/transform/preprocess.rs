@@ -1,0 +1,128 @@
+//! Step 1 of the paper's algorithm: multiply every datapoint by
+//! `D₁ H D₀` — H an L2-normalized Hadamard matrix, D₀/D₁ independent
+//! random ±1 diagonals.
+//!
+//! The Hadamard mix makes every fixed vector `log(n)`-balanced with high
+//! probability (Lemma 15), which is what the concentration proof needs.
+//! H is computed on the fly via the FWHT; only the two diagonals are
+//! stored (2n floats).
+
+use crate::dsp::fwht::fwht_normalized;
+use crate::rng::Rng;
+
+/// The `D₁ H D₀` preprocessing operator. Input dimension must be a power
+/// of two (use [`Preprocessor::pad`] to lift arbitrary data).
+#[derive(Debug, Clone)]
+pub struct Preprocessor {
+    d0: Vec<f64>,
+    d1: Vec<f64>,
+}
+
+impl Preprocessor {
+    /// Sample fresh diagonals for dimension `n` (power of two).
+    pub fn new(n: usize, rng: &mut Rng) -> Preprocessor {
+        assert!(crate::util::is_pow2(n), "preprocessing needs power-of-two n, got {n}");
+        Preprocessor { d0: rng.rademacher_vec(n), d1: rng.rademacher_vec(n) }
+    }
+
+    /// Dimension.
+    pub fn n(&self) -> usize {
+        self.d0.len()
+    }
+
+    /// Apply `D₁ H D₀` in place.
+    pub fn apply_inplace(&self, x: &mut [f64]) {
+        assert_eq!(x.len(), self.n());
+        for (v, d) in x.iter_mut().zip(&self.d0) {
+            *v *= d;
+        }
+        fwht_normalized(x);
+        for (v, d) in x.iter_mut().zip(&self.d1) {
+            *v *= d;
+        }
+    }
+
+    /// Apply returning a new vector.
+    pub fn apply(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = x.to_vec();
+        self.apply_inplace(&mut y);
+        y
+    }
+
+    /// Zero-pad a vector to the next power of two (identity if already).
+    pub fn pad(x: &[f64]) -> Vec<f64> {
+        let n = crate::util::next_pow2(x.len().max(1));
+        let mut y = x.to_vec();
+        y.resize(n, 0.0);
+        y
+    }
+
+    /// Diagonals accessor (compile-path export needs them).
+    pub fn diagonals(&self) -> (&[f64], &[f64]) {
+        (&self.d0, &self.d1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    #[test]
+    fn is_isometry() {
+        // D₁HD₀ is orthogonal: preserves norms and inner products.
+        forall("preprocess isometry", 30, |g| {
+            let n = g.pow2_in(1, 8);
+            let mut rng = crate::rng::Rng::new(g.seed());
+            let pre = Preprocessor::new(n, &mut rng);
+            let x = g.gaussian_vec(n);
+            let y = g.gaussian_vec(n);
+            let tx = pre.apply(&x);
+            let ty = pre.apply(&y);
+            let dot_before: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+            let dot_after: f64 = tx.iter().zip(&ty).map(|(a, b)| a * b).sum();
+            assert!((dot_before - dot_after).abs() < 1e-8 * (1.0 + dot_before.abs()));
+        });
+    }
+
+    #[test]
+    fn balances_spiky_vectors() {
+        // A standard basis vector (maximally unbalanced) becomes
+        // 1/√n-flat after preprocessing (Lemma 15's purpose).
+        let n = 256;
+        let mut rng = crate::rng::Rng::new(7);
+        let pre = Preprocessor::new(n, &mut rng);
+        let mut e0 = vec![0.0; n];
+        e0[0] = 1.0;
+        let t = pre.apply(&e0);
+        let max_abs = t.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        // perfectly balanced would be 1/√n; allow log n slack
+        let bound = (n as f64).ln() / (n as f64).sqrt();
+        assert!(max_abs <= bound, "max|t| = {max_abs}, bound = {bound}");
+    }
+
+    #[test]
+    fn deterministic_given_rng() {
+        let mut r1 = crate::rng::Rng::new(5);
+        let mut r2 = crate::rng::Rng::new(5);
+        let p1 = Preprocessor::new(8, &mut r1);
+        let p2 = Preprocessor::new(8, &mut r2);
+        let x = [1.0, -2.0, 3.0, 0.5, 0.0, 1.0, -1.0, 2.0];
+        crate::util::assert_close(&p1.apply(&x), &p2.apply(&x), 1e-15);
+    }
+
+    #[test]
+    fn pad_to_pow2() {
+        assert_eq!(Preprocessor::pad(&[1.0, 2.0, 3.0]).len(), 4);
+        assert_eq!(Preprocessor::pad(&[1.0; 8]).len(), 8);
+        let p = Preprocessor::pad(&[1.0, 2.0, 3.0]);
+        assert_eq!(p[3], 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_pow2() {
+        let mut rng = crate::rng::Rng::new(1);
+        Preprocessor::new(12, &mut rng);
+    }
+}

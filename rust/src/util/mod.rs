@@ -1,0 +1,82 @@
+//! Shared utilities: statistics, timing, and table formatting.
+//!
+//! These are deliberately dependency-free: the build environment is fully
+//! offline and only the `xla` crate closure is vendored, so everything a
+//! well-maintained project would pull from crates.io (stats, table
+//! printers, timers) is implemented here as a first-class substrate.
+
+pub mod json;
+pub mod stats;
+pub mod table;
+pub mod timer;
+
+pub use stats::{mean, percentile, stddev, variance, Summary};
+pub use table::Table;
+pub use timer::Timer;
+
+/// Returns true if `n` is a power of two (and nonzero).
+pub fn is_pow2(n: usize) -> bool {
+    n != 0 && (n & (n - 1)) == 0
+}
+
+/// Smallest power of two `>= n` (n must be >= 1).
+pub fn next_pow2(n: usize) -> usize {
+    debug_assert!(n >= 1);
+    let mut p = 1usize;
+    while p < n {
+        p <<= 1;
+    }
+    p
+}
+
+/// log2 of a power of two.
+pub fn log2_exact(n: usize) -> u32 {
+    debug_assert!(is_pow2(n));
+    n.trailing_zeros()
+}
+
+/// Relative error |a-b| / max(|b|, eps).
+pub fn rel_err(a: f64, b: f64) -> f64 {
+    (a - b).abs() / b.abs().max(1e-12)
+}
+
+/// Asserts two float slices are element-wise close.
+pub fn assert_close(a: &[f64], b: &[f64], tol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+            "mismatch at {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_helpers() {
+        assert!(is_pow2(1));
+        assert!(is_pow2(64));
+        assert!(!is_pow2(0));
+        assert!(!is_pow2(48));
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(5), 8);
+        assert_eq!(next_pow2(64), 64);
+        assert_eq!(next_pow2(65), 128);
+        assert_eq!(log2_exact(1024), 10);
+    }
+
+    #[test]
+    fn rel_err_basics() {
+        assert!(rel_err(1.0, 1.0) < 1e-15);
+        assert!((rel_err(1.1, 1.0) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_panics_on_mismatch() {
+        assert_close(&[1.0], &[2.0], 1e-6);
+    }
+}

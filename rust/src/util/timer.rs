@@ -1,0 +1,92 @@
+//! Wall-clock timing helpers for the bench harness and eval drivers.
+
+use std::time::Instant;
+
+/// A simple stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start a new timer.
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since start.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed nanoseconds since start.
+    pub fn nanos(&self) -> u128 {
+        self.start.elapsed().as_nanos()
+    }
+
+    /// Restart; returns elapsed seconds before the reset.
+    pub fn lap(&mut self) -> f64 {
+        let e = self.secs();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.secs())
+}
+
+/// Run `f` repeatedly for at least `min_secs` after `warmup` runs and
+/// return per-iteration seconds samples. Used by the bench harness.
+pub fn sample_runtime(mut f: impl FnMut(), warmup: usize, iters: usize) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        samples.push(t.secs());
+    }
+    samples
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.secs();
+        let b = t.secs();
+        assert!(b >= a);
+        assert!(t.nanos() > 0);
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, secs) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn sampling_counts() {
+        let mut n = 0usize;
+        let samples = sample_runtime(|| n += 1, 2, 5);
+        assert_eq!(samples.len(), 5);
+        assert_eq!(n, 7);
+    }
+
+    #[test]
+    fn lap_resets() {
+        let mut t = Timer::start();
+        let first = t.lap();
+        assert!(first >= 0.0);
+        assert!(t.secs() < first + 1.0);
+    }
+}

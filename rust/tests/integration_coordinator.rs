@@ -1,0 +1,165 @@
+//! Integration: coordinator serving stack (router → batcher → workers),
+//! native and PJRT backends, TCP front-end, backpressure, metrics.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+use strembed::coordinator::{
+    serve_tcp, BackendSpec, Coordinator, CoordinatorConfig, EmbedError,
+};
+
+fn native_specs() -> Vec<(String, BackendSpec)> {
+    vec![
+        ("circ".into(), BackendSpec::native("circulant", "sign", 8, 16, 1).unwrap()),
+        ("toep".into(), BackendSpec::native("toeplitz", "rff", 8, 16, 2).unwrap()),
+    ]
+}
+
+#[test]
+fn multi_variant_routing() {
+    let c = Coordinator::start(native_specs(), CoordinatorConfig::default()).unwrap();
+    assert_eq!(c.variant_names(), vec!["circ".to_string(), "toep".to_string()]);
+    let a = c.embed_blocking("circ", vec![0.5; 16]).unwrap();
+    let b = c.embed_blocking("toep", vec![0.5; 16]).unwrap();
+    assert_eq!(a.features.len(), 8);
+    assert_eq!(b.features.len(), 16); // cossin doubles
+    c.shutdown();
+}
+
+#[test]
+fn concurrent_load_all_complete() {
+    let c = Arc::new(
+        Coordinator::start(
+            native_specs(),
+            CoordinatorConfig {
+                max_batch: 8,
+                linger: Duration::from_micros(500),
+                queue_capacity: 10_000,
+            },
+        )
+        .unwrap(),
+    );
+    let mut handles = Vec::new();
+    for t in 0..8 {
+        let c = c.clone();
+        handles.push(std::thread::spawn(move || {
+            let variant = if t % 2 == 0 { "circ" } else { "toep" };
+            for i in 0..50 {
+                let v = vec![(t * 50 + i) as f32 / 400.0; 16];
+                c.embed_blocking(variant, v).unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let snap = c.metrics().snapshot();
+    assert_eq!(snap.completed, 400);
+    assert_eq!(snap.failed, 0);
+    assert!(snap.mean_batch_size >= 1.0);
+}
+
+#[test]
+fn backpressure_rejects_when_saturated() {
+    // tiny queue + a pre-closed... simpler: fill the queue faster than a
+    // slow backend drains it. Native backend is fast, so use capacity 1
+    // and many instant submits — at least the error path is exercised.
+    let c = Coordinator::start(
+        vec![("circ".into(), BackendSpec::native("circulant", "sign", 64, 1024, 1).unwrap())],
+        CoordinatorConfig {
+            max_batch: 1,
+            linger: Duration::from_millis(0),
+            queue_capacity: 2,
+        },
+    )
+    .unwrap();
+    let mut saw_overload = false;
+    let mut rxs = Vec::new();
+    for _ in 0..200 {
+        match c.submit("circ", vec![0.1; 1024]) {
+            Ok(rx) => rxs.push(rx),
+            Err(EmbedError::Overloaded) => {
+                saw_overload = true;
+                break;
+            }
+            Err(e) => panic!("unexpected {e}"),
+        }
+    }
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    assert!(saw_overload, "bounded queue must shed load");
+    let snap = c.metrics().snapshot();
+    assert!(snap.rejected >= 1);
+}
+
+#[test]
+fn tcp_server_integration() {
+    use std::io::{BufRead, BufReader, Write};
+    let c = Arc::new(Coordinator::start(native_specs(), CoordinatorConfig::default()).unwrap());
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let server = std::thread::spawn(move || {
+        serve_tcp(c, "127.0.0.1:0", stop2, move |a| {
+            let _ = tx.send(a);
+        })
+        .unwrap();
+    });
+    let addr = rx.recv().unwrap();
+
+    let mut conn = std::net::TcpStream::connect(addr).unwrap();
+    let vector: Vec<String> = (0..16).map(|i| format!("{}", i as f32 * 0.1)).collect();
+    writeln!(conn, "EMBED circ {}", vector.join(",")).unwrap();
+    writeln!(conn, "VARIANTS").unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK "), "{line}");
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim(), "OK circ,toep");
+    // close the client before joining: the server's connection thread
+    // blocks on read_line until the peer hangs up
+    drop(reader);
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap();
+}
+
+#[test]
+fn pjrt_backend_through_coordinator() {
+    // requires `make artifacts`; skip quietly otherwise
+    let dir = strembed::runtime::default_artifact_dir();
+    let Ok(manifest) = strembed::runtime::load_manifest(&dir) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let meta = manifest.variants[0].clone();
+    let name = meta.name.clone();
+    let n = meta.n;
+    let c = Coordinator::start(
+        vec![(name.clone(), BackendSpec::Pjrt { dir, meta })],
+        CoordinatorConfig::default(),
+    )
+    .unwrap();
+    let resp = c.embed_blocking(&name, vec![0.25; n]).unwrap();
+    assert!(resp.features.iter().all(|v| v.is_finite()));
+    // batched requests across threads
+    let c = Arc::new(c);
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let c = c.clone();
+        let name = name.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..10 {
+                let v = vec![(t + i) as f32 * 0.01; n];
+                c.embed_blocking(&name, v).unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(c.metrics().snapshot().failed, 0);
+}

@@ -1,0 +1,146 @@
+//! Property-based tests over public-API invariants (using the crate's
+//! own `prop` framework — proptest is unavailable offline).
+
+use strembed::dsp::{circular_convolve, Fft};
+use strembed::pmodel::{dot, StructureKind};
+use strembed::prop::forall;
+use strembed::rng::Rng;
+use strembed::transform::{EmbeddingConfig, Nonlinearity, Preprocessor, StructuredEmbedding};
+
+#[test]
+fn prop_fast_matvec_equals_naive_all_families() {
+    forall("matvec fast == naive", 60, |g| {
+        let kind = *g.choose(&StructureKind::all());
+        let n = g.pow2_in(2, 6); // 4..64
+        let max_m = 2 * n;
+        let m = g.usize_in(1, max_m);
+        let mut rng = Rng::new(g.seed());
+        let model = kind.build(m, n, &mut rng);
+        let x = g.gaussian_vec(n);
+        let fast = model.matvec(&x);
+        let naive = model.matvec_naive(&x);
+        for (a, b) in fast.iter().zip(&naive) {
+            assert!((a - b).abs() < 1e-7 * (1.0 + a.abs().max(b.abs())), "{kind:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_matvec_is_linear() {
+    forall("matvec linearity", 40, |g| {
+        let kind = *g.choose(&StructureKind::theorem_families());
+        let n = g.pow2_in(2, 6);
+        let mut rng = Rng::new(g.seed());
+        let model = kind.build(n, n, &mut rng);
+        let x = g.gaussian_vec(n);
+        let y = g.gaussian_vec(n);
+        let a = g.f64_in(-2.0, 2.0);
+        let combo: Vec<f64> = x.iter().zip(&y).map(|(u, v)| a * u + v).collect();
+        let lhs = model.matvec(&combo);
+        let mx = model.matvec(&x);
+        let my = model.matvec(&y);
+        for i in 0..lhs.len() {
+            let rhs = a * mx[i] + my[i];
+            assert!((lhs[i] - rhs).abs() < 1e-7 * (1.0 + rhs.abs()));
+        }
+    });
+}
+
+#[test]
+fn prop_fft_roundtrip_and_parseval() {
+    forall("fft invariants", 40, |g| {
+        let n = g.pow2_in(0, 10);
+        let x = g.gaussian_vec(n);
+        let fft = Fft::new(n);
+        let spec = fft.forward_real(&x);
+        let back = fft.inverse_real(&spec);
+        for (a, b) in x.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-8);
+        }
+        let te: f64 = x.iter().map(|v| v * v).sum();
+        let fe: f64 = spec.iter().map(|c| c.norm_sq()).sum::<f64>() / n as f64;
+        assert!((te - fe).abs() < 1e-7 * (1.0 + te));
+    });
+}
+
+#[test]
+fn prop_convolution_commutes() {
+    forall("circular convolution commutative", 30, |g| {
+        let n = g.pow2_in(1, 8);
+        let a = g.gaussian_vec(n);
+        let b = g.gaussian_vec(n);
+        let ab = circular_convolve(&a, &b);
+        let ba = circular_convolve(&b, &a);
+        for (x, y) in ab.iter().zip(&ba) {
+            assert!((x - y).abs() < 1e-8);
+        }
+    });
+}
+
+#[test]
+fn prop_preprocess_is_isometry() {
+    forall("D1HD0 isometry", 40, |g| {
+        let n = g.pow2_in(1, 9);
+        let mut rng = Rng::new(g.seed());
+        let pre = Preprocessor::new(n, &mut rng);
+        let x = g.gaussian_vec(n);
+        let y = g.gaussian_vec(n);
+        let before = dot(&x, &y);
+        let after = dot(&pre.apply(&x), &pre.apply(&y));
+        assert!((before - after).abs() < 1e-7 * (1.0 + before.abs()));
+    });
+}
+
+#[test]
+fn prop_embedding_deterministic_and_shaped() {
+    forall("embedding shape + determinism", 40, |g| {
+        let kind = *g.choose(&StructureKind::all());
+        let fs = Nonlinearity::all();
+        let f = *g.choose(&fs);
+        let n = g.pow2_in(3, 6);
+        let m = g.usize_in(1, n);
+        let seed = g.seed();
+        let cfg = EmbeddingConfig::new(kind, m, n, f).with_seed(seed);
+        let e1 = StructuredEmbedding::sample(cfg.clone());
+        let e2 = StructuredEmbedding::sample(cfg);
+        let x = g.gaussian_vec(n);
+        let f1 = e1.embed(&x);
+        let f2 = e2.embed(&x);
+        assert_eq!(f1.len(), f.out_dim(m));
+        assert_eq!(f1, f2);
+    });
+}
+
+#[test]
+fn prop_heaviside_features_binary() {
+    forall("sign features are bits", 30, |g| {
+        let n = g.pow2_in(3, 6);
+        let m = g.usize_in(1, n);
+        let emb = StructuredEmbedding::sample(
+            EmbeddingConfig::new(StructureKind::Circulant, m, n, Nonlinearity::Heaviside)
+                .with_seed(g.seed()),
+        );
+        let x = g.gaussian_vec(n);
+        for v in emb.embed(&x) {
+            assert!(v == 0.0 || v == 1.0);
+        }
+    });
+}
+
+#[test]
+fn prop_sigma_normalization_all_families() {
+    // Definition 1: columns of every P_i are unit-norm ⇒ σ(i,i,j,j) = 1
+    forall("sigma normalization", 30, |g| {
+        let kind = *g.choose(&StructureKind::all());
+        let n = g.pow2_in(2, 4);
+        let m = g.usize_in(1, n);
+        let mut rng = Rng::new(g.seed());
+        let model = kind.build(m, n, &mut rng);
+        for i in 0..m {
+            for j in 0..n {
+                let s = model.sigma(i, i, j, j);
+                assert!((s - 1.0).abs() < 1e-9, "{} sigma(i,i,j,j)={s}", model.name());
+            }
+        }
+    });
+}
