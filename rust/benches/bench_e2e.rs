@@ -21,10 +21,17 @@ fn main() {
         }
     };
 
-    // raw engine throughput per variant
+    // raw engine throughput per variant (the default build ships a stub
+    // Engine whose load always errs — skip rather than panic)
     let mut results = Vec::new();
     for meta in manifest.variants.iter().take(3) {
-        let engine = Engine::load(&dir, meta.clone()).unwrap();
+        let engine = match Engine::load(&dir, meta.clone()) {
+            Ok(e) => e,
+            Err(e) => {
+                println!("skipping e2e bench: {e:#}");
+                return;
+            }
+        };
         let mut rng = Rng::new(1);
         let rows: Vec<Vec<f32>> = (0..meta.batch)
             .map(|_| (0..meta.n).map(|_| rng.gaussian() as f32 * 0.3).collect())

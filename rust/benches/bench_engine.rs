@@ -1,0 +1,103 @@
+//! Planned batch engine vs per-vector embedding throughput.
+//!
+//! The acceptance target for the engine layer: planned batch execution
+//! (amortized FFT plans/spectra + zero-alloc scratch, SoA buffers) must
+//! clearly beat the per-vector reference path — ≥ 2× on circulant
+//! m=n=1024, batch=64 — and the worker pool should add on top of that
+//! on multi-core hosts.
+
+mod common;
+
+use common::{bench, report};
+use std::sync::Arc;
+use strembed::engine::{BatchBuf, BatchExecutor, EmbeddingPlan, WorkerPool};
+use strembed::pmodel::StructureKind;
+use strembed::rng::Rng;
+use strembed::transform::{EmbeddingConfig, Nonlinearity};
+
+fn main() {
+    let batch = 64usize;
+
+    // per-family comparison at the acceptance size
+    let n = 1024usize;
+    let m = 1024usize;
+    let mut results = Vec::new();
+    let mut speedups = Vec::new();
+    for kind in [
+        StructureKind::Circulant,
+        StructureKind::SkewCirculant,
+        StructureKind::Toeplitz,
+        StructureKind::Hankel,
+        StructureKind::Ldr(2),
+    ] {
+        let cfg = EmbeddingConfig::new(kind, m, n, Nonlinearity::CosSin).with_seed(3);
+        let plan = EmbeddingPlan::shared(cfg);
+        let mut rng = Rng::new(1);
+        let rows: Vec<Vec<f64>> = (0..batch).map(|_| rng.gaussian_vec(n)).collect();
+        let input = BatchBuf::from_rows(&rows);
+        let mut exec = BatchExecutor::new(plan.clone());
+        let mut out = BatchBuf::zeros(batch, plan.out_dim());
+        // warmup grows the scratch to its high-water mark
+        exec.embed_batch_into(&input, &mut out);
+
+        let per_vector = bench(&format!("{} per-vector x{batch}", kind.label()), || {
+            for r in &rows {
+                std::hint::black_box(plan.embedding().embed(std::hint::black_box(r)));
+            }
+        });
+        let planned = bench(&format!("{} planned batch x{batch}", kind.label()), || {
+            exec.embed_batch_into(std::hint::black_box(&input), &mut out);
+            std::hint::black_box(&out);
+        });
+        let speedup = per_vector.ns_per_op / planned.ns_per_op;
+        speedups.push((kind.label(), speedup));
+        results.push(per_vector);
+        results.push(planned);
+    }
+    report(&format!("engine: per-vector vs planned batch (n={n}, m={m}, batch={batch})"), &results);
+    println!();
+    for (label, s) in &speedups {
+        println!("{label}: planned batch is {s:.2}x the per-vector path");
+    }
+
+    // worker pool scaling on the acceptance config
+    let cfg =
+        EmbeddingConfig::new(StructureKind::Circulant, m, n, Nonlinearity::CosSin).with_seed(3);
+    let plan = EmbeddingPlan::shared(cfg);
+    let mut rng = Rng::new(2);
+    let rows: Vec<Vec<f64>> = (0..batch).map(|_| rng.gaussian_vec(n)).collect();
+    let input = Arc::new(BatchBuf::from_rows(&rows));
+    let mut pool_results = Vec::new();
+    for workers in [1usize, 2, 4, WorkerPool::default_workers()] {
+        let pool = WorkerPool::new(plan.clone(), workers);
+        pool.embed_batch(&input); // warmup
+        pool_results.push(bench(&format!("pool workers={workers} x{batch}"), || {
+            std::hint::black_box(pool.embed_batch(std::hint::black_box(&input)));
+        }));
+    }
+    report(&format!("engine worker pool (circulant n={n}, batch={batch})"), &pool_results);
+
+    // amortization across sizes: where does planning start to pay?
+    let mut size_results = Vec::new();
+    for &(nn, mm) in &[(128usize, 64usize), (512, 256), (2048, 1024)] {
+        let cfg =
+            EmbeddingConfig::new(StructureKind::Circulant, mm, nn, Nonlinearity::CosSin).with_seed(5);
+        let plan = EmbeddingPlan::shared(cfg);
+        let mut rng = Rng::new(nn as u64);
+        let rows: Vec<Vec<f64>> = (0..batch).map(|_| rng.gaussian_vec(nn)).collect();
+        let input = BatchBuf::from_rows(&rows);
+        let mut exec = BatchExecutor::new(plan.clone());
+        let mut out = BatchBuf::zeros(batch, plan.out_dim());
+        exec.embed_batch_into(&input, &mut out);
+        size_results.push(bench(&format!("per-vector n={nn} m={mm}"), || {
+            for r in &rows {
+                std::hint::black_box(plan.embedding().embed(std::hint::black_box(r)));
+            }
+        }));
+        size_results.push(bench(&format!("planned n={nn} m={mm}"), || {
+            exec.embed_batch_into(std::hint::black_box(&input), &mut out);
+            std::hint::black_box(&out);
+        }));
+    }
+    report(&format!("engine across sizes (circulant, batch={batch})"), &size_results);
+}

@@ -1,13 +1,27 @@
-//! Worker backends: PJRT (AOT artifact) or native rust pipeline.
+//! Worker backends: PJRT (AOT artifact) or the native batch engine.
 //!
 //! A `BackendSpec` is `Send` plain data; the actual backend is built
 //! *inside* the worker thread because PJRT handles are not `Send`.
+//!
+//! The native path executes through [`crate::engine`]: one
+//! [`EmbeddingPlan`] per variant, a worker-private [`BatchExecutor`]
+//! for small batches, and a [`WorkerPool`] that shards large batches
+//! across cores. The f32 wire rows are widened into the engine's
+//! [`BatchBuf`] exactly once per batch (the seed allocated a fresh
+//! `Vec<f64>` per row).
 
+use crate::engine::{BatchBuf, BatchExecutor, EmbeddingPlan, WorkerPool};
 use crate::pmodel::StructureKind;
 use crate::runtime::{Engine, VariantMeta};
-use crate::transform::{EmbeddingConfig, Nonlinearity, StructuredEmbedding};
+use crate::transform::{EmbeddingConfig, Nonlinearity};
 use anyhow::{anyhow, Result};
 use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Batches at least this large are sharded across the worker pool;
+/// smaller ones run on the worker's own executor (the pool's dispatch
+/// overhead isn't worth paying for a handful of rows).
+const POOL_MIN_BATCH: usize = 8;
 
 /// Where a variant's compute comes from.
 #[derive(Debug, Clone)]
@@ -19,7 +33,7 @@ pub enum BackendSpec {
         /// variant metadata from the manifest
         meta: VariantMeta,
     },
-    /// Run the pure-rust structured pipeline.
+    /// Run the pure-rust structured pipeline through the batch engine.
     Native {
         /// embedding configuration (structure, m, n, f, seed)
         config: EmbeddingConfig,
@@ -59,7 +73,15 @@ impl BackendSpec {
                 Ok(Backend::Pjrt(Engine::load(dir, meta.clone())?))
             }
             BackendSpec::Native { config } => {
-                Ok(Backend::Native(StructuredEmbedding::sample(config.clone())))
+                let plan = EmbeddingPlan::shared(config.clone());
+                // the shard pool is spawned lazily on the first large
+                // batch: variants that only ever see small batches (or a
+                // single-core host) never hold idle threads
+                Ok(Backend::Native(NativeBackend {
+                    exec: BatchExecutor::new(plan.clone()),
+                    plan,
+                    pool: None,
+                }))
             }
         }
     }
@@ -79,33 +101,59 @@ impl BackendSpec {
     }
 }
 
+/// Engine-backed native compute owned by one coordinator worker.
+pub struct NativeBackend {
+    plan: Arc<EmbeddingPlan>,
+    exec: BatchExecutor,
+    /// lazily spawned on the first batch of ≥ [`POOL_MIN_BATCH`] rows
+    /// (never on single-core hosts)
+    pool: Option<WorkerPool>,
+}
+
+impl NativeBackend {
+    /// The variant's shared plan.
+    pub fn plan(&self) -> &Arc<EmbeddingPlan> {
+        &self.plan
+    }
+
+    /// Worker-pool size (1 until the shard pool has been spawned).
+    pub fn pool_workers(&self) -> usize {
+        self.pool.as_ref().map_or(1, WorkerPool::workers)
+    }
+
+    fn embed_batch(&mut self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        // one f32→f64 widening for the whole batch
+        let input = BatchBuf::from_f32_rows(rows, self.plan.n()).map_err(|e| anyhow!("{e}"))?;
+        if self.pool.is_none()
+            && input.rows() >= POOL_MIN_BATCH
+            && WorkerPool::default_workers() > 1
+        {
+            self.pool = Some(WorkerPool::new(self.plan.clone(), WorkerPool::default_workers()));
+        }
+        let out = match &self.pool {
+            Some(pool) if input.rows() >= POOL_MIN_BATCH => {
+                pool.embed_batch(&Arc::new(input))
+            }
+            _ => self.exec.embed_batch(&input),
+        };
+        Ok(out.to_f32_rows())
+    }
+}
+
 /// A live backend owned by one worker thread.
 pub enum Backend {
     /// compiled PJRT executable
     Pjrt(Engine),
-    /// pure-rust pipeline
-    Native(StructuredEmbedding),
+    /// engine-backed native pipeline
+    Native(NativeBackend),
 }
 
 impl Backend {
     /// Embed a batch of rows (each length n) into feature vectors.
-    pub fn embed_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+    pub fn embed_batch(&mut self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         match self {
             Backend::Pjrt(engine) => engine.embed_batch(rows),
-            Backend::Native(emb) => rows
-                .iter()
-                .map(|r| {
-                    let v64: Vec<f64> = r.iter().map(|&x| x as f64).collect();
-                    if v64.len() != emb.config().n {
-                        return Err(anyhow!(
-                            "row dim {} != {}",
-                            v64.len(),
-                            emb.config().n
-                        ));
-                    }
-                    Ok(emb.embed(&v64).into_iter().map(|x| x as f32).collect())
-                })
-                .collect(),
+            Backend::Native(nb) => nb.embed_batch(rows),
         }
     }
 }
@@ -113,6 +161,7 @@ impl Backend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::transform::StructuredEmbedding;
 
     #[test]
     fn native_spec_builds_and_embeds() {
@@ -120,11 +169,46 @@ mod tests {
         assert_eq!(spec.n(), 16);
         assert_eq!(spec.out_dim(), 8);
         assert_eq!(spec.max_exec_batch(), usize::MAX);
-        let b = spec.build().unwrap();
+        let mut b = spec.build().unwrap();
         let out = b.embed_batch(&[vec![0.5f32; 16], vec![-1.0f32; 16]]).unwrap();
         assert_eq!(out.len(), 2);
         assert_eq!(out[0].len(), 8);
         assert!(out[0].iter().all(|&x| x == 0.0 || x == 1.0));
+    }
+
+    #[test]
+    fn native_matches_reference_pipeline() {
+        let spec = BackendSpec::native("toeplitz", "rff", 8, 16, 7).unwrap();
+        let config = match &spec {
+            BackendSpec::Native { config } => config.clone(),
+            _ => unreachable!(),
+        };
+        let reference = StructuredEmbedding::sample(config);
+        let mut b = spec.build().unwrap();
+        let rows: Vec<Vec<f32>> =
+            (0..3).map(|i| (0..16).map(|j| (i * 16 + j) as f32 / 48.0).collect()).collect();
+        let got = b.embed_batch(&rows).unwrap();
+        for (row, feats) in rows.iter().zip(&got) {
+            let v64: Vec<f64> = row.iter().map(|&x| x as f64).collect();
+            let want = reference.embed(&v64);
+            for (g, w) in feats.iter().zip(&want) {
+                assert!((*g as f64 - w).abs() < 1e-6, "{g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn native_pool_path_matches_small_batch_path() {
+        // 2 rows goes through the in-thread executor, 64 through the
+        // pool (when multi-core); overlapping rows must agree exactly.
+        let spec = BackendSpec::native("circulant", "rff", 16, 32, 5).unwrap();
+        let mut b = spec.build().unwrap();
+        let rows: Vec<Vec<f32>> =
+            (0..64).map(|i| (0..32).map(|j| ((i + j) % 7) as f32 * 0.1).collect()).collect();
+        let small = b.embed_batch(&rows[..2]).unwrap();
+        let large = b.embed_batch(&rows).unwrap();
+        assert_eq!(small[0], large[0]);
+        assert_eq!(small[1], large[1]);
     }
 
     #[test]
@@ -142,7 +226,7 @@ mod tests {
     #[test]
     fn native_rejects_bad_dim() {
         let spec = BackendSpec::native("circulant", "sign", 8, 16, 3).unwrap();
-        let b = spec.build().unwrap();
+        let mut b = spec.build().unwrap();
         assert!(b.embed_batch(&[vec![0.0f32; 15]]).is_err());
     }
 }

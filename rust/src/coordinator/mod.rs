@@ -11,11 +11,14 @@
 //!                                        ▼
 //!                               worker thread (owns Backend)
 //!                               ├─ PJRT engine (AOT artifact)   ← request path
-//!                               └─ native rust pipeline (fallback)
+//!                               └─ native batch engine (EmbeddingPlan +
+//!                                  BatchExecutor + WorkerPool shards)
 //! ```
 //!
 //! Python never appears on the request path: PJRT workers execute the
-//! AOT-compiled HLO; the native backend is pure rust.
+//! AOT-compiled HLO; the native backend executes batches through
+//! [`crate::engine`] (planned transforms, SoA buffers, multi-core
+//! sharding for large batches).
 
 mod backend;
 mod batcher;
@@ -23,7 +26,7 @@ mod metrics;
 mod server;
 mod tcp;
 
-pub use backend::{Backend, BackendSpec};
+pub use backend::{Backend, BackendSpec, NativeBackend};
 pub use batcher::{BatchQueue, QueueError};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use server::{Coordinator, CoordinatorConfig, EmbedError, EmbedResponse};

@@ -106,7 +106,7 @@ impl Coordinator {
                 .name(format!("strembed-worker-{wname}"))
                 .spawn(move || {
                     // backend built in-thread: PJRT handles are not Send
-                    let backend = match wspec.build() {
+                    let mut backend = match wspec.build() {
                         Ok(b) => b,
                         Err(e) => {
                             eprintln!("worker {wname}: backend init failed: {e:#}");

@@ -201,33 +201,66 @@ impl RealFft {
         self.n == 0
     }
 
+    /// Length of the half-spectrum this plan produces (n/2 + 1).
+    pub fn spectrum_len(&self) -> usize {
+        self.n / 2 + 1
+    }
+
+    /// Length of the complex scratch buffer the `_into` entry points
+    /// need (the half-size packed signal, n/2).
+    pub fn scratch_len(&self) -> usize {
+        self.n / 2
+    }
+
     /// Forward transform: returns the half-spectrum X[0..=n/2].
     pub fn forward(&self, x: &[f64]) -> Vec<Complex> {
+        let mut spec = vec![Complex::ZERO; self.spectrum_len()];
+        let mut scratch = vec![Complex::ZERO; self.scratch_len()];
+        self.forward_into(x, &mut spec, &mut scratch);
+        spec
+    }
+
+    /// Allocation-free forward transform into caller-owned buffers:
+    /// `spec` receives the half-spectrum (length n/2 + 1), `scratch`
+    /// holds the packed half-size signal (length n/2). The serving hot
+    /// path reuses both across calls.
+    pub fn forward_into(&self, x: &[f64], spec: &mut [Complex], scratch: &mut [Complex]) {
         assert_eq!(x.len(), self.n);
         let m = self.n / 2;
-        let mut z: Vec<Complex> =
-            (0..m).map(|k| Complex::new(x[2 * k], x[2 * k + 1])).collect();
-        self.half.forward_inplace(&mut z);
-        let mut out = Vec::with_capacity(m + 1);
-        for k in 0..=m {
-            let zk = z[k % m];
-            let zmk = z[(m - k) % m].conj();
+        assert_eq!(spec.len(), m + 1);
+        assert_eq!(scratch.len(), m);
+        for (k, z) in scratch.iter_mut().enumerate() {
+            *z = Complex::new(x[2 * k], x[2 * k + 1]);
+        }
+        self.half.forward_inplace(scratch);
+        for (k, out) in spec.iter_mut().enumerate() {
+            let zk = scratch[k % m];
+            let zmk = scratch[(m - k) % m].conj();
             let xe = zk.add(zmk).scale(0.5);
             // Xo = -i (zk - zmk)/2
             let d = zk.sub(zmk).scale(0.5);
             let xo = Complex::new(d.im, -d.re);
-            out.push(xe.add(self.w[k].mul(xo)));
+            *out = xe.add(self.w[k].mul(xo));
         }
-        out
     }
 
     /// Inverse transform from a half-spectrum (length n/2 + 1) back to
     /// the real signal (includes 1/n normalization).
     pub fn inverse(&self, spec: &[Complex]) -> Vec<f64> {
+        let mut out = vec![0.0; self.n];
+        let mut scratch = vec![Complex::ZERO; self.scratch_len()];
+        self.inverse_into(spec, &mut out, &mut scratch);
+        out
+    }
+
+    /// Allocation-free inverse transform: writes the real signal (length
+    /// n) into `out`; `scratch` is a length-n/2 complex work buffer.
+    pub fn inverse_into(&self, spec: &[Complex], out: &mut [f64], scratch: &mut [Complex]) {
         let m = self.n / 2;
         assert_eq!(spec.len(), m + 1);
-        let mut z = Vec::with_capacity(m);
-        for k in 0..m {
+        assert_eq!(out.len(), self.n);
+        assert_eq!(scratch.len(), m);
+        for (k, z) in scratch.iter_mut().enumerate() {
             let xk = spec[k];
             let xmk = spec[m - k].conj();
             let xe = xk.add(xmk).scale(0.5);
@@ -235,15 +268,13 @@ impl RealFft {
             // Xo = conj(W^k) · rot
             let xo = self.w[k].conj().mul(rot);
             // z[k] = Xe + i·Xo
-            z.push(xe.add(Complex::new(-xo.im, xo.re)));
+            *z = xe.add(Complex::new(-xo.im, xo.re));
         }
-        self.half.inverse_inplace(&mut z);
-        let mut out = Vec::with_capacity(self.n);
-        for c in z {
-            out.push(c.re);
-            out.push(c.im);
+        self.half.inverse_inplace(scratch);
+        for (k, c) in scratch.iter().enumerate() {
+            out[2 * k] = c.re;
+            out[2 * k + 1] = c.im;
         }
-        out
     }
 }
 
@@ -354,6 +385,28 @@ mod tests {
                     half[k],
                     full[k]
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn real_fft_into_entry_points_match_allocating() {
+        let mut rng = Rng::new(9);
+        for &n in &[2usize, 16, 256] {
+            let plan = RealFft::new(n);
+            let mut spec = vec![Complex::ZERO; plan.spectrum_len()];
+            let mut scratch = vec![Complex::ZERO; plan.scratch_len()];
+            let mut back = vec![0.0; n];
+            // reuse the same buffers across several transforms
+            for _ in 0..3 {
+                let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+                plan.forward_into(&x, &mut spec, &mut scratch);
+                let want = plan.forward(&x);
+                for (a, b) in spec.iter().zip(&want) {
+                    assert!((a.re - b.re).abs() < 1e-12 && (a.im - b.im).abs() < 1e-12);
+                }
+                plan.inverse_into(&spec, &mut back, &mut scratch);
+                crate::util::assert_close(&back, &x, 1e-9);
             }
         }
     }

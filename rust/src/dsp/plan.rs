@@ -29,16 +29,49 @@ impl ConvPlan {
         ConvPlan { fft: Some(fft), kspec, k1: 0.0 }
     }
 
+    /// Convolution length.
+    pub fn len(&self) -> usize {
+        match &self.fft {
+            None => 1,
+            Some(fft) => fft.len(),
+        }
+    }
+
+    /// True for the degenerate zero-length plan (never constructed).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
     /// `kernel ⊛ x` (same length as the kernel).
     pub fn apply(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.len()];
+        let mut spec = Vec::new();
+        let mut scratch = Vec::new();
+        self.apply_into(x, &mut out, &mut spec, &mut scratch);
+        out
+    }
+
+    /// Allocation-free `kernel ⊛ x` into `out` (length n). `spec` and
+    /// `scratch` are complex work buffers grown on first use and reused
+    /// across calls (the batch-engine hot path).
+    pub fn apply_into(
+        &self,
+        x: &[f64],
+        out: &mut [f64],
+        spec: &mut Vec<Complex>,
+        scratch: &mut Vec<Complex>,
+    ) {
+        assert_eq!(out.len(), self.len());
         match &self.fft {
-            None => vec![self.k1 * x[0]],
+            None => out[0] = self.k1 * x[0],
             Some(fft) => {
-                let mut xs = fft.forward(x);
-                for (v, k) in xs.iter_mut().zip(&self.kspec) {
+                spec.resize(fft.spectrum_len(), Complex::ZERO);
+                scratch.resize(fft.scratch_len(), Complex::ZERO);
+                fft.forward_into(x, spec, scratch);
+                for (v, k) in spec.iter_mut().zip(&self.kspec) {
                     *v = v.mul(*k);
                 }
-                fft.inverse(&xs)
+                fft.inverse_into(spec, out, scratch);
             }
         }
     }
@@ -72,19 +105,43 @@ impl NegacyclicPlan {
         NegacyclicPlan { fft, twist, kspec: kb }
     }
 
+    /// Convolution length.
+    pub fn len(&self) -> usize {
+        self.fft.len()
+    }
+
+    /// True for the degenerate zero-length plan (never constructed).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
     /// `negaconv(a, kernel)` — sign −1 on wrapped index sums.
     pub fn apply(&self, a: &[f64]) -> Vec<f64> {
-        let mut fa: Vec<Complex> =
-            a.iter().zip(&self.twist).map(|(&x, w)| w.scale(x)).collect();
-        self.fft.forward_inplace(&mut fa);
-        for (v, k) in fa.iter_mut().zip(&self.kspec) {
+        let mut out = vec![0.0; self.len()];
+        let mut buf = Vec::new();
+        self.apply_into(a, &mut out, &mut buf);
+        out
+    }
+
+    /// Allocation-free `negaconv(a, kernel)` writing the first
+    /// `out.len()` (≤ n) results into `out`. `buf` is a complex work
+    /// buffer grown on first use and reused across calls.
+    pub fn apply_into(&self, a: &[f64], out: &mut [f64], buf: &mut Vec<Complex>) {
+        let n = self.fft.len();
+        assert_eq!(a.len(), n);
+        assert!(out.len() <= n);
+        buf.resize(n, Complex::ZERO);
+        for ((b, &x), w) in buf.iter_mut().zip(a).zip(&self.twist) {
+            *b = w.scale(x);
+        }
+        self.fft.forward_inplace(buf);
+        for (v, k) in buf.iter_mut().zip(&self.kspec) {
             *v = v.mul(*k);
         }
-        self.fft.inverse_inplace(&mut fa);
-        fa.iter()
-            .zip(&self.twist)
-            .map(|(c, w)| c.mul(w.conj()).re)
-            .collect()
+        self.fft.inverse_inplace(buf);
+        for (k, o) in out.iter_mut().enumerate() {
+            *o = buf[k].mul(self.twist[k].conj()).re;
+        }
     }
 }
 
@@ -114,6 +171,38 @@ mod tests {
             let plan = NegacyclicPlan::new(&k);
             crate::util::assert_close(&plan.apply(&x), &negacyclic_convolve(&x, &k), 1e-9);
         }
+    }
+
+    #[test]
+    fn apply_into_matches_apply_with_reused_buffers() {
+        let mut rng = Rng::new(5);
+        let k = rng.gaussian_vec(64);
+        let conv = ConvPlan::new(&k);
+        let nega = NegacyclicPlan::new(&k);
+        let mut out = vec![0.0; 64];
+        let mut spec = Vec::new();
+        let mut scratch = Vec::new();
+        let mut cbuf = Vec::new();
+        for trial in 0..4 {
+            let x = rng.gaussian_vec(64);
+            conv.apply_into(&x, &mut out, &mut spec, &mut scratch);
+            crate::util::assert_close(&out, &conv.apply(&x), 1e-12);
+            nega.apply_into(&x, &mut out, &mut cbuf);
+            crate::util::assert_close(&out, &nega.apply(&x), 1e-12);
+            // truncated output: first m results only
+            let mut short = vec![0.0; 20 + trial];
+            nega.apply_into(&x, &mut short, &mut cbuf);
+            crate::util::assert_close(&short, &nega.apply(&x)[..short.len()], 1e-12);
+        }
+    }
+
+    #[test]
+    fn trivial_length_one_conv_plan() {
+        let plan = ConvPlan::new(&[3.0]);
+        assert_eq!(plan.len(), 1);
+        let mut out = [0.0];
+        plan.apply_into(&[2.0], &mut out, &mut Vec::new(), &mut Vec::new());
+        assert_eq!(out[0], 6.0);
     }
 
     #[test]

@@ -1,0 +1,219 @@
+//! SoA batch buffers and the zero-allocation batch executor.
+
+use super::EmbeddingPlan;
+use crate::pmodel::MatvecScratch;
+use std::sync::Arc;
+
+/// A batch of equal-length vectors in structure-of-arrays layout: one
+/// contiguous row-major `Vec<f64>` instead of one heap allocation per
+/// row. This is the engine's interchange format — the coordinator
+/// converts its f32 wire rows into a `BatchBuf` exactly once per batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchBuf {
+    data: Vec<f64>,
+    rows: usize,
+    dim: usize,
+}
+
+impl BatchBuf {
+    /// An all-zero batch.
+    pub fn zeros(rows: usize, dim: usize) -> BatchBuf {
+        BatchBuf { data: vec![0.0; rows * dim], rows, dim }
+    }
+
+    /// Pack a slice of equal-length rows (asserts on ragged input).
+    pub fn from_rows(rows: &[Vec<f64>]) -> BatchBuf {
+        let dim = rows.first().map_or(0, Vec::len);
+        let mut data = Vec::with_capacity(rows.len() * dim);
+        for r in rows {
+            assert_eq!(r.len(), dim, "ragged batch");
+            data.extend_from_slice(r);
+        }
+        BatchBuf { data, rows: rows.len(), dim }
+    }
+
+    /// Pack f32 wire rows, widening once; `Err` names the first row
+    /// whose length differs from `dim`.
+    pub fn from_f32_rows(rows: &[Vec<f32>], dim: usize) -> Result<BatchBuf, String> {
+        let mut data = Vec::with_capacity(rows.len() * dim);
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != dim {
+                return Err(format!("row {i} has dim {} (want {dim})", r.len()));
+            }
+            data.extend(r.iter().map(|&x| x as f64));
+        }
+        Ok(BatchBuf { data, rows: rows.len(), dim })
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Row length.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// True when the batch holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Row `i` as a slice.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Row `i` as a mutable slice.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// The whole buffer (row-major).
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Unpack into owned rows.
+    pub fn to_rows(&self) -> Vec<Vec<f64>> {
+        (0..self.rows).map(|i| self.row(i).to_vec()).collect()
+    }
+
+    /// Unpack into f32 wire rows, narrowing once.
+    pub fn to_f32_rows(&self) -> Vec<Vec<f32>> {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().map(|&x| x as f32).collect())
+            .collect()
+    }
+}
+
+/// Executes a plan over batches with reusable buffers: after the first
+/// call (which grows the scratch to its high-water mark) embedding a
+/// vector performs no heap allocation at all — preprocess in place,
+/// planned matvec into the projection buffer, nonlinearity into the
+/// caller's output row.
+pub struct BatchExecutor {
+    plan: Arc<EmbeddingPlan>,
+    scratch: MatvecScratch,
+    /// working copy of the current input (preprocessed in place)
+    input: Vec<f64>,
+    /// raw projections A·D₁HD₀·x (length m)
+    proj: Vec<f64>,
+}
+
+impl BatchExecutor {
+    /// An executor for `plan` (cheap; buffers grow lazily).
+    pub fn new(plan: Arc<EmbeddingPlan>) -> BatchExecutor {
+        let n = plan.n();
+        let m = plan.m();
+        BatchExecutor { plan, scratch: MatvecScratch::new(), input: vec![0.0; n], proj: vec![0.0; m] }
+    }
+
+    /// The executed plan.
+    pub fn plan(&self) -> &Arc<EmbeddingPlan> {
+        &self.plan
+    }
+
+    /// Embed one vector into a caller-owned feature row
+    /// (`out.len() == plan.out_dim()`).
+    pub fn embed_into(&mut self, x: &[f64], out: &mut [f64]) {
+        let emb = self.plan.embedding();
+        assert_eq!(x.len(), emb.config().n, "input dim mismatch");
+        self.input.copy_from_slice(x);
+        if let Some(pre) = emb.preprocessor() {
+            pre.apply_inplace(&mut self.input);
+        }
+        emb.model().matvec_into(&self.input, &mut self.proj, &mut self.scratch);
+        emb.config().f.apply_into(&self.proj, out);
+    }
+
+    /// Embed every row of `input` into the matching row of `out`
+    /// (`out` must be `input.rows() × plan.out_dim()`).
+    pub fn embed_batch_into(&mut self, input: &BatchBuf, out: &mut BatchBuf) {
+        assert_eq!(input.rows(), out.rows(), "batch size mismatch");
+        assert_eq!(out.dim(), self.plan.out_dim(), "output dim mismatch");
+        for i in 0..input.rows() {
+            self.embed_into(input.row(i), out.row_mut(i));
+        }
+    }
+
+    /// Embed a batch into a fresh output buffer.
+    pub fn embed_batch(&mut self, input: &BatchBuf) -> BatchBuf {
+        let mut out = BatchBuf::zeros(input.rows(), self.plan.out_dim());
+        self.embed_batch_into(input, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmodel::StructureKind;
+    use crate::rng::Rng;
+    use crate::transform::{EmbeddingConfig, Nonlinearity};
+
+    #[test]
+    fn batchbuf_roundtrips() {
+        let rows = vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let b = BatchBuf::from_rows(&rows);
+        assert_eq!(b.rows(), 3);
+        assert_eq!(b.dim(), 2);
+        assert_eq!(b.row(1), &[3.0, 4.0]);
+        assert_eq!(b.to_rows(), rows);
+    }
+
+    #[test]
+    fn batchbuf_f32_conversion_is_checked() {
+        let ok = BatchBuf::from_f32_rows(&[vec![1.0f32, 2.0], vec![3.0, 4.0]], 2).unwrap();
+        assert_eq!(ok.row(0), &[1.0, 2.0]);
+        assert_eq!(ok.to_f32_rows()[1], vec![3.0f32, 4.0]);
+        let err = BatchBuf::from_f32_rows(&[vec![1.0f32, 2.0], vec![3.0]], 2).unwrap_err();
+        assert!(err.contains("row 1"), "{err}");
+    }
+
+    #[test]
+    fn executor_matches_reference_embed() {
+        let mut rng = Rng::new(17);
+        for kind in [StructureKind::Circulant, StructureKind::Dense] {
+            let cfg = EmbeddingConfig::new(kind, 8, 16, Nonlinearity::Relu).with_seed(21);
+            let plan = EmbeddingPlan::shared(cfg);
+            let mut exec = BatchExecutor::new(plan.clone());
+            let input = BatchBuf::from_rows(
+                &(0..6).map(|_| rng.gaussian_vec(16)).collect::<Vec<_>>(),
+            );
+            let out = exec.embed_batch(&input);
+            for i in 0..input.rows() {
+                let want = plan.embedding().embed(input.row(i));
+                crate::util::assert_close(out.row(i), &want, 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn executor_is_reusable_across_batches() {
+        let cfg = EmbeddingConfig::new(StructureKind::SkewCirculant, 8, 8, Nonlinearity::CosSin)
+            .with_seed(4);
+        let plan = EmbeddingPlan::shared(cfg);
+        let mut exec = BatchExecutor::new(plan.clone());
+        let mut rng = Rng::new(2);
+        for _ in 0..3 {
+            let input =
+                BatchBuf::from_rows(&(0..4).map(|_| rng.gaussian_vec(8)).collect::<Vec<_>>());
+            let out = exec.embed_batch(&input);
+            for i in 0..4 {
+                crate::util::assert_close(out.row(i), &plan.embedding().embed(input.row(i)), 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn executor_rejects_wrong_dim() {
+        let cfg = EmbeddingConfig::new(StructureKind::Circulant, 4, 8, Nonlinearity::Identity)
+            .with_seed(1);
+        let mut exec = BatchExecutor::new(EmbeddingPlan::shared(cfg));
+        let mut out = vec![0.0; 4];
+        exec.embed_into(&[1.0; 7], &mut out);
+    }
+}

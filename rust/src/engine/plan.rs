@@ -1,0 +1,94 @@
+//! The amortization unit: everything about an embedding that is
+//! reusable across calls, computed once.
+
+use crate::transform::{EmbeddingConfig, StructuredEmbedding};
+use std::sync::Arc;
+
+/// A fully planned embedding: the sampled structured matrix (whose
+/// constructor already cached FFT plans, kernel spectra and twist
+/// tables), the `D₁HD₀` preprocessing diagonals, and the nonlinearity.
+///
+/// A plan is immutable and `Send + Sync`: build it once per
+/// `(StructureKind, m, n, f, seed)` and share it behind an [`Arc`]
+/// across however many [`super::BatchExecutor`]s / worker threads the
+/// deployment needs. All mutable state (scratch, projection buffers)
+/// lives in the executors.
+pub struct EmbeddingPlan {
+    emb: StructuredEmbedding,
+}
+
+impl EmbeddingPlan {
+    /// Sample and plan an embedding from its configuration.
+    pub fn new(config: EmbeddingConfig) -> EmbeddingPlan {
+        EmbeddingPlan::from_embedding(StructuredEmbedding::sample(config))
+    }
+
+    /// Plan an already-sampled embedding.
+    pub fn from_embedding(emb: StructuredEmbedding) -> EmbeddingPlan {
+        EmbeddingPlan { emb }
+    }
+
+    /// Convenience: a shareable plan.
+    pub fn shared(config: EmbeddingConfig) -> Arc<EmbeddingPlan> {
+        Arc::new(EmbeddingPlan::new(config))
+    }
+
+    /// The configuration this plan was sampled from.
+    pub fn config(&self) -> &EmbeddingConfig {
+        self.emb.config()
+    }
+
+    /// Input dimension n.
+    pub fn n(&self) -> usize {
+        self.emb.config().n
+    }
+
+    /// Projection count m.
+    pub fn m(&self) -> usize {
+        self.emb.config().m
+    }
+
+    /// Feature dimension (2m for cos/sin).
+    pub fn out_dim(&self) -> usize {
+        self.emb.out_dim()
+    }
+
+    /// The underlying sampled embedding (per-vector reference path).
+    pub fn embedding(&self) -> &StructuredEmbedding {
+        &self.emb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmodel::StructureKind;
+    use crate::transform::Nonlinearity;
+
+    #[test]
+    fn plan_reports_dimensions() {
+        let plan = EmbeddingPlan::new(
+            EmbeddingConfig::new(StructureKind::Circulant, 8, 16, Nonlinearity::CosSin)
+                .with_seed(3),
+        );
+        assert_eq!(plan.n(), 16);
+        assert_eq!(plan.m(), 8);
+        assert_eq!(plan.out_dim(), 16);
+    }
+
+    #[test]
+    fn plan_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<EmbeddingPlan>();
+    }
+
+    #[test]
+    fn same_seed_same_plan_output() {
+        let cfg = EmbeddingConfig::new(StructureKind::Hankel, 6, 8, Nonlinearity::Relu)
+            .with_seed(7);
+        let a = EmbeddingPlan::new(cfg.clone());
+        let b = EmbeddingPlan::new(cfg);
+        let v = vec![0.3, -0.2, 0.9, 0.0, 1.0, 0.5, -0.7, 0.2];
+        crate::util::assert_close(&a.embedding().embed(&v), &b.embedding().embed(&v), 1e-15);
+    }
+}

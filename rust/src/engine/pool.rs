@@ -1,0 +1,183 @@
+//! Worker pool: shard a batch across cores, std threads + channels only
+//! (the offline environment has no rayon/crossbeam).
+
+use super::{BatchBuf, BatchExecutor, EmbeddingPlan};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// One contiguous row range of a batch, dispatched to a worker.
+struct Job {
+    input: Arc<BatchBuf>,
+    start: usize,
+    end: usize,
+    reply: mpsc::Sender<Shard>,
+}
+
+/// A worker's finished rows (flat, `(end-start) × out_dim`).
+struct Shard {
+    start: usize,
+    feats: Vec<f64>,
+}
+
+/// Persistent embedding workers bound to one [`EmbeddingPlan`]. Each
+/// worker owns a [`BatchExecutor`] (plan shared, scratch private), so a
+/// pool embeds disjoint row ranges of the same batch fully in parallel
+/// with no locking on the hot path. Results are deterministic: sharding
+/// never changes the per-row output.
+pub struct WorkerPool {
+    txs: Vec<mpsc::Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    out_dim: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `workers ≥ 1` threads executing `plan`.
+    pub fn new(plan: Arc<EmbeddingPlan>, workers: usize) -> WorkerPool {
+        assert!(workers >= 1, "pool needs at least one worker");
+        let out_dim = plan.out_dim();
+        let mut txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let wplan = plan.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("strembed-engine-{w}"))
+                .spawn(move || {
+                    let mut exec = BatchExecutor::new(wplan);
+                    let d = exec.plan().out_dim();
+                    while let Ok(job) = rx.recv() {
+                        let rows = job.end - job.start;
+                        let mut feats = vec![0.0; rows * d];
+                        for (k, i) in (job.start..job.end).enumerate() {
+                            exec.embed_into(job.input.row(i), &mut feats[k * d..(k + 1) * d]);
+                        }
+                        // receiver may have gone away on pool teardown
+                        let _ = job.reply.send(Shard { start: job.start, feats });
+                    }
+                })
+                .expect("spawn engine worker");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        WorkerPool { txs, handles, out_dim }
+    }
+
+    /// A sensible worker count for this host (capped: embedding is
+    /// memory-bandwidth-bound well before high core counts pay off).
+    pub fn default_workers() -> usize {
+        std::thread::available_parallelism().map_or(1, |p| p.get()).min(8)
+    }
+
+    /// Number of workers.
+    pub fn workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Feature dimension of the executed plan.
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    /// Embed every row of `input`, sharding contiguous row ranges across
+    /// the workers and reassembling in order. The batch is behind an
+    /// [`Arc`] so shards borrow nothing across threads.
+    pub fn embed_batch(&self, input: &Arc<BatchBuf>) -> BatchBuf {
+        let rows = input.rows();
+        let mut out = BatchBuf::zeros(rows, self.out_dim);
+        if rows == 0 {
+            return out;
+        }
+        let shards = self.txs.len().min(rows);
+        let chunk = rows.div_ceil(shards);
+        let (rtx, rrx) = mpsc::channel::<Shard>();
+        let mut sent = 0usize;
+        for (w, start) in (0..rows).step_by(chunk).enumerate() {
+            let end = (start + chunk).min(rows);
+            self.txs[w % self.txs.len()]
+                .send(Job { input: input.clone(), start, end, reply: rtx.clone() })
+                .expect("engine worker alive");
+            sent += 1;
+        }
+        drop(rtx);
+        for _ in 0..sent {
+            let shard = rrx.recv().expect("engine worker reply");
+            let rows_in = shard.feats.len() / self.out_dim;
+            for k in 0..rows_in {
+                out.row_mut(shard.start + k)
+                    .copy_from_slice(&shard.feats[k * self.out_dim..(k + 1) * self.out_dim]);
+            }
+        }
+        out
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // closing the channels ends each worker's recv loop
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmodel::StructureKind;
+    use crate::rng::Rng;
+    use crate::transform::{EmbeddingConfig, Nonlinearity};
+
+    fn pool_and_plan(workers: usize) -> (WorkerPool, Arc<EmbeddingPlan>) {
+        let cfg = EmbeddingConfig::new(StructureKind::Circulant, 16, 32, Nonlinearity::CosSin)
+            .with_seed(9);
+        let plan = EmbeddingPlan::shared(cfg);
+        (WorkerPool::new(plan.clone(), workers), plan)
+    }
+
+    #[test]
+    fn pool_matches_single_executor() {
+        let (pool, plan) = pool_and_plan(3);
+        let mut rng = Rng::new(1);
+        let input = Arc::new(BatchBuf::from_rows(
+            &(0..17).map(|_| rng.gaussian_vec(32)).collect::<Vec<_>>(),
+        ));
+        let got = pool.embed_batch(&input);
+        let mut exec = BatchExecutor::new(plan);
+        let want = exec.embed_batch(&input);
+        assert_eq!(got.rows(), want.rows());
+        for i in 0..got.rows() {
+            crate::util::assert_close(got.row(i), want.row(i), 1e-15);
+        }
+    }
+
+    #[test]
+    fn pool_handles_tiny_and_empty_batches() {
+        let (pool, plan) = pool_and_plan(4);
+        let empty = Arc::new(BatchBuf::zeros(0, 32));
+        assert_eq!(pool.embed_batch(&empty).rows(), 0);
+        let one = Arc::new(BatchBuf::from_rows(&[vec![0.5; 32]]));
+        let got = pool.embed_batch(&one);
+        assert_eq!(got.rows(), 1);
+        crate::util::assert_close(got.row(0), &plan.embedding().embed(one.row(0)), 1e-15);
+    }
+
+    #[test]
+    fn pool_is_reusable_and_deterministic() {
+        let (pool, _plan) = pool_and_plan(2);
+        let mut rng = Rng::new(3);
+        let input = Arc::new(BatchBuf::from_rows(
+            &(0..8).map(|_| rng.gaussian_vec(32)).collect::<Vec<_>>(),
+        ));
+        let a = pool.embed_batch(&input);
+        let b = pool.embed_batch(&input);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let (pool, _plan) = pool_and_plan(2);
+        drop(pool); // must not hang
+    }
+}

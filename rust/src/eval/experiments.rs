@@ -8,12 +8,11 @@
 use super::harness::ExperimentResult;
 use crate::coherence::{chi_pair, coherence_graph, pmodel_stats};
 use crate::data;
+use crate::engine::{self, BatchBuf, BatchExecutor, EmbeddingPlan};
 use crate::exact;
 use crate::pmodel::StructureKind;
 use crate::rng::Rng;
-use crate::transform::{
-    estimate_lambda, EmbeddingConfig, Nonlinearity, StructuredEmbedding,
-};
+use crate::transform::{estimate_lambda, EmbeddingConfig, Nonlinearity};
 use crate::util::table::fnum;
 use crate::util::{Table, Timer};
 
@@ -152,10 +151,9 @@ fn pairwise_error(
 ) -> (f64, f64) {
     let mut errs = Vec::new();
     for seed in 0..seeds {
-        let emb = StructuredEmbedding::sample(
-            EmbeddingConfig::new(kind, m, n, f).with_seed(1000 + seed),
-        );
-        let feats: Vec<Vec<f64>> = points.iter().map(|p| emb.embed(p)).collect();
+        // batch path: one plan + one scratch amortized over the point set
+        let feats =
+            engine::embed_points(EmbeddingConfig::new(kind, m, n, f).with_seed(1000 + seed), points);
         for i in 0..points.len() {
             for j in (i + 1)..points.len() {
                 let est = estimate_lambda(f, &feats[i], &feats[j]);
@@ -189,11 +187,11 @@ pub fn unbiased() -> ExperimentResult {
         ] {
             let mut acc = 0.0;
             let seeds = 400u64;
+            let pair = [v1.clone(), v2.clone()];
             for s in 0..seeds {
-                let emb = StructuredEmbedding::sample(
-                    EmbeddingConfig::new(kind, m, n, f).with_seed(s),
-                );
-                acc += estimate_lambda(f, &emb.embed(v1), &emb.embed(v2));
+                let feats =
+                    engine::embed_points(EmbeddingConfig::new(kind, m, n, f).with_seed(s), &pair);
+                acc += estimate_lambda(f, &feats[0], &feats[1]);
             }
             let mean = acc / seeds as f64;
             let bias = (mean - exact_v).abs();
@@ -443,7 +441,47 @@ pub fn speed() -> ExperimentResult {
         "FFT path overtakes dense as n grows (observed: {crossover_seen}); storage is \
          linear vs quadratic at every size"
     ));
-    result("speed", vec![t], notes)
+
+    // engine amortization: per-vector reference path vs planned batch
+    let mut bt = Table::new(
+        "T5b — embedding µs/row: per-vector vs planned batch (circulant, cos-sin, batch=64)",
+        &["n=m", "per-vector µs", "planned batch µs", "speedup"],
+    );
+    for &n in &[256usize, 1024] {
+        let cfg = EmbeddingConfig::new(StructureKind::Circulant, n, n, Nonlinearity::CosSin)
+            .with_seed(1);
+        let plan = EmbeddingPlan::shared(cfg);
+        let mut rng = Rng::new(n as u64);
+        let rows: Vec<Vec<f64>> = (0..64).map(|_| rng.gaussian_vec(n)).collect();
+        let input = BatchBuf::from_rows(&rows);
+        let mut exec = BatchExecutor::new(plan.clone());
+        let iters = (500_000 / (64 * n)).max(2);
+        let timer = Timer::start();
+        for _ in 0..iters {
+            for r in &rows {
+                std::hint::black_box(plan.embedding().embed(std::hint::black_box(r)));
+            }
+        }
+        let per_vec = timer.secs() / (iters * 64) as f64 * 1e6;
+        let mut out = BatchBuf::zeros(64, plan.out_dim());
+        let timer = Timer::start();
+        for _ in 0..iters {
+            exec.embed_batch_into(std::hint::black_box(&input), &mut out);
+        }
+        let batched = timer.secs() / (iters * 64) as f64 * 1e6;
+        bt.row(vec![
+            n.to_string(),
+            fnum(per_vec),
+            fnum(batched),
+            fnum(per_vec / batched),
+        ]);
+    }
+    notes.push(
+        "planned batch execution amortizes FFT plans, spectra and scratch across the \
+         batch — the engine layer the coordinator serves through"
+            .into(),
+    );
+    result("speed", vec![t, bt], notes)
 }
 
 #[cfg(test)]

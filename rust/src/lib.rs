@@ -17,16 +17,27 @@
 //! - coherence graphs + their combinatorial statistics ([`coherence`]),
 //! - the full embedding pipeline `x → D₀ → H → D₁ → A → f` ([`transform`]),
 //! - exact kernels for ground truth ([`exact`]),
+//! - a planned batch execution engine — amortized FFT plans/spectra,
+//!   zero-allocation batch executors in SoA layout, and a worker pool
+//!   that shards batches across cores ([`engine`]),
 //! - an experiment/eval harness regenerating the paper's figures and
-//!   validating its theorems ([`eval`]),
-//! - a PJRT runtime that loads JAX/Pallas AOT artifacts ([`runtime`]),
+//!   validating its theorems, with point sets embedded through the
+//!   engine ([`eval`]),
+//! - a PJRT runtime that loads JAX/Pallas AOT artifacts ([`runtime`],
+//!   behind the `pjrt` feature),
 //! - an embedding-serving coordinator: router, dynamic batcher, metrics
-//!   ([`coordinator`]).
+//!   ([`coordinator`]) — native variants execute through the engine.
+//!
+//! Layering: `dsp`/`rng` → `pmodel` → `transform` → **`engine`** →
+//! `coordinator`/`eval`. The engine is the only layer the serving stack
+//! calls for native compute; per-vector `StructuredEmbedding::embed`
+//! remains the reference path and test oracle.
 pub mod cli;
 pub mod coherence;
 pub mod coordinator;
 pub mod data;
 pub mod dsp;
+pub mod engine;
 pub mod eval;
 pub mod exact;
 pub mod pmodel;

@@ -8,7 +8,7 @@
 //! `n1 − n2 ≡ i1 − i2 (mod n)`, else 0 — every coherence graph is a union
 //! of vertex-disjoint cycles, so `χ[P] ≤ 3` (Figure 1).
 
-use super::PModel;
+use super::{grown, MatvecScratch, PModel};
 use crate::dsp::fft::RealFft;
 use crate::dsp::Complex;
 use crate::rng::Rng;
@@ -99,6 +99,28 @@ impl PModel for Circulant {
                 y
             }
             None => self.matvec_naive(x),
+        }
+    }
+
+    fn matvec_into(&self, x: &[f64], y: &mut [f64], scratch: &mut MatvecScratch) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.m);
+        match &self.plan {
+            Some((fft, gspec)) => {
+                let spec = grown(&mut scratch.c1, fft.spectrum_len());
+                let half = grown(&mut scratch.c2, fft.scratch_len());
+                fft.forward_into(x, spec, half);
+                for (v, w) in spec.iter_mut().zip(gspec) {
+                    *v = v.mul(*w);
+                }
+                let full = grown(&mut scratch.r2, self.n);
+                fft.inverse_into(spec, full, half);
+                y.copy_from_slice(&full[..self.m]);
+            }
+            None => {
+                let out = self.matvec_naive(x);
+                y.copy_from_slice(&out);
+            }
         }
     }
 

@@ -5,7 +5,7 @@
 //! any (i1,n1) ≠ (i2,n2), so χ[P] = 0, μ[P] = 0, μ̃[P] = 0 — the strongest
 //! concentration, at quadratic time/space cost.
 
-use super::PModel;
+use super::{MatvecScratch, PModel};
 use crate::rng::Rng;
 
 /// Unstructured Gaussian matrix (row-major storage).
@@ -58,17 +58,18 @@ impl PModel for DenseGaussian {
     }
 
     fn matvec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.n);
         let mut y = vec![0.0; self.m];
-        for i in 0..self.m {
-            let row = &self.a[i * self.n..(i + 1) * self.n];
-            let mut acc = 0.0;
-            for (r, v) in row.iter().zip(x) {
-                acc += r * v;
-            }
-            y[i] = acc;
-        }
+        self.matvec_into(x, &mut y, &mut MatvecScratch::new());
         y
+    }
+
+    fn matvec_into(&self, x: &[f64], y: &mut [f64], _scratch: &mut MatvecScratch) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.m);
+        for (i, yi) in y.iter_mut().enumerate() {
+            let row = &self.a[i * self.n..(i + 1) * self.n];
+            *yi = row.iter().zip(x).map(|(r, v)| r * v).sum();
+        }
     }
 
     fn matvec_flops(&self) -> usize {

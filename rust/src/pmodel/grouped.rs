@@ -13,7 +13,7 @@
 //! the mechanism by which a larger budget buys better concentration
 //! (paper §2.2.4 discussion).
 
-use super::{Circulant, PModel};
+use super::{Circulant, MatvecScratch, PModel};
 use crate::rng::Rng;
 
 /// Block-circulant matrix with independent per-group budgets.
@@ -87,6 +87,17 @@ impl PModel for GroupedCirculant {
             y.extend(block.matvec(x));
         }
         y
+    }
+
+    fn matvec_into(&self, x: &[f64], y: &mut [f64], scratch: &mut MatvecScratch) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.m);
+        let mut off = 0;
+        for block in &self.blocks {
+            let rows = block.m();
+            block.matvec_into(x, &mut y[off..off + rows], scratch);
+            off += rows;
+        }
     }
 
     fn matvec_flops(&self) -> usize {

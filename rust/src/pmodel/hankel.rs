@@ -6,7 +6,7 @@
 //!
 //! Fast matvec: `y[i] = Σ_j g[i+j]·x[j] = linconv(reverse(x), g)[n−1+i]`.
 
-use super::{PModel, Toeplitz};
+use super::{grown, MatvecScratch, PModel, Toeplitz};
 use crate::rng::Rng;
 
 /// Hankel structured matrix over budget g ∈ R^{n+m-1}.
@@ -80,6 +80,21 @@ impl PModel for Hankel {
         // H·x = T·reverse(x) with T the column-reversed Toeplitz
         let xr: Vec<f64> = x.iter().rev().copied().collect();
         self.toep.matvec(&xr)
+    }
+
+    fn matvec_into(&self, x: &[f64], y: &mut [f64], scratch: &mut MatvecScratch) {
+        assert_eq!(x.len(), self.n);
+        // Stage the reversed input in r3, moved out so the Toeplitz plan
+        // is free to use the other scratch buffers.
+        let mut xr = std::mem::take(&mut scratch.r3);
+        {
+            let rev = grown(&mut xr, self.n);
+            for (r, &v) in rev.iter_mut().zip(x.iter().rev()) {
+                *r = v;
+            }
+        }
+        self.toep.matvec_into(&xr[..self.n], y, scratch);
+        scratch.r3 = xr;
     }
 }
 

@@ -12,7 +12,7 @@
 //!
 //! Matvec: r circulant+negacyclic convolutions, O(r·n log n).
 
-use super::PModel;
+use super::{grown, MatvecScratch, PModel};
 use crate::dsp::{circular_convolve, negacyclic_convolve, ConvPlan, NegacyclicPlan};
 use crate::rng::Rng;
 
@@ -150,6 +150,40 @@ impl PModel for LowDisplacementRank {
         }
         y.truncate(self.m);
         y
+    }
+
+    fn matvec_into(&self, x: &[f64], y: &mut [f64], scratch: &mut MatvecScratch) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.m);
+        match &self.plans {
+            Some(plans) => {
+                y.fill(0.0);
+                // w/yb are moved out of the scratch so the per-plan
+                // `apply_into` calls can borrow the complex buffers.
+                let mut w = std::mem::take(&mut scratch.r1);
+                grown(&mut w, self.n);
+                let mut yb = std::mem::take(&mut scratch.r2);
+                grown(&mut yb, self.n);
+                for (neg, conv) in plans {
+                    neg.apply_into(x, &mut w[..self.n], &mut scratch.c1);
+                    conv.apply_into(
+                        &w[..self.n],
+                        &mut yb[..self.n],
+                        &mut scratch.c1,
+                        &mut scratch.c2,
+                    );
+                    for (yi, v) in y.iter_mut().zip(&yb) {
+                        *yi += *v;
+                    }
+                }
+                scratch.r1 = w;
+                scratch.r2 = yb;
+            }
+            None => {
+                let out = self.matvec(x);
+                y.copy_from_slice(&out);
+            }
+        }
     }
 
     fn matvec_flops(&self) -> usize {

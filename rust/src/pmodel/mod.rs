@@ -16,6 +16,12 @@
 //! Every family provides both a *naive* row materialization (test oracle,
 //! storage baseline) and a *fast* FFT-based matvec — the paper's claimed
 //! `O(n log n)` speedup (Remarks in §2.3).
+//!
+//! For the serving/batch hot path every family additionally implements
+//! [`PModel::matvec_into`], a *planned* matvec that writes into a
+//! caller-owned output row and draws all temporaries from a reusable
+//! [`MatvecScratch`] — zero heap allocation per call once the scratch
+//! has warmed up. The [`crate::engine`] layer builds on this.
 
 mod circulant;
 mod dense;
@@ -35,7 +41,42 @@ pub use skew_circulant::SkewCirculant;
 pub use stacked::Stacked;
 pub use toeplitz::Toeplitz;
 
+use crate::dsp::Complex;
 use crate::rng::Rng;
+
+/// Reusable work buffers for [`PModel::matvec_into`]. One scratch serves
+/// any model (buffers grow to the high-water mark on first use and are
+/// reused afterwards), so a batch executor allocates exactly once no
+/// matter how many vectors it embeds.
+#[derive(Debug, Default)]
+pub struct MatvecScratch {
+    /// complex buffer: spectra / twisted signals
+    pub c1: Vec<Complex>,
+    /// complex buffer: packed-real-FFT scratch
+    pub c2: Vec<Complex>,
+    /// real buffer: padded inputs / per-block intermediates
+    pub r1: Vec<f64>,
+    /// real buffer: full-length inverse-transform outputs
+    pub r2: Vec<f64>,
+    /// real buffer: adapter staging (e.g. Hankel's reversed input)
+    pub r3: Vec<f64>,
+}
+
+impl MatvecScratch {
+    /// Empty scratch; buffers grow on demand.
+    pub fn new() -> MatvecScratch {
+        MatvecScratch::default()
+    }
+}
+
+/// Grow `buf` to at least `len` and return the leading `len` slice —
+/// the grow-once / borrow-many idiom used by the planned matvec paths.
+pub fn grown<T: Clone + Default>(buf: &mut Vec<T>, len: usize) -> &mut [T] {
+    if buf.len() < len {
+        buf.resize(len, T::default());
+    }
+    &mut buf[..len]
+}
 
 /// A structured Gaussian matrix produced by the P-model mechanism.
 pub trait PModel: Send + Sync {
@@ -57,6 +98,17 @@ pub trait PModel: Send + Sync {
 
     /// Fast structured matvec `y = A·x` (length-m output).
     fn matvec(&self, x: &[f64]) -> Vec<f64>;
+
+    /// Planned matvec into a caller-owned output row (`y.len() == m`),
+    /// drawing all temporaries from `scratch`. Families with an FFT plan
+    /// override this with a zero-allocation path; the default falls back
+    /// to [`PModel::matvec`] (correct, but allocates).
+    fn matvec_into(&self, x: &[f64], y: &mut [f64], scratch: &mut MatvecScratch) {
+        let _ = scratch;
+        assert_eq!(y.len(), self.m());
+        let out = self.matvec(x);
+        y.copy_from_slice(&out);
+    }
 
     /// Number of f64s that must be *stored* to represent A (the paper's
     /// space-complexity claim; dense needs m·n, structured need O(t)).
@@ -217,14 +269,22 @@ impl StructureKind {
 pub(crate) mod test_support {
     use super::*;
 
-    /// Check fast matvec against naive materialized matvec.
+    /// Check fast matvec against naive materialized matvec, and the
+    /// planned [`PModel::matvec_into`] path against both — including
+    /// scratch reuse across calls.
     pub fn check_matvec(model: &dyn PModel, seed: u64) {
         let mut rng = Rng::new(seed);
-        let x = rng.gaussian_vec(model.n());
-        let fast = model.matvec(&x);
-        let naive = model.matvec_naive(&x);
-        assert_eq!(fast.len(), model.m());
-        crate::util::assert_close(&fast, &naive, 1e-8);
+        let mut scratch = MatvecScratch::new();
+        let mut y = vec![0.0; model.m()];
+        for _round in 0..2 {
+            let x = rng.gaussian_vec(model.n());
+            let fast = model.matvec(&x);
+            let naive = model.matvec_naive(&x);
+            assert_eq!(fast.len(), model.m());
+            crate::util::assert_close(&fast, &naive, 1e-8);
+            model.matvec_into(&x, &mut y, &mut scratch);
+            crate::util::assert_close(&y, &fast, 1e-12);
+        }
     }
 
     /// Check that every matrix entry is ~N(0,1) distributed across seeds

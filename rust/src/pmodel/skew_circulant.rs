@@ -5,7 +5,7 @@
 //! t = n. Covered by Theorems 11/12 alongside circulant/Toeplitz/Hankel.
 //! Fast matvec is a negacyclic convolution (ω-twisted FFT).
 
-use super::PModel;
+use super::{MatvecScratch, PModel};
 use crate::dsp::{negacyclic_convolve, NegacyclicPlan};
 use crate::rng::Rng;
 
@@ -112,6 +112,19 @@ impl PModel for SkewCirculant {
         };
         y.truncate(self.m);
         y
+    }
+
+    fn matvec_into(&self, x: &[f64], y: &mut [f64], scratch: &mut MatvecScratch) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.m);
+        match &self.plan {
+            // apply_into writes only the first y.len() untwisted outputs
+            Some(plan) => plan.apply_into(x, y, &mut scratch.c1),
+            None => {
+                let out = self.matvec(x);
+                y.copy_from_slice(&out);
+            }
+        }
     }
 }
 

@@ -7,7 +7,7 @@
 //! blocks means σ vanishes between blocks, so all coherence statistics
 //! are inherited from the base family.
 
-use super::PModel;
+use super::{MatvecScratch, PModel};
 use crate::rng::Rng;
 
 /// A stack of independent structured blocks over the same input dim.
@@ -86,6 +86,16 @@ impl PModel for Stacked {
             y.extend(b.matvec(x));
         }
         y
+    }
+
+    fn matvec_into(&self, x: &[f64], y: &mut [f64], scratch: &mut MatvecScratch) {
+        assert_eq!(y.len(), self.m);
+        let mut off = 0;
+        for block in &self.blocks {
+            let rows = block.m();
+            block.matvec_into(x, &mut y[off..off + rows], scratch);
+            off += rows;
+        }
     }
 
     fn matvec_flops(&self) -> usize {

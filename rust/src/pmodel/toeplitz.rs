@@ -9,7 +9,7 @@
 //! Fast matvec embeds A into an N-point circulant (N = next_pow2(n+m−1))
 //! and reuses the FFT correlation path.
 
-use super::PModel;
+use super::{grown, MatvecScratch, PModel};
 use crate::dsp::fft::RealFft;
 use crate::dsp::Complex;
 use crate::rng::Rng;
@@ -103,6 +103,24 @@ impl PModel for Toeplitz {
         let mut y = fft.inverse(&xs);
         y.truncate(self.m);
         y
+    }
+
+    fn matvec_into(&self, x: &[f64], y: &mut [f64], scratch: &mut MatvecScratch) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.m);
+        let (fft, cspec) = &self.plan;
+        let xp = grown(&mut scratch.r1, self.embed_n);
+        xp[..self.n].copy_from_slice(x);
+        xp[self.n..].fill(0.0);
+        let spec = grown(&mut scratch.c1, fft.spectrum_len());
+        let half = grown(&mut scratch.c2, fft.scratch_len());
+        fft.forward_into(xp, spec, half);
+        for (v, w) in spec.iter_mut().zip(cspec) {
+            *v = v.mul(*w);
+        }
+        let full = grown(&mut scratch.r2, self.embed_n);
+        fft.inverse_into(spec, full, half);
+        y.copy_from_slice(&full[..self.m]);
     }
 
     fn matvec_flops(&self) -> usize {

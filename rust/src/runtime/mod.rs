@@ -9,6 +9,12 @@
 //! PJRT handles are not `Send` (raw pointers), so each coordinator
 //! worker thread builds its own [`Engine`]; the [`Manifest`] metadata is
 //! plain data and freely shared.
+//!
+//! The XLA/PJRT linkage lives behind the `pjrt` cargo feature: the
+//! vendored `xla` crate closure is not part of this source tree, so the
+//! default build ships a stub [`Engine`] that reports the missing
+//! capability at `load` time. Manifest parsing and all metadata plumbing
+//! are feature-independent.
 
 mod manifest;
 
@@ -18,12 +24,14 @@ use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// A compiled embedding executable bound to a PJRT client.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     exe: xla::PjRtLoadedExecutable,
     meta: VariantMeta,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Compile the artifact for `meta` found in `dir` on a fresh CPU
     /// PJRT client.
@@ -85,6 +93,42 @@ impl Engine {
     }
 }
 
+/// Stub engine for builds without the `pjrt` feature: all metadata flows
+/// still work (manifests, specs, CLI listing); only artifact *execution*
+/// is unavailable and reports so at construction time.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    meta: VariantMeta,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Always fails: PJRT execution requires the `pjrt` feature and the
+    /// vendored `xla` crate closure.
+    pub fn load(_dir: &Path, meta: VariantMeta) -> Result<Engine> {
+        Err(anyhow!(
+            "strembed was built without the `pjrt` feature; cannot execute AOT artifact '{}' \
+             (use a native backend, or rebuild with --features pjrt and the xla crate vendored)",
+            meta.name
+        ))
+    }
+
+    /// Variant metadata.
+    pub fn meta(&self) -> &VariantMeta {
+        &self.meta
+    }
+
+    /// Platform placeholder.
+    pub fn platform(&self) -> String {
+        "pjrt-disabled".to_string()
+    }
+
+    /// Unreachable in practice ([`Engine::load`] never succeeds).
+    pub fn embed_batch(&self, _rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        Err(anyhow!("pjrt feature disabled"))
+    }
+}
+
 /// Locate the artifacts directory: `$STREMBED_ARTIFACTS` or `artifacts/`
 /// relative to the workspace root.
 pub fn default_artifact_dir() -> PathBuf {
@@ -121,6 +165,24 @@ mod tests {
         assert!(m.get("embed_circulant_cossin_n128_m64_b16").is_some());
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_engine_reports_missing_feature() {
+        let meta = VariantMeta {
+            name: "test".into(),
+            file: "test.hlo.txt".into(),
+            structure: "circulant".into(),
+            f: "identity".into(),
+            n: 8,
+            m: 4,
+            batch: 2,
+            out_dim: 4,
+        };
+        let err = Engine::load(Path::new("/nonexistent"), meta).err().unwrap();
+        assert!(format!("{err}").contains("pjrt"));
+    }
+
+    #[cfg(feature = "pjrt")]
     #[test]
     fn engine_runs_circulant_identity() {
         if !artifacts_ready() {
@@ -148,6 +210,7 @@ mod tests {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn engine_rejects_bad_shapes() {
         if !artifacts_ready() {

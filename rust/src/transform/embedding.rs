@@ -74,6 +74,11 @@ impl StructuredEmbedding {
         self.model.as_ref()
     }
 
+    /// The `D₁HD₀` preprocessing operator, if enabled.
+    pub fn preprocessor(&self) -> Option<&Preprocessor> {
+        self.pre.as_ref()
+    }
+
     /// Feature dimension of the output.
     pub fn out_dim(&self) -> usize {
         self.config.f.out_dim(self.config.m)

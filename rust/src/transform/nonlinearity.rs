@@ -85,14 +85,28 @@ impl Nonlinearity {
     /// Apply to a projection vector z (length m), producing features of
     /// length `out_dim(m)`. No scaling: estimators divide by m.
     pub fn apply(&self, z: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.out_dim(z.len())];
+        self.apply_into(z, &mut out);
+        out
+    }
+
+    /// Allocation-free variant writing features into `out`
+    /// (length `out_dim(z.len())`) — the batch-engine hot path.
+    pub fn apply_into(&self, z: &[f64], out: &mut [f64]) {
+        assert_eq!(out.len(), self.out_dim(z.len()));
         match self {
             Nonlinearity::CosSin => {
-                let mut out = Vec::with_capacity(2 * z.len());
-                out.extend(z.iter().map(|x| x.cos()));
-                out.extend(z.iter().map(|x| x.sin()));
-                out
+                let (cos_half, sin_half) = out.split_at_mut(z.len());
+                for ((c, s), &x) in cos_half.iter_mut().zip(sin_half.iter_mut()).zip(z) {
+                    *c = x.cos();
+                    *s = x.sin();
+                }
             }
-            _ => z.iter().map(|&x| self.scalar(x)).collect(),
+            _ => {
+                for (o, &x) in out.iter_mut().zip(z) {
+                    *o = self.scalar(x);
+                }
+            }
         }
     }
 

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Standard pre-PR gate for this repo (documented in ROADMAP.md):
+# tier-1 build + tests, then formatting. Run from anywhere.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release"
+cargo build --release
+
+echo "== tier-1: cargo test -q"
+cargo test -q
+
+echo "== cargo fmt --check"
+cargo fmt --check
+
+echo "verify: OK"
