@@ -1,16 +1,19 @@
-//! Planned batch engine vs per-vector embedding throughput.
+//! Planned batch engine vs per-vector embedding throughput, and the
+//! native f32 pipeline vs the f64 oracle pipeline.
 //!
-//! The acceptance target for the engine layer: planned batch execution
-//! (amortized FFT plans/spectra + zero-alloc scratch, SoA buffers) must
-//! clearly beat the per-vector reference path — ≥ 2× on circulant
-//! m=n=1024, batch=64 — and the worker pool should add on top of that
-//! on multi-core hosts.
+//! Acceptance targets for the engine layer:
+//! - planned batch execution (amortized FFT plans/spectra + zero-alloc
+//!   scratch, SoA buffers) must clearly beat the per-vector reference
+//!   path — ≥ 2× on circulant m=n=1024, batch=64;
+//! - the native f32 pipeline must report ≥ 1.5× the f64 planned-batch
+//!   throughput for circulant and toeplitz at n=1024 (memory-bandwidth
+//!   argument: half the bytes per element, twice the SIMD lanes).
 
 mod common;
 
 use common::{bench, report};
 use std::sync::Arc;
-use strembed::engine::{BatchBuf, BatchExecutor, EmbeddingPlan, WorkerPool};
+use strembed::engine::{default_workers, BatchBuf, BatchExecutor, EmbeddingPlan, WorkerPool};
 use strembed::pmodel::StructureKind;
 use strembed::rng::Rng;
 use strembed::transform::{EmbeddingConfig, Nonlinearity};
@@ -60,6 +63,53 @@ fn main() {
         println!("{label}: planned batch is {s:.2}x the per-vector path");
     }
 
+    // native f32 pipeline vs f64 oracle pipeline, planned batch path
+    let mut prec_results = Vec::new();
+    let mut prec_speedups = Vec::new();
+    for kind in [
+        StructureKind::Circulant,
+        StructureKind::SkewCirculant,
+        StructureKind::Toeplitz,
+        StructureKind::Hankel,
+        StructureKind::Ldr(2),
+    ] {
+        let cfg = EmbeddingConfig::new(kind, m, n, Nonlinearity::CosSin).with_seed(3);
+        let plan = EmbeddingPlan::shared(cfg);
+        let mut rng = Rng::new(7);
+        let rows: Vec<Vec<f64>> = (0..batch).map(|_| rng.gaussian_vec(n)).collect();
+        let rows32: Vec<Vec<f32>> =
+            rows.iter().map(|r| r.iter().map(|&v| v as f32).collect()).collect();
+        let in64 = BatchBuf::from_rows(&rows);
+        let in32 = BatchBuf::from_rows(&rows32);
+        let mut ex64 = BatchExecutor::<f64>::new(plan.clone());
+        let mut ex32 = BatchExecutor::<f32>::new(plan.clone());
+        let mut out64 = BatchBuf::zeros(batch, plan.out_dim());
+        let mut out32 = BatchBuf::<f32>::zeros(batch, plan.out_dim());
+        ex64.embed_batch_into(&in64, &mut out64);
+        ex32.embed_batch_into(&in32, &mut out32);
+
+        let b64 = bench(&format!("{} f64 planned x{batch}", kind.label()), || {
+            ex64.embed_batch_into(std::hint::black_box(&in64), &mut out64);
+            std::hint::black_box(&out64);
+        });
+        let b32 = bench(&format!("{} f32 planned x{batch}", kind.label()), || {
+            ex32.embed_batch_into(std::hint::black_box(&in32), &mut out32);
+            std::hint::black_box(&out32);
+        });
+        let speedup = b64.ns_per_op / b32.ns_per_op;
+        prec_speedups.push((kind.label(), speedup));
+        prec_results.push(b64);
+        prec_results.push(b32);
+    }
+    report(
+        &format!("engine precision: f32 vs f64 planned batch (n={n}, m={m}, batch={batch})"),
+        &prec_results,
+    );
+    println!();
+    for (label, s) in &prec_speedups {
+        println!("{label}: f32 planned batch is {s:.2}x the f64 path");
+    }
+
     // worker pool scaling on the acceptance config
     let cfg =
         EmbeddingConfig::new(StructureKind::Circulant, m, n, Nonlinearity::CosSin).with_seed(3);
@@ -68,7 +118,7 @@ fn main() {
     let rows: Vec<Vec<f64>> = (0..batch).map(|_| rng.gaussian_vec(n)).collect();
     let input = Arc::new(BatchBuf::from_rows(&rows));
     let mut pool_results = Vec::new();
-    for workers in [1usize, 2, 4, WorkerPool::default_workers()] {
+    for workers in [1usize, 2, 4, default_workers()] {
         let pool = WorkerPool::new(plan.clone(), workers);
         pool.embed_batch(&input); // warmup
         pool_results.push(bench(&format!("pool workers={workers} x{batch}"), || {
@@ -76,6 +126,21 @@ fn main() {
         }));
     }
     report(&format!("engine worker pool (circulant n={n}, batch={batch})"), &pool_results);
+
+    // f32 pool at the same shape: bandwidth halving should compound
+    // with multi-core sharding
+    let rows32: Vec<Vec<f32>> =
+        rows.iter().map(|r| r.iter().map(|&v| v as f32).collect()).collect();
+    let input32 = Arc::new(BatchBuf::from_rows(&rows32));
+    let mut pool32_results = Vec::new();
+    for workers in [1usize, default_workers()] {
+        let pool = WorkerPool::<f32>::new(plan.clone(), workers);
+        pool.embed_batch(&input32); // warmup
+        pool32_results.push(bench(&format!("f32 pool workers={workers} x{batch}"), || {
+            std::hint::black_box(pool.embed_batch(std::hint::black_box(&input32)));
+        }));
+    }
+    report(&format!("engine f32 worker pool (circulant n={n}, batch={batch})"), &pool32_results);
 
     // amortization across sizes: where does planning start to pay?
     let mut size_results = Vec::new();

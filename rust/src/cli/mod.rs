@@ -13,7 +13,7 @@ mod args;
 pub use args::Args;
 
 use crate::coherence::{coherence_graph, pmodel_stats};
-use crate::coordinator::{serve_tcp, BackendSpec, Coordinator, CoordinatorConfig};
+use crate::coordinator::{serve_tcp, BackendSpec, Coordinator, CoordinatorConfig, Precision};
 use crate::eval::{run_experiment, EXPERIMENTS};
 use crate::pmodel::StructureKind;
 use crate::rng::Rng;
@@ -54,7 +54,9 @@ fn usage() -> String {
          \x20 eval       --exp ID|all [--out DIR]                      run paper experiments\n\
          \x20 embed      --structure S --f F --m M --n N --input CSV   one-off embedding\n\
          \x20 list       [--artifacts DIR]                             list AOT artifact variants\n\
-         \x20 serve      [--addr A] [--native] [--artifacts DIR]       TCP embedding service\n\n\
+         \x20 serve      [--addr A] [--native] [--precision f32|f64]   TCP embedding service\n\
+         \x20            [--artifacts DIR]                             (--native defaults to f32;\n\
+         \x20                                                          library builders default to f64)\n\n\
          experiments:\n",
     );
     for e in EXPERIMENTS {
@@ -153,6 +155,10 @@ fn cmd_serve(args: &Args) -> Result<String, String> {
     let addr = args.get("addr", "127.0.0.1:7878").to_string();
     let mut specs: Vec<(String, BackendSpec)> = Vec::new();
     if args.flag("native") {
+        // native f32 is the serving default: the wire format is f32, so
+        // the end-to-end single-precision pipeline avoids all conversions
+        let precision =
+            Precision::parse(args.get("precision", "f32")).ok_or("bad --precision")?;
         // a representative native variant set
         for (name, structure, f) in [
             ("circulant-sign", "circulant", "sign"),
@@ -166,7 +172,8 @@ fn cmd_serve(args: &Args) -> Result<String, String> {
                 args.get_usize("n", 128)?,
                 args.get_u64("seed", 2016)?,
             )
-            .map_err(|e| format!("{e:#}"))?;
+            .map_err(|e| format!("{e:#}"))?
+            .with_precision(precision);
             specs.push((name.to_string(), spec));
         }
     } else {

@@ -24,11 +24,11 @@ use crate::pmodel::PModel;
 /// The three P-model statistics of Definitions 3–4.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PModelStats {
-    /// χ[P] — max chromatic number over all coherence graphs.
+    /// `χ[P]` — max chromatic number over all coherence graphs.
     pub chi: usize,
-    /// μ[P] — coherence.
+    /// `μ[P]` — coherence.
     pub mu: f64,
-    /// μ̃[P] — unicoherence.
+    /// `μ̃[P]` — unicoherence.
     pub mu_tilde: f64,
 }
 
@@ -58,7 +58,7 @@ pub fn chi_pair(model: &dyn PModel, i1: usize, i2: usize) -> usize {
     chromatic_number(&coherence_graph(model, i1, i2))
 }
 
-/// Compute χ[P], μ[P], μ̃[P] for a model by exhaustive enumeration —
+/// Compute `χ[P]`, `μ[P]`, `μ̃[P]` for a model by exhaustive enumeration —
 /// O(m²·n²) σ-queries, intended for the moderate sizes used in the
 /// paper's combinatorial analysis.
 pub fn pmodel_stats(model: &dyn PModel) -> PModelStats {

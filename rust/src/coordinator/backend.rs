@@ -6,11 +6,26 @@
 //! The native path executes through [`crate::engine`]: one
 //! [`EmbeddingPlan`] per variant, a worker-private [`BatchExecutor`]
 //! for small batches, and a [`WorkerPool`] that shards large batches
-//! across cores. The f32 wire rows are widened into the engine's
-//! [`BatchBuf`] exactly once per batch (the seed allocated a fresh
-//! `Vec<f64>` per row).
+//! across cores.
+//!
+//! # Precision knob
+//!
+//! Each native variant carries a [`Precision`]:
+//!
+//! - [`Precision::F32`] (serving): the f32 wire rows are packed into a
+//!   `BatchBuf<f32>` *without any conversion* and the whole pipeline —
+//!   preprocess, planned matvec, nonlinearity — runs natively in single
+//!   precision. Half the memory traffic of the f64 path on a
+//!   bandwidth-bound workload; outputs agree with the oracle to ~1e-4
+//!   relative error.
+//! - [`Precision::F64`] (oracle, the default): rows are widened once
+//!   per batch into a `BatchBuf<f64>`, executed in double precision,
+//!   and narrowed once on the way out — bit-identical to the reference
+//!   `StructuredEmbedding::embed` path.
 
-use crate::engine::{BatchBuf, BatchExecutor, EmbeddingPlan, WorkerPool};
+use crate::engine::{
+    default_workers, BatchBuf, BatchExecutor, EmbeddingPlan, EngineScalar, Precision, WorkerPool,
+};
 use crate::pmodel::StructureKind;
 use crate::runtime::{Engine, VariantMeta};
 use crate::transform::{EmbeddingConfig, Nonlinearity};
@@ -37,6 +52,8 @@ pub enum BackendSpec {
     Native {
         /// embedding configuration (structure, m, n, f, seed)
         config: EmbeddingConfig,
+        /// pipeline precision (f32 serving / f64 oracle)
+        precision: Precision,
     },
 }
 
@@ -45,7 +62,7 @@ impl BackendSpec {
     pub fn n(&self) -> usize {
         match self {
             BackendSpec::Pjrt { meta, .. } => meta.n,
-            BackendSpec::Native { config } => config.n,
+            BackendSpec::Native { config, .. } => config.n,
         }
     }
 
@@ -53,7 +70,7 @@ impl BackendSpec {
     pub fn out_dim(&self) -> usize {
         match self {
             BackendSpec::Pjrt { meta, .. } => meta.out_dim,
-            BackendSpec::Native { config } => config.f.out_dim(config.m),
+            BackendSpec::Native { config, .. } => config.f.out_dim(config.m),
         }
     }
 
@@ -72,21 +89,29 @@ impl BackendSpec {
             BackendSpec::Pjrt { dir, meta } => {
                 Ok(Backend::Pjrt(Engine::load(dir, meta.clone())?))
             }
-            BackendSpec::Native { config } => {
+            BackendSpec::Native { config, precision } => {
                 let plan = EmbeddingPlan::shared(config.clone());
                 // the shard pool is spawned lazily on the first large
                 // batch: variants that only ever see small batches (or a
                 // single-core host) never hold idle threads
-                Ok(Backend::Native(NativeBackend {
-                    exec: BatchExecutor::new(plan.clone()),
-                    plan,
-                    pool: None,
-                }))
+                let pipe = match precision {
+                    Precision::F64 => NativePipe::F64 {
+                        exec: BatchExecutor::new(plan.clone()),
+                        pool: None,
+                    },
+                    Precision::F32 => NativePipe::F32 {
+                        exec: BatchExecutor::new(plan.clone()),
+                        pool: None,
+                    },
+                };
+                Ok(Backend::Native(NativeBackend { plan, pipe }))
             }
         }
     }
 
     /// A native spec from manifest-style names (used by the CLI).
+    /// Defaults to the f64 oracle precision; chain
+    /// [`BackendSpec::with_precision`] to opt into f32 serving.
     pub fn native(
         structure: &str,
         f: &str,
@@ -97,17 +122,73 @@ impl BackendSpec {
         let kind = StructureKind::parse(structure)
             .ok_or_else(|| anyhow!("unknown structure '{structure}'"))?;
         let nl = Nonlinearity::parse(f).ok_or_else(|| anyhow!("unknown nonlinearity '{f}'"))?;
-        Ok(BackendSpec::Native { config: EmbeddingConfig::new(kind, m, n, nl).with_seed(seed) })
+        Ok(BackendSpec::Native {
+            config: EmbeddingConfig::new(kind, m, n, nl).with_seed(seed),
+            precision: Precision::default(),
+        })
+    }
+
+    /// Builder: set the pipeline precision (no-op for PJRT specs, whose
+    /// precision is baked into the artifact).
+    pub fn with_precision(mut self, precision: Precision) -> BackendSpec {
+        if let BackendSpec::Native { precision: p, .. } = &mut self {
+            *p = precision;
+        }
+        self
+    }
+
+    /// The pipeline precision (native variants only).
+    pub fn precision(&self) -> Option<Precision> {
+        match self {
+            BackendSpec::Pjrt { .. } => None,
+            BackendSpec::Native { precision, .. } => Some(*precision),
+        }
+    }
+}
+
+/// The precision-monomorphized executor + shard pool of one native
+/// variant. Exactly one arm exists per backend; the f32 arm never
+/// touches an f64 buffer.
+enum NativePipe {
+    /// f64 oracle pipeline (wire rows widened/narrowed once per batch)
+    F64 {
+        exec: BatchExecutor<f64>,
+        pool: Option<WorkerPool<f64>>,
+    },
+    /// native f32 pipeline (no conversions anywhere)
+    F32 {
+        exec: BatchExecutor<f32>,
+        pool: Option<WorkerPool<f32>>,
+    },
+}
+
+/// Spawn the shard pool once a batch is big enough to amortize it.
+fn spawn_pool_if_worthwhile<S: EngineScalar>(
+    pool: &mut Option<WorkerPool<S>>,
+    plan: &Arc<EmbeddingPlan>,
+    rows: usize,
+) {
+    if pool.is_none() && rows >= POOL_MIN_BATCH && default_workers() > 1 {
+        *pool = Some(WorkerPool::new(plan.clone(), default_workers()));
+    }
+}
+
+/// Run one batch through an executor or, when large enough, the pool.
+fn run_batch<S: EngineScalar>(
+    exec: &mut BatchExecutor<S>,
+    pool: &Option<WorkerPool<S>>,
+    input: BatchBuf<S>,
+) -> BatchBuf<S> {
+    match pool {
+        Some(p) if input.rows() >= POOL_MIN_BATCH => p.embed_batch(&Arc::new(input)),
+        _ => exec.embed_batch(&input),
     }
 }
 
 /// Engine-backed native compute owned by one coordinator worker.
 pub struct NativeBackend {
     plan: Arc<EmbeddingPlan>,
-    exec: BatchExecutor,
-    /// lazily spawned on the first batch of ≥ [`POOL_MIN_BATCH`] rows
-    /// (never on single-core hosts)
-    pool: Option<WorkerPool>,
+    pipe: NativePipe,
 }
 
 impl NativeBackend {
@@ -116,27 +197,39 @@ impl NativeBackend {
         &self.plan
     }
 
+    /// The pipeline precision this backend executes at.
+    pub fn precision(&self) -> Precision {
+        match &self.pipe {
+            NativePipe::F64 { .. } => Precision::F64,
+            NativePipe::F32 { .. } => Precision::F32,
+        }
+    }
+
     /// Worker-pool size (1 until the shard pool has been spawned).
     pub fn pool_workers(&self) -> usize {
-        self.pool.as_ref().map_or(1, WorkerPool::workers)
+        match &self.pipe {
+            NativePipe::F64 { pool, .. } => pool.as_ref().map_or(1, WorkerPool::workers),
+            NativePipe::F32 { pool, .. } => pool.as_ref().map_or(1, WorkerPool::workers),
+        }
     }
 
     fn embed_batch(&mut self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        // one f32→f64 widening for the whole batch
-        let input = BatchBuf::from_f32_rows(rows, self.plan.n()).map_err(|e| anyhow!("{e}"))?;
-        if self.pool.is_none()
-            && input.rows() >= POOL_MIN_BATCH
-            && WorkerPool::default_workers() > 1
-        {
-            self.pool = Some(WorkerPool::new(self.plan.clone(), WorkerPool::default_workers()));
-        }
-        let out = match &self.pool {
-            Some(pool) if input.rows() >= POOL_MIN_BATCH => {
-                pool.embed_batch(&Arc::new(input))
+        let n = self.plan.n();
+        match &mut self.pipe {
+            NativePipe::F64 { exec, pool } => {
+                // one f32→f64 widening for the whole batch
+                let input = BatchBuf::from_f32_rows(rows, n).map_err(|e| anyhow!("{e}"))?;
+                spawn_pool_if_worthwhile(pool, &self.plan, input.rows());
+                Ok(run_batch(exec, pool, input).to_f32_rows())
             }
-            _ => self.exec.embed_batch(&input),
-        };
-        Ok(out.to_f32_rows())
+            NativePipe::F32 { exec, pool } => {
+                // wire rows already are f32: pack, execute, unpack —
+                // zero precision conversions end to end
+                let input = BatchBuf::try_from_rows(rows, n).map_err(|e| anyhow!("{e}"))?;
+                spawn_pool_if_worthwhile(pool, &self.plan, input.rows());
+                Ok(run_batch(exec, pool, input).to_rows())
+            }
+        }
     }
 }
 
@@ -169,6 +262,7 @@ mod tests {
         assert_eq!(spec.n(), 16);
         assert_eq!(spec.out_dim(), 8);
         assert_eq!(spec.max_exec_batch(), usize::MAX);
+        assert_eq!(spec.precision(), Some(Precision::F64));
         let mut b = spec.build().unwrap();
         let out = b.embed_batch(&[vec![0.5f32; 16], vec![-1.0f32; 16]]).unwrap();
         assert_eq!(out.len(), 2);
@@ -180,7 +274,7 @@ mod tests {
     fn native_matches_reference_pipeline() {
         let spec = BackendSpec::native("toeplitz", "rff", 8, 16, 7).unwrap();
         let config = match &spec {
-            BackendSpec::Native { config } => config.clone(),
+            BackendSpec::Native { config, .. } => config.clone(),
             _ => unreachable!(),
         };
         let reference = StructuredEmbedding::sample(config);
@@ -195,6 +289,42 @@ mod tests {
                 assert!((*g as f64 - w).abs() < 1e-6, "{g} vs {w}");
             }
         }
+    }
+
+    #[test]
+    fn f32_precision_tracks_f64_oracle() {
+        let mk = |p: Precision| {
+            BackendSpec::native("circulant", "rff", 16, 32, 11).unwrap().with_precision(p)
+        };
+        let mut b64 = mk(Precision::F64).build().unwrap();
+        let mut b32 = mk(Precision::F32).build().unwrap();
+        let rows: Vec<Vec<f32>> = (0..5)
+            .map(|i| (0..32).map(|j| ((i * 7 + j) % 11) as f32 * 0.1 - 0.5).collect())
+            .collect();
+        let want = b64.embed_batch(&rows).unwrap();
+        let got = b32.embed_batch(&rows).unwrap();
+        for (wrow, grow) in want.iter().zip(&got) {
+            for (w, g) in wrow.iter().zip(grow) {
+                assert!(
+                    (*g as f64 - *w as f64).abs() <= 1e-4 * (1.0 + (*w as f64).abs()),
+                    "{g} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f32_pool_path_matches_f32_small_batch_path() {
+        let spec = BackendSpec::native("toeplitz", "rff", 16, 32, 5)
+            .unwrap()
+            .with_precision(Precision::F32);
+        let mut b = spec.build().unwrap();
+        let rows: Vec<Vec<f32>> =
+            (0..64).map(|i| (0..32).map(|j| ((i + j) % 7) as f32 * 0.1).collect()).collect();
+        let small = b.embed_batch(&rows[..2]).unwrap();
+        let large = b.embed_batch(&rows).unwrap();
+        assert_eq!(small[0], large[0]);
+        assert_eq!(small[1], large[1]);
     }
 
     #[test]
@@ -218,6 +348,23 @@ mod tests {
     }
 
     #[test]
+    fn with_precision_is_noop_for_pjrt() {
+        let meta = crate::runtime::VariantMeta {
+            name: "v".into(),
+            file: "v.hlo".into(),
+            structure: "circulant".into(),
+            f: "sign".into(),
+            n: 8,
+            m: 4,
+            batch: 2,
+            out_dim: 4,
+        };
+        let spec = BackendSpec::Pjrt { dir: PathBuf::from("/tmp"), meta };
+        let spec = spec.with_precision(Precision::F32);
+        assert_eq!(spec.precision(), None);
+    }
+
+    #[test]
     fn native_rejects_bad_names() {
         assert!(BackendSpec::native("nope", "sign", 8, 16, 0).is_err());
         assert!(BackendSpec::native("circulant", "nope", 8, 16, 0).is_err());
@@ -225,8 +372,11 @@ mod tests {
 
     #[test]
     fn native_rejects_bad_dim() {
-        let spec = BackendSpec::native("circulant", "sign", 8, 16, 3).unwrap();
-        let mut b = spec.build().unwrap();
-        assert!(b.embed_batch(&[vec![0.0f32; 15]]).is_err());
+        for p in [Precision::F64, Precision::F32] {
+            let spec =
+                BackendSpec::native("circulant", "sign", 8, 16, 3).unwrap().with_precision(p);
+            let mut b = spec.build().unwrap();
+            assert!(b.embed_batch(&[vec![0.0f32; 15]]).is_err());
+        }
     }
 }

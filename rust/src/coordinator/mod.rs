@@ -19,6 +19,14 @@
 //! AOT-compiled HLO; the native backend executes batches through
 //! [`crate::engine`] (planned transforms, SoA buffers, multi-core
 //! sharding for large batches).
+//!
+//! Native variants carry a per-variant [`Precision`] knob
+//! ([`BackendSpec::with_precision`]): at [`Precision::F32`] the f32
+//! wire rows run the whole pipeline natively in single precision (no
+//! widening/narrowing copies — the serving hot path); at
+//! [`Precision::F64`] (default) batches are widened once and executed
+//! at the oracle precision. See `ARCHITECTURE.md` at the repo root for
+//! the full layer map (rng → pmodel → dsp → engine → coordinator).
 
 mod backend;
 mod batcher;
@@ -26,6 +34,7 @@ mod metrics;
 mod server;
 mod tcp;
 
+pub use crate::engine::Precision;
 pub use backend::{Backend, BackendSpec, NativeBackend};
 pub use batcher::{BatchQueue, QueueError};
 pub use metrics::{Metrics, MetricsSnapshot};

@@ -1,83 +1,100 @@
 //! Iterative radix-2 Cooley–Tukey FFT with precomputed twiddles and
 //! bit-reversal permutation. Power-of-two sizes only (callers zero-pad).
 //!
-//! The plan object (`Fft`) caches twiddle factors and the bit-reversal
-//! table so the hot loop (structured matvec on the serving path) performs
-//! no trigonometry and no allocation beyond the output buffer.
+//! The plan objects ([`Fft`], [`RealFft`]) cache twiddle factors and the
+//! bit-reversal table so the hot loop (structured matvec on the serving
+//! path) performs no trigonometry and no allocation beyond the output
+//! buffer. Both plans are generic over [`Scalar`]: `Fft<f64>` is the
+//! oracle precision, `Fft<f32>` the serving precision. Twiddles are
+//! always *computed* with f64 trigonometry and narrowed once at plan
+//! construction, so the f32 plan loses no accuracy to table build-up.
 
-/// Minimal complex number (no external num crate available offline).
+use super::scalar::Scalar;
+
+/// Minimal complex number (no external num crate available offline),
+/// generic over the real component type. `Complex` with no parameter
+/// means `Complex<f64>` — the oracle precision.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
-pub struct Complex {
-    pub re: f64,
-    pub im: f64,
+pub struct Complex<S = f64> {
+    /// Real part.
+    pub re: S,
+    /// Imaginary part.
+    pub im: S,
 }
 
-impl Complex {
+impl<S: Scalar> Complex<S> {
     /// Construct.
-    pub const fn new(re: f64, im: f64) -> Complex {
+    pub const fn new(re: S, im: S) -> Complex<S> {
         Complex { re, im }
     }
 
     /// Additive identity.
-    pub const ZERO: Complex = Complex::new(0.0, 0.0);
+    pub const ZERO: Complex<S> = Complex { re: S::ZERO, im: S::ZERO };
 
     /// Complex multiplication.
     #[inline]
-    pub fn mul(self, o: Complex) -> Complex {
+    pub fn mul(self, o: Complex<S>) -> Complex<S> {
         Complex::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
     }
 
     /// Complex addition.
     #[inline]
-    pub fn add(self, o: Complex) -> Complex {
+    pub fn add(self, o: Complex<S>) -> Complex<S> {
         Complex::new(self.re + o.re, self.im + o.im)
     }
 
     /// Complex subtraction.
     #[inline]
-    pub fn sub(self, o: Complex) -> Complex {
+    pub fn sub(self, o: Complex<S>) -> Complex<S> {
         Complex::new(self.re - o.re, self.im - o.im)
     }
 
     /// Complex conjugate.
     #[inline]
-    pub fn conj(self) -> Complex {
+    pub fn conj(self) -> Complex<S> {
         Complex::new(self.re, -self.im)
     }
 
     /// Scale by a real.
     #[inline]
-    pub fn scale(self, s: f64) -> Complex {
+    pub fn scale(self, s: S) -> Complex<S> {
         Complex::new(self.re * s, self.im * s)
     }
 
     /// Squared magnitude.
     #[inline]
-    pub fn norm_sq(self) -> f64 {
+    pub fn norm_sq(self) -> S {
         self.re * self.re + self.im * self.im
+    }
+
+    /// Narrow/widen the component type (plan construction only).
+    #[inline]
+    pub fn cast<T: Scalar>(self) -> Complex<T> {
+        Complex::new(T::from_f64(self.re.to_f64()), T::from_f64(self.im.to_f64()))
     }
 }
 
 /// An FFT plan for a fixed power-of-two size.
 #[derive(Debug, Clone)]
-pub struct Fft {
+pub struct Fft<S = f64> {
     n: usize,
-    /// twiddles[s] holds the n/2 factors e^{-2πi k / 2^(s+1)} laid out per stage
-    twiddles: Vec<Complex>,
+    /// `twiddles[s]` holds the n/2 factors e^{-2πi k / 2^(s+1)} laid out per stage
+    twiddles: Vec<Complex<S>>,
     bitrev: Vec<u32>,
 }
 
-impl Fft {
+impl<S: Scalar> Fft<S> {
     /// Build a plan for size `n` (must be a power of two).
-    pub fn new(n: usize) -> Fft {
+    pub fn new(n: usize) -> Fft<S> {
         assert!(crate::util::is_pow2(n), "FFT size must be a power of two, got {n}");
         // Precompute forward twiddles for the largest stage; smaller
-        // stages stride through the same table.
+        // stages stride through the same table. Trigonometry runs in
+        // f64 regardless of S and is narrowed exactly once.
         let half = n / 2;
         let mut twiddles = Vec::with_capacity(half.max(1));
         for k in 0..half.max(1) {
             let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
-            twiddles.push(Complex::new(ang.cos(), ang.sin()));
+            twiddles.push(Complex::new(S::from_f64(ang.cos()), S::from_f64(ang.sin())));
         }
         let bits = crate::util::log2_exact(n);
         let bitrev = (0..n as u32).map(|i| i.reverse_bits() >> (32 - bits.max(1)) as u32).collect::<Vec<_>>();
@@ -96,25 +113,25 @@ impl Fft {
         self.n == 0
     }
 
-    /// In-place forward DFT: X[k] = Σ_j x[j] e^{-2πi jk/n}.
-    pub fn forward_inplace(&self, buf: &mut [Complex]) {
+    /// In-place forward DFT: `X[k] = Σ_j x[j] e^{-2πi jk/n}`.
+    pub fn forward_inplace(&self, buf: &mut [Complex<S>]) {
         assert_eq!(buf.len(), self.n);
         self.permute(buf);
         self.butterflies(buf, false);
     }
 
     /// In-place inverse DFT (includes the 1/n normalization).
-    pub fn inverse_inplace(&self, buf: &mut [Complex]) {
+    pub fn inverse_inplace(&self, buf: &mut [Complex<S>]) {
         assert_eq!(buf.len(), self.n);
         self.permute(buf);
         self.butterflies(buf, true);
-        let inv = 1.0 / self.n as f64;
+        let inv = S::from_f64(1.0 / self.n as f64);
         for v in buf.iter_mut() {
             *v = v.scale(inv);
         }
     }
 
-    fn permute(&self, buf: &mut [Complex]) {
+    fn permute(&self, buf: &mut [Complex<S>]) {
         for i in 0..self.n {
             let j = self.bitrev[i] as usize;
             if i < j {
@@ -123,7 +140,7 @@ impl Fft {
         }
     }
 
-    fn butterflies(&self, buf: &mut [Complex], inverse: bool) {
+    fn butterflies(&self, buf: &mut [Complex<S>], inverse: bool) {
         let n = self.n;
         let mut len = 2usize;
         while len <= n {
@@ -146,16 +163,16 @@ impl Fft {
     }
 
     /// Forward DFT of a real signal; returns the full complex spectrum.
-    pub fn forward_real(&self, x: &[f64]) -> Vec<Complex> {
+    pub fn forward_real(&self, x: &[S]) -> Vec<Complex<S>> {
         assert_eq!(x.len(), self.n);
-        let mut buf: Vec<Complex> = x.iter().map(|&v| Complex::new(v, 0.0)).collect();
+        let mut buf: Vec<Complex<S>> = x.iter().map(|&v| Complex::new(v, S::ZERO)).collect();
         self.forward_inplace(&mut buf);
         buf
     }
 
     /// Inverse DFT returning the real part (input spectrum assumed
     /// conjugate-symmetric, i.e. spectrum of a real signal).
-    pub fn inverse_real(&self, spec: &[Complex]) -> Vec<f64> {
+    pub fn inverse_real(&self, spec: &[Complex<S>]) -> Vec<S> {
         assert_eq!(spec.len(), self.n);
         let mut buf = spec.to_vec();
         self.inverse_inplace(&mut buf);
@@ -169,23 +186,24 @@ impl Fft {
 /// complex signal, runs one half-size FFT and unpacks with the standard
 /// split formulas — ~1.7× faster than a full complex transform for the
 /// real convolutions on the structured-matvec hot path. Spectra are the
-/// non-redundant half: indices 0..=N/2.
-pub struct RealFft {
-    half: Fft,
+/// non-redundant half: indices 0..=N/2. Like [`Fft`], the plan is
+/// generic over [`Scalar`] with twiddles built in f64.
+pub struct RealFft<S = f64> {
+    half: Fft<S>,
     /// W^k = e^{-2πik/N} for k = 0..=N/2
-    w: Vec<Complex>,
+    w: Vec<Complex<S>>,
     n: usize,
 }
 
-impl RealFft {
+impl<S: Scalar> RealFft<S> {
     /// Plan for even power-of-two size `n >= 2`.
-    pub fn new(n: usize) -> RealFft {
+    pub fn new(n: usize) -> RealFft<S> {
         assert!(crate::util::is_pow2(n) && n >= 2, "RealFft needs pow2 n >= 2, got {n}");
         let m = n / 2;
         let w = (0..=m)
             .map(|k| {
                 let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
-                Complex::new(ang.cos(), ang.sin())
+                Complex::new(S::from_f64(ang.cos()), S::from_f64(ang.sin()))
             })
             .collect();
         RealFft { half: Fft::new(m), w, n }
@@ -213,7 +231,7 @@ impl RealFft {
     }
 
     /// Forward transform: returns the half-spectrum X[0..=n/2].
-    pub fn forward(&self, x: &[f64]) -> Vec<Complex> {
+    pub fn forward(&self, x: &[S]) -> Vec<Complex<S>> {
         let mut spec = vec![Complex::ZERO; self.spectrum_len()];
         let mut scratch = vec![Complex::ZERO; self.scratch_len()];
         self.forward_into(x, &mut spec, &mut scratch);
@@ -224,11 +242,12 @@ impl RealFft {
     /// `spec` receives the half-spectrum (length n/2 + 1), `scratch`
     /// holds the packed half-size signal (length n/2). The serving hot
     /// path reuses both across calls.
-    pub fn forward_into(&self, x: &[f64], spec: &mut [Complex], scratch: &mut [Complex]) {
+    pub fn forward_into(&self, x: &[S], spec: &mut [Complex<S>], scratch: &mut [Complex<S>]) {
         assert_eq!(x.len(), self.n);
         let m = self.n / 2;
         assert_eq!(spec.len(), m + 1);
         assert_eq!(scratch.len(), m);
+        let half = S::from_f64(0.5);
         for (k, z) in scratch.iter_mut().enumerate() {
             *z = Complex::new(x[2 * k], x[2 * k + 1]);
         }
@@ -236,9 +255,9 @@ impl RealFft {
         for (k, out) in spec.iter_mut().enumerate() {
             let zk = scratch[k % m];
             let zmk = scratch[(m - k) % m].conj();
-            let xe = zk.add(zmk).scale(0.5);
+            let xe = zk.add(zmk).scale(half);
             // Xo = -i (zk - zmk)/2
-            let d = zk.sub(zmk).scale(0.5);
+            let d = zk.sub(zmk).scale(half);
             let xo = Complex::new(d.im, -d.re);
             *out = xe.add(self.w[k].mul(xo));
         }
@@ -246,8 +265,8 @@ impl RealFft {
 
     /// Inverse transform from a half-spectrum (length n/2 + 1) back to
     /// the real signal (includes 1/n normalization).
-    pub fn inverse(&self, spec: &[Complex]) -> Vec<f64> {
-        let mut out = vec![0.0; self.n];
+    pub fn inverse(&self, spec: &[Complex<S>]) -> Vec<S> {
+        let mut out = vec![S::ZERO; self.n];
         let mut scratch = vec![Complex::ZERO; self.scratch_len()];
         self.inverse_into(spec, &mut out, &mut scratch);
         out
@@ -255,16 +274,17 @@ impl RealFft {
 
     /// Allocation-free inverse transform: writes the real signal (length
     /// n) into `out`; `scratch` is a length-n/2 complex work buffer.
-    pub fn inverse_into(&self, spec: &[Complex], out: &mut [f64], scratch: &mut [Complex]) {
+    pub fn inverse_into(&self, spec: &[Complex<S>], out: &mut [S], scratch: &mut [Complex<S>]) {
         let m = self.n / 2;
         assert_eq!(spec.len(), m + 1);
         assert_eq!(out.len(), self.n);
         assert_eq!(scratch.len(), m);
+        let half = S::from_f64(0.5);
         for (k, z) in scratch.iter_mut().enumerate() {
             let xk = spec[k];
             let xmk = spec[m - k].conj();
-            let xe = xk.add(xmk).scale(0.5);
-            let rot = xk.sub(xmk).scale(0.5); // = W^k · Xo
+            let xe = xk.add(xmk).scale(half);
+            let rot = xk.sub(xmk).scale(half); // = W^k · Xo
             // Xo = conj(W^k) · rot
             let xo = self.w[k].conj().mul(rot);
             // z[k] = Xe + i·Xo
@@ -366,7 +386,7 @@ mod tests {
     #[test]
     #[should_panic]
     fn rejects_non_pow2() {
-        Fft::new(12);
+        Fft::<f64>::new(12);
     }
 
     #[test]
@@ -423,8 +443,38 @@ mod tests {
     }
 
     #[test]
+    fn f32_plan_tracks_f64_oracle() {
+        let mut rng = Rng::new(12);
+        for &n in &[8usize, 64, 1024] {
+            let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+            let spec64 = RealFft::<f64>::new(n).forward(&x);
+            let plan32 = RealFft::<f32>::new(n);
+            let spec32 = plan32.forward(&x32);
+            for (a, b) in spec32.iter().zip(&spec64) {
+                let scale = 1.0 + b.re.abs().max(b.im.abs());
+                assert!((a.re as f64 - b.re).abs() <= 1e-4 * scale, "n={n}");
+                assert!((a.im as f64 - b.im).abs() <= 1e-4 * scale, "n={n}");
+            }
+            let back = plan32.inverse(&spec32);
+            for (a, b) in back.iter().zip(&x) {
+                assert!((*a as f64 - b).abs() <= 1e-5 * (1.0 + b.abs()), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn complex_cast_narrows_and_widens() {
+        let c = Complex::new(1.5, -2.25); // exactly representable in f32
+        let c32: Complex<f32> = c.cast();
+        assert_eq!(c32, Complex::new(1.5f32, -2.25f32));
+        let back: Complex<f64> = c32.cast();
+        assert_eq!(back, c);
+    }
+
+    #[test]
     #[should_panic]
     fn real_fft_rejects_n1() {
-        RealFft::new(1);
+        RealFft::<f64>::new(1);
     }
 }

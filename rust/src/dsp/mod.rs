@@ -7,14 +7,23 @@
 //! step `D₁ H D₀` uses the Walsh–Hadamard transform (`O(n log n)`,
 //! computed on the fly — H is never stored, per the paper's Remark in
 //! §2.3). Implemented from scratch: no FFT crate is available offline.
+//!
+//! All transform kernels are generic over the [`Scalar`] precision
+//! (`f32` serving path / `f64` oracle path — see [`scalar`] for the
+//! boundary rules); the unparameterized names ([`Complex`], [`Fft`],
+//! [`RealFft`], [`ConvPlan`], [`NegacyclicPlan`]) default to `f64`.
+//! The free convolution helpers below are f64-only: they are the naive
+//! one-shot reference forms used by tests and non-hot-path callers.
 
 pub mod fft;
 pub mod fwht;
 pub mod plan;
+pub mod scalar;
 
-pub use fft::{Complex, Fft};
+pub use fft::{Complex, Fft, RealFft};
 pub use fwht::fwht_inplace;
 pub use plan::{ConvPlan, NegacyclicPlan};
+pub use scalar::Scalar;
 
 /// Circular convolution of two equal-length real vectors via FFT.
 /// `out[k] = Σ_j a[j] · b[(k - j) mod n]`.

@@ -6,27 +6,37 @@
 //! kernel thousands of times per second on the serving path, so these
 //! plans cache the FFT twiddles and the kernel spectrum at construction:
 //! one forward FFT, one pointwise multiply and one inverse per matvec.
+//!
+//! Both plan types are generic over [`Scalar`]: a `ConvPlan<f32>`
+//! carries an f32 twiddle table and kernel spectrum so the whole
+//! convolve runs natively in single precision (see
+//! [`crate::dsp::scalar`] for the precision-boundary rules).
 
 use super::fft::{Complex, Fft, RealFft};
+use super::scalar::Scalar;
 
 /// Circular convolution with a fixed kernel: `apply(x) = kernel ⊛ x`.
 /// Power-of-two length only. Uses the packed real FFT (half-spectrum)
 /// since both operands and the result are real.
-pub struct ConvPlan {
-    fft: Option<RealFft>, // None for the trivial n = 1 case
-    kspec: Vec<Complex>,
-    k1: f64,
+pub struct ConvPlan<S = f64> {
+    fft: Option<RealFft<S>>, // None for the trivial n = 1 case
+    kspec: Vec<Complex<S>>,
+    k1: S,
 }
 
-impl ConvPlan {
+impl<S: Scalar> ConvPlan<S> {
     /// Plan for a fixed kernel (length must be a power of two).
-    pub fn new(kernel: &[f64]) -> ConvPlan {
+    pub fn new(kernel: &[S]) -> ConvPlan<S> {
         if kernel.len() < 2 {
-            return ConvPlan { fft: None, kspec: Vec::new(), k1: kernel.first().copied().unwrap_or(0.0) };
+            return ConvPlan {
+                fft: None,
+                kspec: Vec::new(),
+                k1: kernel.first().copied().unwrap_or(S::ZERO),
+            };
         }
         let fft = RealFft::new(kernel.len());
         let kspec = fft.forward(kernel);
-        ConvPlan { fft: Some(fft), kspec, k1: 0.0 }
+        ConvPlan { fft: Some(fft), kspec, k1: S::ZERO }
     }
 
     /// Convolution length.
@@ -43,8 +53,8 @@ impl ConvPlan {
     }
 
     /// `kernel ⊛ x` (same length as the kernel).
-    pub fn apply(&self, x: &[f64]) -> Vec<f64> {
-        let mut out = vec![0.0; self.len()];
+    pub fn apply(&self, x: &[S]) -> Vec<S> {
+        let mut out = vec![S::ZERO; self.len()];
         let mut spec = Vec::new();
         let mut scratch = Vec::new();
         self.apply_into(x, &mut out, &mut spec, &mut scratch);
@@ -56,10 +66,10 @@ impl ConvPlan {
     /// across calls (the batch-engine hot path).
     pub fn apply_into(
         &self,
-        x: &[f64],
-        out: &mut [f64],
-        spec: &mut Vec<Complex>,
-        scratch: &mut Vec<Complex>,
+        x: &[S],
+        out: &mut [S],
+        spec: &mut Vec<Complex<S>>,
+        scratch: &mut Vec<Complex<S>>,
     ) {
         assert_eq!(out.len(), self.len());
         match &self.fft {
@@ -80,26 +90,26 @@ impl ConvPlan {
 /// Negacyclic convolution with a fixed kernel b: `apply(a) = negaconv(a, b)`
 /// via the ω = e^{iπ/n} twisting trick, with the twist table and the
 /// twisted kernel spectrum precomputed. Power-of-two length only.
-pub struct NegacyclicPlan {
-    fft: Fft,
+pub struct NegacyclicPlan<S = f64> {
+    fft: Fft<S>,
     /// ω^j for j = 0..n
-    twist: Vec<Complex>,
+    twist: Vec<Complex<S>>,
     /// FFT of the twisted kernel
-    kspec: Vec<Complex>,
+    kspec: Vec<Complex<S>>,
 }
 
-impl NegacyclicPlan {
+impl<S: Scalar> NegacyclicPlan<S> {
     /// Plan for a fixed kernel (length must be a power of two).
-    pub fn new(kernel: &[f64]) -> NegacyclicPlan {
+    pub fn new(kernel: &[S]) -> NegacyclicPlan<S> {
         let n = kernel.len();
         let fft = Fft::new(n);
-        let twist: Vec<Complex> = (0..n)
+        let twist: Vec<Complex<S>> = (0..n)
             .map(|j| {
                 let ang = std::f64::consts::PI * j as f64 / n as f64;
-                Complex::new(ang.cos(), ang.sin())
+                Complex::new(S::from_f64(ang.cos()), S::from_f64(ang.sin()))
             })
             .collect();
-        let mut kb: Vec<Complex> =
+        let mut kb: Vec<Complex<S>> =
             kernel.iter().zip(&twist).map(|(&x, w)| w.scale(x)).collect();
         fft.forward_inplace(&mut kb);
         NegacyclicPlan { fft, twist, kspec: kb }
@@ -116,8 +126,8 @@ impl NegacyclicPlan {
     }
 
     /// `negaconv(a, kernel)` — sign −1 on wrapped index sums.
-    pub fn apply(&self, a: &[f64]) -> Vec<f64> {
-        let mut out = vec![0.0; self.len()];
+    pub fn apply(&self, a: &[S]) -> Vec<S> {
+        let mut out = vec![S::ZERO; self.len()];
         let mut buf = Vec::new();
         self.apply_into(a, &mut out, &mut buf);
         out
@@ -126,7 +136,7 @@ impl NegacyclicPlan {
     /// Allocation-free `negaconv(a, kernel)` writing the first
     /// `out.len()` (≤ n) results into `out`. `buf` is a complex work
     /// buffer grown on first use and reused across calls.
-    pub fn apply_into(&self, a: &[f64], out: &mut [f64], buf: &mut Vec<Complex>) {
+    pub fn apply_into(&self, a: &[S], out: &mut [S], buf: &mut Vec<Complex<S>>) {
         let n = self.fft.len();
         assert_eq!(a.len(), n);
         assert!(out.len() <= n);
@@ -214,5 +224,26 @@ mod tests {
         let x2 = rng.gaussian_vec(32);
         crate::util::assert_close(&plan.apply(&x1), &circular_convolve(&k, &x1), 1e-9);
         crate::util::assert_close(&plan.apply(&x2), &circular_convolve(&k, &x2), 1e-9);
+    }
+
+    #[test]
+    fn f32_plans_track_f64_oracle() {
+        let mut rng = Rng::new(6);
+        for &n in &[8usize, 256, 1024] {
+            let k = rng.gaussian_vec(n);
+            let x = rng.gaussian_vec(n);
+            let k32: Vec<f32> = k.iter().map(|&v| v as f32).collect();
+            let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+            let want_c = ConvPlan::new(&k).apply(&x);
+            let got_c = ConvPlan::<f32>::new(&k32).apply(&x32);
+            for (g, w) in got_c.iter().zip(&want_c) {
+                assert!((*g as f64 - w).abs() <= 1e-3 * (1.0 + w.abs()), "conv n={n}");
+            }
+            let want_n = NegacyclicPlan::new(&k).apply(&x);
+            let got_n = NegacyclicPlan::<f32>::new(&k32).apply(&x32);
+            for (g, w) in got_n.iter().zip(&want_n) {
+                assert!((*g as f64 - w).abs() <= 1e-3 * (1.0 + w.abs()), "nega n={n}");
+            }
+        }
     }
 }

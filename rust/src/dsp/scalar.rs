@@ -1,0 +1,182 @@
+//! The precision boundary of the transform core.
+//!
+//! Every hot-path kernel in this crate — FFT butterflies, FWHT stages,
+//! convolution plans, planned matvecs, batch executors — is generic over
+//! [`Scalar`], instantiated at exactly two types: `f64` (the oracle used
+//! by tests, eval and coherence math) and `f32` (the serving path, where
+//! structured matvec is memory-bandwidth-bound and halving the element
+//! width roughly doubles effective bandwidth while opening 2× wider
+//! SIMD lanes to the autovectorizer).
+//!
+//! Design rules enforced throughout the crate:
+//!
+//! - *Plan in f64, run in `S`*: twiddle factors, twist tables and kernel
+//!   spectra are computed with f64 trigonometry at plan-construction
+//!   time and narrowed once ([`Scalar::from_f64`]); the per-call loops
+//!   never convert.
+//! - *No hidden widening*: a pipeline instantiated at `f32` touches only
+//!   `f32`/`Complex<f32>` buffers from input row to output feature.
+//! - *Sampling stays f64*: randomness (budgets, diagonals) is always
+//!   drawn in f64 so both precisions of one plan describe the *same*
+//!   sampled matrix.
+
+use std::fmt::{Debug, Display};
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// A real floating-point element type the transform kernels can be
+/// instantiated at. Implemented for `f32` and `f64` only; the trait
+/// exists so the two pipelines share one body of kernel code, not to
+/// abstract over exotic numerics.
+pub trait Scalar:
+    Copy
+    + Default
+    + PartialEq
+    + PartialOrd
+    + Debug
+    + Display
+    + Send
+    + Sync
+    + 'static
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + DivAssign
+    + Sum<Self>
+{
+    /// Additive identity.
+    const ZERO: Self;
+    /// Multiplicative identity.
+    const ONE: Self;
+    /// Human-readable precision name (`"f32"` / `"f64"`), for tables
+    /// and bench labels.
+    const NAME: &'static str;
+
+    /// Narrow (or pass through) an f64 value. Used exactly once per
+    /// constant at plan-construction time — never inside a kernel loop.
+    fn from_f64(v: f64) -> Self;
+
+    /// Widen to f64 (test comparisons against the oracle path).
+    fn to_f64(self) -> f64;
+
+    /// Square root.
+    fn sqrt(self) -> Self;
+
+    /// Cosine.
+    fn cos(self) -> Self;
+
+    /// Sine.
+    fn sin(self) -> Self;
+
+    /// Absolute value.
+    fn abs(self) -> Self;
+}
+
+impl Scalar for f64 {
+    const ZERO: f64 = 0.0;
+    const ONE: f64 = 1.0;
+    const NAME: &'static str = "f64";
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> f64 {
+        v
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+
+    #[inline(always)]
+    fn sqrt(self) -> f64 {
+        f64::sqrt(self)
+    }
+
+    #[inline(always)]
+    fn cos(self) -> f64 {
+        f64::cos(self)
+    }
+
+    #[inline(always)]
+    fn sin(self) -> f64 {
+        f64::sin(self)
+    }
+
+    #[inline(always)]
+    fn abs(self) -> f64 {
+        f64::abs(self)
+    }
+}
+
+impl Scalar for f32 {
+    const ZERO: f32 = 0.0;
+    const ONE: f32 = 1.0;
+    const NAME: &'static str = "f32";
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> f32 {
+        v as f32
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+
+    #[inline(always)]
+    fn sqrt(self) -> f32 {
+        f32::sqrt(self)
+    }
+
+    #[inline(always)]
+    fn cos(self) -> f32 {
+        f32::cos(self)
+    }
+
+    #[inline(always)]
+    fn sin(self) -> f32 {
+        f32::sin(self)
+    }
+
+    #[inline(always)]
+    fn abs(self) -> f32 {
+        f32::abs(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<S: Scalar>(v: f64) -> f64 {
+        S::from_f64(v).to_f64()
+    }
+
+    #[test]
+    fn identities_and_names() {
+        assert_eq!(f64::ZERO + f64::ONE, 1.0);
+        assert_eq!(f32::ZERO + f32::ONE, 1.0);
+        assert_eq!(f64::NAME, "f64");
+        assert_eq!(f32::NAME, "f32");
+    }
+
+    #[test]
+    fn conversions_preserve_representable_values() {
+        assert_eq!(roundtrip::<f64>(0.1), 0.1);
+        assert_eq!(roundtrip::<f32>(0.5), 0.5); // exactly representable
+        assert!((roundtrip::<f32>(0.1) - 0.1).abs() < 1e-8);
+    }
+
+    #[test]
+    fn math_dispatches_to_inherent_impls() {
+        assert_eq!(Scalar::sqrt(4.0f32), 2.0);
+        assert_eq!(Scalar::abs(-3.0f64), 3.0);
+        assert!((Scalar::cos(0.0f32) - 1.0).abs() < 1e-7);
+        assert!(Scalar::sin(0.0f64).abs() < 1e-15);
+    }
+}

@@ -1,28 +1,32 @@
-//! SoA batch buffers and the zero-allocation batch executor.
+//! SoA batch buffers and the zero-allocation batch executor, generic
+//! over the pipeline precision ([`EngineScalar`]).
 
-use super::EmbeddingPlan;
+use super::{EmbeddingPlan, EngineScalar};
+use crate::dsp::Scalar;
 use crate::pmodel::MatvecScratch;
 use std::sync::Arc;
 
 /// A batch of equal-length vectors in structure-of-arrays layout: one
-/// contiguous row-major `Vec<f64>` instead of one heap allocation per
-/// row. This is the engine's interchange format — the coordinator
-/// converts its f32 wire rows into a `BatchBuf` exactly once per batch.
+/// contiguous row-major `Vec<S>` instead of one heap allocation per
+/// row. This is the engine's interchange format. The unparameterized
+/// name defaults to the f64 oracle precision; a `BatchBuf<f32>` is the
+/// serving-precision form — the coordinator packs its f32 wire rows
+/// into one *without any conversion*.
 #[derive(Debug, Clone, PartialEq)]
-pub struct BatchBuf {
-    data: Vec<f64>,
+pub struct BatchBuf<S = f64> {
+    data: Vec<S>,
     rows: usize,
     dim: usize,
 }
 
-impl BatchBuf {
+impl<S: Scalar> BatchBuf<S> {
     /// An all-zero batch.
-    pub fn zeros(rows: usize, dim: usize) -> BatchBuf {
-        BatchBuf { data: vec![0.0; rows * dim], rows, dim }
+    pub fn zeros(rows: usize, dim: usize) -> BatchBuf<S> {
+        BatchBuf { data: vec![S::ZERO; rows * dim], rows, dim }
     }
 
     /// Pack a slice of equal-length rows (asserts on ragged input).
-    pub fn from_rows(rows: &[Vec<f64>]) -> BatchBuf {
+    pub fn from_rows(rows: &[Vec<S>]) -> BatchBuf<S> {
         let dim = rows.first().map_or(0, Vec::len);
         let mut data = Vec::with_capacity(rows.len() * dim);
         for r in rows {
@@ -32,15 +36,16 @@ impl BatchBuf {
         BatchBuf { data, rows: rows.len(), dim }
     }
 
-    /// Pack f32 wire rows, widening once; `Err` names the first row
-    /// whose length differs from `dim`.
-    pub fn from_f32_rows(rows: &[Vec<f32>], dim: usize) -> Result<BatchBuf, String> {
+    /// Pack rows of the same precision, validating every row length
+    /// against `dim`; `Err` names the first offending row. This is the
+    /// conversion-free coordinator entry point for the f32 pipeline.
+    pub fn try_from_rows(rows: &[Vec<S>], dim: usize) -> Result<BatchBuf<S>, String> {
         let mut data = Vec::with_capacity(rows.len() * dim);
         for (i, r) in rows.iter().enumerate() {
             if r.len() != dim {
                 return Err(format!("row {i} has dim {} (want {dim})", r.len()));
             }
-            data.extend(r.iter().map(|&x| x as f64));
+            data.extend_from_slice(r);
         }
         Ok(BatchBuf { data, rows: rows.len(), dim })
     }
@@ -61,23 +66,38 @@ impl BatchBuf {
     }
 
     /// Row `i` as a slice.
-    pub fn row(&self, i: usize) -> &[f64] {
+    pub fn row(&self, i: usize) -> &[S] {
         &self.data[i * self.dim..(i + 1) * self.dim]
     }
 
     /// Row `i` as a mutable slice.
-    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+    pub fn row_mut(&mut self, i: usize) -> &mut [S] {
         &mut self.data[i * self.dim..(i + 1) * self.dim]
     }
 
     /// The whole buffer (row-major).
-    pub fn as_slice(&self) -> &[f64] {
+    pub fn as_slice(&self) -> &[S] {
         &self.data
     }
 
     /// Unpack into owned rows.
-    pub fn to_rows(&self) -> Vec<Vec<f64>> {
+    pub fn to_rows(&self) -> Vec<Vec<S>> {
         (0..self.rows).map(|i| self.row(i).to_vec()).collect()
+    }
+}
+
+impl BatchBuf<f64> {
+    /// Pack f32 wire rows into the f64 oracle pipeline, widening once;
+    /// `Err` names the first row whose length differs from `dim`.
+    pub fn from_f32_rows(rows: &[Vec<f32>], dim: usize) -> Result<BatchBuf<f64>, String> {
+        let mut data = Vec::with_capacity(rows.len() * dim);
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != dim {
+                return Err(format!("row {i} has dim {} (want {dim})", r.len()));
+            }
+            data.extend(r.iter().map(|&x| x as f64));
+        }
+        Ok(BatchBuf { data, rows: rows.len(), dim })
     }
 
     /// Unpack into f32 wire rows, narrowing once.
@@ -92,22 +112,29 @@ impl BatchBuf {
 /// call (which grows the scratch to its high-water mark) embedding a
 /// vector performs no heap allocation at all — preprocess in place,
 /// planned matvec into the projection buffer, nonlinearity into the
-/// caller's output row.
-pub struct BatchExecutor {
+/// caller's output row. The whole loop is monomorphized per precision
+/// through [`EngineScalar`]: a `BatchExecutor<f32>` touches only f32
+/// buffers end to end.
+pub struct BatchExecutor<S: EngineScalar = f64> {
     plan: Arc<EmbeddingPlan>,
-    scratch: MatvecScratch,
+    scratch: MatvecScratch<S>,
     /// working copy of the current input (preprocessed in place)
-    input: Vec<f64>,
+    input: Vec<S>,
     /// raw projections A·D₁HD₀·x (length m)
-    proj: Vec<f64>,
+    proj: Vec<S>,
 }
 
-impl BatchExecutor {
+impl<S: EngineScalar> BatchExecutor<S> {
     /// An executor for `plan` (cheap; buffers grow lazily).
-    pub fn new(plan: Arc<EmbeddingPlan>) -> BatchExecutor {
+    pub fn new(plan: Arc<EmbeddingPlan>) -> BatchExecutor<S> {
         let n = plan.n();
         let m = plan.m();
-        BatchExecutor { plan, scratch: MatvecScratch::new(), input: vec![0.0; n], proj: vec![0.0; m] }
+        BatchExecutor {
+            plan,
+            scratch: MatvecScratch::new(),
+            input: vec![S::ZERO; n],
+            proj: vec![S::ZERO; m],
+        }
     }
 
     /// The executed plan.
@@ -117,20 +144,20 @@ impl BatchExecutor {
 
     /// Embed one vector into a caller-owned feature row
     /// (`out.len() == plan.out_dim()`).
-    pub fn embed_into(&mut self, x: &[f64], out: &mut [f64]) {
+    pub fn embed_into(&mut self, x: &[S], out: &mut [S]) {
         let emb = self.plan.embedding();
         assert_eq!(x.len(), emb.config().n, "input dim mismatch");
         self.input.copy_from_slice(x);
         if let Some(pre) = emb.preprocessor() {
-            pre.apply_inplace(&mut self.input);
+            S::preprocess_inplace(pre, &mut self.input);
         }
-        emb.model().matvec_into(&self.input, &mut self.proj, &mut self.scratch);
-        emb.config().f.apply_into(&self.proj, out);
+        S::matvec_into(emb.model(), &self.input, &mut self.proj, &mut self.scratch);
+        S::features_into(emb.config().f, &self.proj, out);
     }
 
     /// Embed every row of `input` into the matching row of `out`
     /// (`out` must be `input.rows() × plan.out_dim()`).
-    pub fn embed_batch_into(&mut self, input: &BatchBuf, out: &mut BatchBuf) {
+    pub fn embed_batch_into(&mut self, input: &BatchBuf<S>, out: &mut BatchBuf<S>) {
         assert_eq!(input.rows(), out.rows(), "batch size mismatch");
         assert_eq!(out.dim(), self.plan.out_dim(), "output dim mismatch");
         for i in 0..input.rows() {
@@ -139,7 +166,7 @@ impl BatchExecutor {
     }
 
     /// Embed a batch into a fresh output buffer.
-    pub fn embed_batch(&mut self, input: &BatchBuf) -> BatchBuf {
+    pub fn embed_batch(&mut self, input: &BatchBuf<S>) -> BatchBuf<S> {
         let mut out = BatchBuf::zeros(input.rows(), self.plan.out_dim());
         self.embed_batch_into(input, &mut out);
         out
@@ -173,6 +200,15 @@ mod tests {
     }
 
     #[test]
+    fn batchbuf_native_f32_rows_are_checked_without_conversion() {
+        let ok = BatchBuf::try_from_rows(&[vec![1.0f32, 2.0], vec![3.0, 4.0]], 2).unwrap();
+        assert_eq!(ok.row(1), &[3.0f32, 4.0]);
+        assert_eq!(ok.to_rows(), vec![vec![1.0f32, 2.0], vec![3.0, 4.0]]);
+        let err = BatchBuf::try_from_rows(&[vec![1.0f32]], 2).unwrap_err();
+        assert!(err.contains("row 0"), "{err}");
+    }
+
+    #[test]
     fn executor_matches_reference_embed() {
         let mut rng = Rng::new(17);
         for kind in [StructureKind::Circulant, StructureKind::Dense] {
@@ -186,6 +222,27 @@ mod tests {
             for i in 0..input.rows() {
                 let want = plan.embedding().embed(input.row(i));
                 crate::util::assert_close(out.row(i), &want, 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn f32_executor_tracks_f64_executor() {
+        let mut rng = Rng::new(23);
+        for kind in [StructureKind::Circulant, StructureKind::Hankel, StructureKind::Dense] {
+            let cfg = EmbeddingConfig::new(kind, 8, 16, Nonlinearity::CosSin).with_seed(3);
+            let plan = EmbeddingPlan::shared(cfg);
+            let rows: Vec<Vec<f64>> = (0..5).map(|_| rng.gaussian_vec(16)).collect();
+            let rows32: Vec<Vec<f32>> =
+                rows.iter().map(|r| r.iter().map(|&v| v as f32).collect()).collect();
+            let mut ex64 = BatchExecutor::<f64>::new(plan.clone());
+            let mut ex32 = BatchExecutor::<f32>::new(plan.clone());
+            let out64 = ex64.embed_batch(&BatchBuf::from_rows(&rows));
+            let out32 = ex32.embed_batch(&BatchBuf::from_rows(&rows32));
+            for i in 0..rows.len() {
+                for (g, w) in out32.row(i).iter().zip(out64.row(i)) {
+                    assert!((*g as f64 - w).abs() <= 1e-4 * (1.0 + w.abs()), "{g} vs {w}");
+                }
             }
         }
     }
@@ -212,7 +269,7 @@ mod tests {
     fn executor_rejects_wrong_dim() {
         let cfg = EmbeddingConfig::new(StructureKind::Circulant, 4, 8, Nonlinearity::Identity)
             .with_seed(1);
-        let mut exec = BatchExecutor::new(EmbeddingPlan::shared(cfg));
+        let mut exec = BatchExecutor::<f64>::new(EmbeddingPlan::shared(cfg));
         let mut out = vec![0.0; 4];
         exec.embed_into(&[1.0; 7], &mut out);
     }

@@ -10,22 +10,35 @@
 //! sizes. This module makes the amortization explicit:
 //!
 //! ```text
-//!   EmbeddingPlan      one per (structure, m, n, f, seed): owns the
-//!        │             sampled model (with its cached FFT plans +
-//!        │             spectra) and the D₁HD₀ diagonals
+//!   EmbeddingPlan        one per (structure, m, n, f, seed): owns the
+//!        │               sampled model (with its cached f64 AND f32
+//!        │               FFT plans + spectra) and the D₁HD₀ diagonals
 //!        ▼
-//!   BatchExecutor      one per thread: reusable MatvecScratch +
-//!        │             projection buffers; embeds a BatchBuf row by
-//!        │             row with zero heap allocation after warmup
+//!   BatchExecutor<S>     one per thread: reusable MatvecScratch<S> +
+//!        │               projection buffers; embeds a BatchBuf<S> row
+//!        │               by row with zero heap allocation after warmup
 //!        ▼
-//!   WorkerPool         std threads + channels; shards a batch across
-//!                      cores, each worker owning its own executor
+//!   WorkerPool<S>        std threads + channels; shards a batch across
+//!                        cores, each worker owning its own executor
 //! ```
 //!
 //! [`BatchBuf`] is the engine's SoA interchange format: one contiguous
-//! `Vec<f64>` per batch instead of a `Vec<Vec<f64>>` per request, so
-//! f32↔f64 conversion at the coordinator boundary happens exactly once
-//! per batch and rows stay cache-friendly.
+//! `Vec<S>` per batch instead of a `Vec<Vec<S>>` per request, so rows
+//! stay cache-friendly and the coordinator boundary does no per-row
+//! bookkeeping.
+//!
+//! # Precision
+//!
+//! The executor and pool are generic over [`EngineScalar`] — the glue
+//! trait that routes each pipeline stage (preprocess → planned matvec →
+//! nonlinearity) to its native-precision implementation. `S = f64` is
+//! the oracle path used by eval and tests; `S = f32` is the serving
+//! path: the wire format already is f32, so an f32 executor runs the
+//! entire pipeline — FWHT, FFT matvec, features — with *no* widening or
+//! narrowing anywhere, halving memory traffic on a bandwidth-bound
+//! workload and giving the autovectorizer twice the SIMD lanes. The
+//! [`Precision`] knob on [`crate::coordinator::BackendSpec`] selects
+//! the instantiation per serving variant.
 
 mod batch;
 mod plan;
@@ -33,18 +46,128 @@ mod pool;
 
 pub use batch::{BatchBuf, BatchExecutor};
 pub use plan::EmbeddingPlan;
-pub use pool::WorkerPool;
+pub use pool::{default_workers, WorkerPool};
 
-use crate::transform::EmbeddingConfig;
+use crate::dsp::Scalar;
+use crate::pmodel::{MatvecScratch, PModel};
+use crate::transform::{EmbeddingConfig, Nonlinearity, Preprocessor};
 use std::sync::Arc;
+
+/// Pipeline precision selector for serving backends: which
+/// [`EngineScalar`] instantiation a native variant executes at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Native single-precision pipeline (serving hot path: half the
+    /// memory traffic, twice the SIMD lanes, ~1e-4 relative error).
+    F32,
+    /// Double-precision pipeline (the oracle; exact reference).
+    #[default]
+    F64,
+}
+
+impl Precision {
+    /// Parse a CLI name (`f32`/`single`/`fp32`, `f64`/`double`/`fp64`).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "single" | "fp32" => Some(Precision::F32),
+            "f64" | "double" | "fp64" => Some(Precision::F64),
+            _ => None,
+        }
+    }
+
+    /// Display name.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F64 => "f64",
+        }
+    }
+}
+
+/// The engine's precision boundary: dispatches each pipeline stage to
+/// the native implementation for `Self`. Implemented for `f64` (oracle)
+/// and `f32` (serving). This is deliberately a *static* dispatch trait —
+/// a [`BatchExecutor<S>`] monomorphizes the full embed loop per
+/// precision, so the f32 instantiation contains no f64 code at all.
+pub trait EngineScalar: Scalar {
+    /// Planned structured matvec at this precision.
+    fn matvec_into(
+        model: &dyn PModel,
+        x: &[Self],
+        y: &mut [Self],
+        scratch: &mut MatvecScratch<Self>,
+    );
+
+    /// In-place `D₁HD₀` preprocessing at this precision.
+    fn preprocess_inplace(pre: &Preprocessor, x: &mut [Self]);
+
+    /// Pointwise feature nonlinearity at this precision.
+    fn features_into(f: Nonlinearity, z: &[Self], out: &mut [Self]);
+}
+
+impl EngineScalar for f64 {
+    fn matvec_into(model: &dyn PModel, x: &[f64], y: &mut [f64], scratch: &mut MatvecScratch) {
+        model.matvec_into(x, y, scratch);
+    }
+
+    fn preprocess_inplace(pre: &Preprocessor, x: &mut [f64]) {
+        pre.apply_inplace(x);
+    }
+
+    fn features_into(f: Nonlinearity, z: &[f64], out: &mut [f64]) {
+        f.apply_into(z, out);
+    }
+}
+
+impl EngineScalar for f32 {
+    fn matvec_into(
+        model: &dyn PModel,
+        x: &[f32],
+        y: &mut [f32],
+        scratch: &mut MatvecScratch<f32>,
+    ) {
+        model.matvec_into_f32(x, y, scratch);
+    }
+
+    fn preprocess_inplace(pre: &Preprocessor, x: &mut [f32]) {
+        pre.apply_inplace_f32(x);
+    }
+
+    fn features_into(f: Nonlinearity, z: &[f32], out: &mut [f32]) {
+        f.apply_into(z, out);
+    }
+}
 
 /// Embed a point set through a planned batch executor: one plan and one
 /// scratch amortized over the whole set. This is the eval-harness path —
 /// experiment sweeps embed hundreds of points per sampled embedding and
-/// previously re-derived buffers for every single one.
+/// previously re-derived buffers for every single one. Runs at the f64
+/// oracle precision; see [`embed_points_f32`] for the serving precision.
+///
+/// ```
+/// use strembed::engine::embed_points;
+/// use strembed::pmodel::StructureKind;
+/// use strembed::transform::{EmbeddingConfig, Nonlinearity};
+///
+/// let cfg = EmbeddingConfig::new(StructureKind::Circulant, 4, 8, Nonlinearity::CosSin)
+///     .with_seed(7);
+/// let feats = embed_points(cfg, &[vec![0.5; 8], vec![-0.5; 8]]);
+/// assert_eq!(feats.len(), 2);
+/// assert_eq!(feats[0].len(), 8); // CosSin doubles m = 4 projections
+/// ```
 pub fn embed_points(config: EmbeddingConfig, points: &[Vec<f64>]) -> Vec<Vec<f64>> {
     let plan = Arc::new(EmbeddingPlan::new(config));
     let mut exec = BatchExecutor::new(plan);
+    let input = BatchBuf::from_rows(points);
+    exec.embed_batch(&input).to_rows()
+}
+
+/// [`embed_points`] at the native f32 serving precision: the whole
+/// pipeline (preprocess, planned matvec, nonlinearity) runs in single
+/// precision with no widening/narrowing copies.
+pub fn embed_points_f32(config: EmbeddingConfig, points: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let plan = Arc::new(EmbeddingPlan::new(config));
+    let mut exec = BatchExecutor::<f32>::new(plan);
     let input = BatchBuf::from_rows(points);
     exec.embed_batch(&input).to_rows()
 }
@@ -67,5 +190,31 @@ mod tests {
         for (g, p) in got.iter().zip(&pts) {
             crate::util::assert_close(g, &emb.embed(p), 1e-12);
         }
+    }
+
+    #[test]
+    fn embed_points_f32_tracks_f64_oracle() {
+        let cfg = EmbeddingConfig::new(StructureKind::Circulant, 8, 16, Nonlinearity::CosSin)
+            .with_seed(13);
+        let mut rng = Rng::new(6);
+        let pts: Vec<Vec<f64>> = (0..5).map(|_| rng.gaussian_vec(16)).collect();
+        let pts32: Vec<Vec<f32>> =
+            pts.iter().map(|p| p.iter().map(|&v| v as f32).collect()).collect();
+        let want = embed_points(cfg.clone(), &pts);
+        let got = embed_points_f32(cfg, &pts32);
+        for (grow, wrow) in got.iter().zip(&want) {
+            for (g, w) in grow.iter().zip(wrow) {
+                assert!((*g as f64 - w).abs() <= 1e-4 * (1.0 + w.abs()), "{g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn precision_parse_and_label() {
+        assert_eq!(Precision::parse("f32"), Some(Precision::F32));
+        assert_eq!(Precision::parse("DOUBLE"), Some(Precision::F64));
+        assert_eq!(Precision::parse("nope"), None);
+        assert_eq!(Precision::F32.label(), "f32");
+        assert_eq!(Precision::default(), Precision::F64);
     }
 }

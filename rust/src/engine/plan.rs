@@ -6,13 +6,22 @@ use std::sync::Arc;
 
 /// A fully planned embedding: the sampled structured matrix (whose
 /// constructor already cached FFT plans, kernel spectra and twist
-/// tables), the `D₁HD₀` preprocessing diagonals, and the nonlinearity.
+/// tables — in *both* precisions), the `D₁HD₀` preprocessing diagonals,
+/// and the nonlinearity.
 ///
 /// A plan is immutable and `Send + Sync`: build it once per
 /// `(StructureKind, m, n, f, seed)` and share it behind an [`Arc`]
 /// across however many [`super::BatchExecutor`]s / worker threads the
 /// deployment needs. All mutable state (scratch, projection buffers)
 /// lives in the executors.
+///
+/// The plan itself is deliberately *not* generic over the precision:
+/// sampling always happens in f64, the f32 plans are narrowed from the
+/// f64 ones at construction, and one shared plan can back f32 and f64
+/// executors simultaneously (e.g. a serving variant running f32 while a
+/// shadow oracle executor double-checks a sample of traffic in f64).
+/// The precision split happens at [`super::BatchExecutor`], via
+/// [`super::EngineScalar`].
 pub struct EmbeddingPlan {
     emb: StructuredEmbedding,
 }

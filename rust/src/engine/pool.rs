@@ -1,23 +1,31 @@
 //! Worker pool: shard a batch across cores, std threads + channels only
-//! (the offline environment has no rayon/crossbeam).
+//! (the offline environment has no rayon/crossbeam). Generic over the
+//! pipeline precision ([`EngineScalar`]) — an f32 pool moves half the
+//! bytes per shard of the f64 oracle pool.
 
-use super::{BatchBuf, BatchExecutor, EmbeddingPlan};
+use super::{BatchBuf, BatchExecutor, EmbeddingPlan, EngineScalar};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
 /// One contiguous row range of a batch, dispatched to a worker.
-struct Job {
-    input: Arc<BatchBuf>,
+struct Job<S: EngineScalar> {
+    input: Arc<BatchBuf<S>>,
     start: usize,
     end: usize,
-    reply: mpsc::Sender<Shard>,
+    reply: mpsc::Sender<Shard<S>>,
 }
 
 /// A worker's finished rows (flat, `(end-start) × out_dim`).
-struct Shard {
+struct Shard<S> {
     start: usize,
-    feats: Vec<f64>,
+    feats: Vec<S>,
+}
+
+/// A sensible worker count for this host (capped: embedding is
+/// memory-bandwidth-bound well before high core counts pay off).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map_or(1, |p| p.get()).min(8)
 }
 
 /// Persistent embedding workers bound to one [`EmbeddingPlan`]. Each
@@ -25,30 +33,30 @@ struct Shard {
 /// pool embeds disjoint row ranges of the same batch fully in parallel
 /// with no locking on the hot path. Results are deterministic: sharding
 /// never changes the per-row output.
-pub struct WorkerPool {
-    txs: Vec<mpsc::Sender<Job>>,
+pub struct WorkerPool<S: EngineScalar = f64> {
+    txs: Vec<mpsc::Sender<Job<S>>>,
     handles: Vec<JoinHandle<()>>,
     out_dim: usize,
 }
 
-impl WorkerPool {
+impl<S: EngineScalar> WorkerPool<S> {
     /// Spawn `workers ≥ 1` threads executing `plan`.
-    pub fn new(plan: Arc<EmbeddingPlan>, workers: usize) -> WorkerPool {
+    pub fn new(plan: Arc<EmbeddingPlan>, workers: usize) -> WorkerPool<S> {
         assert!(workers >= 1, "pool needs at least one worker");
         let out_dim = plan.out_dim();
         let mut txs = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
-            let (tx, rx) = mpsc::channel::<Job>();
+            let (tx, rx) = mpsc::channel::<Job<S>>();
             let wplan = plan.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("strembed-engine-{w}"))
                 .spawn(move || {
-                    let mut exec = BatchExecutor::new(wplan);
+                    let mut exec = BatchExecutor::<S>::new(wplan);
                     let d = exec.plan().out_dim();
                     while let Ok(job) = rx.recv() {
                         let rows = job.end - job.start;
-                        let mut feats = vec![0.0; rows * d];
+                        let mut feats = vec![S::ZERO; rows * d];
                         for (k, i) in (job.start..job.end).enumerate() {
                             exec.embed_into(job.input.row(i), &mut feats[k * d..(k + 1) * d]);
                         }
@@ -61,12 +69,6 @@ impl WorkerPool {
             handles.push(handle);
         }
         WorkerPool { txs, handles, out_dim }
-    }
-
-    /// A sensible worker count for this host (capped: embedding is
-    /// memory-bandwidth-bound well before high core counts pay off).
-    pub fn default_workers() -> usize {
-        std::thread::available_parallelism().map_or(1, |p| p.get()).min(8)
     }
 
     /// Number of workers.
@@ -82,7 +84,7 @@ impl WorkerPool {
     /// Embed every row of `input`, sharding contiguous row ranges across
     /// the workers and reassembling in order. The batch is behind an
     /// [`Arc`] so shards borrow nothing across threads.
-    pub fn embed_batch(&self, input: &Arc<BatchBuf>) -> BatchBuf {
+    pub fn embed_batch(&self, input: &Arc<BatchBuf<S>>) -> BatchBuf<S> {
         let rows = input.rows();
         let mut out = BatchBuf::zeros(rows, self.out_dim);
         if rows == 0 {
@@ -90,7 +92,7 @@ impl WorkerPool {
         }
         let shards = self.txs.len().min(rows);
         let chunk = rows.div_ceil(shards);
-        let (rtx, rrx) = mpsc::channel::<Shard>();
+        let (rtx, rrx) = mpsc::channel::<Shard<S>>();
         let mut sent = 0usize;
         for (w, start) in (0..rows).step_by(chunk).enumerate() {
             let end = (start + chunk).min(rows);
@@ -112,7 +114,7 @@ impl WorkerPool {
     }
 }
 
-impl Drop for WorkerPool {
+impl<S: EngineScalar> Drop for WorkerPool<S> {
     fn drop(&mut self) {
         // closing the channels ends each worker's recv loop
         self.txs.clear();
@@ -144,11 +146,30 @@ mod tests {
             &(0..17).map(|_| rng.gaussian_vec(32)).collect::<Vec<_>>(),
         ));
         let got = pool.embed_batch(&input);
-        let mut exec = BatchExecutor::new(plan);
+        let mut exec = BatchExecutor::<f64>::new(plan);
         let want = exec.embed_batch(&input);
         assert_eq!(got.rows(), want.rows());
         for i in 0..got.rows() {
             crate::util::assert_close(got.row(i), want.row(i), 1e-15);
+        }
+    }
+
+    #[test]
+    fn f32_pool_matches_f32_executor_exactly() {
+        let cfg = EmbeddingConfig::new(StructureKind::Toeplitz, 16, 32, Nonlinearity::CosSin)
+            .with_seed(5);
+        let plan = EmbeddingPlan::shared(cfg);
+        let mut rng = Rng::new(4);
+        let rows: Vec<Vec<f32>> = (0..13)
+            .map(|_| rng.gaussian_vec(32).iter().map(|&v| v as f32).collect())
+            .collect();
+        let input = Arc::new(BatchBuf::from_rows(&rows));
+        let pool = WorkerPool::<f32>::new(plan.clone(), 3);
+        let got = pool.embed_batch(&input);
+        let mut exec = BatchExecutor::<f32>::new(plan);
+        let want = exec.embed_batch(&input);
+        for i in 0..got.rows() {
+            assert_eq!(got.row(i), want.row(i), "row {i}");
         }
     }
 

@@ -21,7 +21,7 @@ fn result(id: &str, tables: Vec<Table>, notes: Vec<String>) -> ExperimentResult 
 }
 
 /// F1 — Figure 1: the circulant coherence graph for n = m = 5 is a
-/// single 5-cycle with chromatic number 3; χ[P] ≤ 3 at every size.
+/// single 5-cycle with chromatic number 3; `χ[P] ≤ 3` at every size.
 pub fn fig1() -> ExperimentResult {
     let mut rng = Rng::new(1);
     let c = StructureKind::Circulant.build(5, 5, &mut rng);
@@ -61,7 +61,7 @@ pub fn fig1() -> ExperimentResult {
 }
 
 /// F2 — Figure 2: Toeplitz coherence graphs are unions of paths; the
-/// bigger budget (t = n+m−1 vs n) lowers χ[P] from 3 to 2.
+/// bigger budget (t = n+m−1 vs n) lowers `χ[P]` from 3 to 2.
 pub fn fig2() -> ExperimentResult {
     let mut rng = Rng::new(2);
     let toep = StructureKind::Toeplitz.build(5, 5, &mut rng);

@@ -8,30 +8,63 @@
 //! Toeplitz, Hankel, skew-circulant and low-displacement-rank matrices as
 //! special cases, and proves concentration results for nonlinear embeddings
 //! computed through them. Quality is governed by combinatorial properties of
-//! *coherence graphs* (chromatic number χ[P], coherence μ[P], unicoherence
-//! μ̃[P]).
+//! *coherence graphs* (chromatic number `χ[P]`, coherence `μ[P]`, unicoherence
+//! `μ̃[P]`).
 //!
 //! This crate implements:
 //! - the P-model and all structured matrix families ([`pmodel`]),
-//! - fast transforms: FFT, FWHT ([`dsp`]),
+//! - fast transforms: FFT, FWHT — precision-generic over the
+//!   [`dsp::Scalar`] trait ([`dsp`]),
 //! - coherence graphs + their combinatorial statistics ([`coherence`]),
 //! - the full embedding pipeline `x → D₀ → H → D₁ → A → f` ([`transform`]),
 //! - exact kernels for ground truth ([`exact`]),
 //! - a planned batch execution engine — amortized FFT plans/spectra,
 //!   zero-allocation batch executors in SoA layout, and a worker pool
-//!   that shards batches across cores ([`engine`]),
+//!   that shards batches across cores, all monomorphized per precision
+//!   through [`engine::EngineScalar`] ([`engine`]),
 //! - an experiment/eval harness regenerating the paper's figures and
 //!   validating its theorems, with point sets embedded through the
 //!   engine ([`eval`]),
 //! - a PJRT runtime that loads JAX/Pallas AOT artifacts ([`runtime`],
 //!   behind the `pjrt` feature),
-//! - an embedding-serving coordinator: router, dynamic batcher, metrics
-//!   ([`coordinator`]) — native variants execute through the engine.
+//! - an embedding-serving coordinator: router, dynamic batcher, metrics,
+//!   per-variant precision knob ([`coordinator`]) — native variants
+//!   execute through the engine.
 //!
 //! Layering: `dsp`/`rng` → `pmodel` → `transform` → **`engine`** →
 //! `coordinator`/`eval`. The engine is the only layer the serving stack
 //! calls for native compute; per-vector `StructuredEmbedding::embed`
 //! remains the reference path and test oracle.
+//!
+//! # Precision
+//!
+//! Two pipeline precisions share one body of kernel code:
+//!
+//! - **f64** — the oracle. Tests, eval and coherence math run here;
+//!   correctness is always stated against this path.
+//! - **f32** — the serving path. The wire format is f32, so a
+//!   [`coordinator::Precision::F32`] variant executes preprocess,
+//!   planned matvec and nonlinearity natively in single precision with
+//!   no widening/narrowing copies: half the memory traffic of the
+//!   oracle on a bandwidth-bound workload, twice the SIMD lanes, and
+//!   outputs within 1e-4 relative error of the oracle.
+//!
+//! Quick start with the engine (the f32 variant is
+//! [`engine::embed_points_f32`]):
+//!
+//! ```
+//! use strembed::engine::embed_points;
+//! use strembed::pmodel::StructureKind;
+//! use strembed::transform::{EmbeddingConfig, Nonlinearity};
+//!
+//! let cfg = EmbeddingConfig::new(StructureKind::Toeplitz, 8, 16, Nonlinearity::Relu)
+//!     .with_seed(2016);
+//! let feats = embed_points(cfg, &[vec![0.25; 16]]);
+//! assert_eq!(feats[0].len(), 8);
+//! ```
+//!
+//! See `ARCHITECTURE.md` at the repository root for the full layer map
+//! and the rules that keep the two precisions coherent.
 pub mod cli;
 pub mod coherence;
 pub mod coordinator;

@@ -21,6 +21,9 @@ pub struct Circulant {
     /// packed real-FFT plan + precomputed conj(half-spectrum of g) when
     /// n is a power of two (§Perf: half-size transform, cached kernel)
     plan: Option<(RealFft, Vec<Complex>)>,
+    /// native f32 twin of `plan`: f32 twiddles plus the f64 kernel
+    /// spectrum narrowed once at construction (serving precision)
+    plan32: Option<(RealFft<f32>, Vec<Complex<f32>>)>,
 }
 
 impl Circulant {
@@ -35,14 +38,15 @@ impl Circulant {
     pub fn from_budget(m: usize, g: Vec<f64>) -> Circulant {
         let n = g.len();
         assert!(m <= n);
-        let plan = if crate::util::is_pow2(n) && n >= 2 {
+        let (plan, plan32) = if crate::util::is_pow2(n) && n >= 2 {
             let fft = RealFft::new(n);
             let spec: Vec<Complex> = fft.forward(&g).iter().map(|c| c.conj()).collect();
-            Some((fft, spec))
+            let spec32: Vec<Complex<f32>> = spec.iter().map(|c| c.cast()).collect();
+            (Some((fft, spec)), Some((RealFft::new(n), spec32)))
         } else {
-            None
+            (None, None)
         };
-        Circulant { m, n, g, plan }
+        Circulant { m, n, g, plan, plan32 }
     }
 
     /// The budget vector g.
@@ -121,6 +125,25 @@ impl PModel for Circulant {
                 let out = self.matvec_naive(x);
                 y.copy_from_slice(&out);
             }
+        }
+    }
+
+    fn matvec_into_f32(&self, x: &[f32], y: &mut [f32], scratch: &mut MatvecScratch<f32>) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.m);
+        match &self.plan32 {
+            Some((fft, gspec)) => {
+                let spec = grown(&mut scratch.c1, fft.spectrum_len());
+                let half = grown(&mut scratch.c2, fft.scratch_len());
+                fft.forward_into(x, spec, half);
+                for (v, w) in spec.iter_mut().zip(gspec) {
+                    *v = v.mul(*w);
+                }
+                let full = grown(&mut scratch.r2, self.n);
+                fft.inverse_into(spec, full, half);
+                y.copy_from_slice(&full[..self.m]);
+            }
+            None => super::widen_matvec_into_f32(self, x, y),
         }
     }
 

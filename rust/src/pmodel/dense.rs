@@ -2,7 +2,7 @@
 //!
 //! Budget t = m·n (one fresh Gaussian per entry, `P_i` selects the i-th
 //! block of n). All coherence graphs are empty: σ_{i1,i2}(n1,n2) = 0 for
-//! any (i1,n1) ≠ (i2,n2), so χ[P] = 0, μ[P] = 0, μ̃[P] = 0 — the strongest
+//! any (i1,n1) ≠ (i2,n2), so `χ[P] = 0`, `μ[P] = 0`, `μ̃[P] = 0` — the strongest
 //! concentration, at quadratic time/space cost.
 
 use super::{MatvecScratch, PModel};
@@ -13,12 +13,17 @@ pub struct DenseGaussian {
     m: usize,
     n: usize,
     a: Vec<f64>,
+    /// f32 copy of the matrix (narrowed once at construction) so the
+    /// serving-precision matvec streams half the bytes of the oracle
+    a32: Vec<f32>,
 }
 
 impl DenseGaussian {
     /// Sample an m×n iid N(0,1) matrix.
     pub fn new(m: usize, n: usize, rng: &mut Rng) -> DenseGaussian {
-        DenseGaussian { m, n, a: rng.gaussian_vec(m * n) }
+        let a = rng.gaussian_vec(m * n);
+        let a32 = a.iter().map(|&v| v as f32).collect();
+        DenseGaussian { m, n, a, a32 }
     }
 
     /// Entry accessor.
@@ -69,6 +74,29 @@ impl PModel for DenseGaussian {
         for (i, yi) in y.iter_mut().enumerate() {
             let row = &self.a[i * self.n..(i + 1) * self.n];
             *yi = row.iter().zip(x).map(|(r, v)| r * v).sum();
+        }
+    }
+
+    fn matvec_into_f32(&self, x: &[f32], y: &mut [f32], _scratch: &mut MatvecScratch<f32>) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.m);
+        for (i, yi) in y.iter_mut().enumerate() {
+            let row = &self.a32[i * self.n..(i + 1) * self.n];
+            // eight-lane partial sums: keeps the reduction associative
+            // for the autovectorizer and bounds the f32 error growth
+            let mut acc = [0.0f32; 8];
+            let mut rc = row.chunks_exact(8);
+            let mut xc = x.chunks_exact(8);
+            for (r, v) in (&mut rc).zip(&mut xc) {
+                for k in 0..8 {
+                    acc[k] += r[k] * v[k];
+                }
+            }
+            let mut s: f32 = acc.iter().sum();
+            for (r, v) in rc.remainder().iter().zip(xc.remainder()) {
+                s += r * v;
+            }
+            *yi = s;
         }
     }
 

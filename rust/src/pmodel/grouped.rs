@@ -100,6 +100,17 @@ impl PModel for GroupedCirculant {
         }
     }
 
+    fn matvec_into_f32(&self, x: &[f32], y: &mut [f32], scratch: &mut MatvecScratch<f32>) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.m);
+        let mut off = 0;
+        for block in &self.blocks {
+            let rows = block.m();
+            block.matvec_into_f32(x, &mut y[off..off + rows], scratch);
+            off += rows;
+        }
+    }
+
     fn matvec_flops(&self) -> usize {
         self.blocks.iter().map(|b| b.matvec_flops()).sum()
     }

@@ -2,7 +2,7 @@
 //!
 //! Constant along *anti*-diagonals: `A[i][j] = g[i + j]` with budget
 //! t = n + m − 1. A Hankel matrix is the column-reversed image of a
-//! Toeplitz matrix and shares all its structural properties (χ[P] ≤ 2).
+//! Toeplitz matrix and shares all its structural properties (`χ[P] ≤ 2`).
 //!
 //! Fast matvec: `y[i] = Σ_j g[i+j]·x[j] = linconv(reverse(x), g)[n−1+i]`.
 
@@ -27,7 +27,7 @@ impl Hankel {
         Hankel::from_budget(m, n, rng.gaussian_vec(n + m - 1))
     }
 
-    /// Build from an explicit budget (A[i][j] = g[i+j]).
+    /// Build from an explicit budget (`A[i][j] = g[i+j]`).
     pub fn from_budget(m: usize, n: usize, g: Vec<f64>) -> Hankel {
         assert_eq!(g.len(), n + m - 1);
         // T[i][j'] = H[i][n-1-j'] = g[i + n-1 - j'] is Toeplitz with
@@ -94,6 +94,20 @@ impl PModel for Hankel {
             }
         }
         self.toep.matvec_into(&xr[..self.n], y, scratch);
+        scratch.r3 = xr;
+    }
+
+    fn matvec_into_f32(&self, x: &[f32], y: &mut [f32], scratch: &mut MatvecScratch<f32>) {
+        assert_eq!(x.len(), self.n);
+        // Same staging dance as the f64 path, on the f32 scratch.
+        let mut xr = std::mem::take(&mut scratch.r3);
+        {
+            let rev = grown(&mut xr, self.n);
+            for (r, &v) in rev.iter_mut().zip(x.iter().rev()) {
+                *r = v;
+            }
+        }
+        self.toep.matvec_into_f32(&xr[..self.n], y, scratch);
         scratch.r3 = xr;
     }
 }

@@ -8,7 +8,7 @@
 //! norm (paper's normalization property).
 //!
 //! Displacement rank r is the paper's budget dial: larger r ⇒ larger t ⇒
-//! smaller |σ| ⇒ smaller μ[P], μ̃[P] ⇒ better concentration.
+//! smaller |σ| ⇒ smaller `μ[P]`, `μ̃[P]` ⇒ better concentration.
 //!
 //! Matvec: r circulant+negacyclic convolutions, O(r·n log n).
 
@@ -28,6 +28,8 @@ pub struct LowDisplacementRank {
     /// per-block cached plans (§Perf): negacyclic plan for h^b and
     /// circulant-convolution plan for g^b; None for non-pow2 n
     plans: Option<Vec<(NegacyclicPlan, ConvPlan)>>,
+    /// native f32 twins of `plans` (kernels narrowed once at construction)
+    plans32: Option<Vec<(NegacyclicPlan<f32>, ConvPlan<f32>)>>,
 }
 
 impl LowDisplacementRank {
@@ -50,17 +52,26 @@ impl LowDisplacementRank {
                 hv
             })
             .collect();
-        let plans = if crate::util::is_pow2(n) {
-            Some(
-                g.iter()
-                    .zip(&h)
-                    .map(|(gb, hb)| (NegacyclicPlan::new(hb), ConvPlan::new(gb)))
-                    .collect(),
-            )
+        let (plans, plans32) = if crate::util::is_pow2(n) {
+            let p64 = g
+                .iter()
+                .zip(&h)
+                .map(|(gb, hb)| (NegacyclicPlan::new(hb), ConvPlan::new(gb)))
+                .collect();
+            let p32 = g
+                .iter()
+                .zip(&h)
+                .map(|(gb, hb)| {
+                    let gb32: Vec<f32> = gb.iter().map(|&v| v as f32).collect();
+                    let hb32: Vec<f32> = hb.iter().map(|&v| v as f32).collect();
+                    (NegacyclicPlan::new(&hb32), ConvPlan::new(&gb32))
+                })
+                .collect();
+            (Some(p64), Some(p32))
         } else {
-            None
+            (None, None)
         };
-        LowDisplacementRank { m, n, r, g, h, plans }
+        LowDisplacementRank { m, n, r, g, h, plans, plans32 }
     }
 
     /// Displacement rank.
@@ -183,6 +194,36 @@ impl PModel for LowDisplacementRank {
                 let out = self.matvec(x);
                 y.copy_from_slice(&out);
             }
+        }
+    }
+
+    fn matvec_into_f32(&self, x: &[f32], y: &mut [f32], scratch: &mut MatvecScratch<f32>) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.m);
+        match &self.plans32 {
+            Some(plans) => {
+                y.fill(0.0);
+                // same move-out staging as the f64 path, on f32 buffers
+                let mut w = std::mem::take(&mut scratch.r1);
+                grown(&mut w, self.n);
+                let mut yb = std::mem::take(&mut scratch.r2);
+                grown(&mut yb, self.n);
+                for (neg, conv) in plans {
+                    neg.apply_into(x, &mut w[..self.n], &mut scratch.c1);
+                    conv.apply_into(
+                        &w[..self.n],
+                        &mut yb[..self.n],
+                        &mut scratch.c1,
+                        &mut scratch.c2,
+                    );
+                    for (yi, v) in y.iter_mut().zip(&yb) {
+                        *yi += *v;
+                    }
+                }
+                scratch.r1 = w;
+                scratch.r2 = yb;
+            }
+            None => super::widen_matvec_into_f32(self, x, y),
         }
     }
 

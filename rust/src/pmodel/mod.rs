@@ -22,6 +22,17 @@
 //! caller-owned output row and draws all temporaries from a reusable
 //! [`MatvecScratch`] — zero heap allocation per call once the scratch
 //! has warmed up. The [`crate::engine`] layer builds on this.
+//!
+//! Precision: the trait itself stays f64 (the oracle used by `sigma`,
+//! coherence statistics and tests), but every family also exposes a
+//! *native single-precision* planned path, [`PModel::matvec_into_f32`],
+//! backed by `f32` FFT plans built alongside the f64 ones at
+//! construction. The two precisions describe the *same* sampled matrix:
+//! budgets are always drawn in f64 and the f32 plan is a one-time
+//! narrowing of the f64 spectra (see [`crate::dsp::scalar`]). Keeping
+//! the f32 entry point a concrete method (rather than making the trait
+//! generic) preserves object safety — the whole stack passes models
+//! around as trait objects.
 
 mod circulant;
 mod dense;
@@ -44,28 +55,36 @@ pub use toeplitz::Toeplitz;
 use crate::dsp::Complex;
 use crate::rng::Rng;
 
-/// Reusable work buffers for [`PModel::matvec_into`]. One scratch serves
-/// any model (buffers grow to the high-water mark on first use and are
-/// reused afterwards), so a batch executor allocates exactly once no
-/// matter how many vectors it embeds.
+/// Reusable work buffers for [`PModel::matvec_into`] (at `f64`) and
+/// [`PModel::matvec_into_f32`] (at `f32`). One scratch serves any model
+/// (buffers grow to the high-water mark on first use and are reused
+/// afterwards), so a batch executor allocates exactly once no matter
+/// how many vectors it embeds. The unparameterized name defaults to the
+/// f64 oracle precision.
 #[derive(Debug, Default)]
-pub struct MatvecScratch {
+pub struct MatvecScratch<S = f64> {
     /// complex buffer: spectra / twisted signals
-    pub c1: Vec<Complex>,
+    pub c1: Vec<Complex<S>>,
     /// complex buffer: packed-real-FFT scratch
-    pub c2: Vec<Complex>,
+    pub c2: Vec<Complex<S>>,
     /// real buffer: padded inputs / per-block intermediates
-    pub r1: Vec<f64>,
+    pub r1: Vec<S>,
     /// real buffer: full-length inverse-transform outputs
-    pub r2: Vec<f64>,
+    pub r2: Vec<S>,
     /// real buffer: adapter staging (e.g. Hankel's reversed input)
-    pub r3: Vec<f64>,
+    pub r3: Vec<S>,
 }
 
-impl MatvecScratch {
+impl<S> MatvecScratch<S> {
     /// Empty scratch; buffers grow on demand.
-    pub fn new() -> MatvecScratch {
-        MatvecScratch::default()
+    pub fn new() -> MatvecScratch<S> {
+        MatvecScratch {
+            c1: Vec::new(),
+            c2: Vec::new(),
+            r1: Vec::new(),
+            r2: Vec::new(),
+            r3: Vec::new(),
+        }
     }
 }
 
@@ -110,6 +129,23 @@ pub trait PModel: Send + Sync {
         y.copy_from_slice(&out);
     }
 
+    /// Native single-precision planned matvec (`y.len() == m`), drawing
+    /// all temporaries from an f32 `scratch`. Families with FFT plans
+    /// override this with an end-to-end f32 path (f32 twiddles, f32
+    /// spectra, f32 buffers — no widening anywhere); the default widens
+    /// to the f64 reference path (correct, but allocates and converts —
+    /// only reached by families without a plan, e.g. non-power-of-two
+    /// shapes).
+    fn matvec_into_f32(&self, x: &[f32], y: &mut [f32], scratch: &mut MatvecScratch<f32>) {
+        let _ = scratch;
+        assert_eq!(x.len(), self.n());
+        assert_eq!(y.len(), self.m());
+        let xw: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        for (yi, v) in y.iter_mut().zip(&self.matvec(&xw)) {
+            *yi = *v as f32;
+        }
+    }
+
     /// Number of f64s that must be *stored* to represent A (the paper's
     /// space-complexity claim; dense needs m·n, structured need O(t)).
     fn storage_floats(&self) -> usize {
@@ -146,6 +182,16 @@ pub trait PModel: Send + Sync {
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Widening fallback shared by the families' `matvec_into_f32`
+/// overrides for shapes without a native f32 plan (non-power-of-two n):
+/// run the f64 reference matvec and narrow the result.
+pub(crate) fn widen_matvec_into_f32(model: &dyn PModel, x: &[f32], y: &mut [f32]) {
+    let xw: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    for (yi, v) in y.iter_mut().zip(&model.matvec(&xw)) {
+        *yi = *v as f32;
+    }
 }
 
 /// Structure families selectable from the CLI / eval harness.
@@ -270,12 +316,14 @@ pub(crate) mod test_support {
     use super::*;
 
     /// Check fast matvec against naive materialized matvec, and the
-    /// planned [`PModel::matvec_into`] path against both — including
-    /// scratch reuse across calls.
+    /// planned [`PModel::matvec_into`] / [`PModel::matvec_into_f32`]
+    /// paths against both — including scratch reuse across calls.
     pub fn check_matvec(model: &dyn PModel, seed: u64) {
         let mut rng = Rng::new(seed);
         let mut scratch = MatvecScratch::new();
+        let mut scratch32 = MatvecScratch::<f32>::new();
         let mut y = vec![0.0; model.m()];
+        let mut y32 = vec![0.0f32; model.m()];
         for _round in 0..2 {
             let x = rng.gaussian_vec(model.n());
             let fast = model.matvec(&x);
@@ -284,6 +332,15 @@ pub(crate) mod test_support {
             crate::util::assert_close(&fast, &naive, 1e-8);
             model.matvec_into(&x, &mut y, &mut scratch);
             crate::util::assert_close(&y, &fast, 1e-12);
+            let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+            model.matvec_into_f32(&x32, &mut y32, &mut scratch32);
+            for (g, w) in y32.iter().zip(&fast) {
+                assert!(
+                    (*g as f64 - w).abs() <= 1e-4 * (1.0 + w.abs()),
+                    "{} f32 path: {g} vs {w}",
+                    model.name()
+                );
+            }
         }
     }
 

@@ -18,6 +18,8 @@ pub struct SkewCirculant {
     /// (§Perf: twist tables + kernel FFT computed once); None for
     /// non-power-of-two n (naive fallback)
     plan: Option<NegacyclicPlan>,
+    /// native f32 twin of `plan` (kernel narrowed once at construction)
+    plan32: Option<NegacyclicPlan<f32>>,
 }
 
 impl SkewCirculant {
@@ -31,18 +33,19 @@ impl SkewCirculant {
     pub fn from_budget(m: usize, g: Vec<f64>) -> SkewCirculant {
         let n = g.len();
         assert!(m <= n);
-        let plan = if crate::util::is_pow2(n) {
+        let (plan, plan32) = if crate::util::is_pow2(n) {
             // column-form generator: g'[0] = g[0], g'[k] = -g[n-k]
             let mut g2 = vec![0.0; n];
             g2[0] = g[0];
             for k in 1..n {
                 g2[k] = -g[n - k];
             }
-            Some(NegacyclicPlan::new(&g2))
+            let g2_32: Vec<f32> = g2.iter().map(|&v| v as f32).collect();
+            (Some(NegacyclicPlan::new(&g2)), Some(NegacyclicPlan::new(&g2_32)))
         } else {
-            None
+            (None, None)
         };
-        SkewCirculant { m, n, g, plan }
+        SkewCirculant { m, n, g, plan, plan32 }
     }
 
     /// Signed budget coefficient of entry (i, j): (index, sign).
@@ -124,6 +127,15 @@ impl PModel for SkewCirculant {
                 let out = self.matvec(x);
                 y.copy_from_slice(&out);
             }
+        }
+    }
+
+    fn matvec_into_f32(&self, x: &[f32], y: &mut [f32], scratch: &mut MatvecScratch<f32>) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.m);
+        match &self.plan32 {
+            Some(plan) => plan.apply_into(x, y, &mut scratch.c1),
+            None => super::widen_matvec_into_f32(self, x, y),
         }
     }
 }

@@ -98,6 +98,16 @@ impl PModel for Stacked {
         }
     }
 
+    fn matvec_into_f32(&self, x: &[f32], y: &mut [f32], scratch: &mut MatvecScratch<f32>) {
+        assert_eq!(y.len(), self.m);
+        let mut off = 0;
+        for block in &self.blocks {
+            let rows = block.m();
+            block.matvec_into_f32(x, &mut y[off..off + rows], scratch);
+            off += rows;
+        }
+    }
+
     fn matvec_flops(&self) -> usize {
         self.blocks.iter().map(|b| b.matvec_flops()).sum()
     }

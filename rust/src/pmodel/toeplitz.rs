@@ -21,6 +21,8 @@ pub struct Toeplitz {
     g: Vec<f64>,
     /// circulant-embedding packed-real-FFT plan: (plan, conj half-spectrum)
     plan: (RealFft, Vec<Complex>),
+    /// native f32 twin of `plan` (spectrum narrowed once at construction)
+    plan32: (RealFft<f32>, Vec<Complex<f32>>),
     embed_n: usize,
 }
 
@@ -48,7 +50,8 @@ impl Toeplitz {
         let mut c = c;
         c.resize(embed_n, 0.0);
         let spec: Vec<Complex> = fft.forward(&c).iter().map(|v| v.conj()).collect();
-        Toeplitz { m, n, g, plan: (fft, spec), embed_n }
+        let spec32: Vec<Complex<f32>> = spec.iter().map(|v| v.cast()).collect();
+        Toeplitz { m, n, g, plan: (fft, spec), plan32: (RealFft::new(embed_n), spec32), embed_n }
     }
 
     fn budget_index(&self, i: usize, j: usize) -> usize {
@@ -109,6 +112,24 @@ impl PModel for Toeplitz {
         assert_eq!(x.len(), self.n);
         assert_eq!(y.len(), self.m);
         let (fft, cspec) = &self.plan;
+        let xp = grown(&mut scratch.r1, self.embed_n);
+        xp[..self.n].copy_from_slice(x);
+        xp[self.n..].fill(0.0);
+        let spec = grown(&mut scratch.c1, fft.spectrum_len());
+        let half = grown(&mut scratch.c2, fft.scratch_len());
+        fft.forward_into(xp, spec, half);
+        for (v, w) in spec.iter_mut().zip(cspec) {
+            *v = v.mul(*w);
+        }
+        let full = grown(&mut scratch.r2, self.embed_n);
+        fft.inverse_into(spec, full, half);
+        y.copy_from_slice(&full[..self.m]);
+    }
+
+    fn matvec_into_f32(&self, x: &[f32], y: &mut [f32], scratch: &mut MatvecScratch<f32>) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.m);
+        let (fft, cspec) = &self.plan32;
         let xp = grown(&mut scratch.r1, self.embed_n);
         xp[..self.n].copy_from_slice(x);
         xp[self.n..].fill(0.0);

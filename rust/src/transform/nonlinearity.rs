@@ -11,6 +11,12 @@
 //! `CosSin` is *dimension-doubling*: each projection z contributes the
 //! pair (cos z, sin z) so that the feature dot product estimates
 //! `E[cos⟨r, v¹−v²⟩]` exactly.
+//!
+//! The application entry points are generic over [`Scalar`] so the f32
+//! serving pipeline applies features without ever widening; `x.cos()`
+//! etc. resolve to the native precision's intrinsics.
+
+use crate::dsp::Scalar;
 
 /// A pointwise feature nonlinearity.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -61,21 +67,33 @@ impl Nonlinearity {
 
     /// Scalar f (not defined for CosSin, which is vector-valued).
     pub fn scalar(&self, x: f64) -> f64 {
+        self.scalar_at(x)
+    }
+
+    /// Precision-generic scalar f — the body shared by the f32 and f64
+    /// pipelines (not defined for CosSin, which is vector-valued).
+    pub fn scalar_at<S: Scalar>(&self, x: S) -> S {
         match self {
             Nonlinearity::Identity => x,
             Nonlinearity::Heaviside => {
-                if x >= 0.0 {
-                    1.0
+                if x >= S::ZERO {
+                    S::ONE
                 } else {
-                    0.0
+                    S::ZERO
                 }
             }
-            Nonlinearity::Relu => x.max(0.0),
+            Nonlinearity::Relu => {
+                if x >= S::ZERO {
+                    x
+                } else {
+                    S::ZERO
+                }
+            }
             Nonlinearity::SquaredRelu => {
-                if x >= 0.0 {
+                if x >= S::ZERO {
                     x * x
                 } else {
-                    0.0
+                    S::ZERO
                 }
             }
             Nonlinearity::CosSin => panic!("CosSin is vector-valued; use apply()"),
@@ -84,15 +102,16 @@ impl Nonlinearity {
 
     /// Apply to a projection vector z (length m), producing features of
     /// length `out_dim(m)`. No scaling: estimators divide by m.
-    pub fn apply(&self, z: &[f64]) -> Vec<f64> {
-        let mut out = vec![0.0; self.out_dim(z.len())];
+    pub fn apply<S: Scalar>(&self, z: &[S]) -> Vec<S> {
+        let mut out = vec![S::ZERO; self.out_dim(z.len())];
         self.apply_into(z, &mut out);
         out
     }
 
     /// Allocation-free variant writing features into `out`
-    /// (length `out_dim(z.len())`) — the batch-engine hot path.
-    pub fn apply_into(&self, z: &[f64], out: &mut [f64]) {
+    /// (length `out_dim(z.len())`) — the batch-engine hot path, generic
+    /// over the pipeline precision.
+    pub fn apply_into<S: Scalar>(&self, z: &[S], out: &mut [S]) {
         assert_eq!(out.len(), self.out_dim(z.len()));
         match self {
             Nonlinearity::CosSin => {
@@ -104,7 +123,7 @@ impl Nonlinearity {
             }
             _ => {
                 for (o, &x) in out.iter_mut().zip(z) {
-                    *o = self.scalar(x);
+                    *o = self.scalar_at(x);
                 }
             }
         }

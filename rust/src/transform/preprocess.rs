@@ -12,17 +12,27 @@ use crate::rng::Rng;
 
 /// The `D₁ H D₀` preprocessing operator. Input dimension must be a power
 /// of two (use [`Preprocessor::pad`] to lift arbitrary data).
+///
+/// The ±1 diagonals are stored in both precisions (narrowing ±1 is
+/// exact), so [`Preprocessor::apply_inplace_f32`] runs the whole mix —
+/// diagonal, FWHT, diagonal — natively in f32 on the serving path.
 #[derive(Debug, Clone)]
 pub struct Preprocessor {
     d0: Vec<f64>,
     d1: Vec<f64>,
+    d0f: Vec<f32>,
+    d1f: Vec<f32>,
 }
 
 impl Preprocessor {
     /// Sample fresh diagonals for dimension `n` (power of two).
     pub fn new(n: usize, rng: &mut Rng) -> Preprocessor {
         assert!(crate::util::is_pow2(n), "preprocessing needs power-of-two n, got {n}");
-        Preprocessor { d0: rng.rademacher_vec(n), d1: rng.rademacher_vec(n) }
+        let d0 = rng.rademacher_vec(n);
+        let d1 = rng.rademacher_vec(n);
+        let d0f = d0.iter().map(|&v| v as f32).collect();
+        let d1f = d1.iter().map(|&v| v as f32).collect();
+        Preprocessor { d0, d1, d0f, d1f }
     }
 
     /// Dimension.
@@ -38,6 +48,19 @@ impl Preprocessor {
         }
         fwht_normalized(x);
         for (v, d) in x.iter_mut().zip(&self.d1) {
+            *v *= d;
+        }
+    }
+
+    /// Apply `D₁ H D₀` in place, natively in f32 (no widening — the
+    /// serving-precision hot path).
+    pub fn apply_inplace_f32(&self, x: &mut [f32]) {
+        assert_eq!(x.len(), self.n());
+        for (v, d) in x.iter_mut().zip(&self.d0f) {
+            *v *= d;
+        }
+        fwht_normalized(x);
+        for (v, d) in x.iter_mut().zip(&self.d1f) {
             *v *= d;
         }
     }
@@ -109,6 +132,21 @@ mod tests {
         let p2 = Preprocessor::new(8, &mut r2);
         let x = [1.0, -2.0, 3.0, 0.5, 0.0, 1.0, -1.0, 2.0];
         crate::util::assert_close(&p1.apply(&x), &p2.apply(&x), 1e-15);
+    }
+
+    #[test]
+    fn f32_path_tracks_f64() {
+        let n = 128;
+        let mut rng = crate::rng::Rng::new(9);
+        let pre = Preprocessor::new(n, &mut rng);
+        let mut g = crate::rng::Rng::new(10);
+        let x = g.gaussian_vec(n);
+        let want = pre.apply(&x);
+        let mut got: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        pre.apply_inplace_f32(&mut got);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((*a as f64 - b).abs() <= 1e-5 * (1.0 + b.abs()));
+        }
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Property tests for the batch execution engine: the planned SoA path
 //! ([`BatchExecutor`], [`WorkerPool`]) must agree row-for-row with the
 //! per-vector reference path (`StructuredEmbedding::embed`) across every
-//! structure family, batch size, nonlinearity and preprocessing mode.
+//! structure family, batch size, nonlinearity and preprocessing mode —
+//! and the native f32 pipeline must track the f64 oracle within 1e-4
+//! relative error.
 
 use std::sync::Arc;
 use strembed::engine::{BatchBuf, BatchExecutor, EmbeddingPlan, WorkerPool};
@@ -13,6 +15,33 @@ use strembed::transform::{EmbeddingConfig, Nonlinearity, StructuredEmbedding};
 fn random_batch(rows: usize, n: usize, seed: u64) -> Vec<Vec<f64>> {
     let mut rng = Rng::new(seed);
     (0..rows).map(|_| rng.gaussian_vec(n)).collect()
+}
+
+fn narrow_batch(rows: &[Vec<f64>]) -> Vec<Vec<f32>> {
+    rows.iter().map(|r| r.iter().map(|&v| v as f32).collect()).collect()
+}
+
+/// Relative tolerance of the f32 pipeline against the f64 oracle.
+const F32_REL_TOL: f64 = 1e-4;
+
+fn assert_f32_engine_matches_f64_oracle(cfg: EmbeddingConfig, batch: usize, seed: u64) {
+    let plan = EmbeddingPlan::shared(cfg);
+    let rows = random_batch(batch, plan.n(), seed);
+    let mut ex64 = BatchExecutor::<f64>::new(plan.clone());
+    let mut ex32 = BatchExecutor::<f32>::new(plan.clone());
+    let out64 = ex64.embed_batch(&BatchBuf::from_rows(&rows));
+    let out32 = ex32.embed_batch(&BatchBuf::from_rows(&narrow_batch(&rows)));
+    assert_eq!(out32.rows(), batch);
+    assert_eq!(out32.dim(), plan.out_dim());
+    for i in 0..batch {
+        for (g, w) in out32.row(i).iter().zip(out64.row(i)) {
+            assert!(
+                (*g as f64 - w).abs() <= F32_REL_TOL * (1.0 + w.abs()),
+                "{} batch={batch} row {i}: f32 {g} vs f64 {w}",
+                plan.config().structure.label()
+            );
+        }
+    }
 }
 
 fn assert_engine_matches_reference(cfg: EmbeddingConfig, batch: usize, seed: u64) {
@@ -96,16 +125,93 @@ fn executor_matches_embed_random_shapes() {
 }
 
 #[test]
+fn f32_matches_f64_oracle_all_families_and_batches() {
+    for kind in StructureKind::all() {
+        for &batch in &[1usize, 7, 64] {
+            for &preprocess in &[true, false] {
+                let cfg = EmbeddingConfig::new(kind, 8, 16, Nonlinearity::CosSin)
+                    .with_preprocess(preprocess)
+                    .with_seed(42);
+                assert_f32_engine_matches_f64_oracle(cfg, batch, 2000 + batch as u64);
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_matches_f64_oracle_continuous_nonlinearities() {
+    // Heaviside is excluded on purpose: a projection within f32 noise of
+    // zero legitimately flips the 0/1 feature, so the discontinuous sign
+    // hash has no meaningful pointwise f32-vs-f64 tolerance. Every
+    // continuous nonlinearity must track the oracle.
+    for kind in StructureKind::all() {
+        for f in [
+            Nonlinearity::Identity,
+            Nonlinearity::Relu,
+            Nonlinearity::SquaredRelu,
+            Nonlinearity::CosSin,
+        ] {
+            let cfg = EmbeddingConfig::new(kind, 8, 16, f).with_seed(7);
+            assert_f32_engine_matches_f64_oracle(cfg, 7, 66);
+        }
+    }
+}
+
+#[test]
+fn f32_matches_f64_oracle_when_m_exceeds_n() {
+    // m > n exercises the Stacked adapter under the native f32 path
+    for kind in [
+        StructureKind::Circulant,
+        StructureKind::SkewCirculant,
+        StructureKind::Toeplitz,
+        StructureKind::Hankel,
+        StructureKind::Ldr(2),
+    ] {
+        let cfg = EmbeddingConfig::new(kind, 24, 16, Nonlinearity::Relu).with_seed(3);
+        assert_f32_engine_matches_f64_oracle(cfg, 7, 88);
+    }
+}
+
+#[test]
+fn f32_matches_f64_oracle_at_serving_sizes() {
+    // the acceptance shape: n = 1024 — f32 FFT error must stay inside
+    // the 1e-4 relative budget even at real serving dimensions
+    for kind in [StructureKind::Circulant, StructureKind::Toeplitz] {
+        let cfg = EmbeddingConfig::new(kind, 256, 1024, Nonlinearity::CosSin).with_seed(17);
+        assert_f32_engine_matches_f64_oracle(cfg, 4, 99);
+    }
+}
+
+#[test]
+fn f32_worker_pool_matches_f32_executor_for_every_worker_count() {
+    let cfg = EmbeddingConfig::new(StructureKind::Circulant, 16, 32, Nonlinearity::CosSin)
+        .with_seed(21);
+    let plan = EmbeddingPlan::shared(cfg);
+    let rows = narrow_batch(&random_batch(23, 32, 19));
+    let input = Arc::new(BatchBuf::from_rows(&rows));
+    let mut exec = BatchExecutor::<f32>::new(plan.clone());
+    let want = exec.embed_batch(&input);
+    for workers in 1..=4 {
+        let pool = WorkerPool::<f32>::new(plan.clone(), workers);
+        let got = pool.embed_batch(&input);
+        assert_eq!(got.rows(), want.rows());
+        for i in 0..got.rows() {
+            assert_eq!(got.row(i), want.row(i), "workers={workers} row {i}");
+        }
+    }
+}
+
+#[test]
 fn worker_pool_matches_executor_for_every_worker_count() {
     let cfg = EmbeddingConfig::new(StructureKind::Toeplitz, 16, 32, Nonlinearity::CosSin)
         .with_seed(13);
     let plan = EmbeddingPlan::shared(cfg);
     let rows = random_batch(23, 32, 9);
     let input = Arc::new(BatchBuf::from_rows(&rows));
-    let mut exec = BatchExecutor::new(plan.clone());
+    let mut exec = BatchExecutor::<f64>::new(plan.clone());
     let want = exec.embed_batch(&input);
     for workers in 1..=4 {
-        let pool = WorkerPool::new(plan.clone(), workers);
+        let pool = WorkerPool::<f64>::new(plan.clone(), workers);
         let got = pool.embed_batch(&input);
         assert_eq!(got.rows(), want.rows());
         for i in 0..got.rows() {

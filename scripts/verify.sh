@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Standard pre-PR gate for this repo (documented in ROADMAP.md):
-# tier-1 build + tests, then formatting. Run from anywhere.
+# tier-1 build + tests, then documentation health, then formatting.
+# Run from anywhere.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -9,6 +10,14 @@ cargo build --release
 
 echo "== tier-1: cargo test -q"
 cargo test -q
+
+echo "== cargo doc --no-deps (warnings denied)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+# Tier-1 `cargo test` already includes doc tests; this explicit pass keeps
+# the doc-example gate visible and survives future target-filtering of tier-1.
+echo "== cargo test -q --doc (runnable doc examples)"
+cargo test -q --doc
 
 echo "== cargo fmt --check"
 cargo fmt --check
