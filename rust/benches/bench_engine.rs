@@ -1,5 +1,6 @@
-//! Planned batch engine vs per-vector embedding throughput, and the
-//! native f32 pipeline vs the f64 oracle pipeline.
+//! Planned batch engine vs per-vector embedding throughput, the native
+//! f32 pipeline vs the f64 oracle pipeline, and the split-complex
+//! batched kernels vs the per-row planned path.
 //!
 //! Acceptance targets for the engine layer:
 //! - planned batch execution (amortized FFT plans/spectra + zero-alloc
@@ -7,7 +8,13 @@
 //!   path — ≥ 2× on circulant m=n=1024, batch=64;
 //! - the native f32 pipeline must report ≥ 1.5× the f64 planned-batch
 //!   throughput for circulant and toeplitz at n=1024 (memory-bandwidth
-//!   argument: half the bytes per element, twice the SIMD lanes).
+//!   argument: half the bytes per element, twice the SIMD lanes);
+//! - the batched split-complex kernels must report ns/row ≤ the
+//!   per-row planned path for every FFT-backed family at batch 64.
+//!
+//! Besides the human-readable tables, the per-family batched-vs-per-row
+//! numbers (both precisions) are written to `BENCH_engine.json` so the
+//! perf trajectory is machine-trackable across PRs.
 
 mod common;
 
@@ -17,6 +24,42 @@ use strembed::engine::{default_workers, BatchBuf, BatchExecutor, EmbeddingPlan, 
 use strembed::pmodel::StructureKind;
 use strembed::rng::Rng;
 use strembed::transform::{EmbeddingConfig, Nonlinearity};
+
+/// One per-family, per-precision row of the machine-readable report.
+struct FamilyStat {
+    family: String,
+    precision: &'static str,
+    /// ns per row through the per-row planned path (`embed_into` loop)
+    per_row_ns: f64,
+    /// ns per row through the batched split-complex path
+    batched_ns: f64,
+}
+
+/// Emit `BENCH_engine.json` (hand-rolled JSON — serde is unavailable
+/// offline) and sanity-parse it back with the crate's own parser.
+fn write_bench_json(path: &str, n: usize, m: usize, batch: usize, stats: &[FamilyStat]) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"bench\": \"engine\",\n  \"n\": {n},\n  \"m\": {m},\n"));
+    s.push_str(&format!("  \"batch\": {batch},\n  \"results\": [\n"));
+    for (i, r) in stats.iter().enumerate() {
+        let sep = if i + 1 == stats.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"family\": \"{}\", \"precision\": \"{}\", \
+             \"per_row_ns_per_row\": {:.1}, \"batched_ns_per_row\": {:.1}, \
+             \"speedup\": {:.3}}}{sep}\n",
+            r.family,
+            r.precision,
+            r.per_row_ns,
+            r.batched_ns,
+            r.per_row_ns / r.batched_ns
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    strembed::util::json::Json::parse(&s).expect("BENCH_engine.json must be valid JSON");
+    std::fs::write(path, &s).expect("write BENCH_engine.json");
+    println!("\nwrote {path}");
+}
 
 fn main() {
     let batch = 64usize;
@@ -109,6 +152,90 @@ fn main() {
     for (label, s) in &prec_speedups {
         println!("{label}: f32 planned batch is {s:.2}x the f64 path");
     }
+
+    // batched split-complex kernels vs the per-row planned path, both
+    // precisions — the rows behind BENCH_engine.json
+    let mut family_stats: Vec<FamilyStat> = Vec::new();
+    let mut batch_results = Vec::new();
+    for kind in [
+        StructureKind::Circulant,
+        StructureKind::SkewCirculant,
+        StructureKind::Toeplitz,
+        StructureKind::Hankel,
+        StructureKind::Ldr(2),
+        StructureKind::Grouped(64),
+        StructureKind::Dense,
+    ] {
+        let cfg = EmbeddingConfig::new(kind, m, n, Nonlinearity::CosSin).with_seed(3);
+        let plan = EmbeddingPlan::shared(cfg);
+        let mut rng = Rng::new(9);
+        let rows: Vec<Vec<f64>> = (0..batch).map(|_| rng.gaussian_vec(n)).collect();
+        let rows32: Vec<Vec<f32>> =
+            rows.iter().map(|r| r.iter().map(|&v| v as f32).collect()).collect();
+        let in64 = BatchBuf::from_rows(&rows);
+        let in32 = BatchBuf::from_rows(&rows32);
+        let mut ex64 = BatchExecutor::<f64>::new(plan.clone());
+        let mut ex32 = BatchExecutor::<f32>::new(plan.clone());
+        let mut out64 = BatchBuf::zeros(batch, plan.out_dim());
+        let mut out32 = BatchBuf::<f32>::zeros(batch, plan.out_dim());
+        let mut row64 = vec![0.0; plan.out_dim()];
+        let mut row32 = vec![0.0f32; plan.out_dim()];
+        // warmup both paths (grows every scratch to its high-water mark)
+        ex64.embed_batch_into(&in64, &mut out64);
+        ex32.embed_batch_into(&in32, &mut out32);
+        ex64.embed_into(in64.row(0), &mut row64);
+        ex32.embed_into(in32.row(0), &mut row32);
+
+        let pr64 = bench(&format!("{} f64 per-row x{batch}", kind.label()), || {
+            for r in &rows {
+                ex64.embed_into(std::hint::black_box(r), &mut row64);
+            }
+            std::hint::black_box(&row64);
+        });
+        let ba64 = bench(&format!("{} f64 batched x{batch}", kind.label()), || {
+            ex64.embed_batch_into(std::hint::black_box(&in64), &mut out64);
+            std::hint::black_box(&out64);
+        });
+        let pr32 = bench(&format!("{} f32 per-row x{batch}", kind.label()), || {
+            for r in &rows32 {
+                ex32.embed_into(std::hint::black_box(r), &mut row32);
+            }
+            std::hint::black_box(&row32);
+        });
+        let ba32 = bench(&format!("{} f32 batched x{batch}", kind.label()), || {
+            ex32.embed_batch_into(std::hint::black_box(&in32), &mut out32);
+            std::hint::black_box(&out32);
+        });
+        family_stats.push(FamilyStat {
+            family: kind.label(),
+            precision: "f64",
+            per_row_ns: pr64.ns_per_op / batch as f64,
+            batched_ns: ba64.ns_per_op / batch as f64,
+        });
+        family_stats.push(FamilyStat {
+            family: kind.label(),
+            precision: "f32",
+            per_row_ns: pr32.ns_per_op / batch as f64,
+            batched_ns: ba32.ns_per_op / batch as f64,
+        });
+        batch_results.extend([pr64, ba64, pr32, ba32]);
+    }
+    report(
+        &format!("engine: per-row planned path vs batched split-complex kernels (n={n}, m={m}, batch={batch})"),
+        &batch_results,
+    );
+    println!();
+    for s in &family_stats {
+        println!(
+            "{} {}: batched {:.0} ns/row vs per-row {:.0} ns/row ({:.2}x)",
+            s.family,
+            s.precision,
+            s.batched_ns,
+            s.per_row_ns,
+            s.per_row_ns / s.batched_ns
+        );
+    }
+    write_bench_json("BENCH_engine.json", n, m, batch, &family_stats);
 
     // worker pool scaling on the acceptance config
     let cfg =

@@ -6,7 +6,10 @@
 //! The native path executes through [`crate::engine`]: one
 //! [`EmbeddingPlan`] per variant, a worker-private [`BatchExecutor`]
 //! for small batches, and a [`WorkerPool`] that shards large batches
-//! across cores.
+//! across cores. Every multi-row batch (≥ 2 rows, whether executed
+//! in-thread or per pool shard) runs the split-complex batched FFT
+//! kernels — one twiddle/spectrum/diagonal load per index for the
+//! whole sub-batch — and is bit-identical at f64 to the per-row path.
 //!
 //! # Precision knob
 //!

@@ -1,0 +1,135 @@
+//! Split-complex batch layout for the FFT substrate (§Perf).
+//!
+//! The per-row transform path stores complex samples as an
+//! array-of-structs `[Complex<S>]`, which pays a twiddle load per row
+//! and presents the autovectorizer with a stride-2 interleaved access
+//! pattern. The batched kernels instead use a **split-complex,
+//! lane-major** layout: real and imaginary parts live in separate
+//! planar `&[S]` buffers, and the `B` lanes (rows) of signal index `k`
+//! are contiguous — element `k` of lane `l` sits at `buf[k * lanes + l]`.
+//!
+//! With that layout every butterfly stage loads each twiddle factor
+//! exactly once and applies it to `B` contiguous stride-1 lanes, so the
+//! inner loop is a clean FMA pattern over flat slices. The same shape
+//! serves the FWHT, the diagonal preprocessing and the spectrum
+//! products: one pass over the plan's tables amortized across the whole
+//! sub-batch. See [`crate::dsp::fft::Fft::forward_batch`],
+//! [`crate::dsp::fft::RealFft::forward_batch_into`] and the
+//! `apply_batch_into` entry points on the convolution plans.
+//!
+//! Numerical contract: every batched kernel performs, per lane, exactly
+//! the arithmetic (same operations, same order, same plan tables) as
+//! its per-row counterpart — at `f64` the batched path is therefore
+//! **bit-identical** to looping the per-row path over the lanes.
+
+use super::fft::Complex;
+use super::scalar::Scalar;
+pub use crate::util::grown;
+
+/// Grow-on-demand split-complex work planes for the batched FFT paths:
+/// one re/im pair for spectra or twisted signals (`a_*`), one for the
+/// packed half-size scratch (`b_*`). One scratch serves any plan —
+/// planes grow to the high-water mark on first use.
+#[derive(Debug, Default)]
+pub struct BatchScratch<S = f64> {
+    /// spectrum plane, real parts
+    pub a_re: Vec<S>,
+    /// spectrum plane, imaginary parts
+    pub a_im: Vec<S>,
+    /// packed/twisted work plane, real parts
+    pub b_re: Vec<S>,
+    /// packed/twisted work plane, imaginary parts
+    pub b_im: Vec<S>,
+}
+
+impl<S> BatchScratch<S> {
+    /// Empty scratch; planes grow on demand.
+    pub fn new() -> BatchScratch<S> {
+        BatchScratch { a_re: Vec::new(), a_im: Vec::new(), b_re: Vec::new(), b_im: Vec::new() }
+    }
+}
+
+/// Pack equal-length row-major rows into one lane-major plane
+/// (`out[k * rows.len() + l] = rows[l][k]`). This is the transpose
+/// staging the batched kernels expect; the engine's executor performs
+/// the same transpose allocation-free over its reusable staging
+/// buffers, so this helper mainly serves tests and one-shot callers.
+pub fn pack_lanes<S: Scalar>(rows: &[Vec<S>]) -> Vec<S> {
+    let lanes = rows.len();
+    let n = rows.first().map_or(0, Vec::len);
+    let mut out = vec![S::ZERO; n * lanes];
+    for (l, row) in rows.iter().enumerate() {
+        assert_eq!(row.len(), n, "ragged batch");
+        for (k, &v) in row.iter().enumerate() {
+            out[k * lanes + l] = v;
+        }
+    }
+    out
+}
+
+/// Multiply a lane-major split spectrum by a shared per-index complex
+/// kernel: `spec[k] *= kernel[k]` for every lane. One kernel load
+/// serves all `lanes` contiguous values — the core amortization win of
+/// the batched layout. Mirrors the per-row `v = v.mul(k)` arithmetic
+/// exactly (bit-identical per lane).
+pub fn spectrum_product<S: Scalar>(
+    re: &mut [S],
+    im: &mut [S],
+    kernel: &[Complex<S>],
+    lanes: usize,
+) {
+    assert_eq!(re.len(), kernel.len() * lanes);
+    assert_eq!(im.len(), kernel.len() * lanes);
+    if lanes == 0 {
+        return;
+    }
+    // exact-length lane chunks keep the inner loop free of bounds checks
+    for ((res, ims), kc) in
+        re.chunks_exact_mut(lanes).zip(im.chunks_exact_mut(lanes)).zip(kernel)
+    {
+        for (r, i) in res.iter_mut().zip(ims.iter_mut()) {
+            let vre = *r;
+            let vim = *i;
+            *r = vre * kc.re - vim * kc.im;
+            *i = vre * kc.im + vim * kc.re;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scratch_starts_empty() {
+        let s: BatchScratch = BatchScratch::new();
+        assert!(s.a_re.is_empty() && s.a_im.is_empty());
+        assert!(s.b_re.is_empty() && s.b_im.is_empty());
+    }
+
+    #[test]
+    fn pack_lanes_transposes_row_major_to_lane_major() {
+        let rows = vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]];
+        let packed = pack_lanes(&rows);
+        // element k of lane l at packed[k * lanes + l]
+        assert_eq!(packed, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+        assert_eq!(pack_lanes::<f64>(&[]), Vec::<f64>::new());
+    }
+
+    #[test]
+    fn spectrum_product_matches_per_row_complex_mul() {
+        let kernel = vec![Complex::new(2.0, -1.0), Complex::new(0.5, 3.0)];
+        let lanes = 3usize;
+        // lanes of (re, im) values per spectral index
+        let mut re = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut im = vec![-1.0, 0.0, 1.0, 2.0, -2.0, 0.5];
+        let want: Vec<Complex> = (0..kernel.len() * lanes)
+            .map(|i| Complex::new(re[i], im[i]).mul(kernel[i / lanes]))
+            .collect();
+        spectrum_product(&mut re, &mut im, &kernel, lanes);
+        for (i, w) in want.iter().enumerate() {
+            assert_eq!(re[i].to_bits(), w.re.to_bits());
+            assert_eq!(im[i].to_bits(), w.im.to_bits());
+        }
+    }
+}

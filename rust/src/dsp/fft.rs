@@ -162,6 +162,94 @@ impl<S: Scalar> Fft<S> {
         }
     }
 
+    /// Batched in-place forward DFT over split re/im planes in the
+    /// lane-major layout of [`crate::dsp::batch`]: element `k` of lane
+    /// `l` lives at `re[k * lanes + l]` / `im[k * lanes + l]`. Each
+    /// butterfly stage loads every twiddle factor once and applies it
+    /// to `lanes` contiguous stride-1 values. Per lane the arithmetic
+    /// is identical to [`Fft::forward_inplace`] (bit-identical at f64).
+    pub fn forward_batch(&self, re: &mut [S], im: &mut [S], lanes: usize) {
+        self.check_batch(re, im, lanes);
+        if lanes == 0 {
+            return;
+        }
+        self.permute_batch(re, im, lanes);
+        self.butterflies_batch(re, im, lanes, false);
+    }
+
+    /// Batched in-place inverse DFT (includes the 1/n normalization);
+    /// the split-plane twin of [`Fft::inverse_inplace`].
+    pub fn inverse_batch(&self, re: &mut [S], im: &mut [S], lanes: usize) {
+        self.check_batch(re, im, lanes);
+        if lanes == 0 {
+            return;
+        }
+        self.permute_batch(re, im, lanes);
+        self.butterflies_batch(re, im, lanes, true);
+        let inv = S::from_f64(1.0 / self.n as f64);
+        for v in re.iter_mut() {
+            *v = *v * inv;
+        }
+        for v in im.iter_mut() {
+            *v = *v * inv;
+        }
+    }
+
+    fn check_batch(&self, re: &[S], im: &[S], lanes: usize) {
+        assert_eq!(re.len(), self.n * lanes, "batch re plane length");
+        assert_eq!(im.len(), self.n * lanes, "batch im plane length");
+    }
+
+    fn permute_batch(&self, re: &mut [S], im: &mut [S], lanes: usize) {
+        for i in 0..self.n {
+            let j = self.bitrev[i] as usize;
+            if i < j {
+                let (lo, hi) = re.split_at_mut(j * lanes);
+                lo[i * lanes..(i + 1) * lanes].swap_with_slice(&mut hi[..lanes]);
+                let (lo, hi) = im.split_at_mut(j * lanes);
+                lo[i * lanes..(i + 1) * lanes].swap_with_slice(&mut hi[..lanes]);
+            }
+        }
+    }
+
+    fn butterflies_batch(&self, re: &mut [S], im: &mut [S], lanes: usize, inverse: bool) {
+        let n = self.n;
+        let mut len = 2usize;
+        while len <= n {
+            let half = len / 2;
+            let stride = n / len; // stride into the twiddle table
+            for start in (0..n).step_by(len) {
+                for k in 0..half {
+                    let mut w = self.twiddles[k * stride];
+                    if inverse {
+                        w = w.conj();
+                    }
+                    let ia = (start + k) * lanes;
+                    let ib = (start + k + half) * lanes;
+                    // disjoint a/b lane blocks: ia + lanes <= ib always
+                    let (rea, reb) = re.split_at_mut(ib);
+                    let (ima, imb) = im.split_at_mut(ib);
+                    let rea = &mut rea[ia..ia + lanes];
+                    let ima = &mut ima[ia..ia + lanes];
+                    let reb = &mut reb[..lanes];
+                    let imb = &mut imb[..lanes];
+                    for l in 0..lanes {
+                        // b = buf[ib].mul(w); buf[ia] = a + b; buf[ib] = a - b
+                        let bre = reb[l] * w.re - imb[l] * w.im;
+                        let bim = reb[l] * w.im + imb[l] * w.re;
+                        let are = rea[l];
+                        let aim = ima[l];
+                        rea[l] = are + bre;
+                        ima[l] = aim + bim;
+                        reb[l] = are - bre;
+                        imb[l] = aim - bim;
+                    }
+                }
+            }
+            len <<= 1;
+        }
+    }
+
     /// Forward DFT of a real signal; returns the full complex spectrum.
     pub fn forward_real(&self, x: &[S]) -> Vec<Complex<S>> {
         assert_eq!(x.len(), self.n);
@@ -260,6 +348,136 @@ impl<S: Scalar> RealFft<S> {
             let d = zk.sub(zmk).scale(half);
             let xo = Complex::new(d.im, -d.re);
             *out = xe.add(self.w[k].mul(xo));
+        }
+    }
+
+    /// Batched allocation-free forward transform over split lane-major
+    /// planes ([`crate::dsp::batch`] layout): `x` holds `lanes` real
+    /// signals ([n × lanes]), `spec_re`/`spec_im` receive the
+    /// half-spectra ([(n/2+1) × lanes]) and `sre`/`sim` are the packed
+    /// half-size work planes ([n/2 × lanes]). Per lane the arithmetic
+    /// mirrors [`RealFft::forward_into`] exactly (bit-identical at f64);
+    /// across lanes every unpack coefficient is loaded once.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_batch_into(
+        &self,
+        x: &[S],
+        spec_re: &mut [S],
+        spec_im: &mut [S],
+        sre: &mut [S],
+        sim: &mut [S],
+        lanes: usize,
+    ) {
+        let m = self.n / 2;
+        assert_eq!(x.len(), self.n * lanes);
+        assert_eq!(spec_re.len(), (m + 1) * lanes);
+        assert_eq!(spec_im.len(), (m + 1) * lanes);
+        assert_eq!(sre.len(), m * lanes);
+        assert_eq!(sim.len(), m * lanes);
+        if lanes == 0 {
+            return;
+        }
+        let half = S::from_f64(0.5);
+        // pack even/odd samples: z[k] = x[2k] + i·x[2k+1], per lane
+        for k in 0..m {
+            sre[k * lanes..(k + 1) * lanes]
+                .copy_from_slice(&x[(2 * k) * lanes..(2 * k + 1) * lanes]);
+            sim[k * lanes..(k + 1) * lanes]
+                .copy_from_slice(&x[(2 * k + 1) * lanes..(2 * k + 2) * lanes]);
+        }
+        self.half.forward_batch(sre, sim, lanes);
+        for k in 0..=m {
+            let w = self.w[k];
+            let zi = (k % m) * lanes;
+            let zj = ((m - k) % m) * lanes;
+            let so = k * lanes;
+            // exact-length lane views: no bounds checks in the loop
+            // (zk/zmk may alias each other but are read-only here)
+            let zre = &sre[zi..zi + lanes];
+            let zim = &sim[zi..zi + lanes];
+            let zmre = &sre[zj..zj + lanes];
+            let zmim = &sim[zj..zj + lanes];
+            let (ore, oim) =
+                (&mut spec_re[so..so + lanes], &mut spec_im[so..so + lanes]);
+            for l in 0..lanes {
+                let zkre = zre[l];
+                let zkim = zim[l];
+                let zmkre = zmre[l];
+                let zmkim = -zmim[l]; // conj
+                let xere = (zkre + zmkre) * half;
+                let xeim = (zkim + zmkim) * half;
+                let dre = (zkre - zmkre) * half;
+                let dim = (zkim - zmkim) * half;
+                // Xo = (d.im, -d.re); out = Xe + w·Xo
+                let xore = dim;
+                let xoim = -dre;
+                let pre = w.re * xore - w.im * xoim;
+                let pim = w.re * xoim + w.im * xore;
+                ore[l] = xere + pre;
+                oim[l] = xeim + pim;
+            }
+        }
+    }
+
+    /// Batched allocation-free inverse transform: the split lane-major
+    /// twin of [`RealFft::inverse_into`]. `spec_re`/`spec_im` hold
+    /// `lanes` half-spectra ([(n/2+1) × lanes]), `out` receives the
+    /// real signals ([n × lanes]); `sre`/`sim` are [n/2 × lanes] work
+    /// planes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn inverse_batch_into(
+        &self,
+        spec_re: &[S],
+        spec_im: &[S],
+        out: &mut [S],
+        sre: &mut [S],
+        sim: &mut [S],
+        lanes: usize,
+    ) {
+        let m = self.n / 2;
+        assert_eq!(spec_re.len(), (m + 1) * lanes);
+        assert_eq!(spec_im.len(), (m + 1) * lanes);
+        assert_eq!(out.len(), self.n * lanes);
+        assert_eq!(sre.len(), m * lanes);
+        assert_eq!(sim.len(), m * lanes);
+        if lanes == 0 {
+            return;
+        }
+        let half = S::from_f64(0.5);
+        for k in 0..m {
+            let w = self.w[k];
+            let wcre = w.re;
+            let wcim = -w.im; // conj(W^k)
+            let xi = k * lanes;
+            let xj = (m - k) * lanes;
+            // exact-length lane views: no bounds checks in the loop
+            let xkre_s = &spec_re[xi..xi + lanes];
+            let xkim_s = &spec_im[xi..xi + lanes];
+            let xmre_s = &spec_re[xj..xj + lanes];
+            let xmim_s = &spec_im[xj..xj + lanes];
+            let (zre, zim) = (&mut sre[xi..xi + lanes], &mut sim[xi..xi + lanes]);
+            for l in 0..lanes {
+                let xkre = xkre_s[l];
+                let xkim = xkim_s[l];
+                let xmkre = xmre_s[l];
+                let xmkim = -xmim_s[l]; // conj
+                let xere = (xkre + xmkre) * half;
+                let xeim = (xkim + xmkim) * half;
+                let rotre = (xkre - xmkre) * half; // = W^k · Xo
+                let rotim = (xkim - xmkim) * half;
+                // Xo = conj(W^k) · rot; z = Xe + i·Xo
+                let xore = wcre * rotre - wcim * rotim;
+                let xoim = wcre * rotim + wcim * rotre;
+                zre[l] = xere + (-xoim);
+                zim[l] = xeim + xore;
+            }
+        }
+        self.half.inverse_batch(sre, sim, lanes);
+        for k in 0..m {
+            out[(2 * k) * lanes..(2 * k + 1) * lanes]
+                .copy_from_slice(&sre[k * lanes..(k + 1) * lanes]);
+            out[(2 * k + 1) * lanes..(2 * k + 2) * lanes]
+                .copy_from_slice(&sim[k * lanes..(k + 1) * lanes]);
         }
     }
 
@@ -459,6 +677,137 @@ mod tests {
             let back = plan32.inverse(&spec32);
             for (a, b) in back.iter().zip(&x) {
                 assert!((*a as f64 - b).abs() <= 1e-5 * (1.0 + b.abs()), "n={n}");
+            }
+        }
+    }
+
+    /// Pack per-row complex buffers into split lane-major planes.
+    fn to_planes(rows: &[Vec<Complex>]) -> (Vec<f64>, Vec<f64>) {
+        let lanes = rows.len();
+        let n = rows[0].len();
+        let mut re = vec![0.0; n * lanes];
+        let mut im = vec![0.0; n * lanes];
+        for (l, row) in rows.iter().enumerate() {
+            for (k, c) in row.iter().enumerate() {
+                re[k * lanes + l] = c.re;
+                im[k * lanes + l] = c.im;
+            }
+        }
+        (re, im)
+    }
+
+    #[test]
+    fn forward_batch_is_bit_identical_to_per_row() {
+        let mut rng = Rng::new(41);
+        for &n in &[1usize, 2, 8, 64, 256] {
+            for &lanes in &[1usize, 3, 8] {
+                let fft = Fft::new(n);
+                let rows: Vec<Vec<Complex>> = (0..lanes)
+                    .map(|_| (0..n).map(|_| Complex::new(rng.gaussian(), rng.gaussian())).collect())
+                    .collect();
+                let (mut re, mut im) = to_planes(&rows);
+                fft.forward_batch(&mut re, &mut im, lanes);
+                for (l, row) in rows.iter().enumerate() {
+                    let mut want = row.clone();
+                    fft.forward_inplace(&mut want);
+                    for k in 0..n {
+                        assert_eq!(re[k * lanes + l].to_bits(), want[k].re.to_bits(), "n={n}");
+                        assert_eq!(im[k * lanes + l].to_bits(), want[k].im.to_bits(), "n={n}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_batch_is_bit_identical_to_per_row() {
+        let mut rng = Rng::new(42);
+        let n = 64;
+        let lanes = 5;
+        let fft = Fft::new(n);
+        let rows: Vec<Vec<Complex>> = (0..lanes)
+            .map(|_| (0..n).map(|_| Complex::new(rng.gaussian(), rng.gaussian())).collect())
+            .collect();
+        let (mut re, mut im) = to_planes(&rows);
+        fft.inverse_batch(&mut re, &mut im, lanes);
+        for (l, row) in rows.iter().enumerate() {
+            let mut want = row.clone();
+            fft.inverse_inplace(&mut want);
+            for k in 0..n {
+                assert_eq!(re[k * lanes + l].to_bits(), want[k].re.to_bits());
+                assert_eq!(im[k * lanes + l].to_bits(), want[k].im.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn real_fft_batch_roundtrip_is_bit_identical_to_per_row() {
+        let mut rng = Rng::new(43);
+        for &n in &[2usize, 16, 256] {
+            for &lanes in &[1usize, 4, 7] {
+                let plan = RealFft::new(n);
+                let m = n / 2;
+                let rows: Vec<Vec<f64>> = (0..lanes).map(|_| rng.gaussian_vec(n)).collect();
+                let mut x = vec![0.0; n * lanes];
+                for (l, row) in rows.iter().enumerate() {
+                    for (k, &v) in row.iter().enumerate() {
+                        x[k * lanes + l] = v;
+                    }
+                }
+                let mut spec_re = vec![0.0; (m + 1) * lanes];
+                let mut spec_im = vec![0.0; (m + 1) * lanes];
+                let mut sre = vec![0.0; m * lanes];
+                let mut sim = vec![0.0; m * lanes];
+                plan.forward_batch_into(&x, &mut spec_re, &mut spec_im, &mut sre, &mut sim, lanes);
+                let mut spec = vec![Complex::ZERO; plan.spectrum_len()];
+                let mut scratch = vec![Complex::ZERO; plan.scratch_len()];
+                let mut back_row = vec![0.0; n];
+                for (l, row) in rows.iter().enumerate() {
+                    plan.forward_into(row, &mut spec, &mut scratch);
+                    for k in 0..=m {
+                        assert_eq!(spec_re[k * lanes + l].to_bits(), spec[k].re.to_bits(), "n={n}");
+                        assert_eq!(spec_im[k * lanes + l].to_bits(), spec[k].im.to_bits(), "n={n}");
+                    }
+                    plan.inverse_into(&spec, &mut back_row, &mut scratch);
+                    // batched inverse of the batched spectrum must agree too
+                    let mut out = vec![0.0; n * lanes];
+                    plan.inverse_batch_into(
+                        &spec_re, &spec_im, &mut out, &mut sre, &mut sim, lanes,
+                    );
+                    for k in 0..n {
+                        assert_eq!(out[k * lanes + l].to_bits(), back_row[k].to_bits(), "n={n}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_batch_kernels_track_per_row_f32() {
+        let mut rng = Rng::new(44);
+        let n = 128;
+        let lanes = 3;
+        let plan = RealFft::<f32>::new(n);
+        let m = n / 2;
+        let rows: Vec<Vec<f32>> = (0..lanes)
+            .map(|_| rng.gaussian_vec(n).iter().map(|&v| v as f32).collect())
+            .collect();
+        let mut x = vec![0.0f32; n * lanes];
+        for (l, row) in rows.iter().enumerate() {
+            for (k, &v) in row.iter().enumerate() {
+                x[k * lanes + l] = v;
+            }
+        }
+        let mut spec_re = vec![0.0f32; (m + 1) * lanes];
+        let mut spec_im = vec![0.0f32; (m + 1) * lanes];
+        let mut sre = vec![0.0f32; m * lanes];
+        let mut sim = vec![0.0f32; m * lanes];
+        plan.forward_batch_into(&x, &mut spec_re, &mut spec_im, &mut sre, &mut sim, lanes);
+        for (l, row) in rows.iter().enumerate() {
+            let want = plan.forward(row);
+            for k in 0..=m {
+                assert_eq!(spec_re[k * lanes + l].to_bits(), want[k].re.to_bits());
+                assert_eq!(spec_im[k * lanes + l].to_bits(), want[k].im.to_bits());
             }
         }
     }

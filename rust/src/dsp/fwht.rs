@@ -42,6 +42,42 @@ pub fn fwht_normalized<S: Scalar>(x: &mut [S]) {
     }
 }
 
+/// Batched in-place unnormalized WHT over `lanes` lane-major signals
+/// ([`crate::dsp::batch`] layout: element `k` of lane `l` lives at
+/// `x[k * lanes + l]`). Each butterfly pairs two blocks of `lanes`
+/// contiguous values, so the inner loop is the same flat-slice add/sub
+/// pattern as the per-row transform with `lanes`-scaled block sizes —
+/// per lane the arithmetic is identical (bit-identical at f64).
+pub fn fwht_batch_inplace<S: Scalar>(x: &mut [S], n: usize, lanes: usize) {
+    assert!(crate::util::is_pow2(n), "FWHT length must be a power of two, got {n}");
+    assert_eq!(x.len(), n * lanes);
+    if lanes == 0 {
+        return;
+    }
+    let mut h = 1usize;
+    while h < n {
+        for block in x.chunks_exact_mut(2 * h * lanes) {
+            let (lo, hi) = block.split_at_mut(h * lanes);
+            for (a, b) in lo.iter_mut().zip(hi.iter_mut()) {
+                let s = *a + *b;
+                let d = *a - *b;
+                *a = s;
+                *b = d;
+            }
+        }
+        h <<= 1;
+    }
+}
+
+/// Batched L2-normalized WHT (the batched twin of [`fwht_normalized`]).
+pub fn fwht_batch_normalized<S: Scalar>(x: &mut [S], n: usize, lanes: usize) {
+    fwht_batch_inplace(x, n, lanes);
+    let s = S::from_f64(1.0 / (n as f64).sqrt());
+    for v in x.iter_mut() {
+        *v *= s;
+    }
+}
+
 /// Dense normalized Hadamard matrix (test oracle / tiny-n visualization).
 pub fn hadamard_dense(n: usize) -> Vec<Vec<f64>> {
     assert!(crate::util::is_pow2(n));
@@ -125,5 +161,28 @@ mod tests {
     #[should_panic]
     fn rejects_non_pow2() {
         fwht_inplace(&mut [1.0f64, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn batch_transform_is_bit_identical_to_per_row() {
+        let mut rng = Rng::new(25);
+        for &n in &[1usize, 2, 16, 128] {
+            for &lanes in &[1usize, 3, 8] {
+                let rows: Vec<Vec<f64>> = (0..lanes).map(|_| rng.gaussian_vec(n)).collect();
+                let mut x = crate::dsp::pack_lanes(&rows);
+                fwht_batch_normalized(&mut x, n, lanes);
+                for (l, row) in rows.iter().enumerate() {
+                    let mut want = row.clone();
+                    fwht_normalized(&mut want);
+                    for k in 0..n {
+                        assert_eq!(
+                            x[k * lanes + l].to_bits(),
+                            want[k].to_bits(),
+                            "n={n} lanes={lanes}"
+                        );
+                    }
+                }
+            }
+        }
     }
 }

@@ -12,16 +12,25 @@
 //! (`f32` serving path / `f64` oracle path — see [`scalar`] for the
 //! boundary rules); the unparameterized names ([`Complex`], [`Fft`],
 //! [`RealFft`], [`ConvPlan`], [`NegacyclicPlan`]) default to `f64`.
+//! Every plan additionally exposes *batched* split-complex kernels
+//! (`forward_batch`, `apply_batch_into`, …) over the lane-major layout
+//! of [`batch`]: re/im in separate planar buffers with the batch's
+//! lanes contiguous per signal index, so one twiddle/spectrum load
+//! serves the whole batch and the inner loops are stride-1 FMA
+//! patterns. Per lane the batched kernels are bit-identical (at f64)
+//! to their per-row counterparts.
 //! The free convolution helpers below are f64-only: they are the naive
 //! one-shot reference forms used by tests and non-hot-path callers.
 
+pub mod batch;
 pub mod fft;
 pub mod fwht;
 pub mod plan;
 pub mod scalar;
 
+pub use batch::{pack_lanes, spectrum_product, BatchScratch};
 pub use fft::{Complex, Fft, RealFft};
-pub use fwht::fwht_inplace;
+pub use fwht::{fwht_batch_inplace, fwht_batch_normalized, fwht_inplace};
 pub use plan::{ConvPlan, NegacyclicPlan};
 pub use scalar::Scalar;
 

@@ -12,6 +12,7 @@
 //! convolve runs natively in single precision (see
 //! [`crate::dsp::scalar`] for the precision-boundary rules).
 
+use super::batch::{grown, spectrum_product, BatchScratch};
 use super::fft::{Complex, Fft, RealFft};
 use super::scalar::Scalar;
 
@@ -85,6 +86,44 @@ impl<S: Scalar> ConvPlan<S> {
             }
         }
     }
+
+    /// Batched allocation-free `kernel ⊛ x` over `lanes` lane-major
+    /// signals ([`crate::dsp::batch`] layout): `x` and `out` are
+    /// [n × lanes] planes, work planes come from `scratch`. The kernel
+    /// spectrum is loaded once per spectral index and amortized across
+    /// all lanes; per lane the arithmetic mirrors
+    /// [`ConvPlan::apply_into`] exactly (bit-identical at f64).
+    pub fn apply_batch_into(
+        &self,
+        x: &[S],
+        out: &mut [S],
+        scratch: &mut BatchScratch<S>,
+        lanes: usize,
+    ) {
+        assert_eq!(x.len(), self.len() * lanes);
+        assert_eq!(out.len(), self.len() * lanes);
+        if lanes == 0 {
+            return;
+        }
+        match &self.fft {
+            None => {
+                for (o, &v) in out.iter_mut().zip(x) {
+                    *o = self.k1 * v;
+                }
+            }
+            Some(fft) => {
+                let sl = fft.spectrum_len() * lanes;
+                let hl = fft.scratch_len() * lanes;
+                let spec_re = grown(&mut scratch.a_re, sl);
+                let spec_im = grown(&mut scratch.a_im, sl);
+                let sre = grown(&mut scratch.b_re, hl);
+                let sim = grown(&mut scratch.b_im, hl);
+                fft.forward_batch_into(x, spec_re, spec_im, sre, sim, lanes);
+                spectrum_product(spec_re, spec_im, &self.kspec, lanes);
+                fft.inverse_batch_into(spec_re, spec_im, out, sre, sim, lanes);
+            }
+        }
+    }
 }
 
 /// Negacyclic convolution with a fixed kernel b: `apply(a) = negaconv(a, b)`
@@ -151,6 +190,59 @@ impl<S: Scalar> NegacyclicPlan<S> {
         self.fft.inverse_inplace(buf);
         for (k, o) in out.iter_mut().enumerate() {
             *o = buf[k].mul(self.twist[k].conj()).re;
+        }
+    }
+
+    /// Batched allocation-free `negaconv(a, kernel)` over `lanes`
+    /// lane-major signals: `a` is [n × lanes]; `out` receives the first
+    /// `out.len() / lanes` (≤ n) result indices of every lane. Twist
+    /// tables and the kernel spectrum are loaded once per index and
+    /// amortized across lanes; per lane the arithmetic mirrors
+    /// [`NegacyclicPlan::apply_into`] exactly (bit-identical at f64).
+    pub fn apply_batch_into(
+        &self,
+        a: &[S],
+        out: &mut [S],
+        scratch: &mut BatchScratch<S>,
+        lanes: usize,
+    ) {
+        let n = self.fft.len();
+        assert_eq!(a.len(), n * lanes);
+        assert!(out.len() <= n * lanes);
+        if lanes == 0 {
+            assert!(out.is_empty());
+            return;
+        }
+        assert_eq!(out.len() % lanes, 0, "out must hold whole result indices");
+        let bre = grown(&mut scratch.b_re, n * lanes);
+        let bim = grown(&mut scratch.b_im, n * lanes);
+        // exact-length lane chunks keep the twist loops bounds-check-free
+        for (((br, bi), av), w) in bre
+            .chunks_exact_mut(lanes)
+            .zip(bim.chunks_exact_mut(lanes))
+            .zip(a.chunks_exact(lanes))
+            .zip(&self.twist)
+        {
+            for l in 0..lanes {
+                let xv = av[l];
+                br[l] = w.re * xv;
+                bi[l] = w.im * xv;
+            }
+        }
+        self.fft.forward_batch(bre, bim, lanes);
+        spectrum_product(bre, bim, &self.kspec, lanes);
+        self.fft.inverse_batch(bre, bim, lanes);
+        for (((o, br), bi), w) in out
+            .chunks_exact_mut(lanes)
+            .zip(bre.chunks_exact(lanes))
+            .zip(bim.chunks_exact(lanes))
+            .zip(&self.twist)
+        {
+            let wcre = w.re;
+            let wcim = -w.im; // conj
+            for l in 0..lanes {
+                o[l] = br[l] * wcre - bi[l] * wcim;
+            }
         }
     }
 }
@@ -224,6 +316,93 @@ mod tests {
         let x2 = rng.gaussian_vec(32);
         crate::util::assert_close(&plan.apply(&x1), &circular_convolve(&k, &x1), 1e-9);
         crate::util::assert_close(&plan.apply(&x2), &circular_convolve(&k, &x2), 1e-9);
+    }
+
+    use crate::dsp::pack_lanes;
+
+    #[test]
+    fn conv_apply_batch_is_bit_identical_to_per_row() {
+        let mut rng = Rng::new(11);
+        for &n in &[1usize, 2, 8, 64] {
+            for &lanes in &[1usize, 3, 7] {
+                let k = rng.gaussian_vec(n);
+                let plan = ConvPlan::new(&k);
+                let rows: Vec<Vec<f64>> = (0..lanes).map(|_| rng.gaussian_vec(n)).collect();
+                let x = pack_lanes(&rows);
+                let mut out = vec![0.0; n * lanes];
+                let mut scratch = crate::dsp::BatchScratch::new();
+                plan.apply_batch_into(&x, &mut out, &mut scratch, lanes);
+                for (l, row) in rows.iter().enumerate() {
+                    let want = plan.apply(row);
+                    for i in 0..n {
+                        assert_eq!(
+                            out[i * lanes + l].to_bits(),
+                            want[i].to_bits(),
+                            "conv n={n} lanes={lanes}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn negacyclic_apply_batch_is_bit_identical_to_per_row() {
+        let mut rng = Rng::new(12);
+        for &n in &[2usize, 8, 64] {
+            for &lanes in &[1usize, 4] {
+                let k = rng.gaussian_vec(n);
+                let plan = NegacyclicPlan::new(&k);
+                let rows: Vec<Vec<f64>> = (0..lanes).map(|_| rng.gaussian_vec(n)).collect();
+                let x = pack_lanes(&rows);
+                // truncated output: first m_out indices only, like the
+                // skew-circulant m < n case
+                for &m_out in &[n, n / 2] {
+                    let mut out = vec![0.0; m_out * lanes];
+                    let mut scratch = crate::dsp::BatchScratch::new();
+                    plan.apply_batch_into(&x, &mut out, &mut scratch, lanes);
+                    for (l, row) in rows.iter().enumerate() {
+                        let mut want = vec![0.0; m_out];
+                        plan.apply_into(row, &mut want, &mut Vec::new());
+                        for i in 0..m_out {
+                            assert_eq!(
+                                out[i * lanes + l].to_bits(),
+                                want[i].to_bits(),
+                                "nega n={n} lanes={lanes} m_out={m_out}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_scratch_is_reusable_across_plans() {
+        let mut rng = Rng::new(13);
+        let mut scratch = crate::dsp::BatchScratch::new();
+        for &n in &[64usize, 8, 32] {
+            let k = rng.gaussian_vec(n);
+            let conv = ConvPlan::new(&k);
+            let nega = NegacyclicPlan::new(&k);
+            let rows: Vec<Vec<f64>> = (0..3).map(|_| rng.gaussian_vec(n)).collect();
+            let x = pack_lanes(&rows);
+            let mut out = vec![0.0; n * 3];
+            conv.apply_batch_into(&x, &mut out, &mut scratch, 3);
+            for (l, row) in rows.iter().enumerate() {
+                let want = conv.apply(row);
+                for i in 0..n {
+                    assert_eq!(out[i * 3 + l].to_bits(), want[i].to_bits());
+                }
+            }
+            nega.apply_batch_into(&x, &mut out, &mut scratch, 3);
+            for (l, row) in rows.iter().enumerate() {
+                let want = nega.apply(row);
+                for i in 0..n {
+                    assert_eq!(out[i * 3 + l].to_bits(), want[i].to_bits());
+                }
+            }
+        }
     }
 
     #[test]

@@ -3,8 +3,25 @@
 
 use super::{EmbeddingPlan, EngineScalar};
 use crate::dsp::Scalar;
-use crate::pmodel::MatvecScratch;
+use crate::pmodel::{grown, BatchMatvecScratch, MatvecScratch};
 use std::sync::Arc;
+
+/// Batches at least this large run the split-complex batched kernels
+/// ([`crate::dsp::batch`]); a single row skips the transpose staging
+/// and takes the per-row planned path. The batched path is the default
+/// for every multi-row batch and is bit-identical (at f64) to the
+/// per-row path.
+pub const BATCH_KERNEL_MIN_ROWS: usize = 2;
+
+/// Maximum lane width of one batched pass. Larger ranges are processed
+/// in tiles of this many rows so staging buffers and the FFT working
+/// set stay cache-sized no matter how large a batch (or pool shard)
+/// gets — without tiling, a million-row shard would allocate
+/// plane buffers of `n × rows` floats and every butterfly stage would
+/// stream far beyond the LLC, inverting the amortization win. The
+/// kernels are lane-count-independent per lane, so tiling never
+/// changes results.
+pub const BATCH_KERNEL_MAX_LANES: usize = 64;
 
 /// A batch of equal-length vectors in structure-of-arrays layout: one
 /// contiguous row-major `Vec<S>` instead of one heap allocation per
@@ -80,6 +97,11 @@ impl<S: Scalar> BatchBuf<S> {
         &self.data
     }
 
+    /// The whole buffer, mutable (row-major).
+    pub fn as_mut_slice(&mut self) -> &mut [S] {
+        &mut self.data
+    }
+
     /// Unpack into owned rows.
     pub fn to_rows(&self) -> Vec<Vec<S>> {
         (0..self.rows).map(|i| self.row(i).to_vec()).collect()
@@ -110,11 +132,15 @@ impl BatchBuf<f64> {
 
 /// Executes a plan over batches with reusable buffers: after the first
 /// call (which grows the scratch to its high-water mark) embedding a
-/// vector performs no heap allocation at all — preprocess in place,
-/// planned matvec into the projection buffer, nonlinearity into the
-/// caller's output row. The whole loop is monomorphized per precision
-/// through [`EngineScalar`]: a `BatchExecutor<f32>` touches only f32
-/// buffers end to end.
+/// vector performs no heap allocation at all. Batches of
+/// [`BATCH_KERNEL_MIN_ROWS`] or more rows are transposed into the
+/// lane-major split layout of [`crate::dsp::batch`] and run the whole
+/// pipeline — D₁HD₀ diagonals, FWHT, FFT stages, spectrum product and
+/// nonlinearity — batch-wise, with every plan table loaded once per
+/// index for the whole batch; single rows take the per-row planned
+/// path (preprocess in place, planned matvec, nonlinearity). The whole
+/// loop is monomorphized per precision through [`EngineScalar`]: a
+/// `BatchExecutor<f32>` touches only f32 buffers end to end.
 pub struct BatchExecutor<S: EngineScalar = f64> {
     plan: Arc<EmbeddingPlan>,
     scratch: MatvecScratch<S>,
@@ -122,6 +148,14 @@ pub struct BatchExecutor<S: EngineScalar = f64> {
     input: Vec<S>,
     /// raw projections A·D₁HD₀·x (length m)
     proj: Vec<S>,
+    /// batched-path scratch (split-complex planes + staging)
+    batch_scratch: BatchMatvecScratch<S>,
+    /// lane-major staging: transposed, preprocessed inputs [n × lanes]
+    tin: Vec<S>,
+    /// lane-major staging: batched projections [m × lanes]
+    tproj: Vec<S>,
+    /// lane-major staging: batched features [out_dim × lanes]
+    tout: Vec<S>,
 }
 
 impl<S: EngineScalar> BatchExecutor<S> {
@@ -134,6 +168,10 @@ impl<S: EngineScalar> BatchExecutor<S> {
             scratch: MatvecScratch::new(),
             input: vec![S::ZERO; n],
             proj: vec![S::ZERO; m],
+            batch_scratch: BatchMatvecScratch::new(),
+            tin: Vec::new(),
+            tproj: Vec::new(),
+            tout: Vec::new(),
         }
     }
 
@@ -155,14 +193,90 @@ impl<S: EngineScalar> BatchExecutor<S> {
         S::features_into(emb.config().f, &self.proj, out);
     }
 
+    /// Embed rows `start..end` of `input` into the flat row-major
+    /// `out` (length `(end-start) × plan.out_dim()`). Ranges of
+    /// [`BATCH_KERNEL_MIN_ROWS`] or more rows run the split-complex
+    /// batched kernels, tiled at [`BATCH_KERNEL_MAX_LANES`] rows per
+    /// pass so the working set stays cache-sized; shorter ranges loop
+    /// the per-row path. This is the shared core of
+    /// [`BatchExecutor::embed_batch_into`] and the
+    /// [`super::WorkerPool`] shards.
+    pub fn embed_range_into(
+        &mut self,
+        input: &BatchBuf<S>,
+        start: usize,
+        end: usize,
+        out: &mut [S],
+    ) {
+        assert!(start <= end && end <= input.rows(), "row range out of bounds");
+        let rows = end - start;
+        let d = self.plan.out_dim();
+        assert_eq!(out.len(), rows * d, "output length mismatch");
+        if rows < BATCH_KERNEL_MIN_ROWS {
+            for (k, i) in (start..end).enumerate() {
+                let (row_in, row_out) = (input.row(i), &mut out[k * d..(k + 1) * d]);
+                self.embed_into(row_in, row_out);
+            }
+            return;
+        }
+        let mut tile_start = start;
+        let mut out_off = 0usize;
+        while tile_start < end {
+            let tile_end = (tile_start + BATCH_KERNEL_MAX_LANES).min(end);
+            let tile_rows = tile_end - tile_start;
+            self.embed_tile_into(
+                input,
+                tile_start,
+                tile_end,
+                &mut out[out_off..out_off + tile_rows * d],
+            );
+            tile_start = tile_end;
+            out_off += tile_rows * d;
+        }
+    }
+
+    /// One batched pass over rows `start..end` (at most
+    /// [`BATCH_KERNEL_MAX_LANES`] of them): transpose into the
+    /// lane-major staging planes, run preprocess, matvec and
+    /// nonlinearity batch-wise, transpose the features back out.
+    fn embed_tile_into(&mut self, input: &BatchBuf<S>, start: usize, end: usize, out: &mut [S]) {
+        let d = self.plan.out_dim();
+        let emb = self.plan.embedding();
+        let n = emb.config().n;
+        let m = emb.config().m;
+        assert_eq!(input.dim(), n, "input dim mismatch");
+        let lanes = end - start;
+        // transpose the row range into the lane-major staging plane
+        let tin = grown(&mut self.tin, n * lanes);
+        for (l, i) in (start..end).enumerate() {
+            for (j, &v) in input.row(i).iter().enumerate() {
+                tin[j * lanes + l] = v;
+            }
+        }
+        if let Some(pre) = emb.preprocessor() {
+            S::preprocess_batch_inplace(pre, tin, lanes);
+        }
+        let tproj = grown(&mut self.tproj, m * lanes);
+        S::matvec_batch_into(emb.model(), tin, tproj, lanes, &mut self.batch_scratch);
+        let tout = grown(&mut self.tout, d * lanes);
+        emb.config().f.apply_batch_into(tproj, tout, lanes);
+        // transpose features back into the row-major output
+        for (l, row_out) in out.chunks_exact_mut(d).enumerate() {
+            for (fidx, o) in row_out.iter_mut().enumerate() {
+                *o = tout[fidx * lanes + l];
+            }
+        }
+    }
+
     /// Embed every row of `input` into the matching row of `out`
-    /// (`out` must be `input.rows() × plan.out_dim()`).
+    /// (`out` must be `input.rows() × plan.out_dim()`). Batches of
+    /// [`BATCH_KERNEL_MIN_ROWS`] or more rows take the batched
+    /// split-complex path by default.
     pub fn embed_batch_into(&mut self, input: &BatchBuf<S>, out: &mut BatchBuf<S>) {
         assert_eq!(input.rows(), out.rows(), "batch size mismatch");
         assert_eq!(out.dim(), self.plan.out_dim(), "output dim mismatch");
-        for i in 0..input.rows() {
-            self.embed_into(input.row(i), out.row_mut(i));
-        }
+        let rows = input.rows();
+        self.embed_range_into(input, 0, rows, out.as_mut_slice());
     }
 
     /// Embed a batch into a fresh output buffer.
@@ -260,6 +374,69 @@ mod tests {
             let out = exec.embed_batch(&input);
             for i in 0..4 {
                 crate::util::assert_close(out.row(i), &plan.embedding().embed(input.row(i)), 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_path_is_bit_identical_to_per_row_path() {
+        let mut rng = Rng::new(29);
+        for kind in StructureKind::all() {
+            let cfg = EmbeddingConfig::new(kind, 8, 16, Nonlinearity::CosSin).with_seed(11);
+            let plan = EmbeddingPlan::shared(cfg);
+            let rows: Vec<Vec<f64>> = (0..6).map(|_| rng.gaussian_vec(16)).collect();
+            let input = BatchBuf::from_rows(&rows);
+            let mut exec = BatchExecutor::<f64>::new(plan.clone());
+            let batched = exec.embed_batch(&input); // 6 rows → batched kernels
+            let mut per_row = vec![0.0; plan.out_dim()];
+            for i in 0..rows.len() {
+                exec.embed_into(input.row(i), &mut per_row);
+                for (g, w) in batched.row(i).iter().zip(&per_row) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "{} row {i}", kind.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_tile_batches_are_bit_identical_to_per_row() {
+        // 150 rows crosses two full tiles plus a tail tile (64+64+22);
+        // tiling must never change results
+        let cfg = EmbeddingConfig::new(StructureKind::Circulant, 8, 16, Nonlinearity::CosSin)
+            .with_seed(12);
+        let plan = EmbeddingPlan::shared(cfg);
+        let mut rng = Rng::new(13);
+        let rows: Vec<Vec<f64>> = (0..150).map(|_| rng.gaussian_vec(16)).collect();
+        let input = BatchBuf::from_rows(&rows);
+        let mut exec = BatchExecutor::<f64>::new(plan.clone());
+        let batched = exec.embed_batch(&input);
+        let mut per_row = vec![0.0; plan.out_dim()];
+        for i in 0..rows.len() {
+            exec.embed_into(input.row(i), &mut per_row);
+            for (g, w) in batched.row(i).iter().zip(&per_row) {
+                assert_eq!(g.to_bits(), w.to_bits(), "row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn embed_range_matches_full_batch() {
+        let cfg = EmbeddingConfig::new(StructureKind::Toeplitz, 8, 16, Nonlinearity::CosSin)
+            .with_seed(6);
+        let plan = EmbeddingPlan::shared(cfg);
+        let mut rng = Rng::new(7);
+        let input = BatchBuf::from_rows(&(0..9).map(|_| rng.gaussian_vec(16)).collect::<Vec<_>>());
+        let mut exec = BatchExecutor::<f64>::new(plan.clone());
+        let full = exec.embed_batch(&input);
+        let d = plan.out_dim();
+        // ranges straddling the batched/per-row threshold must agree
+        for &(start, end) in &[(0usize, 9usize), (2, 9), (4, 5), (3, 3), (0, 2)] {
+            let mut out = vec![0.0; (end - start) * d];
+            exec.embed_range_into(&input, start, end, &mut out);
+            for (k, i) in (start..end).enumerate() {
+                for (g, w) in out[k * d..(k + 1) * d].iter().zip(full.row(i)) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "range {start}..{end} row {i}");
+                }
             }
         }
     }

@@ -11,15 +11,19 @@
 //!
 //! ```text
 //!   EmbeddingPlan        one per (structure, m, n, f, seed): owns the
-//!        │               sampled model (with its cached f64 AND f32
-//!        │               FFT plans + spectra) and the D₁HD₀ diagonals
+//!        │               sampled model (f64 FFT plans + spectra; f32
+//!        │               twins built lazily) and the D₁HD₀ diagonals
 //!        ▼
-//!   BatchExecutor<S>     one per thread: reusable MatvecScratch<S> +
-//!        │               projection buffers; embeds a BatchBuf<S> row
-//!        │               by row with zero heap allocation after warmup
+//!   BatchExecutor<S>     one per thread: batches of ≥ 2 rows run the
+//!        │               split-complex batched kernels (lane-major
+//!        │               re/im planes, one twiddle/spectrum/diagonal
+//!        │               load per index for the whole batch); single
+//!        │               rows take the per-row planned path. Zero
+//!        │               heap allocation after warmup either way.
 //!        ▼
 //!   WorkerPool<S>        std threads + channels; shards a batch across
-//!                        cores, each worker owning its own executor
+//!                        cores, each worker running the batched
+//!                        kernels over its own contiguous row range
 //! ```
 //!
 //! [`BatchBuf`] is the engine's SoA interchange format: one contiguous
@@ -44,12 +48,12 @@ mod batch;
 mod plan;
 mod pool;
 
-pub use batch::{BatchBuf, BatchExecutor};
+pub use batch::{BatchBuf, BatchExecutor, BATCH_KERNEL_MAX_LANES, BATCH_KERNEL_MIN_ROWS};
 pub use plan::EmbeddingPlan;
 pub use pool::{default_workers, WorkerPool};
 
 use crate::dsp::Scalar;
-use crate::pmodel::{MatvecScratch, PModel};
+use crate::pmodel::{BatchMatvecScratch, MatvecScratch, PModel};
 use crate::transform::{EmbeddingConfig, Nonlinearity, Preprocessor};
 use std::sync::Arc;
 
@@ -98,8 +102,22 @@ pub trait EngineScalar: Scalar {
         scratch: &mut MatvecScratch<Self>,
     );
 
+    /// Planned *batched* structured matvec at this precision over the
+    /// lane-major split layout of [`crate::dsp::batch`] (`x`:
+    /// [n × lanes], `y`: [m × lanes]).
+    fn matvec_batch_into(
+        model: &dyn PModel,
+        x: &[Self],
+        y: &mut [Self],
+        lanes: usize,
+        scratch: &mut BatchMatvecScratch<Self>,
+    );
+
     /// In-place `D₁HD₀` preprocessing at this precision.
     fn preprocess_inplace(pre: &Preprocessor, x: &mut [Self]);
+
+    /// Batched in-place `D₁HD₀` over `lanes` lane-major rows.
+    fn preprocess_batch_inplace(pre: &Preprocessor, x: &mut [Self], lanes: usize);
 
     /// Pointwise feature nonlinearity at this precision.
     fn features_into(f: Nonlinearity, z: &[Self], out: &mut [Self]);
@@ -110,8 +128,22 @@ impl EngineScalar for f64 {
         model.matvec_into(x, y, scratch);
     }
 
+    fn matvec_batch_into(
+        model: &dyn PModel,
+        x: &[f64],
+        y: &mut [f64],
+        lanes: usize,
+        scratch: &mut BatchMatvecScratch,
+    ) {
+        model.matvec_batch_into(x, y, lanes, scratch);
+    }
+
     fn preprocess_inplace(pre: &Preprocessor, x: &mut [f64]) {
         pre.apply_inplace(x);
+    }
+
+    fn preprocess_batch_inplace(pre: &Preprocessor, x: &mut [f64], lanes: usize) {
+        pre.apply_batch_inplace(x, lanes);
     }
 
     fn features_into(f: Nonlinearity, z: &[f64], out: &mut [f64]) {
@@ -129,8 +161,22 @@ impl EngineScalar for f32 {
         model.matvec_into_f32(x, y, scratch);
     }
 
+    fn matvec_batch_into(
+        model: &dyn PModel,
+        x: &[f32],
+        y: &mut [f32],
+        lanes: usize,
+        scratch: &mut BatchMatvecScratch<f32>,
+    ) {
+        model.matvec_batch_into_f32(x, y, lanes, scratch);
+    }
+
     fn preprocess_inplace(pre: &Preprocessor, x: &mut [f32]) {
         pre.apply_inplace_f32(x);
+    }
+
+    fn preprocess_batch_inplace(pre: &Preprocessor, x: &mut [f32], lanes: usize) {
+        pre.apply_batch_inplace_f32(x, lanes);
     }
 
     fn features_into(f: Nonlinearity, z: &[f32], out: &mut [f32]) {

@@ -29,10 +29,16 @@ pub fn default_workers() -> usize {
 }
 
 /// Persistent embedding workers bound to one [`EmbeddingPlan`]. Each
-/// worker owns a [`BatchExecutor`] (plan shared, scratch private), so a
-/// pool embeds disjoint row ranges of the same batch fully in parallel
-/// with no locking on the hot path. Results are deterministic: sharding
-/// never changes the per-row output.
+/// worker owns a [`BatchExecutor`] (plan shared, scratch private) and
+/// routes its whole sub-batch through one batched planned pass
+/// ([`BatchExecutor::embed_range_into`]), so a pool embeds disjoint
+/// row ranges of the same batch fully in parallel with no locking on
+/// the hot path. Results are deterministic: repeated calls always
+/// agree, and sharding never changes the per-row f64 output (the
+/// batched kernels are lane-count-independent per lane and
+/// bit-identical to the per-row path; at f32 the same holds for every
+/// FFT family — only the dense f32 GEMM sums in a different order than
+/// the 1-row GEMV fallback, within the 1e-4 accuracy contract).
 pub struct WorkerPool<S: EngineScalar = f64> {
     txs: Vec<mpsc::Sender<Job<S>>>,
     handles: Vec<JoinHandle<()>>,
@@ -57,9 +63,9 @@ impl<S: EngineScalar> WorkerPool<S> {
                     while let Ok(job) = rx.recv() {
                         let rows = job.end - job.start;
                         let mut feats = vec![S::ZERO; rows * d];
-                        for (k, i) in (job.start..job.end).enumerate() {
-                            exec.embed_into(job.input.row(i), &mut feats[k * d..(k + 1) * d]);
-                        }
+                        // whole sub-batch through one batched planned
+                        // pass (split-complex kernels for ≥ 2 rows)
+                        exec.embed_range_into(&job.input, job.start, job.end, &mut feats);
                         // receiver may have gone away on pool teardown
                         let _ = job.reply.send(Shard { start: job.start, feats });
                     }

@@ -8,10 +8,37 @@
 //! `n1 − n2 ≡ i1 − i2 (mod n)`, else 0 — every coherence graph is a union
 //! of vertex-disjoint cycles, so `χ[P] ≤ 3` (Figure 1).
 
-use super::{grown, MatvecScratch, PModel};
+use super::{
+    grown, matvec_batch_fallback, matvec_batch_fallback_f32, BatchMatvecScratch, MatvecScratch,
+    PModel,
+};
 use crate::dsp::fft::RealFft;
-use crate::dsp::Complex;
+use crate::dsp::{spectrum_product, Complex, Scalar};
 use crate::rng::Rng;
+use std::sync::OnceLock;
+
+/// Shared body of the batched circulant matvec at both precisions:
+/// batched forward transform, amortized spectrum product, batched
+/// inverse, truncation to the first `m` result indices of every lane.
+fn batch_kernel<S: Scalar>(
+    fft: &RealFft<S>,
+    gspec: &[Complex<S>],
+    (m, n): (usize, usize),
+    x: &[S],
+    y: &mut [S],
+    lanes: usize,
+    scratch: &mut super::BatchMatvecScratch<S>,
+) {
+    let spec_re = grown(&mut scratch.fft.a_re, fft.spectrum_len() * lanes);
+    let spec_im = grown(&mut scratch.fft.a_im, fft.spectrum_len() * lanes);
+    let sre = grown(&mut scratch.fft.b_re, fft.scratch_len() * lanes);
+    let sim = grown(&mut scratch.fft.b_im, fft.scratch_len() * lanes);
+    fft.forward_batch_into(x, spec_re, spec_im, sre, sim, lanes);
+    spectrum_product(spec_re, spec_im, gspec, lanes);
+    let full = grown(&mut scratch.r2, n * lanes);
+    fft.inverse_batch_into(spec_re, spec_im, full, sre, sim, lanes);
+    y.copy_from_slice(&full[..m * lanes]);
+}
 
 /// Circulant structured matrix, m ≤ n rows over budget g ∈ R^n.
 pub struct Circulant {
@@ -21,9 +48,10 @@ pub struct Circulant {
     /// packed real-FFT plan + precomputed conj(half-spectrum of g) when
     /// n is a power of two (§Perf: half-size transform, cached kernel)
     plan: Option<(RealFft, Vec<Complex>)>,
-    /// native f32 twin of `plan`: f32 twiddles plus the f64 kernel
-    /// spectrum narrowed once at construction (serving precision)
-    plan32: Option<(RealFft<f32>, Vec<Complex<f32>>)>,
+    /// native f32 twin of `plan`, built lazily on the first f32 call
+    /// (the f64 spectrum narrowed once) so oracle-only consumers —
+    /// eval sweeps, coherence enumeration — pay nothing for it
+    plan32: OnceLock<Option<(RealFft<f32>, Vec<Complex<f32>>)>>,
 }
 
 impl Circulant {
@@ -38,20 +66,30 @@ impl Circulant {
     pub fn from_budget(m: usize, g: Vec<f64>) -> Circulant {
         let n = g.len();
         assert!(m <= n);
-        let (plan, plan32) = if crate::util::is_pow2(n) && n >= 2 {
+        let plan = if crate::util::is_pow2(n) && n >= 2 {
             let fft = RealFft::new(n);
             let spec: Vec<Complex> = fft.forward(&g).iter().map(|c| c.conj()).collect();
-            let spec32: Vec<Complex<f32>> = spec.iter().map(|c| c.cast()).collect();
-            (Some((fft, spec)), Some((RealFft::new(n), spec32)))
+            Some((fft, spec))
         } else {
-            (None, None)
+            None
         };
-        Circulant { m, n, g, plan, plan32 }
+        Circulant { m, n, g, plan, plan32: OnceLock::new() }
     }
 
     /// The budget vector g.
     pub fn budget(&self) -> &[f64] {
         &self.g
+    }
+
+    /// The lazily built f32 twin of the FFT plan (None for non-pow2 n).
+    fn plan32(&self) -> Option<&(RealFft<f32>, Vec<Complex<f32>>)> {
+        self.plan32
+            .get_or_init(|| {
+                self.plan.as_ref().map(|(fft, spec)| {
+                    (RealFft::new(fft.len()), spec.iter().map(|c| c.cast()).collect())
+                })
+            })
+            .as_ref()
     }
 }
 
@@ -131,7 +169,7 @@ impl PModel for Circulant {
     fn matvec_into_f32(&self, x: &[f32], y: &mut [f32], scratch: &mut MatvecScratch<f32>) {
         assert_eq!(x.len(), self.n);
         assert_eq!(y.len(), self.m);
-        match &self.plan32 {
+        match self.plan32() {
             Some((fft, gspec)) => {
                 let spec = grown(&mut scratch.c1, fft.spectrum_len());
                 let half = grown(&mut scratch.c2, fft.scratch_len());
@@ -144,6 +182,44 @@ impl PModel for Circulant {
                 y.copy_from_slice(&full[..self.m]);
             }
             None => super::widen_matvec_into_f32(self, x, y),
+        }
+    }
+
+    fn matvec_batch_into(
+        &self,
+        x: &[f64],
+        y: &mut [f64],
+        lanes: usize,
+        scratch: &mut BatchMatvecScratch,
+    ) {
+        if lanes == 0 {
+            assert!(x.is_empty() && y.is_empty());
+            return;
+        }
+        assert_eq!(x.len(), self.n * lanes);
+        assert_eq!(y.len(), self.m * lanes);
+        match &self.plan {
+            Some((fft, gspec)) => batch_kernel(fft, gspec, (self.m, self.n), x, y, lanes, scratch),
+            None => matvec_batch_fallback(self, x, y, lanes, scratch),
+        }
+    }
+
+    fn matvec_batch_into_f32(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        lanes: usize,
+        scratch: &mut BatchMatvecScratch<f32>,
+    ) {
+        if lanes == 0 {
+            assert!(x.is_empty() && y.is_empty());
+            return;
+        }
+        assert_eq!(x.len(), self.n * lanes);
+        assert_eq!(y.len(), self.m * lanes);
+        match self.plan32() {
+            Some((fft, gspec)) => batch_kernel(fft, gspec, (self.m, self.n), x, y, lanes, scratch),
+            None => matvec_batch_fallback_f32(self, x, y, lanes, scratch),
         }
     }
 

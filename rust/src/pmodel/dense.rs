@@ -5,30 +5,58 @@
 //! any (i1,n1) ≠ (i2,n2), so `χ[P] = 0`, `μ[P] = 0`, `μ̃[P] = 0` — the strongest
 //! concentration, at quadratic time/space cost.
 
-use super::{MatvecScratch, PModel};
+use super::{BatchMatvecScratch, MatvecScratch, PModel};
+use crate::dsp::Scalar;
 use crate::rng::Rng;
+use std::sync::OnceLock;
+
+/// Blocked GEMM shared by both precisions of the batched dense matvec:
+/// the lane-major input is an n×lanes row-major matrix, so each A
+/// entry is loaded once and broadcast over `lanes` contiguous
+/// accumulators. The j-sequential accumulation keeps every output
+/// element's sum order identical to the per-row f64 GEMV
+/// (bit-identical at f64; the per-row *f32* GEMV instead uses an
+/// 8-lane chunked reduction, so f32 agreement is within the 1e-4
+/// contract rather than bitwise).
+fn batch_gemm<S: Scalar>(a: &[S], n: usize, x: &[S], y: &mut [S], lanes: usize) {
+    for (i, yrow) in y.chunks_exact_mut(lanes).enumerate() {
+        yrow.fill(S::ZERO);
+        let arow = &a[i * n..(i + 1) * n];
+        for (j, &aij) in arow.iter().enumerate() {
+            let xs = &x[j * lanes..(j + 1) * lanes];
+            for (yv, &xv) in yrow.iter_mut().zip(xs) {
+                *yv += aij * xv;
+            }
+        }
+    }
+}
 
 /// Unstructured Gaussian matrix (row-major storage).
 pub struct DenseGaussian {
     m: usize,
     n: usize,
     a: Vec<f64>,
-    /// f32 copy of the matrix (narrowed once at construction) so the
+    /// f32 copy of the matrix, narrowed lazily on the first f32 call so
+    /// oracle-only consumers skip the +50% memory; once built, the
     /// serving-precision matvec streams half the bytes of the oracle
-    a32: Vec<f32>,
+    a32: OnceLock<Vec<f32>>,
 }
 
 impl DenseGaussian {
     /// Sample an m×n iid N(0,1) matrix.
     pub fn new(m: usize, n: usize, rng: &mut Rng) -> DenseGaussian {
         let a = rng.gaussian_vec(m * n);
-        let a32 = a.iter().map(|&v| v as f32).collect();
-        DenseGaussian { m, n, a, a32 }
+        DenseGaussian { m, n, a, a32: OnceLock::new() }
     }
 
     /// Entry accessor.
     pub fn at(&self, i: usize, j: usize) -> f64 {
         self.a[i * self.n + j]
+    }
+
+    /// The lazily narrowed f32 copy of the matrix.
+    fn a32(&self) -> &[f32] {
+        self.a32.get_or_init(|| self.a.iter().map(|&v| v as f32).collect())
     }
 }
 
@@ -80,8 +108,9 @@ impl PModel for DenseGaussian {
     fn matvec_into_f32(&self, x: &[f32], y: &mut [f32], _scratch: &mut MatvecScratch<f32>) {
         assert_eq!(x.len(), self.n);
         assert_eq!(y.len(), self.m);
+        let a32 = self.a32();
         for (i, yi) in y.iter_mut().enumerate() {
-            let row = &self.a32[i * self.n..(i + 1) * self.n];
+            let row = &a32[i * self.n..(i + 1) * self.n];
             // eight-lane partial sums: keeps the reduction associative
             // for the autovectorizer and bounds the f32 error growth
             let mut acc = [0.0f32; 8];
@@ -98,6 +127,38 @@ impl PModel for DenseGaussian {
             }
             *yi = s;
         }
+    }
+
+    fn matvec_batch_into(
+        &self,
+        x: &[f64],
+        y: &mut [f64],
+        lanes: usize,
+        _scratch: &mut BatchMatvecScratch,
+    ) {
+        if lanes == 0 {
+            assert!(x.is_empty() && y.is_empty());
+            return;
+        }
+        assert_eq!(x.len(), self.n * lanes);
+        assert_eq!(y.len(), self.m * lanes);
+        batch_gemm(&self.a, self.n, x, y, lanes);
+    }
+
+    fn matvec_batch_into_f32(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        lanes: usize,
+        _scratch: &mut BatchMatvecScratch<f32>,
+    ) {
+        if lanes == 0 {
+            assert!(x.is_empty() && y.is_empty());
+            return;
+        }
+        assert_eq!(x.len(), self.n * lanes);
+        assert_eq!(y.len(), self.m * lanes);
+        batch_gemm(self.a32(), self.n, x, y, lanes);
     }
 
     fn matvec_flops(&self) -> usize {

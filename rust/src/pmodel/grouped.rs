@@ -13,7 +13,7 @@
 //! the mechanism by which a larger budget buys better concentration
 //! (paper §2.2.4 discussion).
 
-use super::{Circulant, MatvecScratch, PModel};
+use super::{BatchMatvecScratch, Circulant, MatvecScratch, PModel};
 use crate::rng::Rng;
 
 /// Block-circulant matrix with independent per-group budgets.
@@ -107,6 +107,47 @@ impl PModel for GroupedCirculant {
         for block in &self.blocks {
             let rows = block.m();
             block.matvec_into_f32(x, &mut y[off..off + rows], scratch);
+            off += rows;
+        }
+    }
+
+    fn matvec_batch_into(
+        &self,
+        x: &[f64],
+        y: &mut [f64],
+        lanes: usize,
+        scratch: &mut BatchMatvecScratch,
+    ) {
+        assert_eq!(x.len(), self.n * lanes);
+        assert_eq!(y.len(), self.m * lanes);
+        // one batched circulant pass per group; each group's spectrum
+        // is still amortized over every lane
+        let mut off = 0;
+        for block in &self.blocks {
+            let rows = block.m();
+            block.matvec_batch_into(x, &mut y[off * lanes..(off + rows) * lanes], lanes, scratch);
+            off += rows;
+        }
+    }
+
+    fn matvec_batch_into_f32(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        lanes: usize,
+        scratch: &mut BatchMatvecScratch<f32>,
+    ) {
+        assert_eq!(x.len(), self.n * lanes);
+        assert_eq!(y.len(), self.m * lanes);
+        let mut off = 0;
+        for block in &self.blocks {
+            let rows = block.m();
+            block.matvec_batch_into_f32(
+                x,
+                &mut y[off * lanes..(off + rows) * lanes],
+                lanes,
+                scratch,
+            );
             off += rows;
         }
     }

@@ -6,8 +6,20 @@
 //!
 //! Fast matvec: `y[i] = Σ_j g[i+j]·x[j] = linconv(reverse(x), g)[n−1+i]`.
 
-use super::{grown, MatvecScratch, PModel, Toeplitz};
+use super::{grown, BatchMatvecScratch, MatvecScratch, PModel, Toeplitz};
+use crate::dsp::Scalar;
 use crate::rng::Rng;
+
+/// Reverse a lane-major batch index-wise (lane blocks stay intact):
+/// `out[j] = x[n-1-j]` per lane — the staging both precisions of the
+/// batched Hankel matvec share.
+fn reverse_lanes<S: Scalar>(x: &[S], n: usize, lanes: usize, xr: &mut Vec<S>) {
+    let rev = grown(xr, n * lanes);
+    for j in 0..n {
+        rev[j * lanes..(j + 1) * lanes]
+            .copy_from_slice(&x[(n - 1 - j) * lanes..(n - j) * lanes]);
+    }
+}
 
 /// Hankel structured matrix over budget g ∈ R^{n+m-1}.
 pub struct Hankel {
@@ -108,6 +120,45 @@ impl PModel for Hankel {
             }
         }
         self.toep.matvec_into_f32(&xr[..self.n], y, scratch);
+        scratch.r3 = xr;
+    }
+
+    fn matvec_batch_into(
+        &self,
+        x: &[f64],
+        y: &mut [f64],
+        lanes: usize,
+        scratch: &mut BatchMatvecScratch,
+    ) {
+        if lanes == 0 {
+            assert!(x.is_empty() && y.is_empty());
+            return;
+        }
+        assert_eq!(x.len(), self.n * lanes);
+        // Reversed batch staged in r3, moved out so the Toeplitz
+        // kernels are free to use the other scratch buffers.
+        let mut xr = std::mem::take(&mut scratch.r3);
+        reverse_lanes(x, self.n, lanes, &mut xr);
+        self.toep.matvec_batch_into(&xr[..self.n * lanes], y, lanes, scratch);
+        scratch.r3 = xr;
+    }
+
+    fn matvec_batch_into_f32(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        lanes: usize,
+        scratch: &mut BatchMatvecScratch<f32>,
+    ) {
+        if lanes == 0 {
+            assert!(x.is_empty() && y.is_empty());
+            return;
+        }
+        assert_eq!(x.len(), self.n * lanes);
+        // Same staging dance as the f64 path, on the f32 scratch.
+        let mut xr = std::mem::take(&mut scratch.r3);
+        reverse_lanes(x, self.n, lanes, &mut xr);
+        self.toep.matvec_batch_into_f32(&xr[..self.n * lanes], y, lanes, scratch);
         scratch.r3 = xr;
     }
 }

@@ -12,9 +12,43 @@
 //!
 //! Matvec: r circulant+negacyclic convolutions, O(r·n log n).
 
-use super::{grown, MatvecScratch, PModel};
-use crate::dsp::{circular_convolve, negacyclic_convolve, ConvPlan, NegacyclicPlan};
+use super::{
+    grown, matvec_batch_fallback, matvec_batch_fallback_f32, BatchMatvecScratch, MatvecScratch,
+    PModel,
+};
+use crate::dsp::{circular_convolve, negacyclic_convolve, ConvPlan, NegacyclicPlan, Scalar};
 use crate::rng::Rng;
+use std::sync::OnceLock;
+
+/// Shared body of the batched LDR matvec at both precisions: per block
+/// a batched negacyclic convolution then a batched circular
+/// convolution, accumulating the first `y.len() / lanes` result
+/// indices of every lane. `w`/`yb` are moved out of the scratch so the
+/// per-plan batched applies can borrow the split planes.
+fn batch_kernel<S: Scalar>(
+    plans: &[(NegacyclicPlan<S>, ConvPlan<S>)],
+    n: usize,
+    x: &[S],
+    y: &mut [S],
+    lanes: usize,
+    scratch: &mut super::BatchMatvecScratch<S>,
+) {
+    y.fill(S::ZERO);
+    let mut w = std::mem::take(&mut scratch.r1);
+    grown(&mut w, n * lanes);
+    let mut yb = std::mem::take(&mut scratch.r2);
+    grown(&mut yb, n * lanes);
+    for (neg, conv) in plans {
+        neg.apply_batch_into(x, &mut w[..n * lanes], &mut scratch.fft, lanes);
+        conv.apply_batch_into(&w[..n * lanes], &mut yb[..n * lanes], &mut scratch.fft, lanes);
+        // accumulate the first m result indices of each lane
+        for (yi, v) in y.iter_mut().zip(&yb) {
+            *yi += *v;
+        }
+    }
+    scratch.r1 = w;
+    scratch.r2 = yb;
+}
 
 /// Low-displacement-rank structured matrix (m ≤ n rows of the n×n product).
 pub struct LowDisplacementRank {
@@ -28,8 +62,9 @@ pub struct LowDisplacementRank {
     /// per-block cached plans (§Perf): negacyclic plan for h^b and
     /// circulant-convolution plan for g^b; None for non-pow2 n
     plans: Option<Vec<(NegacyclicPlan, ConvPlan)>>,
-    /// native f32 twins of `plans` (kernels narrowed once at construction)
-    plans32: Option<Vec<(NegacyclicPlan<f32>, ConvPlan<f32>)>>,
+    /// native f32 twins of `plans`, built lazily on the first f32 call
+    /// (kernels narrowed once) so oracle-only consumers pay nothing
+    plans32: OnceLock<Option<Vec<(NegacyclicPlan<f32>, ConvPlan<f32>)>>>,
 }
 
 impl LowDisplacementRank {
@@ -52,31 +87,42 @@ impl LowDisplacementRank {
                 hv
             })
             .collect();
-        let (plans, plans32) = if crate::util::is_pow2(n) {
-            let p64 = g
-                .iter()
-                .zip(&h)
-                .map(|(gb, hb)| (NegacyclicPlan::new(hb), ConvPlan::new(gb)))
-                .collect();
-            let p32 = g
-                .iter()
-                .zip(&h)
-                .map(|(gb, hb)| {
-                    let gb32: Vec<f32> = gb.iter().map(|&v| v as f32).collect();
-                    let hb32: Vec<f32> = hb.iter().map(|&v| v as f32).collect();
-                    (NegacyclicPlan::new(&hb32), ConvPlan::new(&gb32))
-                })
-                .collect();
-            (Some(p64), Some(p32))
+        let plans = if crate::util::is_pow2(n) {
+            Some(
+                g.iter()
+                    .zip(&h)
+                    .map(|(gb, hb)| (NegacyclicPlan::new(hb), ConvPlan::new(gb)))
+                    .collect(),
+            )
         } else {
-            (None, None)
+            None
         };
-        LowDisplacementRank { m, n, r, g, h, plans, plans32 }
+        LowDisplacementRank { m, n, r, g, h, plans, plans32: OnceLock::new() }
     }
 
     /// Displacement rank.
     pub fn rank(&self) -> usize {
         self.r
+    }
+
+    /// The lazily built f32 twins of the per-block plans (None for
+    /// non-pow2 n). Kernels are narrowed from the sampled f64 budgets.
+    fn plans32(&self) -> Option<&Vec<(NegacyclicPlan<f32>, ConvPlan<f32>)>> {
+        self.plans32
+            .get_or_init(|| {
+                self.plans.as_ref().map(|_| {
+                    self.g
+                        .iter()
+                        .zip(&self.h)
+                        .map(|(gb, hb)| {
+                            let gb32: Vec<f32> = gb.iter().map(|&v| v as f32).collect();
+                            let hb32: Vec<f32> = hb.iter().map(|&v| v as f32).collect();
+                            (NegacyclicPlan::new(&hb32), ConvPlan::new(&gb32))
+                        })
+                        .collect()
+                })
+            })
+            .as_ref()
     }
 
     /// Entry of the skew-circulant S_b = Z₋₁(h^b).
@@ -200,7 +246,7 @@ impl PModel for LowDisplacementRank {
     fn matvec_into_f32(&self, x: &[f32], y: &mut [f32], scratch: &mut MatvecScratch<f32>) {
         assert_eq!(x.len(), self.n);
         assert_eq!(y.len(), self.m);
-        match &self.plans32 {
+        match self.plans32() {
             Some(plans) => {
                 y.fill(0.0);
                 // same move-out staging as the f64 path, on f32 buffers
@@ -224,6 +270,44 @@ impl PModel for LowDisplacementRank {
                 scratch.r2 = yb;
             }
             None => super::widen_matvec_into_f32(self, x, y),
+        }
+    }
+
+    fn matvec_batch_into(
+        &self,
+        x: &[f64],
+        y: &mut [f64],
+        lanes: usize,
+        scratch: &mut BatchMatvecScratch,
+    ) {
+        if lanes == 0 {
+            assert!(x.is_empty() && y.is_empty());
+            return;
+        }
+        assert_eq!(x.len(), self.n * lanes);
+        assert_eq!(y.len(), self.m * lanes);
+        match &self.plans {
+            Some(plans) => batch_kernel(plans, self.n, x, y, lanes, scratch),
+            None => matvec_batch_fallback(self, x, y, lanes, scratch),
+        }
+    }
+
+    fn matvec_batch_into_f32(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        lanes: usize,
+        scratch: &mut BatchMatvecScratch<f32>,
+    ) {
+        if lanes == 0 {
+            assert!(x.is_empty() && y.is_empty());
+            return;
+        }
+        assert_eq!(x.len(), self.n * lanes);
+        assert_eq!(y.len(), self.m * lanes);
+        match self.plans32() {
+            Some(plans) => batch_kernel(plans, self.n, x, y, lanes, scratch),
+            None => matvec_batch_fallback_f32(self, x, y, lanes, scratch),
         }
     }
 

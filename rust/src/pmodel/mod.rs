@@ -21,7 +21,12 @@
 //! [`PModel::matvec_into`], a *planned* matvec that writes into a
 //! caller-owned output row and draws all temporaries from a reusable
 //! [`MatvecScratch`] — zero heap allocation per call once the scratch
-//! has warmed up. The [`crate::engine`] layer builds on this.
+//! has warmed up, and [`PModel::matvec_batch_into`], a *batched*
+//! planned matvec over the split-complex lane-major layout of
+//! [`crate::dsp::batch`] that amortizes every twiddle/spectrum load
+//! across the whole batch (bit-identical at f64 to the per-row loop;
+//! dense runs a blocked GEMM instead of B GEMVs). The
+//! [`crate::engine`] layer builds on both.
 //!
 //! Precision: the trait itself stays f64 (the oracle used by `sigma`,
 //! coherence statistics and tests), but every family also exposes a
@@ -52,8 +57,10 @@ pub use skew_circulant::SkewCirculant;
 pub use stacked::Stacked;
 pub use toeplitz::Toeplitz;
 
-use crate::dsp::Complex;
+use crate::dsp::{BatchScratch, Complex};
 use crate::rng::Rng;
+
+pub use crate::util::grown;
 
 /// Reusable work buffers for [`PModel::matvec_into`] (at `f64`) and
 /// [`PModel::matvec_into_f32`] (at `f32`). One scratch serves any model
@@ -88,13 +95,106 @@ impl<S> MatvecScratch<S> {
     }
 }
 
-/// Grow `buf` to at least `len` and return the leading `len` slice —
-/// the grow-once / borrow-many idiom used by the planned matvec paths.
-pub fn grown<T: Clone + Default>(buf: &mut Vec<T>, len: usize) -> &mut [T] {
-    if buf.len() < len {
-        buf.resize(len, T::default());
+/// Reusable work buffers for the *batched* planned matvec paths
+/// ([`PModel::matvec_batch_into`] / [`PModel::matvec_batch_into_f32`]).
+/// Like [`MatvecScratch`], one scratch serves any model: buffers grow
+/// to the high-water mark on first use and are reused allocation-free
+/// afterwards. The unparameterized name defaults to the f64 oracle
+/// precision.
+#[derive(Debug, Default)]
+pub struct BatchMatvecScratch<S = f64> {
+    /// split-complex FFT work planes (see [`crate::dsp::batch`])
+    pub fft: BatchScratch<S>,
+    /// real plane: padded inputs / per-block intermediates
+    pub r1: Vec<S>,
+    /// real plane: full-length inverse outputs / block accumulators
+    pub r2: Vec<S>,
+    /// real plane: adapter staging (e.g. Hankel's reversed batch)
+    pub r3: Vec<S>,
+    /// per-lane fallback: gathered input row
+    pub xrow: Vec<S>,
+    /// per-lane fallback: scattered output row
+    pub yrow: Vec<S>,
+    /// per-lane fallback: the per-row scratch
+    pub row: MatvecScratch<S>,
+}
+
+impl<S> BatchMatvecScratch<S> {
+    /// Empty scratch; buffers grow on demand.
+    pub fn new() -> BatchMatvecScratch<S> {
+        BatchMatvecScratch {
+            fft: BatchScratch::new(),
+            r1: Vec::new(),
+            r2: Vec::new(),
+            r3: Vec::new(),
+            xrow: Vec::new(),
+            yrow: Vec::new(),
+            row: MatvecScratch::new(),
+        }
     }
-    &mut buf[..len]
+}
+
+/// Per-lane fallback shared by the [`PModel::matvec_batch_into`]
+/// default and the no-plan arms of the family overrides: gather each
+/// lane into a contiguous row, run the planned per-row path, scatter
+/// the outputs back. Bit-identical to the per-row loop by construction
+/// (it *is* the per-row loop).
+pub fn matvec_batch_fallback<M: PModel + ?Sized>(
+    model: &M,
+    x: &[f64],
+    y: &mut [f64],
+    lanes: usize,
+    scratch: &mut BatchMatvecScratch,
+) {
+    let n = model.n();
+    let m = model.m();
+    if lanes == 0 {
+        assert!(x.is_empty() && y.is_empty());
+        return;
+    }
+    assert_eq!(x.len(), n * lanes);
+    assert_eq!(y.len(), m * lanes);
+    let xrow = grown(&mut scratch.xrow, n);
+    let yrow = grown(&mut scratch.yrow, m);
+    for l in 0..lanes {
+        for (j, v) in xrow.iter_mut().enumerate() {
+            *v = x[j * lanes + l];
+        }
+        model.matvec_into(xrow, yrow, &mut scratch.row);
+        for (i, v) in yrow.iter().enumerate() {
+            y[i * lanes + l] = *v;
+        }
+    }
+}
+
+/// The f32 twin of [`matvec_batch_fallback`], routing each lane
+/// through [`PModel::matvec_into_f32`].
+pub fn matvec_batch_fallback_f32<M: PModel + ?Sized>(
+    model: &M,
+    x: &[f32],
+    y: &mut [f32],
+    lanes: usize,
+    scratch: &mut BatchMatvecScratch<f32>,
+) {
+    let n = model.n();
+    let m = model.m();
+    if lanes == 0 {
+        assert!(x.is_empty() && y.is_empty());
+        return;
+    }
+    assert_eq!(x.len(), n * lanes);
+    assert_eq!(y.len(), m * lanes);
+    let xrow = grown(&mut scratch.xrow, n);
+    let yrow = grown(&mut scratch.yrow, m);
+    for l in 0..lanes {
+        for (j, v) in xrow.iter_mut().enumerate() {
+            *v = x[j * lanes + l];
+        }
+        model.matvec_into_f32(xrow, yrow, &mut scratch.row);
+        for (i, v) in yrow.iter().enumerate() {
+            y[i * lanes + l] = *v;
+        }
+    }
 }
 
 /// A structured Gaussian matrix produced by the P-model mechanism.
@@ -144,6 +244,44 @@ pub trait PModel: Send + Sync {
         for (yi, v) in y.iter_mut().zip(&self.matvec(&xw)) {
             *yi = *v as f32;
         }
+    }
+
+    /// Planned *batched* matvec over `lanes` input vectors in the
+    /// lane-major split layout of [`crate::dsp::batch`]: `x` is
+    /// [n × lanes] (element `j` of lane `l` at `x[j * lanes + l]`),
+    /// `y` is [m × lanes]. Families with FFT plans override this with
+    /// split-complex batch kernels that load each twiddle, spectrum and
+    /// diagonal entry once for the whole batch; the dense family runs a
+    /// blocked GEMM instead of `lanes` GEMVs. The default gathers each
+    /// lane and runs the per-row planned path (correct for any family).
+    ///
+    /// Contract: the batched path is **bit-identical** to looping
+    /// [`PModel::matvec_into`] over the lanes.
+    fn matvec_batch_into(
+        &self,
+        x: &[f64],
+        y: &mut [f64],
+        lanes: usize,
+        scratch: &mut BatchMatvecScratch,
+    ) {
+        matvec_batch_fallback(self, x, y, lanes, scratch);
+    }
+
+    /// Native single-precision [`PModel::matvec_batch_into`]: the same
+    /// lane-major layout executed end-to-end in f32 through the
+    /// families' f32 plans (built lazily on first use). Tracks the f64
+    /// oracle within ~1e-4 relative error; bit-identity across batch
+    /// shapes is only guaranteed for the FFT families (the dense f32
+    /// GEMM uses a different — but equally accurate — summation order
+    /// than the per-row 8-lane GEMV).
+    fn matvec_batch_into_f32(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        lanes: usize,
+        scratch: &mut BatchMatvecScratch<f32>,
+    ) {
+        matvec_batch_fallback_f32(self, x, y, lanes, scratch);
     }
 
     /// Number of f64s that must be *stored* to represent A (the paper's
@@ -318,6 +456,9 @@ pub(crate) mod test_support {
     /// Check fast matvec against naive materialized matvec, and the
     /// planned [`PModel::matvec_into`] / [`PModel::matvec_into_f32`]
     /// paths against both — including scratch reuse across calls.
+    /// Finishes with a lane-major batched pass checking
+    /// [`PModel::matvec_batch_into`] (bit-identical to per-row) and
+    /// [`PModel::matvec_batch_into_f32`] (1e-4 relative).
     pub fn check_matvec(model: &dyn PModel, seed: u64) {
         let mut rng = Rng::new(seed);
         let mut scratch = MatvecScratch::new();
@@ -339,6 +480,49 @@ pub(crate) mod test_support {
                     (*g as f64 - w).abs() <= 1e-4 * (1.0 + w.abs()),
                     "{} f32 path: {g} vs {w}",
                     model.name()
+                );
+            }
+        }
+        check_matvec_batch(model, seed ^ 0x5eed, 3);
+    }
+
+    /// Check the batched lane-major paths against the per-row planned
+    /// path: f64 must be bit-identical, f32 within 1e-4 of the f64
+    /// per-row results. (The integration suite
+    /// `tests/property_batch_matvec.rs` asserts the same contract
+    /// through the public API at more lane counts; a contract change
+    /// must update both in lockstep.)
+    pub fn check_matvec_batch(model: &dyn PModel, seed: u64, lanes: usize) {
+        let (m, n) = (model.m(), model.n());
+        let mut rng = Rng::new(seed);
+        let rows: Vec<Vec<f64>> = (0..lanes).map(|_| rng.gaussian_vec(n)).collect();
+        let x = crate::dsp::pack_lanes(&rows);
+        let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let mut y = vec![0.0; m * lanes];
+        let mut y32 = vec![0.0f32; m * lanes];
+        let mut bs = BatchMatvecScratch::new();
+        let mut bs32 = BatchMatvecScratch::<f32>::new();
+        model.matvec_batch_into(&x, &mut y, lanes, &mut bs);
+        model.matvec_batch_into_f32(&x32, &mut y32, lanes, &mut bs32);
+        let mut scratch = MatvecScratch::new();
+        let mut want = vec![0.0; m];
+        for (l, row) in rows.iter().enumerate() {
+            model.matvec_into(row, &mut want, &mut scratch);
+            for i in 0..m {
+                assert_eq!(
+                    y[i * lanes + l].to_bits(),
+                    want[i].to_bits(),
+                    "{} batched f64 lane {l} row {i}: {} vs {}",
+                    model.name(),
+                    y[i * lanes + l],
+                    want[i]
+                );
+                let g = y32[i * lanes + l] as f64;
+                assert!(
+                    (g - want[i]).abs() <= 1e-4 * (1.0 + want[i].abs()),
+                    "{} batched f32 lane {l} row {i}: {g} vs {}",
+                    model.name(),
+                    want[i]
                 );
             }
         }

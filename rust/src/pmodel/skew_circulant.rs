@@ -5,9 +5,12 @@
 //! t = n. Covered by Theorems 11/12 alongside circulant/Toeplitz/Hankel.
 //! Fast matvec is a negacyclic convolution (ω-twisted FFT).
 
-use super::{MatvecScratch, PModel};
+use super::{
+    matvec_batch_fallback, matvec_batch_fallback_f32, BatchMatvecScratch, MatvecScratch, PModel,
+};
 use crate::dsp::{negacyclic_convolve, NegacyclicPlan};
 use crate::rng::Rng;
+use std::sync::OnceLock;
 
 /// Skew-circulant structured matrix, m ≤ n rows over budget g ∈ R^n.
 pub struct SkewCirculant {
@@ -18,8 +21,9 @@ pub struct SkewCirculant {
     /// (§Perf: twist tables + kernel FFT computed once); None for
     /// non-power-of-two n (naive fallback)
     plan: Option<NegacyclicPlan>,
-    /// native f32 twin of `plan` (kernel narrowed once at construction)
-    plan32: Option<NegacyclicPlan<f32>>,
+    /// native f32 twin of `plan`, built lazily on the first f32 call so
+    /// oracle-only consumers pay nothing for it
+    plan32: OnceLock<Option<NegacyclicPlan<f32>>>,
 }
 
 impl SkewCirculant {
@@ -33,19 +37,36 @@ impl SkewCirculant {
     pub fn from_budget(m: usize, g: Vec<f64>) -> SkewCirculant {
         let n = g.len();
         assert!(m <= n);
-        let (plan, plan32) = if crate::util::is_pow2(n) {
+        let plan = if crate::util::is_pow2(n) {
             // column-form generator: g'[0] = g[0], g'[k] = -g[n-k]
             let mut g2 = vec![0.0; n];
             g2[0] = g[0];
             for k in 1..n {
                 g2[k] = -g[n - k];
             }
-            let g2_32: Vec<f32> = g2.iter().map(|&v| v as f32).collect();
-            (Some(NegacyclicPlan::new(&g2)), Some(NegacyclicPlan::new(&g2_32)))
+            Some(NegacyclicPlan::new(&g2))
         } else {
-            (None, None)
+            None
         };
-        SkewCirculant { m, n, g, plan, plan32 }
+        SkewCirculant { m, n, g, plan, plan32: OnceLock::new() }
+    }
+
+    /// The lazily built f32 twin of the negacyclic plan (None for
+    /// non-pow2 n). The f64 column-form generator is narrowed once.
+    fn plan32(&self) -> Option<&NegacyclicPlan<f32>> {
+        self.plan32
+            .get_or_init(|| {
+                self.plan.as_ref().map(|_| {
+                    let n = self.n;
+                    let mut g2 = vec![0.0f32; n];
+                    g2[0] = self.g[0] as f32;
+                    for k in 1..n {
+                        g2[k] = (-self.g[n - k]) as f32;
+                    }
+                    NegacyclicPlan::new(&g2)
+                })
+            })
+            .as_ref()
     }
 
     /// Signed budget coefficient of entry (i, j): (index, sign).
@@ -133,9 +154,48 @@ impl PModel for SkewCirculant {
     fn matvec_into_f32(&self, x: &[f32], y: &mut [f32], scratch: &mut MatvecScratch<f32>) {
         assert_eq!(x.len(), self.n);
         assert_eq!(y.len(), self.m);
-        match &self.plan32 {
+        match self.plan32() {
             Some(plan) => plan.apply_into(x, y, &mut scratch.c1),
             None => super::widen_matvec_into_f32(self, x, y),
+        }
+    }
+
+    fn matvec_batch_into(
+        &self,
+        x: &[f64],
+        y: &mut [f64],
+        lanes: usize,
+        scratch: &mut BatchMatvecScratch,
+    ) {
+        if lanes == 0 {
+            assert!(x.is_empty() && y.is_empty());
+            return;
+        }
+        assert_eq!(x.len(), self.n * lanes);
+        assert_eq!(y.len(), self.m * lanes);
+        match &self.plan {
+            // the batched apply writes only the first m result indices
+            Some(plan) => plan.apply_batch_into(x, y, &mut scratch.fft, lanes),
+            None => matvec_batch_fallback(self, x, y, lanes, scratch),
+        }
+    }
+
+    fn matvec_batch_into_f32(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        lanes: usize,
+        scratch: &mut BatchMatvecScratch<f32>,
+    ) {
+        if lanes == 0 {
+            assert!(x.is_empty() && y.is_empty());
+            return;
+        }
+        assert_eq!(x.len(), self.n * lanes);
+        assert_eq!(y.len(), self.m * lanes);
+        match self.plan32() {
+            Some(plan) => plan.apply_batch_into(x, y, &mut scratch.fft, lanes),
+            None => matvec_batch_fallback_f32(self, x, y, lanes, scratch),
         }
     }
 }

@@ -7,7 +7,7 @@
 //! blocks means σ vanishes between blocks, so all coherence statistics
 //! are inherited from the base family.
 
-use super::{MatvecScratch, PModel};
+use super::{BatchMatvecScratch, MatvecScratch, PModel};
 use crate::rng::Rng;
 
 /// A stack of independent structured blocks over the same input dim.
@@ -104,6 +104,44 @@ impl PModel for Stacked {
         for block in &self.blocks {
             let rows = block.m();
             block.matvec_into_f32(x, &mut y[off..off + rows], scratch);
+            off += rows;
+        }
+    }
+
+    fn matvec_batch_into(
+        &self,
+        x: &[f64],
+        y: &mut [f64],
+        lanes: usize,
+        scratch: &mut BatchMatvecScratch,
+    ) {
+        assert_eq!(y.len(), self.m * lanes);
+        // lane-major: block rows occupy contiguous [rows × lanes] spans
+        let mut off = 0;
+        for block in &self.blocks {
+            let rows = block.m();
+            block.matvec_batch_into(x, &mut y[off * lanes..(off + rows) * lanes], lanes, scratch);
+            off += rows;
+        }
+    }
+
+    fn matvec_batch_into_f32(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        lanes: usize,
+        scratch: &mut BatchMatvecScratch<f32>,
+    ) {
+        assert_eq!(y.len(), self.m * lanes);
+        let mut off = 0;
+        for block in &self.blocks {
+            let rows = block.m();
+            block.matvec_batch_into_f32(
+                x,
+                &mut y[off * lanes..(off + rows) * lanes],
+                lanes,
+                scratch,
+            );
             off += rows;
         }
     }

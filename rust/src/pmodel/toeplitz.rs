@@ -9,10 +9,39 @@
 //! Fast matvec embeds A into an N-point circulant (N = next_pow2(n+m−1))
 //! and reuses the FFT correlation path.
 
-use super::{grown, MatvecScratch, PModel};
+use super::{grown, BatchMatvecScratch, MatvecScratch, PModel};
 use crate::dsp::fft::RealFft;
-use crate::dsp::Complex;
+use crate::dsp::{spectrum_product, Complex, Scalar};
 use crate::rng::Rng;
+use std::sync::OnceLock;
+
+/// Shared body of the batched Toeplitz matvec at both precisions:
+/// lane-major zero-pad into the circulant embedding, batched forward
+/// transform, amortized spectrum product, batched inverse, truncation
+/// to the first `m` result indices of every lane.
+fn batch_kernel<S: Scalar>(
+    fft: &RealFft<S>,
+    cspec: &[Complex<S>],
+    (m, n, embed_n): (usize, usize, usize),
+    x: &[S],
+    y: &mut [S],
+    lanes: usize,
+    scratch: &mut super::BatchMatvecScratch<S>,
+) {
+    // lane-major zero-padding: indices n..embed_n are whole zero blocks
+    let xp = grown(&mut scratch.r1, embed_n * lanes);
+    xp[..n * lanes].copy_from_slice(x);
+    xp[n * lanes..].fill(S::ZERO);
+    let spec_re = grown(&mut scratch.fft.a_re, fft.spectrum_len() * lanes);
+    let spec_im = grown(&mut scratch.fft.a_im, fft.spectrum_len() * lanes);
+    let sre = grown(&mut scratch.fft.b_re, fft.scratch_len() * lanes);
+    let sim = grown(&mut scratch.fft.b_im, fft.scratch_len() * lanes);
+    fft.forward_batch_into(xp, spec_re, spec_im, sre, sim, lanes);
+    spectrum_product(spec_re, spec_im, cspec, lanes);
+    let full = grown(&mut scratch.r2, embed_n * lanes);
+    fft.inverse_batch_into(spec_re, spec_im, full, sre, sim, lanes);
+    y.copy_from_slice(&full[..m * lanes]);
+}
 
 /// Toeplitz structured matrix over budget g ∈ R^{n+m-1}.
 pub struct Toeplitz {
@@ -21,8 +50,10 @@ pub struct Toeplitz {
     g: Vec<f64>,
     /// circulant-embedding packed-real-FFT plan: (plan, conj half-spectrum)
     plan: (RealFft, Vec<Complex>),
-    /// native f32 twin of `plan` (spectrum narrowed once at construction)
-    plan32: (RealFft<f32>, Vec<Complex<f32>>),
+    /// native f32 twin of `plan`, built lazily on the first f32 call
+    /// (the f64 spectrum narrowed once) so oracle-only consumers pay
+    /// nothing for it
+    plan32: OnceLock<(RealFft<f32>, Vec<Complex<f32>>)>,
     embed_n: usize,
 }
 
@@ -50,8 +81,14 @@ impl Toeplitz {
         let mut c = c;
         c.resize(embed_n, 0.0);
         let spec: Vec<Complex> = fft.forward(&c).iter().map(|v| v.conj()).collect();
-        let spec32: Vec<Complex<f32>> = spec.iter().map(|v| v.cast()).collect();
-        Toeplitz { m, n, g, plan: (fft, spec), plan32: (RealFft::new(embed_n), spec32), embed_n }
+        Toeplitz { m, n, g, plan: (fft, spec), plan32: OnceLock::new(), embed_n }
+    }
+
+    /// The lazily built f32 twin of the circulant-embedding plan.
+    fn plan32(&self) -> &(RealFft<f32>, Vec<Complex<f32>>) {
+        self.plan32.get_or_init(|| {
+            (RealFft::new(self.embed_n), self.plan.1.iter().map(|v| v.cast()).collect())
+        })
     }
 
     fn budget_index(&self, i: usize, j: usize) -> usize {
@@ -129,7 +166,7 @@ impl PModel for Toeplitz {
     fn matvec_into_f32(&self, x: &[f32], y: &mut [f32], scratch: &mut MatvecScratch<f32>) {
         assert_eq!(x.len(), self.n);
         assert_eq!(y.len(), self.m);
-        let (fft, cspec) = &self.plan32;
+        let (fft, cspec) = self.plan32();
         let xp = grown(&mut scratch.r1, self.embed_n);
         xp[..self.n].copy_from_slice(x);
         xp[self.n..].fill(0.0);
@@ -142,6 +179,40 @@ impl PModel for Toeplitz {
         let full = grown(&mut scratch.r2, self.embed_n);
         fft.inverse_into(spec, full, half);
         y.copy_from_slice(&full[..self.m]);
+    }
+
+    fn matvec_batch_into(
+        &self,
+        x: &[f64],
+        y: &mut [f64],
+        lanes: usize,
+        scratch: &mut BatchMatvecScratch,
+    ) {
+        if lanes == 0 {
+            assert!(x.is_empty() && y.is_empty());
+            return;
+        }
+        assert_eq!(x.len(), self.n * lanes);
+        assert_eq!(y.len(), self.m * lanes);
+        let (fft, cspec) = &self.plan;
+        batch_kernel(fft, cspec, (self.m, self.n, self.embed_n), x, y, lanes, scratch);
+    }
+
+    fn matvec_batch_into_f32(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        lanes: usize,
+        scratch: &mut BatchMatvecScratch<f32>,
+    ) {
+        if lanes == 0 {
+            assert!(x.is_empty() && y.is_empty());
+            return;
+        }
+        assert_eq!(x.len(), self.n * lanes);
+        assert_eq!(y.len(), self.m * lanes);
+        let (fft, cspec) = self.plan32();
+        batch_kernel(fft, cspec, (self.m, self.n, self.embed_n), x, y, lanes, scratch);
     }
 
     fn matvec_flops(&self) -> usize {

@@ -129,6 +129,29 @@ impl Nonlinearity {
         }
     }
 
+    /// Batched [`Nonlinearity::apply_into`] over the lane-major layout
+    /// of [`crate::dsp::batch`]: `z` holds `lanes` projection vectors
+    /// ([m × lanes], projection `i` of lane `l` at `z[i * lanes + l]`)
+    /// and `out` receives the features ([out_dim(m) × lanes]). For
+    /// `CosSin` the cos block occupies feature indices `0..m` and the
+    /// sin block `m..2m`, matching the per-row layout after transpose.
+    /// Pointwise, so per lane identical to the per-row path.
+    pub fn apply_batch_into<S: Scalar>(&self, z: &[S], out: &mut [S], lanes: usize) {
+        if lanes == 0 {
+            assert!(z.is_empty() && out.is_empty());
+            return;
+        }
+        assert_eq!(z.len() % lanes, 0, "z must hold whole projection indices");
+        let m = z.len() / lanes;
+        assert_eq!(out.len(), self.out_dim(m) * lanes);
+        // Every nonlinearity is pointwise and out_dim is linear in m,
+        // so the per-row body applied to the flat lane-major planes is
+        // exactly the batched computation: the CosSin split at z.len()
+        // puts cos at feature indices 0..m and sin at m..2m per lane.
+        // Delegating keeps the two paths one body — they can't diverge.
+        self.apply_into(z, out);
+    }
+
     /// The `y_diff` bound of Definition 6 for bounded f (None if unbounded).
     pub fn bounded_range(&self) -> Option<f64> {
         match self {
@@ -192,6 +215,31 @@ mod tests {
     #[should_panic]
     fn cossin_scalar_panics() {
         Nonlinearity::CosSin.scalar(1.0);
+    }
+
+    #[test]
+    fn batch_apply_matches_per_row_after_transpose() {
+        let lanes = 3usize;
+        let m = 4usize;
+        // z[i * lanes + l] = projection i of lane l
+        let rows: Vec<Vec<f64>> =
+            (0..lanes).map(|l| (0..m).map(|i| (l * m + i) as f64 * 0.3 - 1.0).collect()).collect();
+        let mut z = vec![0.0; m * lanes];
+        for (l, row) in rows.iter().enumerate() {
+            for (i, &v) in row.iter().enumerate() {
+                z[i * lanes + l] = v;
+            }
+        }
+        for f in Nonlinearity::all() {
+            let mut out = vec![0.0; f.out_dim(m) * lanes];
+            f.apply_batch_into(&z, &mut out, lanes);
+            for (l, row) in rows.iter().enumerate() {
+                let want = f.apply(row);
+                for (i, w) in want.iter().enumerate() {
+                    assert_eq!(out[i * lanes + l].to_bits(), w.to_bits(), "{}", f.label());
+                }
+            }
+        }
     }
 
     #[test]

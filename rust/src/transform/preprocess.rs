@@ -7,7 +7,7 @@
 //! H is computed on the fly via the FWHT; only the two diagonals are
 //! stored (2n floats).
 
-use crate::dsp::fwht::fwht_normalized;
+use crate::dsp::fwht::{fwht_batch_normalized, fwht_normalized};
 use crate::rng::Rng;
 
 /// The `D₁ H D₀` preprocessing operator. Input dimension must be a power
@@ -62,6 +62,44 @@ impl Preprocessor {
         fwht_normalized(x);
         for (v, d) in x.iter_mut().zip(&self.d1f) {
             *v *= d;
+        }
+    }
+
+    /// Apply `D₁ H D₀` to `lanes` vectors at once over the lane-major
+    /// layout of [`crate::dsp::batch`] (`x[j * lanes + l]` is element
+    /// `j` of lane `l`): each diagonal entry is loaded once and applied
+    /// to `lanes` contiguous values, and the FWHT runs all lanes
+    /// through one batched butterfly pass. Per lane this is
+    /// bit-identical to [`Preprocessor::apply_inplace`].
+    pub fn apply_batch_inplace(&self, x: &mut [f64], lanes: usize) {
+        assert_eq!(x.len(), self.n() * lanes);
+        for (j, &d) in self.d0.iter().enumerate() {
+            for v in &mut x[j * lanes..(j + 1) * lanes] {
+                *v *= d;
+            }
+        }
+        fwht_batch_normalized(x, self.n(), lanes);
+        for (j, &d) in self.d1.iter().enumerate() {
+            for v in &mut x[j * lanes..(j + 1) * lanes] {
+                *v *= d;
+            }
+        }
+    }
+
+    /// [`Preprocessor::apply_batch_inplace`] natively in f32 (the
+    /// batched serving-precision hot path; no widening anywhere).
+    pub fn apply_batch_inplace_f32(&self, x: &mut [f32], lanes: usize) {
+        assert_eq!(x.len(), self.n() * lanes);
+        for (j, &d) in self.d0f.iter().enumerate() {
+            for v in &mut x[j * lanes..(j + 1) * lanes] {
+                *v *= d;
+            }
+        }
+        fwht_batch_normalized(x, self.n(), lanes);
+        for (j, &d) in self.d1f.iter().enumerate() {
+            for v in &mut x[j * lanes..(j + 1) * lanes] {
+                *v *= d;
+            }
         }
     }
 
@@ -146,6 +184,29 @@ mod tests {
         pre.apply_inplace_f32(&mut got);
         for (a, b) in got.iter().zip(&want) {
             assert!((*a as f64 - b).abs() <= 1e-5 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    fn batch_apply_is_bit_identical_to_per_row() {
+        let n = 64;
+        let lanes = 5;
+        let mut rng = crate::rng::Rng::new(31);
+        let pre = Preprocessor::new(n, &mut rng);
+        let mut g = crate::rng::Rng::new(32);
+        let rows: Vec<Vec<f64>> = (0..lanes).map(|_| g.gaussian_vec(n)).collect();
+        let mut x = crate::dsp::pack_lanes(&rows);
+        let mut x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        pre.apply_batch_inplace(&mut x, lanes);
+        pre.apply_batch_inplace_f32(&mut x32, lanes);
+        for (l, row) in rows.iter().enumerate() {
+            let want = pre.apply(row);
+            let mut want32: Vec<f32> = row.iter().map(|&v| v as f32).collect();
+            pre.apply_inplace_f32(&mut want32);
+            for j in 0..n {
+                assert_eq!(x[j * lanes + l].to_bits(), want[j].to_bits());
+                assert_eq!(x32[j * lanes + l].to_bits(), want32[j].to_bits());
+            }
         }
     }
 

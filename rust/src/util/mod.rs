@@ -35,6 +35,17 @@ pub fn log2_exact(n: usize) -> u32 {
     n.trailing_zeros()
 }
 
+/// Grow `buf` to at least `len` and return the leading `len` slice —
+/// the grow-once / borrow-many idiom used by the planned matvec and
+/// batched-kernel paths (buffers reach their high-water mark on first
+/// use and are reused allocation-free afterwards).
+pub fn grown<T: Clone + Default>(buf: &mut Vec<T>, len: usize) -> &mut [T] {
+    if buf.len() < len {
+        buf.resize(len, T::default());
+    }
+    &mut buf[..len]
+}
+
 /// Relative error |a-b| / max(|b|, eps).
 pub fn rel_err(a: f64, b: f64) -> f64 {
     (a - b).abs() / b.abs().max(1e-12)
@@ -78,5 +89,20 @@ mod tests {
     #[should_panic]
     fn assert_close_panics_on_mismatch() {
         assert_close(&[1.0], &[2.0], 1e-6);
+    }
+
+    #[test]
+    fn grown_grows_once_and_reuses() {
+        let mut buf: Vec<f64> = Vec::new();
+        {
+            let s = grown(&mut buf, 4);
+            assert_eq!(s.len(), 4);
+            s[3] = 7.0;
+        }
+        assert_eq!(buf.len(), 4);
+        // shorter requests borrow a prefix without shrinking the buffer
+        assert_eq!(grown(&mut buf, 2).len(), 2);
+        assert_eq!(buf.len(), 4);
+        assert_eq!(buf[3], 7.0);
     }
 }

@@ -1,0 +1,145 @@
+//! Property tests for the batched planned matvec path:
+//! [`PModel::matvec_batch_into`] must be **bit-identical** (f64) to the
+//! per-row [`PModel::matvec_into`] oracle for every structure family,
+//! batch size and shape — including the m > n stacked adapter and the
+//! non-power-of-two-n zero-padding edge — and
+//! [`PModel::matvec_batch_into_f32`] must track the f64 oracle within
+//! 1e-4 relative error.
+
+use strembed::dsp::pack_lanes;
+use strembed::pmodel::{BatchMatvecScratch, MatvecScratch, PModel, StructureKind};
+use strembed::rng::Rng;
+
+/// Relative tolerance of the f32 batched path against the f64 oracle.
+/// (`pmodel::test_support::check_matvec_batch` asserts the same
+/// contract in-crate per family; a contract change must update both
+/// in lockstep.)
+const F32_REL_TOL: f64 = 1e-4;
+
+fn check_batches(model: &dyn PModel, seed: u64) {
+    let (m, n) = (model.m(), model.n());
+    // one scratch per precision, reused across every batch size (the
+    // serving pattern: buffers must carry no state between calls)
+    let mut bs = BatchMatvecScratch::new();
+    let mut bs32 = BatchMatvecScratch::<f32>::new();
+    let mut scratch = MatvecScratch::new();
+    for &lanes in &[1usize, 7, 64] {
+        let mut rng = Rng::new(seed ^ (lanes as u64).wrapping_mul(0x9e3779b97f4a7c15));
+        let rows: Vec<Vec<f64>> = (0..lanes).map(|_| rng.gaussian_vec(n)).collect();
+        let x = pack_lanes(&rows);
+        let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let mut y = vec![0.0; m * lanes];
+        let mut y32 = vec![0.0f32; m * lanes];
+        model.matvec_batch_into(&x, &mut y, lanes, &mut bs);
+        model.matvec_batch_into_f32(&x32, &mut y32, lanes, &mut bs32);
+        let mut want = vec![0.0; m];
+        for (l, row) in rows.iter().enumerate() {
+            model.matvec_into(row, &mut want, &mut scratch);
+            for i in 0..m {
+                assert_eq!(
+                    y[i * lanes + l].to_bits(),
+                    want[i].to_bits(),
+                    "{} m={m} n={n} lanes={lanes} lane {l} row {i}: {} vs {}",
+                    model.name(),
+                    y[i * lanes + l],
+                    want[i]
+                );
+                let g = y32[i * lanes + l] as f64;
+                assert!(
+                    (g - want[i]).abs() <= F32_REL_TOL * (1.0 + want[i].abs()),
+                    "{} m={m} n={n} lanes={lanes} f32 lane {l} row {i}: {g} vs {}",
+                    model.name(),
+                    want[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_matches_per_row_all_families_pow2() {
+    let mut rng = Rng::new(101);
+    for kind in StructureKind::all() {
+        let model = kind.build(8, 16, &mut rng);
+        check_batches(model.as_ref(), 500);
+    }
+}
+
+#[test]
+fn batch_matches_per_row_square_serving_shape() {
+    let mut rng = Rng::new(102);
+    for kind in [StructureKind::Circulant, StructureKind::Toeplitz, StructureKind::Ldr(2)] {
+        let model = kind.build(64, 64, &mut rng);
+        check_batches(model.as_ref(), 600);
+    }
+}
+
+#[test]
+fn batch_matches_per_row_when_m_exceeds_n() {
+    // m > n routes through the Stacked adapter: contiguous lane-major
+    // block spans per sub-model
+    let mut rng = Rng::new(103);
+    for kind in [
+        StructureKind::Circulant,
+        StructureKind::SkewCirculant,
+        StructureKind::Ldr(2),
+        StructureKind::Toeplitz,
+        StructureKind::Hankel,
+        StructureKind::Grouped(4),
+    ] {
+        let model = kind.build(24, 16, &mut rng);
+        check_batches(model.as_ref(), 700);
+    }
+}
+
+#[test]
+fn batch_matches_per_row_non_pow2_n() {
+    // The zero-padding edge: Toeplitz/Hankel embed n=12 into a pow2
+    // circulant and run the batched kernels; circulant/skew/LDR have no
+    // FFT plan at n=12 and must route through the per-lane fallback —
+    // both arms must satisfy the same bit-identity contract.
+    let mut rng = Rng::new(104);
+    for kind in [
+        StructureKind::Circulant,
+        StructureKind::SkewCirculant,
+        StructureKind::Toeplitz,
+        StructureKind::Hankel,
+        StructureKind::Ldr(2),
+        StructureKind::Dense,
+        StructureKind::Grouped(3),
+    ] {
+        let model = kind.build(5, 12, &mut rng);
+        check_batches(model.as_ref(), 800);
+    }
+}
+
+#[test]
+fn batch_scratch_carries_no_state_across_models() {
+    // deliberately run models of different shapes through ONE scratch
+    let mut rng = Rng::new(105);
+    let models: Vec<Box<dyn PModel>> = vec![
+        StructureKind::Toeplitz.build(8, 32, &mut rng),
+        StructureKind::Circulant.build(4, 8, &mut rng),
+        StructureKind::Ldr(3).build(16, 16, &mut rng),
+    ];
+    let mut bs = BatchMatvecScratch::new();
+    let mut scratch = MatvecScratch::new();
+    for round in 0..2 {
+        for model in &models {
+            let (m, n) = (model.m(), model.n());
+            let lanes = 5usize;
+            let mut g = Rng::new(900 + round);
+            let rows: Vec<Vec<f64>> = (0..lanes).map(|_| g.gaussian_vec(n)).collect();
+            let x = pack_lanes(&rows);
+            let mut y = vec![0.0; m * lanes];
+            model.matvec_batch_into(&x, &mut y, lanes, &mut bs);
+            let mut want = vec![0.0; m];
+            for (l, row) in rows.iter().enumerate() {
+                model.matvec_into(row, &mut want, &mut scratch);
+                for i in 0..m {
+                    assert_eq!(y[i * lanes + l].to_bits(), want[i].to_bits(), "{}", model.name());
+                }
+            }
+        }
+    }
+}

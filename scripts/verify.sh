@@ -11,6 +11,25 @@ cargo build --release
 echo "== tier-1: cargo test -q"
 cargo test -q
 
+# Benches are plain binaries (harness = false) that tier-1 never
+# compiles; build them so bench code can't silently rot.
+echo "== cargo bench --no-run (bench code must keep building)"
+cargo bench --no-run
+
+# Lint gate, when the toolchain ships clippy. Warnings are denied;
+# the allowed lints are style idioms this codebase keeps on purpose
+# (index-driven FFT/butterfly loops, long plan-tuple types).
+if cargo clippy --version >/dev/null 2>&1; then
+  echo "== cargo clippy --all-targets (warnings denied)"
+  cargo clippy --workspace --all-targets --quiet -- -D warnings \
+    -A clippy::needless_range_loop \
+    -A clippy::too_many_arguments \
+    -A clippy::type_complexity \
+    -A clippy::manual_memcpy
+else
+  echo "== cargo clippy not installed; skipping lint gate"
+fi
+
 echo "== cargo doc --no-deps (warnings denied)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
