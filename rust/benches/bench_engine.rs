@@ -1,6 +1,7 @@
 //! Planned batch engine vs per-vector embedding throughput, the native
-//! f32 pipeline vs the f64 oracle pipeline, and the split-complex
-//! batched kernels vs the per-row planned path.
+//! f32 pipeline vs the f64 oracle pipeline, the split-complex batched
+//! kernels vs the per-row planned path, and the fused streaming pool
+//! vs the staged relay it replaced.
 //!
 //! Acceptance targets for the engine layer:
 //! - planned batch execution (amortized FFT plans/spectra + zero-alloc
@@ -10,17 +11,24 @@
 //!   throughput for circulant and toeplitz at n=1024 (memory-bandwidth
 //!   argument: half the bytes per element, twice the SIMD lanes);
 //! - the batched split-complex kernels must report ns/row ≤ the
-//!   per-row planned path for every FFT-backed family at batch 64.
+//!   per-row planned path for every FFT-backed family at batch 64;
+//! - the fused zero-staging serving path (payloads read in place by
+//!   the streaming pool) must report ≥ 1.5× the staged relay
+//!   (clone → `BatchBuf` pack → pool → unpack) at the serving shape
+//!   (n=128, m=64) and batch 64, f32.
 //!
 //! Besides the human-readable tables, the per-family batched-vs-per-row
-//! numbers (both precisions) are written to `BENCH_engine.json` so the
-//! perf trajectory is machine-trackable across PRs.
+//! numbers (both precisions) and the staged-vs-fused numbers are
+//! written to `BENCH_engine.json` so the perf trajectory is
+//! machine-trackable across PRs.
 
 mod common;
 
 use common::{bench, report};
 use std::sync::Arc;
-use strembed::engine::{default_workers, BatchBuf, BatchExecutor, EmbeddingPlan, WorkerPool};
+use strembed::engine::{
+    default_workers, BatchBuf, BatchExecutor, EmbeddingPlan, RowSource, StreamingPool, WireRows,
+};
 use strembed::pmodel::StructureKind;
 use strembed::rng::Rng;
 use strembed::transform::{EmbeddingConfig, Nonlinearity};
@@ -35,9 +43,35 @@ struct FamilyStat {
     batched_ns: f64,
 }
 
+/// One staged-vs-fused serving-path row of the machine-readable report.
+struct FusedStat {
+    family: String,
+    batch: usize,
+    /// ns per row through the old staged relay (clone rows, pack a
+    /// `BatchBuf`, pool, unpack)
+    staged_ns: f64,
+    /// ns per row through the fused zero-staging streaming path
+    fused_ns: f64,
+}
+
+/// Where the machine-readable report lands: the *workspace* root,
+/// regardless of invocation CWD (cargo runs bench binaries from the
+/// package root `rust/`, so a bare relative path would dodge the
+/// `scripts/verify.sh` perf gate that diffs repo-root reports).
+fn bench_json_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_engine.json")
+}
+
 /// Emit `BENCH_engine.json` (hand-rolled JSON — serde is unavailable
 /// offline) and sanity-parse it back with the crate's own parser.
-fn write_bench_json(path: &str, n: usize, m: usize, batch: usize, stats: &[FamilyStat]) {
+fn write_bench_json(
+    path: &std::path::Path,
+    n: usize,
+    m: usize,
+    batch: usize,
+    stats: &[FamilyStat],
+    fused: &[FusedStat],
+) {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str(&format!("  \"bench\": \"engine\",\n  \"n\": {n},\n  \"m\": {m},\n"));
@@ -55,10 +89,24 @@ fn write_bench_json(path: &str, n: usize, m: usize, batch: usize, stats: &[Famil
             r.per_row_ns / r.batched_ns
         ));
     }
+    s.push_str("  ],\n  \"fused_pool\": [\n");
+    for (i, r) in fused.iter().enumerate() {
+        let sep = if i + 1 == fused.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"family\": \"{}\", \"batch\": {}, \"precision\": \"f32\", \
+             \"staged_ns_per_row\": {:.1}, \"fused_ns_per_row\": {:.1}, \
+             \"speedup\": {:.3}}}{sep}\n",
+            r.family,
+            r.batch,
+            r.staged_ns,
+            r.fused_ns,
+            r.staged_ns / r.fused_ns
+        ));
+    }
     s.push_str("  ]\n}\n");
     strembed::util::json::Json::parse(&s).expect("BENCH_engine.json must be valid JSON");
     std::fs::write(path, &s).expect("write BENCH_engine.json");
-    println!("\nwrote {path}");
+    println!("\nwrote {}", path.display());
 }
 
 fn main() {
@@ -235,9 +283,84 @@ fn main() {
             s.per_row_ns / s.batched_ns
         );
     }
-    write_bench_json("BENCH_engine.json", n, m, batch, &family_stats);
+    // fused zero-staging streaming path vs the staged relay it
+    // replaced, at the serving shape (CLI `serve --native` defaults:
+    // n=128, m=64, f32). The staged closure reproduces the old
+    // coordinator relay copy-for-copy: clone each request vector out
+    // of the queue pop, pack a BatchBuf, shard it through the pool,
+    // reassemble an output batch, unpack per-row response vectors.
+    // The fused closure is the shipped path: the pool reads the shared
+    // payloads in place and responses come straight off the shards.
+    let (sn, sm) = (128usize, 64usize);
+    let mut fused_stats: Vec<FusedStat> = Vec::new();
+    let mut fused_results = Vec::new();
+    for kind in [
+        StructureKind::Circulant,
+        StructureKind::SkewCirculant,
+        StructureKind::Toeplitz,
+        StructureKind::Hankel,
+        StructureKind::Ldr(2),
+    ] {
+        let cfg = EmbeddingConfig::new(kind, sm, sn, Nonlinearity::CosSin).with_seed(3);
+        let plan = EmbeddingPlan::shared(cfg);
+        let d = plan.out_dim();
+        let pool = StreamingPool::<f32>::new(plan.clone(), default_workers());
+        for &b in &[8usize, 64, 512] {
+            let mut rng = Rng::new(11 + b as u64);
+            let rows: Vec<Vec<f32>> = (0..b)
+                .map(|_| rng.gaussian_vec(sn).iter().map(|&v| v as f32).collect())
+                .collect();
+            // the request payloads as the coordinator would share them
+            let src = Arc::new(WireRows::new(rows.clone(), sn).expect("valid rows"));
+            // warmup both paths
+            pool.embed_batch(&Arc::new(BatchBuf::from_rows(&rows)));
+            let wsrc: Arc<dyn RowSource<f32> + Send + Sync> = src.clone();
+            pool.embed_shards(wsrc);
 
-    // worker pool scaling on the acceptance config
+            let staged = bench(&format!("{} staged x{b}", kind.label()), || {
+                let cloned: Vec<Vec<f32>> = rows.to_vec(); // queue staging copy
+                let input = Arc::new(BatchBuf::from_rows(&cloned)); // re-pack copy
+                let out = pool.embed_batch(&input); // shard + reassemble
+                std::hint::black_box(out.to_rows()); // per-row unpack copy
+            });
+            let fused = bench(&format!("{} fused x{b}", kind.label()), || {
+                let s: Arc<dyn RowSource<f32> + Send + Sync> = src.clone();
+                let shards = pool.embed_shards(s);
+                let mut out: Vec<Vec<f32>> = Vec::with_capacity(b);
+                for shard in shards {
+                    out.extend(shard.feats.chunks_exact(d).map(|c| c.to_vec()));
+                }
+                std::hint::black_box(out);
+            });
+            fused_stats.push(FusedStat {
+                family: kind.label(),
+                batch: b,
+                staged_ns: staged.ns_per_op / b as f64,
+                fused_ns: fused.ns_per_op / b as f64,
+            });
+            fused_results.push(staged);
+            fused_results.push(fused);
+        }
+    }
+    report(
+        &format!("engine: staged relay vs fused streaming pool (n={sn}, m={sm}, f32)"),
+        &fused_results,
+    );
+    println!();
+    for s in &fused_stats {
+        println!(
+            "{} batch={}: fused {:.0} ns/row vs staged {:.0} ns/row ({:.2}x)",
+            s.family,
+            s.batch,
+            s.fused_ns,
+            s.staged_ns,
+            s.staged_ns / s.fused_ns
+        );
+    }
+
+    write_bench_json(&bench_json_path(), n, m, batch, &family_stats, &fused_stats);
+
+    // streaming pool scaling on the acceptance config
     let cfg =
         EmbeddingConfig::new(StructureKind::Circulant, m, n, Nonlinearity::CosSin).with_seed(3);
     let plan = EmbeddingPlan::shared(cfg);
@@ -246,13 +369,13 @@ fn main() {
     let input = Arc::new(BatchBuf::from_rows(&rows));
     let mut pool_results = Vec::new();
     for workers in [1usize, 2, 4, default_workers()] {
-        let pool = WorkerPool::new(plan.clone(), workers);
+        let pool = StreamingPool::new(plan.clone(), workers);
         pool.embed_batch(&input); // warmup
         pool_results.push(bench(&format!("pool workers={workers} x{batch}"), || {
             std::hint::black_box(pool.embed_batch(std::hint::black_box(&input)));
         }));
     }
-    report(&format!("engine worker pool (circulant n={n}, batch={batch})"), &pool_results);
+    report(&format!("engine streaming pool (circulant n={n}, batch={batch})"), &pool_results);
 
     // f32 pool at the same shape: bandwidth halving should compound
     // with multi-core sharding
@@ -261,13 +384,16 @@ fn main() {
     let input32 = Arc::new(BatchBuf::from_rows(&rows32));
     let mut pool32_results = Vec::new();
     for workers in [1usize, default_workers()] {
-        let pool = WorkerPool::<f32>::new(plan.clone(), workers);
+        let pool = StreamingPool::<f32>::new(plan.clone(), workers);
         pool.embed_batch(&input32); // warmup
         pool32_results.push(bench(&format!("f32 pool workers={workers} x{batch}"), || {
             std::hint::black_box(pool.embed_batch(std::hint::black_box(&input32)));
         }));
     }
-    report(&format!("engine f32 worker pool (circulant n={n}, batch={batch})"), &pool32_results);
+    report(
+        &format!("engine f32 streaming pool (circulant n={n}, batch={batch})"),
+        &pool32_results,
+    );
 
     // amortization across sizes: where does planning start to pay?
     let mut size_results = Vec::new();

@@ -17,7 +17,7 @@ use crate::coordinator::{serve_tcp, BackendSpec, Coordinator, CoordinatorConfig,
 use crate::eval::{run_experiment, EXPERIMENTS};
 use crate::pmodel::StructureKind;
 use crate::rng::Rng;
-use crate::transform::{EmbeddingConfig, Nonlinearity, StructuredEmbedding};
+use crate::transform::{EmbeddingConfig, Nonlinearity};
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
@@ -55,8 +55,10 @@ fn usage() -> String {
          \x20 embed      --structure S --f F --m M --n N --input CSV   one-off embedding\n\
          \x20 list       [--artifacts DIR]                             list AOT artifact variants\n\
          \x20 serve      [--addr A] [--native] [--precision f32|f64]   TCP embedding service\n\
-         \x20            [--artifacts DIR]                             (--native defaults to f32;\n\
-         \x20                                                          library builders default to f64)\n\n\
+         \x20            [--workers W] [--artifacts DIR]               (--native defaults to f32 on the\n\
+         \x20                                                          fused streaming pool; --workers 0\n\
+         \x20                                                          = one per core; library builders\n\
+         \x20                                                          default to f64)\n\n\
          experiments:\n",
     );
     for e in EXPERIMENTS {
@@ -128,9 +130,12 @@ fn cmd_embed(args: &Args) -> Result<String, String> {
     if v.len() != n {
         return Err(format!("input has {} values, expected n={n}", v.len()));
     }
-    let emb =
-        StructuredEmbedding::sample(EmbeddingConfig::new(kind, m, n, f).with_seed(seed));
-    let feats = emb.embed(&v);
+    // through the engine so the process-wide plan cache is shared with
+    // any other caller of the same configuration
+    let cfg = EmbeddingConfig::new(kind, m, n, f).with_seed(seed);
+    let feats = crate::engine::embed_points(cfg, std::slice::from_ref(&v))
+        .pop()
+        .expect("one row in, one row out");
     let cells: Vec<String> = feats.iter().map(|x| format!("{x:.6}")).collect();
     Ok(format!("{}\n", cells.join(",")))
 }
@@ -156,9 +161,12 @@ fn cmd_serve(args: &Args) -> Result<String, String> {
     let mut specs: Vec<(String, BackendSpec)> = Vec::new();
     if args.flag("native") {
         // native f32 is the serving default: the wire format is f32, so
-        // the end-to-end single-precision pipeline avoids all conversions
+        // the end-to-end single-precision pipeline avoids all
+        // conversions, and every variant runs on the fused streaming
+        // pool (persistent per-core workers, zero staging copies)
         let precision =
             Precision::parse(args.get("precision", "f32")).ok_or("bad --precision")?;
+        let workers = args.get_usize("workers", 0)?; // 0 = one per core
         // a representative native variant set
         for (name, structure, f) in [
             ("circulant-sign", "circulant", "sign"),
@@ -173,7 +181,8 @@ fn cmd_serve(args: &Args) -> Result<String, String> {
                 args.get_u64("seed", 2016)?,
             )
             .map_err(|e| format!("{e:#}"))?
-            .with_precision(precision);
+            .with_precision(precision)
+            .with_workers(workers);
             specs.push((name.to_string(), spec));
         }
     } else {

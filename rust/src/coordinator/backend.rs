@@ -3,31 +3,40 @@
 //! A `BackendSpec` is `Send` plain data; the actual backend is built
 //! *inside* the worker thread because PJRT handles are not `Send`.
 //!
-//! The native path executes through [`crate::engine`]: one
-//! [`EmbeddingPlan`] per variant, a worker-private [`BatchExecutor`]
-//! for small batches, and a [`WorkerPool`] that shards large batches
-//! across cores. Every multi-row batch (≥ 2 rows, whether executed
-//! in-thread or per pool shard) runs the split-complex batched FFT
-//! kernels — one twiddle/spectrum/diagonal load per index for the
-//! whole sub-batch — and is bit-identical at f64 to the per-row path.
+//! The native path is **fused and zero-staging**: the coordinator
+//! worker moves the popped request payloads straight into a
+//! [`WireRows`] (no per-request clone), and a persistent
+//! [`StreamingPool`] — spawned once at backend build, alive for the
+//! server's lifetime — hands each pool worker a row *range* of those
+//! payloads to transpose directly into its lane-major split-complex
+//! tiles. Responses are assembled per row straight from the returned
+//! flat shards. There is no staging `Vec<f32>` copy and no
+//! [`crate::engine::BatchBuf`] re-pack anywhere on the serving path.
+//! Plans come from the process-wide [`PlanCache`], so every variant,
+//! pool worker and ad-hoc CLI/eval caller with the same configuration
+//! shares one sampled plan.
 //!
 //! # Precision knob
 //!
 //! Each native variant carries a [`Precision`]:
 //!
-//! - [`Precision::F32`] (serving): the f32 wire rows are packed into a
-//!   `BatchBuf<f32>` *without any conversion* and the whole pipeline —
-//!   preprocess, planned matvec, nonlinearity — runs natively in single
-//!   precision. Half the memory traffic of the f64 path on a
-//!   bandwidth-bound workload; outputs agree with the oracle to ~1e-4
-//!   relative error.
-//! - [`Precision::F64`] (oracle, the default): rows are widened once
-//!   per batch into a `BatchBuf<f64>`, executed in double precision,
-//!   and narrowed once on the way out — bit-identical to the reference
-//!   `StructuredEmbedding::embed` path.
+//! - [`Precision::F32`] (serving): pool workers read the f32 wire rows
+//!   *in place* and the whole pipeline — preprocess, planned matvec,
+//!   nonlinearity — runs natively in single precision. Half the memory
+//!   traffic of the f64 path on a bandwidth-bound workload; outputs
+//!   agree with the oracle to ~1e-4 relative error, and when metrics
+//!   are attached a ~1/256 sample of rows is shadow-checked against
+//!   the shared plan's f64 executor (the observed error is exported
+//!   through [`Metrics`]).
+//! - [`Precision::F64`] (oracle, the default): pool workers widen each
+//!   f32 element on the fly *during* the tile transpose (no whole-batch
+//!   widening pass), execute in double precision, and results are
+//!   narrowed once per row on the way out — numerically identical to
+//!   the reference `StructuredEmbedding::embed` path.
 
 use crate::engine::{
-    default_workers, BatchBuf, BatchExecutor, EmbeddingPlan, EngineScalar, Precision, WorkerPool,
+    default_workers, BatchExecutor, EmbeddingPlan, PlanCache, Precision, Shard, StreamingPool,
+    WireRows,
 };
 use crate::pmodel::StructureKind;
 use crate::runtime::{Engine, VariantMeta};
@@ -36,10 +45,13 @@ use anyhow::{anyhow, Result};
 use std::path::PathBuf;
 use std::sync::Arc;
 
-/// Batches at least this large are sharded across the worker pool;
-/// smaller ones run on the worker's own executor (the pool's dispatch
-/// overhead isn't worth paying for a handful of rows).
-const POOL_MIN_BATCH: usize = 8;
+use super::metrics::Metrics;
+
+/// One out of this many f32-served rows is re-run through the shared
+/// plan's f64 executor to measure the live relative error (exported
+/// via [`Metrics`]). Row 0 of a backend's traffic is always sampled,
+/// so even short-lived deployments report a reading.
+pub const SHADOW_SAMPLE_PERIOD: u64 = 256;
 
 /// Where a variant's compute comes from.
 #[derive(Debug, Clone)]
@@ -51,12 +63,15 @@ pub enum BackendSpec {
         /// variant metadata from the manifest
         meta: VariantMeta,
     },
-    /// Run the pure-rust structured pipeline through the batch engine.
+    /// Run the pure-rust structured pipeline through the fused
+    /// streaming engine.
     Native {
         /// embedding configuration (structure, m, n, f, seed)
         config: EmbeddingConfig,
         /// pipeline precision (f32 serving / f64 oracle)
         precision: Precision,
+        /// streaming-pool worker threads (0 = one per core, capped)
+        workers: usize,
     },
 }
 
@@ -86,25 +101,36 @@ impl BackendSpec {
         }
     }
 
-    /// Build the backend (call from the owning worker thread).
+    /// Build the backend (call from the owning worker thread), with no
+    /// metrics attached — shadow-oracle sampling stays off.
     pub fn build(&self) -> Result<Backend> {
+        self.build_with_metrics(None)
+    }
+
+    /// Build the backend (call from the owning worker thread). For
+    /// native f32 variants, attaching `metrics` enables the
+    /// shadow-oracle accuracy telemetry (1 row in
+    /// [`SHADOW_SAMPLE_PERIOD`] re-checked at f64).
+    pub fn build_with_metrics(&self, metrics: Option<Arc<Metrics>>) -> Result<Backend> {
         match self {
             BackendSpec::Pjrt { dir, meta } => {
                 Ok(Backend::Pjrt(Engine::load(dir, meta.clone())?))
             }
-            BackendSpec::Native { config, precision } => {
-                let plan = EmbeddingPlan::shared(config.clone());
-                // the shard pool is spawned lazily on the first large
-                // batch: variants that only ever see small batches (or a
-                // single-core host) never hold idle threads
+            BackendSpec::Native { config, precision, workers } => {
+                // one plan per config process-wide: variants, pool
+                // workers and ad-hoc callers all share it
+                let plan = PlanCache::global().get_or_build(config);
+                let workers = if *workers == 0 { default_workers() } else { *workers };
+                // the streaming pool is spawned eagerly and lives as
+                // long as the backend: per-core executors pin their
+                // plan + scratch once instead of re-sharding per call
                 let pipe = match precision {
                     Precision::F64 => NativePipe::F64 {
-                        exec: BatchExecutor::new(plan.clone()),
-                        pool: None,
+                        pool: StreamingPool::new(plan.clone(), workers),
                     },
                     Precision::F32 => NativePipe::F32 {
-                        exec: BatchExecutor::new(plan.clone()),
-                        pool: None,
+                        pool: StreamingPool::new(plan.clone(), workers),
+                        shadow: metrics.map(|m| ShadowOracle::new(plan.clone(), m)),
                     },
                 };
                 Ok(Backend::Native(NativeBackend { plan, pipe }))
@@ -113,8 +139,9 @@ impl BackendSpec {
     }
 
     /// A native spec from manifest-style names (used by the CLI).
-    /// Defaults to the f64 oracle precision; chain
-    /// [`BackendSpec::with_precision`] to opt into f32 serving.
+    /// Defaults to the f64 oracle precision and one pool worker per
+    /// core; chain [`BackendSpec::with_precision`] /
+    /// [`BackendSpec::with_workers`] to adjust.
     pub fn native(
         structure: &str,
         f: &str,
@@ -128,6 +155,7 @@ impl BackendSpec {
         Ok(BackendSpec::Native {
             config: EmbeddingConfig::new(kind, m, n, nl).with_seed(seed),
             precision: Precision::default(),
+            workers: 0,
         })
     }
 
@@ -136,6 +164,15 @@ impl BackendSpec {
     pub fn with_precision(mut self, precision: Precision) -> BackendSpec {
         if let BackendSpec::Native { precision: p, .. } = &mut self {
             *p = precision;
+        }
+        self
+    }
+
+    /// Builder: set the streaming-pool worker count (0 = one per core,
+    /// capped; no-op for PJRT specs).
+    pub fn with_workers(mut self, workers: usize) -> BackendSpec {
+        if let BackendSpec::Native { workers: w, .. } = &mut self {
+            *w = workers;
         }
         self
     }
@@ -149,43 +186,91 @@ impl BackendSpec {
     }
 }
 
-/// The precision-monomorphized executor + shard pool of one native
-/// variant. Exactly one arm exists per backend; the f32 arm never
-/// touches an f64 buffer.
+/// Re-runs a sampled fraction of f32 traffic through the shared plan's
+/// f64 executor and reports the observed relative error to [`Metrics`].
+/// The plan already carries both precisions, so this costs no extra
+/// sampling — just one f64 pass per [`SHADOW_SAMPLE_PERIOD`] rows.
+struct ShadowOracle {
+    exec: BatchExecutor<f64>,
+    metrics: Arc<Metrics>,
+    /// rows seen so far (row is sampled when tick % period == 0)
+    tick: u64,
+    /// widened copy of the sampled wire row
+    wide: Vec<f64>,
+    /// oracle features of the sampled row
+    feats: Vec<f64>,
+}
+
+impl ShadowOracle {
+    fn new(plan: Arc<EmbeddingPlan>, metrics: Arc<Metrics>) -> ShadowOracle {
+        let n = plan.n();
+        let d = plan.out_dim();
+        ShadowOracle {
+            exec: BatchExecutor::new(plan),
+            metrics,
+            tick: 0,
+            wide: vec![0.0; n],
+            feats: vec![0.0; d],
+        }
+    }
+
+    /// Walk one served batch: re-check every sampled row against the
+    /// f64 oracle and record its mean/max per-feature relative error.
+    fn sample_batch(&mut self, src: &WireRows, served: &[Vec<f32>]) {
+        for (i, row_out) in served.iter().enumerate() {
+            let sampled = self.tick % SHADOW_SAMPLE_PERIOD == 0;
+            self.tick += 1;
+            if !sampled {
+                continue;
+            }
+            for (w, &x) in self.wide.iter_mut().zip(src.row_f32(i)) {
+                *w = x as f64;
+            }
+            self.exec.embed_into(&self.wide, &mut self.feats);
+            let mut sum = 0.0f64;
+            let mut max = 0.0f64;
+            for (&g, &w) in row_out.iter().zip(&self.feats) {
+                let e = (g as f64 - w).abs() / (1.0 + w.abs());
+                sum += e;
+                max = max.max(e);
+            }
+            let mean = sum / self.feats.len().max(1) as f64;
+            self.metrics.on_shadow_sample(mean, max);
+        }
+    }
+}
+
+/// The precision-monomorphized streaming pool of one native variant.
+/// Exactly one arm exists per backend; the f32 arm's serving pipeline
+/// never touches an f64 buffer (the shadow oracle runs out-of-band on
+/// sampled rows only).
 enum NativePipe {
-    /// f64 oracle pipeline (wire rows widened/narrowed once per batch)
-    F64 {
-        exec: BatchExecutor<f64>,
-        pool: Option<WorkerPool<f64>>,
-    },
-    /// native f32 pipeline (no conversions anywhere)
+    /// f64 oracle pipeline (wire rows widened inside the tile transpose)
+    F64 { pool: StreamingPool<f64> },
+    /// native f32 pipeline (no conversions anywhere) + optional
+    /// shadow-oracle accuracy sampling
     F32 {
-        exec: BatchExecutor<f32>,
-        pool: Option<WorkerPool<f32>>,
+        pool: StreamingPool<f32>,
+        shadow: Option<ShadowOracle>,
     },
 }
 
-/// Spawn the shard pool once a batch is big enough to amortize it.
-fn spawn_pool_if_worthwhile<S: EngineScalar>(
-    pool: &mut Option<WorkerPool<S>>,
-    plan: &Arc<EmbeddingPlan>,
-    rows: usize,
-) {
-    if pool.is_none() && rows >= POOL_MIN_BATCH && default_workers() > 1 {
-        *pool = Some(WorkerPool::new(plan.clone(), default_workers()));
+/// Copy flat shards into per-row response vectors (the only copy left
+/// between the butterflies and the wire).
+fn shards_to_rows<S: Copy>(
+    shards: Vec<Shard<S>>,
+    total: usize,
+    d: usize,
+    mut narrow: impl FnMut(&[S]) -> Vec<f32>,
+) -> Vec<Vec<f32>> {
+    let mut out: Vec<Vec<f32>> = Vec::new();
+    out.resize_with(total, Vec::new);
+    for shard in shards {
+        for (k, chunk) in shard.feats.chunks_exact(d).enumerate() {
+            out[shard.start + k] = narrow(chunk);
+        }
     }
-}
-
-/// Run one batch through an executor or, when large enough, the pool.
-fn run_batch<S: EngineScalar>(
-    exec: &mut BatchExecutor<S>,
-    pool: &Option<WorkerPool<S>>,
-    input: BatchBuf<S>,
-) -> BatchBuf<S> {
-    match pool {
-        Some(p) if input.rows() >= POOL_MIN_BATCH => p.embed_batch(&Arc::new(input)),
-        _ => exec.embed_batch(&input),
-    }
+    out
 }
 
 /// Engine-backed native compute owned by one coordinator worker.
@@ -208,31 +293,45 @@ impl NativeBackend {
         }
     }
 
-    /// Worker-pool size (1 until the shard pool has been spawned).
+    /// Streaming-pool size.
     pub fn pool_workers(&self) -> usize {
         match &self.pipe {
-            NativePipe::F64 { pool, .. } => pool.as_ref().map_or(1, WorkerPool::workers),
-            NativePipe::F32 { pool, .. } => pool.as_ref().map_or(1, WorkerPool::workers),
+            NativePipe::F64 { pool } => pool.workers(),
+            NativePipe::F32 { pool, .. } => pool.workers(),
         }
     }
 
-    fn embed_batch(&mut self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+    /// True when shadow-oracle accuracy sampling is active.
+    pub fn shadow_sampling(&self) -> bool {
+        matches!(&self.pipe, NativePipe::F32 { shadow: Some(_), .. })
+    }
+
+    fn embed_batch(&mut self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
         let n = self.plan.n();
-        match &mut self.pipe {
-            NativePipe::F64 { exec, pool } => {
-                // one f32→f64 widening for the whole batch
-                let input = BatchBuf::from_f32_rows(rows, n).map_err(|e| anyhow!("{e}"))?;
-                spawn_pool_if_worthwhile(pool, &self.plan, input.rows());
-                Ok(run_batch(exec, pool, input).to_f32_rows())
+        let d = self.plan.out_dim();
+        // take ownership of the payloads — validated, never copied
+        let src = Arc::new(WireRows::new(rows, n).map_err(|e| anyhow!("{e}"))?);
+        let total = src.rows();
+        Ok(match &mut self.pipe {
+            NativePipe::F64 { pool } => {
+                // widening happens inside each worker's tile transpose;
+                // features narrow once per row on the way out
+                let shards = pool.embed_shards(src.clone());
+                shards_to_rows(shards, total, d, |chunk| {
+                    chunk.iter().map(|&x| x as f32).collect()
+                })
             }
-            NativePipe::F32 { exec, pool } => {
-                // wire rows already are f32: pack, execute, unpack —
-                // zero precision conversions end to end
-                let input = BatchBuf::try_from_rows(rows, n).map_err(|e| anyhow!("{e}"))?;
-                spawn_pool_if_worthwhile(pool, &self.plan, input.rows());
-                Ok(run_batch(exec, pool, input).to_rows())
+            NativePipe::F32 { pool, shadow } => {
+                // wire rows are read in place by the pool workers:
+                // zero precision conversions and zero staging copies
+                let shards = pool.embed_shards(src.clone());
+                let out = shards_to_rows(shards, total, d, |chunk| chunk.to_vec());
+                if let Some(sh) = shadow {
+                    sh.sample_batch(&src, &out);
+                }
+                out
             }
-        }
+        })
     }
 }
 
@@ -246,9 +345,11 @@ pub enum Backend {
 
 impl Backend {
     /// Embed a batch of rows (each length n) into feature vectors.
-    pub fn embed_batch(&mut self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+    /// Takes the rows by value: the native path moves them straight
+    /// into the pool's shared [`WireRows`] source without copying.
+    pub fn embed_batch(&mut self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
         match self {
-            Backend::Pjrt(engine) => engine.embed_batch(rows),
+            Backend::Pjrt(engine) => engine.embed_batch(&rows),
             Backend::Native(nb) => nb.embed_batch(rows),
         }
     }
@@ -267,7 +368,7 @@ mod tests {
         assert_eq!(spec.max_exec_batch(), usize::MAX);
         assert_eq!(spec.precision(), Some(Precision::F64));
         let mut b = spec.build().unwrap();
-        let out = b.embed_batch(&[vec![0.5f32; 16], vec![-1.0f32; 16]]).unwrap();
+        let out = b.embed_batch(vec![vec![0.5f32; 16], vec![-1.0f32; 16]]).unwrap();
         assert_eq!(out.len(), 2);
         assert_eq!(out[0].len(), 8);
         assert!(out[0].iter().all(|&x| x == 0.0 || x == 1.0));
@@ -284,7 +385,7 @@ mod tests {
         let mut b = spec.build().unwrap();
         let rows: Vec<Vec<f32>> =
             (0..3).map(|i| (0..16).map(|j| (i * 16 + j) as f32 / 48.0).collect()).collect();
-        let got = b.embed_batch(&rows).unwrap();
+        let got = b.embed_batch(rows.clone()).unwrap();
         for (row, feats) in rows.iter().zip(&got) {
             let v64: Vec<f64> = row.iter().map(|&x| x as f64).collect();
             let want = reference.embed(&v64);
@@ -304,8 +405,8 @@ mod tests {
         let rows: Vec<Vec<f32>> = (0..5)
             .map(|i| (0..32).map(|j| ((i * 7 + j) % 11) as f32 * 0.1 - 0.5).collect())
             .collect();
-        let want = b64.embed_batch(&rows).unwrap();
-        let got = b32.embed_batch(&rows).unwrap();
+        let want = b64.embed_batch(rows.clone()).unwrap();
+        let got = b32.embed_batch(rows).unwrap();
         for (wrow, grow) in want.iter().zip(&got) {
             for (w, g) in wrow.iter().zip(grow) {
                 assert!(
@@ -317,31 +418,62 @@ mod tests {
     }
 
     #[test]
-    fn f32_pool_path_matches_f32_small_batch_path() {
-        let spec = BackendSpec::native("toeplitz", "rff", 16, 32, 5)
-            .unwrap()
-            .with_precision(Precision::F32);
-        let mut b = spec.build().unwrap();
-        let rows: Vec<Vec<f32>> =
-            (0..64).map(|i| (0..32).map(|j| ((i + j) % 7) as f32 * 0.1).collect()).collect();
-        let small = b.embed_batch(&rows[..2]).unwrap();
-        let large = b.embed_batch(&rows).unwrap();
-        assert_eq!(small[0], large[0]);
-        assert_eq!(small[1], large[1]);
+    fn fused_small_and_large_batches_agree() {
+        for p in [Precision::F64, Precision::F32] {
+            let spec = BackendSpec::native("toeplitz", "rff", 16, 32, 5)
+                .unwrap()
+                .with_precision(p)
+                .with_workers(4);
+            let mut b = spec.build().unwrap();
+            let rows: Vec<Vec<f32>> = (0..64)
+                .map(|i| (0..32).map(|j| ((i + j) % 7) as f32 * 0.1).collect())
+                .collect();
+            let small = b.embed_batch(rows[..2].to_vec()).unwrap();
+            let large = b.embed_batch(rows).unwrap();
+            assert_eq!(small[0], large[0], "{p:?}");
+            assert_eq!(small[1], large[1], "{p:?}");
+        }
     }
 
     #[test]
-    fn native_pool_path_matches_small_batch_path() {
-        // 2 rows goes through the in-thread executor, 64 through the
-        // pool (when multi-core); overlapping rows must agree exactly.
-        let spec = BackendSpec::native("circulant", "rff", 16, 32, 5).unwrap();
-        let mut b = spec.build().unwrap();
-        let rows: Vec<Vec<f32>> =
-            (0..64).map(|i| (0..32).map(|j| ((i + j) % 7) as f32 * 0.1).collect()).collect();
-        let small = b.embed_batch(&rows[..2]).unwrap();
-        let large = b.embed_batch(&rows).unwrap();
-        assert_eq!(small[0], large[0]);
-        assert_eq!(small[1], large[1]);
+    fn with_workers_sizes_the_pool() {
+        let spec =
+            BackendSpec::native("circulant", "rff", 8, 16, 5).unwrap().with_workers(2);
+        let Backend::Native(nb) = spec.build().unwrap() else { unreachable!() };
+        assert_eq!(nb.pool_workers(), 2);
+        assert!(!nb.shadow_sampling());
+    }
+
+    #[test]
+    fn shadow_oracle_reports_error_metrics() {
+        let spec = BackendSpec::native("circulant", "rff", 16, 32, 9)
+            .unwrap()
+            .with_precision(Precision::F32)
+            .with_workers(2);
+        let metrics = Arc::new(Metrics::new());
+        let mut b = spec.build_with_metrics(Some(metrics.clone())).unwrap();
+        if let Backend::Native(nb) = &b {
+            assert!(nb.shadow_sampling());
+        }
+        let rows: Vec<Vec<f32>> = (0..4)
+            .map(|i| (0..32).map(|j| ((i * 5 + j) % 13) as f32 * 0.05).collect())
+            .collect();
+        b.embed_batch(rows).unwrap();
+        let snap = metrics.snapshot();
+        // row 0 is always sampled; the f32 pipeline must sit inside the
+        // 1e-4 accuracy contract
+        assert_eq!(snap.shadow_samples, 1);
+        assert!(snap.shadow_max_rel_err <= 1e-4, "{}", snap.shadow_max_rel_err);
+        assert!(snap.shadow_mean_rel_err <= snap.shadow_max_rel_err);
+    }
+
+    #[test]
+    fn f64_backend_never_shadow_samples() {
+        let spec = BackendSpec::native("circulant", "rff", 8, 16, 9).unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let mut b = spec.build_with_metrics(Some(metrics.clone())).unwrap();
+        b.embed_batch(vec![vec![0.25f32; 16]; 3]).unwrap();
+        assert_eq!(metrics.snapshot().shadow_samples, 0);
     }
 
     #[test]
@@ -363,7 +495,7 @@ mod tests {
             out_dim: 4,
         };
         let spec = BackendSpec::Pjrt { dir: PathBuf::from("/tmp"), meta };
-        let spec = spec.with_precision(Precision::F32);
+        let spec = spec.with_precision(Precision::F32).with_workers(3);
         assert_eq!(spec.precision(), None);
     }
 
@@ -379,7 +511,7 @@ mod tests {
             let spec =
                 BackendSpec::native("circulant", "sign", 8, 16, 3).unwrap().with_precision(p);
             let mut b = spec.build().unwrap();
-            assert!(b.embed_batch(&[vec![0.0f32; 15]]).is_err());
+            assert!(b.embed_batch(vec![vec![0.0f32; 15]]).is_err());
         }
     }
 }

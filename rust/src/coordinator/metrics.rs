@@ -17,6 +17,19 @@ pub struct Metrics {
     batch_rows: AtomicU64,
     /// per-request latencies in seconds (bounded reservoir)
     latencies: Mutex<Vec<f64>>,
+    /// rows shadow-checked against the f64 oracle
+    shadow_samples: AtomicU64,
+    /// accumulated shadow error extremes/sums (sampled ~1/256 of f32
+    /// traffic, so the lock is nearly always uncontended)
+    shadow: Mutex<ShadowErr>,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct ShadowErr {
+    /// sum over sampled rows of the row's mean relative error
+    mean_sum: f64,
+    /// max relative error seen over any sampled feature
+    max: f64,
 }
 
 /// Frozen view of the metrics.
@@ -44,6 +57,13 @@ pub struct MetricsSnapshot {
     pub p90: f64,
     /// 99th percentile latency
     pub p99: f64,
+    /// f32 rows shadow-checked against the f64 oracle (~1/256 of f32
+    /// native traffic)
+    pub shadow_samples: u64,
+    /// mean relative error of shadow-checked rows (0 when unsampled)
+    pub shadow_mean_rel_err: f64,
+    /// max relative error seen on any shadow-checked feature
+    pub shadow_max_rel_err: f64,
 }
 
 const RESERVOIR: usize = 100_000;
@@ -60,6 +80,8 @@ impl Metrics {
             batches: AtomicU64::new(0),
             batch_rows: AtomicU64::new(0),
             latencies: Mutex::new(Vec::new()),
+            shadow_samples: AtomicU64::new(0),
+            shadow: Mutex::new(ShadowErr::default()),
         }
     }
 
@@ -93,6 +115,16 @@ impl Metrics {
         }
     }
 
+    /// Record one f32 row shadow-checked against the f64 oracle:
+    /// `mean_rel_err` / `max_rel_err` are the row's mean and max
+    /// per-feature relative errors.
+    pub fn on_shadow_sample(&self, mean_rel_err: f64, max_rel_err: f64) {
+        self.shadow_samples.fetch_add(1, Ordering::Relaxed);
+        let mut g = self.shadow.lock().unwrap();
+        g.mean_sum += mean_rel_err;
+        g.max = g.max.max(max_rel_err);
+    }
+
     /// Take a snapshot.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let lat = self.latencies.lock().unwrap().clone();
@@ -100,6 +132,8 @@ impl Metrics {
         let completed = self.completed.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
         let rows = self.batch_rows.load(Ordering::Relaxed);
+        let shadow_samples = self.shadow_samples.load(Ordering::Relaxed);
+        let shadow = *self.shadow.lock().unwrap();
         MetricsSnapshot {
             uptime,
             submitted: self.submitted.load(Ordering::Relaxed),
@@ -112,6 +146,13 @@ impl Metrics {
             p50: crate::util::percentile(&lat, 50.0),
             p90: crate::util::percentile(&lat, 90.0),
             p99: crate::util::percentile(&lat, 99.0),
+            shadow_samples,
+            shadow_mean_rel_err: if shadow_samples > 0 {
+                shadow.mean_sum / shadow_samples as f64
+            } else {
+                0.0
+            },
+            shadow_max_rel_err: shadow.max,
         }
     }
 }
@@ -127,7 +168,8 @@ impl std::fmt::Display for MetricsSnapshot {
         write!(
             f,
             "up={:.1}s submitted={} completed={} rejected={} failed={} batches={} \
-             mean_batch={:.2} rps={:.1} p50={:.3}ms p90={:.3}ms p99={:.3}ms",
+             mean_batch={:.2} rps={:.1} p50={:.3}ms p90={:.3}ms p99={:.3}ms \
+             shadow_samples={} shadow_mean_err={:.2e} shadow_max_err={:.2e}",
             self.uptime,
             self.submitted,
             self.completed,
@@ -138,7 +180,10 @@ impl std::fmt::Display for MetricsSnapshot {
             self.throughput_rps,
             self.p50 * 1e3,
             self.p90 * 1e3,
-            self.p99 * 1e3
+            self.p99 * 1e3,
+            self.shadow_samples,
+            self.shadow_mean_rel_err,
+            self.shadow_max_rel_err
         )
     }
 }
@@ -172,5 +217,17 @@ mod tests {
         let text = format!("{}", m.snapshot());
         assert!(text.contains("completed=1"));
         assert!(text.contains("p99"));
+        assert!(text.contains("shadow_samples=0"));
+    }
+
+    #[test]
+    fn shadow_samples_accumulate_mean_and_max() {
+        let m = Metrics::new();
+        m.on_shadow_sample(1e-6, 4e-6);
+        m.on_shadow_sample(3e-6, 2e-6);
+        let s = m.snapshot();
+        assert_eq!(s.shadow_samples, 2);
+        assert!((s.shadow_mean_rel_err - 2e-6).abs() < 1e-18);
+        assert!((s.shadow_max_rel_err - 4e-6).abs() < 1e-18);
     }
 }

@@ -2,7 +2,7 @@
 //! vLLM-class router, built entirely on std (threads + channels — the
 //! offline environment has no tokio).
 //!
-//! Architecture:
+//! Architecture (the fused streaming path):
 //!
 //! ```text
 //!  clients ──submit()──▶ router ──▶ per-variant BatchQueue (bounded)
@@ -10,23 +10,33 @@
 //!                                        │  max_batch / linger deadline
 //!                                        ▼
 //!                               worker thread (owns Backend)
-//!                               ├─ PJRT engine (AOT artifact)   ← request path
-//!                               └─ native batch engine (EmbeddingPlan +
-//!                                  BatchExecutor + WorkerPool shards)
+//!                               ├─ PJRT engine (AOT artifact)
+//!                               └─ native: payloads moved into WireRows,
+//!                                  row ranges dispatched to a persistent
+//!                                  StreamingPool (one pinned
+//!                                  BatchExecutor + scratch per core);
+//!                                  workers transpose request rows
+//!                                  directly into split-complex tiles
 //! ```
 //!
 //! Python never appears on the request path: PJRT workers execute the
 //! AOT-compiled HLO; the native backend executes batches through
-//! [`crate::engine`] (planned transforms, SoA buffers, multi-core
-//! sharding for large batches).
+//! [`crate::engine`] — and there is **no staging copy** between the
+//! queue and the kernels: the old relay (clone rows out of the queue,
+//! re-pack into a `BatchBuf`, re-shard across a lazily spawned pool)
+//! was fused away. Plans are shared process-wide through
+//! [`crate::engine::PlanCache`].
 //!
 //! Native variants carry a per-variant [`Precision`] knob
 //! ([`BackendSpec::with_precision`]): at [`Precision::F32`] the f32
 //! wire rows run the whole pipeline natively in single precision (no
-//! widening/narrowing copies — the serving hot path); at
-//! [`Precision::F64`] (default) batches are widened once and executed
-//! at the oracle precision. See `ARCHITECTURE.md` at the repo root for
-//! the full layer map (rng → pmodel → dsp → engine → coordinator).
+//! widening/narrowing copies — the serving hot path), with ~1/256 of
+//! rows shadow-checked against the shared plan's f64 executor and the
+//! observed relative error exported via [`Metrics`]; at
+//! [`Precision::F64`] (default) each element is widened on the fly
+//! inside the tile transpose and executed at the oracle precision. See
+//! `ARCHITECTURE.md` at the repo root for the full layer map
+//! (rng → pmodel → dsp → engine → coordinator).
 
 mod backend;
 mod batcher;
@@ -35,7 +45,7 @@ mod server;
 mod tcp;
 
 pub use crate::engine::Precision;
-pub use backend::{Backend, BackendSpec, NativeBackend};
+pub use backend::{Backend, BackendSpec, NativeBackend, SHADOW_SAMPLE_PERIOD};
 pub use batcher::{BatchQueue, QueueError};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use server::{Coordinator, CoordinatorConfig, EmbedError, EmbedResponse};

@@ -1,5 +1,10 @@
 //! The coordinator proper: routes requests to per-variant batch queues,
 //! each drained by a dedicated worker thread that owns its backend.
+//!
+//! The native serving path is fused: a queue pop yields the request
+//! handles, their payload vectors are *moved* (never cloned) into the
+//! backend, and the backend's persistent streaming pool reads them in
+//! place — see [`super::backend`] for the zero-staging data flow.
 
 use super::backend::BackendSpec;
 use super::batcher::{BatchQueue, QueueError};
@@ -105,8 +110,10 @@ impl Coordinator {
             let handle = std::thread::Builder::new()
                 .name(format!("strembed-worker-{wname}"))
                 .spawn(move || {
-                    // backend built in-thread: PJRT handles are not Send
-                    let mut backend = match wspec.build() {
+                    // backend built in-thread: PJRT handles are not Send.
+                    // Metrics attached so native f32 variants run the
+                    // shadow-oracle accuracy sampling.
+                    let mut backend = match wspec.build_with_metrics(Some(wmetrics.clone())) {
                         Ok(b) => b,
                         Err(e) => {
                             eprintln!("worker {wname}: backend init failed: {e:#}");
@@ -119,24 +126,32 @@ impl Coordinator {
                             continue;
                         }
                         wmetrics.on_batch(batch.len());
-                        let rows: Vec<Vec<f32>> =
-                            batch.iter().map(|p| p.vector.clone()).collect();
-                        match backend.embed_batch(&rows) {
+                        // split each request into its payload (moved —
+                        // not copied — into the backend's shared row
+                        // source) and its reply half
+                        let mut payloads = Vec::with_capacity(batch.len());
+                        let mut replies = Vec::with_capacity(batch.len());
+                        for p in batch {
+                            payloads.push(p.vector);
+                            replies.push((p.enqueued, p.reply));
+                        }
+                        match backend.embed_batch(payloads) {
                             Ok(features) => {
-                                for (p, f) in batch.into_iter().zip(features) {
-                                    let latency = p.enqueued.elapsed();
+                                for ((enqueued, reply), f) in
+                                    replies.into_iter().zip(features)
+                                {
+                                    let latency = enqueued.elapsed();
                                     wmetrics.on_complete(latency.as_secs_f64());
-                                    let _ = p
-                                        .reply
-                                        .send(Ok(EmbedResponse { features: f, latency }));
+                                    let _ =
+                                        reply.send(Ok(EmbedResponse { features: f, latency }));
                                 }
                             }
                             Err(e) => {
                                 let msg = format!("{e:#}");
-                                for p in batch {
+                                for (_, reply) in replies {
                                     wmetrics.on_fail();
                                     let _ =
-                                        p.reply.send(Err(EmbedError::Backend(msg.clone())));
+                                        reply.send(Err(EmbedError::Backend(msg.clone())));
                                 }
                             }
                         }

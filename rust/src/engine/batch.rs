@@ -25,10 +25,10 @@ pub const BATCH_KERNEL_MAX_LANES: usize = 64;
 
 /// A batch of equal-length vectors in structure-of-arrays layout: one
 /// contiguous row-major `Vec<S>` instead of one heap allocation per
-/// row. This is the engine's interchange format. The unparameterized
-/// name defaults to the f64 oracle precision; a `BatchBuf<f32>` is the
-/// serving-precision form — the coordinator packs its f32 wire rows
-/// into one *without any conversion*.
+/// row. This is the engine's interchange format for library and eval
+/// callers (the fused serving path skips even this pack and reads
+/// request payloads in place through [`WireRows`]). The
+/// unparameterized name defaults to the f64 oracle precision.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BatchBuf<S = f64> {
     data: Vec<S>,
@@ -54,8 +54,7 @@ impl<S: Scalar> BatchBuf<S> {
     }
 
     /// Pack rows of the same precision, validating every row length
-    /// against `dim`; `Err` names the first offending row. This is the
-    /// conversion-free coordinator entry point for the f32 pipeline.
+    /// against `dim`; `Err` names the first offending row.
     pub fn try_from_rows(rows: &[Vec<S>], dim: usize) -> Result<BatchBuf<S>, String> {
         let mut data = Vec::with_capacity(rows.len() * dim);
         for (i, r) in rows.iter().enumerate() {
@@ -105,6 +104,140 @@ impl<S: Scalar> BatchBuf<S> {
     /// Unpack into owned rows.
     pub fn to_rows(&self) -> Vec<Vec<S>> {
         (0..self.rows).map(|i| self.row(i).to_vec()).collect()
+    }
+}
+
+/// A read-only supplier of equal-length rows for the batch executor and
+/// the streaming pool. The point of the abstraction is *zero staging*:
+/// the serving path wraps the popped request payloads in a
+/// [`WireRows`] and the pool workers transpose (and, for the f64
+/// oracle, widen) each payload **directly** into their lane-major
+/// split-complex tiles — no intermediate `Vec<f32>` copy, no
+/// [`BatchBuf`] re-pack. Object-safe so a pool job can carry
+/// `Arc<dyn RowSource<S>>` whatever the concrete container is.
+///
+/// Implementations must be *consistent*: `copy_row_into` and
+/// `scatter_row` must produce the same `S` values for the same row, so
+/// the per-row and batched paths stay bit-identical at f64.
+pub trait RowSource<S: Scalar> {
+    /// Number of rows available.
+    fn rows(&self) -> usize;
+
+    /// Length of every row.
+    fn dim(&self) -> usize;
+
+    /// Copy row `i` into a contiguous buffer (`out.len() == dim`);
+    /// the per-row path of [`BatchExecutor::embed_range_into`].
+    fn copy_row_into(&self, i: usize, out: &mut [S]);
+
+    /// Scatter row `i` into lane `l` of the lane-major plane `tin`
+    /// (`tin.len() >= dim * lanes`; element `j` lands at
+    /// `tin[j * lanes + l]`) — the transpose step of the batched
+    /// split-complex path, fused with any precision conversion.
+    fn scatter_row(&self, i: usize, tin: &mut [S], lanes: usize, l: usize);
+}
+
+impl<S: Scalar> RowSource<S> for BatchBuf<S> {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn copy_row_into(&self, i: usize, out: &mut [S]) {
+        out.copy_from_slice(self.row(i));
+    }
+
+    fn scatter_row(&self, i: usize, tin: &mut [S], lanes: usize, l: usize) {
+        for (j, &v) in self.row(i).iter().enumerate() {
+            tin[j * lanes + l] = v;
+        }
+    }
+}
+
+/// Owned f32 wire rows (request payloads moved straight out of the
+/// coordinator's queue, never copied) serving **both** engine
+/// precisions: as a `RowSource<f32>` rows are read as-is; as a
+/// `RowSource<f64>` each element is widened on the fly during the
+/// transpose into the tile — so even the oracle pipeline has no
+/// whole-batch widening pass any more.
+#[derive(Debug)]
+pub struct WireRows {
+    rows: Vec<Vec<f32>>,
+    dim: usize,
+}
+
+impl WireRows {
+    /// Take ownership of wire rows, validating every length against
+    /// `dim`; `Err` names the first offending row. The row data itself
+    /// is never copied.
+    pub fn new(rows: Vec<Vec<f32>>, dim: usize) -> Result<WireRows, String> {
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != dim {
+                return Err(format!("row {i} has dim {} (want {dim})", r.len()));
+            }
+        }
+        Ok(WireRows { rows, dim })
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Row length.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Row `i` as the raw f32 wire slice (shadow-oracle sampling reads
+    /// the original payload back out of the shared source).
+    pub fn row_f32(&self, i: usize) -> &[f32] {
+        &self.rows[i]
+    }
+}
+
+impl RowSource<f32> for WireRows {
+    fn rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn copy_row_into(&self, i: usize, out: &mut [f32]) {
+        out.copy_from_slice(&self.rows[i]);
+    }
+
+    fn scatter_row(&self, i: usize, tin: &mut [f32], lanes: usize, l: usize) {
+        for (j, &v) in self.rows[i].iter().enumerate() {
+            tin[j * lanes + l] = v;
+        }
+    }
+}
+
+impl RowSource<f64> for WireRows {
+    fn rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn copy_row_into(&self, i: usize, out: &mut [f64]) {
+        for (o, &v) in out.iter_mut().zip(&self.rows[i]) {
+            *o = v as f64;
+        }
+    }
+
+    fn scatter_row(&self, i: usize, tin: &mut [f64], lanes: usize, l: usize) {
+        for (j, &v) in self.rows[i].iter().enumerate() {
+            tin[j * lanes + l] = v as f64;
+        }
     }
 }
 
@@ -183,9 +316,17 @@ impl<S: EngineScalar> BatchExecutor<S> {
     /// Embed one vector into a caller-owned feature row
     /// (`out.len() == plan.out_dim()`).
     pub fn embed_into(&mut self, x: &[S], out: &mut [S]) {
-        let emb = self.plan.embedding();
-        assert_eq!(x.len(), emb.config().n, "input dim mismatch");
+        assert_eq!(x.len(), self.plan.embedding().config().n, "input dim mismatch");
         self.input.copy_from_slice(x);
+        self.embed_staged_into(out);
+    }
+
+    /// Run the per-row pipeline over whatever is currently staged in
+    /// `self.input` (shared tail of [`BatchExecutor::embed_into`] and
+    /// the 1-row [`RowSource`] path, which loads `input` without an
+    /// intermediate slice).
+    fn embed_staged_into(&mut self, out: &mut [S]) {
+        let emb = self.plan.embedding();
         if let Some(pre) = emb.preprocessor() {
             S::preprocess_inplace(pre, &mut self.input);
         }
@@ -198,24 +339,26 @@ impl<S: EngineScalar> BatchExecutor<S> {
     /// [`BATCH_KERNEL_MIN_ROWS`] or more rows run the split-complex
     /// batched kernels, tiled at [`BATCH_KERNEL_MAX_LANES`] rows per
     /// pass so the working set stays cache-sized; shorter ranges loop
-    /// the per-row path. This is the shared core of
-    /// [`BatchExecutor::embed_batch_into`] and the
-    /// [`super::WorkerPool`] shards.
-    pub fn embed_range_into(
+    /// the per-row path. Generic over [`RowSource`], so the
+    /// [`super::StreamingPool`] workers read request payloads
+    /// ([`WireRows`]) directly — this is the shared core of
+    /// [`BatchExecutor::embed_batch_into`] and every pool shard.
+    pub fn embed_range_into<R: RowSource<S> + ?Sized>(
         &mut self,
-        input: &BatchBuf<S>,
+        input: &R,
         start: usize,
         end: usize,
         out: &mut [S],
     ) {
-        assert!(start <= end && end <= input.rows(), "row range out of bounds");
+        assert!(start <= end && end <= RowSource::rows(input), "row range out of bounds");
         let rows = end - start;
         let d = self.plan.out_dim();
         assert_eq!(out.len(), rows * d, "output length mismatch");
         if rows < BATCH_KERNEL_MIN_ROWS {
+            assert_eq!(RowSource::dim(input), self.input.len(), "input dim mismatch");
             for (k, i) in (start..end).enumerate() {
-                let (row_in, row_out) = (input.row(i), &mut out[k * d..(k + 1) * d]);
-                self.embed_into(row_in, row_out);
+                input.copy_row_into(i, &mut self.input);
+                self.embed_staged_into(&mut out[k * d..(k + 1) * d]);
             }
             return;
         }
@@ -239,19 +382,25 @@ impl<S: EngineScalar> BatchExecutor<S> {
     /// [`BATCH_KERNEL_MAX_LANES`] of them): transpose into the
     /// lane-major staging planes, run preprocess, matvec and
     /// nonlinearity batch-wise, transpose the features back out.
-    fn embed_tile_into(&mut self, input: &BatchBuf<S>, start: usize, end: usize, out: &mut [S]) {
+    fn embed_tile_into<R: RowSource<S> + ?Sized>(
+        &mut self,
+        input: &R,
+        start: usize,
+        end: usize,
+        out: &mut [S],
+    ) {
         let d = self.plan.out_dim();
         let emb = self.plan.embedding();
         let n = emb.config().n;
         let m = emb.config().m;
-        assert_eq!(input.dim(), n, "input dim mismatch");
+        assert_eq!(RowSource::dim(input), n, "input dim mismatch");
         let lanes = end - start;
-        // transpose the row range into the lane-major staging plane
+        // transpose (and, for WireRows-as-f64, widen) the row range
+        // straight into the lane-major staging plane — the zero-staging
+        // step that replaced the coordinator's copy-then-pack relay
         let tin = grown(&mut self.tin, n * lanes);
         for (l, i) in (start..end).enumerate() {
-            for (j, &v) in input.row(i).iter().enumerate() {
-                tin[j * lanes + l] = v;
-            }
+            input.scatter_row(i, tin, lanes, l);
         }
         if let Some(pre) = emb.preprocessor() {
             S::preprocess_batch_inplace(pre, tin, lanes);

@@ -1,0 +1,229 @@
+//! Shared keyed plan cache: one [`EmbeddingPlan`] per configuration,
+//! LRU-evicted, shared by serving backends, the CLI and the eval
+//! harness.
+//!
+//! Sampling and planning an embedding (budget draw, FFT plans, kernel
+//! spectra, preprocessing diagonals) is the one genuinely expensive
+//! per-configuration step left after the engine amortized everything
+//! per-call. Before the cache, every coordinator variant, every
+//! ad-hoc CLI invocation and every eval sweep re-derived its own plan
+//! even for identical `(structure, m, n, f, seed)` configurations.
+//! A [`PlanCache`] keys plans by exactly the fields that determine
+//! them and hands out `Arc` clones; since a plan carries **both**
+//! precisions (f64 eager, f32 twins lazy), one cache entry serves f32
+//! and f64 executors of the same config simultaneously.
+
+use super::EmbeddingPlan;
+use crate::pmodel::StructureKind;
+use crate::transform::{EmbeddingConfig, Nonlinearity};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Default capacity of the process-wide [`PlanCache::global`] cache.
+/// Plans are a few times `n` floats each plus FFT tables, so even at
+/// serving sizes this bounds the cache to a handful of megabytes.
+pub const GLOBAL_PLAN_CACHE_CAPACITY: usize = 64;
+
+/// Everything that determines a sampled plan — two configs with equal
+/// keys produce bit-identical embeddings (sampling is seeded).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct PlanKey {
+    structure: StructureKind,
+    m: usize,
+    n: usize,
+    f: Nonlinearity,
+    preprocess: bool,
+    seed: u64,
+}
+
+impl PlanKey {
+    fn of(cfg: &EmbeddingConfig) -> PlanKey {
+        PlanKey {
+            structure: cfg.structure,
+            m: cfg.m,
+            n: cfg.n,
+            f: cfg.f,
+            preprocess: cfg.preprocess,
+            seed: cfg.seed,
+        }
+    }
+}
+
+struct Entry {
+    plan: Arc<EmbeddingPlan>,
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<PlanKey, Entry>,
+    tick: u64,
+}
+
+/// Counter snapshot of a [`PlanCache`] (see [`PlanCache::stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    /// lookups served from the cache
+    pub hits: u64,
+    /// lookups that had to build a plan
+    pub misses: u64,
+    /// entries removed by LRU eviction
+    pub evictions: u64,
+    /// current number of cached plans
+    pub len: usize,
+    /// maximum number of cached plans
+    pub capacity: usize,
+}
+
+/// A bounded, thread-safe `(structure, m, n, f, preprocess, seed) →
+/// Arc<EmbeddingPlan>` cache with least-recently-used eviction.
+pub struct PlanCache {
+    inner: Mutex<Inner>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl PlanCache {
+    /// A cache holding at most `capacity ≥ 1` plans.
+    pub fn new(capacity: usize) -> PlanCache {
+        assert!(capacity >= 1, "plan cache needs capacity >= 1");
+        PlanCache {
+            inner: Mutex::new(Inner { map: HashMap::new(), tick: 0 }),
+            capacity,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide shared cache
+    /// (capacity [`GLOBAL_PLAN_CACHE_CAPACITY`]): serving backends,
+    /// `engine::embed_points{,_f32}` and the CLI all pull plans from
+    /// here, so repeated configurations sample exactly once per
+    /// process.
+    pub fn global() -> &'static PlanCache {
+        static GLOBAL: OnceLock<PlanCache> = OnceLock::new();
+        GLOBAL.get_or_init(|| PlanCache::new(GLOBAL_PLAN_CACHE_CAPACITY))
+    }
+
+    /// The plan for `cfg`, building (and caching) it on first use.
+    /// Expensive sampling runs *outside* the lock, so concurrent
+    /// callers never serialize behind a build; if two threads race on
+    /// the same fresh key, the first inserted plan wins and both get
+    /// the same `Arc` (both count as misses).
+    pub fn get_or_build(&self, cfg: &EmbeddingConfig) -> Arc<EmbeddingPlan> {
+        let key = PlanKey::of(cfg);
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.tick += 1;
+            let tick = g.tick;
+            if let Some(e) = g.map.get_mut(&key) {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return e.plan.clone();
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let plan = Arc::new(EmbeddingPlan::new(cfg.clone()));
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        if let Some(e) = g.map.get_mut(&key) {
+            // lost a build race: share the winner's plan
+            e.last_used = tick;
+            return e.plan.clone();
+        }
+        g.map.insert(key, Entry { plan: plan.clone(), last_used: tick });
+        while g.map.len() > self.capacity {
+            // O(len) scan is fine at these capacities
+            let lru = g
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty map");
+            g.map.remove(&lru);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        plan
+    }
+
+    /// Number of cached plans.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Hit/miss/eviction counters plus occupancy.
+    pub fn stats(&self) -> PlanCacheStats {
+        PlanCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            len: self.len(),
+            capacity: self.capacity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transform::Nonlinearity;
+
+    fn cfg(seed: u64) -> EmbeddingConfig {
+        EmbeddingConfig::new(StructureKind::Circulant, 8, 16, Nonlinearity::CosSin)
+            .with_seed(seed)
+    }
+
+    #[test]
+    fn hit_returns_the_same_arc() {
+        let cache = PlanCache::new(4);
+        let a = cache.get_or_build(&cfg(1));
+        let b = cache.get_or_build(&cfg(1));
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.len), (1, 1, 1));
+    }
+
+    #[test]
+    fn distinct_configs_get_distinct_entries() {
+        let cache = PlanCache::new(4);
+        let a = cache.get_or_build(&cfg(1));
+        let b = cache.get_or_build(&cfg(2));
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_entry() {
+        let cache = PlanCache::new(2);
+        let a = cache.get_or_build(&cfg(1));
+        let _b = cache.get_or_build(&cfg(2));
+        // touch seed 1 so seed 2 is now the LRU entry
+        assert!(Arc::ptr_eq(&a, &cache.get_or_build(&cfg(1))));
+        let _c = cache.get_or_build(&cfg(3)); // evicts seed 2
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().evictions, 1);
+        // seed 1 survived; seed 2 must rebuild (a new miss)
+        assert!(Arc::ptr_eq(&a, &cache.get_or_build(&cfg(1))));
+        let misses_before = cache.stats().misses;
+        let _b2 = cache.get_or_build(&cfg(2));
+        assert_eq!(cache.stats().misses, misses_before + 1);
+    }
+
+    #[test]
+    fn preprocess_flag_is_part_of_the_key() {
+        let cache = PlanCache::new(4);
+        let with = cache.get_or_build(&cfg(1));
+        let without = cache.get_or_build(&cfg(1).with_preprocess(false));
+        assert!(!Arc::ptr_eq(&with, &without));
+        assert_eq!(cache.len(), 2);
+    }
+}

@@ -10,9 +10,13 @@
 //! sizes. This module makes the amortization explicit:
 //!
 //! ```text
-//!   EmbeddingPlan        one per (structure, m, n, f, seed): owns the
-//!        │               sampled model (f64 FFT plans + spectra; f32
-//!        │               twins built lazily) and the D₁HD₀ diagonals
+//!   PlanCache            process-wide keyed cache: one plan per
+//!        │               (structure, m, n, f, preprocess, seed),
+//!        │               LRU-evicted, shared by serving + CLI + eval
+//!        ▼
+//!   EmbeddingPlan        one per config: owns the sampled model (f64
+//!        │               FFT plans + spectra; f32 twins built lazily)
+//!        │               and the D₁HD₀ diagonals
 //!        ▼
 //!   BatchExecutor<S>     one per thread: batches of ≥ 2 rows run the
 //!        │               split-complex batched kernels (lane-major
@@ -21,15 +25,22 @@
 //!        │               rows take the per-row planned path. Zero
 //!        │               heap allocation after warmup either way.
 //!        ▼
-//!   WorkerPool<S>        std threads + channels; shards a batch across
-//!                        cores, each worker running the batched
-//!                        kernels over its own contiguous row range
+//!   StreamingPool<S>     persistent per-core workers (std threads +
+//!                        channels), each pinning one BatchExecutor for
+//!                        the pool's lifetime; dispatched row ranges of
+//!                        any RowSource are transposed directly into
+//!                        the workers' split-complex tiles
 //! ```
 //!
 //! [`BatchBuf`] is the engine's SoA interchange format: one contiguous
 //! `Vec<S>` per batch instead of a `Vec<Vec<S>>` per request, so rows
 //! stay cache-friendly and the coordinator boundary does no per-row
-//! bookkeeping.
+//! bookkeeping. The serving path goes one step further: [`RowSource`]
+//! abstracts "equal-length rows readable by index", and [`WireRows`]
+//! wraps the coordinator's popped f32 request payloads so pool workers
+//! read them **in place** — the zero-staging fused path (no clone of
+//! each request vector, no `BatchBuf` re-pack, and for the f64 oracle
+//! the f32→f64 widening happens inside the tile transpose).
 //!
 //! # Precision
 //!
@@ -45,17 +56,20 @@
 //! the instantiation per serving variant.
 
 mod batch;
+mod cache;
 mod plan;
 mod pool;
 
-pub use batch::{BatchBuf, BatchExecutor, BATCH_KERNEL_MAX_LANES, BATCH_KERNEL_MIN_ROWS};
+pub use batch::{
+    BatchBuf, BatchExecutor, RowSource, WireRows, BATCH_KERNEL_MAX_LANES, BATCH_KERNEL_MIN_ROWS,
+};
+pub use cache::{PlanCache, PlanCacheStats, GLOBAL_PLAN_CACHE_CAPACITY};
 pub use plan::EmbeddingPlan;
-pub use pool::{default_workers, WorkerPool};
+pub use pool::{default_workers, Shard, StreamingPool, MIN_SHARD_ROWS};
 
 use crate::dsp::Scalar;
 use crate::pmodel::{BatchMatvecScratch, MatvecScratch, PModel};
 use crate::transform::{EmbeddingConfig, Nonlinearity, Preprocessor};
-use std::sync::Arc;
 
 /// Pipeline precision selector for serving backends: which
 /// [`EngineScalar`] instantiation a native variant executes at.
@@ -187,8 +201,11 @@ impl EngineScalar for f32 {
 /// Embed a point set through a planned batch executor: one plan and one
 /// scratch amortized over the whole set. This is the eval-harness path —
 /// experiment sweeps embed hundreds of points per sampled embedding and
-/// previously re-derived buffers for every single one. Runs at the f64
-/// oracle precision; see [`embed_points_f32`] for the serving precision.
+/// previously re-derived buffers for every single one. The plan comes
+/// from the process-wide [`PlanCache`], so repeated calls with the same
+/// configuration sample exactly once and share one plan with any
+/// serving backends running the same config. Runs at the f64 oracle
+/// precision; see [`embed_points_f32`] for the serving precision.
 ///
 /// ```
 /// use strembed::engine::embed_points;
@@ -202,7 +219,7 @@ impl EngineScalar for f32 {
 /// assert_eq!(feats[0].len(), 8); // CosSin doubles m = 4 projections
 /// ```
 pub fn embed_points(config: EmbeddingConfig, points: &[Vec<f64>]) -> Vec<Vec<f64>> {
-    let plan = Arc::new(EmbeddingPlan::new(config));
+    let plan = PlanCache::global().get_or_build(&config);
     let mut exec = BatchExecutor::new(plan);
     let input = BatchBuf::from_rows(points);
     exec.embed_batch(&input).to_rows()
@@ -210,9 +227,11 @@ pub fn embed_points(config: EmbeddingConfig, points: &[Vec<f64>]) -> Vec<Vec<f64
 
 /// [`embed_points`] at the native f32 serving precision: the whole
 /// pipeline (preprocess, planned matvec, nonlinearity) runs in single
-/// precision with no widening/narrowing copies.
+/// precision with no widening/narrowing copies. Shares plans with
+/// [`embed_points`] through the [`PlanCache`] — one cached entry
+/// carries both precisions.
 pub fn embed_points_f32(config: EmbeddingConfig, points: &[Vec<f32>]) -> Vec<Vec<f32>> {
-    let plan = Arc::new(EmbeddingPlan::new(config));
+    let plan = PlanCache::global().get_or_build(&config);
     let mut exec = BatchExecutor::<f32>::new(plan);
     let input = BatchBuf::from_rows(points);
     exec.embed_batch(&input).to_rows()

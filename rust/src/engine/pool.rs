@@ -1,25 +1,49 @@
-//! Worker pool: shard a batch across cores, std threads + channels only
-//! (the offline environment has no rayon/crossbeam). Generic over the
-//! pipeline precision ([`EngineScalar`]) — an f32 pool moves half the
-//! bytes per shard of the f64 oracle pool.
+//! Streaming worker pool: a long-lived set of per-core embedding
+//! workers (std threads + channels only — the offline environment has
+//! no rayon/crossbeam), generic over the pipeline precision
+//! ([`EngineScalar`]).
+//!
+//! This is the fused serving path: instead of the old relay
+//! (`batcher` pops into a staging `Vec`, the backend re-packs it into a
+//! [`BatchBuf`], a transient pool re-shards that buffer), a
+//! [`StreamingPool`] lives for the lifetime of its owner and is handed
+//! row *ranges* of any [`RowSource`] — in serving, the popped request
+//! payloads themselves ([`super::WireRows`]) — which each worker
+//! transposes directly into its lane-major split-complex tiles. Zero
+//! staging copies between the queue and the butterflies.
 
-use super::{BatchBuf, BatchExecutor, EmbeddingPlan, EngineScalar};
+use super::{BatchBuf, BatchExecutor, EmbeddingPlan, EngineScalar, RowSource};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-/// One contiguous row range of a batch, dispatched to a worker.
+/// A shard smaller than this many rows is not worth a second worker:
+/// the channel round-trip and a cold scratch outweigh the butterflies.
+/// Dispatch packs ranges of at least this size (except the tail).
+pub const MIN_SHARD_ROWS: usize = 8;
+
+/// One contiguous row range of a row source, dispatched to a worker.
 struct Job<S: EngineScalar> {
-    input: Arc<BatchBuf<S>>,
+    input: Arc<dyn RowSource<S> + Send + Sync>,
     start: usize,
     end: usize,
     reply: mpsc::Sender<Shard<S>>,
 }
 
-/// A worker's finished rows (flat, `(end-start) × out_dim`).
-struct Shard<S> {
-    start: usize,
-    feats: Vec<S>,
+/// What a worker receives: a range to embed, or the close signal.
+enum Msg<S: EngineScalar> {
+    Job(Job<S>),
+    Close,
+}
+
+/// A worker's finished rows: `feats` is flat row-major
+/// `(end-start) × out_dim`, starting at batch row `start`.
+pub struct Shard<S> {
+    /// first batch row this shard covers
+    pub start: usize,
+    /// flat row-major features for the shard's rows
+    pub feats: Vec<S>,
 }
 
 /// A sensible worker count for this host (capped: embedding is
@@ -28,44 +52,59 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism().map_or(1, |p| p.get()).min(8)
 }
 
-/// Persistent embedding workers bound to one [`EmbeddingPlan`]. Each
-/// worker owns a [`BatchExecutor`] (plan shared, scratch private) and
-/// routes its whole sub-batch through one batched planned pass
-/// ([`BatchExecutor::embed_range_into`]), so a pool embeds disjoint
-/// row ranges of the same batch fully in parallel with no locking on
-/// the hot path. Results are deterministic: repeated calls always
-/// agree, and sharding never changes the per-row f64 output (the
-/// batched kernels are lane-count-independent per lane and
+/// Persistent streaming embedding workers bound to one
+/// [`EmbeddingPlan`]. Each worker owns a [`BatchExecutor`] (plan
+/// shared, scratch private) pinned for the pool's whole lifetime, and
+/// routes each dispatched range through one batched planned pass
+/// ([`BatchExecutor::embed_range_into`]) reading rows straight from
+/// the job's [`RowSource`]. Results are deterministic: repeated calls
+/// always agree, and sharding never changes the per-row f64 output
+/// (the batched kernels are lane-count-independent per lane and
 /// bit-identical to the per-row path; at f32 the same holds for every
 /// FFT family — only the dense f32 GEMM sums in a different order than
 /// the 1-row GEMV fallback, within the 1e-4 accuracy contract).
-pub struct WorkerPool<S: EngineScalar = f64> {
-    txs: Vec<mpsc::Sender<Job<S>>>,
+///
+/// Shutdown is explicit: [`StreamingPool::close`] sends every worker a
+/// close signal and [`StreamingPool::shutdown`] asserts the clean
+/// join; dropping the pool does the same implicitly, so an owner that
+/// goes away can no longer leave workers parked forever.
+pub struct StreamingPool<S: EngineScalar = f64> {
+    txs: Vec<mpsc::Sender<Msg<S>>>,
     handles: Vec<JoinHandle<()>>,
     out_dim: usize,
+    /// round-robin cursor so small single-shard dispatches spread over
+    /// all workers instead of always landing on worker 0
+    next: AtomicUsize,
+    /// set by [`StreamingPool::close`]; dispatching afterwards panics
+    closed: AtomicBool,
 }
 
-impl<S: EngineScalar> WorkerPool<S> {
-    /// Spawn `workers ≥ 1` threads executing `plan`.
-    pub fn new(plan: Arc<EmbeddingPlan>, workers: usize) -> WorkerPool<S> {
+impl<S: EngineScalar> StreamingPool<S> {
+    /// Spawn `workers ≥ 1` persistent threads executing `plan`.
+    pub fn new(plan: Arc<EmbeddingPlan>, workers: usize) -> StreamingPool<S> {
         assert!(workers >= 1, "pool needs at least one worker");
         let out_dim = plan.out_dim();
         let mut txs = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
-            let (tx, rx) = mpsc::channel::<Job<S>>();
+            let (tx, rx) = mpsc::channel::<Msg<S>>();
             let wplan = plan.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("strembed-engine-{w}"))
                 .spawn(move || {
                     let mut exec = BatchExecutor::<S>::new(wplan);
                     let d = exec.plan().out_dim();
-                    while let Ok(job) = rx.recv() {
+                    while let Ok(msg) = rx.recv() {
+                        let job = match msg {
+                            Msg::Job(job) => job,
+                            Msg::Close => break,
+                        };
                         let rows = job.end - job.start;
                         let mut feats = vec![S::ZERO; rows * d];
-                        // whole sub-batch through one batched planned
-                        // pass (split-complex kernels for ≥ 2 rows)
-                        exec.embed_range_into(&job.input, job.start, job.end, &mut feats);
+                        // whole range through one batched planned pass
+                        // (split-complex kernels for ≥ 2 rows), rows
+                        // read directly from the shared source
+                        exec.embed_range_into(&*job.input, job.start, job.end, &mut feats);
                         // receiver may have gone away on pool teardown
                         let _ = job.reply.send(Shard { start: job.start, feats });
                     }
@@ -74,7 +113,13 @@ impl<S: EngineScalar> WorkerPool<S> {
             txs.push(tx);
             handles.push(handle);
         }
-        WorkerPool { txs, handles, out_dim }
+        StreamingPool {
+            txs,
+            handles,
+            out_dim,
+            next: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+        }
     }
 
     /// Number of workers.
@@ -87,29 +132,68 @@ impl<S: EngineScalar> WorkerPool<S> {
         self.out_dim
     }
 
-    /// Embed every row of `input`, sharding contiguous row ranges across
-    /// the workers and reassembling in order. The batch is behind an
-    /// [`Arc`] so shards borrow nothing across threads.
-    pub fn embed_batch(&self, input: &Arc<BatchBuf<S>>) -> BatchBuf<S> {
+    /// Dispatch every row of `input` as contiguous ranges across the
+    /// workers (at least [`MIN_SHARD_ROWS`] rows per shard, so tiny
+    /// batches take a single channel hop instead of fanning out).
+    /// Returns the number of shards sent; each arrives on `reply`
+    /// exactly once, in completion order.
+    ///
+    /// # Panics
+    ///
+    /// Panics if the pool has been [`StreamingPool::close`]d —
+    /// dispatching on a closed pool is a caller bug, not a droppable
+    /// request.
+    pub fn dispatch(
+        &self,
+        input: Arc<dyn RowSource<S> + Send + Sync>,
+        reply: &mpsc::Sender<Shard<S>>,
+    ) -> usize {
+        assert!(
+            !self.closed.load(Ordering::SeqCst),
+            "dispatch on a closed StreamingPool"
+        );
         let rows = input.rows();
-        let mut out = BatchBuf::zeros(rows, self.out_dim);
         if rows == 0 {
-            return out;
+            return 0;
         }
-        let shards = self.txs.len().min(rows);
+        let shards = self.txs.len().min(rows.div_ceil(MIN_SHARD_ROWS)).max(1);
         let chunk = rows.div_ceil(shards);
-        let (rtx, rrx) = mpsc::channel::<Shard<S>>();
+        let first = self.next.fetch_add(1, Ordering::Relaxed);
         let mut sent = 0usize;
         for (w, start) in (0..rows).step_by(chunk).enumerate() {
             let end = (start + chunk).min(rows);
-            self.txs[w % self.txs.len()]
-                .send(Job { input: input.clone(), start, end, reply: rtx.clone() })
+            self.txs[first.wrapping_add(w) % self.txs.len()]
+                .send(Msg::Job(Job { input: input.clone(), start, end, reply: reply.clone() }))
                 .expect("engine worker alive");
             sent += 1;
         }
+        sent
+    }
+
+    /// Embed every row of `input`, returning the finished shards
+    /// sorted by their starting row. This is the fused serving entry
+    /// point: the caller assembles responses straight from the flat
+    /// shard features without an intermediate output buffer.
+    pub fn embed_shards(&self, input: Arc<dyn RowSource<S> + Send + Sync>) -> Vec<Shard<S>> {
+        let (rtx, rrx) = mpsc::channel::<Shard<S>>();
+        let sent = self.dispatch(input, &rtx);
         drop(rtx);
+        let mut shards: Vec<Shard<S>> = Vec::with_capacity(sent);
         for _ in 0..sent {
-            let shard = rrx.recv().expect("engine worker reply");
+            shards.push(rrx.recv().expect("engine worker reply"));
+        }
+        shards.sort_by_key(|s| s.start);
+        shards
+    }
+
+    /// Embed every row of `input` into one reassembled output batch.
+    /// (Benchmark/eval convenience; the serving path uses
+    /// [`StreamingPool::embed_shards`] to skip this copy.)
+    pub fn embed_batch(&self, input: &Arc<BatchBuf<S>>) -> BatchBuf<S> {
+        let rows = input.rows();
+        let mut out = BatchBuf::zeros(rows, self.out_dim);
+        let src: Arc<dyn RowSource<S> + Send + Sync> = input.clone();
+        for shard in self.embed_shards(src) {
             let rows_in = shard.feats.len() / self.out_dim;
             for k in 0..rows_in {
                 out.row_mut(shard.start + k)
@@ -118,11 +202,43 @@ impl<S: EngineScalar> WorkerPool<S> {
         }
         out
     }
+
+    /// Send every worker the close signal (idempotent; does not wait).
+    /// Jobs dispatched *before* the close are still fully processed —
+    /// each worker's channel is FIFO, so its queued jobs drain ahead of
+    /// the close marker. Dispatching *after* a close panics (see
+    /// [`StreamingPool::dispatch`]).
+    pub fn close(&self) {
+        if self.closed.swap(true, Ordering::SeqCst) {
+            return; // already closed
+        }
+        for tx in &self.txs {
+            // a worker that already exited has dropped its receiver
+            let _ = tx.send(Msg::Close);
+        }
+    }
+
+    /// Close and join every worker, returning how many joined cleanly
+    /// (without panicking). Callers that need the guarantee assert the
+    /// result equals [`StreamingPool::workers`].
+    pub fn shutdown(mut self) -> usize {
+        self.close();
+        let mut clean = 0usize;
+        for h in self.handles.drain(..) {
+            if h.join().is_ok() {
+                clean += 1;
+            }
+        }
+        // Drop impl sees empty handles and does nothing further
+        clean
+    }
 }
 
-impl<S: EngineScalar> Drop for WorkerPool<S> {
+impl<S: EngineScalar> Drop for StreamingPool<S> {
     fn drop(&mut self) {
-        // closing the channels ends each worker's recv loop
+        // explicit close signal (not just channel disconnect), then
+        // join: a dropped pool can never leave threads parked forever
+        self.close();
         self.txs.clear();
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -137,11 +253,11 @@ mod tests {
     use crate::rng::Rng;
     use crate::transform::{EmbeddingConfig, Nonlinearity};
 
-    fn pool_and_plan(workers: usize) -> (WorkerPool, Arc<EmbeddingPlan>) {
+    fn pool_and_plan(workers: usize) -> (StreamingPool, Arc<EmbeddingPlan>) {
         let cfg = EmbeddingConfig::new(StructureKind::Circulant, 16, 32, Nonlinearity::CosSin)
             .with_seed(9);
         let plan = EmbeddingPlan::shared(cfg);
-        (WorkerPool::new(plan.clone(), workers), plan)
+        (StreamingPool::new(plan.clone(), workers), plan)
     }
 
     #[test]
@@ -170,7 +286,7 @@ mod tests {
             .map(|_| rng.gaussian_vec(32).iter().map(|&v| v as f32).collect())
             .collect();
         let input = Arc::new(BatchBuf::from_rows(&rows));
-        let pool = WorkerPool::<f32>::new(plan.clone(), 3);
+        let pool = StreamingPool::<f32>::new(plan.clone(), 3);
         let got = pool.embed_batch(&input);
         let mut exec = BatchExecutor::<f32>::new(plan);
         let want = exec.embed_batch(&input);
@@ -203,8 +319,72 @@ mod tests {
     }
 
     #[test]
+    fn small_batches_take_one_shard_large_ones_fan_out() {
+        let (pool, _plan) = pool_and_plan(4);
+        let mut rng = Rng::new(6);
+        let small = Arc::new(BatchBuf::from_rows(
+            &(0..MIN_SHARD_ROWS - 1).map(|_| rng.gaussian_vec(32)).collect::<Vec<_>>(),
+        ));
+        let large = Arc::new(BatchBuf::from_rows(
+            &(0..4 * MIN_SHARD_ROWS).map(|_| rng.gaussian_vec(32)).collect::<Vec<_>>(),
+        ));
+        let (tx, rx) = mpsc::channel();
+        let small_src: Arc<dyn RowSource<f64> + Send + Sync> = small.clone();
+        assert_eq!(pool.dispatch(small_src, &tx), 1);
+        let _ = rx.recv().unwrap();
+        let large_src: Arc<dyn RowSource<f64> + Send + Sync> = large.clone();
+        assert_eq!(pool.dispatch(large_src, &tx), 4);
+        for _ in 0..4 {
+            let _ = rx.recv().unwrap();
+        }
+    }
+
+    #[test]
+    fn shutdown_joins_every_worker_cleanly() {
+        // the close-signal contract: an explicit shutdown must end and
+        // join every parked worker thread (the pre-fusion pool could
+        // leave workers parked forever if its owner leaked)
+        let (pool, _plan) = pool_and_plan(3);
+        assert_eq!(pool.workers(), 3);
+        assert_eq!(pool.shutdown(), 3);
+    }
+
+    #[test]
+    fn close_is_idempotent_and_drop_still_joins() {
+        let (pool, _plan) = pool_and_plan(2);
+        pool.close();
+        pool.close();
+        drop(pool); // must not hang
+    }
+
+    #[test]
     fn drop_joins_workers() {
         let (pool, _plan) = pool_and_plan(2);
         drop(pool); // must not hang
+    }
+
+    #[test]
+    #[should_panic(expected = "dispatch on a closed StreamingPool")]
+    fn dispatch_after_close_panics() {
+        let (pool, _plan) = pool_and_plan(2);
+        pool.close();
+        let input = Arc::new(BatchBuf::from_rows(&[vec![0.5; 32]]));
+        let _ = pool.embed_batch(&input);
+    }
+
+    #[test]
+    fn jobs_dispatched_before_close_still_complete() {
+        let (pool, _plan) = pool_and_plan(2);
+        let mut rng = Rng::new(8);
+        let input = Arc::new(BatchBuf::from_rows(
+            &(0..24).map(|_| rng.gaussian_vec(32)).collect::<Vec<_>>(),
+        ));
+        let (tx, rx) = mpsc::channel();
+        let src: Arc<dyn RowSource<f64> + Send + Sync> = input.clone();
+        let sent = pool.dispatch(src, &tx);
+        pool.close(); // FIFO per worker: queued jobs drain first
+        for _ in 0..sent {
+            let _ = rx.recv().expect("job dispatched before close completes");
+        }
     }
 }

@@ -18,18 +18,22 @@
 //! - coherence graphs + their combinatorial statistics ([`coherence`]),
 //! - the full embedding pipeline `x → D₀ → H → D₁ → A → f` ([`transform`]),
 //! - exact kernels for ground truth ([`exact`]),
-//! - a planned batch execution engine — amortized FFT plans/spectra,
-//!   zero-allocation batch executors in SoA layout, and a worker pool
-//!   that shards batches across cores, all monomorphized per precision
-//!   through [`engine::EngineScalar`] ([`engine`]),
+//! - a planned batch execution engine — a process-wide LRU plan cache
+//!   ([`engine::PlanCache`]), amortized FFT plans/spectra,
+//!   zero-allocation batch executors in SoA layout, and a persistent
+//!   streaming worker pool ([`engine::StreamingPool`]) whose per-core
+//!   workers read request payloads in place ([`engine::RowSource`]),
+//!   all monomorphized per precision through [`engine::EngineScalar`]
+//!   ([`engine`]),
 //! - an experiment/eval harness regenerating the paper's figures and
 //!   validating its theorems, with point sets embedded through the
 //!   engine ([`eval`]),
 //! - a PJRT runtime that loads JAX/Pallas AOT artifacts ([`runtime`],
 //!   behind the `pjrt` feature),
-//! - an embedding-serving coordinator: router, dynamic batcher, metrics,
-//!   per-variant precision knob ([`coordinator`]) — native variants
-//!   execute through the engine.
+//! - an embedding-serving coordinator: router, dynamic batcher, metrics
+//!   (including f32 shadow-oracle accuracy sampling), per-variant
+//!   precision knob ([`coordinator`]) — native variants execute through
+//!   the engine's fused zero-staging streaming path.
 //!
 //! Layering: `dsp`/`rng` → `pmodel` → `transform` → **`engine`** →
 //! `coordinator`/`eval`. The engine is the only layer the serving stack

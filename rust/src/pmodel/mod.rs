@@ -333,7 +333,8 @@ pub(crate) fn widen_matvec_into_f32(model: &dyn PModel, x: &[f32], y: &mut [f32]
 }
 
 /// Structure families selectable from the CLI / eval harness.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// `Hash` lets the engine's plan cache key on the family directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum StructureKind {
     /// Fully unstructured iid Gaussian (t = m·n) — the paper's baseline.
     Dense,

@@ -19,7 +19,8 @@
 use crate::dsp::Scalar;
 
 /// A pointwise feature nonlinearity.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// `Hash` lets the engine's plan cache key on the nonlinearity directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Nonlinearity {
     /// f(x) = x — linear JL embedding.
     Identity,

@@ -5,7 +5,8 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 use strembed::coordinator::{
-    serve_tcp, BackendSpec, Coordinator, CoordinatorConfig, EmbedError,
+    serve_tcp, BackendSpec, Coordinator, CoordinatorConfig, EmbedError, Precision,
+    SHADOW_SAMPLE_PERIOD,
 };
 
 fn native_specs() -> Vec<(String, BackendSpec)> {
@@ -91,6 +92,59 @@ fn backpressure_rejects_when_saturated() {
     assert!(saw_overload, "bounded queue must shed load");
     let snap = c.metrics().snapshot();
     assert!(snap.rejected >= 1);
+}
+
+#[test]
+fn f32_serving_exports_shadow_accuracy_metrics() {
+    // an f32 native variant served through the coordinator samples
+    // ~1/SHADOW_SAMPLE_PERIOD of its rows through the shared plan's
+    // f64 executor and exports the observed relative error
+    let spec = BackendSpec::native("circulant", "rff", 16, 32, 3)
+        .unwrap()
+        .with_precision(Precision::F32)
+        .with_workers(2);
+    let c = Arc::new(
+        Coordinator::start(
+            vec![("circ32".into(), spec)],
+            CoordinatorConfig {
+                max_batch: 32,
+                linger: Duration::from_micros(200),
+                queue_capacity: 10_000,
+            },
+        )
+        .unwrap(),
+    );
+    let total = SHADOW_SAMPLE_PERIOD as usize + 10; // guarantees ≥ 2 samples
+    let mut handles = Vec::new();
+    for t in 0..2 {
+        let c = c.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..total / 2 {
+                let v: Vec<f32> =
+                    (0..32).map(|j| ((t * 131 + i * 7 + j) % 17) as f32 * 0.05).collect();
+                c.embed_blocking("circ32", v).unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let snap = c.metrics().snapshot();
+    assert_eq!(snap.completed, (total / 2 * 2) as u64);
+    assert!(snap.shadow_samples >= 2, "samples={}", snap.shadow_samples);
+    // the f32 pipeline must sit inside its documented accuracy contract
+    assert!(snap.shadow_max_rel_err <= 1e-4, "{}", snap.shadow_max_rel_err);
+    assert!(snap.shadow_mean_rel_err <= snap.shadow_max_rel_err);
+}
+
+#[test]
+fn f64_serving_never_shadow_samples() {
+    let c = Coordinator::start(native_specs(), CoordinatorConfig::default()).unwrap();
+    for _ in 0..4 {
+        c.embed_blocking("circ", vec![0.25; 16]).unwrap();
+    }
+    assert_eq!(c.metrics().snapshot().shadow_samples, 0);
+    c.shutdown();
 }
 
 #[test]

@@ -1,12 +1,12 @@
 //! Property tests for the batch execution engine: the planned SoA path
-//! ([`BatchExecutor`], [`WorkerPool`]) must agree row-for-row with the
+//! ([`BatchExecutor`], [`StreamingPool`]) must agree row-for-row with the
 //! per-vector reference path (`StructuredEmbedding::embed`) across every
 //! structure family, batch size, nonlinearity and preprocessing mode —
 //! and the native f32 pipeline must track the f64 oracle within 1e-4
 //! relative error.
 
 use std::sync::Arc;
-use strembed::engine::{BatchBuf, BatchExecutor, EmbeddingPlan, WorkerPool};
+use strembed::engine::{BatchBuf, BatchExecutor, EmbeddingPlan, StreamingPool};
 use strembed::pmodel::StructureKind;
 use strembed::prop::forall;
 use strembed::rng::Rng;
@@ -243,7 +243,7 @@ fn f32_worker_pool_matches_f32_executor_for_every_worker_count() {
     let mut exec = BatchExecutor::<f32>::new(plan.clone());
     let want = exec.embed_batch(&input);
     for workers in 1..=4 {
-        let pool = WorkerPool::<f32>::new(plan.clone(), workers);
+        let pool = StreamingPool::<f32>::new(plan.clone(), workers);
         let got = pool.embed_batch(&input);
         assert_eq!(got.rows(), want.rows());
         for i in 0..got.rows() {
@@ -269,7 +269,7 @@ fn dense_f32_pool_stays_within_contract_for_every_worker_count() {
     let oracle = ex64.embed_batch(&BatchBuf::from_rows(&rows));
     let input = Arc::new(BatchBuf::from_rows(&narrow_batch(&rows)));
     for workers in 1..=4 {
-        let pool = WorkerPool::<f32>::new(plan.clone(), workers);
+        let pool = StreamingPool::<f32>::new(plan.clone(), workers);
         let got = pool.embed_batch(&input);
         assert_eq!(got, pool.embed_batch(&input), "workers={workers} must be deterministic");
         for i in 0..got.rows() {
@@ -293,7 +293,7 @@ fn worker_pool_matches_executor_for_every_worker_count() {
     let mut exec = BatchExecutor::<f64>::new(plan.clone());
     let want = exec.embed_batch(&input);
     for workers in 1..=4 {
-        let pool = WorkerPool::<f64>::new(plan.clone(), workers);
+        let pool = StreamingPool::<f64>::new(plan.clone(), workers);
         let got = pool.embed_batch(&input);
         assert_eq!(got.rows(), want.rows());
         for i in 0..got.rows() {

@@ -1,0 +1,174 @@
+//! Property tests for the fused zero-staging serving path: a
+//! [`StreamingPool`] fed raw f32 request payloads ([`WireRows`]) must
+//! agree with the one-shot [`engine::embed_points`] reference —
+//! **bit-identical** at f64 (the pool's widen-in-transpose plus
+//! sharding must never change a single bit) and within the 1e-4
+//! relative contract at f32 — across every structure family, worker
+//! count and batch size, including shard-boundary shapes. Plus the
+//! shared plan cache: hit/miss accounting, LRU eviction, and one entry
+//! serving both precisions.
+
+use std::sync::Arc;
+use strembed::engine::{
+    embed_points, BatchExecutor, PlanCache, RowSource, Shard, StreamingPool, WireRows,
+};
+use strembed::pmodel::StructureKind;
+use strembed::rng::Rng;
+use strembed::transform::{EmbeddingConfig, Nonlinearity};
+
+/// Relative tolerance of the f32 pipeline against the f64 oracle.
+const F32_REL_TOL: f64 = 1e-4;
+
+fn wire_batch(rows: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..rows)
+        .map(|_| rng.gaussian_vec(n).iter().map(|&v| v as f32).collect())
+        .collect()
+}
+
+fn widen(rows: &[Vec<f32>]) -> Vec<Vec<f64>> {
+    rows.iter().map(|r| r.iter().map(|&v| v as f64).collect()).collect()
+}
+
+/// Assemble sorted shards into per-row feature vectors.
+fn rows_of<S: Copy>(shards: Vec<Shard<S>>, d: usize) -> Vec<Vec<S>> {
+    let mut out = Vec::new();
+    for shard in shards {
+        assert_eq!(out.len(), shard.start, "shards must be sorted and gapless");
+        out.extend(shard.feats.chunks_exact(d).map(|c| c.to_vec()));
+    }
+    out
+}
+
+#[test]
+fn fused_f64_is_bit_identical_to_embed_points_everywhere() {
+    for kind in StructureKind::all() {
+        let cfg = EmbeddingConfig::new(kind, 8, 16, Nonlinearity::CosSin).with_seed(42);
+        let plan = PlanCache::global().get_or_build(&cfg);
+        let d = plan.out_dim();
+        for &workers in &[1usize, 2, 4] {
+            let pool = StreamingPool::<f64>::new(plan.clone(), workers);
+            for &batch in &[1usize, 7, 64, 513] {
+                let rows = wire_batch(batch, 16, 3000 + batch as u64);
+                let want = embed_points(cfg.clone(), &widen(&rows));
+                let src: Arc<dyn RowSource<f64> + Send + Sync> =
+                    Arc::new(WireRows::new(rows, 16).unwrap());
+                let got = rows_of(pool.embed_shards(src), d);
+                assert_eq!(got.len(), want.len());
+                for (i, (grow, wrow)) in got.iter().zip(&want).enumerate() {
+                    for (g, w) in grow.iter().zip(wrow) {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "{} workers={workers} batch={batch} row {i}: {g} vs {w}",
+                            kind.label()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_f32_tracks_embed_points_oracle_everywhere() {
+    for kind in StructureKind::all() {
+        let cfg = EmbeddingConfig::new(kind, 8, 16, Nonlinearity::CosSin).with_seed(42);
+        let plan = PlanCache::global().get_or_build(&cfg);
+        let d = plan.out_dim();
+        for &workers in &[1usize, 2, 4] {
+            let pool = StreamingPool::<f32>::new(plan.clone(), workers);
+            for &batch in &[1usize, 7, 64, 513] {
+                let rows = wire_batch(batch, 16, 4000 + batch as u64);
+                let want = embed_points(cfg.clone(), &widen(&rows));
+                let src: Arc<dyn RowSource<f32> + Send + Sync> =
+                    Arc::new(WireRows::new(rows, 16).unwrap());
+                let got = rows_of(pool.embed_shards(src), d);
+                assert_eq!(got.len(), want.len());
+                for (i, (grow, wrow)) in got.iter().zip(&want).enumerate() {
+                    for (g, w) in grow.iter().zip(wrow) {
+                        assert!(
+                            (*g as f64 - w).abs() <= F32_REL_TOL * (1.0 + w.abs()),
+                            "{} workers={workers} batch={batch} row {i}: {g} vs {w}",
+                            kind.label()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_pool_shuts_down_cleanly_at_every_worker_count() {
+    let cfg = EmbeddingConfig::new(StructureKind::Circulant, 8, 16, Nonlinearity::CosSin)
+        .with_seed(7);
+    let plan = PlanCache::global().get_or_build(&cfg);
+    for workers in 1..=4 {
+        let pool = StreamingPool::<f32>::new(plan.clone(), workers);
+        let src: Arc<dyn RowSource<f32> + Send + Sync> =
+            Arc::new(WireRows::new(wire_batch(5, 16, 9), 16).unwrap());
+        let _ = pool.embed_shards(src);
+        // the close-signal contract: every worker joins, none parked
+        assert_eq!(pool.shutdown(), workers, "workers={workers}");
+    }
+}
+
+#[test]
+fn wire_rows_reject_ragged_payloads() {
+    let err = WireRows::new(vec![vec![0.0f32; 16], vec![0.0f32; 15]], 16).unwrap_err();
+    assert!(err.contains("row 1"), "{err}");
+}
+
+#[test]
+fn plan_cache_counts_hits_misses_and_shares_across_precisions() {
+    let cache = PlanCache::new(4);
+    let cfg = EmbeddingConfig::new(StructureKind::Toeplitz, 8, 16, Nonlinearity::CosSin)
+        .with_seed(5);
+    let plan = cache.get_or_build(&cfg);
+    let again = cache.get_or_build(&cfg);
+    assert!(Arc::ptr_eq(&plan, &again), "same config must share one entry");
+    let s = cache.stats();
+    assert_eq!((s.hits, s.misses, s.len), (1, 1, 1));
+
+    // one cached entry serves both precisions: the plan carries f64
+    // plans eagerly and f32 twins lazily, so executors of either
+    // precision run off the same Arc
+    let rows = wire_batch(6, 16, 77);
+    let mut ex64 = BatchExecutor::<f64>::new(plan.clone());
+    let mut ex32 = BatchExecutor::<f32>::new(plan.clone());
+    let in64 = strembed::engine::BatchBuf::from_rows(&widen(&rows));
+    let in32 = strembed::engine::BatchBuf::from_rows(&rows);
+    let out64 = ex64.embed_batch(&in64);
+    let out32 = ex32.embed_batch(&in32);
+    for i in 0..rows.len() {
+        for (g, w) in out32.row(i).iter().zip(out64.row(i)) {
+            assert!((*g as f64 - w).abs() <= F32_REL_TOL * (1.0 + w.abs()), "{g} vs {w}");
+        }
+    }
+    // still exactly one entry — no per-precision duplication
+    assert_eq!(cache.stats().len, 1);
+}
+
+#[test]
+fn plan_cache_evicts_least_recently_used_at_capacity() {
+    let cache = PlanCache::new(2);
+    let mk = |seed: u64| {
+        EmbeddingConfig::new(StructureKind::Circulant, 8, 16, Nonlinearity::CosSin)
+            .with_seed(seed)
+    };
+    let a = cache.get_or_build(&mk(1));
+    let _b = cache.get_or_build(&mk(2));
+    // touching seed 1 makes seed 2 the LRU victim
+    assert!(Arc::ptr_eq(&a, &cache.get_or_build(&mk(1))));
+    let _c = cache.get_or_build(&mk(3));
+    let s = cache.stats();
+    assert_eq!(s.len, 2);
+    assert_eq!(s.evictions, 1);
+    // seed 1 survived (hit), seed 2 was evicted (fresh miss)
+    let misses_before = cache.stats().misses;
+    assert!(Arc::ptr_eq(&a, &cache.get_or_build(&mk(1))));
+    assert_eq!(cache.stats().misses, misses_before);
+    let _b2 = cache.get_or_build(&mk(2));
+    assert_eq!(cache.stats().misses, misses_before + 1);
+}

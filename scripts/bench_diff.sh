@@ -1,0 +1,94 @@
+#!/usr/bin/env bash
+# Compare two BENCH_engine.json reports and fail loudly when any
+# tracked ns/row entry regressed by more than the threshold.
+#
+#   scripts/bench_diff.sh BASELINE.json CURRENT.json [THRESHOLD_PCT]
+#
+# Tracked entries:
+#   results[]:    (family, precision) -> per_row_ns_per_row,
+#                                        batched_ns_per_row
+#   fused_pool[]: (family, batch)     -> staged_ns_per_row,
+#                                        fused_ns_per_row
+#
+# THRESHOLD_PCT defaults to 10 (also overridable via the
+# BENCH_DIFF_THRESHOLD environment variable). Entries present only in
+# the baseline produce a warning, never silence: dropping a tracked
+# metric should be a deliberate, visible act.
+set -euo pipefail
+
+if [ "$#" -lt 2 ] || [ "$#" -gt 3 ]; then
+  echo "usage: $0 BASELINE.json CURRENT.json [THRESHOLD_PCT]" >&2
+  exit 2
+fi
+
+BASELINE="$1"
+CURRENT="$2"
+THRESHOLD="${3:-${BENCH_DIFF_THRESHOLD:-10}}"
+
+for f in "$BASELINE" "$CURRENT"; do
+  if [ ! -f "$f" ]; then
+    echo "bench_diff: no such file: $f" >&2
+    exit 2
+  fi
+done
+
+python3 - "$BASELINE" "$CURRENT" "$THRESHOLD" <<'PY'
+import json
+import sys
+
+baseline_path, current_path, threshold_pct = sys.argv[1], sys.argv[2], sys.argv[3]
+threshold = float(threshold_pct) / 100.0
+
+
+def tracked(report):
+    """Flatten a BENCH_engine.json report into {entry-name: ns_per_row}."""
+    out = {}
+    for r in report.get("results", []):
+        key = f"{r['family']}/{r['precision']}"
+        out[f"{key}/per_row"] = float(r["per_row_ns_per_row"])
+        out[f"{key}/batched"] = float(r["batched_ns_per_row"])
+    for r in report.get("fused_pool", []):
+        key = f"{r['family']}/batch{r['batch']}"
+        out[f"{key}/staged"] = float(r["staged_ns_per_row"])
+        out[f"{key}/fused"] = float(r["fused_ns_per_row"])
+    return out
+
+
+with open(baseline_path) as f:
+    base = tracked(json.load(f))
+with open(current_path) as f:
+    cur = tracked(json.load(f))
+
+if not base:
+    print(f"bench_diff: no tracked entries in baseline {baseline_path}", file=sys.stderr)
+    sys.exit(2)
+
+regressions = []
+missing = []
+print(f"{'entry':42} {'baseline':>10} {'current':>10} {'delta':>8}")
+for name in sorted(base):
+    b = base[name]
+    if name not in cur:
+        missing.append(name)
+        continue
+    c = cur[name]
+    delta = (c - b) / b if b > 0 else 0.0
+    flag = " <-- REGRESSION" if delta > threshold else ""
+    print(f"{name:42} {b:9.1f}ns {c:9.1f}ns {delta:+7.1%}{flag}")
+    if delta > threshold:
+        regressions.append((name, b, c, delta))
+
+for name in missing:
+    print(f"bench_diff: WARNING: '{name}' tracked in baseline but absent "
+          f"from {current_path}", file=sys.stderr)
+
+if regressions:
+    print(f"\nbench_diff: FAIL — {len(regressions)} entr"
+          f"{'y' if len(regressions) == 1 else 'ies'} regressed more than "
+          f"{threshold_pct}% ns/row:", file=sys.stderr)
+    for name, b, c, delta in regressions:
+        print(f"  {name}: {b:.1f}ns -> {c:.1f}ns ({delta:+.1%})", file=sys.stderr)
+    sys.exit(1)
+
+print(f"\nbench_diff: OK — no tracked entry regressed more than {threshold_pct}%")
+PY

@@ -16,6 +16,15 @@ cargo test -q
 echo "== cargo bench --no-run (bench code must keep building)"
 cargo bench --no-run
 
+# Perf regression gate: when a baseline bench report is checked in (or
+# dropped next to the tree), regenerate BENCH_engine.json and fail on
+# >10% ns/row regressions of any tracked entry. No baseline -> no gate.
+if [ -f BENCH_engine.baseline.json ]; then
+  echo "== perf gate: bench_engine vs BENCH_engine.baseline.json"
+  cargo bench --bench bench_engine >/dev/null
+  scripts/bench_diff.sh BENCH_engine.baseline.json BENCH_engine.json
+fi
+
 # Lint gate, when the toolchain ships clippy. Warnings are denied;
 # the allowed lints are style idioms this codebase keeps on purpose
 # (index-driven FFT/butterfly loops, long plan-tuple types).
