@@ -26,9 +26,11 @@ mod common;
 
 use common::{bench, report};
 use std::sync::Arc;
+use strembed::data::synthetic::gaussian_cloud;
 use strembed::engine::{
     default_workers, BatchBuf, BatchExecutor, EmbeddingPlan, RowSource, StreamingPool, WireRows,
 };
+use strembed::index::{CodeIndex, IndexSpec};
 use strembed::pmodel::StructureKind;
 use strembed::rng::Rng;
 use strembed::transform::{EmbeddingConfig, Nonlinearity};
@@ -41,6 +43,21 @@ struct FamilyStat {
     per_row_ns: f64,
     /// ns per row through the batched split-complex path
     batched_ns: f64,
+}
+
+/// One index-layer row of the machine-readable report: Hamming top-10
+/// search ns/query at one corpus size, plus — on the first corpus row
+/// of each family only, since encoding cost is corpus-size-independent
+/// and is measured once — the sign-hash encode ns/row.
+struct IndexStat {
+    family: String,
+    m: usize,
+    corpus: usize,
+    /// ns per row through the batched sign-hash encode + bit pack
+    /// (one measurement per family, attached to its first corpus row)
+    encode_ns_per_row: Option<f64>,
+    /// ns per end-to-end `search` call (encode query + full scan)
+    search_ns_per_query: f64,
 }
 
 /// One staged-vs-fused serving-path row of the machine-readable report.
@@ -71,6 +88,7 @@ fn write_bench_json(
     batch: usize,
     stats: &[FamilyStat],
     fused: &[FusedStat],
+    index: &[IndexStat],
 ) {
     let mut s = String::new();
     s.push_str("{\n");
@@ -101,6 +119,19 @@ fn write_bench_json(
             r.staged_ns,
             r.fused_ns,
             r.staged_ns / r.fused_ns
+        ));
+    }
+    s.push_str("  ],\n  \"index\": [\n");
+    for (i, r) in index.iter().enumerate() {
+        let sep = if i + 1 == index.len() { "" } else { "," };
+        let encode = match r.encode_ns_per_row {
+            Some(e) => format!("\"encode_ns_per_row\": {e:.1}, "),
+            None => String::new(),
+        };
+        s.push_str(&format!(
+            "    {{\"family\": \"{}\", \"m\": {}, \"corpus\": {}, \
+             {encode}\"search_ns_per_query\": {:.1}}}{sep}\n",
+            r.family, r.m, r.corpus, r.search_ns_per_query
         ));
     }
     s.push_str("  ]\n}\n");
@@ -358,7 +389,71 @@ fn main() {
         );
     }
 
-    write_bench_json(&bench_json_path(), n, m, batch, &family_stats, &fused_stats);
+    // index layer: sign-hash encode ns/row and Hamming top-10 search
+    // ns/query at 1k and 100k corpus rows, per family ("stacked" is the
+    // m > n circulant — the acceptance family pair)
+    let mut index_stats: Vec<IndexStat> = Vec::new();
+    let mut index_results = Vec::new();
+    for (label, kind, im, inn) in [
+        ("circulant", StructureKind::Circulant, 64usize, 64usize),
+        ("stacked", StructureKind::Circulant, 256, 64),
+        ("toeplitz", StructureKind::Toeplitz, 256, 64),
+    ] {
+        let spec = IndexSpec::new(kind, im, inn).with_seed(3);
+        let codec = strembed::index::BinaryCodec::new(spec.config()).expect("sign codec");
+        let mut rng = Rng::new(17);
+        let encode_rows = gaussian_cloud(1_000, inn, &mut rng);
+        codec.encode_batch(&encode_rows); // warmup (plan + f64 twins)
+        let enc = bench(&format!("index {label} m={im} encode x1000"), || {
+            std::hint::black_box(codec.encode_batch(std::hint::black_box(&encode_rows)));
+        });
+        let mut encode_ns_per_row = Some(enc.ns_per_op / encode_rows.len() as f64);
+        index_results.push(enc);
+        for &corpus_rows in &[1_000usize, 100_000] {
+            let corpus = gaussian_cloud(corpus_rows, inn, &mut rng);
+            let index = CodeIndex::build_parallel(codec.clone(), &corpus, 0);
+            let q = corpus[corpus_rows / 2].clone();
+            index.search(&q, 10); // warmup
+            let s = bench(
+                &format!("index {label} m={im} search k=10 corpus={corpus_rows}"),
+                || {
+                    std::hint::black_box(index.search(std::hint::black_box(&q), 10));
+                },
+            );
+            index_stats.push(IndexStat {
+                family: label.to_string(),
+                m: im,
+                corpus: corpus_rows,
+                // encode is corpus-size-independent: measured once per
+                // family, reported on its first corpus row only so the
+                // perf gate tracks it as a single entry
+                encode_ns_per_row: encode_ns_per_row.take(),
+                search_ns_per_query: s.ns_per_op,
+            });
+            index_results.push(s);
+        }
+    }
+    report("engine index: sign-hash encode + hamming top-10 search", &index_results);
+    println!();
+    for s in &index_stats {
+        let encode = s
+            .encode_ns_per_row
+            .map_or(String::new(), |e| format!("encode {e:.0} ns/row, "));
+        println!(
+            "index {} m={} corpus={}: {encode}search {:.0} ns/query",
+            s.family, s.m, s.corpus, s.search_ns_per_query
+        );
+    }
+
+    write_bench_json(
+        &bench_json_path(),
+        n,
+        m,
+        batch,
+        &family_stats,
+        &fused_stats,
+        &index_stats,
+    );
 
     // streaming pool scaling on the acceptance config
     let cfg =

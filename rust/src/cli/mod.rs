@@ -4,6 +4,9 @@
 //! strembed coherence --structure circulant --n 5 [--m 5] [--i1 0 --i2 1]
 //! strembed eval --exp angular|gaussian|...|all [--out results/]
 //! strembed embed --structure circulant --f sign --m 8 --n 16 --seed 0 --input 0.1,0.2,...
+//! strembed index build --out index.bin --structure circulant --m 256 --n 64 --rows 10000
+//! strembed index query --index index.bin --input 0.1,0.2,... [--k 10]
+//! strembed index eval [--rows 10000] [--queries 50] [--k 10] [--ms 64,256]
 //! strembed list [--artifacts DIR]
 //! strembed serve [--addr 127.0.0.1:7878] [--native] [--artifacts DIR]
 //! ```
@@ -40,6 +43,7 @@ pub fn run(args: &Args) -> Result<String, String> {
         Some("coherence") => cmd_coherence(args),
         Some("eval") => cmd_eval(args),
         Some("embed") => cmd_embed(args),
+        Some("index") => cmd_index(args),
         Some("list") => cmd_list(args),
         Some("serve") => cmd_serve(args),
         Some(other) => Err(format!("unknown command '{other}'\n{}", usage())),
@@ -53,12 +57,18 @@ fn usage() -> String {
          \x20 coherence  --structure S --n N [--m M] [--i1 I --i2 J]   coherence graph + chi/mu stats\n\
          \x20 eval       --exp ID|all [--out DIR]                      run paper experiments\n\
          \x20 embed      --structure S --f F --m M --n N --input CSV   one-off embedding\n\
+         \x20 index      build --out FILE --structure S --m M --n N    binary-code similarity index\n\
+         \x20            \x20     --rows R [--bucket-bits B --probes P]  (sign hashes, Hamming top-k)\n\
+         \x20            query --index FILE --input CSV [--k 10]       nearest neighbors of a vector\n\
+         \x20            eval  [--rows R --queries Q --k K --ms CSV]   recall@k vs exact brute force\n\
          \x20 list       [--artifacts DIR]                             list AOT artifact variants\n\
          \x20 serve      [--addr A] [--native] [--precision f32|f64]   TCP embedding service\n\
          \x20            [--workers W] [--artifacts DIR]               (--native defaults to f32 on the\n\
-         \x20                                                          fused streaming pool; --workers 0\n\
+         \x20            [--index-rows N]                              fused streaming pool; --workers 0\n\
          \x20                                                          = one per core; library builders\n\
-         \x20                                                          default to f64)\n\n\
+         \x20                                                          default to f64; --index-rows > 0\n\
+         \x20                                                          also serves a demo 'default'\n\
+         \x20                                                          similarity index via INDEX)\n\n\
          experiments:\n",
     );
     for e in EXPERIMENTS {
@@ -140,6 +150,110 @@ fn cmd_embed(args: &Args) -> Result<String, String> {
     Ok(format!("{}\n", cells.join(",")))
 }
 
+/// `index build|query|eval` — the binary-code similarity-search
+/// surface (see [`crate::index`]). `build` hashes a synthetic
+/// clustered corpus into packed sign codes and persists the index;
+/// `query` re-opens it and prints the Hamming nearest neighbors of a
+/// vector; `eval` runs the recall@k harness against `exact::`
+/// brute-force angular top-k across families × code lengths.
+fn cmd_index(args: &Args) -> Result<String, String> {
+    match args.positional.first().map(String::as_str) {
+        Some("build") => cmd_index_build(args),
+        Some("query") => cmd_index_query(args),
+        Some("eval") => cmd_index_eval(args),
+        other => Err(format!(
+            "index needs a subcommand (build|query|eval), got {other:?}"
+        )),
+    }
+}
+
+fn index_spec_from_args(args: &Args) -> Result<crate::index::IndexSpec, String> {
+    if let Some(f) = args.options.get("f") {
+        if Nonlinearity::parse(f) != Some(Nonlinearity::Heaviside) {
+            // the parse-time rejection that keeps vector-valued f out
+            // of the scalar sign-hash hot loop
+            return Err(format!("index codes are sign hashes; --f {f} is not supported"));
+        }
+    }
+    let kind = StructureKind::parse(args.get("structure", "circulant"))
+        .ok_or("bad --structure")?;
+    let m = args.get_usize("m", 256)?;
+    let n = args.get_usize("n", 64)?;
+    let mut spec = crate::index::IndexSpec::new(kind, m, n)
+        .with_seed(args.get_u64("seed", 0)?)
+        .with_workers(args.get_usize("workers", 0)?);
+    if let Some(bits) = args.options.get("bucket-bits") {
+        let bits: usize = bits.parse().map_err(|e| format!("--bucket-bits: {e}"))?;
+        spec = spec.with_buckets(bits).with_probe_radius(args.get_usize("probes", 1)?);
+    }
+    Ok(spec)
+}
+
+fn cmd_index_build(args: &Args) -> Result<String, String> {
+    let out = args.require("out")?;
+    let spec = index_spec_from_args(args)?;
+    let rows = args.get_usize("rows", 10_000)?;
+    let mut rng = Rng::new(args.get_u64("data-seed", 1)?);
+    let corpus = crate::data::synthetic::clustered_rows(rows, spec.n, &mut rng);
+    let handle = crate::index::IndexHandle::build(spec, &corpus)?;
+    handle.save(std::path::Path::new(out))?;
+    Ok(format!(
+        "indexed {} rows: structure={} m={} n={} words/code={} buckets={} -> {}\n",
+        handle.len(),
+        handle.spec().structure.label(),
+        handle.spec().m,
+        handle.spec().n,
+        crate::index::words_for_bits(handle.bits()),
+        handle
+            .bucket_count()
+            .map_or("flat".to_string(), |b| b.to_string()),
+        out
+    ))
+}
+
+fn cmd_index_query(args: &Args) -> Result<String, String> {
+    let path = args.require("index")?;
+    let handle = crate::index::IndexHandle::load(std::path::Path::new(path))?;
+    let input = args.require("input")?;
+    let q: Vec<f64> = input
+        .split(',')
+        .map(|t| t.trim().parse::<f64>().map_err(|e| format!("bad input: {e}")))
+        .collect::<Result<_, _>>()?;
+    let k = args.get_usize("k", 10)?;
+    let result = handle.query(&q, k)?;
+    let mut out = format!(
+        "index {} ({} rows, m={}): top-{} of {} probed bucket(s)\nid,hamming,similarity\n",
+        path,
+        handle.len(),
+        handle.bits(),
+        k,
+        result.probed_buckets
+    );
+    for h in &result.hits {
+        out.push_str(&format!("{},{},{:.4}\n", h.id, h.hamming, h.similarity));
+    }
+    Ok(out)
+}
+
+fn cmd_index_eval(args: &Args) -> Result<String, String> {
+    let rows = args.get_usize("rows", 10_000)?;
+    let queries = args.get_usize("queries", 50)?;
+    let k = args.get_usize("k", 10)?;
+    let seed = args.get_u64("seed", 2016)?;
+    let ms: Vec<usize> = args
+        .get("ms", "64,256")
+        .split(',')
+        .map(|t| t.trim().parse::<usize>().map_err(|e| format!("bad --ms: {e}")))
+        .collect::<Result<_, _>>()?;
+    let report =
+        crate::index::recall_report(&crate::index::recall_cases(&ms), rows, queries, k, seed);
+    let title = format!(
+        "index recall@{k} vs exact:: brute-force angular top-{k} \
+         ({rows} clustered rows, {queries} queries)"
+    );
+    Ok(crate::index::recall_table(&title, k, &report).to_markdown())
+}
+
 fn cmd_list(args: &Args) -> Result<String, String> {
     let dir = match args.options.get("artifacts") {
         Some(d) => std::path::PathBuf::from(d),
@@ -201,6 +315,25 @@ fn cmd_serve(args: &Args) -> Result<String, String> {
     let coordinator = Arc::new(
         Coordinator::start(specs, CoordinatorConfig::default()).map_err(|e| format!("{e:#}"))?,
     );
+    // optional out-of-the-box similarity search: index a synthetic
+    // clustered corpus under the name "default" so the TCP `INDEX`
+    // command answers immediately (real deployments register corpora
+    // through Coordinator::build_index)
+    let index_rows = args.get_usize("index-rows", 0)?;
+    if index_rows > 0 {
+        let spec = crate::index::IndexSpec::new(
+            StructureKind::parse(args.get("structure", "circulant")).ok_or("bad --structure")?,
+            args.get_usize("m", 64)?,
+            args.get_usize("n", 128)?,
+        )
+        .with_seed(args.get_u64("seed", 2016)?);
+        let mut rng = Rng::new(args.get_u64("data-seed", 1)?);
+        let corpus = crate::data::synthetic::clustered_rows(index_rows, spec.n, &mut rng);
+        let rows = coordinator
+            .build_index("default", spec, &corpus)
+            .map_err(|e| e.to_string())?;
+        println!("index 'default' ready: {rows} rows");
+    }
     println!("serving {} variants on {addr}", coordinator.variant_names().len());
     let stop = Arc::new(AtomicBool::new(false));
     serve_tcp(coordinator, &addr, stop, |bound| println!("listening on {bound}"))
@@ -258,6 +391,52 @@ mod tests {
     fn eval_single_experiment() {
         let out = run_cmd("eval --exp fig1").unwrap();
         assert!(out.contains("F1"));
+    }
+
+    #[test]
+    fn index_build_query_roundtrip() {
+        let path = std::env::temp_dir()
+            .join(format!("strembed-cli-index-{}.idx", std::process::id()));
+        let built = run_cmd(&format!(
+            "index build --out {} --structure circulant --m 128 --n 32 --rows 120 \
+             --seed 3 --workers 2",
+            path.display()
+        ))
+        .unwrap();
+        assert!(built.contains("indexed 120 rows"), "{built}");
+        assert!(built.contains("m=128"), "{built}");
+        // query with a vector near the synthetic corpus: the CSV output
+        // must carry k ranked (id, hamming, similarity) rows
+        let input: Vec<String> = (0..32).map(|j| format!("{}", (j as f64 - 16.0) / 16.0)).collect();
+        let out = run_cmd(&format!(
+            "index query --index {} --input {} --k 5",
+            path.display(),
+            input.join(",")
+        ))
+        .unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(out.contains("id,hamming,similarity"), "{out}");
+        assert_eq!(out.lines().count(), 2 + 5, "{out}");
+    }
+
+    #[test]
+    fn index_eval_reports_recall_per_family() {
+        let out = run_cmd("index eval --rows 120 --queries 8 --k 5 --ms 64").unwrap();
+        assert!(out.contains("recall@5"), "{out}");
+        assert!(out.contains("circulant"), "{out}");
+        assert!(out.contains("stacked"), "{out}");
+    }
+
+    #[test]
+    fn index_rejects_bad_usage() {
+        assert!(run_cmd("index").is_err());
+        assert!(run_cmd("index frobnicate").is_err());
+        assert!(run_cmd("index build --structure circulant").is_err(), "--out is required");
+        assert!(
+            run_cmd("index build --out /tmp/x.idx --f rff").is_err(),
+            "non-sign nonlinearities are rejected at parse time"
+        );
+        assert!(run_cmd("index query --index /definitely/not/there.idx --input 1").is_err());
     }
 
     #[test]

@@ -22,6 +22,14 @@ pub struct Metrics {
     /// accumulated shadow error extremes/sums (sampled ~1/256 of f32
     /// traffic, so the lock is nearly always uncontended)
     shadow: Mutex<ShadowErr>,
+    /// similarity indexes built and registered
+    index_builds: AtomicU64,
+    /// index queries served (batch queries count every row)
+    index_queries: AtomicU64,
+    /// buckets probed across all index queries (flat scan = 1/query)
+    index_probed_buckets: AtomicU64,
+    /// wall nanoseconds spent in index searches
+    index_query_ns: AtomicU64,
 }
 
 #[derive(Debug, Default, Clone, Copy)]
@@ -64,6 +72,14 @@ pub struct MetricsSnapshot {
     pub shadow_mean_rel_err: f64,
     /// max relative error seen on any shadow-checked feature
     pub shadow_max_rel_err: f64,
+    /// similarity indexes built and registered
+    pub index_builds: u64,
+    /// index queries served (batch queries count every row)
+    pub index_queries: u64,
+    /// mean buckets probed per index query (flat scan = 1)
+    pub index_mean_probed_buckets: f64,
+    /// mean wall nanoseconds per index query
+    pub index_ns_per_query: f64,
 }
 
 const RESERVOIR: usize = 100_000;
@@ -82,6 +98,10 @@ impl Metrics {
             latencies: Mutex::new(Vec::new()),
             shadow_samples: AtomicU64::new(0),
             shadow: Mutex::new(ShadowErr::default()),
+            index_builds: AtomicU64::new(0),
+            index_queries: AtomicU64::new(0),
+            index_probed_buckets: AtomicU64::new(0),
+            index_query_ns: AtomicU64::new(0),
         }
     }
 
@@ -125,6 +145,20 @@ impl Metrics {
         g.max = g.max.max(max_rel_err);
     }
 
+    /// Record a similarity-index build.
+    pub fn on_index_build(&self) {
+        self.index_builds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a served index search: `queries` rows answered,
+    /// `probed_buckets` buckets scanned in total, `ns` wall nanoseconds
+    /// spent.
+    pub fn on_index_query(&self, queries: usize, probed_buckets: usize, ns: u64) {
+        self.index_queries.fetch_add(queries as u64, Ordering::Relaxed);
+        self.index_probed_buckets.fetch_add(probed_buckets as u64, Ordering::Relaxed);
+        self.index_query_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
     /// Take a snapshot.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let lat = self.latencies.lock().unwrap().clone();
@@ -134,6 +168,14 @@ impl Metrics {
         let rows = self.batch_rows.load(Ordering::Relaxed);
         let shadow_samples = self.shadow_samples.load(Ordering::Relaxed);
         let shadow = *self.shadow.lock().unwrap();
+        let index_queries = self.index_queries.load(Ordering::Relaxed);
+        let per_query = |total: u64| {
+            if index_queries > 0 {
+                total as f64 / index_queries as f64
+            } else {
+                0.0
+            }
+        };
         MetricsSnapshot {
             uptime,
             submitted: self.submitted.load(Ordering::Relaxed),
@@ -153,6 +195,12 @@ impl Metrics {
                 0.0
             },
             shadow_max_rel_err: shadow.max,
+            index_builds: self.index_builds.load(Ordering::Relaxed),
+            index_queries,
+            index_mean_probed_buckets: per_query(
+                self.index_probed_buckets.load(Ordering::Relaxed),
+            ),
+            index_ns_per_query: per_query(self.index_query_ns.load(Ordering::Relaxed)),
         }
     }
 }
@@ -169,7 +217,9 @@ impl std::fmt::Display for MetricsSnapshot {
             f,
             "up={:.1}s submitted={} completed={} rejected={} failed={} batches={} \
              mean_batch={:.2} rps={:.1} p50={:.3}ms p90={:.3}ms p99={:.3}ms \
-             shadow_samples={} shadow_mean_err={:.2e} shadow_max_err={:.2e}",
+             shadow_samples={} shadow_mean_err={:.2e} shadow_max_err={:.2e} \
+             index_builds={} index_queries={} index_mean_probed={:.1} \
+             index_ns_per_query={:.0}",
             self.uptime,
             self.submitted,
             self.completed,
@@ -183,7 +233,11 @@ impl std::fmt::Display for MetricsSnapshot {
             self.p99 * 1e3,
             self.shadow_samples,
             self.shadow_mean_rel_err,
-            self.shadow_max_rel_err
+            self.shadow_max_rel_err,
+            self.index_builds,
+            self.index_queries,
+            self.index_mean_probed_buckets,
+            self.index_ns_per_query
         )
     }
 }
@@ -218,6 +272,21 @@ mod tests {
         assert!(text.contains("completed=1"));
         assert!(text.contains("p99"));
         assert!(text.contains("shadow_samples=0"));
+    }
+
+    #[test]
+    fn index_counters_average_per_query() {
+        let m = Metrics::new();
+        m.on_index_build();
+        m.on_index_query(4, 12, 8_000);
+        m.on_index_query(1, 3, 2_000);
+        let s = m.snapshot();
+        assert_eq!(s.index_builds, 1);
+        assert_eq!(s.index_queries, 5);
+        assert!((s.index_mean_probed_buckets - 3.0).abs() < 1e-12);
+        assert!((s.index_ns_per_query - 2_000.0).abs() < 1e-9);
+        let text = format!("{s}");
+        assert!(text.contains("index_queries=5"), "{text}");
     }
 
     #[test]

@@ -34,9 +34,15 @@
 //! rows shadow-checked against the shared plan's f64 executor and the
 //! observed relative error exported via [`Metrics`]; at
 //! [`Precision::F64`] (default) each element is widened on the fly
-//! inside the tile transpose and executed at the oracle precision. See
-//! `ARCHITECTURE.md` at the repo root for the full layer map
-//! (rng → pmodel → dsp → engine → coordinator).
+//! inside the tile transpose and executed at the oracle precision.
+//!
+//! Alongside `embed`, the coordinator serves **similarity search**:
+//! named [`IndexSpec`]/[`IndexHandle`] pairs (built over a corpus via
+//! [`Coordinator::build_index`], queried via
+//! [`Coordinator::index_query_batch`] or the TCP `INDEX` command) with
+//! query counts, probed buckets and ns/query exported through
+//! [`Metrics`]. See `ARCHITECTURE.md` at the repo root for the full
+//! layer map (rng → pmodel → dsp → engine → index → coordinator).
 
 mod backend;
 mod batcher;
@@ -45,6 +51,10 @@ mod server;
 mod tcp;
 
 pub use crate::engine::Precision;
+// the index layer's spec/handle pair sits at the same level as
+// BackendSpec/Backend: plain-data description, built object served by
+// name — re-exported so serving callers see one surface
+pub use crate::index::{IndexHandle, IndexSpec, QueryResult, SearchHit};
 pub use backend::{Backend, BackendSpec, NativeBackend, SHADOW_SAMPLE_PERIOD};
 pub use batcher::{BatchQueue, QueueError};
 pub use metrics::{Metrics, MetricsSnapshot};

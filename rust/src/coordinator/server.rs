@@ -9,9 +9,10 @@
 use super::backend::BackendSpec;
 use super::batcher::{BatchQueue, QueueError};
 use super::metrics::Metrics;
+use crate::index::{IndexHandle, IndexSpec, SearchHit};
 use std::collections::HashMap;
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -51,6 +52,8 @@ pub struct EmbedResponse {
 pub enum EmbedError {
     /// no such variant registered
     UnknownVariant(String),
+    /// no such similarity index registered
+    UnknownIndex(String),
     /// queue full (backpressure)
     Overloaded,
     /// coordinator shutting down
@@ -63,6 +66,7 @@ impl std::fmt::Display for EmbedError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             EmbedError::UnknownVariant(v) => write!(f, "unknown variant '{v}'"),
+            EmbedError::UnknownIndex(v) => write!(f, "unknown index '{v}'"),
             EmbedError::Overloaded => write!(f, "queue full"),
             EmbedError::Closed => write!(f, "coordinator closed"),
             EmbedError::Backend(e) => write!(f, "backend error: {e}"),
@@ -83,11 +87,19 @@ struct Variant {
     spec: BackendSpec,
 }
 
-/// The embedding-serving coordinator.
+/// The embedding-serving coordinator. Besides the per-variant `embed`
+/// queues it owns a registry of named similarity indexes
+/// ([`crate::index::IndexHandle`]) served through
+/// [`Coordinator::index_query_batch`] with query/probe/latency metrics
+/// exported alongside the embed counters.
 pub struct Coordinator {
     variants: HashMap<String, Variant>,
     workers: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
+    /// named similarity indexes; searches run on the caller's thread
+    /// (scans are read-only over `Arc`'d handles, so queries never
+    /// queue behind embed traffic)
+    indexes: Mutex<HashMap<String, Arc<IndexHandle>>>,
 }
 
 impl Coordinator {
@@ -161,7 +173,7 @@ impl Coordinator {
             workers.push(handle);
             variants.insert(name, Variant { queue, spec });
         }
-        Ok(Coordinator { variants, workers, metrics })
+        Ok(Coordinator { variants, workers, metrics, indexes: Mutex::new(HashMap::new()) })
     }
 
     /// Registered variant names.
@@ -216,6 +228,67 @@ impl Coordinator {
     ) -> Result<EmbedResponse, EmbedError> {
         let rx = self.submit(variant, vector)?;
         rx.recv().map_err(|_| EmbedError::Closed)?
+    }
+
+    /// Build a similarity index over `corpus` (encoding sharded across
+    /// the streaming pool per `spec.workers`) and register it under
+    /// `name`, replacing any previous index of that name.
+    pub fn build_index(
+        &self,
+        name: &str,
+        spec: IndexSpec,
+        corpus: &[Vec<f64>],
+    ) -> Result<usize, EmbedError> {
+        let handle = IndexHandle::build(spec, corpus).map_err(EmbedError::Backend)?;
+        let rows = handle.len();
+        self.register_index(name, handle);
+        Ok(rows)
+    }
+
+    /// Register an already-built index under `name`.
+    pub fn register_index(&self, name: &str, handle: IndexHandle) {
+        self.indexes.lock().unwrap().insert(name.to_string(), Arc::new(handle));
+        self.metrics.on_index_build();
+    }
+
+    /// Registered index names.
+    pub fn index_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.indexes.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// A registered index handle.
+    pub fn index(&self, name: &str) -> Option<Arc<IndexHandle>> {
+        self.indexes.lock().unwrap().get(name).cloned()
+    }
+
+    /// Serve one index query (f32 wire payload, widened once at the
+    /// index boundary — codes are computed at the f64 oracle
+    /// precision).
+    pub fn index_query(
+        &self,
+        name: &str,
+        query: Vec<f32>,
+        k: usize,
+    ) -> Result<Vec<SearchHit>, EmbedError> {
+        let mut hits = self.index_query_batch(name, std::slice::from_ref(&query), k)?;
+        Ok(hits.pop().expect("one query in, one hit list out"))
+    }
+
+    /// Serve a batch of index queries, recording query count, probed
+    /// buckets and ns/query in the coordinator [`Metrics`].
+    pub fn index_query_batch(
+        &self,
+        name: &str,
+        queries: &[Vec<f32>],
+        k: usize,
+    ) -> Result<Vec<Vec<SearchHit>>, EmbedError> {
+        let handle = self.index(name).ok_or_else(|| EmbedError::UnknownIndex(name.to_string()))?;
+        let started = Instant::now();
+        let (hits, probed) = handle.query_batch_f32(queries, k).map_err(EmbedError::Backend)?;
+        self.metrics.on_index_query(queries.len(), probed, started.elapsed().as_nanos() as u64);
+        Ok(hits)
     }
 
     /// Metrics handle.
@@ -322,5 +395,64 @@ mod tests {
         let c = native_coordinator(4, 64);
         c.embed_blocking("circ-sign", vec![0.0; 16]).unwrap();
         c.shutdown();
+    }
+
+    #[test]
+    fn index_build_and_batch_query_export_metrics() {
+        use crate::data::synthetic::clustered_cloud;
+        use crate::pmodel::StructureKind;
+        use crate::rng::Rng;
+
+        let c = native_coordinator(8, 64);
+        let mut rng = Rng::new(9);
+        let corpus = clustered_cloud(6, 10, 16, 0.05, &mut rng);
+        let spec = crate::index::IndexSpec::new(StructureKind::Circulant, 64, 16)
+            .with_seed(4)
+            .with_workers(2);
+        let rows = c.build_index("nn", spec, &corpus).unwrap();
+        assert_eq!(rows, 60);
+        assert_eq!(c.index_names(), vec!["nn".to_string()]);
+        assert!(c.index("nn").is_some());
+
+        // query with the first member of three different clusters: the
+        // lowest id of a cluster wins every (hamming, id) tie-break, so
+        // the self-match must rank first
+        let queries: Vec<Vec<f32>> = [0usize, 10, 20]
+            .iter()
+            .map(|&i| corpus[i].iter().map(|&v| v as f32).collect())
+            .collect();
+        let hits = c.index_query_batch("nn", &queries, 5).unwrap();
+        assert_eq!(hits.len(), 3);
+        for (qi, h) in hits.iter().enumerate() {
+            assert_eq!(h.len(), 5);
+            assert_eq!(h[0].id, qi * 10, "query {qi}");
+            assert!(h[0].similarity >= h[4].similarity);
+        }
+        let single = c.index_query("nn", queries[1].clone(), 5).unwrap();
+        assert_eq!(single, hits[1]);
+
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.index_builds, 1);
+        assert_eq!(snap.index_queries, 4);
+        assert!(snap.index_mean_probed_buckets >= 1.0);
+        assert!(snap.index_ns_per_query > 0.0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn index_errors_are_reported() {
+        let c = native_coordinator(4, 64);
+        assert!(matches!(
+            c.index_query("nope", vec![0.0; 16], 3),
+            Err(EmbedError::UnknownIndex(_))
+        ));
+        let spec =
+            crate::index::IndexSpec::new(crate::pmodel::StructureKind::Circulant, 32, 16);
+        c.build_index("nn", spec, &[vec![0.1; 16]; 12]).unwrap();
+        // wrong query dimension surfaces as a backend error
+        assert!(matches!(
+            c.index_query("nn", vec![0.0; 15], 3),
+            Err(EmbedError::Backend(_))
+        ));
     }
 }

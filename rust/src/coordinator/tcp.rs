@@ -4,6 +4,9 @@
 //! → EMBED <variant> <f32,f32,...>
 //! ← OK <f32,f32,...>
 //! ← ERR <message>
+//! → INDEX <name> <k> <f32,f32,...>
+//! ← OK <id:hamming:similarity,...>     (ranked nearest neighbors)
+//! → INDEXES             ← OK <name,name,...>
 //! → VARIANTS            ← OK <name,name,...>
 //! → METRICS             ← OK <snapshot text>
 //! → QUIT                (closes the connection)
@@ -67,27 +70,53 @@ fn handle_conn(stream: TcpStream, c: &Coordinator) -> std::io::Result<()> {
     }
 }
 
+fn parse_vector(csv: &str) -> Result<Vec<f32>, String> {
+    csv.split(',')
+        .map(|t| t.trim().parse::<f32>().map_err(|e| format!("bad vector: {e}")))
+        .collect()
+}
+
 fn dispatch(line: &str, c: &Coordinator) -> String {
-    let mut parts = line.splitn(3, ' ');
-    match parts.next().unwrap_or("") {
+    let (cmd, rest) = line.split_once(' ').unwrap_or((line, ""));
+    match cmd {
         "QUIT" => String::new(),
         "VARIANTS" => format!("OK {}", c.variant_names().join(",")),
+        "INDEXES" => format!("OK {}", c.index_names().join(",")),
         "METRICS" => format!("OK {}", c.metrics().snapshot()),
         "EMBED" => {
-            let Some(variant) = parts.next() else {
-                return "ERR missing variant".into();
+            let Some((variant, csv)) = rest.split_once(' ') else {
+                return "ERR usage: EMBED <variant> <f32,f32,...>".into();
             };
-            let Some(csv) = parts.next() else {
-                return "ERR missing vector".into();
-            };
-            let vector: Result<Vec<f32>, _> =
-                csv.split(',').map(|t| t.trim().parse::<f32>()).collect();
-            match vector {
-                Err(e) => format!("ERR bad vector: {e}"),
+            match parse_vector(csv) {
+                Err(e) => format!("ERR {e}"),
                 Ok(v) => match c.embed_blocking(variant, v) {
                     Ok(resp) => {
                         let out: Vec<String> =
                             resp.features.iter().map(|x| format!("{x}")).collect();
+                        format!("OK {}", out.join(","))
+                    }
+                    Err(e) => format!("ERR {e}"),
+                },
+            }
+        }
+        "INDEX" => {
+            let mut parts = rest.splitn(3, ' ');
+            let (Some(name), Some(k), Some(csv)) =
+                (parts.next(), parts.next(), parts.next())
+            else {
+                return "ERR usage: INDEX <name> <k> <f32,f32,...>".into();
+            };
+            let Ok(k) = k.parse::<usize>() else {
+                return format!("ERR bad k '{k}'");
+            };
+            match parse_vector(csv) {
+                Err(e) => format!("ERR {e}"),
+                Ok(v) => match c.index_query(name, v, k) {
+                    Ok(hits) => {
+                        let out: Vec<String> = hits
+                            .iter()
+                            .map(|h| format!("{}:{}:{:.4}", h.id, h.hamming, h.similarity))
+                            .collect();
                         format!("OK {}", out.join(","))
                     }
                     Err(e) => format!("ERR {e}"),
@@ -130,6 +159,50 @@ mod tests {
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
         line.trim().to_string()
+    }
+
+    #[test]
+    fn tcp_index_query_roundtrip() {
+        let spec = BackendSpec::native("circulant", "sign", 4, 8, 1).unwrap();
+        let c = Arc::new(
+            Coordinator::start(vec![("v".into(), spec)], CoordinatorConfig::default()).unwrap(),
+        );
+        let corpus: Vec<Vec<f64>> = (0..20)
+            .map(|i| (0..8).map(|j| ((i * 3 + j) % 7) as f64 - 3.0).collect())
+            .collect();
+        let ispec = crate::index::IndexSpec::new(
+            crate::pmodel::StructureKind::Circulant,
+            64,
+            8,
+        )
+        .with_seed(2);
+        c.build_index("nn", ispec, &corpus).unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let (tx, rx) = mpsc::channel();
+        let srv = c.clone();
+        let h = std::thread::spawn(move || {
+            serve_tcp(srv, "127.0.0.1:0", stop2, move |addr| {
+                let _ = tx.send(addr);
+            })
+            .unwrap();
+        });
+        let addr = rx.recv().unwrap();
+        assert_eq!(roundtrip(addr, "INDEXES"), "OK nn");
+        let csv: Vec<String> = corpus[4].iter().map(|x| x.to_string()).collect();
+        let reply = roundtrip(addr, &format!("INDEX nn 3 {}", csv.join(",")));
+        assert!(reply.starts_with("OK "), "{reply}");
+        let first = reply[3..].split(',').next().unwrap();
+        let fields: Vec<&str> = first.split(':').collect();
+        assert_eq!(fields[0], "4", "self-match ranks first: {reply}");
+        assert_eq!(fields[1], "0");
+        assert!(roundtrip(addr, "INDEX nope 3 1,2,3,4,5,6,7,8").starts_with("ERR unknown index"));
+        assert!(roundtrip(addr, "INDEX nn x 1").starts_with("ERR bad k"));
+        assert!(roundtrip(addr, "INDEX nn").starts_with("ERR usage"));
+        let m = roundtrip(addr, "METRICS");
+        assert!(m.contains("index_queries=1"), "{m}");
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap();
     }
 
     #[test]

@@ -12,4 +12,4 @@ pub mod synthetic;
 
 pub use corpus::Corpus;
 pub use libsvm::{parse_libsvm, LibsvmRecord};
-pub use synthetic::{clustered_pairs, gaussian_cloud, unit_sphere};
+pub use synthetic::{clustered_cloud, clustered_pairs, clustered_rows, gaussian_cloud, unit_sphere};

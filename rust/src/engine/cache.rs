@@ -23,7 +23,18 @@ use std::sync::{Arc, Mutex, OnceLock};
 /// Default capacity of the process-wide [`PlanCache::global`] cache.
 /// Plans are a few times `n` floats each plus FFT tables, so even at
 /// serving sizes this bounds the cache to a handful of megabytes.
+/// Overridable at process start via [`PLAN_CACHE_CAPACITY_ENV`] —
+/// index workloads holding many `(family, m)` hash configurations at
+/// once raise it so corpus plans don't thrash serving plans; processes
+/// on tight memory lower it.
 pub const GLOBAL_PLAN_CACHE_CAPACITY: usize = 64;
+
+/// Environment variable overriding the [`PlanCache::global`] capacity
+/// (read once, at the first `global()` call). Values that don't parse
+/// as an integer ≥ 1 are ignored in favor of
+/// [`GLOBAL_PLAN_CACHE_CAPACITY`]. Deployments that need a per-cache
+/// knob instead build their own [`PlanCache::new`].
+pub const PLAN_CACHE_CAPACITY_ENV: &str = "STREMBED_PLAN_CACHE_CAPACITY";
 
 /// Everything that determines a sampled plan — two configs with equal
 /// keys produce bit-identical embeddings (sampling is seeded).
@@ -98,14 +109,34 @@ impl PlanCache {
         }
     }
 
-    /// The process-wide shared cache
-    /// (capacity [`GLOBAL_PLAN_CACHE_CAPACITY`]): serving backends,
-    /// `engine::embed_points{,_f32}` and the CLI all pull plans from
-    /// here, so repeated configurations sample exactly once per
-    /// process.
+    /// The process-wide shared cache (capacity
+    /// [`GLOBAL_PLAN_CACHE_CAPACITY`], overridable through
+    /// [`PLAN_CACHE_CAPACITY_ENV`]): serving backends, similarity
+    /// indexes, `engine::embed_points{,_f32}` and the CLI all pull
+    /// plans from here, so repeated configurations sample exactly once
+    /// per process.
     pub fn global() -> &'static PlanCache {
         static GLOBAL: OnceLock<PlanCache> = OnceLock::new();
-        GLOBAL.get_or_init(|| PlanCache::new(GLOBAL_PLAN_CACHE_CAPACITY))
+        GLOBAL.get_or_init(|| {
+            PlanCache::new(PlanCache::env_capacity().unwrap_or(GLOBAL_PLAN_CACHE_CAPACITY))
+        })
+    }
+
+    /// The capacity override from [`PLAN_CACHE_CAPACITY_ENV`], if the
+    /// variable holds an integer ≥ 1 (anything else is ignored — a
+    /// malformed deployment knob must not take the process down).
+    pub fn env_capacity() -> Option<usize> {
+        std::env::var(PLAN_CACHE_CAPACITY_ENV)
+            .ok()?
+            .trim()
+            .parse::<usize>()
+            .ok()
+            .filter(|&c| c >= 1)
+    }
+
+    /// Maximum number of cached plans.
+    pub fn capacity(&self) -> usize {
+        self.capacity
     }
 
     /// The plan for `cfg`, building (and caching) it on first use.
@@ -216,6 +247,33 @@ mod tests {
         let misses_before = cache.stats().misses;
         let _b2 = cache.get_or_build(&cfg(2));
         assert_eq!(cache.stats().misses, misses_before + 1);
+    }
+
+    #[test]
+    fn env_capacity_override_parses_and_drives_eviction() {
+        // this is the only test touching the variable, and caches built
+        // from it are local — the worst a parallel PlanCache::global()
+        // init can observe is a smaller capacity, which only costs
+        // rebuild misses
+        std::env::set_var(PLAN_CACHE_CAPACITY_ENV, "2");
+        assert_eq!(PlanCache::env_capacity(), Some(2));
+        let cache = PlanCache::new(PlanCache::env_capacity().expect("override set"));
+        assert_eq!(cache.capacity(), 2);
+        // many (family, m) index configs against a small serving-sized
+        // cache: the override must bound occupancy via LRU eviction
+        for seed in 0..5 {
+            let _ = cache.get_or_build(&cfg(seed));
+        }
+        let s = cache.stats();
+        assert_eq!(s.len, 2);
+        assert_eq!(s.evictions, 3);
+        // malformed and out-of-range values fall back to the default
+        std::env::set_var(PLAN_CACHE_CAPACITY_ENV, "0");
+        assert_eq!(PlanCache::env_capacity(), None);
+        std::env::set_var(PLAN_CACHE_CAPACITY_ENV, "not-a-number");
+        assert_eq!(PlanCache::env_capacity(), None);
+        std::env::remove_var(PLAN_CACHE_CAPACITY_ENV);
+        assert_eq!(PlanCache::env_capacity(), None);
     }
 
     #[test]

@@ -27,9 +27,11 @@
 //!        ▼
 //!   StreamingPool<S>     persistent per-core workers (std threads +
 //!                        channels), each pinning one BatchExecutor for
-//!                        the pool's lifetime; dispatched row ranges of
-//!                        any RowSource are transposed directly into
-//!                        the workers' split-complex tiles
+//!                        the pool's lifetime; each dispatch publishes
+//!                        a fixed chunk grid over any RowSource that
+//!                        workers claim lock-free (range stealing), and
+//!                        claimed rows are transposed directly into the
+//!                        workers' split-complex tiles
 //! ```
 //!
 //! [`BatchBuf`] is the engine's SoA interchange format: one contiguous
@@ -63,9 +65,9 @@ mod pool;
 pub use batch::{
     BatchBuf, BatchExecutor, RowSource, WireRows, BATCH_KERNEL_MAX_LANES, BATCH_KERNEL_MIN_ROWS,
 };
-pub use cache::{PlanCache, PlanCacheStats, GLOBAL_PLAN_CACHE_CAPACITY};
+pub use cache::{PlanCache, PlanCacheStats, GLOBAL_PLAN_CACHE_CAPACITY, PLAN_CACHE_CAPACITY_ENV};
 pub use plan::EmbeddingPlan;
-pub use pool::{default_workers, Shard, StreamingPool, MIN_SHARD_ROWS};
+pub use pool::{default_workers, Shard, StreamingPool, MIN_SHARD_ROWS, STEAL_CHUNKS_PER_WORKER};
 
 use crate::dsp::Scalar;
 use crate::pmodel::{BatchMatvecScratch, MatvecScratch, PModel};

@@ -11,8 +11,19 @@
 //! payloads themselves ([`super::WireRows`]) — which each worker
 //! transposes directly into its lane-major split-complex tiles. Zero
 //! staging copies between the queue and the butterflies.
+//!
+//! Work distribution is *range-stealing*: a dispatch publishes one
+//! fixed chunk grid plus an atomic chunk-claim counter, and every
+//! worker loops claiming the next chunk until the grid is exhausted.
+//! Ragged chunk finish times — which index builds over non-uniform
+//! corpora and mixed-traffic serving hit constantly — therefore
+//! rebalance onto whichever workers are free, without locks and
+//! without changing a single output bit (the chunk grid, not the
+//! claimer, determines each shard).
 
-use super::{BatchBuf, BatchExecutor, EmbeddingPlan, EngineScalar, RowSource};
+use super::{
+    BatchBuf, BatchExecutor, EmbeddingPlan, EngineScalar, RowSource, BATCH_KERNEL_MAX_LANES,
+};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -23,17 +34,39 @@ use std::thread::JoinHandle;
 /// Dispatch packs ranges of at least this size (except the tail).
 pub const MIN_SHARD_ROWS: usize = 8;
 
-/// One contiguous row range of a row source, dispatched to a worker.
-struct Job<S: EngineScalar> {
+/// Chunk granularity of the range-stealing dispatch: a *large*
+/// dispatch is cut into about this many claimable chunks per worker,
+/// so a worker that finishes early keeps claiming chunks instead of
+/// idling while a straggler drains an oversized static share — the
+/// straggler strands at most one chunk (1/(4·workers) of the batch)
+/// versus a full 1/workers share under a fixed split. Applied only
+/// while chunks stay at least one full kernel tile
+/// ([`BATCH_KERNEL_MAX_LANES`] rows); smaller dispatches keep
+/// tile-sized chunks so stealing granularity never sacrifices the
+/// split-complex lane amortization.
+pub const STEAL_CHUNKS_PER_WORKER: usize = 4;
+
+/// One dispatched batch, shared by every worker it was announced to.
+/// The rows `0..rows` are cut into fixed chunks of `chunk` rows;
+/// workers *steal* chunks by bumping the lock-free `next_chunk`
+/// counter, so ragged per-chunk finish times (non-uniform corpora,
+/// busy cores) rebalance automatically. The chunk grid is fixed up
+/// front, so the shard count — and, the kernels being
+/// lane-count-independent, every output bit — is identical no matter
+/// which worker claims which chunk.
+struct Dispatch<S: EngineScalar> {
     input: Arc<dyn RowSource<S> + Send + Sync>,
-    start: usize,
-    end: usize,
+    rows: usize,
+    chunk: usize,
+    /// next unclaimed chunk index (atomic chunk-claim counter)
+    next_chunk: AtomicUsize,
     reply: mpsc::Sender<Shard<S>>,
 }
 
-/// What a worker receives: a range to embed, or the close signal.
+/// What a worker receives: a dispatch to steal chunks from, or the
+/// close signal.
 enum Msg<S: EngineScalar> {
-    Job(Job<S>),
+    Job(Arc<Dispatch<S>>),
     Close,
 }
 
@@ -99,14 +132,26 @@ impl<S: EngineScalar> StreamingPool<S> {
                             Msg::Job(job) => job,
                             Msg::Close => break,
                         };
-                        let rows = job.end - job.start;
-                        let mut feats = vec![S::ZERO; rows * d];
-                        // whole range through one batched planned pass
-                        // (split-complex kernels for ≥ 2 rows), rows
-                        // read directly from the shared source
-                        exec.embed_range_into(&*job.input, job.start, job.end, &mut feats);
-                        // receiver may have gone away on pool teardown
-                        let _ = job.reply.send(Shard { start: job.start, feats });
+                        // steal chunks until the dispatch runs dry: the
+                        // atomic claim is the only synchronization, so
+                        // an early finisher immediately picks up work a
+                        // slower peer would otherwise still be holding
+                        loop {
+                            let c = job.next_chunk.fetch_add(1, Ordering::Relaxed);
+                            let start = c * job.chunk;
+                            if start >= job.rows {
+                                break;
+                            }
+                            let end = (start + job.chunk).min(job.rows);
+                            let mut feats = vec![S::ZERO; (end - start) * d];
+                            // whole chunk through one batched planned
+                            // pass (split-complex kernels for ≥ 2
+                            // rows), rows read directly from the
+                            // shared source
+                            exec.embed_range_into(&*job.input, start, end, &mut feats);
+                            // receiver may have gone away on teardown
+                            let _ = job.reply.send(Shard { start, feats });
+                        }
                     }
                 })
                 .expect("spawn engine worker");
@@ -132,11 +177,18 @@ impl<S: EngineScalar> StreamingPool<S> {
         self.out_dim
     }
 
-    /// Dispatch every row of `input` as contiguous ranges across the
-    /// workers (at least [`MIN_SHARD_ROWS`] rows per shard, so tiny
-    /// batches take a single channel hop instead of fanning out).
-    /// Returns the number of shards sent; each arrives on `reply`
-    /// exactly once, in completion order.
+    /// Dispatch every row of `input` as a shared chunk grid the workers
+    /// *steal* from through a lock-free atomic claim counter — a worker
+    /// that finishes its chunk early immediately claims the next
+    /// instead of idling behind a straggler. Large dispatches get about
+    /// [`STEAL_CHUNKS_PER_WORKER`] chunks per worker (each at least one
+    /// full kernel tile); smaller ones keep tile-sized chunks of at
+    /// least [`MIN_SHARD_ROWS`] rows. Returns the number of shards
+    /// that will arrive on
+    /// `reply` — exactly one per chunk, in completion order. The chunk
+    /// grid is fixed up front, so the shard count and (the batched
+    /// kernels being lane-count-independent) every output bit are
+    /// independent of which worker claims which chunk.
     ///
     /// # Panics
     ///
@@ -156,18 +208,38 @@ impl<S: EngineScalar> StreamingPool<S> {
         if rows == 0 {
             return 0;
         }
-        let shards = self.txs.len().min(rows.div_ceil(MIN_SHARD_ROWS)).max(1);
-        let chunk = rows.div_ceil(shards);
+        let workers = self.txs.len();
+        let raw = rows.div_ceil(workers * STEAL_CHUNKS_PER_WORKER);
+        let chunk = if raw >= BATCH_KERNEL_MAX_LANES {
+            // large dispatch: ~4 claimable chunks per worker, each
+            // spanning at least one full kernel tile
+            raw
+        } else {
+            // smaller dispatches: whole kernel tiles (≥ MIN_SHARD_ROWS)
+            // so stealing granularity never cuts into the batched
+            // kernels' lane amortization; the claim counter still
+            // rebalances whole chunks away from busy workers
+            rows.div_ceil(workers).clamp(MIN_SHARD_ROWS, BATCH_KERNEL_MAX_LANES)
+        };
+        let shards = rows.div_ceil(chunk);
+        let job = Arc::new(Dispatch {
+            input,
+            rows,
+            chunk,
+            next_chunk: AtomicUsize::new(0),
+            reply: reply.clone(),
+        });
+        // announce the dispatch to as many workers as there are chunks
+        // (more would only receive an already-exhausted job), starting
+        // at the round-robin cursor so small single-chunk dispatches
+        // spread over all workers
         let first = self.next.fetch_add(1, Ordering::Relaxed);
-        let mut sent = 0usize;
-        for (w, start) in (0..rows).step_by(chunk).enumerate() {
-            let end = (start + chunk).min(rows);
-            self.txs[first.wrapping_add(w) % self.txs.len()]
-                .send(Msg::Job(Job { input: input.clone(), start, end, reply: reply.clone() }))
+        for w in 0..workers.min(shards) {
+            self.txs[first.wrapping_add(w) % workers]
+                .send(Msg::Job(job.clone()))
                 .expect("engine worker alive");
-            sent += 1;
         }
-        sent
+        shards
     }
 
     /// Embed every row of `input`, returning the finished shards
@@ -337,6 +409,77 @@ mod tests {
         for _ in 0..4 {
             let _ = rx.recv().unwrap();
         }
+    }
+
+    #[test]
+    fn stealing_cuts_large_dispatches_into_fine_chunks() {
+        // 600 rows on 2 workers: raw = ceil(600/8) = 75 ≥ one full
+        // kernel tile, so the grid is 8 chunks of 75 — finer than one
+        // static half per worker, which is what lets an early finisher
+        // steal instead of idling behind a straggler
+        let (pool, _plan) = pool_and_plan(2);
+        let mut rng = Rng::new(10);
+        let input = Arc::new(BatchBuf::from_rows(
+            &(0..600).map(|_| rng.gaussian_vec(32)).collect::<Vec<_>>(),
+        ));
+        let (tx, rx) = mpsc::channel();
+        let src: Arc<dyn RowSource<f64> + Send + Sync> = input.clone();
+        let sent = pool.dispatch(src, &tx);
+        assert_eq!(sent, 8);
+        let mut starts: Vec<usize> = (0..sent).map(|_| rx.recv().unwrap().start).collect();
+        starts.sort_unstable();
+        assert_eq!(starts, (0..8).map(|c| c * 75).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn small_dispatches_keep_whole_kernel_tiles() {
+        // 100 rows on 2 workers is not worth sub-tile chunks: the grid
+        // falls back to ceil(rows/workers) rows per chunk, clamped to
+        // one kernel tile (64), so lane amortization is never cut —
+        // here 2 chunks of 50
+        let (pool, _plan) = pool_and_plan(2);
+        let mut rng = Rng::new(14);
+        let input = Arc::new(BatchBuf::from_rows(
+            &(0..100).map(|_| rng.gaussian_vec(32)).collect::<Vec<_>>(),
+        ));
+        let (tx, rx) = mpsc::channel();
+        let src: Arc<dyn RowSource<f64> + Send + Sync> = input.clone();
+        let sent = pool.dispatch(src, &tx);
+        assert_eq!(sent, 2);
+        let mut starts: Vec<usize> = (0..sent).map(|_| rx.recv().unwrap().start).collect();
+        starts.sort_unstable();
+        assert_eq!(starts, vec![0, 50]);
+    }
+
+    #[test]
+    fn single_worker_drains_every_chunk() {
+        let (pool, plan) = pool_and_plan(1);
+        let mut rng = Rng::new(11);
+        let rows: Vec<Vec<f64>> = (0..40).map(|_| rng.gaussian_vec(32)).collect();
+        let input = Arc::new(BatchBuf::from_rows(&rows));
+        let got = pool.embed_batch(&input);
+        let mut exec = BatchExecutor::<f64>::new(plan);
+        let want = exec.embed_batch(&input);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn stolen_shards_cover_every_row_exactly_once() {
+        let (pool, _plan) = pool_and_plan(3);
+        let mut rng = Rng::new(12);
+        let input = Arc::new(BatchBuf::from_rows(
+            &(0..77).map(|_| rng.gaussian_vec(32)).collect::<Vec<_>>(),
+        ));
+        let d = pool.out_dim();
+        let src: Arc<dyn RowSource<f64> + Send + Sync> = input.clone();
+        let shards = pool.embed_shards(src);
+        let mut covered = vec![0usize; 77];
+        for s in &shards {
+            for k in 0..s.feats.len() / d {
+                covered[s.start + k] += 1;
+            }
+        }
+        assert!(covered.iter().all(|&c| c == 1), "{covered:?}");
     }
 
     #[test]

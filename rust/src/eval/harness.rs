@@ -94,6 +94,11 @@ pub const EXPERIMENTS: &[Experiment] = &[
         description: "Matvec time + storage: structured vs dense",
         run: super::experiments::speed,
     },
+    Experiment {
+        id: "recall",
+        description: "Index recall@10: Hamming top-k vs exact angular top-k",
+        run: super::experiments::recall,
+    },
 ];
 
 /// Run one experiment by id.

@@ -1,0 +1,305 @@
+//! Multi-probe bucketed variant of the flat code index.
+//!
+//! Codes are bucketed by their first `b` bits (a prefix of the sign
+//! hash — itself an LSH key: nearby vectors share prefixes with
+//! probability `(1 − θ/π)^b`). A query probes its own bucket plus every
+//! existing bucket whose key is within Hamming distance `r` of the
+//! query's key ("multi-probe": instead of lowering `b` to catch near
+//! misses, flip the least-confident key bits), then ranks the union of
+//! candidates by full-code Hamming distance. Sublinear scans at the
+//! price of bounded recall loss — the flat [`super::CodeIndex`] is the
+//! exact reference.
+
+use super::codec::BinaryCodec;
+use super::store::{CodeIndex, CodeStore, SearchHit};
+use std::collections::HashMap;
+
+/// Most buckets that make sense: keys are `u64` prefixes and probe
+/// enumeration is `O(b^r)`.
+pub const MAX_BUCKET_BITS: usize = 24;
+
+/// Bucketed multi-probe index over packed sign codes.
+pub struct BucketIndex {
+    flat: CodeIndex,
+    bucket_bits: usize,
+    probe_radius: usize,
+    buckets: HashMap<u64, Vec<u32>>,
+}
+
+impl BucketIndex {
+    /// Bucket an already-built flat index. `bucket_bits` must be in
+    /// `1..=min(bits, MAX_BUCKET_BITS)`; `probe_radius` is clamped to
+    /// `bucket_bits`.
+    pub fn from_flat(
+        flat: CodeIndex,
+        bucket_bits: usize,
+        probe_radius: usize,
+    ) -> Result<BucketIndex, String> {
+        if bucket_bits == 0 || bucket_bits > flat.codec().bits().min(MAX_BUCKET_BITS) {
+            return Err(format!(
+                "bucket_bits must be in 1..={} (codes have {} bits), got {bucket_bits}",
+                flat.codec().bits().min(MAX_BUCKET_BITS),
+                flat.codec().bits()
+            ));
+        }
+        let probe_radius = probe_radius.min(bucket_bits);
+        let mut buckets: HashMap<u64, Vec<u32>> = HashMap::new();
+        for i in 0..flat.len() {
+            let key = bucket_key(flat.store().code(i), bucket_bits);
+            buckets.entry(key).or_default().push(i as u32);
+        }
+        Ok(BucketIndex { flat, bucket_bits, probe_radius, buckets })
+    }
+
+    /// Encode `corpus` on the calling thread, bucket it.
+    pub fn build(
+        codec: BinaryCodec,
+        corpus: &[Vec<f64>],
+        bucket_bits: usize,
+        probe_radius: usize,
+    ) -> Result<BucketIndex, String> {
+        BucketIndex::from_flat(CodeIndex::build(codec, corpus), bucket_bits, probe_radius)
+    }
+
+    /// Encode `corpus` across the streaming pool (`workers == 0` = one
+    /// per core), bucket it.
+    pub fn build_parallel(
+        codec: BinaryCodec,
+        corpus: &[Vec<f64>],
+        workers: usize,
+        bucket_bits: usize,
+        probe_radius: usize,
+    ) -> Result<BucketIndex, String> {
+        BucketIndex::from_flat(
+            CodeIndex::build_parallel(codec, corpus, workers),
+            bucket_bits,
+            probe_radius,
+        )
+    }
+
+    /// The underlying flat index (exact-scan reference).
+    pub fn flat(&self) -> &CodeIndex {
+        &self.flat
+    }
+
+    /// The codec.
+    pub fn codec(&self) -> &BinaryCodec {
+        self.flat.codec()
+    }
+
+    /// The packed code store.
+    pub fn store(&self) -> &CodeStore {
+        self.flat.store()
+    }
+
+    /// Indexed corpus size.
+    pub fn len(&self) -> usize {
+        self.flat.len()
+    }
+
+    /// True when the index holds no codes.
+    pub fn is_empty(&self) -> bool {
+        self.flat.is_empty()
+    }
+
+    /// Bucket-key width in bits.
+    pub fn bucket_bits(&self) -> usize {
+        self.bucket_bits
+    }
+
+    /// Probe radius (key bits flipped when probing).
+    pub fn probe_radius(&self) -> usize {
+        self.probe_radius
+    }
+
+    /// Number of non-empty buckets.
+    pub fn bucket_count(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Encode a query and probe. Returns the hits plus the number of
+    /// buckets actually scanned (the multi-probe cost metric exported
+    /// by the coordinator).
+    pub fn search(&self, query: &[f64], k: usize) -> (Vec<SearchHit>, usize) {
+        self.search_codes(&self.codec().encode_one(query), k)
+    }
+
+    /// Probe with an already-encoded query code.
+    pub fn search_codes(&self, query_code: &[u64], k: usize) -> (Vec<SearchHit>, usize) {
+        let qkey = bucket_key(query_code, self.bucket_bits);
+        let mut candidates: Vec<usize> = Vec::new();
+        let mut probed = 0usize;
+        for key in probe_keys(qkey, self.bucket_bits, self.probe_radius) {
+            if let Some(ids) = self.buckets.get(&key) {
+                probed += 1;
+                candidates.extend(ids.iter().map(|&i| i as usize));
+            }
+        }
+        (self.flat.store().top_k_of(query_code, k, candidates), probed)
+    }
+
+    /// Batch search; also returns the total probed-bucket count.
+    pub fn search_batch(&self, queries: &[Vec<f64>], k: usize) -> (Vec<Vec<SearchHit>>, usize) {
+        let mut total_probed = 0usize;
+        let hits = self
+            .codec()
+            .encode_batch(queries)
+            .iter()
+            .map(|code| {
+                let (h, probed) = self.search_codes(code, k);
+                total_probed += probed;
+                h
+            })
+            .collect();
+        (hits, total_probed)
+    }
+}
+
+/// The bucket key: the low `bucket_bits` bits of the code's first word.
+fn bucket_key(code: &[u64], bucket_bits: usize) -> u64 {
+    debug_assert!(bucket_bits >= 1 && bucket_bits <= 64);
+    code[0] & (u64::MAX >> (64 - bucket_bits))
+}
+
+/// Every key within Hamming distance `radius` of `key` over the low
+/// `bits` positions (the exact bucket first, then single flips, then
+/// pairs, ...). `O(bits^radius)` keys — bounded by [`MAX_BUCKET_BITS`].
+fn probe_keys(key: u64, bits: usize, radius: usize) -> Vec<u64> {
+    let mut keys = vec![key];
+    let mut frontier = vec![(key, 0usize)];
+    for _ in 0..radius {
+        let mut next = Vec::new();
+        for &(k, first_bit) in &frontier {
+            // only flip positions above the last flipped one, so every
+            // combination is enumerated exactly once
+            for b in first_bit..bits {
+                let flipped = k ^ (1u64 << b);
+                next.push((flipped, b + 1));
+                keys.push(flipped);
+            }
+        }
+        frontier = next;
+    }
+    keys
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::clustered_cloud;
+    use crate::pmodel::StructureKind;
+    use crate::rng::Rng;
+    use crate::transform::{EmbeddingConfig, Nonlinearity};
+
+    fn codec(m: usize, n: usize) -> BinaryCodec {
+        BinaryCodec::new(
+            EmbeddingConfig::new(StructureKind::Circulant, m, n, Nonlinearity::Heaviside)
+                .with_seed(11),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn probe_key_enumeration_counts() {
+        assert_eq!(probe_keys(0, 8, 0).len(), 1);
+        assert_eq!(probe_keys(0, 8, 1).len(), 1 + 8);
+        assert_eq!(probe_keys(0, 8, 2).len(), 1 + 8 + 28);
+        // every enumerated key is within the radius, no duplicates
+        let keys = probe_keys(0b1010, 6, 2);
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), keys.len());
+        for k in keys {
+            assert!((k ^ 0b1010u64).count_ones() <= 2);
+            assert!(k < 64);
+        }
+    }
+
+    #[test]
+    fn bucket_bits_are_validated() {
+        let c = codec(64, 32);
+        let rows: Vec<Vec<f64>> = {
+            let mut rng = Rng::new(1);
+            (0..10).map(|_| rng.gaussian_vec(32)).collect()
+        };
+        assert!(BucketIndex::build(c.clone(), &rows, 0, 1).is_err());
+        assert!(BucketIndex::build(c.clone(), &rows, 65, 1).is_err());
+        let idx = BucketIndex::build(c, &rows, 8, 99).unwrap();
+        assert_eq!(idx.probe_radius(), 8, "radius clamps to bucket_bits");
+    }
+
+    #[test]
+    fn exact_bucket_probe_finds_self() {
+        let c = codec(128, 32);
+        let mut rng = Rng::new(2);
+        let rows = clustered_cloud(8, 10, 32, 0.05, &mut rng);
+        let idx = BucketIndex::build(c, &rows, 10, 1).unwrap();
+        assert_eq!(idx.len(), 80);
+        assert!(idx.bucket_count() <= 80);
+        // row 10 is the first member of its cluster, so the (hamming,
+        // id) tie-break can only pick the self-match
+        let (hits, probed) = idx.search(&rows[10], 5);
+        assert!(probed >= 1);
+        assert_eq!(hits[0].id, 10, "self lands in its own bucket at hamming 0");
+        assert_eq!(hits[0].hamming, 0);
+    }
+
+    #[test]
+    fn wider_probe_radius_never_loses_candidates() {
+        let c = codec(128, 32);
+        let mut rng = Rng::new(3);
+        let rows = clustered_cloud(10, 10, 32, 0.08, &mut rng);
+        let narrow = BucketIndex::build(c.clone(), &rows, 8, 0).unwrap();
+        let wide = BucketIndex::build(c, &rows, 8, 2).unwrap();
+        let mut narrow_total = 0usize;
+        let mut wide_total = 0usize;
+        for q in rows.iter().step_by(7) {
+            let (nh, np) = narrow.search(q, 10);
+            let (wh, wp) = wide.search(q, 10);
+            assert!(wp >= np);
+            narrow_total += nh.len();
+            wide_total += wh.len();
+            // everything the narrow probe found, the wide probe keeps
+            // (same ranking over a superset of candidates)
+            for hit in &nh[..1] {
+                assert!(wh.iter().any(|w| w.id == hit.id));
+            }
+        }
+        assert!(wide_total >= narrow_total);
+    }
+
+    #[test]
+    fn bucketed_recall_tracks_flat_on_clustered_data() {
+        let c = codec(256, 32);
+        let mut rng = Rng::new(4);
+        let rows = clustered_cloud(20, 10, 32, 0.05, &mut rng);
+        let flat = CodeIndex::build(c.clone(), &rows);
+        let bucketed = BucketIndex::build(c, &rows, 10, 2).unwrap();
+        let mut agree = 0usize;
+        let mut total = 0usize;
+        for q in rows.iter().step_by(5) {
+            let exact: Vec<usize> = flat.search(q, 10).iter().map(|h| h.id).collect();
+            let (approx, _) = bucketed.search(q, 10);
+            total += exact.len();
+            agree += exact
+                .iter()
+                .filter(|id| approx.iter().any(|h| h.id == **id))
+                .count();
+        }
+        let recall = agree as f64 / total as f64;
+        assert!(recall >= 0.5, "bucketed recall vs flat too low: {recall}");
+    }
+
+    #[test]
+    fn batch_search_accumulates_probes() {
+        let c = codec(64, 32);
+        let mut rng = Rng::new(5);
+        let rows = clustered_cloud(6, 10, 32, 0.05, &mut rng);
+        let idx = BucketIndex::build(c, &rows, 6, 1).unwrap();
+        let queries: Vec<Vec<f64>> = rows[..4].to_vec();
+        let (hits, probed) = idx.search_batch(&queries, 3);
+        assert_eq!(hits.len(), 4);
+        assert!(probed >= 4, "each query probes at least its own bucket");
+    }
+}

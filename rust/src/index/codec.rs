@@ -1,0 +1,256 @@
+//! Binary sign-hash codec: rows in, packed `u64` code words out.
+//!
+//! The paper's `Heaviside` nonlinearity already *is* a structured
+//! binary hash — feature `i` is `1{⟨aⁱ, D₁HD₀·x⟩ ≥ 0}` — so encoding
+//! is exactly one trip through the existing engine with `f = sign`,
+//! followed by a pack of the `m` features into `⌈m/64⌉` machine words.
+//! Everything downstream (Hamming scans, bucketing) works on the packed
+//! words with XOR + popcount.
+//!
+//! The codec always runs at the f64 oracle precision: sign bits are
+//! discontinuous in the projections, so unlike the continuous serving
+//! features there is no "within 1e-4" notion of agreement — a code is
+//! either the reference code or it is wrong. The engine's batched
+//! split-complex path is bit-identical at f64 to the per-row path, so
+//! encoding is batch-size- and shard-independent by construction.
+
+use crate::engine::{BatchBuf, BatchExecutor, EmbeddingPlan, PlanCache};
+use crate::transform::{EmbeddingConfig, Nonlinearity};
+use std::sync::{Arc, Mutex};
+
+/// Packed words needed for an `m`-bit code.
+pub fn words_for_bits(m: usize) -> usize {
+    m.div_ceil(64)
+}
+
+/// Pack `m` Heaviside features (each exactly `0.0` or `1.0`) into
+/// little-endian bit words: bit `i` of the code lands in
+/// `words[i / 64]` at position `i % 64`. Unused tail bits are cleared,
+/// so whole-word XOR+popcount Hamming distances are exact.
+pub fn pack_bits(feats: &[f64], words: &mut [u64]) {
+    assert_eq!(words.len(), words_for_bits(feats.len()), "word count mismatch");
+    words.fill(0);
+    for (i, &f) in feats.iter().enumerate() {
+        if f >= 0.5 {
+            words[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+}
+
+/// Unpack an `m`-bit code back into booleans (test / debugging mirror
+/// of [`pack_bits`]).
+pub fn unpack_bits(words: &[u64], m: usize) -> Vec<bool> {
+    assert_eq!(words.len(), words_for_bits(m), "word count mismatch");
+    (0..m).map(|i| (words[i / 64] >> (i % 64)) & 1 == 1).collect()
+}
+
+/// XOR + popcount Hamming distance between two packed codes.
+pub fn hamming(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x ^ y).count_ones()).sum()
+}
+
+/// The sign-hash collision-probability estimator: each bit disagrees
+/// with probability `θ/π` (Goemans–Williamson / paper §2.1 heaviside
+/// row), so the observed disagreement fraction `h/m` estimates `θ/π`
+/// and `θ̂ = π·h/m`.
+pub fn estimated_angle(hamming: u32, m: usize) -> f64 {
+    std::f64::consts::PI * hamming as f64 / m as f64
+}
+
+/// Estimated angular *similarity* `1 − θ̂/π = 1 − h/m ∈ [0, 1]`
+/// (1 = same direction, 0 = antipodal) — the ranking score reported by
+/// index searches: monotone in the Hamming distance, so top-k by
+/// Hamming is top-k by estimated similarity.
+pub fn angular_similarity(hamming: u32, m: usize) -> f64 {
+    1.0 - hamming as f64 / m as f64
+}
+
+/// Batch encoder for one sign-hash configuration: a shared
+/// [`EmbeddingPlan`] (pulled from the process-wide [`PlanCache`], so an
+/// index and any serving variant of the same configuration sample the
+/// embedding exactly once), one pinned executor whose scratch is
+/// reused across every encode call (query traffic never re-allocates
+/// after warmup), plus the bit-packing step. Cloning is cheap (`Arc`
+/// bumps; clones share the executor) and clones encode identically.
+#[derive(Clone)]
+pub struct BinaryCodec {
+    plan: Arc<EmbeddingPlan>,
+    /// pinned per-codec executor — the serving query path would
+    /// otherwise rebuild scratch per query (contended only by
+    /// concurrent searches on the *same* codec, where the scan
+    /// dominates anyway; corpus builds bypass it via the pool)
+    exec: Arc<Mutex<BatchExecutor<f64>>>,
+}
+
+impl BinaryCodec {
+    /// A codec for `config`, which must use the sign nonlinearity —
+    /// that is the parse-time check that keeps vector-valued `f`s (and
+    /// their hot-loop panics) out of the index entirely. Configurations
+    /// with preprocessing enabled need a power-of-two `n` (rejected
+    /// here rather than panicking inside plan construction).
+    pub fn new(config: EmbeddingConfig) -> Result<BinaryCodec, String> {
+        if config.f != Nonlinearity::Heaviside {
+            return Err(format!(
+                "binary codec requires the sign nonlinearity (f = heaviside), got f = {}",
+                config.f.label()
+            ));
+        }
+        if config.preprocess && !crate::util::is_pow2(config.n) {
+            return Err(format!(
+                "preprocessing needs a power-of-two input dimension, got n = {} \
+                 (disable preprocessing or pad the data)",
+                config.n
+            ));
+        }
+        BinaryCodec::of_plan(PlanCache::global().get_or_build(&config))
+    }
+
+    /// A codec over an already-built plan (must be a sign plan).
+    pub fn from_plan(plan: Arc<EmbeddingPlan>) -> Result<BinaryCodec, String> {
+        if plan.config().f != Nonlinearity::Heaviside {
+            return Err(format!(
+                "binary codec requires a sign plan, got f = {}",
+                plan.config().f.label()
+            ));
+        }
+        BinaryCodec::of_plan(plan)
+    }
+
+    fn of_plan(plan: Arc<EmbeddingPlan>) -> Result<BinaryCodec, String> {
+        let exec = Arc::new(Mutex::new(BatchExecutor::<f64>::new(plan.clone())));
+        Ok(BinaryCodec { plan, exec })
+    }
+
+    /// The shared plan backing this codec.
+    pub fn plan(&self) -> &Arc<EmbeddingPlan> {
+        &self.plan
+    }
+
+    /// Code length in bits (= m; the sign nonlinearity never widens).
+    pub fn bits(&self) -> usize {
+        self.plan.out_dim()
+    }
+
+    /// Input dimension.
+    pub fn n(&self) -> usize {
+        self.plan.n()
+    }
+
+    /// Packed words per code.
+    pub fn words_per_code(&self) -> usize {
+        words_for_bits(self.bits())
+    }
+
+    /// Encode one vector through the engine's per-row planned path —
+    /// bit-identical at f64 to the batched path by the engine
+    /// contract, so one-off query codes always match corpus codes.
+    /// Zero heap allocation on the executor after warmup (the pinned
+    /// scratch is reused across calls).
+    pub fn encode_one(&self, v: &[f64]) -> Vec<u64> {
+        assert_eq!(v.len(), self.n(), "input dim mismatch");
+        let mut feats = vec![0.0f64; self.plan.out_dim()];
+        self.exec.lock().unwrap().embed_into(v, &mut feats);
+        let mut words = vec![0u64; self.words_per_code()];
+        pack_bits(&feats, &mut words);
+        words
+    }
+
+    /// Encode a batch of rows through the pinned batch executor (the
+    /// split-complex batched kernels for ≥ 2 rows), one code per row.
+    pub fn encode_batch(&self, rows: &[Vec<f64>]) -> Vec<Vec<u64>> {
+        if rows.is_empty() {
+            return Vec::new();
+        }
+        let feats = self.exec.lock().unwrap().embed_batch(&BatchBuf::from_rows(rows));
+        let wpc = self.words_per_code();
+        (0..feats.rows())
+            .map(|i| {
+                let mut words = vec![0u64; wpc];
+                pack_bits(feats.row(i), &mut words);
+                words
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmodel::StructureKind;
+    use crate::rng::Rng;
+
+    fn sign_cfg(m: usize, n: usize) -> EmbeddingConfig {
+        EmbeddingConfig::new(StructureKind::Circulant, m, n, Nonlinearity::Heaviside).with_seed(3)
+    }
+
+    #[test]
+    fn pack_unpack_roundtrips_across_widths() {
+        let mut rng = Rng::new(1);
+        for m in [1usize, 7, 63, 64, 65, 128, 200, 256] {
+            let bits: Vec<bool> = (0..m).map(|_| rng.uniform() < 0.5).collect();
+            let feats: Vec<f64> = bits.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect();
+            let mut words = vec![u64::MAX; words_for_bits(m)];
+            pack_bits(&feats, &mut words);
+            assert_eq!(unpack_bits(&words, m), bits, "m={m}");
+            // tail bits beyond m must be cleared for exact word hamming
+            if m % 64 != 0 {
+                assert_eq!(words[m / 64] >> (m % 64), 0, "m={m} tail dirty");
+            }
+        }
+    }
+
+    #[test]
+    fn hamming_counts_differing_bits() {
+        assert_eq!(hamming(&[0b1011], &[0b0010]), 2);
+        assert_eq!(hamming(&[u64::MAX, 0], &[u64::MAX, 0]), 0);
+        assert_eq!(hamming(&[0, 0], &[u64::MAX, 1]), 65);
+    }
+
+    #[test]
+    fn similarity_estimators_are_monotone_in_hamming() {
+        assert_eq!(angular_similarity(0, 256), 1.0);
+        assert_eq!(angular_similarity(256, 256), 0.0);
+        assert!((estimated_angle(128, 256) - std::f64::consts::FRAC_PI_2).abs() < 1e-12);
+        assert!(angular_similarity(10, 256) > angular_similarity(20, 256));
+    }
+
+    #[test]
+    fn codec_rejects_non_sign_nonlinearities() {
+        let cfg = EmbeddingConfig::new(StructureKind::Circulant, 8, 16, Nonlinearity::CosSin);
+        let err = BinaryCodec::new(cfg).unwrap_err();
+        assert!(err.contains("sign"), "{err}");
+    }
+
+    #[test]
+    fn codec_rejects_non_pow2_n_instead_of_panicking() {
+        let cfg =
+            EmbeddingConfig::new(StructureKind::Circulant, 8, 100, Nonlinearity::Heaviside);
+        let err = BinaryCodec::new(cfg).unwrap_err();
+        assert!(err.contains("power-of-two"), "{err}");
+        // without preprocessing, any n is fine
+        let cfg = EmbeddingConfig::new(StructureKind::Dense, 8, 100, Nonlinearity::Heaviside)
+            .with_preprocess(false);
+        assert!(BinaryCodec::new(cfg).is_ok());
+    }
+
+    #[test]
+    fn batch_encoding_matches_per_row_encoding() {
+        let codec = BinaryCodec::new(sign_cfg(64, 32)).unwrap();
+        let mut rng = Rng::new(5);
+        let rows: Vec<Vec<f64>> = (0..9).map(|_| rng.gaussian_vec(32)).collect();
+        let batch = codec.encode_batch(&rows);
+        for (row, code) in rows.iter().zip(&batch) {
+            assert_eq!(&codec.encode_one(row), code);
+        }
+    }
+
+    #[test]
+    fn codec_reports_shape() {
+        let codec = BinaryCodec::new(sign_cfg(100, 32)).unwrap();
+        assert_eq!(codec.bits(), 100);
+        assert_eq!(codec.n(), 32);
+        assert_eq!(codec.words_per_code(), 2);
+        assert!(codec.encode_batch(&[]).is_empty());
+    }
+}

@@ -1,0 +1,451 @@
+//! `IndexSpec` / `IndexHandle`: the serving-level view of an index.
+//!
+//! [`IndexSpec`] is plain `Send` data describing an index — the
+//! sign-hash configuration plus layout knobs — exactly like
+//! [`crate::coordinator::BackendSpec`] describes a compute backend.
+//! [`IndexHandle`] is the live, built object the coordinator registers
+//! by name and serves `index query` traffic from; it also knows how to
+//! persist itself (one JSON header line + raw little-endian code
+//! words), so the CLI `index build` / `index query` round-trip goes
+//! through the same type.
+
+use super::bucket::BucketIndex;
+use super::codec::BinaryCodec;
+use super::store::{CodeIndex, CodeStore, SearchHit};
+use crate::pmodel::StructureKind;
+use crate::transform::{EmbeddingConfig, Nonlinearity};
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Plain-data description of a binary-code index (the `BackendSpec` of
+/// the index layer). The nonlinearity is always the sign hash; there is
+/// deliberately no way to spell anything else here.
+#[derive(Debug, Clone)]
+pub struct IndexSpec {
+    /// structured-matrix family of the hash projections
+    pub structure: StructureKind,
+    /// code length in bits (= m sign projections)
+    pub m: usize,
+    /// input dimension
+    pub n: usize,
+    /// sampling seed
+    pub seed: u64,
+    /// whether the D₁HD₀ preprocessing runs (needs power-of-two n)
+    pub preprocess: bool,
+    /// bucket the codes by this many prefix bits (None = flat scan)
+    pub bucket_bits: Option<usize>,
+    /// multi-probe radius for the bucketed variant
+    pub probe_radius: usize,
+    /// streaming-pool workers for corpus encoding (0 = one per core)
+    pub workers: usize,
+}
+
+impl IndexSpec {
+    /// A flat index spec with default seed 0, preprocessing on, and
+    /// pool-parallel builds.
+    pub fn new(structure: StructureKind, m: usize, n: usize) -> IndexSpec {
+        IndexSpec {
+            structure,
+            m,
+            n,
+            seed: 0,
+            preprocess: true,
+            bucket_bits: None,
+            probe_radius: 1,
+            workers: 0,
+        }
+    }
+
+    /// Builder: set the sampling seed.
+    pub fn with_seed(mut self, seed: u64) -> IndexSpec {
+        self.seed = seed;
+        self
+    }
+
+    /// Builder: toggle the D₁HD₀ preprocessing.
+    pub fn with_preprocess(mut self, on: bool) -> IndexSpec {
+        self.preprocess = on;
+        self
+    }
+
+    /// Builder: bucket by `bits` prefix bits (multi-probe variant).
+    pub fn with_buckets(mut self, bits: usize) -> IndexSpec {
+        self.bucket_bits = Some(bits);
+        self
+    }
+
+    /// Builder: set the multi-probe radius.
+    pub fn with_probe_radius(mut self, radius: usize) -> IndexSpec {
+        self.probe_radius = radius;
+        self
+    }
+
+    /// Builder: set the build worker count (0 = one per core).
+    pub fn with_workers(mut self, workers: usize) -> IndexSpec {
+        self.workers = workers;
+        self
+    }
+
+    /// The embedding configuration this spec hashes through (always the
+    /// sign nonlinearity).
+    pub fn config(&self) -> EmbeddingConfig {
+        EmbeddingConfig::new(self.structure, self.m, self.n, Nonlinearity::Heaviside)
+            .with_seed(self.seed)
+            .with_preprocess(self.preprocess)
+    }
+}
+
+/// One query's result: the ranked hits plus how many buckets were
+/// scanned to produce them (1 for a flat index — the whole store is
+/// "one bucket").
+#[derive(Debug, Clone)]
+pub struct QueryResult {
+    /// hits sorted by `(hamming, id)` ascending
+    pub hits: Vec<SearchHit>,
+    /// buckets scanned (multi-probe cost; 1 for flat)
+    pub probed_buckets: usize,
+}
+
+enum IndexVariant {
+    Flat(CodeIndex),
+    Bucketed(BucketIndex),
+}
+
+/// A built, queryable binary-code index (flat or bucketed), carrying
+/// its [`IndexSpec`] so it can be persisted and re-opened.
+pub struct IndexHandle {
+    spec: IndexSpec,
+    variant: IndexVariant,
+}
+
+impl IndexHandle {
+    /// Encode `corpus` (sharded across the streaming pool per
+    /// `spec.workers`) and build the index `spec` describes.
+    pub fn build(spec: IndexSpec, corpus: &[Vec<f64>]) -> Result<IndexHandle, String> {
+        for (i, row) in corpus.iter().enumerate() {
+            if row.len() != spec.n {
+                return Err(format!("corpus row {i} has dim {} (want {})", row.len(), spec.n));
+            }
+        }
+        let codec = BinaryCodec::new(spec.config())?;
+        let variant = match spec.bucket_bits {
+            None => IndexVariant::Flat(CodeIndex::build_parallel(codec, corpus, spec.workers)),
+            Some(bits) => IndexVariant::Bucketed(BucketIndex::build_parallel(
+                codec,
+                corpus,
+                spec.workers,
+                bits,
+                spec.probe_radius,
+            )?),
+        };
+        Ok(IndexHandle { spec, variant })
+    }
+
+    /// The spec this index was built from.
+    pub fn spec(&self) -> &IndexSpec {
+        &self.spec
+    }
+
+    /// Indexed corpus size.
+    pub fn len(&self) -> usize {
+        match &self.variant {
+            IndexVariant::Flat(i) => i.len(),
+            IndexVariant::Bucketed(i) => i.len(),
+        }
+    }
+
+    /// True when the index holds no codes.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Code length in bits.
+    pub fn bits(&self) -> usize {
+        self.spec.m
+    }
+
+    /// The packed code store.
+    pub fn store(&self) -> &CodeStore {
+        match &self.variant {
+            IndexVariant::Flat(i) => i.store(),
+            IndexVariant::Bucketed(i) => i.store(),
+        }
+    }
+
+    /// Number of non-empty buckets (None for a flat index).
+    pub fn bucket_count(&self) -> Option<usize> {
+        match &self.variant {
+            IndexVariant::Flat(_) => None,
+            IndexVariant::Bucketed(i) => Some(i.bucket_count()),
+        }
+    }
+
+    /// Query with a raw f64 vector (dim-checked).
+    pub fn query(&self, query: &[f64], k: usize) -> Result<QueryResult, String> {
+        if query.len() != self.spec.n {
+            return Err(format!("query has dim {} (want {})", query.len(), self.spec.n));
+        }
+        Ok(match &self.variant {
+            IndexVariant::Flat(i) => QueryResult { hits: i.search(query, k), probed_buckets: 1 },
+            IndexVariant::Bucketed(i) => {
+                let (hits, probed) = i.search(query, k);
+                QueryResult { hits, probed_buckets: probed }
+            }
+        })
+    }
+
+    /// Batch query; returns per-query hits plus the total probed-bucket
+    /// count (what the coordinator exports per served batch).
+    pub fn query_batch(
+        &self,
+        queries: &[Vec<f64>],
+        k: usize,
+    ) -> Result<(Vec<Vec<SearchHit>>, usize), String> {
+        for (i, row) in queries.iter().enumerate() {
+            if row.len() != self.spec.n {
+                return Err(format!("query {i} has dim {} (want {})", row.len(), self.spec.n));
+            }
+        }
+        Ok(match &self.variant {
+            IndexVariant::Flat(i) => (i.search_batch(queries, k), queries.len()),
+            IndexVariant::Bucketed(i) => i.search_batch(queries, k),
+        })
+    }
+
+    /// [`IndexHandle::query_batch`] for f32 wire payloads: each query
+    /// is widened once (codes are always computed at the f64 oracle
+    /// precision — sign bits have no meaningful f32 "tolerance").
+    pub fn query_batch_f32(
+        &self,
+        queries: &[Vec<f32>],
+        k: usize,
+    ) -> Result<(Vec<Vec<SearchHit>>, usize), String> {
+        let wide: Vec<Vec<f64>> =
+            queries.iter().map(|q| q.iter().map(|&v| v as f64).collect()).collect();
+        self.query_batch(&wide, k)
+    }
+
+    /// Persist to `path`: one JSON header line, then the raw
+    /// little-endian code words.
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        let store = self.store();
+        let bucket_bits = match self.spec.bucket_bits {
+            Some(b) => b.to_string(),
+            None => "null".to_string(),
+        };
+        // the seed travels as a *string*: the offline Json parser reads
+        // numbers as f64, which would silently round seeds ≥ 2^53 and
+        // rebuild a different hash than the stored codes were built with
+        let header = format!(
+            "{{\"format\": \"strembed-index\", \"version\": 1, \"structure\": \"{}\", \
+             \"m\": {}, \"n\": {}, \"seed\": \"{}\", \"preprocess\": {}, \
+             \"bucket_bits\": {}, \"probe_radius\": {}, \"rows\": {}}}\n",
+            self.spec.structure.token(),
+            self.spec.m,
+            self.spec.n,
+            self.spec.seed,
+            self.spec.preprocess,
+            bucket_bits,
+            self.spec.probe_radius,
+            store.len(),
+        );
+        let mut bytes = header.into_bytes();
+        bytes.reserve(store.as_words().len() * 8);
+        for w in store.as_words() {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        std::fs::write(path, bytes).map_err(|e| format!("write {}: {e}", path.display()))
+    }
+
+    /// Re-open a saved index: parse the header, rebuild the codec from
+    /// the shared plan cache (same structure/seed ⇒ bit-identical
+    /// hash), reload the packed words, re-bucket if configured.
+    pub fn load(path: &Path) -> Result<IndexHandle, String> {
+        let bytes = std::fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        let nl = bytes
+            .iter()
+            .position(|&b| b == b'\n')
+            .ok_or_else(|| "missing index header line".to_string())?;
+        let header = Json::parse(
+            std::str::from_utf8(&bytes[..nl]).map_err(|e| format!("bad header: {e}"))?,
+        )
+        .map_err(|e| format!("bad header: {e}"))?;
+        if header.get("format").and_then(Json::as_str) != Some("strembed-index") {
+            return Err("not a strembed index file".into());
+        }
+        let field_usize = |k: &str| {
+            header.get(k).and_then(Json::as_usize).ok_or_else(|| format!("header missing '{k}'"))
+        };
+        let structure_name = header
+            .get("structure")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "header missing 'structure'".to_string())?;
+        let structure = StructureKind::parse(structure_name)
+            .ok_or_else(|| format!("unknown structure '{structure_name}'"))?;
+        let seed: u64 = header
+            .get("seed")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "header missing 'seed'".to_string())?
+            .parse()
+            .map_err(|e| format!("bad seed: {e}"))?;
+        let mut spec = IndexSpec::new(structure, field_usize("m")?, field_usize("n")?)
+            .with_seed(seed)
+            .with_probe_radius(field_usize("probe_radius")?);
+        spec.preprocess = header.get("preprocess") != Some(&Json::Bool(false));
+        if let Some(bits) = header.get("bucket_bits").and_then(Json::as_usize) {
+            spec = spec.with_buckets(bits);
+        }
+        let rows = field_usize("rows")?;
+        let body = &bytes[nl + 1..];
+        if body.len() % 8 != 0 {
+            return Err("truncated code words".into());
+        }
+        let words: Vec<u64> = body
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+            .collect();
+        let store = CodeStore::from_raw(spec.m, rows, words)?;
+        let codec = BinaryCodec::new(spec.config())?;
+        let flat = CodeIndex::from_parts(codec, store)?;
+        let variant = match spec.bucket_bits {
+            None => IndexVariant::Flat(flat),
+            Some(bits) => IndexVariant::Bucketed(BucketIndex::from_flat(
+                flat,
+                bits,
+                spec.probe_radius,
+            )?),
+        };
+        Ok(IndexHandle { spec, variant })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::clustered_rows;
+    use crate::rng::Rng;
+
+    fn corpus(rows: usize, n: usize, seed: u64) -> Vec<Vec<f64>> {
+        clustered_rows(rows, n, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn spec_builders_and_config() {
+        let spec = IndexSpec::new(StructureKind::Toeplitz, 128, 32)
+            .with_seed(9)
+            .with_buckets(8)
+            .with_probe_radius(2)
+            .with_workers(3);
+        assert_eq!(spec.bucket_bits, Some(8));
+        let cfg = spec.config();
+        assert_eq!(cfg.f, Nonlinearity::Heaviside);
+        assert_eq!((cfg.m, cfg.n, cfg.seed), (128, 32, 9));
+    }
+
+    #[test]
+    fn build_rejects_ragged_corpus() {
+        let spec = IndexSpec::new(StructureKind::Circulant, 64, 32);
+        let err =
+            IndexHandle::build(spec, &[vec![0.0; 32], vec![0.0; 31]]).unwrap_err();
+        assert!(err.contains("row 1"), "{err}");
+    }
+
+    #[test]
+    fn flat_query_reports_one_probed_bucket() {
+        let rows = corpus(60, 32, 1);
+        let h = IndexHandle::build(
+            IndexSpec::new(StructureKind::Circulant, 128, 32).with_seed(2),
+            &rows,
+        )
+        .unwrap();
+        // row 10 is the first member of its cluster: even if a cluster
+        // mate ties at hamming 0, the (hamming, id) tie-break picks 10
+        let r = h.query(&rows[10], 3).unwrap();
+        assert_eq!(r.probed_buckets, 1);
+        assert_eq!(r.hits[0].id, 10);
+        assert!(h.query(&vec![0.0; 31], 3).is_err());
+    }
+
+    #[test]
+    fn query_batch_f32_matches_widened_f64() {
+        let rows = corpus(40, 32, 3);
+        let h = IndexHandle::build(
+            IndexSpec::new(StructureKind::Circulant, 128, 32).with_seed(4),
+            &rows,
+        )
+        .unwrap();
+        let q32: Vec<Vec<f32>> =
+            rows[..3].iter().map(|r| r.iter().map(|&v| v as f32).collect()).collect();
+        let q64: Vec<Vec<f64>> =
+            q32.iter().map(|r| r.iter().map(|&v| v as f64).collect()).collect();
+        let (a, pa) = h.query_batch_f32(&q32, 5).unwrap();
+        let (b, pb) = h.query_batch(&q64, 5).unwrap();
+        assert_eq!(pa, pb);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_search_results() {
+        let rows = corpus(70, 32, 5);
+        for bucketed in [false, true] {
+            let mut spec = IndexSpec::new(StructureKind::SkewCirculant, 96, 32).with_seed(6);
+            if bucketed {
+                spec = spec.with_buckets(8).with_probe_radius(2);
+            }
+            let built = IndexHandle::build(spec, &rows).unwrap();
+            let path = std::env::temp_dir().join(format!(
+                "strembed-index-test-{}-{bucketed}.idx",
+                std::process::id()
+            ));
+            built.save(&path).unwrap();
+            let loaded = IndexHandle::load(&path).unwrap();
+            std::fs::remove_file(&path).ok();
+            assert_eq!(loaded.len(), built.len());
+            assert_eq!(loaded.store(), built.store());
+            for q in rows.iter().step_by(11) {
+                let a = built.query(q, 7).unwrap();
+                let b = loaded.query(q, 7).unwrap();
+                assert_eq!(a.hits, b.hits);
+                assert_eq!(a.probed_buckets, b.probed_buckets);
+            }
+        }
+    }
+
+    #[test]
+    fn seeds_beyond_f64_precision_roundtrip_exactly() {
+        // the header's seed travels as a string: 2^55 + 1 is not
+        // representable in f64 and would silently round through a
+        // numeric JSON field, rebuilding the wrong hash on load
+        let seed = (1u64 << 55) | 1;
+        let rows = corpus(30, 32, 8);
+        let built = IndexHandle::build(
+            IndexSpec::new(StructureKind::Circulant, 64, 32).with_seed(seed),
+            &rows,
+        )
+        .unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("strembed-index-bigseed-{}.idx", std::process::id()));
+        built.save(&path).unwrap();
+        let loaded = IndexHandle::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.spec().seed, seed);
+        // a corpus row must still self-match at hamming 0 through the
+        // re-derived codec (row 10 is the first member of its cluster,
+        // so the (hamming, id) tie-break can only pick it)
+        let r = loaded.query(&rows[10], 1).unwrap();
+        assert_eq!((r.hits[0].id, r.hits[0].hamming), (10, 0));
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = std::env::temp_dir()
+            .join(format!("strembed-index-garbage-{}.idx", std::process::id()));
+        std::fs::write(&path, b"{\"format\": \"nope\"}\n").unwrap();
+        assert!(IndexHandle::load(&path).is_err());
+        std::fs::write(&path, b"no newline at all").unwrap();
+        assert!(IndexHandle::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,55 @@
+//! Binary-code similarity search on top of the embedding engine.
+//!
+//! The paper's sign projections (`f = heaviside`) are exactly the
+//! structured binary hashes of Choromanska et al., *"Binary embeddings
+//! with structured hashed projections"*: bit `i` of a code disagrees
+//! between two inputs with probability `θ/π`, so the Hamming distance
+//! of two `m`-bit codes is an unbiased, tightly concentrated estimator
+//! of the angular distance — and nearest-neighbor retrieval reduces to
+//! XOR + popcount over packed machine words. This module turns the
+//! engine from a function evaluator into that retrieval service:
+//!
+//! ```text
+//!   BinaryCodec      rows → engine (shared PlanCache plan, batched
+//!        │           split-complex kernels, StreamingPool sharding
+//!        │           for corpus builds) → m sign bits → ⌈m/64⌉ u64s
+//!        ▼
+//!   CodeStore        one flat Vec<u64>: corpus codes back to back
+//!        │
+//!        ├─ CodeIndex     exact Hamming top-k scan (search /
+//!        │                search_batch; the recall reference)
+//!        └─ BucketIndex   multi-probe prefix buckets: probe every
+//!                         bucket within key-Hamming `r`, rank the
+//!                         candidate union by full-code Hamming
+//!        ▼
+//!   IndexSpec / IndexHandle    plain-data description + built object:
+//!                              what the coordinator registers by name
+//!                              (`index build` / `index query` ops) and
+//!                              what the CLI persists / re-opens
+//! ```
+//!
+//! Hits are `(id, hamming, estimated_angular_similarity)` with the
+//! similarity from the collision-probability estimator `1 − h/m`
+//! ([`codec::angular_similarity`]). The [`recall`] harness measures
+//! recall@k against [`crate::exact`] brute-force angular top-k across
+//! families × code lengths; `benches/bench_engine.rs` tracks encode
+//! ns/row and search ns/query in `BENCH_engine.json`.
+//!
+//! Codes are always computed at the f64 oracle precision — sign bits
+//! are discontinuous, so "f32 within 1e-4" is not a meaningful code
+//! contract; f32 wire queries are widened once at the handle boundary.
+
+pub mod bucket;
+pub mod codec;
+pub mod handle;
+pub mod recall;
+pub mod store;
+
+pub use bucket::{BucketIndex, MAX_BUCKET_BITS};
+pub use codec::{
+    angular_similarity, estimated_angle, hamming, pack_bits, unpack_bits, words_for_bits,
+    BinaryCodec,
+};
+pub use handle::{IndexHandle, IndexSpec, QueryResult};
+pub use recall::{recall_cases, recall_report, recall_table, RecallCase, RecallRow};
+pub use store::{CodeIndex, CodeStore, SearchHit};

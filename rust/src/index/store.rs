@@ -1,0 +1,345 @@
+//! Packed code storage and XOR+popcount Hamming top-k.
+
+use super::codec::{angular_similarity, hamming, words_for_bits, BinaryCodec};
+use crate::engine::{default_workers, BatchBuf, StreamingPool};
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+/// One search result: corpus row id, raw Hamming distance, and the
+/// collision-probability similarity estimate `1 − h/m` (see
+/// [`super::codec::angular_similarity`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SearchHit {
+    /// corpus row index
+    pub id: usize,
+    /// Hamming distance between the packed codes
+    pub hamming: u32,
+    /// estimated angular similarity `1 − h/m ∈ [0, 1]`
+    pub similarity: f64,
+}
+
+/// A flat, contiguous store of packed `m`-bit codes: row `i`'s words
+/// occupy `words[i·wpc .. (i+1)·wpc]`. One allocation for the whole
+/// corpus — a scan touches memory strictly sequentially.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CodeStore {
+    words: Vec<u64>,
+    wpc: usize,
+    bits: usize,
+    len: usize,
+}
+
+impl CodeStore {
+    /// An empty store for `bits`-bit codes.
+    pub fn new(bits: usize) -> CodeStore {
+        CodeStore::with_capacity(bits, 0)
+    }
+
+    /// An empty store with room for `rows` codes.
+    pub fn with_capacity(bits: usize, rows: usize) -> CodeStore {
+        assert!(bits >= 1, "codes need at least one bit");
+        let wpc = words_for_bits(bits);
+        CodeStore { words: Vec::with_capacity(rows * wpc), wpc, bits, len: 0 }
+    }
+
+    /// Rebuild a store from its raw parts (the load path of
+    /// [`super::IndexHandle`]); `words.len()` must be `rows × ⌈bits/64⌉`.
+    pub fn from_raw(bits: usize, rows: usize, words: Vec<u64>) -> Result<CodeStore, String> {
+        let wpc = words_for_bits(bits.max(1));
+        if bits == 0 || words.len() != rows * wpc {
+            return Err(format!(
+                "raw code store mismatch: bits={bits} rows={rows} words={}",
+                words.len()
+            ));
+        }
+        Ok(CodeStore { words, wpc, bits, len: rows })
+    }
+
+    /// Append one packed code.
+    pub fn push(&mut self, code: &[u64]) {
+        assert_eq!(code.len(), self.wpc, "code width mismatch");
+        self.words.extend_from_slice(code);
+        self.len += 1;
+    }
+
+    /// Number of stored codes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when nothing is stored.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Code length in bits.
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    /// Packed words per code.
+    pub fn words_per_code(&self) -> usize {
+        self.wpc
+    }
+
+    /// The packed words of code `i`.
+    pub fn code(&self, i: usize) -> &[u64] {
+        &self.words[i * self.wpc..(i + 1) * self.wpc]
+    }
+
+    /// The whole packed buffer (the save path of
+    /// [`super::IndexHandle`]).
+    pub fn as_words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Hamming distance from stored code `i` to a query code.
+    pub fn hamming_to(&self, i: usize, query: &[u64]) -> u32 {
+        hamming(self.code(i), query)
+    }
+
+    /// Exact Hamming top-k over the whole store, sorted by
+    /// `(hamming, id)` ascending (deterministic tie-break). Returns
+    /// fewer than `k` hits only when the store is smaller than `k`.
+    pub fn top_k(&self, query: &[u64], k: usize) -> Vec<SearchHit> {
+        self.top_k_of(query, k, 0..self.len)
+    }
+
+    /// Exact Hamming top-k over a subset of row ids (the bucketed
+    /// probe path). Ids must be in-range; duplicates would be reported
+    /// twice.
+    pub fn top_k_of(
+        &self,
+        query: &[u64],
+        k: usize,
+        ids: impl IntoIterator<Item = usize>,
+    ) -> Vec<SearchHit> {
+        assert_eq!(query.len(), self.wpc, "query code width mismatch");
+        if k == 0 {
+            return Vec::new();
+        }
+        // bounded max-heap: the root is the current worst kept hit
+        let mut heap: BinaryHeap<(u32, usize)> = BinaryHeap::with_capacity(k + 1);
+        for id in ids {
+            let h = self.hamming_to(id, query);
+            if heap.len() < k {
+                heap.push((h, id));
+            } else if let Some(&(worst_h, worst_id)) = heap.peek() {
+                if (h, id) < (worst_h, worst_id) {
+                    heap.pop();
+                    heap.push((h, id));
+                }
+            }
+        }
+        let mut kept: Vec<(u32, usize)> = heap.into_vec();
+        kept.sort_unstable();
+        kept.into_iter()
+            .map(|(h, id)| SearchHit {
+                id,
+                hamming: h,
+                similarity: angular_similarity(h, self.bits),
+            })
+            .collect()
+    }
+}
+
+/// Flat binary-code similarity index: a [`BinaryCodec`] plus a
+/// [`CodeStore`] of every corpus row's code. `search` is an exact
+/// Hamming top-k scan — `O(corpus × ⌈m/64⌉)` word ops per query — and
+/// is the recall reference for the bucketed variant
+/// ([`super::BucketIndex`]).
+pub struct CodeIndex {
+    codec: BinaryCodec,
+    store: CodeStore,
+}
+
+impl CodeIndex {
+    /// Encode `corpus` on the calling thread and index it.
+    pub fn build(codec: BinaryCodec, corpus: &[Vec<f64>]) -> CodeIndex {
+        let mut store = CodeStore::with_capacity(codec.bits(), corpus.len());
+        for code in codec.encode_batch(corpus) {
+            store.push(&code);
+        }
+        CodeIndex { codec, store }
+    }
+
+    /// Encode `corpus` sharded across an [`StreamingPool`] (`workers ==
+    /// 0` means one per core) and index it. Codes are identical to
+    /// [`CodeIndex::build`]: the f64 batched kernels are bit-identical
+    /// per row regardless of sharding, and sign bits are taken from
+    /// those exact features.
+    pub fn build_parallel(codec: BinaryCodec, corpus: &[Vec<f64>], workers: usize) -> CodeIndex {
+        if corpus.is_empty() {
+            return CodeIndex { store: CodeStore::new(codec.bits()), codec };
+        }
+        let workers = if workers == 0 { default_workers() } else { workers };
+        if workers == 1 || corpus.len() < 2 {
+            return CodeIndex::build(codec, corpus);
+        }
+        let pool = StreamingPool::<f64>::new(codec.plan().clone(), workers);
+        let input = Arc::new(BatchBuf::from_rows(corpus));
+        let shards = pool.embed_shards(input);
+        pool.shutdown();
+        let bits = codec.bits();
+        let wpc = codec.words_per_code();
+        let mut store = CodeStore::with_capacity(bits, corpus.len());
+        let mut words = vec![0u64; wpc];
+        for shard in shards {
+            // shards arrive sorted by starting row: ids stay corpus order
+            for feats in shard.feats.chunks_exact(bits) {
+                super::codec::pack_bits(feats, &mut words);
+                store.push(&words);
+            }
+        }
+        assert_eq!(store.len(), corpus.len(), "shards must cover the corpus");
+        CodeIndex { codec, store }
+    }
+
+    /// Wrap an already-populated store (the load path).
+    pub fn from_parts(codec: BinaryCodec, store: CodeStore) -> Result<CodeIndex, String> {
+        if store.bits() != codec.bits() {
+            return Err(format!(
+                "store holds {}-bit codes but the codec emits {} bits",
+                store.bits(),
+                codec.bits()
+            ));
+        }
+        Ok(CodeIndex { codec, store })
+    }
+
+    /// The codec.
+    pub fn codec(&self) -> &BinaryCodec {
+        &self.codec
+    }
+
+    /// The packed code store.
+    pub fn store(&self) -> &CodeStore {
+        &self.store
+    }
+
+    /// Indexed corpus size.
+    pub fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    /// True when the index holds no codes.
+    pub fn is_empty(&self) -> bool {
+        self.store.is_empty()
+    }
+
+    /// Encode a query vector and scan for its Hamming top-k.
+    pub fn search(&self, query: &[f64], k: usize) -> Vec<SearchHit> {
+        self.search_codes(&self.codec.encode_one(query), k)
+    }
+
+    /// Top-k for an already-encoded query code.
+    pub fn search_codes(&self, query_code: &[u64], k: usize) -> Vec<SearchHit> {
+        self.store.top_k(query_code, k)
+    }
+
+    /// Batch search: queries are encoded through one batched pass, then
+    /// scanned independently.
+    pub fn search_batch(&self, queries: &[Vec<f64>], k: usize) -> Vec<Vec<SearchHit>> {
+        self.codec.encode_batch(queries).iter().map(|code| self.search_codes(code, k)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmodel::StructureKind;
+    use crate::rng::Rng;
+    use crate::transform::{EmbeddingConfig, Nonlinearity};
+
+    fn codec(m: usize, n: usize) -> BinaryCodec {
+        BinaryCodec::new(
+            EmbeddingConfig::new(StructureKind::Circulant, m, n, Nonlinearity::Heaviside)
+                .with_seed(7),
+        )
+        .unwrap()
+    }
+
+    fn corpus(rows: usize, n: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Rng::new(seed);
+        (0..rows).map(|_| rng.gaussian_vec(n)).collect()
+    }
+
+    #[test]
+    fn store_pushes_and_reads_codes() {
+        let mut s = CodeStore::new(100);
+        assert!(s.is_empty());
+        s.push(&[1, 2]);
+        s.push(&[3, 4]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.code(1), &[3, 4]);
+        assert_eq!(s.hamming_to(0, &[0, 2]), 1);
+        assert_eq!(s.as_words(), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn from_raw_validates_shape() {
+        assert!(CodeStore::from_raw(64, 2, vec![0, 0]).is_ok());
+        assert!(CodeStore::from_raw(64, 2, vec![0]).is_err());
+        assert!(CodeStore::from_raw(0, 0, vec![]).is_err());
+    }
+
+    #[test]
+    fn top_k_matches_exhaustive_scan() {
+        let c = codec(64, 32);
+        let rows = corpus(50, 32, 1);
+        let index = CodeIndex::build(c.clone(), &rows);
+        let q = &rows[17];
+        let qcode = c.encode_one(q);
+        // exhaustive reference: all (hamming, id) sorted
+        let mut all: Vec<(u32, usize)> =
+            (0..rows.len()).map(|i| (index.store().hamming_to(i, &qcode), i)).collect();
+        all.sort_unstable();
+        let hits = index.search(q, 10);
+        assert_eq!(hits.len(), 10);
+        for (hit, want) in hits.iter().zip(&all) {
+            assert_eq!((hit.hamming, hit.id), *want);
+        }
+        // self-match comes first at hamming 0
+        assert_eq!(hits[0].id, 17);
+        assert_eq!(hits[0].hamming, 0);
+        assert_eq!(hits[0].similarity, 1.0);
+    }
+
+    #[test]
+    fn top_k_clamps_to_corpus_size_and_k_zero_is_empty() {
+        let c = codec(64, 32);
+        let rows = corpus(4, 32, 2);
+        let index = CodeIndex::build(c, &rows);
+        assert_eq!(index.search(&rows[0], 10).len(), 4);
+        assert!(index.search(&rows[0], 0).is_empty());
+    }
+
+    #[test]
+    fn search_batch_matches_individual_searches() {
+        let c = codec(64, 32);
+        let rows = corpus(30, 32, 3);
+        let index = CodeIndex::build(c, &rows);
+        let queries: Vec<Vec<f64>> = rows[..5].to_vec();
+        let batch = index.search_batch(&queries, 3);
+        for (q, hits) in queries.iter().zip(&batch) {
+            assert_eq!(hits, &index.search(q, 3));
+        }
+    }
+
+    #[test]
+    fn parallel_build_matches_serial_build() {
+        let rows = corpus(83, 32, 4);
+        let serial = CodeIndex::build(codec(96, 32), &rows);
+        for workers in [1usize, 2, 3] {
+            let parallel = CodeIndex::build_parallel(codec(96, 32), &rows, workers);
+            assert_eq!(parallel.store(), serial.store(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn empty_corpus_yields_empty_index() {
+        let index = CodeIndex::build_parallel(codec(64, 32), &[], 3);
+        assert!(index.is_empty());
+        assert!(index.search(&vec![0.5; 32], 5).is_empty());
+    }
+}

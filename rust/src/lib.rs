@@ -25,20 +25,27 @@
 //!   workers read request payloads in place ([`engine::RowSource`]),
 //!   all monomorphized per precision through [`engine::EngineScalar`]
 //!   ([`engine`]),
+//! - a binary-code similarity index over the sign projections: batch
+//!   sign-hash codec into packed `u64` words, flat XOR+popcount
+//!   Hamming top-k plus a multi-probe bucketed variant, corpus builds
+//!   sharded across the streaming pool, and a recall@k harness judged
+//!   against [`exact`] brute force ([`index`]),
 //! - an experiment/eval harness regenerating the paper's figures and
 //!   validating its theorems, with point sets embedded through the
 //!   engine ([`eval`]),
 //! - a PJRT runtime that loads JAX/Pallas AOT artifacts ([`runtime`],
 //!   behind the `pjrt` feature),
 //! - an embedding-serving coordinator: router, dynamic batcher, metrics
-//!   (including f32 shadow-oracle accuracy sampling), per-variant
-//!   precision knob ([`coordinator`]) — native variants execute through
-//!   the engine's fused zero-staging streaming path.
+//!   (including f32 shadow-oracle accuracy sampling and index query
+//!   counters), per-variant precision knob, named similarity indexes
+//!   served alongside `embed` ([`coordinator`]) — native variants
+//!   execute through the engine's fused zero-staging streaming path.
 //!
 //! Layering: `dsp`/`rng` → `pmodel` → `transform` → **`engine`** →
-//! `coordinator`/`eval`. The engine is the only layer the serving stack
-//! calls for native compute; per-vector `StructuredEmbedding::embed`
-//! remains the reference path and test oracle.
+//! `index` → `coordinator`/`eval`. The engine is the only layer the
+//! serving stack calls for native compute; per-vector
+//! `StructuredEmbedding::embed` remains the reference path and test
+//! oracle.
 //!
 //! # Precision
 //!
@@ -77,6 +84,7 @@ pub mod dsp;
 pub mod engine;
 pub mod eval;
 pub mod exact;
+pub mod index;
 pub mod pmodel;
 pub mod prop;
 pub mod rng;

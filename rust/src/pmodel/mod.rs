@@ -374,6 +374,22 @@ impl StructureKind {
         }
     }
 
+    /// The canonical CLI token: `StructureKind::parse(k.token())`
+    /// round-trips for every family (unlike [`StructureKind::label`],
+    /// whose `ldr(r=2)` form is for tables only). Persisted formats
+    /// (e.g. index file headers) store this.
+    pub fn token(&self) -> String {
+        match self {
+            StructureKind::Dense => "dense".into(),
+            StructureKind::Circulant => "circulant".into(),
+            StructureKind::SkewCirculant => "skew".into(),
+            StructureKind::Toeplitz => "toeplitz".into(),
+            StructureKind::Hankel => "hankel".into(),
+            StructureKind::Ldr(r) => format!("ldr:{r}"),
+            StructureKind::Grouped(b) => format!("grouped:{b}"),
+        }
+    }
+
     /// Human-readable name.
     pub fn label(&self) -> String {
         match self {
@@ -603,6 +619,13 @@ mod tests {
         dedup.sort();
         dedup.dedup();
         assert_eq!(labels.len(), dedup.len());
+    }
+
+    #[test]
+    fn tokens_parse_back_to_their_family() {
+        for kind in StructureKind::all() {
+            assert_eq!(StructureKind::parse(&kind.token()), Some(kind), "{}", kind.token());
+        }
     }
 
     #[test]

@@ -66,9 +66,22 @@ impl Nonlinearity {
         }
     }
 
-    /// Scalar f (not defined for CosSin, which is vector-valued).
+    /// Scalar f. Panics for `CosSin`, which has no scalar form — code
+    /// handling a *parsed* (runtime-chosen) nonlinearity should use
+    /// [`Nonlinearity::try_scalar`] and surface an error at the parse
+    /// boundary instead of reaching the panic deep in a hot loop.
     pub fn scalar(&self, x: f64) -> f64 {
         self.scalar_at(x)
+    }
+
+    /// Fallible scalar f: `None` for the vector-valued `CosSin`. This
+    /// is the entry point for paths whose nonlinearity comes from user
+    /// input — reject at parse time rather than panic mid-batch.
+    pub fn try_scalar(&self, x: f64) -> Option<f64> {
+        match self {
+            Nonlinearity::CosSin => None,
+            _ => Some(self.scalar_at(x)),
+        }
     }
 
     /// Precision-generic scalar f — the body shared by the f32 and f64
@@ -97,7 +110,11 @@ impl Nonlinearity {
                     S::ZERO
                 }
             }
-            Nonlinearity::CosSin => panic!("CosSin is vector-valued; use apply()"),
+            Nonlinearity::CosSin => panic!(
+                "Nonlinearity::scalar has no CosSin form: CosSin maps each projection z to \
+                 the pair (cos z, sin z) — use the vector-valued Nonlinearity::apply_into \
+                 (or apply), or branch on try_scalar"
+            ),
         }
     }
 
@@ -213,9 +230,19 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn cossin_scalar_panics() {
+    #[should_panic(expected = "apply_into")]
+    fn cossin_scalar_panics_naming_the_vector_entry_point() {
         Nonlinearity::CosSin.scalar(1.0);
+    }
+
+    #[test]
+    fn try_scalar_is_none_only_for_cossin() {
+        assert_eq!(Nonlinearity::CosSin.try_scalar(1.0), None);
+        for f in Nonlinearity::all() {
+            if f != Nonlinearity::CosSin {
+                assert_eq!(f.try_scalar(0.5), Some(f.scalar(0.5)), "{}", f.label());
+            }
+        }
     }
 
     #[test]

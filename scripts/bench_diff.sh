@@ -9,6 +9,9 @@
 #                                        batched_ns_per_row
 #   fused_pool[]: (family, batch)     -> staged_ns_per_row,
 #                                        fused_ns_per_row
+#   index[]:      (family, m)         -> encode_ns_per_row (present on
+#                                        the family's first corpus row)
+#                 (family, m, corpus) -> search_ns_per_query
 #
 # THRESHOLD_PCT defaults to 10 (also overridable via the
 # BENCH_DIFF_THRESHOLD environment variable). Entries present only in
@@ -51,6 +54,13 @@ def tracked(report):
         key = f"{r['family']}/batch{r['batch']}"
         out[f"{key}/staged"] = float(r["staged_ns_per_row"])
         out[f"{key}/fused"] = float(r["fused_ns_per_row"])
+    for r in report.get("index", []):
+        key = f"index/{r['family']}/m{r['m']}"
+        # encode is corpus-size-independent: one measurement per family,
+        # attached to that family's first corpus row only
+        if "encode_ns_per_row" in r:
+            out[f"{key}/encode"] = float(r["encode_ns_per_row"])
+        out[f"{key}/corpus{r['corpus']}/search"] = float(r["search_ns_per_query"])
     return out
 
 
