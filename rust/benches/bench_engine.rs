@@ -71,6 +71,26 @@ struct FusedStat {
     fused_ns: f64,
 }
 
+/// One cluster-layer embed row of the machine-readable report: ns/row
+/// through a 4-shard same-process router vs driving a single shard
+/// engine in-process (the router-hop overhead at each batch size).
+struct ClusterEmbedStat {
+    shards: usize,
+    batch: usize,
+    /// ns per row through the scatter-gather router
+    router_ns: f64,
+    /// ns per row calling one shard engine directly
+    inproc_ns: f64,
+}
+
+/// One cluster-layer search row: ns per merged scatter-gather top-k
+/// query across `shards` partitions of a `corpus`-row index.
+struct ClusterSearchStat {
+    shards: usize,
+    corpus: usize,
+    merged_ns: f64,
+}
+
 /// Where the machine-readable report lands: the *workspace* root,
 /// regardless of invocation CWD (cargo runs bench binaries from the
 /// package root `rust/`, so a bare relative path would dodge the
@@ -89,6 +109,8 @@ fn write_bench_json(
     stats: &[FamilyStat],
     fused: &[FusedStat],
     index: &[IndexStat],
+    cluster_embed: &[ClusterEmbedStat],
+    cluster_search: &[ClusterSearchStat],
 ) {
     let mut s = String::new();
     s.push_str("{\n");
@@ -132,6 +154,28 @@ fn write_bench_json(
             "    {{\"family\": \"{}\", \"m\": {}, \"corpus\": {}, \
              {encode}\"search_ns_per_query\": {:.1}}}{sep}\n",
             r.family, r.m, r.corpus, r.search_ns_per_query
+        ));
+    }
+    s.push_str("  ],\n  \"cluster\": [\n");
+    for (i, r) in cluster_embed.iter().enumerate() {
+        let sep = if i + 1 == cluster_embed.len() && cluster_search.is_empty() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"kind\": \"embed\", \"shards\": {}, \"batch\": {}, \
+             \"router_ns_per_row\": {:.1}, \"inproc_ns_per_row\": {:.1}, \
+             \"overhead_ns_per_row\": {:.1}}}{sep}\n",
+            r.shards,
+            r.batch,
+            r.router_ns,
+            r.inproc_ns,
+            r.router_ns - r.inproc_ns
+        ));
+    }
+    for (i, r) in cluster_search.iter().enumerate() {
+        let sep = if i + 1 == cluster_search.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"kind\": \"search\", \"shards\": {}, \"corpus\": {}, \
+             \"merged_search_ns_per_query\": {:.1}}}{sep}\n",
+            r.shards, r.corpus, r.merged_ns
         ));
     }
     s.push_str("  ]\n}\n");
@@ -445,6 +489,115 @@ fn main() {
         );
     }
 
+    // cluster layer: router-hop overhead at the serving shape — ns/row
+    // through a 4-shard same-process scatter-gather router vs calling
+    // one shard engine directly — and merged top-k search ns/query
+    // across 4 corpus partitions. The in-process closure clones the
+    // rows per call because the shard entry point consumes its batch,
+    // mirroring the router's per-range copies; what's left is the
+    // scatter/gather machinery itself.
+    use strembed::cluster::{
+        LocalTransport, Router, ShardEngine, ShardReply, ShardRequest, ShardTransport,
+    };
+    let cluster_shards = 4usize;
+    let cluster_variant = "circulant-rff";
+    let mk_specs = || {
+        vec![(
+            cluster_variant.to_string(),
+            strembed::coordinator::BackendSpec::native("circulant", "rff", sm, sn, 3)
+                .expect("cluster spec")
+                .with_precision(strembed::coordinator::Precision::F32)
+                .with_workers(2),
+        )]
+    };
+    let solo_shard = ShardEngine::new("inproc", mk_specs()).expect("solo shard");
+    let transports: Vec<Box<dyn ShardTransport>> = (0..cluster_shards)
+        .map(|i| {
+            let engine = ShardEngine::new(&format!("shard{i}"), mk_specs()).expect("shard");
+            Box::new(LocalTransport::new(Arc::new(engine))) as Box<dyn ShardTransport>
+        })
+        .collect();
+    let cluster_router = Router::handle(transports).expect("router");
+    let mut cluster_embed: Vec<ClusterEmbedStat> = Vec::new();
+    let mut cluster_results = Vec::new();
+    for &b in &[8usize, 64, 512] {
+        let mut rng = Rng::new(19 + b as u64);
+        let rows: Vec<Vec<f32>> = (0..b)
+            .map(|_| rng.gaussian_vec(sn).iter().map(|&v| v as f32).collect())
+            .collect();
+        // warmup both paths
+        cluster_router.embed_batch(cluster_variant, &rows).expect("warmup routed embed");
+        let reply = solo_shard.handle(ShardRequest::Embed {
+            variant: cluster_variant.to_string(),
+            rows: rows.clone(),
+        });
+        assert!(matches!(reply, ShardReply::Embedded { .. }), "warmup in-process embed");
+
+        let inproc = bench(&format!("cluster inproc x{b}"), || {
+            let reply = solo_shard.handle(ShardRequest::Embed {
+                variant: cluster_variant.to_string(),
+                rows: std::hint::black_box(rows.clone()),
+            });
+            std::hint::black_box(reply);
+        });
+        let routed = bench(&format!("cluster router shards={cluster_shards} x{b}"), || {
+            let out = cluster_router
+                .embed_batch(cluster_variant, std::hint::black_box(&rows))
+                .expect("routed embed");
+            std::hint::black_box(out);
+        });
+        cluster_embed.push(ClusterEmbedStat {
+            shards: cluster_shards,
+            batch: b,
+            router_ns: routed.ns_per_op / b as f64,
+            inproc_ns: inproc.ns_per_op / b as f64,
+        });
+        cluster_results.push(inproc);
+        cluster_results.push(routed);
+    }
+    let cluster_corpus = 10_000usize;
+    let mut crng = Rng::new(23);
+    let corpus = gaussian_cloud(cluster_corpus, 64, &mut crng);
+    let cspec = IndexSpec::new(StructureKind::Circulant, 256, 64).with_seed(3);
+    cluster_router.build_index("bench", cspec, &corpus).expect("cluster index build");
+    let cq = vec![corpus[cluster_corpus / 2].clone()];
+    cluster_router.index_query_batch("bench", &cq, 10).expect("warmup merged search");
+    let merged = bench(
+        &format!("cluster merged search shards={cluster_shards} corpus={cluster_corpus}"),
+        || {
+            let ans = cluster_router
+                .index_query_batch("bench", std::hint::black_box(&cq), 10)
+                .expect("merged search");
+            std::hint::black_box(ans);
+        },
+    );
+    let cluster_search = vec![ClusterSearchStat {
+        shards: cluster_shards,
+        corpus: cluster_corpus,
+        merged_ns: merged.ns_per_op,
+    }];
+    cluster_results.push(merged);
+    report(
+        &format!("cluster: router hop vs in-process shard (n={sn}, m={sm}, f32, shards={cluster_shards})"),
+        &cluster_results,
+    );
+    println!();
+    for s in &cluster_embed {
+        println!(
+            "cluster batch={}: router {:.0} ns/row vs in-process {:.0} ns/row ({:+.0} ns/row hop)",
+            s.batch,
+            s.router_ns,
+            s.inproc_ns,
+            s.router_ns - s.inproc_ns
+        );
+    }
+    for s in &cluster_search {
+        println!(
+            "cluster merged search shards={} corpus={}: {:.0} ns/query",
+            s.shards, s.corpus, s.merged_ns
+        );
+    }
+
     write_bench_json(
         &bench_json_path(),
         n,
@@ -453,6 +606,8 @@ fn main() {
         &family_stats,
         &fused_stats,
         &index_stats,
+        &cluster_embed,
+        &cluster_search,
     );
 
     // streaming pool scaling on the acceptance config

@@ -9,20 +9,33 @@
 //! strembed index eval [--rows 10000] [--queries 50] [--k 10] [--ms 64,256]
 //! strembed list [--artifacts DIR]
 //! strembed serve [--addr 127.0.0.1:7878] [--native] [--artifacts DIR]
+//! strembed serve --native --shards 4                 # same-process cluster
+//! strembed serve --shard-of 127.0.0.1:7878 --addr 127.0.0.1:0   # shard process
+//! strembed serve --router 127.0.0.1:9101,127.0.0.1:9102         # TCP router
 //! ```
+//!
+//! `serve` accepts `--addr HOST:0` and prints the actually bound
+//! address (`listening on HOST:PORT`) on stdout so scripts can scrape
+//! the chosen port.
 
 mod args;
 
 pub use args::Args;
 
+use crate::cluster::{
+    spawn_health_monitor, ClusterHandle, LocalTransport, Router, ShardEngine, ShardTransport,
+    TcpTransport, TcpTransportConfig,
+};
 use crate::coherence::{coherence_graph, pmodel_stats};
 use crate::coordinator::{serve_tcp, BackendSpec, Coordinator, CoordinatorConfig, Precision};
 use crate::eval::{run_experiment, EXPERIMENTS};
 use crate::pmodel::StructureKind;
 use crate::rng::Rng;
 use crate::transform::{EmbeddingConfig, Nonlinearity};
-use std::sync::atomic::AtomicBool;
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// CLI entrypoint (returns process exit code semantics via panic-free Result).
 pub fn main() {
@@ -68,7 +81,16 @@ fn usage() -> String {
          \x20                                                          = one per core; library builders\n\
          \x20                                                          default to f64; --index-rows > 0\n\
          \x20                                                          also serves a demo 'default'\n\
-         \x20                                                          similarity index via INDEX)\n\n\
+         \x20                                                          similarity index via INDEX;\n\
+         \x20                                                          --addr H:0 picks a free port and\n\
+         \x20                                                          prints 'listening on H:PORT')\n\
+         \x20            [--shards N]                                  same-process cluster: scatter-\n\
+         \x20                                                          gather router over N shard\n\
+         \x20                                                          executors, same client protocol\n\
+         \x20            [--router H:P,H:P,...]                        router over remote shard\n\
+         \x20                                                          processes (frame protocol)\n\
+         \x20            [--shard-of ROUTER] [--shard-name S]          run THIS process as a shard\n\
+         \x20                                                          executor the router dials\n\n\
          experiments:\n",
     );
     for e in EXPERIMENTS {
@@ -270,35 +292,103 @@ fn cmd_list(args: &Args) -> Result<String, String> {
     Ok(out)
 }
 
+/// Print the actually bound listener address on stdout, flushed, so a
+/// parent process scraping our output learns the port chosen for
+/// `--addr HOST:0` before the first request arrives.
+fn announce_bound(bound: std::net::SocketAddr) {
+    println!("listening on {bound}");
+    let _ = std::io::stdout().flush();
+}
+
+/// The representative native variant set: served directly by
+/// `serve --native`, hosted on every shard executor in clustered
+/// modes, and mirrored as [`BackendSpec::Cluster`] specs on the
+/// router so the client protocol sees the same variant names.
+fn native_serve_specs(args: &Args) -> Result<Vec<(String, BackendSpec)>, String> {
+    // native f32 is the serving default: the wire format is f32, so
+    // the end-to-end single-precision pipeline avoids all
+    // conversions, and every variant runs on the fused streaming
+    // pool (persistent per-core workers, zero staging copies)
+    let precision = Precision::parse(args.get("precision", "f32")).ok_or("bad --precision")?;
+    let workers = args.get_usize("workers", 0)?; // 0 = one per core
+    let mut specs = Vec::new();
+    for (name, structure, f) in [
+        ("circulant-sign", "circulant", "sign"),
+        ("circulant-rff", "circulant", "rff"),
+        ("toeplitz-rff", "toeplitz", "rff"),
+    ] {
+        let spec = BackendSpec::native(
+            structure,
+            f,
+            args.get_usize("m", 64)?,
+            args.get_usize("n", 128)?,
+            args.get_u64("seed", 2016)?,
+        )
+        .map_err(|e| format!("{e:#}"))?
+        .with_precision(precision)
+        .with_workers(workers);
+        specs.push((name.to_string(), spec));
+    }
+    Ok(specs)
+}
+
+/// `serve --shard-of ROUTER`: run this process as a shard executor.
+/// Hosts the native variant set behind the cluster frame protocol and
+/// waits for the router at `ROUTER` to dial in (the address is
+/// informational — connections flow router → shard).
+fn cmd_serve_shard(args: &Args) -> Result<String, String> {
+    let router = args.require("shard-of")?;
+    let addr = args.get("addr", "127.0.0.1:0").to_string();
+    let name = args.get("shard-name", "shard").to_string();
+    let engine = Arc::new(ShardEngine::new(&name, native_serve_specs(args)?)?);
+    println!(
+        "shard '{name}' serving {} variants for router {router}",
+        engine.variant_names().len()
+    );
+    let stop = Arc::new(AtomicBool::new(false));
+    crate::cluster::serve_shard(engine, &addr, stop, announce_bound).map_err(|e| e.to_string())?;
+    Ok(String::new())
+}
+
 fn cmd_serve(args: &Args) -> Result<String, String> {
+    if args.options.contains_key("shard-of") {
+        return cmd_serve_shard(args);
+    }
     let addr = args.get("addr", "127.0.0.1:7878").to_string();
+    // clustered modes build the router first; the coordinator then
+    // routes through it instead of owning engines
+    let cluster: Option<ClusterHandle> = if let Some(peers) = args.options.get("router") {
+        let transports: Vec<Box<dyn ShardTransport>> = peers
+            .split(',')
+            .map(str::trim)
+            .filter(|p| !p.is_empty())
+            .map(|p| {
+                Box::new(TcpTransport::new(p, TcpTransportConfig::default()))
+                    as Box<dyn ShardTransport>
+            })
+            .collect();
+        Some(Router::handle(transports)?)
+    } else if args.get_usize("shards", 0)? > 0 {
+        let shard_specs = native_serve_specs(args)?;
+        let transports: Vec<Box<dyn ShardTransport>> = (0..args.get_usize("shards", 0)?)
+            .map(|i| {
+                let engine = ShardEngine::new(&format!("shard{i}"), shard_specs.clone())?;
+                Ok(Box::new(LocalTransport::new(Arc::new(engine))) as Box<dyn ShardTransport>)
+            })
+            .collect::<Result<_, String>>()?;
+        Some(Router::handle(transports)?)
+    } else {
+        None
+    };
     let mut specs: Vec<(String, BackendSpec)> = Vec::new();
-    if args.flag("native") {
-        // native f32 is the serving default: the wire format is f32, so
-        // the end-to-end single-precision pipeline avoids all
-        // conversions, and every variant runs on the fused streaming
-        // pool (persistent per-core workers, zero staging copies)
-        let precision =
-            Precision::parse(args.get("precision", "f32")).ok_or("bad --precision")?;
-        let workers = args.get_usize("workers", 0)?; // 0 = one per core
-        // a representative native variant set
-        for (name, structure, f) in [
-            ("circulant-sign", "circulant", "sign"),
-            ("circulant-rff", "circulant", "rff"),
-            ("toeplitz-rff", "toeplitz", "rff"),
-        ] {
-            let spec = BackendSpec::native(
-                structure,
-                f,
-                args.get_usize("m", 64)?,
-                args.get_usize("n", 128)?,
-                args.get_u64("seed", 2016)?,
-            )
-            .map_err(|e| format!("{e:#}"))?
-            .with_precision(precision)
-            .with_workers(workers);
-            specs.push((name.to_string(), spec));
+    if let Some(router) = &cluster {
+        // the coordinator keeps its queues/batching/metrics but each
+        // variant's execution scatters across the shard executors
+        for (name, shard_spec) in native_serve_specs(args)? {
+            specs.push((name.clone(), BackendSpec::cluster(&name, &shard_spec, router.clone())));
         }
+    } else if args.flag("native") {
+        specs = native_serve_specs(args)?;
     } else {
         let dir = match args.options.get("artifacts") {
             Some(d) => std::path::PathBuf::from(d),
@@ -313,12 +403,21 @@ fn cmd_serve(args: &Args) -> Result<String, String> {
         }
     }
     let coordinator = Arc::new(
-        Coordinator::start(specs, CoordinatorConfig::default()).map_err(|e| format!("{e:#}"))?,
+        Coordinator::start_with_cluster(specs, CoordinatorConfig::default(), cluster.clone())
+            .map_err(|e| format!("{e:#}"))?,
     );
+    let stop = Arc::new(AtomicBool::new(false));
+    let monitor = cluster.as_ref().map(|router| {
+        let statuses = router.probe();
+        let live = statuses.iter().filter(|s| s.alive).count();
+        println!("cluster: {live}/{} shards live", statuses.len());
+        spawn_health_monitor(router, Duration::from_millis(500), stop.clone())
+    });
     // optional out-of-the-box similarity search: index a synthetic
     // clustered corpus under the name "default" so the TCP `INDEX`
     // command answers immediately (real deployments register corpora
-    // through Coordinator::build_index)
+    // through Coordinator::build_index — in clustered mode the build
+    // scatters round-robin across live shard executors)
     let index_rows = args.get_usize("index-rows", 0)?;
     if index_rows > 0 {
         let spec = crate::index::IndexSpec::new(
@@ -335,9 +434,11 @@ fn cmd_serve(args: &Args) -> Result<String, String> {
         println!("index 'default' ready: {rows} rows");
     }
     println!("serving {} variants on {addr}", coordinator.variant_names().len());
-    let stop = Arc::new(AtomicBool::new(false));
-    serve_tcp(coordinator, &addr, stop, |bound| println!("listening on {bound}"))
-        .map_err(|e| e.to_string())?;
+    serve_tcp(coordinator, &addr, stop.clone(), announce_bound).map_err(|e| e.to_string())?;
+    stop.store(true, Ordering::SeqCst);
+    if let Some(m) = monitor {
+        let _ = m.join();
+    }
     Ok(String::new())
 }
 
@@ -442,5 +543,17 @@ mod tests {
     #[test]
     fn unknown_command_errors() {
         assert!(run_cmd("frobnicate").is_err());
+    }
+
+    #[test]
+    fn native_serve_specs_builds_variant_set() {
+        let args =
+            Args::parse("serve --native --m 8 --n 16".split_whitespace().map(str::to_string));
+        let specs = native_serve_specs(&args).unwrap();
+        assert_eq!(specs.len(), 3);
+        assert!(specs.iter().all(|(_, s)| s.n() == 16));
+        // sign keeps m outputs; rff doubles them
+        assert!(specs.iter().any(|(_, s)| s.out_dim() == 8));
+        assert!(specs.iter().any(|(_, s)| s.out_dim() == 16));
     }
 }

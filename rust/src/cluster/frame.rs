@@ -1,0 +1,718 @@
+//! Length-prefixed binary frames spoken between the router and shard
+//! executors.
+//!
+//! Wire layout (all integers little-endian):
+//!
+//! ```text
+//! [len: u32] [request id: u64] [opcode: u8] [body...]
+//! ```
+//!
+//! `len` counts every byte after the length field itself, so a frame
+//! occupies `4 + len` bytes on the wire. Request ids are chosen by the
+//! sender and echoed verbatim in the matching reply, which lets a
+//! transport pipeline many requests over one connection and pair
+//! replies out of band. `len` is validated against
+//! [`MIN_PAYLOAD_BYTES`] / [`MAX_FRAME_BYTES`] *before* any payload
+//! allocation, so a malicious or corrupt header can never drive an
+//! oversized allocation.
+//!
+//! Variable-length fields inside the body carry their own `u32` counts
+//! (strings are length-prefixed UTF-8; row matrices are a row count
+//! followed by one length-prefixed scalar vector per row). Every
+//! decoder checks declared counts against the bytes actually remaining
+//! before allocating, and a decoded body must consume the payload
+//! exactly — trailing bytes are a [`FrameError`], not silently ignored.
+
+use crate::index::IndexSpec;
+use crate::pmodel::StructureKind;
+use std::io::Read;
+
+/// Hard ceiling on a frame's declared payload length (64 MiB). Frames
+/// claiming more are rejected from the 4-byte header alone.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Smallest legal payload: request id (8) + opcode (1).
+pub const MIN_PAYLOAD_BYTES: usize = 9;
+
+/// A malformed, truncated or oversized frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FrameError(pub String);
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "frame error: {}", self.0)
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// One request from the router to a shard executor.
+#[derive(Debug, Clone)]
+pub enum ShardRequest {
+    /// Embed a contiguous slice of wire rows through a named variant.
+    Embed {
+        /// variant name on the shard
+        variant: String,
+        /// f32 wire rows, each of the variant's input dimension
+        rows: Vec<Vec<f32>>,
+    },
+    /// Open a streamed index build (resets any pending build of `name`).
+    IndexBegin {
+        /// index name
+        name: String,
+        /// index description (dimensions, seed, layout)
+        spec: IndexSpec,
+    },
+    /// Append one bounded chunk of corpus rows to a pending build.
+    IndexRows {
+        /// index name of the pending build
+        name: String,
+        /// global corpus ids, parallel to `rows`, strictly increasing
+        /// within a shard so local `(hamming, id)` order maps to global
+        ids: Vec<u64>,
+        /// corpus rows at the f64 oracle precision
+        rows: Vec<Vec<f64>>,
+    },
+    /// Build and register the pending index from its streamed rows.
+    IndexCommit {
+        /// index name of the pending build
+        name: String,
+    },
+    /// Top-k Hamming search over this shard's corpus partition.
+    IndexQuery {
+        /// index name
+        name: String,
+        /// neighbors requested per query
+        k: u32,
+        /// query rows at the f64 oracle precision
+        queries: Vec<Vec<f64>>,
+    },
+    /// Liveness probe; the reply carries the shard's health line.
+    Health,
+}
+
+/// One hit on the wire: global corpus id + Hamming distance. Similarity
+/// is recomputed at the router from the index's code length, so it
+/// never rides the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireHit {
+    /// global corpus id
+    pub id: u64,
+    /// Hamming distance to the query code
+    pub hamming: u32,
+}
+
+/// One reply from a shard executor to the router.
+#[derive(Debug, Clone)]
+pub enum ShardReply {
+    /// Embedded feature rows, in the order the request rows arrived.
+    Embedded {
+        /// f32 feature rows
+        rows: Vec<Vec<f32>>,
+    },
+    /// Generic acknowledgement (index begin / rows).
+    Ok,
+    /// A pending build was committed with this many corpus rows.
+    Committed {
+        /// rows indexed on this shard
+        rows: u64,
+    },
+    /// Per-query top-k hits over this shard's partition, each list
+    /// sorted by `(hamming, id)` ascending.
+    Hits {
+        /// buckets probed across the batch on this shard
+        probed: u64,
+        /// ranked hits per query
+        hits: Vec<Vec<WireHit>>,
+    },
+    /// Liveness reply carrying the shard's one-line health summary
+    /// (same format as the client TCP `HEALTH` command).
+    Health {
+        /// health line, including a metrics snapshot
+        line: String,
+    },
+    /// Application-level failure (the connection stays usable).
+    Err {
+        /// error text
+        message: String,
+    },
+}
+
+const REQ_EMBED: u8 = 1;
+const REQ_INDEX_BEGIN: u8 = 2;
+const REQ_INDEX_ROWS: u8 = 3;
+const REQ_INDEX_COMMIT: u8 = 4;
+const REQ_INDEX_QUERY: u8 = 5;
+const REQ_HEALTH: u8 = 6;
+
+const REP_EMBEDDED: u8 = 65;
+const REP_OK: u8 = 66;
+const REP_COMMITTED: u8 = 67;
+const REP_HITS: u8 = 68;
+const REP_HEALTH: u8 = 69;
+const REP_ERR: u8 = 70;
+
+/// Validate a frame's declared payload length (from its 4-byte header)
+/// against the protocol bounds before any allocation happens.
+pub fn check_len(len: u32) -> Result<usize, FrameError> {
+    let len = len as usize;
+    if len < MIN_PAYLOAD_BYTES {
+        return Err(FrameError(format!(
+            "payload of {len} bytes is shorter than the {MIN_PAYLOAD_BYTES}-byte minimum"
+        )));
+    }
+    if len > MAX_FRAME_BYTES {
+        return Err(FrameError(format!(
+            "oversized payload: {len} bytes (max {MAX_FRAME_BYTES})"
+        )));
+    }
+    Ok(len)
+}
+
+/// The request id of a payload, when at least the id field is present.
+/// Lets a server echo the right id on an `Err` reply even when the rest
+/// of the body fails to decode.
+pub fn payload_id(payload: &[u8]) -> Option<u64> {
+    payload
+        .get(..8)
+        .map(|b| u64::from_le_bytes(b.try_into().expect("8-byte slice")))
+}
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    put_u32(b, s.len() as u32);
+    b.extend_from_slice(s.as_bytes());
+}
+
+fn put_rows_f32(b: &mut Vec<u8>, rows: &[Vec<f32>]) {
+    put_u32(b, rows.len() as u32);
+    for row in rows {
+        put_u32(b, row.len() as u32);
+        for &v in row {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+fn put_rows_f64(b: &mut Vec<u8>, rows: &[Vec<f64>]) {
+    put_u32(b, rows.len() as u32);
+    for row in rows {
+        put_u32(b, row.len() as u32);
+        for &v in row {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+fn put_spec(b: &mut Vec<u8>, spec: &IndexSpec) {
+    put_str(b, &spec.structure.token());
+    put_u32(b, spec.m as u32);
+    put_u32(b, spec.n as u32);
+    put_u64(b, spec.seed);
+    b.push(spec.preprocess as u8);
+    match spec.bucket_bits {
+        Some(bits) => {
+            b.push(1);
+            put_u32(b, bits as u32);
+        }
+        None => {
+            b.push(0);
+            put_u32(b, 0);
+        }
+    }
+    put_u32(b, spec.probe_radius as u32);
+    put_u32(b, spec.workers as u32);
+}
+
+/// Byte cursor over a payload; every read validates the remaining
+/// length first, so declared counts can never allocate past the frame.
+struct Cur<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> Cur<'a> {
+    fn need(&self, n: usize) -> Result<(), FrameError> {
+        if self.b.len() < n {
+            return Err(FrameError(format!(
+                "truncated body: need {n} more bytes, have {}",
+                self.b.len()
+            )));
+        }
+        Ok(())
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
+        self.need(n)?;
+        let (head, tail) = self.b.split_at(n);
+        self.b = tail;
+        Ok(head)
+    }
+
+    fn u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64, FrameError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn str_(&mut self) -> Result<String, FrameError> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| FrameError("invalid utf-8 string".into()))
+    }
+
+    fn f32_vec(&mut self) -> Result<Vec<f32>, FrameError> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len.saturating_mul(4))?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
+            .collect())
+    }
+
+    fn f64_vec(&mut self) -> Result<Vec<f64>, FrameError> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len.saturating_mul(8))?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().expect("8 bytes")))
+            .collect())
+    }
+
+    fn u64_vec(&mut self) -> Result<Vec<u64>, FrameError> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len.saturating_mul(8))?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().expect("8 bytes")))
+            .collect())
+    }
+
+    fn rows_f32(&mut self) -> Result<Vec<Vec<f32>>, FrameError> {
+        let count = self.u32()? as usize;
+        // each row needs at least its 4-byte length header
+        self.need(count.saturating_mul(4))?;
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            out.push(self.f32_vec()?);
+        }
+        Ok(out)
+    }
+
+    fn rows_f64(&mut self) -> Result<Vec<Vec<f64>>, FrameError> {
+        let count = self.u32()? as usize;
+        self.need(count.saturating_mul(4))?;
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            out.push(self.f64_vec()?);
+        }
+        Ok(out)
+    }
+
+    fn spec(&mut self) -> Result<IndexSpec, FrameError> {
+        let token = self.str_()?;
+        let structure = StructureKind::parse(&token)
+            .ok_or_else(|| FrameError(format!("unknown structure token '{token}'")))?;
+        let m = self.u32()? as usize;
+        let n = self.u32()? as usize;
+        let seed = self.u64()?;
+        let preprocess = self.u8()? != 0;
+        let has_buckets = self.u8()? != 0;
+        let bucket_bits = self.u32()? as usize;
+        let probe_radius = self.u32()? as usize;
+        let workers = self.u32()? as usize;
+        let mut spec = IndexSpec::new(structure, m, n).with_seed(seed);
+        spec.preprocess = preprocess;
+        spec.bucket_bits = has_buckets.then_some(bucket_bits);
+        spec.probe_radius = probe_radius;
+        spec.workers = workers;
+        Ok(spec)
+    }
+
+    fn done(&self) -> Result<(), FrameError> {
+        if self.b.is_empty() {
+            Ok(())
+        } else {
+            Err(FrameError(format!("{} trailing bytes after body", self.b.len())))
+        }
+    }
+}
+
+fn finish(payload: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend(payload);
+    out
+}
+
+/// Encode a request into a complete wire frame (length prefix included).
+pub fn encode_request(id: u64, req: &ShardRequest) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_u64(&mut b, id);
+    match req {
+        ShardRequest::Embed { variant, rows } => {
+            b.push(REQ_EMBED);
+            put_str(&mut b, variant);
+            put_rows_f32(&mut b, rows);
+        }
+        ShardRequest::IndexBegin { name, spec } => {
+            b.push(REQ_INDEX_BEGIN);
+            put_str(&mut b, name);
+            put_spec(&mut b, spec);
+        }
+        ShardRequest::IndexRows { name, ids, rows } => {
+            b.push(REQ_INDEX_ROWS);
+            put_str(&mut b, name);
+            put_u32(&mut b, ids.len() as u32);
+            for &id in ids {
+                put_u64(&mut b, id);
+            }
+            put_rows_f64(&mut b, rows);
+        }
+        ShardRequest::IndexCommit { name } => {
+            b.push(REQ_INDEX_COMMIT);
+            put_str(&mut b, name);
+        }
+        ShardRequest::IndexQuery { name, k, queries } => {
+            b.push(REQ_INDEX_QUERY);
+            put_str(&mut b, name);
+            put_u32(&mut b, *k);
+            put_rows_f64(&mut b, queries);
+        }
+        ShardRequest::Health => b.push(REQ_HEALTH),
+    }
+    finish(b)
+}
+
+/// Encode a reply into a complete wire frame (length prefix included).
+pub fn encode_reply(id: u64, rep: &ShardReply) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_u64(&mut b, id);
+    match rep {
+        ShardReply::Embedded { rows } => {
+            b.push(REP_EMBEDDED);
+            put_rows_f32(&mut b, rows);
+        }
+        ShardReply::Ok => b.push(REP_OK),
+        ShardReply::Committed { rows } => {
+            b.push(REP_COMMITTED);
+            put_u64(&mut b, *rows);
+        }
+        ShardReply::Hits { probed, hits } => {
+            b.push(REP_HITS);
+            put_u64(&mut b, *probed);
+            put_u32(&mut b, hits.len() as u32);
+            for per_query in hits {
+                put_u32(&mut b, per_query.len() as u32);
+                for h in per_query {
+                    put_u64(&mut b, h.id);
+                    put_u32(&mut b, h.hamming);
+                }
+            }
+        }
+        ShardReply::Health { line } => {
+            b.push(REP_HEALTH);
+            put_str(&mut b, line);
+        }
+        ShardReply::Err { message } => {
+            b.push(REP_ERR);
+            put_str(&mut b, message);
+        }
+    }
+    finish(b)
+}
+
+/// Decode a request payload (the bytes after the length prefix).
+pub fn decode_request(payload: &[u8]) -> Result<(u64, ShardRequest), FrameError> {
+    let mut c = Cur { b: payload };
+    let id = c.u64()?;
+    let req = match c.u8()? {
+        REQ_EMBED => ShardRequest::Embed { variant: c.str_()?, rows: c.rows_f32()? },
+        REQ_INDEX_BEGIN => ShardRequest::IndexBegin { name: c.str_()?, spec: c.spec()? },
+        REQ_INDEX_ROWS => {
+            ShardRequest::IndexRows { name: c.str_()?, ids: c.u64_vec()?, rows: c.rows_f64()? }
+        }
+        REQ_INDEX_COMMIT => ShardRequest::IndexCommit { name: c.str_()? },
+        REQ_INDEX_QUERY => {
+            ShardRequest::IndexQuery { name: c.str_()?, k: c.u32()?, queries: c.rows_f64()? }
+        }
+        REQ_HEALTH => ShardRequest::Health,
+        other => return Err(FrameError(format!("unknown request opcode {other}"))),
+    };
+    c.done()?;
+    Ok((id, req))
+}
+
+/// Decode a reply payload (the bytes after the length prefix).
+pub fn decode_reply(payload: &[u8]) -> Result<(u64, ShardReply), FrameError> {
+    let mut c = Cur { b: payload };
+    let id = c.u64()?;
+    let rep = match c.u8()? {
+        REP_EMBEDDED => ShardReply::Embedded { rows: c.rows_f32()? },
+        REP_OK => ShardReply::Ok,
+        REP_COMMITTED => ShardReply::Committed { rows: c.u64()? },
+        REP_HITS => {
+            let probed = c.u64()?;
+            let nq = c.u32()? as usize;
+            c.need(nq.saturating_mul(4))?;
+            let mut hits = Vec::with_capacity(nq);
+            for _ in 0..nq {
+                let nh = c.u32()? as usize;
+                c.need(nh.saturating_mul(12))?;
+                let mut per_query = Vec::with_capacity(nh);
+                for _ in 0..nh {
+                    per_query.push(WireHit { id: c.u64()?, hamming: c.u32()? });
+                }
+                hits.push(per_query);
+            }
+            ShardReply::Hits { probed, hits }
+        }
+        REP_HEALTH => ShardReply::Health { line: c.str_()? },
+        REP_ERR => ShardReply::Err { message: c.str_()? },
+        other => return Err(FrameError(format!("unknown reply opcode {other}"))),
+    };
+    c.done()?;
+    Ok((id, rep))
+}
+
+/// Read one frame payload from a blocking reader. Returns `Ok(None)` on
+/// a clean EOF before any header byte; an EOF mid-header or mid-payload
+/// is a truncation error. The declared length is validated via
+/// [`check_len`] before the payload is allocated.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>, FrameError> {
+    let mut header = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut header[got..]) {
+            Ok(0) => {
+                return if got == 0 {
+                    Ok(None)
+                } else {
+                    Err(FrameError("truncated frame header".into()))
+                };
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError(format!("read header: {e}"))),
+        }
+    }
+    let len = check_len(u32::from_le_bytes(header))?;
+    let mut payload = vec![0u8; len];
+    let mut got = 0;
+    while got < len {
+        match r.read(&mut payload[got..]) {
+            Ok(0) => {
+                return Err(FrameError(format!("truncated payload: got {got} of {len} bytes")));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError(format!("read payload: {e}"))),
+        }
+    }
+    Ok(Some(payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip_request(req: &ShardRequest) -> ShardRequest {
+        let frame = encode_request(7, req);
+        let payload = read_frame(&mut Cursor::new(&frame)).unwrap().unwrap();
+        let (id, decoded) = decode_request(&payload).unwrap();
+        assert_eq!(id, 7);
+        decoded
+    }
+
+    fn roundtrip_reply(rep: &ShardReply) -> ShardReply {
+        let frame = encode_reply(9, rep);
+        let payload = read_frame(&mut Cursor::new(&frame)).unwrap().unwrap();
+        let (id, decoded) = decode_reply(&payload).unwrap();
+        assert_eq!(id, 9);
+        decoded
+    }
+
+    #[test]
+    fn embed_request_roundtrips() {
+        let req = ShardRequest::Embed {
+            variant: "circulant-rff".into(),
+            rows: vec![vec![0.5, -1.25, 3.0], vec![0.0, 7.5, -0.125]],
+        };
+        let ShardRequest::Embed { variant, rows } = roundtrip_request(&req) else {
+            panic!("wrong request kind");
+        };
+        assert_eq!(variant, "circulant-rff");
+        assert_eq!(rows, vec![vec![0.5, -1.25, 3.0], vec![0.0, 7.5, -0.125]]);
+    }
+
+    #[test]
+    fn index_begin_roundtrips_spec() {
+        let spec = IndexSpec::new(StructureKind::Ldr(3), 96, 32)
+            .with_seed(1234567890123)
+            .with_preprocess(false)
+            .with_buckets(8)
+            .with_probe_radius(2)
+            .with_workers(5);
+        let req = ShardRequest::IndexBegin { name: "nn".into(), spec };
+        let ShardRequest::IndexBegin { name, spec } = roundtrip_request(&req) else {
+            panic!("wrong request kind");
+        };
+        assert_eq!(name, "nn");
+        assert_eq!(spec.structure, StructureKind::Ldr(3));
+        assert_eq!((spec.m, spec.n, spec.seed), (96, 32, 1234567890123));
+        assert!(!spec.preprocess);
+        assert_eq!(spec.bucket_bits, Some(8));
+        assert_eq!((spec.probe_radius, spec.workers), (2, 5));
+    }
+
+    #[test]
+    fn flat_spec_keeps_no_buckets() {
+        let req = ShardRequest::IndexBegin {
+            name: "flat".into(),
+            spec: IndexSpec::new(StructureKind::Circulant, 64, 16),
+        };
+        let ShardRequest::IndexBegin { spec, .. } = roundtrip_request(&req) else {
+            panic!("wrong request kind");
+        };
+        assert_eq!(spec.bucket_bits, None);
+        assert!(spec.preprocess);
+    }
+
+    #[test]
+    fn index_rows_and_commit_roundtrip() {
+        let req = ShardRequest::IndexRows {
+            name: "nn".into(),
+            ids: vec![0, 4, 8],
+            rows: vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]],
+        };
+        let ShardRequest::IndexRows { name, ids, rows } = roundtrip_request(&req) else {
+            panic!("wrong request kind");
+        };
+        assert_eq!((name.as_str(), ids), ("nn", vec![0, 4, 8]));
+        assert_eq!(rows[2], vec![5.0, 6.0]);
+        let ShardRequest::IndexCommit { name } =
+            roundtrip_request(&ShardRequest::IndexCommit { name: "nn".into() })
+        else {
+            panic!("wrong request kind");
+        };
+        assert_eq!(name, "nn");
+    }
+
+    #[test]
+    fn query_health_and_replies_roundtrip() {
+        let req = ShardRequest::IndexQuery {
+            name: "nn".into(),
+            k: 5,
+            queries: vec![vec![0.25; 4]],
+        };
+        let ShardRequest::IndexQuery { k, queries, .. } = roundtrip_request(&req) else {
+            panic!("wrong request kind");
+        };
+        assert_eq!((k, queries.len()), (5, 1));
+        assert!(matches!(roundtrip_request(&ShardRequest::Health), ShardRequest::Health));
+
+        let rep = ShardReply::Hits {
+            probed: 3,
+            hits: vec![vec![WireHit { id: 42, hamming: 7 }], vec![]],
+        };
+        let ShardReply::Hits { probed, hits } = roundtrip_reply(&rep) else {
+            panic!("wrong reply kind");
+        };
+        assert_eq!(probed, 3);
+        assert_eq!(hits[0], vec![WireHit { id: 42, hamming: 7 }]);
+        assert!(hits[1].is_empty());
+
+        let ShardReply::Embedded { rows } =
+            roundtrip_reply(&ShardReply::Embedded { rows: vec![vec![1.5, -2.5]] })
+        else {
+            panic!("wrong reply kind");
+        };
+        assert_eq!(rows, vec![vec![1.5, -2.5]]);
+        assert!(matches!(roundtrip_reply(&ShardReply::Ok), ShardReply::Ok));
+        let ShardReply::Committed { rows } =
+            roundtrip_reply(&ShardReply::Committed { rows: 1234 })
+        else {
+            panic!("wrong reply kind");
+        };
+        assert_eq!(rows, 1234);
+        let ShardReply::Health { line } =
+            roundtrip_reply(&ShardReply::Health { line: "healthy x".into() })
+        else {
+            panic!("wrong reply kind");
+        };
+        assert_eq!(line, "healthy x");
+        let ShardReply::Err { message } =
+            roundtrip_reply(&ShardReply::Err { message: "boom".into() })
+        else {
+            panic!("wrong reply kind");
+        };
+        assert_eq!(message, "boom");
+    }
+
+    #[test]
+    fn oversized_and_undersized_headers_rejected() {
+        assert!(check_len((MAX_FRAME_BYTES + 1) as u32).is_err());
+        assert!(check_len(0).is_err());
+        assert!(check_len(8).is_err());
+        assert!(check_len(9).is_ok());
+        // a full read_frame call rejects from the header alone
+        let mut frame = ((MAX_FRAME_BYTES + 1) as u32).to_le_bytes().to_vec();
+        frame.extend_from_slice(&[0u8; 16]);
+        let err = read_frame(&mut Cursor::new(&frame)).unwrap_err();
+        assert!(err.0.contains("oversized"), "{err}");
+    }
+
+    #[test]
+    fn truncated_frames_are_errors_not_hangs() {
+        // clean EOF before any byte
+        assert_eq!(read_frame(&mut Cursor::new(&[])).unwrap(), None);
+        // EOF mid-header
+        assert!(read_frame(&mut Cursor::new(&[9, 0])).unwrap_err().0.contains("header"));
+        // EOF mid-payload
+        let mut frame = encode_request(1, &ShardRequest::Health);
+        frame.truncate(frame.len() - 1);
+        assert!(read_frame(&mut Cursor::new(&frame)).unwrap_err().0.contains("payload"));
+    }
+
+    #[test]
+    fn malformed_bodies_are_errors() {
+        // unknown opcode
+        let mut payload = 5u64.to_le_bytes().to_vec();
+        payload.push(200);
+        assert!(decode_request(&payload).unwrap_err().0.contains("opcode"));
+        // body shorter than its declared string length
+        let mut payload = 5u64.to_le_bytes().to_vec();
+        payload.push(REQ_INDEX_COMMIT);
+        payload.extend_from_slice(&100u32.to_le_bytes());
+        payload.extend_from_slice(b"abc");
+        assert!(decode_request(&payload).unwrap_err().0.contains("truncated"));
+        // trailing garbage after a well-formed body
+        let frame = encode_request(1, &ShardRequest::Health);
+        let mut payload = frame[4..].to_vec();
+        payload.push(0xFF);
+        assert!(decode_request(&payload).unwrap_err().0.contains("trailing"));
+        // a bogus row count larger than the remaining bytes must not allocate
+        let mut payload = 1u64.to_le_bytes().to_vec();
+        payload.push(REQ_EMBED);
+        payload.extend_from_slice(&1u32.to_le_bytes()); // variant len 1
+        payload.push(b'v');
+        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // absurd row count
+        assert!(decode_request(&payload).unwrap_err().0.contains("truncated"));
+        // id is still recoverable from a malformed payload
+        assert_eq!(payload_id(&payload), Some(1));
+        assert_eq!(payload_id(&[1, 2, 3]), None);
+    }
+}

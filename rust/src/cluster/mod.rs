@@ -1,0 +1,61 @@
+//! Distributed serving tier: a scatter-gather [`Router`] over N
+//! [`ShardEngine`] executors, behind the same coordinator API a single
+//! node exposes.
+//!
+//! # Data flow
+//!
+//! ```text
+//! client ──text──▶ Coordinator ──▶ ClusterHandle (Router)
+//!                                   │  scatter: frames / direct calls
+//!                        ┌──────────┼──────────┐
+//!                   Shard 0     Shard 1 …  Shard N-1
+//!                (StreamingPool + IndexHandle per shard)
+//!                        └──────────┼──────────┘
+//!                                   ▼  gather: reassemble / merge
+//! ```
+//!
+//! The router splits **embed** batches into contiguous row ranges (one
+//! per live shard) and reassembles the returned features in row order;
+//! since each row runs whole through the same per-row f64 kernels a
+//! single node uses, the assembled batch is bit-identical to the
+//! single-node result. **Index** corpora are partitioned round-robin
+//! by global row id and streamed out in bounded chunks; per-shard
+//! Hamming top-k lists come back in global-id terms and are merged by
+//! `(hamming, id)` ascending — the exact tie-break the single-node
+//! [`crate::index::CodeStore`] scan uses — so an N-shard k-NN answer
+//! equals the 1-shard answer.
+//!
+//! # Transports
+//!
+//! Both cluster modes speak through one [`ShardTransport`] trait:
+//! [`LocalTransport`] (same-process shards; `serve --shards N` and the
+//! tests) and [`TcpTransport`] (shard processes started with `serve
+//! --shard-of`, dialed by `serve --router`). The TCP mode uses the
+//! length-prefixed binary frames of [`frame`] with per-request ids for
+//! pipelining and a bounded in-flight window for backpressure.
+//!
+//! # Failure semantics
+//!
+//! A shard that cannot be reached is marked dead. Embed work re-queues
+//! onto survivors (answers stay complete and bit-identical); index
+//! answers lose the dead shard's slice and carry
+//! [`ClusterAnswer::partial`]` = true`. [`Router::probe`] — run
+//! periodically by [`spawn_health_monitor`] — HEALTH-probes every
+//! shard and re-admits any that answer, which is how a restarted shard
+//! process re-registers.
+
+pub mod frame;
+pub mod router;
+pub mod shard;
+pub mod tcp;
+pub mod transport;
+
+pub use frame::{FrameError, ShardReply, ShardRequest, WireHit, MAX_FRAME_BYTES};
+pub use router::{
+    spawn_health_monitor, ClusterAnswer, ClusterHandle, Router, ShardStatus, BUILD_CHUNK_ROWS,
+};
+pub use shard::ShardEngine;
+pub use tcp::serve_shard;
+pub use transport::{
+    LocalTransport, ShardTransport, TcpTransport, TcpTransportConfig, TransportError,
+};

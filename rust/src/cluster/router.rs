@@ -1,0 +1,494 @@
+//! The scatter-gather router: partitions work across shard executors
+//! and reassembles answers that are indistinguishable from single-node
+//! results.
+//!
+//! # Partitioning and exactness
+//!
+//! * **Embed** batches are split into contiguous row ranges, one per
+//!   live shard. Every row is computed whole on exactly one shard by
+//!   the same per-row kernels a single node runs, and the engine's f64
+//!   kernels are bit-identical per row regardless of lane count or
+//!   pool size — so reassembling ranges in row order reproduces the
+//!   single-node batch bit-for-bit at f64.
+//! * **Index corpora** are partitioned round-robin by global row id
+//!   (`shard = id mod live_shards`), streamed in bounded
+//!   [`BUILD_CHUNK_ROWS`] chunks. Each shard keeps the global ids and
+//!   answers queries in global-id terms; because every shard's local
+//!   id order is a subsequence of the global order, merging per-shard
+//!   top-k lists by `(hamming, id)` ascending and truncating to `k`
+//!   yields exactly the single-node top-k with the same tie-break.
+//!
+//! # Failure semantics
+//!
+//! A transport-level failure marks the shard dead. Embed scatter
+//! re-queues the dead shard's row ranges onto survivors (the batch
+//! still completes, identically, as long as one shard lives). Index
+//! queries skip dead shards and mark the merged answer
+//! [`ClusterAnswer::partial`], because a dead shard's corpus slice is
+//! unreachable. [`Router::probe`] (driven periodically by
+//! [`spawn_health_monitor`]) sends HEALTH frames to every shard, dead
+//! or alive — a shard that answers is (re-)admitted and resumes taking
+//! traffic on the next request.
+
+use super::frame::{ShardReply, ShardRequest, WireHit};
+use super::transport::{ShardTransport, TransportError};
+use crate::index::{angular_similarity, IndexSpec, SearchHit};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::time::Duration;
+
+/// Corpus rows per `IndexRows` frame when the router streams a build
+/// to its shards (bounds peak frame size and shard-side buffering).
+pub const BUILD_CHUNK_ROWS: usize = 512;
+
+/// A merged index answer from the cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterAnswer {
+    /// per-query hits, each list sorted by `(hamming, id)` ascending
+    /// with similarity recomputed from the index's code length
+    pub hits: Vec<Vec<SearchHit>>,
+    /// buckets probed across all answering shards
+    pub probed_buckets: usize,
+    /// true when at least one shard holding corpus rows did not
+    /// answer — the hits cover only the reachable partitions
+    pub partial: bool,
+}
+
+/// Liveness view of one shard.
+#[derive(Debug, Clone)]
+pub struct ShardStatus {
+    /// transport endpoint label (`local:name` / `tcp:addr`)
+    pub endpoint: String,
+    /// whether the router currently considers the shard alive
+    pub alive: bool,
+}
+
+#[derive(Clone)]
+struct IndexMeta {
+    /// code length in bits (similarity = `1 - hamming/m`)
+    m: usize,
+    /// total corpus rows across all shards
+    rows: usize,
+    /// shard slots that hold a partition of this index
+    shards: Vec<usize>,
+}
+
+/// Scatter-gather front over N shard transports. Cheaply shared as a
+/// [`ClusterHandle`]; all methods take `&self`.
+pub struct Router {
+    transports: Vec<Box<dyn ShardTransport>>,
+    alive: Vec<AtomicBool>,
+    indexes: Mutex<HashMap<String, IndexMeta>>,
+}
+
+/// Shared handle to a [`Router`] — what the coordinator and the CLI
+/// hold when serving in sharded mode.
+pub type ClusterHandle = Arc<Router>;
+
+impl std::fmt::Debug for Router {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Router")
+            .field("shards", &self.statuses())
+            .finish()
+    }
+}
+
+impl Router {
+    /// Build a router over the given shard transports (at least one).
+    /// All shards start out presumed alive; the first failed call or
+    /// probe corrects that.
+    pub fn new(transports: Vec<Box<dyn ShardTransport>>) -> Result<Router, String> {
+        if transports.is_empty() {
+            return Err("router needs at least one shard transport".into());
+        }
+        let alive = transports.iter().map(|_| AtomicBool::new(true)).collect();
+        Ok(Router { transports, alive, indexes: Mutex::new(HashMap::new()) })
+    }
+
+    /// Convenience: a router wrapped in its shared handle.
+    pub fn handle(transports: Vec<Box<dyn ShardTransport>>) -> Result<ClusterHandle, String> {
+        Router::new(transports).map(Arc::new)
+    }
+
+    /// Total shard slots (live or dead).
+    pub fn shard_count(&self) -> usize {
+        self.transports.len()
+    }
+
+    /// Shards currently considered alive.
+    pub fn live_count(&self) -> usize {
+        self.alive.iter().filter(|a| a.load(Ordering::SeqCst)).count()
+    }
+
+    /// Per-shard endpoint + liveness view.
+    pub fn statuses(&self) -> Vec<ShardStatus> {
+        self.transports
+            .iter()
+            .zip(&self.alive)
+            .map(|(t, a)| ShardStatus {
+                endpoint: t.describe(),
+                alive: a.load(Ordering::SeqCst),
+            })
+            .collect()
+    }
+
+    fn live_shards(&self) -> Vec<usize> {
+        (0..self.transports.len())
+            .filter(|&i| self.alive[i].load(Ordering::SeqCst))
+            .collect()
+    }
+
+    fn mark_dead(&self, shard: usize) {
+        self.alive[shard].store(false, Ordering::SeqCst);
+    }
+
+    /// Probe every shard (alive or dead) with a HEALTH request and
+    /// update liveness from the outcome. A dead shard that answers is
+    /// re-admitted and resumes taking traffic immediately. Returns the
+    /// refreshed statuses.
+    pub fn probe(&self) -> Vec<ShardStatus> {
+        let results: Vec<bool> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .transports
+                .iter()
+                .map(|t| s.spawn(move || t.call(&ShardRequest::Health).is_ok()))
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("probe thread")).collect()
+        });
+        for (a, ok) in self.alive.iter().zip(&results) {
+            a.store(*ok, Ordering::SeqCst);
+        }
+        self.statuses()
+    }
+
+    /// Scatter an embed batch across live shards as contiguous row
+    /// ranges and gather the features back in row order. Shards that
+    /// die mid-batch have their ranges re-queued onto survivors, so
+    /// the result is complete — and bit-identical at f64 to a
+    /// single-node run — as long as one shard stays alive.
+    pub fn embed_batch(
+        &self,
+        variant: &str,
+        rows: &[Vec<f32>],
+    ) -> Result<Vec<Vec<f32>>, String> {
+        if rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut out: Vec<Option<Vec<f32>>> = vec![None; rows.len()];
+        let mut work: Vec<(usize, usize)> = vec![(0, rows.len())];
+        // each retry round needs at least one shard death to recur, so
+        // shard_count rounds after the first always suffice
+        for _round in 0..self.shard_count() + 1 {
+            if work.is_empty() {
+                break;
+            }
+            let live = self.live_shards();
+            if live.is_empty() {
+                return Err("embed failed: no live shards".into());
+            }
+            // split every outstanding range across the live shards
+            let mut assignments: Vec<(usize, usize, usize)> = Vec::new();
+            for &(start, len) in &work {
+                let per = len.div_ceil(live.len());
+                let mut off = 0;
+                let mut slot = 0;
+                while off < len {
+                    let take = per.min(len - off);
+                    assignments.push((live[slot % live.len()], start + off, take));
+                    off += take;
+                    slot += 1;
+                }
+            }
+            work.clear();
+            let results: Vec<(usize, usize, usize, Result<ShardReply, TransportError>)> =
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = assignments
+                        .iter()
+                        .map(|&(shard, start, len)| {
+                            let transport = &self.transports[shard];
+                            s.spawn(move || {
+                                let req = ShardRequest::Embed {
+                                    variant: variant.to_string(),
+                                    rows: rows[start..start + len].to_vec(),
+                                };
+                                (shard, start, len, transport.call(&req))
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().expect("scatter thread")).collect()
+                });
+            for (shard, start, len, result) in results {
+                match result {
+                    Ok(ShardReply::Embedded { rows: feats }) => {
+                        if feats.len() != len {
+                            return Err(format!(
+                                "shard {shard} returned {} rows for a {len}-row range",
+                                feats.len()
+                            ));
+                        }
+                        for (i, f) in feats.into_iter().enumerate() {
+                            out[start + i] = Some(f);
+                        }
+                    }
+                    Ok(ShardReply::Err { message }) => {
+                        // application error: bad input fails identically
+                        // everywhere, so retrying elsewhere is pointless
+                        return Err(format!("shard {shard}: {message}"));
+                    }
+                    Ok(other) => {
+                        return Err(format!("shard {shard}: unexpected reply {other:?}"));
+                    }
+                    Err(_) => {
+                        self.mark_dead(shard);
+                        work.push((start, len));
+                    }
+                }
+            }
+        }
+        if !work.is_empty() {
+            return Err("embed failed: shards kept dying during retries".into());
+        }
+        Ok(out.into_iter().map(|r| r.expect("all ranges gathered")).collect())
+    }
+
+    /// Partition `corpus` round-robin by global row id across the live
+    /// shards and stream each partition out in [`BUILD_CHUNK_ROWS`]
+    /// chunks (begin → rows… → commit). The build is all-or-nothing:
+    /// any shard failure fails it.
+    pub fn build_index(
+        &self,
+        name: &str,
+        spec: IndexSpec,
+        corpus: &[Vec<f64>],
+    ) -> Result<usize, String> {
+        let live = self.live_shards();
+        if live.is_empty() {
+            return Err("index build failed: no live shards".into());
+        }
+        let mut parts: Vec<(Vec<u64>, Vec<Vec<f64>>)> = vec![Default::default(); live.len()];
+        for (gid, row) in corpus.iter().enumerate() {
+            let p = gid % live.len();
+            parts[p].0.push(gid as u64);
+            parts[p].1.push(row.clone());
+        }
+        let m = spec.m;
+        let results: Vec<(usize, Result<(), String>)> = std::thread::scope(|s| {
+            let handles: Vec<_> = live
+                .iter()
+                .zip(parts)
+                .map(|(&shard, (ids, rows))| {
+                    let transport = &self.transports[shard];
+                    let spec = spec.clone();
+                    s.spawn(move || {
+                        (shard, Router::stream_partition(transport, name, spec, ids, rows))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("build thread")).collect()
+        });
+        for (shard, result) in results {
+            if let Err(e) = result {
+                return Err(format!("index build failed on shard {shard}: {e}"));
+            }
+        }
+        self.indexes
+            .lock()
+            .expect("router indexes lock")
+            .insert(name.to_string(), IndexMeta { m, rows: corpus.len(), shards: live });
+        Ok(corpus.len())
+    }
+
+    fn stream_partition(
+        transport: &dyn ShardTransport,
+        name: &str,
+        spec: IndexSpec,
+        ids: Vec<u64>,
+        rows: Vec<Vec<f64>>,
+    ) -> Result<(), String> {
+        let expect_ok = |reply: Result<ShardReply, TransportError>| match reply {
+            Ok(ShardReply::Ok) => Ok(()),
+            Ok(ShardReply::Err { message }) => Err(message),
+            Ok(other) => Err(format!("unexpected reply {other:?}")),
+            Err(e) => Err(e.to_string()),
+        };
+        expect_ok(transport.call(&ShardRequest::IndexBegin { name: name.to_string(), spec }))?;
+        let total = ids.len();
+        let mut at = 0;
+        while at < total {
+            let end = (at + BUILD_CHUNK_ROWS).min(total);
+            expect_ok(transport.call(&ShardRequest::IndexRows {
+                name: name.to_string(),
+                ids: ids[at..end].to_vec(),
+                rows: rows[at..end].to_vec(),
+            }))?;
+            at = end;
+        }
+        match transport.call(&ShardRequest::IndexCommit { name: name.to_string() }) {
+            Ok(ShardReply::Committed { rows: got }) if got as usize == total => Ok(()),
+            Ok(ShardReply::Committed { rows: got }) => {
+                Err(format!("committed {got} rows, streamed {total}"))
+            }
+            Ok(ShardReply::Err { message }) => Err(message),
+            Ok(other) => Err(format!("unexpected reply {other:?}")),
+            Err(e) => Err(e.to_string()),
+        }
+    }
+
+    /// Scatter a query batch to every live shard holding a partition of
+    /// `name` and merge the per-shard top-k lists into exact global
+    /// top-k (sort by `(hamming, id)`, truncate to `k`). Shards that
+    /// are dead or fail to answer leave their slice out of the merge
+    /// and mark the answer partial.
+    pub fn index_query_batch(
+        &self,
+        name: &str,
+        queries: &[Vec<f64>],
+        k: usize,
+    ) -> Result<ClusterAnswer, String> {
+        let meta = self
+            .indexes
+            .lock()
+            .expect("router indexes lock")
+            .get(name)
+            .cloned()
+            .ok_or_else(|| format!("unknown index '{name}'"))?;
+        if queries.is_empty() {
+            return Ok(ClusterAnswer { hits: Vec::new(), probed_buckets: 0, partial: false });
+        }
+        let (callable, skipped): (Vec<usize>, Vec<usize>) = meta
+            .shards
+            .iter()
+            .copied()
+            .partition(|&i| self.alive[i].load(Ordering::SeqCst));
+        let results: Vec<(usize, Result<ShardReply, TransportError>)> =
+            std::thread::scope(|s| {
+                let handles: Vec<_> = callable
+                    .iter()
+                    .map(|&shard| {
+                        let transport = &self.transports[shard];
+                        s.spawn(move || {
+                            let req = ShardRequest::IndexQuery {
+                                name: name.to_string(),
+                                k: k as u32,
+                                queries: queries.to_vec(),
+                            };
+                            (shard, transport.call(&req))
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("query thread")).collect()
+            });
+        let mut partial = !skipped.is_empty();
+        let mut probed_total = 0usize;
+        let mut merged: Vec<Vec<(u32, u64)>> = vec![Vec::new(); queries.len()];
+        let mut answered = 0usize;
+        let mut first_error: Option<String> = None;
+        for (shard, result) in results {
+            match result {
+                Ok(ShardReply::Hits { probed, hits }) => {
+                    if hits.len() != queries.len() {
+                        return Err(format!(
+                            "shard {shard} answered {} queries of {}",
+                            hits.len(),
+                            queries.len()
+                        ));
+                    }
+                    answered += 1;
+                    probed_total += probed as usize;
+                    for (per_query, shard_hits) in merged.iter_mut().zip(hits) {
+                        per_query.extend(shard_hits.iter().map(|h: &WireHit| (h.hamming, h.id)));
+                    }
+                }
+                Ok(ShardReply::Err { message }) => {
+                    // the shard is alive but its slice is unusable
+                    // (e.g. a restarted process lost its partition)
+                    partial = true;
+                    first_error.get_or_insert(format!("shard {shard}: {message}"));
+                }
+                Ok(other) => {
+                    return Err(format!("shard {shard}: unexpected reply {other:?}"));
+                }
+                Err(e) => {
+                    self.mark_dead(shard);
+                    partial = true;
+                    first_error.get_or_insert(format!("shard {shard}: {e}"));
+                }
+            }
+        }
+        if answered == 0 {
+            return Err(first_error.unwrap_or_else(|| {
+                format!("index query failed: no live shards hold '{name}'")
+            }));
+        }
+        let hits = merged
+            .into_iter()
+            .map(|mut pairs| {
+                pairs.sort_unstable();
+                pairs.truncate(k);
+                pairs
+                    .into_iter()
+                    .map(|(hamming, id)| SearchHit {
+                        id: id as usize,
+                        hamming,
+                        similarity: angular_similarity(hamming, meta.m),
+                    })
+                    .collect()
+            })
+            .collect();
+        Ok(ClusterAnswer { hits, probed_buckets: probed_total, partial })
+    }
+
+    /// Whether the cluster has an index registered under `name`.
+    pub fn has_index(&self, name: &str) -> bool {
+        self.indexes.lock().expect("router indexes lock").contains_key(name)
+    }
+
+    /// Names of cluster-built indexes, sorted.
+    pub fn index_names(&self) -> Vec<String> {
+        let mut names: Vec<String> =
+            self.indexes.lock().expect("router indexes lock").keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Total corpus rows of a cluster-built index.
+    pub fn index_rows(&self, name: &str) -> Option<usize> {
+        self.indexes.lock().expect("router indexes lock").get(name).map(|m| m.rows)
+    }
+}
+
+/// Spawn a detached liveness monitor that probes all shards every
+/// `interval` until `stop` is set or the router is dropped. Holds only
+/// a weak reference, so it never keeps a cluster alive by itself.
+pub fn spawn_health_monitor(
+    router: &ClusterHandle,
+    interval: Duration,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    let weak: Weak<Router> = Arc::downgrade(router);
+    std::thread::Builder::new()
+        .name("strembed-cluster-health".into())
+        .spawn(move || loop {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            match weak.upgrade() {
+                Some(router) => {
+                    router.probe();
+                }
+                None => return,
+            }
+            let step = Duration::from_millis(25);
+            let mut slept = Duration::ZERO;
+            while slept < interval {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                let nap = step.min(interval - slept);
+                std::thread::sleep(nap);
+                slept += nap;
+            }
+        })
+        .expect("spawn health monitor")
+}

@@ -1,0 +1,254 @@
+//! The shard executor: one partition's worth of embedding compute and
+//! index corpus, behind a single request-handling entry point.
+//!
+//! A [`ShardEngine`] wraps the same machinery a single-node server
+//! uses — a persistent [`crate::engine::StreamingPool`] per variant and
+//! [`crate::index::IndexHandle`]s for its corpus slice — and exposes
+//! exactly one method, [`ShardEngine::handle`], that maps a
+//! [`ShardRequest`] to a [`ShardReply`]. Every transport funnels
+//! through it: the in-process [`super::LocalTransport`] calls it
+//! directly, and [`super::serve_shard`] drives it from decoded TCP
+//! frames. That single funnel is what makes the same-process and
+//! multi-process cluster modes behave identically.
+//!
+//! Index rows arrive with explicit **global** corpus ids; the shard
+//! remembers them and translates its local hit ids back to global ids
+//! in every query reply, so the router can merge per-shard top-k lists
+//! without knowing how the corpus was partitioned.
+
+use super::frame::{ShardReply, ShardRequest, WireHit};
+use crate::coordinator::{health_line, Backend, BackendSpec, Metrics, NativeBackend};
+use crate::index::{IndexHandle, IndexSpec};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+struct ShardVariant {
+    spec: BackendSpec,
+    backend: Mutex<NativeBackend>,
+}
+
+struct ShardIndex {
+    handle: IndexHandle,
+    /// global corpus id of each local row, in insertion order —
+    /// strictly increasing, so local `(hamming, id)` rank order equals
+    /// global rank order within this shard's partition
+    ids: Vec<u64>,
+}
+
+struct PendingBuild {
+    spec: IndexSpec,
+    ids: Vec<u64>,
+    rows: Vec<Vec<f64>>,
+}
+
+/// One shard's executor: native embedding variants plus this shard's
+/// slice of every index corpus, driven entirely through
+/// [`ShardEngine::handle`].
+pub struct ShardEngine {
+    name: String,
+    variants: HashMap<String, ShardVariant>,
+    indexes: Mutex<HashMap<String, Arc<ShardIndex>>>,
+    pending: Mutex<HashMap<String, PendingBuild>>,
+    metrics: Arc<Metrics>,
+}
+
+impl std::fmt::Debug for ShardEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardEngine")
+            .field("name", &self.name)
+            .field("variants", &self.variant_names())
+            .finish()
+    }
+}
+
+impl ShardEngine {
+    /// Build a shard executor hosting the given native variants. PJRT
+    /// specs are rejected: shard processes run the pure-rust engine.
+    pub fn new(name: &str, specs: Vec<(String, BackendSpec)>) -> Result<ShardEngine, String> {
+        let metrics = Arc::new(Metrics::new());
+        let mut variants = HashMap::new();
+        for (vname, spec) in specs {
+            if matches!(spec, BackendSpec::Pjrt { .. }) {
+                return Err(format!(
+                    "shard '{name}' variant '{vname}': shard executors host native variants only"
+                ));
+            }
+            let backend = spec
+                .build_with_metrics(Some(metrics.clone()))
+                .map_err(|e| format!("shard '{name}' variant '{vname}': {e}"))?;
+            let Backend::Native(nb) = backend else {
+                return Err(format!(
+                    "shard '{name}' variant '{vname}': expected a native backend"
+                ));
+            };
+            variants.insert(vname, ShardVariant { spec, backend: Mutex::new(nb) });
+        }
+        Ok(ShardEngine {
+            name: name.to_string(),
+            variants,
+            indexes: Mutex::new(HashMap::new()),
+            pending: Mutex::new(HashMap::new()),
+            metrics,
+        })
+    }
+
+    /// This shard's name (used in transport labels and errors).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The shard's metrics sink.
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Hosted variant names, sorted.
+    pub fn variant_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.variants.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Committed index names, sorted.
+    pub fn index_names(&self) -> Vec<String> {
+        let mut names: Vec<String> =
+            self.indexes.lock().expect("shard indexes lock").keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Rows held by a committed index on this shard.
+    pub fn index_rows(&self, name: &str) -> Option<usize> {
+        self.indexes.lock().expect("shard indexes lock").get(name).map(|i| i.ids.len())
+    }
+
+    /// Execute one request. Application failures come back as
+    /// [`ShardReply::Err`]; this never panics on bad input.
+    pub fn handle(&self, req: ShardRequest) -> ShardReply {
+        match req {
+            ShardRequest::Embed { variant, rows } => self.embed(&variant, rows),
+            ShardRequest::IndexBegin { name, spec } => {
+                let mut pending = self.pending.lock().expect("shard pending lock");
+                pending.insert(name, PendingBuild { spec, ids: Vec::new(), rows: Vec::new() });
+                ShardReply::Ok
+            }
+            ShardRequest::IndexRows { name, ids, rows } => self.index_rows_chunk(name, ids, rows),
+            ShardRequest::IndexCommit { name } => self.index_commit(&name),
+            ShardRequest::IndexQuery { name, k, queries } => {
+                self.index_query(&name, k as usize, &queries)
+            }
+            ShardRequest::Health => ShardReply::Health {
+                line: health_line(
+                    &self.variant_names(),
+                    &self.index_names(),
+                    &self.metrics.snapshot(),
+                ),
+            },
+        }
+    }
+
+    fn embed(&self, variant: &str, rows: Vec<Vec<f32>>) -> ShardReply {
+        let Some(v) = self.variants.get(variant) else {
+            return ShardReply::Err { message: format!("unknown variant '{variant}'") };
+        };
+        let n = v.spec.n();
+        for (i, row) in rows.iter().enumerate() {
+            if row.len() != n {
+                return ShardReply::Err {
+                    message: format!("row {i} has dim {} (variant wants {n})", row.len()),
+                };
+            }
+        }
+        let count = rows.len();
+        let start = Instant::now();
+        let result = v.backend.lock().expect("shard backend lock").embed_batch(rows);
+        match result {
+            Ok(out) => {
+                self.metrics.on_batch(count);
+                let latency = start.elapsed().as_secs_f64();
+                for _ in 0..count {
+                    self.metrics.on_submit();
+                    self.metrics.on_complete(latency);
+                }
+                ShardReply::Embedded { rows: out }
+            }
+            Err(e) => {
+                self.metrics.on_fail();
+                ShardReply::Err { message: format!("embed failed: {e}") }
+            }
+        }
+    }
+
+    fn index_rows_chunk(&self, name: String, ids: Vec<u64>, rows: Vec<Vec<f64>>) -> ShardReply {
+        if ids.len() != rows.len() {
+            return ShardReply::Err {
+                message: format!("{} ids for {} rows", ids.len(), rows.len()),
+            };
+        }
+        let mut pending = self.pending.lock().expect("shard pending lock");
+        let Some(build) = pending.get_mut(&name) else {
+            return ShardReply::Err { message: format!("no pending build for index '{name}'") };
+        };
+        for (i, row) in rows.iter().enumerate() {
+            if row.len() != build.spec.n {
+                return ShardReply::Err {
+                    message: format!(
+                        "corpus row {} has dim {} (index wants {})",
+                        build.ids.len() + i,
+                        row.len(),
+                        build.spec.n
+                    ),
+                };
+            }
+        }
+        build.ids.extend_from_slice(&ids);
+        build.rows.extend(rows);
+        ShardReply::Ok
+    }
+
+    fn index_commit(&self, name: &str) -> ShardReply {
+        let Some(build) = self.pending.lock().expect("shard pending lock").remove(name) else {
+            return ShardReply::Err { message: format!("no pending build for index '{name}'") };
+        };
+        match IndexHandle::build(build.spec, &build.rows) {
+            Ok(handle) => {
+                let rows = build.ids.len() as u64;
+                self.indexes
+                    .lock()
+                    .expect("shard indexes lock")
+                    .insert(name.to_string(), Arc::new(ShardIndex { handle, ids: build.ids }));
+                self.metrics.on_index_build();
+                ShardReply::Committed { rows }
+            }
+            Err(e) => ShardReply::Err { message: format!("index build failed: {e}") },
+        }
+    }
+
+    fn index_query(&self, name: &str, k: usize, queries: &[Vec<f64>]) -> ShardReply {
+        let index = self.indexes.lock().expect("shard indexes lock").get(name).cloned();
+        let Some(index) = index else {
+            return ShardReply::Err { message: format!("unknown index '{name}'") };
+        };
+        let start = Instant::now();
+        match index.handle.query_batch(queries, k) {
+            Ok((per_query, probed)) => {
+                self.metrics.on_index_query(
+                    queries.len(),
+                    probed,
+                    start.elapsed().as_nanos() as u64,
+                );
+                let hits = per_query
+                    .into_iter()
+                    .map(|hs| {
+                        hs.into_iter()
+                            .map(|h| WireHit { id: index.ids[h.id], hamming: h.hamming })
+                            .collect()
+                    })
+                    .collect();
+                ShardReply::Hits { probed: probed as u64, hits }
+            }
+            Err(e) => ShardReply::Err { message: format!("query failed: {e}") },
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! The shard-side TCP server: speaks the length-prefixed frame
+//! protocol of [`super::frame`] and funnels every decoded request into
+//! [`ShardEngine::handle`].
+//!
+//! Robustness rules, in order of how much of the stream survives:
+//!
+//! * **Decodable request** → the reply (success or
+//!   [`ShardReply::Err`]) is written back with the request's id.
+//! * **Intact framing, malformed body** (unknown opcode, truncated
+//!   field, trailing bytes) → an `Err` reply is sent — with the
+//!   request id salvaged from the payload prefix when possible — and
+//!   the connection stays open, because the frame boundary itself was
+//!   sound.
+//! * **Broken framing** (oversized or undersized declared length,
+//!   mid-frame disconnect) → the stream position can no longer be
+//!   trusted; an `Err` reply with id 0 is attempted and the connection
+//!   is dropped. The listener keeps serving other connections.
+//!
+//! Reads poll with a short timeout so a raised stop flag shuts every
+//! connection thread down promptly — which is also how the cluster
+//! tests kill a shard mid-traffic.
+
+use super::frame::{check_len, decode_request, encode_reply, payload_id, ShardReply};
+use super::shard::ShardEngine;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Serve `engine` on `addr` until `stop` becomes true. The bound local
+/// address is passed to `on_bound` before the accept loop starts (bind
+/// to port 0 to let the OS pick a free port).
+pub fn serve_shard(
+    engine: Arc<ShardEngine>,
+    addr: &str,
+    stop: Arc<AtomicBool>,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> std::io::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    on_bound(listener.local_addr()?);
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let engine = engine.clone();
+                let stop = stop.clone();
+                conns.push(std::thread::spawn(move || {
+                    handle_conn(engine, stream, stop);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+enum ReadOutcome {
+    Full,
+    /// clean EOF before the first byte (only legal at a frame boundary)
+    CleanEof,
+    /// the stop flag was raised mid-read
+    Stopped,
+}
+
+/// Fill `buf` from a read-timeout socket, polling the stop flag between
+/// attempts. An EOF after the first byte is an `UnexpectedEof` error —
+/// a mid-frame disconnect, not a clean close.
+fn read_full(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    at_boundary: bool,
+) -> std::io::Result<ReadOutcome> {
+    let mut got = 0;
+    while got < buf.len() {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(ReadOutcome::Stopped);
+        }
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => {
+                return if got == 0 && at_boundary {
+                    Ok(ReadOutcome::CleanEof)
+                } else {
+                    Err(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "peer disconnected mid-frame",
+                    ))
+                };
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(ReadOutcome::Full)
+}
+
+fn handle_conn(engine: Arc<ShardEngine>, mut stream: TcpStream, stop: Arc<AtomicBool>) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(25)));
+    let _ = stream.set_nodelay(true);
+    loop {
+        let mut header = [0u8; 4];
+        match read_full(&mut stream, &mut header, &stop, true) {
+            Ok(ReadOutcome::Full) => {}
+            // clean close, stop flag, or mid-frame disconnect: drop conn
+            _ => return,
+        }
+        let len = match check_len(u32::from_le_bytes(header)) {
+            Ok(len) => len,
+            Err(e) => {
+                // the declared length is garbage, so the stream position
+                // is unrecoverable — report and drop this connection
+                let reply = ShardReply::Err { message: e.to_string() };
+                let _ = stream.write_all(&encode_reply(0, &reply));
+                return;
+            }
+        };
+        let mut payload = vec![0u8; len];
+        match read_full(&mut stream, &mut payload, &stop, false) {
+            Ok(ReadOutcome::Full) => {}
+            _ => return,
+        }
+        let (id, reply) = match decode_request(&payload) {
+            Ok((id, req)) => (id, engine.handle(req)),
+            // framing was intact, so the connection survives a bad body
+            Err(e) => (
+                payload_id(&payload).unwrap_or(0),
+                ShardReply::Err { message: e.to_string() },
+            ),
+        };
+        if stream.write_all(&encode_reply(id, &reply)).is_err() {
+            return;
+        }
+    }
+}

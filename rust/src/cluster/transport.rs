@@ -1,0 +1,339 @@
+//! Transports that carry [`ShardRequest`]s from the router to a shard
+//! executor and bring [`ShardReply`]s back.
+//!
+//! Two implementations sit behind one [`ShardTransport`] trait:
+//!
+//! * [`LocalTransport`] — the shard lives in this process; a call is a
+//!   direct method dispatch. Tests use its [`LocalTransport::set_down`]
+//!   switch to simulate shard death and re-registration
+//!   deterministically.
+//! * [`TcpTransport`] — the shard is a separate process speaking the
+//!   length-prefixed frame protocol of [`super::frame`]. Requests are
+//!   pipelined over one connection (request ids pair replies out of
+//!   order), a bounded in-flight window applies backpressure, and a
+//!   broken connection is re-dialed on the next call — which is exactly
+//!   how a restarted shard re-registers with the router.
+//!
+//! A transport failure ([`TransportError`]) means the shard could not
+//! be reached or the connection died mid-call; the router treats it as
+//! shard death. An application failure travels inside a successful
+//! [`ShardReply::Err`] and leaves the connection healthy.
+
+use super::frame::{
+    decode_reply, encode_request, read_frame, ShardReply, ShardRequest,
+};
+use super::shard::ShardEngine;
+use std::collections::HashMap;
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// The shard behind a transport could not be reached, or the connection
+/// died before a reply arrived. The router interprets this as shard
+/// death and fails over.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TransportError(pub String);
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "transport error: {}", self.0)
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// Carrier of shard requests. Implementations must be callable from
+/// many router threads at once.
+pub trait ShardTransport: Send + Sync {
+    /// Deliver one request and wait for its reply. `Err` means the
+    /// shard is unreachable (transport-level death); application errors
+    /// arrive as [`ShardReply::Err`] inside `Ok`.
+    fn call(&self, req: &ShardRequest) -> Result<ShardReply, TransportError>;
+
+    /// Human-readable endpoint label for logs and health reports.
+    fn describe(&self) -> String;
+}
+
+impl<T: ShardTransport + ?Sized> ShardTransport for Arc<T> {
+    fn call(&self, req: &ShardRequest) -> Result<ShardReply, TransportError> {
+        (**self).call(req)
+    }
+
+    fn describe(&self) -> String {
+        (**self).describe()
+    }
+}
+
+/// Same-process transport: the shard engine is invoked directly. A
+/// `set_down(true)` switch makes every call fail like a dead TCP peer,
+/// so failover and re-admission are testable without real sockets.
+pub struct LocalTransport {
+    engine: Arc<ShardEngine>,
+    down: AtomicBool,
+}
+
+impl LocalTransport {
+    /// Wrap a shard engine in an in-process transport.
+    pub fn new(engine: Arc<ShardEngine>) -> Self {
+        LocalTransport { engine, down: AtomicBool::new(false) }
+    }
+
+    /// Simulate shard death (`true`) or recovery (`false`).
+    pub fn set_down(&self, down: bool) {
+        self.down.store(down, Ordering::SeqCst);
+    }
+
+    /// Whether the simulated-death switch is currently on.
+    pub fn is_down(&self) -> bool {
+        self.down.load(Ordering::SeqCst)
+    }
+}
+
+impl ShardTransport for LocalTransport {
+    fn call(&self, req: &ShardRequest) -> Result<ShardReply, TransportError> {
+        if self.down.load(Ordering::SeqCst) {
+            return Err(TransportError(format!("shard '{}' is down", self.engine.name())));
+        }
+        Ok(self.engine.handle(req.clone()))
+    }
+
+    fn describe(&self) -> String {
+        format!("local:{}", self.engine.name())
+    }
+}
+
+/// Tunables for a [`TcpTransport`].
+#[derive(Debug, Clone)]
+pub struct TcpTransportConfig {
+    /// Dial timeout for (re)connecting to the shard.
+    pub connect_timeout: Duration,
+    /// How long one call may wait for its reply before the connection
+    /// is declared dead.
+    pub call_timeout: Duration,
+    /// Maximum requests in flight on the connection at once; further
+    /// callers block until a slot frees (backpressure).
+    pub window: usize,
+}
+
+impl Default for TcpTransportConfig {
+    fn default() -> Self {
+        TcpTransportConfig {
+            connect_timeout: Duration::from_secs(1),
+            call_timeout: Duration::from_secs(10),
+            window: 32,
+        }
+    }
+}
+
+type ReplySender = mpsc::Sender<Result<ShardReply, TransportError>>;
+
+struct ConnState {
+    /// Write half of the live connection, if any. The reader thread
+    /// owns a `try_clone` of the same socket.
+    stream: Option<TcpStream>,
+    /// Bumped on every (re)connect so a stale reader thread cannot tear
+    /// down a newer connection.
+    generation: u64,
+}
+
+struct Inner {
+    addr: String,
+    config: TcpTransportConfig,
+    state: Mutex<ConnState>,
+    pending: Mutex<HashMap<u64, ReplySender>>,
+    next_id: AtomicU64,
+    window: Mutex<usize>,
+    window_cv: Condvar,
+}
+
+/// Frame-protocol transport to a shard process, with pipelining, a
+/// bounded in-flight window, and reconnect-on-next-call re-admission.
+pub struct TcpTransport {
+    inner: Arc<Inner>,
+}
+
+impl TcpTransport {
+    /// Create a transport for the shard at `addr` (host:port). No
+    /// connection is made until the first call.
+    pub fn new(addr: impl Into<String>, config: TcpTransportConfig) -> Self {
+        let window = config.window.max(1);
+        TcpTransport {
+            inner: Arc::new(Inner {
+                addr: addr.into(),
+                config,
+                state: Mutex::new(ConnState { stream: None, generation: 0 }),
+                pending: Mutex::new(HashMap::new()),
+                next_id: AtomicU64::new(1),
+                window: Mutex::new(window),
+                window_cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Ensure a live connection exists, dialing if needed, and write
+    /// one frame on it. Returns the generation the frame rode on.
+    fn write_frame(inner: &Arc<Inner>, frame: &[u8]) -> Result<(), TransportError> {
+        use std::io::Write;
+        let mut state = inner.state.lock().expect("transport state lock");
+        if state.stream.is_none() {
+            let stream = Inner::dial(inner)?;
+            let reader = stream
+                .try_clone()
+                .map_err(|e| TransportError(format!("clone stream to {}: {e}", inner.addr)))?;
+            state.generation += 1;
+            let generation = state.generation;
+            let spawn = std::thread::Builder::new()
+                .name(format!("strembed-transport-{}", inner.addr))
+                .spawn({
+                    let inner = inner.clone();
+                    move || Inner::read_loop(inner, reader, generation)
+                });
+            if let Err(e) = spawn {
+                return Err(TransportError(format!("spawn reader for {}: {e}", inner.addr)));
+            }
+            state.stream = Some(stream);
+        }
+        let stream = state.stream.as_mut().expect("stream just ensured");
+        if let Err(e) = stream.write_all(frame) {
+            let generation = state.generation;
+            drop(state);
+            Inner::teardown(inner, generation, &format!("write to {}: {e}", inner.addr));
+            return Err(TransportError(format!("write to {}: {e}", inner.addr)));
+        }
+        Ok(())
+    }
+}
+
+impl Inner {
+    fn dial(inner: &Arc<Inner>) -> Result<TcpStream, TransportError> {
+        let mut addrs = inner
+            .addr
+            .to_socket_addrs()
+            .map_err(|e| TransportError(format!("resolve {}: {e}", inner.addr)))?;
+        let addr = addrs
+            .next()
+            .ok_or_else(|| TransportError(format!("no address for {}", inner.addr)))?;
+        let stream = TcpStream::connect_timeout(&addr, inner.config.connect_timeout)
+            .map_err(|e| TransportError(format!("connect {}: {e}", inner.addr)))?;
+        let _ = stream.set_nodelay(true);
+        Ok(stream)
+    }
+
+    /// Drop the connection of `generation` (if still current) and fail
+    /// every pending call, so blocked callers observe shard death
+    /// instead of hanging until their timeout.
+    fn teardown(inner: &Arc<Inner>, generation: u64, why: &str) {
+        {
+            let mut state = inner.state.lock().expect("transport state lock");
+            if state.generation != generation {
+                return; // a newer connection already exists; not ours to kill
+            }
+            if let Some(stream) = state.stream.take() {
+                let _ = stream.shutdown(Shutdown::Both);
+            }
+        }
+        let senders: Vec<ReplySender> = {
+            let mut pending = inner.pending.lock().expect("transport pending lock");
+            pending.drain().map(|(_, tx)| tx).collect()
+        };
+        for tx in senders {
+            let _ = tx.send(Err(TransportError(why.to_string())));
+        }
+    }
+
+    /// Reader thread: pair incoming reply frames with pending calls by
+    /// request id until the connection dies.
+    fn read_loop(inner: Arc<Inner>, stream: TcpStream, generation: u64) {
+        let mut reader = std::io::BufReader::new(stream);
+        loop {
+            match read_frame(&mut reader) {
+                Ok(Some(payload)) => match decode_reply(&payload) {
+                    Ok((id, reply)) => {
+                        let tx = inner.pending.lock().expect("transport pending lock").remove(&id);
+                        if let Some(tx) = tx {
+                            let _ = tx.send(Ok(reply));
+                        }
+                    }
+                    Err(e) => {
+                        Inner::teardown(&inner, generation, &format!("bad reply frame: {e}"));
+                        return;
+                    }
+                },
+                Ok(None) => {
+                    Inner::teardown(&inner, generation, "connection closed by shard");
+                    return;
+                }
+                Err(e) => {
+                    Inner::teardown(&inner, generation, &format!("read from shard: {e}"));
+                    return;
+                }
+            }
+        }
+    }
+
+    fn acquire_window(&self) {
+        let mut slots = self.window.lock().expect("transport window lock");
+        while *slots == 0 {
+            slots = self.window_cv.wait(slots).expect("transport window lock");
+        }
+        *slots -= 1;
+    }
+
+    fn release_window(&self) {
+        let mut slots = self.window.lock().expect("transport window lock");
+        *slots += 1;
+        drop(slots);
+        self.window_cv.notify_one();
+    }
+}
+
+impl ShardTransport for TcpTransport {
+    fn call(&self, req: &ShardRequest) -> Result<ShardReply, TransportError> {
+        let inner = &self.inner;
+        inner.acquire_window();
+        let result = (|| {
+            let id = inner.next_id.fetch_add(1, Ordering::Relaxed);
+            let (tx, rx) = mpsc::channel();
+            inner.pending.lock().expect("transport pending lock").insert(id, tx);
+            let frame = encode_request(id, req);
+            if let Err(e) = TcpTransport::write_frame(inner, &frame) {
+                inner.pending.lock().expect("transport pending lock").remove(&id);
+                return Err(e);
+            }
+            match rx.recv_timeout(inner.config.call_timeout) {
+                Ok(reply) => reply,
+                Err(_) => {
+                    inner.pending.lock().expect("transport pending lock").remove(&id);
+                    let generation =
+                        inner.state.lock().expect("transport state lock").generation;
+                    Inner::teardown(
+                        inner,
+                        generation,
+                        &format!("call to {} timed out", inner.addr),
+                    );
+                    Err(TransportError(format!(
+                        "no reply from {} within {:?}",
+                        inner.addr, inner.config.call_timeout
+                    )))
+                }
+            }
+        })();
+        inner.release_window();
+        result
+    }
+
+    fn describe(&self) -> String {
+        format!("tcp:{}", self.inner.addr)
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        // shut the socket so the reader thread unblocks and exits
+        let mut state = self.inner.state.lock().expect("transport state lock");
+        if let Some(stream) = state.stream.take() {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+    }
+}

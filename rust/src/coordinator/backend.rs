@@ -73,6 +73,19 @@ pub enum BackendSpec {
         /// streaming-pool worker threads (0 = one per core, capped)
         workers: usize,
     },
+    /// Delegate batches to a cluster router that scatters them across
+    /// shard executors (the sharded serving mode — clients can't tell
+    /// it from a local native variant).
+    Cluster {
+        /// variant name the shards host
+        variant: String,
+        /// input dimension (mirrors the shard variant's spec)
+        n: usize,
+        /// output feature dimension (mirrors the shard variant's spec)
+        out_dim: usize,
+        /// the scatter-gather router shared by all cluster variants
+        router: crate::cluster::ClusterHandle,
+    },
 }
 
 impl BackendSpec {
@@ -81,6 +94,7 @@ impl BackendSpec {
         match self {
             BackendSpec::Pjrt { meta, .. } => meta.n,
             BackendSpec::Native { config, .. } => config.n,
+            BackendSpec::Cluster { n, .. } => *n,
         }
     }
 
@@ -89,15 +103,16 @@ impl BackendSpec {
         match self {
             BackendSpec::Pjrt { meta, .. } => meta.out_dim,
             BackendSpec::Native { config, .. } => config.f.out_dim(config.m),
+            BackendSpec::Cluster { out_dim, .. } => *out_dim,
         }
     }
 
     /// Largest batch a single backend call may take (PJRT artifacts are
-    /// compiled for a fixed batch; native is unbounded).
+    /// compiled for a fixed batch; native and cluster are unbounded).
     pub fn max_exec_batch(&self) -> usize {
         match self {
             BackendSpec::Pjrt { meta, .. } => meta.batch,
-            BackendSpec::Native { .. } => usize::MAX,
+            BackendSpec::Native { .. } | BackendSpec::Cluster { .. } => usize::MAX,
         }
     }
 
@@ -135,6 +150,24 @@ impl BackendSpec {
                 };
                 Ok(Backend::Native(NativeBackend { plan, pipe }))
             }
+            BackendSpec::Cluster { variant, router, .. } => Ok(Backend::Cluster(
+                ClusterBackend { variant: variant.clone(), router: router.clone() },
+            )),
+        }
+    }
+
+    /// A cluster spec that forwards `variant` to `router`'s shards,
+    /// taking its dimensions from the spec the shards were built with.
+    pub fn cluster(
+        variant: &str,
+        shard_spec: &BackendSpec,
+        router: crate::cluster::ClusterHandle,
+    ) -> BackendSpec {
+        BackendSpec::Cluster {
+            variant: variant.to_string(),
+            n: shard_spec.n(),
+            out_dim: shard_spec.out_dim(),
+            router,
         }
     }
 
@@ -177,10 +210,11 @@ impl BackendSpec {
         self
     }
 
-    /// The pipeline precision (native variants only).
+    /// The pipeline precision (native variants only; cluster variants
+    /// execute at whatever precision their shard specs carry).
     pub fn precision(&self) -> Option<Precision> {
         match self {
-            BackendSpec::Pjrt { .. } => None,
+            BackendSpec::Pjrt { .. } | BackendSpec::Cluster { .. } => None,
             BackendSpec::Native { precision, .. } => Some(*precision),
         }
     }
@@ -306,7 +340,10 @@ impl NativeBackend {
         matches!(&self.pipe, NativePipe::F32 { shadow: Some(_), .. })
     }
 
-    fn embed_batch(&mut self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+    /// Embed a batch through the persistent streaming pool. Public so
+    /// cluster shard executors can drive the same fused pipeline the
+    /// coordinator workers use.
+    pub fn embed_batch(&mut self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
         let n = self.plan.n();
         let d = self.plan.out_dim();
         // take ownership of the payloads — validated, never copied
@@ -335,12 +372,24 @@ impl NativeBackend {
     }
 }
 
+/// Scatter-gather compute delegated to a cluster router: the worker
+/// hands whole batches to the router, which splits them across shard
+/// executors and reassembles the features in row order.
+pub struct ClusterBackend {
+    /// variant name the shards host
+    variant: String,
+    /// shared scatter-gather router
+    router: crate::cluster::ClusterHandle,
+}
+
 /// A live backend owned by one worker thread.
 pub enum Backend {
     /// compiled PJRT executable
     Pjrt(Engine),
     /// engine-backed native pipeline
     Native(NativeBackend),
+    /// batches forwarded to cluster shards through the router
+    Cluster(ClusterBackend),
 }
 
 impl Backend {
@@ -351,6 +400,9 @@ impl Backend {
         match self {
             Backend::Pjrt(engine) => engine.embed_batch(&rows),
             Backend::Native(nb) => nb.embed_batch(rows),
+            Backend::Cluster(cb) => {
+                cb.router.embed_batch(&cb.variant, &rows).map_err(|e| anyhow!("{e}"))
+            }
         }
     }
 }

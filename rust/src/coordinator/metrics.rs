@@ -211,6 +211,21 @@ impl Default for Metrics {
     }
 }
 
+/// The one-line health summary shared by the client TCP `HEALTH`
+/// command and the cluster shard's liveness reply: a `healthy` marker,
+/// the served variant and index names (`-` when empty), then the full
+/// metrics snapshot.
+pub fn health_line(variants: &[String], indexes: &[String], snapshot: &MetricsSnapshot) -> String {
+    let join = |names: &[String]| {
+        if names.is_empty() {
+            "-".to_string()
+        } else {
+            names.join(",")
+        }
+    };
+    format!("healthy variants={} indexes={} {}", join(variants), join(indexes), snapshot)
+}
+
 impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
@@ -287,6 +302,15 @@ mod tests {
         assert!((s.index_ns_per_query - 2_000.0).abs() < 1e-9);
         let text = format!("{s}");
         assert!(text.contains("index_queries=5"), "{text}");
+    }
+
+    #[test]
+    fn health_line_includes_names_and_snapshot() {
+        let m = Metrics::new();
+        m.on_complete(0.001);
+        let line = health_line(&["a".into(), "b".into()], &[], &m.snapshot());
+        assert!(line.starts_with("healthy variants=a,b indexes=- "), "{line}");
+        assert!(line.contains("completed=1"), "{line}");
     }
 
     #[test]

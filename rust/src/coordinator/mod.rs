@@ -43,6 +43,14 @@
 //! query counts, probed buckets and ns/query exported through
 //! [`Metrics`]. See `ARCHITECTURE.md` at the repo root for the full
 //! layer map (rng → pmodel → dsp → engine → index → coordinator).
+//!
+//! The coordinator **routes**; where execution happens is a backend
+//! concern. In sharded mode ([`Coordinator::start_with_cluster`] with
+//! a [`crate::cluster::ClusterHandle`]) embed variants delegate
+//! through [`BackendSpec::Cluster`] specs and index builds/queries
+//! scatter across shard executors — same client protocol, and cluster
+//! index answers carry an explicit [`IndexAnswer::partial`] marker
+//! when a dead shard's slice is missing.
 
 mod backend;
 mod batcher;
@@ -55,8 +63,8 @@ pub use crate::engine::Precision;
 // BackendSpec/Backend: plain-data description, built object served by
 // name — re-exported so serving callers see one surface
 pub use crate::index::{IndexHandle, IndexSpec, QueryResult, SearchHit};
-pub use backend::{Backend, BackendSpec, NativeBackend, SHADOW_SAMPLE_PERIOD};
+pub use backend::{Backend, BackendSpec, ClusterBackend, NativeBackend, SHADOW_SAMPLE_PERIOD};
 pub use batcher::{BatchQueue, QueueError};
-pub use metrics::{Metrics, MetricsSnapshot};
-pub use server::{Coordinator, CoordinatorConfig, EmbedError, EmbedResponse};
-pub use tcp::serve_tcp;
+pub use metrics::{health_line, Metrics, MetricsSnapshot};
+pub use server::{Coordinator, CoordinatorConfig, EmbedError, EmbedResponse, IndexAnswer};
+pub use tcp::{serve_tcp, MAX_BUILD_CHUNK_ROWS, MAX_LINE_BYTES};

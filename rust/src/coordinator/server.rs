@@ -87,11 +87,32 @@ struct Variant {
     spec: BackendSpec,
 }
 
+/// An index answer with its degradation marker: `partial` is true when
+/// a cluster shard holding corpus rows was unreachable, so the hits
+/// cover only the surviving partitions. Single-node answers are never
+/// partial.
+#[derive(Debug, Clone)]
+pub struct IndexAnswer {
+    /// per-query ranked hits
+    pub hits: Vec<Vec<SearchHit>>,
+    /// buckets probed across the batch (summed over shards)
+    pub probed_buckets: usize,
+    /// true when a shard's corpus slice is missing from the answer
+    pub partial: bool,
+}
+
 /// The embedding-serving coordinator. Besides the per-variant `embed`
 /// queues it owns a registry of named similarity indexes
 /// ([`crate::index::IndexHandle`]) served through
 /// [`Coordinator::index_query_batch`] with query/probe/latency metrics
 /// exported alongside the embed counters.
+///
+/// The coordinator *routes*; execution lives behind it. On a single
+/// node the backends execute in-process. In sharded mode (started via
+/// [`Coordinator::start_with_cluster`]) embed variants delegate to a
+/// [`crate::cluster::Router`] through cluster backend specs, and index
+/// builds/queries scatter across the shard executors — the client API
+/// is identical either way.
 pub struct Coordinator {
     variants: HashMap<String, Variant>,
     workers: Vec<JoinHandle<()>>,
@@ -100,13 +121,27 @@ pub struct Coordinator {
     /// (scans are read-only over `Arc`'d handles, so queries never
     /// queue behind embed traffic)
     indexes: Mutex<HashMap<String, Arc<IndexHandle>>>,
+    /// the cluster router when serving in sharded mode
+    cluster: Option<crate::cluster::ClusterHandle>,
 }
 
 impl Coordinator {
-    /// Start a coordinator serving the given named variants.
+    /// Start a coordinator serving the given named variants in-process.
     pub fn start(
         specs: Vec<(String, BackendSpec)>,
         config: CoordinatorConfig,
+    ) -> anyhow::Result<Coordinator> {
+        Coordinator::start_with_cluster(specs, config, None)
+    }
+
+    /// Start a coordinator that routes index operations through
+    /// `cluster` when one is given (embed variants delegate through
+    /// their own [`BackendSpec::Cluster`] specs). Pass `None` for the
+    /// plain single-node coordinator.
+    pub fn start_with_cluster(
+        specs: Vec<(String, BackendSpec)>,
+        config: CoordinatorConfig,
+        cluster: Option<crate::cluster::ClusterHandle>,
     ) -> anyhow::Result<Coordinator> {
         let metrics = Arc::new(Metrics::new());
         let mut variants = HashMap::new();
@@ -173,7 +208,22 @@ impl Coordinator {
             workers.push(handle);
             variants.insert(name, Variant { queue, spec });
         }
-        Ok(Coordinator { variants, workers, metrics, indexes: Mutex::new(HashMap::new()) })
+        Ok(Coordinator { variants, workers, metrics, indexes: Mutex::new(HashMap::new()), cluster })
+    }
+
+    /// The cluster router, when serving in sharded mode.
+    pub fn cluster(&self) -> Option<&crate::cluster::ClusterHandle> {
+        self.cluster.as_ref()
+    }
+
+    /// The one-line health summary served by the TCP `HEALTH` command
+    /// (shared code path with the cluster shard's liveness reply).
+    pub fn health_line(&self) -> String {
+        super::metrics::health_line(
+            &self.variant_names(),
+            &self.index_names(),
+            &self.metrics.snapshot(),
+        )
     }
 
     /// Registered variant names.
@@ -230,15 +280,22 @@ impl Coordinator {
         rx.recv().map_err(|_| EmbedError::Closed)?
     }
 
-    /// Build a similarity index over `corpus` (encoding sharded across
-    /// the streaming pool per `spec.workers`) and register it under
-    /// `name`, replacing any previous index of that name.
+    /// Build a similarity index over `corpus` and register it under
+    /// `name`, replacing any previous index of that name. In sharded
+    /// mode the corpus is partitioned across the cluster's shard
+    /// executors; otherwise the encoding runs in-process, sharded
+    /// across the streaming pool per `spec.workers`.
     pub fn build_index(
         &self,
         name: &str,
         spec: IndexSpec,
         corpus: &[Vec<f64>],
     ) -> Result<usize, EmbedError> {
+        if let Some(router) = &self.cluster {
+            let rows = router.build_index(name, spec, corpus).map_err(EmbedError::Backend)?;
+            self.metrics.on_index_build();
+            return Ok(rows);
+        }
         let handle = IndexHandle::build(spec, corpus).map_err(EmbedError::Backend)?;
         let rows = handle.len();
         self.register_index(name, handle);
@@ -251,10 +308,14 @@ impl Coordinator {
         self.metrics.on_index_build();
     }
 
-    /// Registered index names.
+    /// Registered index names (local and cluster-built).
     pub fn index_names(&self) -> Vec<String> {
         let mut v: Vec<String> = self.indexes.lock().unwrap().keys().cloned().collect();
+        if let Some(router) = &self.cluster {
+            v.extend(router.index_names());
+        }
         v.sort();
+        v.dedup();
         v
     }
 
@@ -277,18 +338,53 @@ impl Coordinator {
     }
 
     /// Serve a batch of index queries, recording query count, probed
-    /// buckets and ns/query in the coordinator [`Metrics`].
+    /// buckets and ns/query in the coordinator [`Metrics`]. Cluster
+    /// answers may be partial; this wrapper drops the marker — use
+    /// [`Coordinator::index_query_answer`] when degradation matters.
     pub fn index_query_batch(
         &self,
         name: &str,
         queries: &[Vec<f32>],
         k: usize,
     ) -> Result<Vec<Vec<SearchHit>>, EmbedError> {
+        Ok(self.index_query_answer(name, queries, k)?.hits)
+    }
+
+    /// Serve a batch of index queries with the degradation marker. In
+    /// sharded mode the queries scatter to the cluster's shards and the
+    /// per-shard top-k lists merge into exact global top-k;
+    /// [`IndexAnswer::partial`] flags answers missing a dead shard's
+    /// slice. Locally registered indexes always answer complete.
+    pub fn index_query_answer(
+        &self,
+        name: &str,
+        queries: &[Vec<f32>],
+        k: usize,
+    ) -> Result<IndexAnswer, EmbedError> {
+        if let Some(router) = &self.cluster {
+            if router.has_index(name) {
+                let wide: Vec<Vec<f64>> =
+                    queries.iter().map(|q| q.iter().map(|&v| v as f64).collect()).collect();
+                let started = Instant::now();
+                let ans =
+                    router.index_query_batch(name, &wide, k).map_err(EmbedError::Backend)?;
+                self.metrics.on_index_query(
+                    queries.len(),
+                    ans.probed_buckets,
+                    started.elapsed().as_nanos() as u64,
+                );
+                return Ok(IndexAnswer {
+                    hits: ans.hits,
+                    probed_buckets: ans.probed_buckets,
+                    partial: ans.partial,
+                });
+            }
+        }
         let handle = self.index(name).ok_or_else(|| EmbedError::UnknownIndex(name.to_string()))?;
         let started = Instant::now();
         let (hits, probed) = handle.query_batch_f32(queries, k).map_err(EmbedError::Backend)?;
         self.metrics.on_index_query(queries.len(), probed, started.elapsed().as_nanos() as u64);
-        Ok(hits)
+        Ok(IndexAnswer { hits, probed_buckets: probed, partial: false })
     }
 
     /// Metrics handle.

@@ -6,17 +6,44 @@
 //! ← ERR <message>
 //! → INDEX <name> <k> <f32,f32,...>
 //! ← OK <id:hamming:similarity,...>     (ranked nearest neighbors)
+//! ← OK PARTIAL <id:hamming:...>        (sharded mode: a shard's slice
+//!                                       is missing from the answer)
+//! → INDEX BUILD <name> <structure> <m> <n> [seed]
+//! ← OK building <name>
+//! → INDEX ROWS <name> <f64,...;f64,...>   (≤ 256 rows per line)
+//! ← OK <rows streamed so far>
+//! → INDEX COMMIT <name>
+//! ← OK built <name> rows=<n>
 //! → INDEXES             ← OK <name,name,...>
 //! → VARIANTS            ← OK <name,name,...>
 //! → METRICS             ← OK <snapshot text>
+//! → HEALTH              ← OK healthy variants=<...> indexes=<...> <snapshot>
 //! → QUIT                (closes the connection)
 //! ```
+//!
+//! `INDEX BUILD` opens a per-connection staging buffer; `ROWS` lines
+//! stream the corpus in bounded chunks (the same seam the cluster
+//! router uses to partition a corpus across shards) and `COMMIT`
+//! builds and registers the index. `BUILD`, `ROWS` and `COMMIT` are
+//! reserved words, not usable as index names in queries. Lines longer
+//! than [`MAX_LINE_BYTES`] get an `ERR` and the connection is closed.
 
 use super::server::Coordinator;
-use std::io::{BufRead, BufReader, Write};
+use crate::index::IndexSpec;
+use crate::pmodel::StructureKind;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+
+/// Hard cap on one protocol line (1 MiB). An overlong line cannot be
+/// re-synchronized, so it draws an `ERR` and a closed connection.
+pub const MAX_LINE_BYTES: u64 = 1 << 20;
+
+/// Most corpus rows one `INDEX ROWS` line may carry — keeps per-line
+/// buffering bounded while a build streams in.
+pub const MAX_BUILD_CHUNK_ROWS: usize = 256;
 
 /// Serve `coordinator` on `addr` (e.g. "127.0.0.1:7878") until `stop`
 /// becomes true. Returns the bound local address through the callback
@@ -51,17 +78,38 @@ pub fn serve_tcp(
     Ok(())
 }
 
+/// One in-progress streamed index build on a connection.
+struct PendingClientBuild {
+    spec: IndexSpec,
+    rows: Vec<Vec<f64>>,
+}
+
+/// Per-connection protocol state (streamed builds die with the
+/// connection if never committed).
+#[derive(Default)]
+struct ConnState {
+    builds: HashMap<String, PendingClientBuild>,
+}
+
 fn handle_conn(stream: TcpStream, c: &Coordinator) -> std::io::Result<()> {
     stream.set_nonblocking(false)?;
-    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut reader = BufReader::new(stream.try_clone()?.take(MAX_LINE_BYTES));
     let mut writer = stream;
     let mut line = String::new();
+    let mut state = ConnState::default();
     loop {
         line.clear();
+        reader.get_mut().set_limit(MAX_LINE_BYTES);
         if reader.read_line(&mut line)? == 0 {
             return Ok(()); // client hung up
         }
-        let reply = dispatch(line.trim(), c);
+        if !line.ends_with('\n') && reader.get_ref().limit() == 0 {
+            // the line hit the cap with no newline in sight: the stream
+            // cannot be re-synchronized, so report and close
+            writer.write_all(b"ERR line exceeds 1 MiB\n")?;
+            return Ok(());
+        }
+        let reply = dispatch(line.trim(), c, &mut state);
         if reply.is_empty() {
             return Ok(()); // QUIT
         }
@@ -76,13 +124,20 @@ fn parse_vector(csv: &str) -> Result<Vec<f32>, String> {
         .collect()
 }
 
-fn dispatch(line: &str, c: &Coordinator) -> String {
+fn parse_vector_f64(csv: &str) -> Result<Vec<f64>, String> {
+    csv.split(',')
+        .map(|t| t.trim().parse::<f64>().map_err(|e| format!("bad vector: {e}")))
+        .collect()
+}
+
+fn dispatch(line: &str, c: &Coordinator, state: &mut ConnState) -> String {
     let (cmd, rest) = line.split_once(' ').unwrap_or((line, ""));
     match cmd {
         "QUIT" => String::new(),
         "VARIANTS" => format!("OK {}", c.variant_names().join(",")),
         "INDEXES" => format!("OK {}", c.index_names().join(",")),
         "METRICS" => format!("OK {}", c.metrics().snapshot()),
+        "HEALTH" => format!("OK {}", c.health_line()),
         "EMBED" => {
             let Some((variant, csv)) = rest.split_once(' ') else {
                 return "ERR usage: EMBED <variant> <f32,f32,...>".into();
@@ -100,30 +155,120 @@ fn dispatch(line: &str, c: &Coordinator) -> String {
             }
         }
         "INDEX" => {
-            let mut parts = rest.splitn(3, ' ');
-            let (Some(name), Some(k), Some(csv)) =
-                (parts.next(), parts.next(), parts.next())
-            else {
-                return "ERR usage: INDEX <name> <k> <f32,f32,...>".into();
-            };
-            let Ok(k) = k.parse::<usize>() else {
-                return format!("ERR bad k '{k}'");
-            };
-            match parse_vector(csv) {
-                Err(e) => format!("ERR {e}"),
-                Ok(v) => match c.index_query(name, v, k) {
-                    Ok(hits) => {
-                        let out: Vec<String> = hits
-                            .iter()
-                            .map(|h| format!("{}:{}:{:.4}", h.id, h.hamming, h.similarity))
-                            .collect();
-                        format!("OK {}", out.join(","))
-                    }
-                    Err(e) => format!("ERR {e}"),
-                },
+            let (sub, tail) = rest.split_once(' ').unwrap_or((rest, ""));
+            match sub {
+                "BUILD" => index_build(tail, state),
+                "ROWS" => index_rows(tail, state),
+                "COMMIT" => index_commit(tail, c, state),
+                _ => index_query(rest, c),
             }
         }
         other => format!("ERR unknown command '{other}'"),
+    }
+}
+
+fn index_build(args: &str, state: &mut ConnState) -> String {
+    let parts: Vec<&str> = args.split_whitespace().collect();
+    if parts.len() < 4 || parts.len() > 5 {
+        return "ERR usage: INDEX BUILD <name> <structure> <m> <n> [seed]".into();
+    }
+    let name = parts[0];
+    let Some(kind) = StructureKind::parse(parts[1]) else {
+        return format!("ERR unknown structure '{}'", parts[1]);
+    };
+    let (Ok(m), Ok(n)) = (parts[2].parse::<usize>(), parts[3].parse::<usize>()) else {
+        return format!("ERR bad m/n '{} {}'", parts[2], parts[3]);
+    };
+    let seed = match parts.get(4) {
+        None => 0,
+        Some(s) => match s.parse::<u64>() {
+            Ok(seed) => seed,
+            Err(_) => return format!("ERR bad seed '{s}'"),
+        },
+    };
+    if m == 0 || n == 0 {
+        return "ERR m and n must be positive".into();
+    }
+    let spec = IndexSpec::new(kind, m, n).with_seed(seed);
+    state
+        .builds
+        .insert(name.to_string(), PendingClientBuild { spec, rows: Vec::new() });
+    format!("OK building {name}")
+}
+
+fn index_rows(args: &str, state: &mut ConnState) -> String {
+    let Some((name, rows_text)) = args.split_once(' ') else {
+        return "ERR usage: INDEX ROWS <name> <f64,...;f64,...>".into();
+    };
+    let Some(build) = state.builds.get_mut(name) else {
+        return format!("ERR no build in progress for '{name}'");
+    };
+    let chunks: Vec<&str> = rows_text.split(';').collect();
+    if chunks.len() > MAX_BUILD_CHUNK_ROWS {
+        return format!(
+            "ERR too many rows in one line: {} (max {MAX_BUILD_CHUNK_ROWS})",
+            chunks.len()
+        );
+    }
+    let mut parsed = Vec::with_capacity(chunks.len());
+    for chunk in chunks {
+        match parse_vector_f64(chunk) {
+            Err(e) => return format!("ERR {e}"),
+            Ok(row) => {
+                if row.len() != build.spec.n {
+                    return format!(
+                        "ERR corpus row has dim {} (index wants {})",
+                        row.len(),
+                        build.spec.n
+                    );
+                }
+                parsed.push(row);
+            }
+        }
+    }
+    build.rows.extend(parsed);
+    format!("OK {}", build.rows.len())
+}
+
+fn index_commit(args: &str, c: &Coordinator, state: &mut ConnState) -> String {
+    let name = args.trim();
+    if name.is_empty() || name.contains(' ') {
+        return "ERR usage: INDEX COMMIT <name>".into();
+    }
+    let Some(build) = state.builds.remove(name) else {
+        return format!("ERR no build in progress for '{name}'");
+    };
+    match c.build_index(name, build.spec, &build.rows) {
+        Ok(rows) => format!("OK built {name} rows={rows}"),
+        Err(e) => format!("ERR {e}"),
+    }
+}
+
+fn index_query(rest: &str, c: &Coordinator) -> String {
+    let mut parts = rest.splitn(3, ' ');
+    let (Some(name), Some(k), Some(csv)) = (parts.next(), parts.next(), parts.next()) else {
+        return "ERR usage: INDEX <name> <k> <f32,f32,...>".into();
+    };
+    let Ok(k) = k.parse::<usize>() else {
+        return format!("ERR bad k '{k}'");
+    };
+    match parse_vector(csv) {
+        Err(e) => format!("ERR {e}"),
+        Ok(v) => match c.index_query_answer(name, std::slice::from_ref(&v), k) {
+            Ok(ans) => {
+                let hits = &ans.hits[0];
+                let out: Vec<String> = hits
+                    .iter()
+                    .map(|h| format!("{}:{}:{:.4}", h.id, h.hamming, h.similarity))
+                    .collect();
+                if ans.partial {
+                    format!("OK PARTIAL {}", out.join(","))
+                } else {
+                    format!("OK {}", out.join(","))
+                }
+            }
+            Err(e) => format!("ERR {e}"),
+        },
     }
 }
 
@@ -192,6 +337,8 @@ mod tests {
         let csv: Vec<String> = corpus[4].iter().map(|x| x.to_string()).collect();
         let reply = roundtrip(addr, &format!("INDEX nn 3 {}", csv.join(",")));
         assert!(reply.starts_with("OK "), "{reply}");
+        // single-node answers are never partial
+        assert!(!reply.starts_with("OK PARTIAL"), "{reply}");
         let first = reply[3..].split(',').next().unwrap();
         let fields: Vec<&str> = first.split(':').collect();
         assert_eq!(fields[0], "4", "self-match ranks first: {reply}");
@@ -221,6 +368,85 @@ mod tests {
         assert!(e.starts_with("ERR"), "{e}");
         let bad = roundtrip(addr, "EMBED v 1,notanumber");
         assert!(bad.starts_with("ERR bad vector"), "{bad}");
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_health_reports_names_and_metrics() {
+        let (addr, stop, h) = start_server();
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"EMBED v 0.1,0.2,0.3,0.4,0.5,0.6,0.7,0.8\nHEALTH\n").unwrap();
+        let mut reader = BufReader::new(s);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let health = line.trim();
+        assert!(health.starts_with("OK healthy variants=v indexes=- "), "{health}");
+        assert!(health.contains("completed=1"), "{health}");
+        drop(reader);
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_streamed_index_build() {
+        let (addr, stop, h) = start_server();
+        let mut s = TcpStream::connect(addr).unwrap();
+        let corpus: Vec<Vec<f64>> = (0..12)
+            .map(|i| (0..8).map(|j| ((i * 5 + j) % 9) as f64 - 4.0).collect())
+            .collect();
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        let mut send = |msg: &str| {
+            s.write_all(msg.as_bytes()).unwrap();
+            s.write_all(b"\n").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            line.trim().to_string()
+        };
+        assert_eq!(send("INDEX BUILD tnn circulant 32 8 7"), "OK building tnn");
+        // stream the corpus in two chunks
+        let row_csv = |r: &Vec<f64>| {
+            r.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+        };
+        let chunk1: Vec<String> = corpus[..6].iter().map(row_csv).collect();
+        let chunk2: Vec<String> = corpus[6..].iter().map(row_csv).collect();
+        assert_eq!(send(&format!("INDEX ROWS tnn {}", chunk1.join(";"))), "OK 6");
+        assert_eq!(send(&format!("INDEX ROWS tnn {}", chunk2.join(";"))), "OK 12");
+        assert_eq!(send("INDEX COMMIT tnn"), "OK built tnn rows=12");
+        // the committed index serves queries; self-match ranks first
+        let reply = send(&format!("INDEX tnn 3 {}", row_csv(&corpus[2])));
+        assert!(reply.starts_with("OK 2:0:"), "{reply}");
+        // error paths: wrong dim, unknown build, rows after commit
+        assert!(send("INDEX ROWS tnn 1,2").starts_with("ERR no build in progress"));
+        assert!(send("INDEX COMMIT tnn").starts_with("ERR no build in progress"));
+        assert_eq!(send("INDEX BUILD bad circulant 32 8"), "OK building bad");
+        assert!(send("INDEX ROWS bad 1,2,3").starts_with("ERR corpus row has dim 3"));
+        assert!(send("INDEX BUILD x nope 32 8").starts_with("ERR unknown structure"));
+        drop(reader);
+        drop(s);
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_oversized_line_rejected() {
+        let (addr, stop, h) = start_server();
+        let mut s = TcpStream::connect(addr).unwrap();
+        // 1 MiB + slack of 'a' with no newline: the server must reply
+        // ERR and close instead of buffering forever
+        let blob = vec![b'a'; (MAX_LINE_BYTES as usize) + 16];
+        s.write_all(&blob).unwrap();
+        let mut reader = BufReader::new(s);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "ERR line exceeds 1 MiB");
+        // connection is closed afterwards
+        line.clear();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0);
+        // the listener still serves fresh connections
+        assert_eq!(roundtrip(addr, "VARIANTS"), "OK v");
         stop.store(true, Ordering::Relaxed);
         h.join().unwrap();
     }

@@ -39,11 +39,16 @@
 //!   (including f32 shadow-oracle accuracy sampling and index query
 //!   counters), per-variant precision knob, named similarity indexes
 //!   served alongside `embed` ([`coordinator`]) — native variants
-//!   execute through the engine's fused zero-staging streaming path.
+//!   execute through the engine's fused zero-staging streaming path,
+//! - a distributed serving tier: a scatter-gather router over N shard
+//!   executors (same-process channels or a length-prefixed TCP frame
+//!   protocol with pipelining and backpressure), merging per-shard
+//!   Hamming top-k exactly and failing embed traffic over to
+//!   survivors on shard death ([`cluster`]).
 //!
 //! Layering: `dsp`/`rng` → `pmodel` → `transform` → **`engine`** →
-//! `index` → `coordinator`/`eval`. The engine is the only layer the
-//! serving stack calls for native compute; per-vector
+//! `index` → `coordinator`/`cluster` → `eval`. The engine is the only
+//! layer the serving stack calls for native compute; per-vector
 //! `StructuredEmbedding::embed` remains the reference path and test
 //! oracle.
 //!
@@ -77,6 +82,7 @@
 //! See `ARCHITECTURE.md` at the repository root for the full layer map
 //! and the rules that keep the two precisions coherent.
 pub mod cli;
+pub mod cluster;
 pub mod coherence;
 pub mod coordinator;
 pub mod data;

@@ -1,0 +1,355 @@
+//! Integration tests for the distributed serving tier: same-process
+//! clusters must be indistinguishable from a single node (bit-identical
+//! embeds at f64, identical `(id, hamming)` top-k lists), and the TCP
+//! frame path must survive shard death, malformed frames and client
+//! disconnects.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use strembed::cluster::frame::{decode_reply, encode_request, read_frame};
+use strembed::cluster::{
+    serve_shard, spawn_health_monitor, ClusterHandle, LocalTransport, Router, ShardEngine,
+    ShardReply, ShardRequest, ShardTransport, TcpTransport, TcpTransportConfig,
+};
+use strembed::coordinator::{
+    BackendSpec, Coordinator, CoordinatorConfig, IndexSpec, Precision,
+};
+use strembed::data::synthetic::clustered_rows;
+use strembed::pmodel::StructureKind;
+use strembed::rng::Rng;
+
+const N: usize = 16;
+
+/// The variant set hosted on every shard (and on the single-node
+/// reference engine) in these tests.
+fn shard_specs(precision: Precision) -> Vec<(String, BackendSpec)> {
+    let mut specs = Vec::new();
+    for (name, structure, f, seed) in
+        [("circ-sign", "circulant", "sign", 1u64), ("toep-rff", "toeplitz", "rff", 2u64)]
+    {
+        let spec = BackendSpec::native(structure, f, 8, N, seed)
+            .expect("native spec")
+            .with_precision(precision)
+            .with_workers(2);
+        specs.push((name.to_string(), spec));
+    }
+    specs
+}
+
+/// A same-process cluster of `n` shards, returning the transport
+/// handles so tests can flip the simulated-death switch after the
+/// router has taken ownership.
+fn local_cluster(n: usize, precision: Precision) -> (ClusterHandle, Vec<Arc<LocalTransport>>) {
+    let mut handles = Vec::new();
+    let mut transports: Vec<Box<dyn ShardTransport>> = Vec::new();
+    for i in 0..n {
+        let engine = ShardEngine::new(&format!("shard{i}"), shard_specs(precision))
+            .expect("shard engine");
+        let t = Arc::new(LocalTransport::new(Arc::new(engine)));
+        handles.push(t.clone());
+        transports.push(Box::new(t));
+    }
+    (Router::handle(transports).expect("router"), handles)
+}
+
+fn f32_rows(rows: &[Vec<f64>]) -> Vec<Vec<f32>> {
+    rows.iter().map(|r| r.iter().map(|&v| v as f32).collect()).collect()
+}
+
+/// Single-node reference output: the same engine the shards run,
+/// driven directly.
+fn solo_embed(variant: &str, rows: &[Vec<f32>], precision: Precision) -> Vec<Vec<f32>> {
+    let solo = ShardEngine::new("solo", shard_specs(precision)).expect("solo engine");
+    let reply = solo.handle(ShardRequest::Embed {
+        variant: variant.to_string(),
+        rows: rows.to_vec(),
+    });
+    let ShardReply::Embedded { rows: feats } = reply else {
+        panic!("solo embed failed: {reply:?}");
+    };
+    feats
+}
+
+fn id_hamming(hits: &[strembed::coordinator::SearchHit]) -> Vec<(usize, u32)> {
+    hits.iter().map(|h| (h.id, h.hamming)).collect()
+}
+
+#[test]
+fn embed_is_bit_identical_to_single_node_across_shard_counts() {
+    let mut rng = Rng::new(5);
+    let rows = f32_rows(&clustered_rows(23, N, &mut rng));
+    for variant in ["circ-sign", "toep-rff"] {
+        // f64 pipeline: the bit-exactness claim
+        let want = solo_embed(variant, &rows, Precision::F64);
+        for shards in [1usize, 2, 4, 7] {
+            let (router, _handles) = local_cluster(shards, Precision::F64);
+            let got = router.embed_batch(variant, &rows).expect("cluster embed");
+            assert_eq!(got, want, "{variant} diverged at {shards} shards (f64)");
+        }
+        // f32 serving pipeline: row-partitioned work must agree closely
+        let want32 = solo_embed(variant, &rows, Precision::F32);
+        let (router, _handles) = local_cluster(4, Precision::F32);
+        let got32 = router.embed_batch(variant, &rows).expect("cluster embed f32");
+        assert_eq!(got32.len(), want32.len());
+        for (g, w) in got32.iter().zip(&want32) {
+            for (a, b) in g.iter().zip(w) {
+                assert!((a - b).abs() <= 1e-5 * b.abs().max(1.0), "f32 row drifted: {a} vs {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn topk_merge_matches_single_node_across_shard_counts() {
+    let mut rng = Rng::new(11);
+    let corpus = clustered_rows(120, N, &mut rng);
+    let spec = IndexSpec::new(StructureKind::Circulant, 64, N).with_seed(7).with_workers(2);
+    let reference = strembed::index::IndexHandle::build(spec.clone(), &corpus).expect("reference");
+    // queries include corpus members so exact-duplicate ties exercise
+    // the (hamming, id) tie-break
+    let mut queries = vec![corpus[0].clone(), corpus[17].clone(), corpus[63].clone()];
+    queries.extend(clustered_rows(5, N, &mut rng));
+    for shards in [1usize, 2, 4, 7] {
+        let (router, _handles) = local_cluster(shards, Precision::F64);
+        let rows = router.build_index("tnn", spec.clone(), &corpus).expect("cluster build");
+        assert_eq!(rows, corpus.len());
+        assert_eq!(router.index_rows("tnn"), Some(corpus.len()));
+        for k in [1usize, 5, 17] {
+            let (want, _probed) = reference.query_batch(&queries, k).expect("reference query");
+            let ans = router.index_query_batch("tnn", &queries, k).expect("cluster query");
+            assert!(!ans.partial, "no shard died; answer must be complete");
+            assert_eq!(ans.hits.len(), want.len());
+            for (got, want) in ans.hits.iter().zip(&want) {
+                assert_eq!(
+                    id_hamming(got),
+                    id_hamming(want),
+                    "top-{k} diverged at {shards} shards"
+                );
+                for (g, w) in got.iter().zip(want) {
+                    assert!((g.similarity - w.similarity).abs() < 1e-12);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn shard_death_fails_embed_over_and_marks_queries_partial() {
+    let mut rng = Rng::new(23);
+    let corpus = clustered_rows(80, N, &mut rng);
+    let queries = vec![corpus[3].clone(), clustered_rows(1, N, &mut rng).pop().unwrap()];
+    let rows32 = f32_rows(&clustered_rows(17, N, &mut rng));
+    let want_embed = solo_embed("circ-sign", &rows32, Precision::F64);
+
+    let (router, handles) = local_cluster(4, Precision::F64);
+    let spec = IndexSpec::new(StructureKind::Circulant, 64, N).with_seed(7).with_workers(2);
+    router.build_index("tnn", spec, &corpus).expect("cluster build");
+    let full = router.index_query_batch("tnn", &queries, 9).expect("full query");
+    assert!(!full.partial);
+
+    // kill shard 2 (it holds global ids congruent to 2 mod 4)
+    handles[2].set_down(true);
+    let got = router.embed_batch("circ-sign", &rows32).expect("embed must fail over");
+    assert_eq!(got, want_embed, "failover changed embed output");
+    assert_eq!(router.live_count(), 3, "the failed call marks the shard dead");
+
+    let degraded = router.index_query_batch("tnn", &queries, 9).expect("degraded query");
+    assert!(degraded.partial, "a dead shard's slice is missing");
+    for hits in &degraded.hits {
+        assert!(
+            hits.iter().all(|h| h.id % 4 != 2),
+            "dead shard's partition leaked into a partial answer"
+        );
+    }
+
+    // re-registration: the shard answers HEALTH again and is re-admitted
+    handles[2].set_down(false);
+    let stop = Arc::new(AtomicBool::new(false));
+    let monitor = spawn_health_monitor(&router, Duration::from_millis(25), stop.clone());
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while router.live_count() < 4 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    monitor.join().expect("monitor join");
+    assert_eq!(router.live_count(), 4, "probed shard was not re-admitted");
+    let recovered = router.index_query_batch("tnn", &queries, 9).expect("recovered query");
+    assert!(!recovered.partial);
+    assert_eq!(
+        recovered.hits.iter().map(|h| id_hamming(h)).collect::<Vec<_>>(),
+        full.hits.iter().map(|h| id_hamming(h)).collect::<Vec<_>>(),
+        "re-admitted shard must restore the exact single-node answer"
+    );
+}
+
+#[test]
+fn coordinator_serves_cluster_mode_behind_the_same_api() {
+    let (router, handles) = local_cluster(4, Precision::F64);
+    let mut specs = Vec::new();
+    for (name, shard_spec) in shard_specs(Precision::F64) {
+        specs.push((name.clone(), BackendSpec::cluster(&name, &shard_spec, router.clone())));
+    }
+    let coordinator =
+        Coordinator::start_with_cluster(specs, CoordinatorConfig::default(), Some(router.clone()))
+            .expect("clustered coordinator");
+
+    // embed through the ordinary submit path matches the single node
+    let mut rng = Rng::new(31);
+    let row = f32_rows(&clustered_rows(1, N, &mut rng)).pop().unwrap();
+    let want = solo_embed("circ-sign", std::slice::from_ref(&row), Precision::F64);
+    let resp = coordinator.embed_blocking("circ-sign", row).expect("clustered embed");
+    assert_eq!(resp.features, want[0]);
+
+    // index build + query route through the router, partial surfaces
+    let corpus = clustered_rows(60, N, &mut rng);
+    let spec = IndexSpec::new(StructureKind::Circulant, 64, N).with_seed(7).with_workers(2);
+    coordinator.build_index("tnn", spec, &corpus).expect("clustered build");
+    assert!(coordinator.index_names().contains(&"tnn".to_string()));
+    let queries = f32_rows(&[corpus[5].clone()]);
+    let ans = coordinator.index_query_answer("tnn", &queries, 5).expect("clustered query");
+    assert!(!ans.partial);
+    assert_eq!(ans.hits[0][0].id, 5, "a corpus member is its own nearest neighbor");
+    handles[1].set_down(true);
+    router.probe();
+    let ans = coordinator.index_query_answer("tnn", &queries, 5).expect("degraded query");
+    assert!(ans.partial);
+
+    // the HEALTH line shares the shard liveness code path
+    let line = coordinator.health_line();
+    assert!(line.starts_with("healthy variants=circ-sign,toep-rff"), "{line}");
+    coordinator.shutdown();
+}
+
+/// Spawn a shard server on an OS-assigned port; returns its address,
+/// stop flag and join handle.
+fn spawn_tcp_shard(
+    name: &'static str,
+) -> (String, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+    let engine =
+        Arc::new(ShardEngine::new(name, shard_specs(Precision::F64)).expect("shard engine"));
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let handle = {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            serve_shard(engine, "127.0.0.1:0", stop, move |bound| {
+                addr_tx.send(bound).expect("send bound addr");
+            })
+            .expect("serve_shard");
+        })
+    };
+    let bound = addr_rx.recv_timeout(Duration::from_secs(5)).expect("shard bound");
+    (bound.to_string(), stop, handle)
+}
+
+fn tcp_config() -> TcpTransportConfig {
+    TcpTransportConfig {
+        connect_timeout: Duration::from_secs(1),
+        call_timeout: Duration::from_secs(2),
+        window: 4,
+    }
+}
+
+#[test]
+fn tcp_cluster_matches_single_node_and_survives_shard_kill() {
+    let (addr_a, stop_a, join_a) = spawn_tcp_shard("tcp-a");
+    let (addr_b, stop_b, join_b) = spawn_tcp_shard("tcp-b");
+    let transports: Vec<Box<dyn ShardTransport>> = vec![
+        Box::new(TcpTransport::new(addr_a, tcp_config())),
+        Box::new(TcpTransport::new(addr_b, tcp_config())),
+    ];
+    let router = Router::handle(transports).expect("router");
+
+    let mut rng = Rng::new(41);
+    let rows = f32_rows(&clustered_rows(13, N, &mut rng));
+    let want = solo_embed("toep-rff", &rows, Precision::F64);
+    let got = router.embed_batch("toep-rff", &rows).expect("tcp embed");
+    assert_eq!(got, want, "TCP scatter/gather changed the embed output");
+
+    // streamed build over the frame protocol, then an exact merged query
+    let corpus = clustered_rows(30, N, &mut rng);
+    let spec = IndexSpec::new(StructureKind::Circulant, 64, N).with_seed(7).with_workers(2);
+    let reference = strembed::index::IndexHandle::build(spec.clone(), &corpus).expect("reference");
+    router.build_index("tnn", spec, &corpus).expect("tcp build");
+    let queries = vec![corpus[4].clone()];
+    let (want_hits, _) = reference.query_batch(&queries, 7).expect("reference query");
+    let ans = router.index_query_batch("tnn", &queries, 7).expect("tcp query");
+    assert!(!ans.partial);
+    assert_eq!(id_hamming(&ans.hits[0]), id_hamming(&want_hits[0]));
+
+    // kill shard B mid-traffic: embed fails over, queries go partial
+    stop_b.store(true, std::sync::atomic::Ordering::SeqCst);
+    join_b.join().expect("shard b join");
+    let got = router.embed_batch("toep-rff", &rows).expect("embed must survive the kill");
+    assert_eq!(got, want, "failover to the surviving shard changed the output");
+    assert_eq!(router.live_count(), 1);
+    let ans = router.index_query_batch("tnn", &queries, 7).expect("degraded tcp query");
+    assert!(ans.partial, "dead shard's partition must be reported missing");
+    assert!(ans.hits[0].iter().all(|h| h.id % 2 == 0), "shard B held the odd global ids");
+
+    drop(router);
+    stop_a.store(true, std::sync::atomic::Ordering::SeqCst);
+    join_a.join().expect("shard a join");
+}
+
+#[test]
+fn shard_server_rejects_broken_frames_and_outlives_bad_clients() {
+    use std::io::Write;
+    let (addr, stop, join) = spawn_tcp_shard("tcp-proto");
+
+    // oversized declared length: one ERR reply, then the connection is
+    // closed because framing can no longer be trusted
+    {
+        let mut conn = std::net::TcpStream::connect(&addr).expect("connect");
+        conn.write_all(&u32::MAX.to_le_bytes()).expect("write oversized header");
+        let payload = read_frame(&mut conn).expect("err frame").expect("reply before close");
+        let (id, reply) = decode_reply(&payload).expect("decode err reply");
+        assert_eq!(id, 0, "no request id is recoverable from a bad header");
+        let ShardReply::Err { message } = reply else {
+            panic!("expected ERR, got {reply:?}");
+        };
+        assert!(message.contains("frame"), "{message}");
+        assert!(
+            read_frame(&mut conn).expect("clean close").is_none(),
+            "server must close after a framing violation"
+        );
+    }
+
+    // truncated frame + mid-request disconnect: server drops the
+    // connection without wedging the accept loop
+    {
+        let mut conn = std::net::TcpStream::connect(&addr).expect("connect");
+        conn.write_all(&100u32.to_le_bytes()).expect("write header");
+        conn.write_all(&[0u8; 10]).expect("write partial body");
+        // drop mid-frame
+    }
+
+    // a malformed body gets an ERR but keeps the connection: framing is
+    // intact, so pipelined requests behind it still answer
+    {
+        let mut conn = std::net::TcpStream::connect(&addr).expect("connect");
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&13u32.to_le_bytes()); // 8 id + 1 opcode + garbage
+        bad.extend_from_slice(&7u64.to_le_bytes());
+        bad.push(250); // unknown opcode
+        bad.extend_from_slice(&[1, 2, 3, 4]);
+        conn.write_all(&bad).expect("write malformed request");
+        conn.write_all(&encode_request(8, &ShardRequest::Health)).expect("write health");
+        let payload = read_frame(&mut conn).expect("err frame").expect("err reply");
+        let (id, reply) = decode_reply(&payload).expect("decode");
+        assert_eq!(id, 7, "the request id is salvaged from a malformed body");
+        assert!(matches!(reply, ShardReply::Err { .. }));
+        let payload = read_frame(&mut conn).expect("health frame").expect("health reply");
+        let (id, reply) = decode_reply(&payload).expect("decode health");
+        assert_eq!(id, 8);
+        let ShardReply::Health { line } = reply else {
+            panic!("expected HEALTH, got {reply:?}");
+        };
+        assert!(line.starts_with("healthy"), "{line}");
+    }
+
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    join.join().expect("shard join");
+}

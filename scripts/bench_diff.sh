@@ -12,6 +12,10 @@
 #   index[]:      (family, m)         -> encode_ns_per_row (present on
 #                                        the family's first corpus row)
 #                 (family, m, corpus) -> search_ns_per_query
+#   cluster[]:    (kind=embed, batch)   -> router_ns_per_row,
+#                                          inproc_ns_per_row
+#                 (kind=search, shards,
+#                  corpus)              -> merged_search_ns_per_query
 #
 # THRESHOLD_PCT defaults to 10 (also overridable via the
 # BENCH_DIFF_THRESHOLD environment variable). Entries present only in
@@ -61,6 +65,14 @@ def tracked(report):
         if "encode_ns_per_row" in r:
             out[f"{key}/encode"] = float(r["encode_ns_per_row"])
         out[f"{key}/corpus{r['corpus']}/search"] = float(r["search_ns_per_query"])
+    for r in report.get("cluster", []):
+        if r.get("kind") == "embed":
+            key = f"cluster/shards{r['shards']}/batch{r['batch']}"
+            out[f"{key}/router"] = float(r["router_ns_per_row"])
+            out[f"{key}/inproc"] = float(r["inproc_ns_per_row"])
+        elif r.get("kind") == "search":
+            key = f"cluster/shards{r['shards']}/corpus{r['corpus']}"
+            out[f"{key}/merged_search"] = float(r["merged_search_ns_per_query"])
     return out
 
 

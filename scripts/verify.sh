@@ -11,6 +11,12 @@ cargo build --release
 echo "== tier-1: cargo test -q"
 cargo test -q
 
+# The distributed tier's same-process cluster tests (bit-identical
+# scatter-gather, exact top-k merge, failover) gate the PR explicitly,
+# even if tier-1 is ever narrowed to unit tests.
+echo "== cluster: cargo test -q --test cluster"
+cargo test -q --test cluster
+
 # Benches are plain binaries (harness = false) that tier-1 never
 # compiles; build them so bench code can't silently rot.
 echo "== cargo bench --no-run (bench code must keep building)"
