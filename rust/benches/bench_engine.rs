@@ -18,9 +18,11 @@
 //!   (n=128, m=64) and batch 64, f32.
 //!
 //! Besides the human-readable tables, the per-family batched-vs-per-row
-//! numbers (both precisions) and the staged-vs-fused numbers are
-//! written to `BENCH_engine.json` so the perf trajectory is
-//! machine-trackable across PRs.
+//! numbers (both precisions), the staged-vs-fused numbers, the index
+//! search/encode numbers, the mutable-index lifecycle numbers (push
+//! ns/row, 1- vs 8-segment search, compaction ns/row) and the cluster
+//! numbers are written to `BENCH_engine.json` so the perf trajectory
+//! is machine-trackable across PRs.
 
 mod common;
 
@@ -58,6 +60,23 @@ struct IndexStat {
     encode_ns_per_row: Option<f64>,
     /// ns per end-to-end `search` call (encode query + full scan)
     search_ns_per_query: f64,
+}
+
+/// One mutable-index lifecycle row of the machine-readable report:
+/// ingestion, segment-scan and compaction costs of the continuously
+/// ingesting [`strembed::index::MutableIndex`] at one corpus size.
+struct LifecycleStat {
+    m: usize,
+    corpus: usize,
+    /// ns per appended row through `push` (encode + segment append)
+    push_ns_per_row: f64,
+    /// search ns/query with the corpus in one sealed segment
+    search_1seg_ns_per_query: f64,
+    /// search ns/query with the same corpus across 8 sealed segments
+    search_8seg_ns_per_query: f64,
+    /// ns per row of a full compaction pass (packed-store re-copy,
+    /// no re-encoding)
+    compact_ns_per_row: f64,
 }
 
 /// One staged-vs-fused serving-path row of the machine-readable report.
@@ -109,6 +128,7 @@ fn write_bench_json(
     stats: &[FamilyStat],
     fused: &[FusedStat],
     index: &[IndexStat],
+    lifecycle: &[LifecycleStat],
     cluster_embed: &[ClusterEmbedStat],
     cluster_search: &[ClusterSearchStat],
 ) {
@@ -154,6 +174,21 @@ fn write_bench_json(
             "    {{\"family\": \"{}\", \"m\": {}, \"corpus\": {}, \
              {encode}\"search_ns_per_query\": {:.1}}}{sep}\n",
             r.family, r.m, r.corpus, r.search_ns_per_query
+        ));
+    }
+    s.push_str("  ],\n  \"index_lifecycle\": [\n");
+    for (i, r) in lifecycle.iter().enumerate() {
+        let sep = if i + 1 == lifecycle.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"m\": {}, \"corpus\": {}, \"push_ns_per_row\": {:.1}, \
+             \"search_1seg_ns_per_query\": {:.1}, \"search_8seg_ns_per_query\": {:.1}, \
+             \"compact_ns_per_row\": {:.1}}}{sep}\n",
+            r.m,
+            r.corpus,
+            r.push_ns_per_row,
+            r.search_1seg_ns_per_query,
+            r.search_8seg_ns_per_query,
+            r.compact_ns_per_row
         ));
     }
     s.push_str("  ],\n  \"cluster\": [\n");
@@ -489,6 +524,79 @@ fn main() {
         );
     }
 
+    // index lifecycle layer: the continuously-ingesting MutableIndex —
+    // push ns/row (encode + segment append), search ns/query with the
+    // same corpus held as 1 vs 8 sealed segments (the cost of the
+    // per-segment scan + (hamming, id) merge), and full-compaction
+    // ns/row (packed-store re-copy, no re-encoding)
+    let lifecycle_rows = 8_000usize;
+    let lspec = IndexSpec::new(StructureKind::Circulant, 256, 64).with_seed(3);
+    let mut lrng = Rng::new(29);
+    let lcorpus = gaussian_cloud(lifecycle_rows, 64, &mut lrng);
+    let mut lifecycle_results = Vec::new();
+
+    let push_idx = strembed::index::MutableIndex::new(lspec.clone())
+        .expect("mutable index")
+        .with_seal_rows(0);
+    let push_pool: Vec<Vec<f64>> = lcorpus[..1_000].to_vec();
+    let mut push_next = 0usize;
+    push_idx.push(&push_pool[0]).expect("warmup push");
+    let push = bench("lifecycle push 1 row", || {
+        let row = &push_pool[push_next % push_pool.len()];
+        push_next += 1;
+        std::hint::black_box(push_idx.push(std::hint::black_box(row)).expect("push"));
+    });
+
+    let seg1 = strembed::index::MutableIndex::build(lspec.clone(), &lcorpus)
+        .expect("1-segment index");
+    let seg8 = strembed::index::MutableIndex::new(lspec.clone())
+        .expect("mutable index")
+        .with_seal_rows(0);
+    for chunk in lcorpus.chunks(lifecycle_rows / 8) {
+        seg8.push_rows(chunk).expect("push chunk");
+        seg8.seal();
+    }
+    assert_eq!(seg1.stats().segments, 1);
+    assert_eq!(seg8.stats().segments, 8);
+    let lq = lcorpus[lifecycle_rows / 2].clone();
+    seg1.search(&lq, 10).expect("warmup search");
+    seg8.search(&lq, 10).expect("warmup search");
+    let s1 = bench(&format!("lifecycle search k=10 segments=1 corpus={lifecycle_rows}"), || {
+        std::hint::black_box(seg1.search(std::hint::black_box(&lq), 10).expect("search"));
+    });
+    let s8 = bench(&format!("lifecycle search k=10 segments=8 corpus={lifecycle_rows}"), || {
+        std::hint::black_box(seg8.search(std::hint::black_box(&lq), 10).expect("search"));
+    });
+    // the first call folds 8 segments into 1; steady state measures the
+    // full packed-store re-copy a merge performs
+    seg8.compact();
+    let comp = bench(&format!("lifecycle full compaction corpus={lifecycle_rows}"), || {
+        std::hint::black_box(seg8.compact());
+    });
+    let lifecycle_stats = vec![LifecycleStat {
+        m: 256,
+        corpus: lifecycle_rows,
+        push_ns_per_row: push.ns_per_op,
+        search_1seg_ns_per_query: s1.ns_per_op,
+        search_8seg_ns_per_query: s8.ns_per_op,
+        compact_ns_per_row: comp.ns_per_op / lifecycle_rows as f64,
+    }];
+    lifecycle_results.extend([push, s1, s8, comp]);
+    report("engine index lifecycle: push / segmented search / compaction", &lifecycle_results);
+    println!();
+    for s in &lifecycle_stats {
+        println!(
+            "lifecycle m={} corpus={}: push {:.0} ns/row, search {:.0} ns/query (1 seg) vs \
+             {:.0} ns/query (8 segs), compaction {:.1} ns/row",
+            s.m,
+            s.corpus,
+            s.push_ns_per_row,
+            s.search_1seg_ns_per_query,
+            s.search_8seg_ns_per_query,
+            s.compact_ns_per_row
+        );
+    }
+
     // cluster layer: router-hop overhead at the serving shape — ns/row
     // through a 4-shard same-process scatter-gather router vs calling
     // one shard engine directly — and merged top-k search ns/query
@@ -606,6 +714,7 @@ fn main() {
         &family_stats,
         &fused_stats,
         &index_stats,
+        &lifecycle_stats,
         &cluster_embed,
         &cluster_search,
     );

@@ -6,6 +6,9 @@
 //! strembed embed --structure circulant --f sign --m 8 --n 16 --seed 0 --input 0.1,0.2,...
 //! strembed index build --out index.bin --structure circulant --m 256 --n 64 --rows 10000
 //! strembed index query --index index.bin --input 0.1,0.2,... [--k 10]
+//! strembed index push --index index.bin --input 0.1,...;0.2,...   (prints assigned ids)
+//! strembed index delete --index index.bin --ids 3,17,42
+//! strembed index compact --index index.bin
 //! strembed index eval [--rows 10000] [--queries 50] [--k 10] [--ms 64,256]
 //! strembed list [--artifacts DIR]
 //! strembed serve [--addr 127.0.0.1:7878] [--native] [--artifacts DIR]
@@ -73,6 +76,10 @@ fn usage() -> String {
          \x20 index      build --out FILE --structure S --m M --n N    binary-code similarity index\n\
          \x20            \x20     --rows R [--bucket-bits B --probes P]  (sign hashes, Hamming top-k)\n\
          \x20            query --index FILE --input CSV [--k 10]       nearest neighbors of a vector\n\
+         \x20            push  --index FILE --input CSV[;CSV...]       append rows to a flat index\n\
+         \x20            \x20                                            (prints their stable ids)\n\
+         \x20            delete --index FILE --ids 3,17,42             tombstone rows out of answers\n\
+         \x20            compact --index FILE                          merge segments, fold tombstones\n\
          \x20            eval  [--rows R --queries Q --k K --ms CSV]   recall@k vs exact brute force\n\
          \x20 list       [--artifacts DIR]                             list AOT artifact variants\n\
          \x20 serve      [--addr A] [--native] [--precision f32|f64]   TCP embedding service\n\
@@ -172,19 +179,26 @@ fn cmd_embed(args: &Args) -> Result<String, String> {
     Ok(format!("{}\n", cells.join(",")))
 }
 
-/// `index build|query|eval` — the binary-code similarity-search
-/// surface (see [`crate::index`]). `build` hashes a synthetic
-/// clustered corpus into packed sign codes and persists the index;
-/// `query` re-opens it and prints the Hamming nearest neighbors of a
-/// vector; `eval` runs the recall@k harness against `exact::`
-/// brute-force angular top-k across families × code lengths.
+/// `index build|query|push|delete|compact|eval` — the binary-code
+/// similarity-search surface (see [`crate::index`]). `build` hashes a
+/// synthetic clustered corpus into packed sign codes and persists the
+/// index; `query` re-opens it (either format version) and prints the
+/// Hamming nearest neighbors of a vector; `push`/`delete`/`compact`
+/// run the mutable segment lifecycle on a saved flat index — a v1
+/// flat file is adopted as a single sealed segment and re-saved in
+/// the segmented v2 format; `eval` runs the recall@k harness against
+/// `exact::` brute-force angular top-k across families × code
+/// lengths.
 fn cmd_index(args: &Args) -> Result<String, String> {
     match args.positional.first().map(String::as_str) {
         Some("build") => cmd_index_build(args),
         Some("query") => cmd_index_query(args),
+        Some("push") => cmd_index_push(args),
+        Some("delete") => cmd_index_delete(args),
+        Some("compact") => cmd_index_compact(args),
         Some("eval") => cmd_index_eval(args),
         other => Err(format!(
-            "index needs a subcommand (build|query|eval), got {other:?}"
+            "index needs a subcommand (build|query|push|delete|compact|eval), got {other:?}"
         )),
     }
 }
@@ -235,26 +249,128 @@ fn cmd_index_build(args: &Args) -> Result<String, String> {
 
 fn cmd_index_query(args: &Args) -> Result<String, String> {
     let path = args.require("index")?;
-    let handle = crate::index::IndexHandle::load(std::path::Path::new(path))?;
     let input = args.require("input")?;
     let q: Vec<f64> = input
         .split(',')
         .map(|t| t.trim().parse::<f64>().map_err(|e| format!("bad input: {e}")))
         .collect::<Result<_, _>>()?;
     let k = args.get_usize("k", 10)?;
-    let result = handle.query(&q, k)?;
-    let mut out = format!(
-        "index {} ({} rows, m={}): top-{} of {} probed bucket(s)\nid,hamming,similarity\n",
-        path,
-        handle.len(),
-        handle.bits(),
-        k,
-        result.probed_buckets
-    );
+    // dispatch on the on-disk format version: v1 files are batch-built
+    // (flat or bucketed) IndexHandles, v2 files are segmented mutable
+    // indexes whose scan unit is the segment
+    let (header, result) = match crate::index::index_file_version(std::path::Path::new(path))? {
+        2 => {
+            let idx = crate::index::MutableIndex::load(std::path::Path::new(path))?;
+            let stats = idx.stats();
+            let result = idx.query(&q, k)?;
+            (
+                format!(
+                    "index {} ({} live rows, m={}): top-{} of {} scanned segment(s)",
+                    path,
+                    stats.live_docs,
+                    idx.bits(),
+                    k,
+                    result.probed_buckets
+                ),
+                result,
+            )
+        }
+        _ => {
+            let handle = crate::index::IndexHandle::load(std::path::Path::new(path))?;
+            let result = handle.query(&q, k)?;
+            (
+                format!(
+                    "index {} ({} rows, m={}): top-{} of {} probed bucket(s)",
+                    path,
+                    handle.len(),
+                    handle.bits(),
+                    k,
+                    result.probed_buckets
+                ),
+                result,
+            )
+        }
+    };
+    let mut out = format!("{header}\nid,hamming,similarity\n");
     for h in &result.hits {
         out.push_str(&format!("{},{},{:.4}\n", h.id, h.hamming, h.similarity));
     }
     Ok(out)
+}
+
+fn parse_rows_arg(input: &str, n: usize) -> Result<Vec<Vec<f64>>, String> {
+    let mut rows = Vec::new();
+    for (i, chunk) in input.split(';').enumerate() {
+        let row: Vec<f64> = chunk
+            .split(',')
+            .map(|t| t.trim().parse::<f64>().map_err(|e| format!("bad input row {i}: {e}")))
+            .collect::<Result<_, _>>()?;
+        if row.len() != n {
+            return Err(format!("input row {i} has dim {} (index wants {n})", row.len()));
+        }
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+/// `index push --index FILE --input CSV[;CSV...]`: append rows to a
+/// saved flat index and print the stable global ids they were
+/// assigned. Re-saves the file atomically (always in the segmented v2
+/// format).
+fn cmd_index_push(args: &Args) -> Result<String, String> {
+    let path = std::path::Path::new(args.require("index")?);
+    let idx = crate::index::MutableIndex::load(path)?;
+    let rows = parse_rows_arg(args.require("input")?, idx.spec().n)?;
+    let ids = idx.push_rows(&rows)?;
+    idx.save(path)?;
+    let stats = idx.stats();
+    let id_list: Vec<String> = ids.iter().map(|id| id.to_string()).collect();
+    Ok(format!(
+        "pushed {} row(s) -> ids {} ({} live rows, {} segment(s))\n",
+        rows.len(),
+        id_list.join(","),
+        stats.live_docs,
+        stats.segments
+    ))
+}
+
+/// `index delete --index FILE --ids 3,17,42`: tombstone rows so they
+/// stop appearing in answers; `compact` folds them out for real.
+fn cmd_index_delete(args: &Args) -> Result<String, String> {
+    let path = std::path::Path::new(args.require("index")?);
+    let idx = crate::index::MutableIndex::load(path)?;
+    let ids: Vec<u64> = args
+        .require("ids")?
+        .split(',')
+        .map(|t| t.trim().parse::<u64>().map_err(|e| format!("bad --ids: {e}")))
+        .collect::<Result<_, _>>()?;
+    let removed = idx.delete_batch(&ids);
+    idx.save(path)?;
+    let stats = idx.stats();
+    Ok(format!(
+        "deleted {} of {} id(s) ({} live rows, {} tombstone(s) pending compaction)\n",
+        removed,
+        ids.len(),
+        stats.live_docs,
+        stats.tombstones
+    ))
+}
+
+/// `index compact --index FILE`: merge all segments into one and fold
+/// tombstoned rows out of the packed code store (no re-encoding).
+fn cmd_index_compact(args: &Args) -> Result<String, String> {
+    let path = std::path::Path::new(args.require("index")?);
+    let idx = crate::index::MutableIndex::load(path)?;
+    let before = idx.stats();
+    let after = idx.compact();
+    idx.save(path)?;
+    Ok(format!(
+        "compacted {} segment(s) -> {} ({} live rows, {} tombstone(s) folded out)\n",
+        before.segments,
+        after.segments,
+        after.live_docs,
+        before.tombstones - after.tombstones
+    ))
 }
 
 fn cmd_index_eval(args: &Args) -> Result<String, String> {
@@ -518,6 +634,55 @@ mod tests {
         std::fs::remove_file(&path).ok();
         assert!(out.contains("id,hamming,similarity"), "{out}");
         assert_eq!(out.lines().count(), 2 + 5, "{out}");
+    }
+
+    #[test]
+    fn index_push_delete_compact_on_saved_file() {
+        let path = std::env::temp_dir()
+            .join(format!("strembed-cli-lifecycle-{}.idx", std::process::id()));
+        // a v1 flat build is adopted by the mutable lifecycle commands
+        let built = run_cmd(&format!(
+            "index build --out {} --structure circulant --m 128 --n 16 --rows 40 \
+             --seed 5 --workers 2",
+            path.display()
+        ))
+        .unwrap();
+        assert!(built.contains("indexed 40 rows"), "{built}");
+        // push two fresh rows: ids continue after the built corpus
+        let row_a: Vec<String> = (0..16).map(|j| format!("{}", (j % 5) as f64 - 2.0)).collect();
+        let row_b: Vec<String> = (0..16).map(|j| format!("{}", (j % 3) as f64 - 1.0)).collect();
+        let pushed = run_cmd(&format!(
+            "index push --index {} --input {};{}",
+            path.display(),
+            row_a.join(","),
+            row_b.join(",")
+        ))
+        .unwrap();
+        assert!(pushed.contains("ids 40,41"), "{pushed}");
+        // the pushed row self-matches at hamming 0 through index query
+        let out = run_cmd(&format!(
+            "index query --index {} --input {} --k 3",
+            path.display(),
+            row_a.join(",")
+        ))
+        .unwrap();
+        assert!(out.contains("live rows"), "v2 header: {out}");
+        assert!(out.contains("40,0,"), "self-match first: {out}");
+        // delete it; it must vanish from answers
+        let del = run_cmd(&format!("index delete --index {} --ids 40,999", path.display()))
+            .unwrap();
+        assert!(del.contains("deleted 1 of 2"), "{del}");
+        let out = run_cmd(&format!(
+            "index query --index {} --input {} --k 3",
+            path.display(),
+            row_a.join(",")
+        ))
+        .unwrap();
+        assert!(!out.lines().any(|l| l.starts_with("40,")), "tombstoned id served: {out}");
+        let compacted =
+            run_cmd(&format!("index compact --index {}", path.display())).unwrap();
+        assert!(compacted.contains("-> 1 (41 live rows, 1 tombstone(s) folded out)"), "{compacted}");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -87,6 +87,29 @@ pub enum ShardRequest {
         /// query rows at the f64 oracle precision
         queries: Vec<Vec<f64>>,
     },
+    /// Append rows to a committed mutable index under router-assigned
+    /// global ids (the continuous-ingestion twin of `IndexRows`).
+    IndexPush {
+        /// index name
+        name: String,
+        /// global corpus ids, parallel to `rows`, strictly increasing
+        ids: Vec<u64>,
+        /// corpus rows at the f64 oracle precision
+        rows: Vec<Vec<f64>>,
+    },
+    /// Tombstone rows of a committed mutable index by global id.
+    IndexDelete {
+        /// index name
+        name: String,
+        /// global corpus ids to tombstone
+        ids: Vec<u64>,
+    },
+    /// Fully compact a committed mutable index (seal + merge all
+    /// segments, folding tombstones out).
+    IndexCompact {
+        /// index name
+        name: String,
+    },
     /// Liveness probe; the reply carries the shard's health line.
     Health,
 }
@@ -131,6 +154,12 @@ pub enum ShardReply {
         /// health line, including a metrics snapshot
         line: String,
     },
+    /// Rows actually tombstoned by an `IndexDelete` (present and live
+    /// on this shard).
+    Deleted {
+        /// rows tombstoned on this shard
+        removed: u64,
+    },
     /// Application-level failure (the connection stays usable).
     Err {
         /// error text
@@ -144,6 +173,9 @@ const REQ_INDEX_ROWS: u8 = 3;
 const REQ_INDEX_COMMIT: u8 = 4;
 const REQ_INDEX_QUERY: u8 = 5;
 const REQ_HEALTH: u8 = 6;
+const REQ_INDEX_PUSH: u8 = 7;
+const REQ_INDEX_DELETE: u8 = 8;
+const REQ_INDEX_COMPACT: u8 = 9;
 
 const REP_EMBEDDED: u8 = 65;
 const REP_OK: u8 = 66;
@@ -151,6 +183,7 @@ const REP_COMMITTED: u8 = 67;
 const REP_HITS: u8 = 68;
 const REP_HEALTH: u8 = 69;
 const REP_ERR: u8 = 70;
+const REP_DELETED: u8 = 71;
 
 /// Validate a frame's declared payload length (from its 4-byte header)
 /// against the protocol bounds before any allocation happens.
@@ -391,6 +424,27 @@ pub fn encode_request(id: u64, req: &ShardRequest) -> Vec<u8> {
             put_u32(&mut b, *k);
             put_rows_f64(&mut b, queries);
         }
+        ShardRequest::IndexPush { name, ids, rows } => {
+            b.push(REQ_INDEX_PUSH);
+            put_str(&mut b, name);
+            put_u32(&mut b, ids.len() as u32);
+            for &id in ids {
+                put_u64(&mut b, id);
+            }
+            put_rows_f64(&mut b, rows);
+        }
+        ShardRequest::IndexDelete { name, ids } => {
+            b.push(REQ_INDEX_DELETE);
+            put_str(&mut b, name);
+            put_u32(&mut b, ids.len() as u32);
+            for &id in ids {
+                put_u64(&mut b, id);
+            }
+        }
+        ShardRequest::IndexCompact { name } => {
+            b.push(REQ_INDEX_COMPACT);
+            put_str(&mut b, name);
+        }
         ShardRequest::Health => b.push(REQ_HEALTH),
     }
     finish(b)
@@ -426,6 +480,10 @@ pub fn encode_reply(id: u64, rep: &ShardReply) -> Vec<u8> {
             b.push(REP_HEALTH);
             put_str(&mut b, line);
         }
+        ShardReply::Deleted { removed } => {
+            b.push(REP_DELETED);
+            put_u64(&mut b, *removed);
+        }
         ShardReply::Err { message } => {
             b.push(REP_ERR);
             put_str(&mut b, message);
@@ -448,6 +506,11 @@ pub fn decode_request(payload: &[u8]) -> Result<(u64, ShardRequest), FrameError>
         REQ_INDEX_QUERY => {
             ShardRequest::IndexQuery { name: c.str_()?, k: c.u32()?, queries: c.rows_f64()? }
         }
+        REQ_INDEX_PUSH => {
+            ShardRequest::IndexPush { name: c.str_()?, ids: c.u64_vec()?, rows: c.rows_f64()? }
+        }
+        REQ_INDEX_DELETE => ShardRequest::IndexDelete { name: c.str_()?, ids: c.u64_vec()? },
+        REQ_INDEX_COMPACT => ShardRequest::IndexCompact { name: c.str_()? },
         REQ_HEALTH => ShardRequest::Health,
         other => return Err(FrameError(format!("unknown request opcode {other}"))),
     };
@@ -481,6 +544,7 @@ pub fn decode_reply(payload: &[u8]) -> Result<(u64, ShardReply), FrameError> {
         }
         REP_HEALTH => ShardReply::Health { line: c.str_()? },
         REP_ERR => ShardReply::Err { message: c.str_()? },
+        REP_DELETED => ShardReply::Deleted { removed: c.u64()? },
         other => return Err(FrameError(format!("unknown reply opcode {other}"))),
     };
     c.done()?;
@@ -660,6 +724,40 @@ mod tests {
             panic!("wrong reply kind");
         };
         assert_eq!(message, "boom");
+    }
+
+    #[test]
+    fn lifecycle_requests_and_deleted_reply_roundtrip() {
+        let req = ShardRequest::IndexPush {
+            name: "nn".into(),
+            ids: vec![100, 104, 108],
+            rows: vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]],
+        };
+        let ShardRequest::IndexPush { name, ids, rows } = roundtrip_request(&req) else {
+            panic!("wrong request kind");
+        };
+        assert_eq!((name.as_str(), ids), ("nn", vec![100, 104, 108]));
+        assert_eq!(rows[1], vec![3.0, 4.0]);
+
+        let req = ShardRequest::IndexDelete { name: "nn".into(), ids: vec![7, u64::MAX] };
+        let ShardRequest::IndexDelete { name, ids } = roundtrip_request(&req) else {
+            panic!("wrong request kind");
+        };
+        assert_eq!((name.as_str(), ids), ("nn", vec![7, u64::MAX]));
+
+        let ShardRequest::IndexCompact { name } =
+            roundtrip_request(&ShardRequest::IndexCompact { name: "nn".into() })
+        else {
+            panic!("wrong request kind");
+        };
+        assert_eq!(name, "nn");
+
+        let ShardReply::Deleted { removed } =
+            roundtrip_reply(&ShardReply::Deleted { removed: 3 })
+        else {
+            panic!("wrong reply kind");
+        };
+        assert_eq!(removed, 3);
     }
 
     #[test]

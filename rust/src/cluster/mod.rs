@@ -9,7 +9,7 @@
 //!                                   │  scatter: frames / direct calls
 //!                        ┌──────────┼──────────┐
 //!                   Shard 0     Shard 1 …  Shard N-1
-//!                (StreamingPool + IndexHandle per shard)
+//!                (StreamingPool + MutableIndex per shard)
 //!                        └──────────┼──────────┘
 //!                                   ▼  gather: reassemble / merge
 //! ```
@@ -19,11 +19,17 @@
 //! since each row runs whole through the same per-row f64 kernels a
 //! single node uses, the assembled batch is bit-identical to the
 //! single-node result. **Index** corpora are partitioned round-robin
-//! by global row id and streamed out in bounded chunks; per-shard
-//! Hamming top-k lists come back in global-id terms and are merged by
-//! `(hamming, id)` ascending — the exact tie-break the single-node
-//! [`crate::index::CodeStore`] scan uses — so an N-shard k-NN answer
-//! equals the 1-shard answer.
+//! by global row id and streamed out in bounded chunks into mutable
+//! shard indexes ([`crate::index::MutableIndex`], which store global
+//! ids natively); per-shard Hamming top-k lists come back in global-id
+//! terms and are merged by `(hamming, id)` ascending — the exact
+//! tie-break the single-node [`crate::index::CodeStore`] scan uses —
+//! so an N-shard k-NN answer equals the 1-shard answer. After a build,
+//! shards keep ingesting: `IndexPush` appends rows under
+//! router-assigned global ids (routed by the build's round-robin, so
+//! the per-shard id order stays a subsequence of the global order),
+//! `IndexDelete` tombstones rows, and `IndexCompact` folds tombstones
+//! out shard-locally.
 //!
 //! # Transports
 //!

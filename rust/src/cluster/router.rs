@@ -68,9 +68,14 @@ pub struct ShardStatus {
 struct IndexMeta {
     /// code length in bits (similarity = `1 - hamming/m`)
     m: usize,
-    /// total corpus rows across all shards
+    /// next unassigned global row id — the build seeds it with the
+    /// corpus size and every push advances it, so it doubles as the
+    /// rows-ever-assigned count (a failed push may leave id gaps;
+    /// gaps are harmless, ids are never reused)
     rows: usize,
-    /// shard slots that hold a partition of this index
+    /// shard slots that hold a partition of this index; pushes and
+    /// deletes route by `shards[gid % shards.len()]`, the same
+    /// round-robin the build used
     shards: Vec<usize>,
 }
 
@@ -439,6 +444,165 @@ impl Router {
         Ok(ClusterAnswer { hits, probed_buckets: probed_total, partial })
     }
 
+    /// Append rows to the cluster index `name`, returning the assigned
+    /// global ids in row order. Ids are reserved under the router's
+    /// index lock, then each row routes to
+    /// `shards[gid % shards.len()]` — the same round-robin the build
+    /// used, so per-shard id order stays a strictly increasing
+    /// subsequence of the global order and merged queries stay exact.
+    /// Any shard failure fails the push (the reserved ids become
+    /// harmless gaps — ids are never reused).
+    pub fn index_push(&self, name: &str, rows: &[Vec<f64>]) -> Result<Vec<u64>, String> {
+        let (meta, first_gid) = {
+            let mut indexes = self.indexes.lock().expect("router indexes lock");
+            let meta =
+                indexes.get_mut(name).ok_or_else(|| format!("unknown index '{name}'"))?;
+            let first = meta.rows as u64;
+            meta.rows += rows.len();
+            (meta.clone(), first)
+        };
+        if rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        let gids: Vec<u64> = (0..rows.len() as u64).map(|i| first_gid + i).collect();
+        // group the batch per owning shard, preserving id order
+        let mut parts: HashMap<usize, (Vec<u64>, Vec<Vec<f64>>)> = HashMap::new();
+        for (gid, row) in gids.iter().zip(rows) {
+            let shard = meta.shards[*gid as usize % meta.shards.len()];
+            let part = parts.entry(shard).or_default();
+            part.0.push(*gid);
+            part.1.push(row.clone());
+        }
+        let results: Vec<(usize, Result<(), String>)> = std::thread::scope(|s| {
+            let handles: Vec<_> = parts
+                .into_iter()
+                .map(|(shard, (ids, rows))| {
+                    let transport = &self.transports[shard];
+                    s.spawn(move || {
+                        let mut at = 0;
+                        while at < ids.len() {
+                            let end = (at + BUILD_CHUNK_ROWS).min(ids.len());
+                            let reply = transport.call(&ShardRequest::IndexPush {
+                                name: name.to_string(),
+                                ids: ids[at..end].to_vec(),
+                                rows: rows[at..end].to_vec(),
+                            });
+                            let step = match reply {
+                                Ok(ShardReply::Ok) => Ok(()),
+                                Ok(ShardReply::Err { message }) => Err(message),
+                                Ok(other) => Err(format!("unexpected reply {other:?}")),
+                                Err(e) => Err(e.to_string()),
+                            };
+                            if let Err(e) = step {
+                                return (shard, Err(e));
+                            }
+                            at = end;
+                        }
+                        (shard, Ok(()))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("push thread")).collect()
+        });
+        for (shard, result) in results {
+            if let Err(e) = result {
+                return Err(format!("index push failed on shard {shard}: {e}"));
+            }
+        }
+        Ok(gids)
+    }
+
+    /// Tombstone rows of the cluster index `name` by global id; returns
+    /// how many were present and live across all shards. Each id routes
+    /// to its owning shard by the build's round-robin. Any shard
+    /// failure fails the delete.
+    pub fn index_delete(&self, name: &str, ids: &[u64]) -> Result<usize, String> {
+        let meta = self
+            .indexes
+            .lock()
+            .expect("router indexes lock")
+            .get(name)
+            .cloned()
+            .ok_or_else(|| format!("unknown index '{name}'"))?;
+        if ids.is_empty() {
+            return Ok(0);
+        }
+        let mut parts: HashMap<usize, Vec<u64>> = HashMap::new();
+        for &id in ids {
+            parts
+                .entry(meta.shards[id as usize % meta.shards.len()])
+                .or_default()
+                .push(id);
+        }
+        let results: Vec<(usize, Result<u64, String>)> = std::thread::scope(|s| {
+            let handles: Vec<_> = parts
+                .into_iter()
+                .map(|(shard, ids)| {
+                    let transport = &self.transports[shard];
+                    s.spawn(move || {
+                        let reply = transport
+                            .call(&ShardRequest::IndexDelete { name: name.to_string(), ids });
+                        let out = match reply {
+                            Ok(ShardReply::Deleted { removed }) => Ok(removed),
+                            Ok(ShardReply::Err { message }) => Err(message),
+                            Ok(other) => Err(format!("unexpected reply {other:?}")),
+                            Err(e) => Err(e.to_string()),
+                        };
+                        (shard, out)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("delete thread")).collect()
+        });
+        let mut removed = 0u64;
+        for (shard, result) in results {
+            match result {
+                Ok(n) => removed += n,
+                Err(e) => return Err(format!("index delete failed on shard {shard}: {e}")),
+            }
+        }
+        Ok(removed as usize)
+    }
+
+    /// Fully compact the cluster index `name` on every holding shard
+    /// (seal + merge segments, folding tombstones out shard-locally).
+    pub fn index_compact(&self, name: &str) -> Result<(), String> {
+        let meta = self
+            .indexes
+            .lock()
+            .expect("router indexes lock")
+            .get(name)
+            .cloned()
+            .ok_or_else(|| format!("unknown index '{name}'"))?;
+        let results: Vec<(usize, Result<(), String>)> = std::thread::scope(|s| {
+            let handles: Vec<_> = meta
+                .shards
+                .iter()
+                .map(|&shard| {
+                    let transport = &self.transports[shard];
+                    s.spawn(move || {
+                        let reply = transport
+                            .call(&ShardRequest::IndexCompact { name: name.to_string() });
+                        let out = match reply {
+                            Ok(ShardReply::Ok) => Ok(()),
+                            Ok(ShardReply::Err { message }) => Err(message),
+                            Ok(other) => Err(format!("unexpected reply {other:?}")),
+                            Err(e) => Err(e.to_string()),
+                        };
+                        (shard, out)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("compact thread")).collect()
+        });
+        for (shard, result) in results {
+            if let Err(e) = result {
+                return Err(format!("index compact failed on shard {shard}: {e}"));
+            }
+        }
+        Ok(())
+    }
+
     /// Whether the cluster has an index registered under `name`.
     pub fn has_index(&self, name: &str) -> bool {
         self.indexes.lock().expect("router indexes lock").contains_key(name)
@@ -452,7 +616,8 @@ impl Router {
         names
     }
 
-    /// Total corpus rows of a cluster-built index.
+    /// Rows ever assigned to a cluster index (build + pushes; this is
+    /// also the next global id a push would receive).
     pub fn index_rows(&self, name: &str) -> Option<usize> {
         self.indexes.lock().expect("router indexes lock").get(name).map(|m| m.rows)
     }

@@ -11,14 +11,16 @@
 //! frames. That single funnel is what makes the same-process and
 //! multi-process cluster modes behave identically.
 //!
-//! Index rows arrive with explicit **global** corpus ids; the shard
-//! remembers them and translates its local hit ids back to global ids
-//! in every query reply, so the router can merge per-shard top-k lists
-//! without knowing how the corpus was partitioned.
+//! Index rows arrive with explicit **global** corpus ids. Flat commits
+//! land in a [`crate::index::MutableIndex`] that stores those global
+//! ids natively (its segments carry per-row ids), so hit ids need no
+//! translation and the shard keeps ingesting after the commit via
+//! `IndexPush` / `IndexDelete` / `IndexCompact`. Bucketed commits stay
+//! immutable [`IndexHandle`]s with a local→global id translation table.
 
 use super::frame::{ShardReply, ShardRequest, WireHit};
 use crate::coordinator::{health_line, Backend, BackendSpec, Metrics, NativeBackend};
-use crate::index::{IndexHandle, IndexSpec};
+use crate::index::{IndexHandle, IndexSpec, MutableIndex};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -28,12 +30,19 @@ struct ShardVariant {
     backend: Mutex<NativeBackend>,
 }
 
-struct ShardIndex {
-    handle: IndexHandle,
-    /// global corpus id of each local row, in insertion order —
-    /// strictly increasing, so local `(hamming, id)` rank order equals
-    /// global rank order within this shard's partition
-    ids: Vec<u64>,
+enum ShardIndex {
+    /// flat: a mutable segmented index whose rows carry global ids
+    /// natively — hits come back in global-id terms and the index keeps
+    /// ingesting after the commit
+    Live(MutableIndex),
+    /// bucketed: an immutable batch-built handle plus the global corpus
+    /// id of each local row, in insertion order — strictly increasing,
+    /// so local `(hamming, id)` rank order equals global rank order
+    /// within this shard's partition
+    Static {
+        handle: IndexHandle,
+        ids: Vec<u64>,
+    },
 }
 
 struct PendingBuild {
@@ -118,9 +127,29 @@ impl ShardEngine {
         names
     }
 
-    /// Rows held by a committed index on this shard.
+    /// Rows held by a committed index on this shard (stored codes,
+    /// tombstoned rows included).
     pub fn index_rows(&self, name: &str) -> Option<usize> {
-        self.indexes.lock().expect("shard indexes lock").get(name).map(|i| i.ids.len())
+        self.indexes.lock().expect("shard indexes lock").get(name).map(|i| match i.as_ref() {
+            ShardIndex::Live(index) => index.stats().total_docs,
+            ShardIndex::Static { ids, .. } => ids.len(),
+        })
+    }
+
+    /// Re-export the lifecycle gauges, summed over every committed
+    /// mutable index on this shard.
+    fn refresh_index_gauges(&self) {
+        let (mut segments, mut live, mut tombstones, mut compactions) = (0, 0, 0, 0u64);
+        for index in self.indexes.lock().expect("shard indexes lock").values() {
+            if let ShardIndex::Live(m) = index.as_ref() {
+                let s = m.stats();
+                segments += s.segments;
+                live += s.live_docs;
+                tombstones += s.tombstones;
+                compactions += s.compactions;
+            }
+        }
+        self.metrics.set_index_lifecycle(segments, live, tombstones, compactions);
     }
 
     /// Execute one request. Application failures come back as
@@ -138,6 +167,9 @@ impl ShardEngine {
             ShardRequest::IndexQuery { name, k, queries } => {
                 self.index_query(&name, k as usize, &queries)
             }
+            ShardRequest::IndexPush { name, ids, rows } => self.index_push(&name, &ids, &rows),
+            ShardRequest::IndexDelete { name, ids } => self.index_delete(&name, &ids),
+            ShardRequest::IndexCompact { name } => self.index_compact(&name),
             ShardRequest::Health => ShardReply::Health {
                 line: health_line(
                     &self.variant_names(),
@@ -211,44 +243,122 @@ impl ShardEngine {
         let Some(build) = self.pending.lock().expect("shard pending lock").remove(name) else {
             return ShardReply::Err { message: format!("no pending build for index '{name}'") };
         };
-        match IndexHandle::build(build.spec, &build.rows) {
-            Ok(handle) => {
-                let rows = build.ids.len() as u64;
-                self.indexes
-                    .lock()
-                    .expect("shard indexes lock")
-                    .insert(name.to_string(), Arc::new(ShardIndex { handle, ids: build.ids }));
-                self.metrics.on_index_build();
-                ShardReply::Committed { rows }
+        let rows = build.ids.len() as u64;
+        let index = if build.spec.bucket_bits.is_some() {
+            match IndexHandle::build(build.spec, &build.rows) {
+                Ok(handle) => ShardIndex::Static { handle, ids: build.ids },
+                Err(e) => {
+                    return ShardReply::Err { message: format!("index build failed: {e}") }
+                }
             }
-            Err(e) => ShardReply::Err { message: format!("index build failed: {e}") },
-        }
+        } else {
+            match MutableIndex::build_with_ids(build.spec, build.ids, &build.rows) {
+                Ok(index) => ShardIndex::Live(index),
+                Err(e) => {
+                    return ShardReply::Err { message: format!("index build failed: {e}") }
+                }
+            }
+        };
+        self.indexes.lock().expect("shard indexes lock").insert(name.to_string(), Arc::new(index));
+        self.metrics.on_index_build();
+        self.refresh_index_gauges();
+        ShardReply::Committed { rows }
+    }
+
+    fn index(&self, name: &str) -> Option<Arc<ShardIndex>> {
+        self.indexes.lock().expect("shard indexes lock").get(name).cloned()
     }
 
     fn index_query(&self, name: &str, k: usize, queries: &[Vec<f64>]) -> ShardReply {
-        let index = self.indexes.lock().expect("shard indexes lock").get(name).cloned();
-        let Some(index) = index else {
+        let Some(index) = self.index(name) else {
             return ShardReply::Err { message: format!("unknown index '{name}'") };
         };
         let start = Instant::now();
-        match index.handle.query_batch(queries, k) {
-            Ok((per_query, probed)) => {
+        let result = match index.as_ref() {
+            // the mutable index's hits already carry global ids
+            ShardIndex::Live(m) => m.query_batch(queries, k).map(|(per_query, probed)| {
+                let hits = per_query
+                    .into_iter()
+                    .map(|hs| {
+                        hs.into_iter()
+                            .map(|h| WireHit { id: h.id as u64, hamming: h.hamming })
+                            .collect()
+                    })
+                    .collect();
+                (hits, probed)
+            }),
+            ShardIndex::Static { handle, ids } => {
+                handle.query_batch(queries, k).map(|(per_query, probed)| {
+                    let hits = per_query
+                        .into_iter()
+                        .map(|hs| {
+                            hs.into_iter()
+                                .map(|h| WireHit { id: ids[h.id], hamming: h.hamming })
+                                .collect()
+                        })
+                        .collect();
+                    (hits, probed)
+                })
+            }
+        };
+        match result {
+            Ok((hits, probed)) => {
                 self.metrics.on_index_query(
                     queries.len(),
                     probed,
                     start.elapsed().as_nanos() as u64,
                 );
-                let hits = per_query
-                    .into_iter()
-                    .map(|hs| {
-                        hs.into_iter()
-                            .map(|h| WireHit { id: index.ids[h.id], hamming: h.hamming })
-                            .collect()
-                    })
-                    .collect();
                 ShardReply::Hits { probed: probed as u64, hits }
             }
             Err(e) => ShardReply::Err { message: format!("query failed: {e}") },
         }
+    }
+
+    fn index_push(&self, name: &str, ids: &[u64], rows: &[Vec<f64>]) -> ShardReply {
+        let Some(index) = self.index(name) else {
+            return ShardReply::Err { message: format!("unknown index '{name}'") };
+        };
+        let ShardIndex::Live(m) = index.as_ref() else {
+            return ShardReply::Err {
+                message: format!("index '{name}' is batch-built (bucketed) and immutable"),
+            };
+        };
+        match m.push_rows_with_ids(ids, rows) {
+            Ok(()) => {
+                self.metrics.on_index_push(rows.len());
+                self.refresh_index_gauges();
+                ShardReply::Ok
+            }
+            Err(e) => ShardReply::Err { message: format!("push failed: {e}") },
+        }
+    }
+
+    fn index_delete(&self, name: &str, ids: &[u64]) -> ShardReply {
+        let Some(index) = self.index(name) else {
+            return ShardReply::Err { message: format!("unknown index '{name}'") };
+        };
+        let ShardIndex::Live(m) = index.as_ref() else {
+            return ShardReply::Err {
+                message: format!("index '{name}' is batch-built (bucketed) and immutable"),
+            };
+        };
+        let removed = m.delete_batch(ids);
+        self.metrics.on_index_delete(removed);
+        self.refresh_index_gauges();
+        ShardReply::Deleted { removed: removed as u64 }
+    }
+
+    fn index_compact(&self, name: &str) -> ShardReply {
+        let Some(index) = self.index(name) else {
+            return ShardReply::Err { message: format!("unknown index '{name}'") };
+        };
+        let ShardIndex::Live(m) = index.as_ref() else {
+            return ShardReply::Err {
+                message: format!("index '{name}' is batch-built (bucketed) and immutable"),
+            };
+        };
+        m.compact();
+        self.refresh_index_gauges();
+        ShardReply::Ok
     }
 }

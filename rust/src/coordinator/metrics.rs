@@ -30,6 +30,18 @@ pub struct Metrics {
     index_probed_buckets: AtomicU64,
     /// wall nanoseconds spent in index searches
     index_query_ns: AtomicU64,
+    /// rows pushed into mutable indexes
+    index_pushes: AtomicU64,
+    /// rows tombstoned in mutable indexes (present-and-live deletes)
+    index_deletes: AtomicU64,
+    /// gauge: segments across all registered mutable indexes
+    index_segments: AtomicU64,
+    /// gauge: live (searchable) docs across all mutable indexes
+    index_live_docs: AtomicU64,
+    /// gauge: tombstoned docs not yet folded out by compaction
+    index_tombstones: AtomicU64,
+    /// gauge: lifetime segment merges across all mutable indexes
+    index_compactions: AtomicU64,
 }
 
 #[derive(Debug, Default, Clone, Copy)]
@@ -80,6 +92,18 @@ pub struct MetricsSnapshot {
     pub index_mean_probed_buckets: f64,
     /// mean wall nanoseconds per index query
     pub index_ns_per_query: f64,
+    /// rows pushed into mutable indexes
+    pub index_pushes: u64,
+    /// rows tombstoned in mutable indexes
+    pub index_deletes: u64,
+    /// segments across all registered mutable indexes (gauge)
+    pub index_segments: u64,
+    /// live (searchable) docs across all mutable indexes (gauge)
+    pub index_live_docs: u64,
+    /// tombstoned docs awaiting compaction (gauge)
+    pub index_tombstones: u64,
+    /// lifetime segment merges across all mutable indexes (gauge)
+    pub index_compactions: u64,
 }
 
 const RESERVOIR: usize = 100_000;
@@ -102,6 +126,12 @@ impl Metrics {
             index_queries: AtomicU64::new(0),
             index_probed_buckets: AtomicU64::new(0),
             index_query_ns: AtomicU64::new(0),
+            index_pushes: AtomicU64::new(0),
+            index_deletes: AtomicU64::new(0),
+            index_segments: AtomicU64::new(0),
+            index_live_docs: AtomicU64::new(0),
+            index_tombstones: AtomicU64::new(0),
+            index_compactions: AtomicU64::new(0),
         }
     }
 
@@ -159,6 +189,32 @@ impl Metrics {
         self.index_query_ns.fetch_add(ns, Ordering::Relaxed);
     }
 
+    /// Record rows pushed into a mutable index.
+    pub fn on_index_push(&self, rows: usize) {
+        self.index_pushes.fetch_add(rows as u64, Ordering::Relaxed);
+    }
+
+    /// Record rows tombstoned in a mutable index (only deletes that hit
+    /// a present, live row count).
+    pub fn on_index_delete(&self, rows: usize) {
+        self.index_deletes.fetch_add(rows as u64, Ordering::Relaxed);
+    }
+
+    /// Refresh the mutable-index lifecycle gauges (summed over every
+    /// registered mutable index by the coordinator after a mutation).
+    pub fn set_index_lifecycle(
+        &self,
+        segments: usize,
+        live_docs: usize,
+        tombstones: usize,
+        compactions: u64,
+    ) {
+        self.index_segments.store(segments as u64, Ordering::Relaxed);
+        self.index_live_docs.store(live_docs as u64, Ordering::Relaxed);
+        self.index_tombstones.store(tombstones as u64, Ordering::Relaxed);
+        self.index_compactions.store(compactions, Ordering::Relaxed);
+    }
+
     /// Take a snapshot.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let lat = self.latencies.lock().unwrap().clone();
@@ -201,6 +257,12 @@ impl Metrics {
                 self.index_probed_buckets.load(Ordering::Relaxed),
             ),
             index_ns_per_query: per_query(self.index_query_ns.load(Ordering::Relaxed)),
+            index_pushes: self.index_pushes.load(Ordering::Relaxed),
+            index_deletes: self.index_deletes.load(Ordering::Relaxed),
+            index_segments: self.index_segments.load(Ordering::Relaxed),
+            index_live_docs: self.index_live_docs.load(Ordering::Relaxed),
+            index_tombstones: self.index_tombstones.load(Ordering::Relaxed),
+            index_compactions: self.index_compactions.load(Ordering::Relaxed),
         }
     }
 }
@@ -234,7 +296,9 @@ impl std::fmt::Display for MetricsSnapshot {
              mean_batch={:.2} rps={:.1} p50={:.3}ms p90={:.3}ms p99={:.3}ms \
              shadow_samples={} shadow_mean_err={:.2e} shadow_max_err={:.2e} \
              index_builds={} index_queries={} index_mean_probed={:.1} \
-             index_ns_per_query={:.0}",
+             index_ns_per_query={:.0} index_pushes={} index_deletes={} \
+             index_segments={} index_live_docs={} index_tombstones={} \
+             index_compactions={}",
             self.uptime,
             self.submitted,
             self.completed,
@@ -252,7 +316,13 @@ impl std::fmt::Display for MetricsSnapshot {
             self.index_builds,
             self.index_queries,
             self.index_mean_probed_buckets,
-            self.index_ns_per_query
+            self.index_ns_per_query,
+            self.index_pushes,
+            self.index_deletes,
+            self.index_segments,
+            self.index_live_docs,
+            self.index_tombstones,
+            self.index_compactions
         )
     }
 }
@@ -302,6 +372,30 @@ mod tests {
         assert!((s.index_ns_per_query - 2_000.0).abs() < 1e-9);
         let text = format!("{s}");
         assert!(text.contains("index_queries=5"), "{text}");
+    }
+
+    #[test]
+    fn lifecycle_counters_and_gauges_export() {
+        let m = Metrics::new();
+        m.on_index_push(8);
+        m.on_index_push(1);
+        m.on_index_delete(3);
+        m.set_index_lifecycle(4, 120, 7, 2);
+        let s = m.snapshot();
+        assert_eq!(s.index_pushes, 9);
+        assert_eq!(s.index_deletes, 3);
+        assert_eq!(
+            (s.index_segments, s.index_live_docs, s.index_tombstones, s.index_compactions),
+            (4, 120, 7, 2)
+        );
+        // gauges overwrite, counters accumulate
+        m.set_index_lifecycle(1, 113, 0, 3);
+        let s = m.snapshot();
+        assert_eq!((s.index_segments, s.index_tombstones), (1, 0));
+        assert_eq!(s.index_pushes, 9);
+        let text = format!("{s}");
+        assert!(text.contains("index_live_docs=113"), "{text}");
+        assert!(text.contains("index_compactions=3"), "{text}");
     }
 
     #[test]

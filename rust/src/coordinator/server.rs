@@ -9,7 +9,7 @@
 use super::backend::BackendSpec;
 use super::batcher::{BatchQueue, QueueError};
 use super::metrics::Metrics;
-use crate::index::{IndexHandle, IndexSpec, SearchHit};
+use crate::index::{IndexHandle, IndexSpec, LifecycleStats, MutableIndex, SearchHit};
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -117,10 +117,14 @@ pub struct Coordinator {
     variants: HashMap<String, Variant>,
     workers: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
-    /// named similarity indexes; searches run on the caller's thread
-    /// (scans are read-only over `Arc`'d handles, so queries never
-    /// queue behind embed traffic)
+    /// named batch-built (immutable) indexes; searches run on the
+    /// caller's thread (scans are read-only over `Arc`'d handles, so
+    /// queries never queue behind embed traffic)
     indexes: Mutex<HashMap<String, Arc<IndexHandle>>>,
+    /// named mutable (continuously ingesting) indexes; the
+    /// [`MutableIndex`] synchronizes internally, so pushes, deletes and
+    /// searches also run on caller threads
+    live: Mutex<HashMap<String, Arc<MutableIndex>>>,
     /// the cluster router when serving in sharded mode
     cluster: Option<crate::cluster::ClusterHandle>,
 }
@@ -208,7 +212,14 @@ impl Coordinator {
             workers.push(handle);
             variants.insert(name, Variant { queue, spec });
         }
-        Ok(Coordinator { variants, workers, metrics, indexes: Mutex::new(HashMap::new()), cluster })
+        Ok(Coordinator {
+            variants,
+            workers,
+            metrics,
+            indexes: Mutex::new(HashMap::new()),
+            live: Mutex::new(HashMap::new()),
+            cluster,
+        })
     }
 
     /// The cluster router, when serving in sharded mode.
@@ -284,7 +295,10 @@ impl Coordinator {
     /// `name`, replacing any previous index of that name. In sharded
     /// mode the corpus is partitioned across the cluster's shard
     /// executors; otherwise the encoding runs in-process, sharded
-    /// across the streaming pool per `spec.workers`.
+    /// across the streaming pool per `spec.workers`. Flat local builds
+    /// land as a [`MutableIndex`], so the index keeps ingesting through
+    /// [`Coordinator::index_push`] / [`Coordinator::index_delete`];
+    /// bucketed builds stay immutable [`IndexHandle`]s.
     pub fn build_index(
         &self,
         name: &str,
@@ -296,21 +310,40 @@ impl Coordinator {
             self.metrics.on_index_build();
             return Ok(rows);
         }
-        let handle = IndexHandle::build(spec, corpus).map_err(EmbedError::Backend)?;
-        let rows = handle.len();
-        self.register_index(name, handle);
+        if spec.bucket_bits.is_some() {
+            let handle = IndexHandle::build(spec, corpus).map_err(EmbedError::Backend)?;
+            let rows = handle.len();
+            self.register_index(name, handle);
+            return Ok(rows);
+        }
+        let index = MutableIndex::build(spec, corpus).map_err(EmbedError::Backend)?;
+        let rows = index.len();
+        self.register_live_index(name, index);
         Ok(rows)
     }
 
-    /// Register an already-built index under `name`.
+    /// Register an already-built immutable index under `name` (removing
+    /// any mutable index of the same name).
     pub fn register_index(&self, name: &str, handle: IndexHandle) {
+        self.live.lock().unwrap().remove(name);
         self.indexes.lock().unwrap().insert(name.to_string(), Arc::new(handle));
         self.metrics.on_index_build();
+        self.refresh_index_gauges();
     }
 
-    /// Registered index names (local and cluster-built).
+    /// Register a mutable index under `name` (removing any immutable
+    /// index of the same name).
+    pub fn register_live_index(&self, name: &str, index: MutableIndex) {
+        self.indexes.lock().unwrap().remove(name);
+        self.live.lock().unwrap().insert(name.to_string(), Arc::new(index));
+        self.metrics.on_index_build();
+        self.refresh_index_gauges();
+    }
+
+    /// Registered index names (mutable, immutable, and cluster-built).
     pub fn index_names(&self) -> Vec<String> {
         let mut v: Vec<String> = self.indexes.lock().unwrap().keys().cloned().collect();
+        v.extend(self.live.lock().unwrap().keys().cloned());
         if let Some(router) = &self.cluster {
             v.extend(router.index_names());
         }
@@ -319,9 +352,120 @@ impl Coordinator {
         v
     }
 
-    /// A registered index handle.
+    /// A registered immutable index handle.
     pub fn index(&self, name: &str) -> Option<Arc<IndexHandle>> {
         self.indexes.lock().unwrap().get(name).cloned()
+    }
+
+    /// A registered mutable index.
+    pub fn live_index(&self, name: &str) -> Option<Arc<MutableIndex>> {
+        self.live.lock().unwrap().get(name).cloned()
+    }
+
+    /// Append rows to the mutable index `name`; returns the assigned
+    /// stable global ids in row order. In sharded mode the rows route
+    /// to the cluster's shard executors under router-assigned global
+    /// ids; locally they append to the registered [`MutableIndex`].
+    /// Pushing to a batch-built bucketed index is a backend error.
+    pub fn index_push(
+        &self,
+        name: &str,
+        rows: &[Vec<f64>],
+    ) -> Result<Vec<u64>, EmbedError> {
+        if let Some(router) = &self.cluster {
+            if router.has_index(name) {
+                let ids = router.index_push(name, rows).map_err(EmbedError::Backend)?;
+                self.metrics.on_index_push(rows.len());
+                return Ok(ids);
+            }
+        }
+        if let Some(index) = self.live_index(name) {
+            let ids = index.push_rows(rows).map_err(EmbedError::Backend)?;
+            self.metrics.on_index_push(rows.len());
+            self.refresh_index_gauges();
+            return Ok(ids);
+        }
+        if self.index(name).is_some() {
+            return Err(EmbedError::Backend(format!(
+                "index '{name}' is batch-built (bucketed) and immutable"
+            )));
+        }
+        Err(EmbedError::UnknownIndex(name.to_string()))
+    }
+
+    /// Tombstone rows of the mutable index `name` by global id; returns
+    /// how many were present and live. Routes to the cluster's shards
+    /// in sharded mode.
+    pub fn index_delete(&self, name: &str, ids: &[u64]) -> Result<usize, EmbedError> {
+        if let Some(router) = &self.cluster {
+            if router.has_index(name) {
+                let removed = router.index_delete(name, ids).map_err(EmbedError::Backend)?;
+                self.metrics.on_index_delete(removed);
+                return Ok(removed);
+            }
+        }
+        if let Some(index) = self.live_index(name) {
+            let removed = index.delete_batch(ids);
+            self.metrics.on_index_delete(removed);
+            self.refresh_index_gauges();
+            return Ok(removed);
+        }
+        if self.index(name).is_some() {
+            return Err(EmbedError::Backend(format!(
+                "index '{name}' is batch-built (bucketed) and immutable"
+            )));
+        }
+        Err(EmbedError::UnknownIndex(name.to_string()))
+    }
+
+    /// Fully compact the mutable index `name`: seal the mutable
+    /// segment, merge every sealed segment, fold all tombstones out.
+    /// Scatters to every holding shard in sharded mode.
+    pub fn index_compact(&self, name: &str) -> Result<(), EmbedError> {
+        if let Some(router) = &self.cluster {
+            if router.has_index(name) {
+                router.index_compact(name).map_err(EmbedError::Backend)?;
+                return Ok(());
+            }
+        }
+        if let Some(index) = self.live_index(name) {
+            index.compact();
+            self.refresh_index_gauges();
+            return Ok(());
+        }
+        if self.index(name).is_some() {
+            return Err(EmbedError::Backend(format!(
+                "index '{name}' is batch-built (bucketed) and immutable"
+            )));
+        }
+        Err(EmbedError::UnknownIndex(name.to_string()))
+    }
+
+    /// Re-export the lifecycle gauges (segments, live docs, tombstones,
+    /// compactions summed over every registered mutable index).
+    fn refresh_index_gauges(&self) {
+        let mut sum = LifecycleStats {
+            sealed_segments: 0,
+            segments: 0,
+            total_docs: 0,
+            live_docs: 0,
+            tombstones: 0,
+            compactions: 0,
+            next_id: 0,
+        };
+        for index in self.live.lock().unwrap().values() {
+            let s = index.stats();
+            sum.segments += s.segments;
+            sum.live_docs += s.live_docs;
+            sum.tombstones += s.tombstones;
+            sum.compactions += s.compactions;
+        }
+        self.metrics.set_index_lifecycle(
+            sum.segments,
+            sum.live_docs,
+            sum.tombstones,
+            sum.compactions,
+        );
     }
 
     /// Serve one index query (f32 wire payload, widened once at the
@@ -379,6 +523,17 @@ impl Coordinator {
                     partial: ans.partial,
                 });
             }
+        }
+        if let Some(index) = self.live_index(name) {
+            let started = Instant::now();
+            let (hits, probed) =
+                index.query_batch_f32(queries, k).map_err(EmbedError::Backend)?;
+            self.metrics.on_index_query(
+                queries.len(),
+                probed,
+                started.elapsed().as_nanos() as u64,
+            );
+            return Ok(IndexAnswer { hits, probed_buckets: probed, partial: false });
         }
         let handle = self.index(name).ok_or_else(|| EmbedError::UnknownIndex(name.to_string()))?;
         let started = Instant::now();
@@ -508,7 +663,9 @@ mod tests {
         let rows = c.build_index("nn", spec, &corpus).unwrap();
         assert_eq!(rows, 60);
         assert_eq!(c.index_names(), vec!["nn".to_string()]);
-        assert!(c.index("nn").is_some());
+        // flat builds register as mutable (continuously ingesting)
+        assert!(c.live_index("nn").is_some());
+        assert!(c.index("nn").is_none());
 
         // query with the first member of three different clusters: the
         // lowest id of a cluster wins every (hamming, id) tie-break, so
@@ -550,5 +707,63 @@ mod tests {
             c.index_query("nn", vec![0.0; 15], 3),
             Err(EmbedError::Backend(_))
         ));
+    }
+
+    #[test]
+    fn index_push_delete_compact_lifecycle_exports_metrics() {
+        use crate::data::synthetic::clustered_rows;
+        use crate::pmodel::StructureKind;
+        use crate::rng::Rng;
+
+        let c = native_coordinator(8, 64);
+        let mut rng = Rng::new(21);
+        let corpus = clustered_rows(20, 16, &mut rng);
+        let spec = crate::index::IndexSpec::new(StructureKind::Circulant, 64, 16)
+            .with_seed(5)
+            .with_workers(1);
+        c.build_index("nn", spec, &corpus[..12]).unwrap();
+
+        // pushes continue the global id space where the build stopped
+        let ids = c.index_push("nn", &corpus[12..]).unwrap();
+        assert_eq!(ids, (12u64..20).collect::<Vec<_>>());
+        // the pushed row is immediately searchable and self-matches
+        let q15: Vec<f32> = corpus[15].iter().map(|&v| v as f32).collect();
+        let hits = c.index_query("nn", q15.clone(), 1).unwrap();
+        assert_eq!((hits[0].id, hits[0].hamming), (15, 0));
+
+        // delete masks it; a re-query must not return id 15
+        assert_eq!(c.index_delete("nn", &[15, 999]).unwrap(), 1);
+        let hits = c.index_query("nn", q15, 20).unwrap();
+        assert!(hits.iter().all(|h| h.id != 15));
+
+        c.index_compact("nn").unwrap();
+        let stats = c.live_index("nn").unwrap().stats();
+        assert_eq!((stats.segments, stats.tombstones, stats.live_docs), (1, 0, 19));
+
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.index_pushes, 8);
+        assert_eq!(snap.index_deletes, 1);
+        assert_eq!(snap.index_segments, 1);
+        assert_eq!(snap.index_live_docs, 19);
+        assert_eq!(snap.index_tombstones, 0);
+        assert!(snap.index_compactions >= 1);
+
+        // unknown-index ops are clean errors
+        assert!(matches!(
+            c.index_push("nope", &corpus[..1]),
+            Err(EmbedError::UnknownIndex(_))
+        ));
+        assert!(matches!(c.index_delete("nope", &[0]), Err(EmbedError::UnknownIndex(_))));
+
+        // bucketed indexes stay immutable
+        let bucketed = crate::index::IndexSpec::new(StructureKind::Circulant, 64, 16)
+            .with_seed(6)
+            .with_buckets(4);
+        c.build_index("bk", bucketed, &corpus[..12]).unwrap();
+        assert!(c.index("bk").is_some());
+        assert!(matches!(c.index_push("bk", &corpus[..1]), Err(EmbedError::Backend(_))));
+        assert!(matches!(c.index_delete("bk", &[0]), Err(EmbedError::Backend(_))));
+        assert!(matches!(c.index_compact("bk"), Err(EmbedError::Backend(_))));
+        c.shutdown();
     }
 }

@@ -14,6 +14,12 @@
 //! ← OK <rows streamed so far>
 //! → INDEX COMMIT <name>
 //! ← OK built <name> rows=<n>
+//! → INDEX PUSH <name> <f64,...;f64,...>   (≤ 256 rows per line)
+//! ← OK <id,id,...>                        (assigned global ids)
+//! → INDEX DELETE <name> <id,id,...>
+//! ← OK deleted <n>
+//! → INDEX COMPACT <name>
+//! ← OK compacted <name>
 //! → INDEXES             ← OK <name,name,...>
 //! → VARIANTS            ← OK <name,name,...>
 //! → METRICS             ← OK <snapshot text>
@@ -24,9 +30,13 @@
 //! `INDEX BUILD` opens a per-connection staging buffer; `ROWS` lines
 //! stream the corpus in bounded chunks (the same seam the cluster
 //! router uses to partition a corpus across shards) and `COMMIT`
-//! builds and registers the index. `BUILD`, `ROWS` and `COMMIT` are
-//! reserved words, not usable as index names in queries. Lines longer
-//! than [`MAX_LINE_BYTES`] get an `ERR` and the connection is closed.
+//! builds and registers the index. Flat commits land in a mutable
+//! segmented index, so `PUSH` keeps appending rows (returning their
+//! stable global ids), `DELETE` tombstones ids out of future answers,
+//! and `COMPACT` folds the tombstones away. `BUILD`, `ROWS`, `COMMIT`,
+//! `PUSH`, `DELETE` and `COMPACT` are reserved words, not usable as
+//! index names in queries. Lines longer than [`MAX_LINE_BYTES`] get an
+//! `ERR` and the connection is closed.
 
 use super::server::Coordinator;
 use crate::index::IndexSpec;
@@ -160,6 +170,9 @@ fn dispatch(line: &str, c: &Coordinator, state: &mut ConnState) -> String {
                 "BUILD" => index_build(tail, state),
                 "ROWS" => index_rows(tail, state),
                 "COMMIT" => index_commit(tail, c, state),
+                "PUSH" => index_push(tail, c),
+                "DELETE" => index_delete(tail, c),
+                "COMPACT" => index_compact(tail, c),
                 _ => index_query(rest, c),
             }
         }
@@ -240,6 +253,61 @@ fn index_commit(args: &str, c: &Coordinator, state: &mut ConnState) -> String {
     };
     match c.build_index(name, build.spec, &build.rows) {
         Ok(rows) => format!("OK built {name} rows={rows}"),
+        Err(e) => format!("ERR {e}"),
+    }
+}
+
+fn index_push(args: &str, c: &Coordinator) -> String {
+    let Some((name, rows_text)) = args.split_once(' ') else {
+        return "ERR usage: INDEX PUSH <name> <f64,...;f64,...>".into();
+    };
+    let chunks: Vec<&str> = rows_text.split(';').collect();
+    if chunks.len() > MAX_BUILD_CHUNK_ROWS {
+        return format!(
+            "ERR too many rows in one line: {} (max {MAX_BUILD_CHUNK_ROWS})",
+            chunks.len()
+        );
+    }
+    let mut rows = Vec::with_capacity(chunks.len());
+    for chunk in chunks {
+        match parse_vector_f64(chunk) {
+            Err(e) => return format!("ERR {e}"),
+            Ok(row) => rows.push(row),
+        }
+    }
+    match c.index_push(name, &rows) {
+        Ok(ids) => {
+            let out: Vec<String> = ids.iter().map(|id| id.to_string()).collect();
+            format!("OK {}", out.join(","))
+        }
+        Err(e) => format!("ERR {e}"),
+    }
+}
+
+fn index_delete(args: &str, c: &Coordinator) -> String {
+    let Some((name, ids_text)) = args.split_once(' ') else {
+        return "ERR usage: INDEX DELETE <name> <id,id,...>".into();
+    };
+    let mut ids = Vec::new();
+    for tok in ids_text.split(',') {
+        match tok.trim().parse::<u64>() {
+            Ok(id) => ids.push(id),
+            Err(_) => return format!("ERR bad id '{}'", tok.trim()),
+        }
+    }
+    match c.index_delete(name, &ids) {
+        Ok(removed) => format!("OK deleted {removed}"),
+        Err(e) => format!("ERR {e}"),
+    }
+}
+
+fn index_compact(args: &str, c: &Coordinator) -> String {
+    let name = args.trim();
+    if name.is_empty() || name.contains(' ') {
+        return "ERR usage: INDEX COMPACT <name>".into();
+    }
+    match c.index_compact(name) {
+        Ok(()) => format!("OK compacted {name}"),
         Err(e) => format!("ERR {e}"),
     }
 }
@@ -424,6 +492,61 @@ mod tests {
         assert_eq!(send("INDEX BUILD bad circulant 32 8"), "OK building bad");
         assert!(send("INDEX ROWS bad 1,2,3").starts_with("ERR corpus row has dim 3"));
         assert!(send("INDEX BUILD x nope 32 8").starts_with("ERR unknown structure"));
+        drop(reader);
+        drop(s);
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_index_push_delete_compact_lifecycle() {
+        let (addr, stop, h) = start_server();
+        let mut s = TcpStream::connect(addr).unwrap();
+        let corpus: Vec<Vec<f64>> = (0..16)
+            .map(|i| (0..8).map(|j| ((i * 5 + j) % 9) as f64 - 4.0).collect())
+            .collect();
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        let mut send = |msg: &str| {
+            s.write_all(msg.as_bytes()).unwrap();
+            s.write_all(b"\n").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            line.trim().to_string()
+        };
+        let row_csv = |r: &Vec<f64>| {
+            r.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+        };
+        // build over the first 10 rows, then push the remaining 6 live
+        assert_eq!(send("INDEX BUILD live circulant 64 8 3"), "OK building live");
+        let chunk: Vec<String> = corpus[..10].iter().map(row_csv).collect();
+        assert_eq!(send(&format!("INDEX ROWS live {}", chunk.join(";"))), "OK 10");
+        assert_eq!(send("INDEX COMMIT live"), "OK built live rows=10");
+        let pushed: Vec<String> = corpus[10..].iter().map(row_csv).collect();
+        assert_eq!(
+            send(&format!("INDEX PUSH live {}", pushed.join(";"))),
+            "OK 10,11,12,13,14,15"
+        );
+        // a pushed row is now searchable and self-matches at hamming 0
+        let reply = send(&format!("INDEX live 3 {}", row_csv(&corpus[13])));
+        assert!(reply.starts_with("OK 13:0:"), "{reply}");
+        // delete it; the next answer must not contain id 13
+        assert_eq!(send("INDEX DELETE live 13,999"), "OK deleted 1");
+        let reply = send(&format!("INDEX live 3 {}", row_csv(&corpus[13])));
+        assert!(reply.starts_with("OK "), "{reply}");
+        assert!(
+            !reply[3..].split(',').any(|hit| hit.split(':').next() == Some("13")),
+            "deleted id still served: {reply}"
+        );
+        assert_eq!(send("INDEX COMPACT live"), "OK compacted live");
+        let m = send("METRICS");
+        assert!(m.contains("index_pushes=6"), "{m}");
+        assert!(m.contains("index_deletes=1"), "{m}");
+        assert!(m.contains("index_tombstones=0"), "{m}");
+        // error paths: unknown index, malformed ids, bad usage
+        assert!(send("INDEX PUSH nope 1,2,3,4,5,6,7,8").starts_with("ERR unknown index"));
+        assert!(send("INDEX DELETE live 1,x").starts_with("ERR bad id"));
+        assert!(send("INDEX COMPACT").starts_with("ERR usage"));
+        assert!(send("INDEX PUSH live").starts_with("ERR usage"));
         drop(reader);
         drop(s);
         stop.store(true, Ordering::Relaxed);

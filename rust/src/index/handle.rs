@@ -226,7 +226,9 @@ impl IndexHandle {
     }
 
     /// Persist to `path`: one JSON header line, then the raw
-    /// little-endian code words.
+    /// little-endian code words. The write is atomic — bytes land in a
+    /// temp file in `path`'s directory and are renamed into place, so a
+    /// crash mid-write never corrupts an existing index file.
     pub fn save(&self, path: &Path) -> Result<(), String> {
         let store = self.store();
         let bucket_bits = match self.spec.bucket_bits {
@@ -254,7 +256,7 @@ impl IndexHandle {
         for w in store.as_words() {
             bytes.extend_from_slice(&w.to_le_bytes());
         }
-        std::fs::write(path, bytes).map_err(|e| format!("write {}: {e}", path.display()))
+        atomic_write_bytes(path, &bytes)
     }
 
     /// Re-open a saved index: parse the header, rebuild the codec from
@@ -273,32 +275,14 @@ impl IndexHandle {
         if header.get("format").and_then(Json::as_str) != Some("strembed-index") {
             return Err("not a strembed index file".into());
         }
-        let field_usize = |k: &str| {
-            header.get(k).and_then(Json::as_usize).ok_or_else(|| format!("header missing '{k}'"))
-        };
-        let structure_name = header
-            .get("structure")
-            .and_then(Json::as_str)
-            .ok_or_else(|| "header missing 'structure'".to_string())?;
-        let structure = StructureKind::parse(structure_name)
-            .ok_or_else(|| format!("unknown structure '{structure_name}'"))?;
-        let seed: u64 = header
-            .get("seed")
-            .and_then(Json::as_str)
-            .ok_or_else(|| "header missing 'seed'".to_string())?
-            .parse()
-            .map_err(|e| format!("bad seed: {e}"))?;
-        let mut spec = IndexSpec::new(structure, field_usize("m")?, field_usize("n")?)
-            .with_seed(seed)
-            .with_probe_radius(field_usize("probe_radius")?);
-        spec.preprocess = header.get("preprocess") != Some(&Json::Bool(false));
-        if let Some(bits) = header.get("bucket_bits").and_then(Json::as_usize) {
-            spec = spec.with_buckets(bits);
-        }
-        let rows = field_usize("rows")?;
+        let (spec, rows) = parse_spec_header(&header)?;
         let body = &bytes[nl + 1..];
-        if body.len() % 8 != 0 {
-            return Err("truncated code words".into());
+        let expect_bytes = rows * super::codec::words_for_bits(spec.m) * 8;
+        if body.len() != expect_bytes {
+            return Err(format!(
+                "truncated index file: {} body bytes for {rows} rows (want {expect_bytes})",
+                body.len()
+            ));
         }
         let words: Vec<u64> = body
             .chunks_exact(8)
@@ -317,6 +301,60 @@ impl IndexHandle {
         };
         Ok(IndexHandle { spec, variant })
     }
+}
+
+/// Atomically replace `path` with `bytes`: write a temp file in the
+/// same directory (same filesystem, so the rename cannot cross
+/// devices), then rename over the destination. A crash mid-write
+/// leaves any existing file untouched; the stray temp file is removed
+/// on error.
+pub(crate) fn atomic_write_bytes(path: &Path, bytes: &[u8]) -> Result<(), String> {
+    let dir = path.parent().filter(|d| !d.as_os_str().is_empty());
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .ok_or_else(|| format!("bad index path {}", path.display()))?;
+    let tmp_name = format!(".{name}.tmp-{}", std::process::id());
+    let tmp = match dir {
+        Some(d) => d.join(&tmp_name),
+        None => std::path::PathBuf::from(&tmp_name),
+    };
+    std::fs::write(&tmp, bytes).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path).map_err(|e| {
+        std::fs::remove_file(&tmp).ok();
+        format!("rename {} -> {}: {e}", tmp.display(), path.display())
+    })
+}
+
+/// Parse the spec fields shared by every index file version out of a
+/// decoded header object; returns the spec plus the declared total row
+/// count. Version-specific fields (`segments`, `tombstones`, …) are the
+/// caller's concern.
+pub(crate) fn parse_spec_header(header: &Json) -> Result<(IndexSpec, usize), String> {
+    let field_usize = |k: &str| {
+        header.get(k).and_then(Json::as_usize).ok_or_else(|| format!("header missing '{k}'"))
+    };
+    let structure_name = header
+        .get("structure")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "header missing 'structure'".to_string())?;
+    let structure = StructureKind::parse(structure_name)
+        .ok_or_else(|| format!("unknown structure '{structure_name}'"))?;
+    // the seed travels as a string (see `IndexHandle::save`)
+    let seed: u64 = header
+        .get("seed")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "header missing 'seed'".to_string())?
+        .parse()
+        .map_err(|e| format!("bad seed: {e}"))?;
+    let mut spec = IndexSpec::new(structure, field_usize("m")?, field_usize("n")?)
+        .with_seed(seed)
+        .with_probe_radius(field_usize("probe_radius")?);
+    spec.preprocess = header.get("preprocess") != Some(&Json::Bool(false));
+    if let Some(bits) = header.get("bucket_bits").and_then(Json::as_usize) {
+        spec = spec.with_buckets(bits);
+    }
+    Ok((spec, field_usize("rows")?))
 }
 
 #[cfg(test)]
@@ -436,6 +474,51 @@ mod tests {
         // so the (hamming, id) tie-break can only pick it)
         let r = loaded.query(&rows[10], 1).unwrap();
         assert_eq!((r.hits[0].id, r.hits[0].hamming), (10, 0));
+    }
+
+    #[test]
+    fn truncated_file_loads_as_clean_error() {
+        let rows = corpus(20, 32, 9);
+        let built = IndexHandle::build(
+            IndexSpec::new(StructureKind::Circulant, 64, 32).with_seed(10),
+            &rows,
+        )
+        .unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("strembed-index-truncated-{}.idx", std::process::id()));
+        built.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // cut mid-word, at a word boundary, and mid-header
+        for cut in [bytes.len() - 5, bytes.len() - 16, 10] {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            let err = IndexHandle::load(&path).unwrap_err();
+            assert!(
+                err.contains("truncated") || err.contains("header"),
+                "cut={cut}: {err}"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn save_replaces_existing_file_atomically() {
+        let rows = corpus(15, 32, 11);
+        let spec = IndexSpec::new(StructureKind::Circulant, 64, 32).with_seed(12);
+        let path = std::env::temp_dir()
+            .join(format!("strembed-index-replace-{}.idx", std::process::id()));
+        IndexHandle::build(spec.clone(), &rows[..10]).unwrap().save(&path).unwrap();
+        IndexHandle::build(spec, &rows).unwrap().save(&path).unwrap();
+        let loaded = IndexHandle::load(&path).unwrap();
+        assert_eq!(loaded.len(), 15);
+        // no stray temp files left behind
+        let dir = path.parent().unwrap();
+        let strays = std::fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains("strembed-index-replace"))
+            .count();
+        assert_eq!(strays, 1);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

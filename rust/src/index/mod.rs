@@ -18,9 +18,13 @@
 //!        │
 //!        ├─ CodeIndex     exact Hamming top-k scan (search /
 //!        │                search_batch; the recall reference)
-//!        └─ BucketIndex   multi-probe prefix buckets: probe every
-//!                         bucket within key-Hamming `r`, rank the
-//!                         candidate union by full-code Hamming
+//!        ├─ BucketIndex   multi-probe prefix buckets: probe every
+//!        │                bucket within key-Hamming `r`, rank the
+//!        │                candidate union by full-code Hamming
+//!        └─ MutableIndex  continuously-ingesting segment lifecycle:
+//!                         push/delete over a mutable segment + sealed
+//!                         segments, tombstones folded out at
+//!                         compaction (see [`segment`])
 //!        ▼
 //!   IndexSpec / IndexHandle    plain-data description + built object:
 //!                              what the coordinator registers by name
@@ -43,6 +47,7 @@ pub mod bucket;
 pub mod codec;
 pub mod handle;
 pub mod recall;
+pub mod segment;
 pub mod store;
 
 pub use bucket::{BucketIndex, MAX_BUCKET_BITS};
@@ -52,4 +57,7 @@ pub use codec::{
 };
 pub use handle::{IndexHandle, IndexSpec, QueryResult};
 pub use recall::{recall_cases, recall_report, recall_table, RecallCase, RecallRow};
+pub use segment::{
+    index_file_version, LifecycleStats, MutableIndex, COMPACT_SIZE_RATIO, DEFAULT_SEAL_ROWS,
+};
 pub use store::{CodeIndex, CodeStore, SearchHit};

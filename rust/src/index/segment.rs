@@ -1,0 +1,912 @@
+//! The mutable, segmented index lifecycle: from batch-built to
+//! continuously ingesting.
+//!
+//! [`MutableIndex`] keeps the flat packed-code layout of
+//! [`super::CodeIndex`] but organizes it as an LSM-shaped lifecycle:
+//!
+//! ```text
+//!   push ──▶ mutable segment ──seal──▶ sealed segments ──compact──▶
+//!            (append-only,            (immutable, searched          (size-ratio
+//!             assigns stable           in parallel, merged           merge folds
+//!             global ids)              by (hamming, id))             tombstones out)
+//! ```
+//!
+//! * `push` appends a row's packed code to the **mutable segment** and
+//!   returns a stable global id — ids are assigned monotonically and
+//!   never reused, so they stay valid across seals, compactions and
+//!   save/load round-trips.
+//! * `seal` freezes the mutable segment into an immutable **sealed
+//!   segment** (automatic once the mutable segment reaches the seal
+//!   threshold). Searches scan every segment — in parallel when the
+//!   corpus is large enough — with each per-segment scan reusing the
+//!   bounded `(hamming, id)` top-k heap of [`super::CodeStore`]; the
+//!   per-segment lists merge by the same `(hamming, id)` ascending
+//!   order, so results are **exactly** what a freshly batch-built
+//!   [`super::CodeIndex`] over the live rows would return, for any
+//!   interleaving of push/delete/seal/compact.
+//! * `delete` writes a **tombstone** that masks the row at query time;
+//!   compaction rebuilds packed [`super::CodeStore`]s from the
+//!   surviving rows *without re-encoding* (codes are copied as packed
+//!   words) and drops the folded tombstones. Automatic compaction is
+//!   size-ratio triggered: after a seal, the newest sealed segments
+//!   merge while each is at least `1/`[`COMPACT_SIZE_RATIO`] the size
+//!   of its older neighbor, giving logarithmically many segments.
+//! * Persistence extends the [`super::IndexHandle`] format (one JSON
+//!   header line + raw little-endian words) with segment granularity
+//!   (version 2: per-segment row counts, ids, and tombstones) and every
+//!   save is atomic — written to a temp file in the same directory and
+//!   renamed, so a crash mid-write never corrupts an existing index.
+//!
+//! Codes are always computed at the f64 oracle precision, exactly like
+//! the batch-built path — the engine's batched kernels are
+//! bit-identical per row, so a pushed row's code equals the code a bulk
+//! build would have produced.
+
+use super::codec::{angular_similarity, BinaryCodec};
+use super::handle::{atomic_write_bytes, parse_spec_header, QueryResult};
+use super::store::{CodeIndex, CodeStore, SearchHit};
+use super::IndexSpec;
+use crate::util::json::Json;
+use std::collections::BTreeSet;
+use std::path::Path;
+use std::sync::RwLock;
+
+/// Rows the mutable segment accumulates before it is sealed
+/// automatically on the next push (manual [`MutableIndex::seal`] may
+/// fire earlier; [`MutableIndex::with_seal_rows`] overrides).
+pub const DEFAULT_SEAL_ROWS: usize = 8192;
+
+/// Size-ratio compaction trigger: after a seal, the two newest sealed
+/// segments merge while `newer_rows * COMPACT_SIZE_RATIO >=
+/// older_rows`, i.e. a segment is left alone only once it is dwarfed by
+/// its older neighbor.
+pub const COMPACT_SIZE_RATIO: usize = 2;
+
+/// Minimum stored rows before a multi-segment search fans out across
+/// scoped threads; below this a sequential scan wins.
+const PARALLEL_SEARCH_MIN_ROWS: usize = 4096;
+
+/// One frozen run of the lifecycle: packed codes plus the global id of
+/// every row. Ids are strictly increasing within a segment, so the
+/// store's local `(hamming, id)` rank order equals global rank order.
+struct Segment {
+    /// global id of each local row, strictly increasing
+    ids: Vec<u64>,
+    /// packed codes, row `i` belonging to `ids[i]`
+    store: CodeStore,
+}
+
+impl Segment {
+    fn empty(bits: usize) -> Segment {
+        Segment { ids: Vec::new(), store: CodeStore::new(bits) }
+    }
+
+    fn rows(&self) -> usize {
+        self.ids.len()
+    }
+
+    fn contains(&self, id: u64) -> bool {
+        self.ids.binary_search(&id).is_ok()
+    }
+
+    /// Bounded top-k over this segment's live rows in global-id terms.
+    /// Reuses the [`CodeStore`] heap: local ids are in global order, so
+    /// the local tie-break is the global tie-break.
+    fn top_k(&self, qcode: &[u64], k: usize, tombstones: &BTreeSet<u64>) -> Vec<(u32, u64)> {
+        let hits = if tombstones.is_empty() {
+            self.store.top_k(qcode, k)
+        } else {
+            self.store.top_k_of(
+                qcode,
+                k,
+                (0..self.rows()).filter(|&i| !tombstones.contains(&self.ids[i])),
+            )
+        };
+        hits.into_iter().map(|h| (h.hamming, self.ids[h.id])).collect()
+    }
+}
+
+/// Everything behind the lifecycle lock: the mutable segment, the
+/// sealed segments (oldest first), the tombstone set, and the id
+/// allocator.
+struct State {
+    sealed: Vec<Segment>,
+    active: Segment,
+    tombstones: BTreeSet<u64>,
+    next_id: u64,
+    compactions: u64,
+}
+
+/// A point-in-time summary of a [`MutableIndex`]'s lifecycle state —
+/// what [`crate::coordinator::Metrics`] exports for serving visibility.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LifecycleStats {
+    /// sealed (immutable) segments
+    pub sealed_segments: usize,
+    /// total segments scanned by a search (sealed + non-empty mutable)
+    pub segments: usize,
+    /// stored codes, tombstoned rows included
+    pub total_docs: usize,
+    /// rows a search can return (stored minus tombstoned)
+    pub live_docs: usize,
+    /// deleted rows not yet folded out by compaction
+    pub tombstones: usize,
+    /// segment merges performed over this index's lifetime
+    pub compactions: u64,
+    /// the next global id `push` would assign
+    pub next_id: u64,
+}
+
+/// A continuously-ingesting binary-code index: the serving-side twin of
+/// the batch-built [`super::CodeIndex`], with `push`/`delete`/`seal`/
+/// `compact`/`save`/`load` forming the segment lifecycle described in
+/// the [module docs](self). All methods take `&self`; mutations go
+/// through an internal `RwLock`, so searches from many threads proceed
+/// concurrently between mutations.
+pub struct MutableIndex {
+    spec: IndexSpec,
+    codec: BinaryCodec,
+    seal_rows: usize,
+    state: RwLock<State>,
+}
+
+impl MutableIndex {
+    /// An empty mutable index for `spec`. Bucketed specs are rejected:
+    /// the lifecycle keeps the flat per-segment scan (multi-probe
+    /// bucketing stays a batch-built [`super::BucketIndex`] concern).
+    pub fn new(spec: IndexSpec) -> Result<MutableIndex, String> {
+        if spec.bucket_bits.is_some() {
+            return Err("mutable indexes are flat: bucket_bits is not supported".into());
+        }
+        let codec = BinaryCodec::new(spec.config())?;
+        let bits = codec.bits();
+        Ok(MutableIndex {
+            spec,
+            codec,
+            seal_rows: DEFAULT_SEAL_ROWS,
+            state: RwLock::new(State {
+                sealed: Vec::new(),
+                active: Segment::empty(bits),
+                tombstones: BTreeSet::new(),
+                next_id: 0,
+                compactions: 0,
+            }),
+        })
+    }
+
+    /// Builder: override the automatic seal threshold (rows the mutable
+    /// segment holds before the next push seals it; 0 disables
+    /// auto-sealing entirely — segments then seal only explicitly).
+    pub fn with_seal_rows(mut self, rows: usize) -> MutableIndex {
+        self.seal_rows = rows;
+        self
+    }
+
+    /// Bulk-build from a corpus: rows are encoded sharded across the
+    /// streaming pool (per `spec.workers`, exactly like
+    /// [`super::IndexHandle::build`]) and land as one sealed segment
+    /// with ids `0..corpus.len()`.
+    pub fn build(spec: IndexSpec, corpus: &[Vec<f64>]) -> Result<MutableIndex, String> {
+        let ids: Vec<u64> = (0..corpus.len() as u64).collect();
+        MutableIndex::build_with_ids(spec, ids, corpus)
+    }
+
+    /// Bulk-build with explicit global ids (the cluster-shard path: the
+    /// router assigns ids round-robin, so a shard holds a strictly
+    /// increasing subsequence of the global id space).
+    pub fn build_with_ids(
+        spec: IndexSpec,
+        ids: Vec<u64>,
+        corpus: &[Vec<f64>],
+    ) -> Result<MutableIndex, String> {
+        if ids.len() != corpus.len() {
+            return Err(format!("{} ids for {} corpus rows", ids.len(), corpus.len()));
+        }
+        if !ids.windows(2).all(|w| w[0] < w[1]) {
+            return Err("global ids must be strictly increasing".into());
+        }
+        for (i, row) in corpus.iter().enumerate() {
+            if row.len() != spec.n {
+                return Err(format!("corpus row {i} has dim {} (want {})", row.len(), spec.n));
+            }
+        }
+        let index = MutableIndex::new(spec)?;
+        if !corpus.is_empty() {
+            let built =
+                CodeIndex::build_parallel(index.codec.clone(), corpus, index.spec.workers);
+            let mut st = index.state.write().expect("lifecycle lock");
+            st.next_id = ids.last().expect("non-empty ids") + 1;
+            st.sealed.push(Segment { ids, store: built.store().clone() });
+        }
+        Ok(index)
+    }
+
+    /// The spec this index serves.
+    pub fn spec(&self) -> &IndexSpec {
+        &self.spec
+    }
+
+    /// Code length in bits.
+    pub fn bits(&self) -> usize {
+        self.codec.bits()
+    }
+
+    /// Rows a search can currently return (stored minus tombstoned).
+    pub fn len(&self) -> usize {
+        self.stats().live_docs
+    }
+
+    /// True when no live rows exist.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Point-in-time lifecycle counters.
+    pub fn stats(&self) -> LifecycleStats {
+        let st = self.state.read().expect("lifecycle lock");
+        stats_locked(&st)
+    }
+
+    /// Append one row; returns its stable global id.
+    pub fn push(&self, row: &[f64]) -> Result<u64, String> {
+        if row.len() != self.spec.n {
+            return Err(format!("row has dim {} (want {})", row.len(), self.spec.n));
+        }
+        let code = self.codec.encode_one(row);
+        let mut st = self.state.write().expect("lifecycle lock");
+        Ok(self.append_locked(&mut st, &code))
+    }
+
+    /// Append a batch of rows (one batched encode pass); returns the
+    /// assigned global ids in row order.
+    pub fn push_rows(&self, rows: &[Vec<f64>]) -> Result<Vec<u64>, String> {
+        for (i, row) in rows.iter().enumerate() {
+            if row.len() != self.spec.n {
+                return Err(format!("row {i} has dim {} (want {})", row.len(), self.spec.n));
+            }
+        }
+        let codes = self.codec.encode_batch(rows);
+        let mut st = self.state.write().expect("lifecycle lock");
+        Ok(codes.iter().map(|code| self.append_locked(&mut st, code)).collect())
+    }
+
+    /// Append rows under externally-assigned global ids (the cluster
+    /// shard path). Ids must be strictly increasing and start at or
+    /// after the index's next id; the allocator advances past them.
+    pub fn push_rows_with_ids(&self, ids: &[u64], rows: &[Vec<f64>]) -> Result<(), String> {
+        if ids.len() != rows.len() {
+            return Err(format!("{} ids for {} rows", ids.len(), rows.len()));
+        }
+        if !ids.windows(2).all(|w| w[0] < w[1]) {
+            return Err("global ids must be strictly increasing".into());
+        }
+        for (i, row) in rows.iter().enumerate() {
+            if row.len() != self.spec.n {
+                return Err(format!("row {i} has dim {} (want {})", row.len(), self.spec.n));
+            }
+        }
+        let codes = self.codec.encode_batch(rows);
+        let mut st = self.state.write().expect("lifecycle lock");
+        if let Some(&first) = ids.first() {
+            if first < st.next_id {
+                return Err(format!(
+                    "id {first} is below the next unassigned id {}",
+                    st.next_id
+                ));
+            }
+        }
+        for (&id, code) in ids.iter().zip(&codes) {
+            st.active.ids.push(id);
+            st.active.store.push(code);
+            st.next_id = id + 1;
+            self.roll_locked(&mut st);
+        }
+        Ok(())
+    }
+
+    /// Tombstone a row. Returns whether `id` was present and live; a
+    /// second delete of the same id (or an id never assigned to this
+    /// index) is a no-op returning false.
+    pub fn delete(&self, id: u64) -> bool {
+        let mut st = self.state.write().expect("lifecycle lock");
+        if st.tombstones.contains(&id) {
+            return false;
+        }
+        let present =
+            st.active.contains(id) || st.sealed.iter().any(|seg| seg.contains(id));
+        if present {
+            st.tombstones.insert(id);
+        }
+        present
+    }
+
+    /// Tombstone many rows; returns how many were present and live.
+    pub fn delete_batch(&self, ids: &[u64]) -> usize {
+        ids.iter().filter(|&&id| self.delete(id)).count()
+    }
+
+    /// Freeze the mutable segment into a sealed one (no-op when the
+    /// mutable segment is empty). Returns whether a seal happened. Does
+    /// **not** trigger compaction — pair with
+    /// [`MutableIndex::maybe_compact`] for the automatic policy.
+    pub fn seal(&self) -> bool {
+        let mut st = self.state.write().expect("lifecycle lock");
+        seal_locked(&mut st, self.codec.bits())
+    }
+
+    /// Apply the size-ratio compaction policy: merge the newest sealed
+    /// segments while each is at least `1/`[`COMPACT_SIZE_RATIO`] the
+    /// rows of its older neighbor, folding tombstones out of every
+    /// merge. Returns the merges performed.
+    pub fn maybe_compact(&self) -> usize {
+        let mut st = self.state.write().expect("lifecycle lock");
+        maybe_compact_locked(&mut st, self.codec.bits())
+    }
+
+    /// Full compaction: seal the mutable segment, then merge every
+    /// sealed segment into one, folding all tombstones out. Returns the
+    /// resulting lifecycle stats.
+    pub fn compact(&self) -> LifecycleStats {
+        let mut st = self.state.write().expect("lifecycle lock");
+        let bits = self.codec.bits();
+        seal_locked(&mut st, bits);
+        if !st.sealed.is_empty() {
+            let parts = std::mem::take(&mut st.sealed);
+            let merged = merge_segments(bits, &parts, &mut st.tombstones);
+            if merged.rows() > 0 {
+                st.sealed.push(merged);
+            }
+            st.compactions += 1;
+        }
+        stats_locked(&st)
+    }
+
+    /// Exact `(hamming, id)` top-k over all live rows: every segment is
+    /// scanned (in parallel once the corpus is large enough) and the
+    /// per-segment bounded top-k lists merge by `(hamming, id)`
+    /// ascending — identical to a batch-built [`super::CodeIndex`] over
+    /// the live rows.
+    pub fn search(&self, query: &[f64], k: usize) -> Result<Vec<SearchHit>, String> {
+        Ok(self.query(query, k)?.hits)
+    }
+
+    /// [`MutableIndex::search`] plus the probed-segment count (the
+    /// lifecycle's analogue of [`super::IndexHandle::query`]'s probed
+    /// buckets).
+    pub fn query(&self, query: &[f64], k: usize) -> Result<QueryResult, String> {
+        if query.len() != self.spec.n {
+            return Err(format!("query has dim {} (want {})", query.len(), self.spec.n));
+        }
+        let code = self.codec.encode_one(query);
+        let st = self.state.read().expect("lifecycle lock");
+        let segments = segments_of(&st);
+        Ok(QueryResult {
+            hits: search_segments(&segments, &st.tombstones, &code, k, self.bits()),
+            probed_buckets: segments.len().max(1),
+        })
+    }
+
+    /// Batch search: one batched encode pass, then per-query segment
+    /// scans. Returns per-query hits plus the total probed-segment
+    /// count, mirroring [`super::IndexHandle::query_batch`].
+    pub fn query_batch(
+        &self,
+        queries: &[Vec<f64>],
+        k: usize,
+    ) -> Result<(Vec<Vec<SearchHit>>, usize), String> {
+        for (i, row) in queries.iter().enumerate() {
+            if row.len() != self.spec.n {
+                return Err(format!("query {i} has dim {} (want {})", row.len(), self.spec.n));
+            }
+        }
+        let codes = self.codec.encode_batch(queries);
+        let st = self.state.read().expect("lifecycle lock");
+        let segments = segments_of(&st);
+        let hits = codes
+            .iter()
+            .map(|code| search_segments(&segments, &st.tombstones, code, k, self.bits()))
+            .collect();
+        Ok((hits, queries.len() * segments.len().max(1)))
+    }
+
+    /// [`MutableIndex::query_batch`] for f32 wire payloads, widened
+    /// once at this boundary (codes are f64-oracle, like everywhere).
+    pub fn query_batch_f32(
+        &self,
+        queries: &[Vec<f32>],
+        k: usize,
+    ) -> Result<(Vec<Vec<SearchHit>>, usize), String> {
+        let wide: Vec<Vec<f64>> =
+            queries.iter().map(|q| q.iter().map(|&v| v as f64).collect()).collect();
+        self.query_batch(&wide, k)
+    }
+
+    /// Persist atomically to `path`: version-2 header (per-segment row
+    /// counts, tombstone count, id allocator) + per-segment raw
+    /// little-endian ids and code words + the tombstone ids. The bytes
+    /// land in a temp file in `path`'s directory first and are renamed
+    /// into place, so a crash mid-write leaves any previous index
+    /// intact.
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        let st = self.state.read().expect("lifecycle lock");
+        let segments = segments_of(&st);
+        let seg_rows: Vec<String> = segments.iter().map(|s| s.rows().to_string()).collect();
+        let total: usize = segments.iter().map(|s| s.rows()).sum();
+        // seed and next_id travel as strings: the offline Json parser
+        // reads numbers as f64, which would round values >= 2^53
+        let header = format!(
+            "{{\"format\": \"strembed-index\", \"version\": 2, \"structure\": \"{}\", \
+             \"m\": {}, \"n\": {}, \"seed\": \"{}\", \"preprocess\": {}, \
+             \"bucket_bits\": null, \"probe_radius\": {}, \"rows\": {}, \
+             \"segments\": [{}], \"tombstones\": {}, \"next_id\": \"{}\"}}\n",
+            self.spec.structure.token(),
+            self.spec.m,
+            self.spec.n,
+            self.spec.seed,
+            self.spec.preprocess,
+            self.spec.probe_radius,
+            total,
+            seg_rows.join(", "),
+            st.tombstones.len(),
+            st.next_id,
+        );
+        let wpc = self.codec.words_per_code();
+        let body_words: usize =
+            segments.iter().map(|s| s.rows() * (1 + wpc)).sum::<usize>() + st.tombstones.len();
+        let mut bytes = header.into_bytes();
+        bytes.reserve(body_words * 8);
+        for seg in &segments {
+            for &id in &seg.ids {
+                bytes.extend_from_slice(&id.to_le_bytes());
+            }
+            for w in seg.store.as_words() {
+                bytes.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+        for &id in &st.tombstones {
+            bytes.extend_from_slice(&id.to_le_bytes());
+        }
+        atomic_write_bytes(path, &bytes)
+    }
+
+    /// Re-open a saved index. Accepts both the segmented version-2
+    /// format and a flat version-1 [`super::IndexHandle`] file (which
+    /// loads as one sealed segment with identity ids and no
+    /// tombstones), so a batch-built index can be adopted into the
+    /// lifecycle. Truncated or malformed files produce a clean error.
+    pub fn load(path: &Path) -> Result<MutableIndex, String> {
+        let bytes = std::fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        let nl = bytes
+            .iter()
+            .position(|&b| b == b'\n')
+            .ok_or_else(|| "missing index header line".to_string())?;
+        let header = Json::parse(
+            std::str::from_utf8(&bytes[..nl]).map_err(|e| format!("bad header: {e}"))?,
+        )
+        .map_err(|e| format!("bad header: {e}"))?;
+        if header.get("format").and_then(Json::as_str) != Some("strembed-index") {
+            return Err("not a strembed index file".into());
+        }
+        let version = header
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| "header missing 'version'".to_string())?;
+        let (spec, rows) = parse_spec_header(&header)?;
+        if spec.bucket_bits.is_some() {
+            return Err(
+                "bucketed index files are immutable: open with IndexHandle::load".into(),
+            );
+        }
+        let body = &bytes[nl + 1..];
+        match version {
+            1 => MutableIndex::load_v1(spec, rows, body),
+            2 => MutableIndex::load_v2(spec, &header, body),
+            other => Err(format!("unsupported index version {other}")),
+        }
+    }
+
+    fn load_v1(spec: IndexSpec, rows: usize, body: &[u8]) -> Result<MutableIndex, String> {
+        let index = MutableIndex::new(spec)?;
+        let wpc = index.codec.words_per_code();
+        if body.len() != rows * wpc * 8 {
+            return Err(format!(
+                "truncated index file: {} body bytes for {rows} rows of {wpc} words",
+                body.len()
+            ));
+        }
+        let words: Vec<u64> = body
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+            .collect();
+        let store = CodeStore::from_raw(index.codec.bits(), rows, words)?;
+        if rows > 0 {
+            let mut st = index.state.write().expect("lifecycle lock");
+            st.sealed.push(Segment { ids: (0..rows as u64).collect(), store });
+            st.next_id = rows as u64;
+        }
+        Ok(index)
+    }
+
+    fn load_v2(spec: IndexSpec, header: &Json, body: &[u8]) -> Result<MutableIndex, String> {
+        let seg_rows: Vec<usize> = header
+            .get("segments")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "header missing 'segments'".to_string())?
+            .iter()
+            .map(|j| j.as_usize().ok_or_else(|| "bad segment row count".to_string()))
+            .collect::<Result<_, _>>()?;
+        let tombstone_count = header
+            .get("tombstones")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| "header missing 'tombstones'".to_string())?;
+        let next_id: u64 = header
+            .get("next_id")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "header missing 'next_id'".to_string())?
+            .parse()
+            .map_err(|e| format!("bad next_id: {e}"))?;
+        let index = MutableIndex::new(spec)?;
+        let wpc = index.codec.words_per_code();
+        let expect_bytes = seg_rows.iter().map(|r| r * (1 + wpc) * 8).sum::<usize>()
+            + tombstone_count * 8;
+        if body.len() != expect_bytes {
+            return Err(format!(
+                "truncated index file: {} body bytes, header declares {expect_bytes}",
+                body.len()
+            ));
+        }
+        let word_at = |i: usize| {
+            u64::from_le_bytes(body[i * 8..(i + 1) * 8].try_into().expect("8-byte chunk"))
+        };
+        let mut at = 0usize;
+        let mut segments = Vec::with_capacity(seg_rows.len());
+        for &rows in &seg_rows {
+            let ids: Vec<u64> = (0..rows).map(|i| word_at(at + i)).collect();
+            at += rows;
+            if !ids.windows(2).all(|w| w[0] < w[1]) {
+                return Err("segment ids are not strictly increasing".into());
+            }
+            let words: Vec<u64> = (0..rows * wpc).map(|i| word_at(at + i)).collect();
+            at += rows * wpc;
+            segments.push(Segment {
+                ids,
+                store: CodeStore::from_raw(index.codec.bits(), rows, words)?,
+            });
+        }
+        let tombstones: BTreeSet<u64> =
+            (0..tombstone_count).map(|i| word_at(at + i)).collect();
+        {
+            let mut st = index.state.write().expect("lifecycle lock");
+            // every segment was written sealed-first, mutable last; the
+            // trailing segment re-opens as the mutable one so lifecycle
+            // structure (and therefore stats) round-trips
+            if let Some(active) = segments.pop() {
+                st.active = active;
+            }
+            st.sealed = segments;
+            st.tombstones = tombstones;
+            st.next_id = next_id;
+        }
+        Ok(index)
+    }
+
+    /// Append one encoded row under the next id, auto-sealing and
+    /// compacting per policy.
+    fn append_locked(&self, st: &mut State, code: &[u64]) -> u64 {
+        let id = st.next_id;
+        st.next_id += 1;
+        st.active.ids.push(id);
+        st.active.store.push(code);
+        self.roll_locked(st);
+        id
+    }
+
+    /// Auto-seal once the mutable segment hits the threshold, then run
+    /// the size-ratio compaction policy.
+    fn roll_locked(&self, st: &mut State) {
+        if self.seal_rows > 0 && st.active.rows() >= self.seal_rows {
+            let bits = self.codec.bits();
+            seal_locked(st, bits);
+            maybe_compact_locked(st, bits);
+        }
+    }
+}
+
+fn stats_locked(st: &State) -> LifecycleStats {
+    let total: usize = st.sealed.iter().map(Segment::rows).sum::<usize>() + st.active.rows();
+    LifecycleStats {
+        sealed_segments: st.sealed.len(),
+        segments: st.sealed.len() + usize::from(st.active.rows() > 0),
+        total_docs: total,
+        live_docs: total - st.tombstones.len(),
+        tombstones: st.tombstones.len(),
+        compactions: st.compactions,
+        next_id: st.next_id,
+    }
+}
+
+fn seal_locked(st: &mut State, bits: usize) -> bool {
+    if st.active.rows() == 0 {
+        return false;
+    }
+    let full = std::mem::replace(&mut st.active, Segment::empty(bits));
+    st.sealed.push(full);
+    true
+}
+
+fn maybe_compact_locked(st: &mut State, bits: usize) -> usize {
+    let mut merges = 0;
+    while st.sealed.len() >= 2 {
+        let n = st.sealed.len();
+        if st.sealed[n - 1].rows() * COMPACT_SIZE_RATIO < st.sealed[n - 2].rows() {
+            break;
+        }
+        let newer = st.sealed.pop().expect("two sealed segments");
+        let older = st.sealed.pop().expect("two sealed segments");
+        let merged = merge_segments(bits, &[older, newer], &mut st.tombstones);
+        if merged.rows() > 0 {
+            st.sealed.push(merged);
+        }
+        st.compactions += 1;
+        merges += 1;
+    }
+    merges
+}
+
+/// Rebuild one packed segment from `parts` (oldest first), copying the
+/// packed words of every surviving row — no re-encoding — and removing
+/// the folded ids from the tombstone set. Ids stay strictly increasing
+/// because parts are merged oldest-first and ids are assigned
+/// monotonically.
+fn merge_segments(bits: usize, parts: &[Segment], tombstones: &mut BTreeSet<u64>) -> Segment {
+    let total: usize = parts.iter().map(Segment::rows).sum();
+    let mut ids = Vec::with_capacity(total);
+    let mut store = CodeStore::with_capacity(bits, total);
+    for part in parts {
+        for (i, &gid) in part.ids.iter().enumerate() {
+            if tombstones.remove(&gid) {
+                continue; // folded out
+            }
+            ids.push(gid);
+            store.push(part.store.code(i));
+        }
+    }
+    Segment { ids, store }
+}
+
+fn segments_of(st: &State) -> Vec<&Segment> {
+    st.sealed
+        .iter()
+        .chain(std::iter::once(&st.active).filter(|s| s.rows() > 0))
+        .collect()
+}
+
+/// Scan every segment (scoped threads once the corpus is big enough and
+/// more than one segment exists) and merge the per-segment bounded
+/// top-k lists by `(hamming, id)` ascending.
+fn search_segments(
+    segments: &[&Segment],
+    tombstones: &BTreeSet<u64>,
+    qcode: &[u64],
+    k: usize,
+    bits: usize,
+) -> Vec<SearchHit> {
+    if k == 0 || segments.is_empty() {
+        return Vec::new();
+    }
+    let total: usize = segments.iter().map(|s| s.rows()).sum();
+    let mut pairs: Vec<(u32, u64)> = if segments.len() > 1 && total >= PARALLEL_SEARCH_MIN_ROWS
+    {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = segments
+                .iter()
+                .map(|seg| scope.spawn(move || seg.top_k(qcode, k, tombstones)))
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("segment scan thread"))
+                .collect()
+        })
+    } else {
+        segments.iter().flat_map(|seg| seg.top_k(qcode, k, tombstones)).collect()
+    };
+    pairs.sort_unstable();
+    pairs.truncate(k);
+    pairs
+        .into_iter()
+        .map(|(hamming, id)| SearchHit {
+            id: id as usize,
+            hamming,
+            similarity: angular_similarity(hamming, bits),
+        })
+        .collect()
+}
+
+/// The `version` field of a saved index file's header — how callers
+/// pick between [`super::IndexHandle::load`] (version 1, flat or
+/// bucketed) and [`MutableIndex::load`] (version 2 segmented, or
+/// adopting a flat version 1).
+pub fn index_file_version(path: &Path) -> Result<usize, String> {
+    let bytes = std::fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    let nl = bytes
+        .iter()
+        .position(|&b| b == b'\n')
+        .ok_or_else(|| "missing index header line".to_string())?;
+    let header = Json::parse(
+        std::str::from_utf8(&bytes[..nl]).map_err(|e| format!("bad header: {e}"))?,
+    )
+    .map_err(|e| format!("bad header: {e}"))?;
+    if header.get("format").and_then(Json::as_str) != Some("strembed-index") {
+        return Err("not a strembed index file".into());
+    }
+    header
+        .get("version")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| "header missing 'version'".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::clustered_rows;
+    use crate::pmodel::StructureKind;
+    use crate::rng::Rng;
+
+    fn spec(m: usize, n: usize) -> IndexSpec {
+        IndexSpec::new(StructureKind::Circulant, m, n).with_seed(11).with_workers(1)
+    }
+
+    fn corpus(rows: usize, n: usize, seed: u64) -> Vec<Vec<f64>> {
+        clustered_rows(rows, n, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn push_assigns_monotonic_ids_and_self_match_ranks_first() {
+        let idx = MutableIndex::new(spec(64, 16)).unwrap();
+        let rows = corpus(30, 16, 1);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(idx.push(row).unwrap(), i as u64);
+        }
+        let hits = idx.search(&rows[0], 3).unwrap();
+        assert_eq!((hits[0].id, hits[0].hamming), (0, 0));
+        assert_eq!(idx.len(), 30);
+    }
+
+    #[test]
+    fn bucketed_specs_rejected() {
+        let err = MutableIndex::new(spec(64, 16).with_buckets(4)).unwrap_err();
+        assert!(err.contains("flat"), "{err}");
+    }
+
+    #[test]
+    fn delete_masks_and_compaction_folds() {
+        let idx = MutableIndex::new(spec(64, 16)).unwrap();
+        let rows = corpus(20, 16, 2);
+        idx.push_rows(&rows).unwrap();
+        assert!(idx.delete(0));
+        assert!(!idx.delete(0), "double delete is a no-op");
+        assert!(!idx.delete(99), "unknown id is a no-op");
+        let hits = idx.search(&rows[0], 20).unwrap();
+        assert!(hits.iter().all(|h| h.id != 0), "tombstoned id must be masked");
+        assert_eq!(idx.stats().tombstones, 1);
+        let after = idx.compact();
+        assert_eq!(after.tombstones, 0, "compaction folds tombstones out");
+        assert_eq!(after.live_docs, 19);
+        assert_eq!(after.total_docs, 19);
+        assert_eq!(after.segments, 1);
+        // deleted ids stay dead after compaction
+        let hits = idx.search(&rows[0], 20).unwrap();
+        assert!(hits.iter().all(|h| h.id != 0));
+    }
+
+    #[test]
+    fn search_matches_batch_built_code_index_across_seal_points() {
+        let rows = corpus(60, 16, 3);
+        let reference = MutableIndex::build(spec(96, 16), &rows).unwrap();
+        for seal_every in [7usize, 23, 60] {
+            let idx = MutableIndex::new(spec(96, 16)).unwrap();
+            for (i, row) in rows.iter().enumerate() {
+                idx.push(row).unwrap();
+                if (i + 1) % seal_every == 0 {
+                    idx.seal();
+                }
+            }
+            for q in rows.iter().step_by(9) {
+                assert_eq!(
+                    idx.search(q, 8).unwrap(),
+                    reference.search(q, 8).unwrap(),
+                    "seal_every={seal_every}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn auto_seal_and_size_ratio_compaction_bound_segments() {
+        let idx = MutableIndex::new(spec(64, 16)).unwrap().with_seal_rows(8);
+        let rows = corpus(100, 16, 4);
+        idx.push_rows(&rows).unwrap();
+        let stats = idx.stats();
+        assert!(stats.compactions > 0, "size-ratio merges must have fired: {stats:?}");
+        // tiered merging keeps segment count logarithmic in pushes
+        assert!(stats.segments <= 6, "{stats:?}");
+        assert_eq!(stats.live_docs, 100);
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_lifecycle() {
+        let idx = MutableIndex::new(spec(64, 16)).unwrap();
+        let rows = corpus(40, 16, 5);
+        idx.push_rows(&rows[..25]).unwrap();
+        idx.seal();
+        idx.push_rows(&rows[25..]).unwrap();
+        assert!(idx.delete(3));
+        assert!(idx.delete(30));
+        let path = std::env::temp_dir()
+            .join(format!("strembed-segment-roundtrip-{}.idx", std::process::id()));
+        idx.save(&path).unwrap();
+        let loaded = MutableIndex::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.stats(), idx.stats());
+        for q in rows.iter().step_by(7) {
+            assert_eq!(loaded.search(q, 6).unwrap(), idx.search(q, 6).unwrap());
+        }
+        // the id allocator survives: new pushes continue, never reuse
+        assert_eq!(loaded.push(&rows[0]).unwrap(), 40);
+    }
+
+    #[test]
+    fn adopts_version_1_files() {
+        let rows = corpus(25, 16, 6);
+        let handle = super::super::IndexHandle::build(spec(64, 16), &rows).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("strembed-segment-adopt-{}.idx", std::process::id()));
+        handle.save(&path).unwrap();
+        assert_eq!(index_file_version(&path).unwrap(), 1);
+        let adopted = MutableIndex::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(adopted.len(), 25);
+        for q in rows.iter().step_by(5) {
+            let a = adopted.search(q, 4).unwrap();
+            let b = handle.query(q, 4).unwrap().hits;
+            assert_eq!(a, b);
+        }
+        // and the lifecycle continues from the adopted rows
+        assert_eq!(adopted.push(&rows[0]).unwrap(), 25);
+    }
+
+    #[test]
+    fn truncated_files_error_cleanly() {
+        let idx = MutableIndex::new(spec(64, 16)).unwrap();
+        idx.push_rows(&corpus(10, 16, 7)).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("strembed-segment-trunc-{}.idx", std::process::id()));
+        idx.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        for cut in [bytes.len() - 3, bytes.len() - 8, bytes.len() / 2] {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            let err = MutableIndex::load(&path).unwrap_err();
+            assert!(
+                err.contains("truncated") || err.contains("header"),
+                "cut={cut}: {err}"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn external_ids_keep_global_order() {
+        let idx = MutableIndex::new(spec(64, 16)).unwrap();
+        let rows = corpus(6, 16, 8);
+        // a shard holding the gid ≡ 1 (mod 3) residue class
+        idx.push_rows_with_ids(&[1, 4, 7, 10, 13, 16], &rows).unwrap();
+        assert_eq!(idx.stats().next_id, 17);
+        let hits = idx.search(&rows[2], 1).unwrap();
+        assert_eq!((hits[0].id, hits[0].hamming), (7, 0));
+        assert!(idx.delete(7));
+        assert!(!idx.delete(8), "ids outside the residue class are absent");
+        // stale or out-of-order ids are rejected
+        assert!(idx.push_rows_with_ids(&[16], &rows[..1]).is_err());
+        assert!(idx.push_rows_with_ids(&[20, 19], &rows[..2]).is_err());
+    }
+}

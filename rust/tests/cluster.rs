@@ -135,6 +135,107 @@ fn topk_merge_matches_single_node_across_shard_counts() {
     }
 }
 
+/// Single-node reference for the mutable lifecycle: the same build →
+/// push → delete sequence applied to one [`strembed::index::MutableIndex`].
+fn solo_lifecycle(
+    spec: IndexSpec,
+    built: &[Vec<f64>],
+    pushed: &[Vec<f64>],
+    deletes: &[u64],
+) -> strembed::index::MutableIndex {
+    let idx = strembed::index::MutableIndex::build(spec, built).expect("solo build");
+    idx.push_rows(pushed).expect("solo push");
+    idx.delete_batch(deletes);
+    idx
+}
+
+#[test]
+fn mutable_shard_lifecycle_matches_single_node() {
+    let mut rng = Rng::new(53);
+    let built = clustered_rows(40, N, &mut rng);
+    let pushed = clustered_rows(21, N, &mut rng);
+    let deletes: Vec<u64> = vec![2, 13, 45, 45, 57, 999];
+    let spec = IndexSpec::new(StructureKind::Circulant, 64, N).with_seed(7).with_workers(2);
+    let solo = solo_lifecycle(spec.clone(), &built, &pushed, &deletes);
+    // queries include a built row, a pushed row and a deleted row so
+    // exact-duplicate ties and tombstone masking are both on the line
+    let mut queries =
+        vec![built[11].clone(), pushed[4].clone(), built[13].clone()];
+    queries.extend(clustered_rows(3, N, &mut rng));
+
+    for shards in [1usize, 2, 4] {
+        let (router, _handles) = local_cluster(shards, Precision::F64);
+        router.build_index("tnn", spec.clone(), &built).expect("cluster build");
+        // pushes route by the same gid % shards round-robin the build
+        // used, so ids keep ascending per shard
+        let ids = router.index_push("tnn", &pushed).expect("cluster push");
+        assert_eq!(ids, (40..61u64).collect::<Vec<_>>(), "{shards} shards");
+        assert_eq!(router.index_rows("tnn"), Some(61));
+        let removed = router.index_delete("tnn", &deletes).expect("cluster delete");
+        assert_eq!(removed, 4, "45 deleted twice and 999 never assigned ({shards} shards)");
+        for k in [1usize, 5, 19] {
+            let (want, _) = solo.query_batch(&queries, k).expect("solo query");
+            let ans = router.index_query_batch("tnn", &queries, k).expect("cluster query");
+            assert!(!ans.partial);
+            for (got, want) in ans.hits.iter().zip(&want) {
+                assert_eq!(id_hamming(got), id_hamming(want), "k={k} at {shards} shards");
+            }
+            // tombstoned ids never surface
+            for hits in &ans.hits {
+                assert!(hits.iter().all(|h| ![2usize, 13, 45, 57].contains(&h.id)));
+            }
+        }
+        // shard-local compaction folds tombstones without changing answers
+        router.index_compact("tnn").expect("cluster compact");
+        let (want, _) = solo.query_batch(&queries, 9).expect("solo query");
+        let ans = router.index_query_batch("tnn", &queries, 9).expect("compacted query");
+        assert!(!ans.partial);
+        for (got, want) in ans.hits.iter().zip(&want) {
+            assert_eq!(id_hamming(got), id_hamming(want), "compaction changed the answer");
+        }
+    }
+}
+
+#[test]
+fn streamed_tcp_shards_ingest_pushes_and_deletes() {
+    let (addr_a, stop_a, join_a) = spawn_tcp_shard("tcp-live-a");
+    let (addr_b, stop_b, join_b) = spawn_tcp_shard("tcp-live-b");
+    let transports: Vec<Box<dyn ShardTransport>> = vec![
+        Box::new(TcpTransport::new(addr_a, tcp_config())),
+        Box::new(TcpTransport::new(addr_b, tcp_config())),
+    ];
+    let router = Router::handle(transports).expect("router");
+
+    let mut rng = Rng::new(59);
+    let built = clustered_rows(26, N, &mut rng);
+    let pushed = clustered_rows(9, N, &mut rng);
+    let deletes: Vec<u64> = vec![5, 28, 30];
+    let spec = IndexSpec::new(StructureKind::Circulant, 64, N).with_seed(7).with_workers(2);
+    let solo = solo_lifecycle(spec.clone(), &built, &pushed, &deletes);
+
+    // the same op sequence over the frame protocol: streamed BUILD,
+    // then IndexPush / IndexDelete / IndexCompact frames
+    router.build_index("tnn", spec, &built).expect("tcp build");
+    let ids = router.index_push("tnn", &pushed).expect("tcp push");
+    assert_eq!(ids, (26..35u64).collect::<Vec<_>>());
+    assert_eq!(router.index_delete("tnn", &deletes).expect("tcp delete"), 3);
+    router.index_compact("tnn").expect("tcp compact");
+
+    let queries = vec![pushed[2].clone(), built[5].clone()];
+    let (want, _) = solo.query_batch(&queries, 7).expect("solo query");
+    let ans = router.index_query_batch("tnn", &queries, 7).expect("tcp query");
+    assert!(!ans.partial);
+    for (got, want) in ans.hits.iter().zip(&want) {
+        assert_eq!(id_hamming(got), id_hamming(want), "TCP lifecycle diverged");
+    }
+
+    drop(router);
+    for (stop, join) in [(stop_a, join_a), (stop_b, join_b)] {
+        stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        join.join().expect("shard join");
+    }
+}
+
 #[test]
 fn shard_death_fails_embed_over_and_marks_queries_partial() {
     let mut rng = Rng::new(23);

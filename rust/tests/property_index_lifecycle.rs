@@ -1,0 +1,277 @@
+//! Property suite for the mutable segmented index lifecycle: random
+//! interleavings of push/delete/search/seal/compact/save/load are
+//! checked against a naive Vec-of-codes oracle — every search must
+//! return exactly the oracle's `(hamming, id)` top-k with tombstoned
+//! ids absent, no matter where the seal points fall, when compaction
+//! runs, or whether the index went through a save/load round-trip in
+//! between. A final acceptance sweep pins the ISSUE contract: after
+//! any interleaving the answer equals a freshly batch-built
+//! [`IndexHandle`] over the live rows, across segment counts {1,2,5}
+//! and worker counts {1,4}.
+
+use std::collections::BTreeMap;
+
+use strembed::index::{
+    hamming, BinaryCodec, IndexHandle, IndexSpec, MutableIndex, SearchHit,
+};
+use strembed::pmodel::StructureKind;
+use strembed::rng::Rng;
+
+const N: usize = 16;
+const M: usize = 64;
+
+fn spec() -> IndexSpec {
+    IndexSpec::new(StructureKind::Circulant, M, N).with_seed(7).with_workers(2)
+}
+
+/// The oracle: live rows as `global id -> packed code`, encoded at
+/// push time through a codec built from the same spec (the codec is
+/// deterministic in the spec, so its codes are bit-identical to the
+/// ones inside the [`MutableIndex`] under test).
+struct Oracle {
+    codec: BinaryCodec,
+    live: BTreeMap<u64, Vec<u64>>,
+    rows: BTreeMap<u64, Vec<f64>>,
+}
+
+impl Oracle {
+    fn new() -> Oracle {
+        Oracle {
+            codec: BinaryCodec::new(spec().config()).expect("oracle codec"),
+            live: BTreeMap::new(),
+            rows: BTreeMap::new(),
+        }
+    }
+
+    fn push(&mut self, id: u64, row: &[f64]) {
+        self.live.insert(id, self.codec.encode_one(row));
+        self.rows.insert(id, row.to_vec());
+    }
+
+    /// Mirror of [`MutableIndex::delete`]: true iff the id was live.
+    fn delete(&mut self, id: u64) -> bool {
+        self.rows.remove(&id);
+        self.live.remove(&id).is_some()
+    }
+
+    /// Exact `(hamming, id)` ascending top-k over the live rows — the
+    /// naive scan every segment/compaction/persistence arrangement of
+    /// the real index must reproduce.
+    fn top_k(&self, query: &[f64], k: usize) -> Vec<(u32, u64)> {
+        let qcode = self.codec.encode_one(query);
+        let mut all: Vec<(u32, u64)> =
+            self.live.iter().map(|(&id, code)| (hamming(code, &qcode), id)).collect();
+        all.sort_unstable();
+        all.truncate(k);
+        all
+    }
+
+    /// Live rows in ascending-id order (the order a compacted index
+    /// stores them in).
+    fn live_rows(&self) -> (Vec<u64>, Vec<Vec<f64>>) {
+        let ids = self.rows.keys().copied().collect();
+        let rows = self.rows.values().cloned().collect();
+        (ids, rows)
+    }
+}
+
+fn as_pairs(hits: &[SearchHit]) -> Vec<(u32, u64)> {
+    hits.iter().map(|h| (h.hamming, h.id as u64)).collect()
+}
+
+fn fresh_row(rng: &mut Rng) -> Vec<f64> {
+    rng.gaussian_vec(N)
+}
+
+/// One random op applied to both the index and the oracle, with the
+/// oracle consulted after every search. Returns the index (save/load
+/// replaces it wholesale).
+fn check_search(idx: &MutableIndex, oracle: &Oracle, query: &[f64], k: usize, ctx: &str) {
+    let got = as_pairs(&idx.search(query, k).expect("search"));
+    let want = oracle.top_k(query, k);
+    assert_eq!(got, want, "search diverged from oracle ({ctx})");
+}
+
+#[test]
+fn random_interleavings_match_the_oracle() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(1000 + seed);
+        // small seal threshold so interleavings actually cross segment
+        // boundaries instead of living in one mutable segment
+        let mut idx = MutableIndex::new(spec()).expect("index").with_seal_rows(5);
+        let mut oracle = Oracle::new();
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!(
+            "strembed-lifecycle-prop-{}-{seed}.idx",
+            std::process::id()
+        ));
+        for step in 0..140 {
+            let ctx = format!("seed={seed} step={step}");
+            match rng.below(100) {
+                // push: 40%
+                0..=39 => {
+                    let row = fresh_row(&mut rng);
+                    let id = idx.push(&row).expect("push");
+                    assert_eq!(id, idx.stats().next_id - 1, "{ctx}");
+                    oracle.push(id, &row);
+                }
+                // delete a (possibly already dead) id: 15%
+                40..=54 => {
+                    let next = idx.stats().next_id;
+                    if next > 0 {
+                        // sometimes aim past the end to hit the no-op path
+                        let id = rng.below(next as usize + 2) as u64;
+                        assert_eq!(idx.delete(id), oracle.delete(id), "{ctx} id={id}");
+                    }
+                }
+                // search with a fresh query and with a live row: 25%
+                55..=79 => {
+                    let k = 1 + rng.below(12);
+                    check_search(&idx, &oracle, &fresh_row(&mut rng), k, &ctx);
+                    let pick = rng.below(oracle.rows.len().max(1));
+                    if let Some(row) = oracle.rows.values().nth(pick) {
+                        // a live row is its own nearest neighbor; exact
+                        // duplicates exercise the (hamming, id) tie-break
+                        check_search(&idx, &oracle, row, k, &ctx);
+                    }
+                }
+                // explicit seal: 8%
+                80..=87 => {
+                    idx.seal();
+                }
+                // compaction (size-ratio or full): 7%
+                88..=94 => {
+                    if rng.below(2) == 0 {
+                        idx.maybe_compact();
+                    } else {
+                        let stats = idx.compact();
+                        assert_eq!(stats.tombstones, 0, "full compaction folds all tombstones {ctx}");
+                        assert!(stats.segments <= 1, "{ctx}");
+                    }
+                }
+                // save/load round-trip: 5%
+                _ => {
+                    idx.save(&path).expect("save");
+                    idx = MutableIndex::load(&path).expect("load").with_seal_rows(5);
+                }
+            }
+            let stats = idx.stats();
+            assert_eq!(stats.live_docs, oracle.live.len(), "live count {ctx}");
+            assert_eq!(
+                stats.total_docs - stats.tombstones,
+                oracle.live.len(),
+                "tombstone accounting {ctx}"
+            );
+        }
+        // end state: oracle agreement with k beyond the corpus size
+        check_search(&idx, &oracle, &fresh_row(&mut rng), oracle.live.len() + 3, "final");
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn answers_are_invariant_under_seal_compaction_and_persistence() {
+    let mut rng = Rng::new(77);
+    let rows: Vec<Vec<f64>> = (0..60).map(|_| fresh_row(&mut rng)).collect();
+    let deletes: Vec<u64> = vec![3, 17, 17, 29, 44, 59];
+    let queries: Vec<Vec<f64>> = (0..5)
+        .map(|i| if i < 2 { rows[i * 13].clone() } else { fresh_row(&mut rng) })
+        .collect();
+
+    // reference arrangement: everything in one mutable segment
+    let reference = MutableIndex::new(spec()).expect("index").with_seal_rows(0);
+    reference.push_rows(&rows).expect("push");
+    reference.delete_batch(&deletes);
+    let want: Vec<Vec<(u32, u64)>> =
+        queries.iter().map(|q| as_pairs(&reference.search(q, 9).expect("search"))).collect();
+
+    // every other arrangement of the same ops must answer identically
+    for seal_every in [1usize, 7, 23] {
+        let idx = MutableIndex::new(spec()).expect("index").with_seal_rows(seal_every);
+        for chunk in rows.chunks(11) {
+            idx.push_rows(chunk).expect("push");
+            idx.maybe_compact();
+        }
+        idx.delete_batch(&deletes);
+        for (q, want) in queries.iter().zip(&want) {
+            let got = as_pairs(&idx.search(q, 9).expect("search"));
+            assert_eq!(&got, want, "seal_every={seal_every} diverged pre-compaction");
+        }
+        let stats = idx.compact();
+        assert_eq!(stats.segments, 1);
+        assert_eq!(stats.tombstones, 0);
+        assert_eq!(stats.live_docs, 60 - 5, "double-delete of 17 counts once");
+        let path = std::env::temp_dir().join(format!(
+            "strembed-lifecycle-inv-{}-{seal_every}.idx",
+            std::process::id()
+        ));
+        idx.save(&path).expect("save");
+        let reloaded = MutableIndex::load(&path).expect("load");
+        std::fs::remove_file(&path).ok();
+        for (q, want) in queries.iter().zip(&want) {
+            let got = as_pairs(&reloaded.search(q, 9).expect("search"));
+            assert_eq!(&got, want, "seal_every={seal_every} diverged after compact+reload");
+        }
+        // ids survive intact: deletes of already-dead ids still no-op
+        assert!(!reloaded.delete(17), "id 17 was already folded out");
+        assert_eq!(reloaded.stats().next_id, 60);
+    }
+}
+
+/// The ISSUE acceptance contract: after any interleaving, a search
+/// equals the `(hamming, id)` top-k of a freshly batch-built
+/// [`IndexHandle`] over exactly the live rows — swept across segment
+/// counts {1, 2, 5} and worker counts {1, 4}.
+#[test]
+fn interleaved_index_equals_fresh_batch_build_across_segments_and_workers() {
+    let mut rng = Rng::new(2016);
+    let rows: Vec<Vec<f64>> = (0..75).map(|_| fresh_row(&mut rng)).collect();
+    let queries: Vec<Vec<f64>> = vec![
+        rows[0].clone(),
+        rows[31].clone(),
+        fresh_row(&mut rng),
+        fresh_row(&mut rng),
+    ];
+    for segments in [1usize, 2, 5] {
+        for workers in [1usize, 4] {
+            let ispec = spec().with_workers(workers);
+            let idx = MutableIndex::new(ispec.clone()).expect("index").with_seal_rows(0);
+            let mut oracle = Oracle::new();
+            // split the corpus into `segments` runs with an explicit
+            // seal between runs, deleting a few ids mid-stream
+            let per = rows.len().div_ceil(segments);
+            for (i, chunk) in rows.chunks(per).enumerate() {
+                let ids = idx.push_rows(chunk).expect("push");
+                for (id, row) in ids.iter().zip(chunk) {
+                    oracle.push(*id, row);
+                }
+                if i + 1 < segments {
+                    assert!(idx.seal(), "chunks are non-empty");
+                }
+                let doomed = (i * 7 + 3) as u64;
+                assert_eq!(idx.delete(doomed), oracle.delete(doomed));
+            }
+            assert_eq!(idx.stats().segments, segments, "workers={workers}");
+            // the reference: a batch-built immutable index over exactly
+            // the live rows (local ids remapped through the live list)
+            let (live_ids, live_rows) = oracle.live_rows();
+            let reference = IndexHandle::build(ispec, &live_rows).expect("reference");
+            for (qi, q) in queries.iter().enumerate() {
+                for k in [1usize, 6, 80] {
+                    let got = as_pairs(&idx.search(q, k).expect("search"));
+                    let want: Vec<(u32, u64)> = reference
+                        .query(q, k)
+                        .expect("reference query")
+                        .hits
+                        .iter()
+                        .map(|h| (h.hamming, live_ids[h.id]))
+                        .collect();
+                    assert_eq!(
+                        got, want,
+                        "segments={segments} workers={workers} query={qi} k={k}"
+                    );
+                }
+            }
+        }
+    }
+}

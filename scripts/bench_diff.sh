@@ -12,6 +12,11 @@
 #   index[]:      (family, m)         -> encode_ns_per_row (present on
 #                                        the family's first corpus row)
 #                 (family, m, corpus) -> search_ns_per_query
+#   index_lifecycle[]:
+#                 (m, corpus)         -> push_ns_per_row,
+#                                        search_1seg_ns_per_query,
+#                                        search_8seg_ns_per_query,
+#                                        compact_ns_per_row
 #   cluster[]:    (kind=embed, batch)   -> router_ns_per_row,
 #                                          inproc_ns_per_row
 #                 (kind=search, shards,
@@ -65,6 +70,12 @@ def tracked(report):
         if "encode_ns_per_row" in r:
             out[f"{key}/encode"] = float(r["encode_ns_per_row"])
         out[f"{key}/corpus{r['corpus']}/search"] = float(r["search_ns_per_query"])
+    for r in report.get("index_lifecycle", []):
+        key = f"lifecycle/m{r['m']}/corpus{r['corpus']}"
+        out[f"{key}/push"] = float(r["push_ns_per_row"])
+        out[f"{key}/search_1seg"] = float(r["search_1seg_ns_per_query"])
+        out[f"{key}/search_8seg"] = float(r["search_8seg_ns_per_query"])
+        out[f"{key}/compact"] = float(r["compact_ns_per_row"])
     for r in report.get("cluster", []):
         if r.get("kind") == "embed":
             key = f"cluster/shards{r['shards']}/batch{r['batch']}"

@@ -17,6 +17,13 @@ cargo test -q
 echo "== cluster: cargo test -q --test cluster"
 cargo test -q --test cluster
 
+# The mutable segmented index lifecycle is verified against a naive
+# Vec-of-codes oracle (random push/delete/search/seal/compact/save/load
+# interleavings must answer exactly like a fresh batch build over the
+# live rows); gate it explicitly alongside the cluster suite.
+echo "== lifecycle: cargo test -q --test property_index_lifecycle"
+cargo test -q --test property_index_lifecycle
+
 # Benches are plain binaries (harness = false) that tier-1 never
 # compiles; build them so bench code can't silently rot.
 echo "== cargo bench --no-run (bench code must keep building)"
