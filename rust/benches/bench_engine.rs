@@ -110,6 +110,28 @@ struct ClusterSearchStat {
     merged_ns: f64,
 }
 
+/// One fault-layer hedging row of the machine-readable report: merged
+/// top-k latency percentiles on a replicated cluster whose shard 0 is
+/// wrapped in a [`strembed::cluster::FaultyTransport`] that delays
+/// every call, with and without hedged backup probes.
+struct ClusterFaultStat {
+    shards: usize,
+    replicas: usize,
+    unhedged_p50_ns: f64,
+    unhedged_p99_ns: f64,
+    hedged_p50_ns: f64,
+    hedged_p99_ns: f64,
+}
+
+/// One replication write-amplification row: `index_push` ns/row at a
+/// replica count (r=1 is the no-amplification baseline; r=2 pays the
+/// double fan-out).
+struct ClusterWriteStat {
+    shards: usize,
+    replicas: usize,
+    push_ns_per_row: f64,
+}
+
 /// Where the machine-readable report lands: the *workspace* root,
 /// regardless of invocation CWD (cargo runs bench binaries from the
 /// package root `rust/`, so a bare relative path would dodge the
@@ -131,6 +153,8 @@ fn write_bench_json(
     lifecycle: &[LifecycleStat],
     cluster_embed: &[ClusterEmbedStat],
     cluster_search: &[ClusterSearchStat],
+    cluster_faults: &[ClusterFaultStat],
+    cluster_writes: &[ClusterWriteStat],
 ) {
     let mut s = String::new();
     s.push_str("{\n");
@@ -211,6 +235,30 @@ fn write_bench_json(
             "    {{\"kind\": \"search\", \"shards\": {}, \"corpus\": {}, \
              \"merged_search_ns_per_query\": {:.1}}}{sep}\n",
             r.shards, r.corpus, r.merged_ns
+        ));
+    }
+    s.push_str("  ],\n  \"cluster_faults\": [\n");
+    for (i, r) in cluster_faults.iter().enumerate() {
+        let sep =
+            if i + 1 == cluster_faults.len() && cluster_writes.is_empty() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"kind\": \"hedge\", \"shards\": {}, \"replicas\": {}, \
+             \"unhedged_p50_ns\": {:.1}, \"unhedged_p99_ns\": {:.1}, \
+             \"hedged_p50_ns\": {:.1}, \"hedged_p99_ns\": {:.1}}}{sep}\n",
+            r.shards,
+            r.replicas,
+            r.unhedged_p50_ns,
+            r.unhedged_p99_ns,
+            r.hedged_p50_ns,
+            r.hedged_p99_ns
+        ));
+    }
+    for (i, r) in cluster_writes.iter().enumerate() {
+        let sep = if i + 1 == cluster_writes.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"kind\": \"write_amp\", \"shards\": {}, \"replicas\": {}, \
+             \"push_ns_per_row\": {:.1}}}{sep}\n",
+            r.shards, r.replicas, r.push_ns_per_row
         ));
     }
     s.push_str("  ]\n}\n");
@@ -706,6 +754,116 @@ fn main() {
         );
     }
 
+    // fault layer: hedged vs unhedged tail latency when one replica is
+    // deterministically slow, and the write amplification a second
+    // replica costs on the push path. Shard 0 is wrapped in a seeded
+    // FaultyTransport that delays every call by 0-2ms; with replicas=2
+    // every partition it holds also lives on a healthy neighbour, so a
+    // hedged router escapes the slow shard after the hedging delay
+    // while an unhedged one eats the full delay on every query.
+    use strembed::cluster::{ClusterHandle, FaultPlan, FaultyTransport, RouterConfig};
+    let faults_corpus = 4_000usize;
+    let fcorpus = &corpus[..faults_corpus];
+    let fq = vec![corpus[faults_corpus / 2].clone()];
+    let slow_plan = FaultPlan {
+        seed: 5,
+        delay_prob: 1.0,
+        max_delay: std::time::Duration::from_millis(2),
+        ..FaultPlan::default()
+    };
+    let mk_fault_router = |hedge: Option<std::time::Duration>, tag: &str| -> ClusterHandle {
+        let transports: Vec<Box<dyn ShardTransport>> = (0..cluster_shards)
+            .map(|i| {
+                let engine =
+                    ShardEngine::new(&format!("{tag}{i}"), mk_specs()).expect("fault shard");
+                let inner: Arc<dyn ShardTransport> =
+                    Arc::new(LocalTransport::new(Arc::new(engine)));
+                if i == 0 {
+                    Box::new(FaultyTransport::new(inner, slow_plan.clone(), 0))
+                        as Box<dyn ShardTransport>
+                } else {
+                    Box::new(inner) as Box<dyn ShardTransport>
+                }
+            })
+            .collect();
+        let config = RouterConfig { replicas: 2, hedge_after: hedge, ..RouterConfig::default() };
+        let router = Router::handle_with_config(transports, config).expect("fault router");
+        let spec = IndexSpec::new(StructureKind::Circulant, 256, 64).with_seed(3);
+        router.build_index("bench", spec, fcorpus).expect("replicated build");
+        router
+    };
+    fn percentile(sorted_ns: &[f64], pct: f64) -> f64 {
+        let idx = ((sorted_ns.len() as f64 - 1.0) * pct / 100.0).round() as usize;
+        sorted_ns[idx]
+    }
+    let measure_tail = |router: &ClusterHandle, label: &str| -> (f64, f64) {
+        router.index_query_batch("bench", &fq, 10).expect("warmup fault query");
+        let mut lat: Vec<f64> = (0..200)
+            .map(|_| {
+                let t0 = std::time::Instant::now();
+                let ans = router
+                    .index_query_batch("bench", std::hint::black_box(&fq), 10)
+                    .expect("fault query");
+                std::hint::black_box(ans);
+                t0.elapsed().as_nanos() as f64
+            })
+            .collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+        let (p50, p99) = (percentile(&lat, 50.0), percentile(&lat, 99.0));
+        println!("{label}: p50 {p50:.0} ns/query, p99 {p99:.0} ns/query");
+        (p50, p99)
+    };
+    let unhedged = mk_fault_router(None, "fu");
+    let (u50, u99) = measure_tail(&unhedged, "cluster slow-shard unhedged");
+    drop(unhedged);
+    let hedged = mk_fault_router(Some(std::time::Duration::from_micros(300)), "fh");
+    let (h50, h99) = measure_tail(&hedged, "cluster slow-shard hedged at 300us");
+    drop(hedged);
+    let cluster_fault_stats = vec![ClusterFaultStat {
+        shards: cluster_shards,
+        replicas: 2,
+        unhedged_p50_ns: u50,
+        unhedged_p99_ns: u99,
+        hedged_p50_ns: h50,
+        hedged_p99_ns: h99,
+    }];
+    println!(
+        "cluster hedging shards={cluster_shards} r=2: p50 {u50:.0} → {h50:.0} ns/query, \
+         p99 {u99:.0} → {h99:.0} ns/query"
+    );
+    let mut cluster_write_stats: Vec<ClusterWriteStat> = Vec::new();
+    let push_rows: Vec<Vec<f64>> = corpus[..64].to_vec();
+    for replicas in [1usize, 2] {
+        let transports: Vec<Box<dyn ShardTransport>> = (0..cluster_shards)
+            .map(|i| {
+                let engine = ShardEngine::new(&format!("w{replicas}-{i}"), mk_specs())
+                    .expect("write shard");
+                Box::new(LocalTransport::new(Arc::new(engine))) as Box<dyn ShardTransport>
+            })
+            .collect();
+        let config = RouterConfig { replicas, ..RouterConfig::default() };
+        let router = Router::handle_with_config(transports, config).expect("write router");
+        let spec = IndexSpec::new(StructureKind::Circulant, 256, 64).with_seed(3);
+        router.build_index("bench", spec, &corpus[..2_000]).expect("write build");
+        router.index_push("bench", &push_rows).expect("warmup push");
+        let pushed = bench(&format!("cluster push r={replicas} x{}", push_rows.len()), || {
+            let ids =
+                router.index_push("bench", std::hint::black_box(&push_rows)).expect("push");
+            std::hint::black_box(ids);
+        });
+        cluster_write_stats.push(ClusterWriteStat {
+            shards: cluster_shards,
+            replicas,
+            push_ns_per_row: pushed.ns_per_op / push_rows.len() as f64,
+        });
+    }
+    for s in &cluster_write_stats {
+        println!(
+            "cluster push shards={} r={}: {:.0} ns/row",
+            s.shards, s.replicas, s.push_ns_per_row
+        );
+    }
+
     write_bench_json(
         &bench_json_path(),
         n,
@@ -717,6 +875,8 @@ fn main() {
         &lifecycle_stats,
         &cluster_embed,
         &cluster_search,
+        &cluster_fault_stats,
+        &cluster_write_stats,
     );
 
     // streaming pool scaling on the acceptance config

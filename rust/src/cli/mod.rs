@@ -26,8 +26,8 @@ mod args;
 pub use args::Args;
 
 use crate::cluster::{
-    spawn_health_monitor, ClusterHandle, LocalTransport, Router, ShardEngine, ShardTransport,
-    TcpTransport, TcpTransportConfig,
+    spawn_health_monitor, ClusterHandle, LocalTransport, Router, RouterConfig, ShardEngine,
+    ShardTransport, TcpTransport, TcpTransportConfig,
 };
 use crate::coherence::{coherence_graph, pmodel_stats};
 use crate::coordinator::{serve_tcp, BackendSpec, Coordinator, CoordinatorConfig, Precision};
@@ -96,6 +96,12 @@ fn usage() -> String {
          \x20                                                          executors, same client protocol\n\
          \x20            [--router H:P,H:P,...]                        router over remote shard\n\
          \x20                                                          processes (frame protocol)\n\
+         \x20            [--replicas R]                                homes per index partition\n\
+         \x20                                                          (R>=2 keeps answers complete\n\
+         \x20                                                          through single-shard death)\n\
+         \x20            [--hedge-after MS] [--deadline-ms MS]         race slow shards with a backup\n\
+         \x20                                                          replica probe; per-request\n\
+         \x20                                                          deadline on the wire\n\
          \x20            [--shard-of ROUTER] [--shard-name S]          run THIS process as a shard\n\
          \x20                                                          executor the router dials\n\n\
          experiments:\n",
@@ -466,6 +472,25 @@ fn cmd_serve_shard(args: &Args) -> Result<String, String> {
     Ok(String::new())
 }
 
+/// Fault-tolerance tunables shared by both clustered serve modes:
+/// `--replicas R` homes per index partition, `--hedge-after MS` backup
+/// probes for slow shards, `--deadline-ms MS` per-request deadlines.
+fn router_config_from_args(args: &Args) -> Result<RouterConfig, String> {
+    let mut config = RouterConfig {
+        replicas: args.get_usize("replicas", 1)?.max(1),
+        ..RouterConfig::default()
+    };
+    let hedge_ms = args.get_u64("hedge-after", 0)?;
+    if hedge_ms > 0 {
+        config.hedge_after = Some(Duration::from_millis(hedge_ms));
+    }
+    let deadline_ms = args.get_u64("deadline-ms", 0)?;
+    if deadline_ms > 0 {
+        config.deadline = Some(Duration::from_millis(deadline_ms));
+    }
+    Ok(config)
+}
+
 fn cmd_serve(args: &Args) -> Result<String, String> {
     if args.options.contains_key("shard-of") {
         return cmd_serve_shard(args);
@@ -483,7 +508,7 @@ fn cmd_serve(args: &Args) -> Result<String, String> {
                     as Box<dyn ShardTransport>
             })
             .collect();
-        Some(Router::handle(transports)?)
+        Some(Router::handle_with_config(transports, router_config_from_args(args)?)?)
     } else if args.get_usize("shards", 0)? > 0 {
         let shard_specs = native_serve_specs(args)?;
         let transports: Vec<Box<dyn ShardTransport>> = (0..args.get_usize("shards", 0)?)
@@ -492,7 +517,7 @@ fn cmd_serve(args: &Args) -> Result<String, String> {
                 Ok(Box::new(LocalTransport::new(Arc::new(engine))) as Box<dyn ShardTransport>)
             })
             .collect::<Result<_, String>>()?;
-        Some(Router::handle(transports)?)
+        Some(Router::handle_with_config(transports, router_config_from_args(args)?)?)
     } else {
         None
     };
@@ -523,11 +548,19 @@ fn cmd_serve(args: &Args) -> Result<String, String> {
             .map_err(|e| format!("{e:#}"))?,
     );
     let stop = Arc::new(AtomicBool::new(false));
-    let monitor = cluster.as_ref().map(|router| {
+    let monitor = cluster.as_ref().and_then(|router| {
         let statuses = router.probe();
         let live = statuses.iter().filter(|s| s.alive).count();
         println!("cluster: {live}/{} shards live", statuses.len());
-        spawn_health_monitor(router, Duration::from_millis(500), stop.clone())
+        match spawn_health_monitor(router, Duration::from_millis(500), stop.clone()) {
+            Ok(handle) => Some(handle),
+            Err(e) => {
+                // degraded but serving: liveness only updates on failed
+                // calls until a monitor can be spawned on a later run
+                eprintln!("cluster: health monitor unavailable ({e}); serving without probes");
+                None
+            }
+        }
     });
     // optional out-of-the-box similarity search: index a synthetic
     // clustered corpus under the name "default" so the TCP `INDEX`

@@ -1,0 +1,246 @@
+//! Deterministic fault injection around any [`ShardTransport`].
+//!
+//! [`FaultyTransport`] wraps an inner transport and, per call, draws a
+//! fixed number of samples from a seeded [`Rng`] to decide whether to
+//! inject a disconnect, a drop (silent loss surfacing as a timeout), a
+//! delay, or a corrupted frame. Because the draw count per call is
+//! constant regardless of which fault fires, the fault sequence seen by
+//! a serial caller is a pure function of `(seed, shard index, call
+//! number)` — chaos tests replay the exact same fault schedule from the
+//! same seed.
+//!
+//! Each injected fault mimics what the real [`TcpTransport`] would
+//! surface:
+//!
+//! * **disconnect** → [`ShardError::Unreachable`] (connection death;
+//!   the router marks the shard dead and fails over),
+//! * **drop** → [`ShardError::Timeout`] (the request or its reply was
+//!   lost; the connection is "still up", the router retries a replica),
+//! * **delay** → the call sleeps before reaching the shard; if the
+//!   sleep exceeds the request deadline the call times out instead,
+//! * **corrupt** → alternately a corrupted *request* frame (the shard's
+//!   decoder rejects it: `Ok(ShardReply::Err)` whose message carries
+//!   the frame error, id salvaged) and a corrupted *reply* frame (the
+//!   sender's reader tears the connection down:
+//!   [`ShardError::Unreachable`]).
+//!
+//! The `enabled` switch lets a test build and replicate indexes over a
+//! clean transport, then turn the weather on for the query storm only —
+//! which is what keeps exact-equivalence assertions meaningful.
+
+use super::frame::{ShardReply, ShardRequest};
+use super::transport::{ShardError, ShardTransport};
+use crate::rng::Rng;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Seeded fault probabilities for one [`FaultyTransport`]. All
+/// probabilities are in `[0, 1]`; the default plan injects nothing.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Root seed; each wrapped shard derives its own stream from
+    /// `seed ^ shard_index` so shards fail independently but
+    /// reproducibly.
+    pub seed: u64,
+    /// Probability a call's connection dies ([`ShardError::Unreachable`]).
+    pub disconnect_prob: f64,
+    /// Probability a call is silently lost ([`ShardError::Timeout`]).
+    pub drop_prob: f64,
+    /// Probability a call is delayed before dispatch.
+    pub delay_prob: f64,
+    /// Upper bound of the injected delay (actual delay is uniform in
+    /// `[0, max_delay)`).
+    pub max_delay: Duration,
+    /// Probability a call's frame is corrupted in flight.
+    pub corrupt_prob: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            disconnect_prob: 0.0,
+            drop_prob: 0.0,
+            delay_prob: 0.0,
+            max_delay: Duration::from_millis(0),
+            corrupt_prob: 0.0,
+        }
+    }
+}
+
+/// Counts of faults injected so far, by kind.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    /// Injected connection deaths.
+    pub disconnects: u64,
+    /// Injected silent losses (timeouts).
+    pub drops: u64,
+    /// Injected delays (including those that became timeouts).
+    pub delays: u64,
+    /// Injected corrupted frames (request + reply).
+    pub corruptions: u64,
+}
+
+impl FaultCounts {
+    /// Total injected faults of every kind.
+    pub fn total(&self) -> u64 {
+        self.disconnects + self.drops + self.delays + self.corruptions
+    }
+}
+
+/// A [`ShardTransport`] wrapper that injects seeded, deterministic
+/// faults. See the module docs for the fault model.
+pub struct FaultyTransport {
+    inner: Arc<dyn ShardTransport>,
+    plan: FaultPlan,
+    rng: Mutex<Rng>,
+    enabled: AtomicBool,
+    /// Alternates request-frame and reply-frame corruption so both
+    /// failure surfaces get exercised from one probability.
+    corrupt_flip: AtomicBool,
+    disconnects: AtomicU64,
+    drops: AtomicU64,
+    delays: AtomicU64,
+    corruptions: AtomicU64,
+}
+
+impl FaultyTransport {
+    /// Wrap `inner` with the fault schedule of `plan` for the shard at
+    /// position `shard_index` (each shard gets an independent stream).
+    /// Faults start enabled.
+    pub fn new(inner: Arc<dyn ShardTransport>, plan: FaultPlan, shard_index: u64) -> Self {
+        let rng = Rng::new(plan.seed ^ shard_index.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        FaultyTransport {
+            inner,
+            plan,
+            rng: Mutex::new(rng),
+            enabled: AtomicBool::new(true),
+            corrupt_flip: AtomicBool::new(false),
+            disconnects: AtomicU64::new(0),
+            drops: AtomicU64::new(0),
+            delays: AtomicU64::new(0),
+            corruptions: AtomicU64::new(0),
+        }
+    }
+
+    /// Turn injection on or off (off = pass-through). Tests build
+    /// replicated indexes with faults off, then enable them for the
+    /// query storm.
+    pub fn set_enabled(&self, enabled: bool) {
+        self.enabled.store(enabled, Ordering::SeqCst);
+    }
+
+    /// Whether injection is currently on.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::SeqCst)
+    }
+
+    /// Faults injected so far, by kind.
+    pub fn counts(&self) -> FaultCounts {
+        FaultCounts {
+            disconnects: self.disconnects.load(Ordering::SeqCst),
+            drops: self.drops.load(Ordering::SeqCst),
+            delays: self.delays.load(Ordering::SeqCst),
+            corruptions: self.corruptions.load(Ordering::SeqCst),
+        }
+    }
+
+    /// The wrapped transport.
+    pub fn inner(&self) -> &Arc<dyn ShardTransport> {
+        &self.inner
+    }
+}
+
+/// One call's fault decision, fully drawn up front.
+struct Draw {
+    disconnect: bool,
+    drop: bool,
+    delay: Option<Duration>,
+    corrupt: bool,
+}
+
+impl FaultyTransport {
+    fn draw(&self) -> Draw {
+        // Always consume exactly five samples so the stream position
+        // depends only on the call count, never on which faults fired.
+        let mut rng = self.rng.lock().expect("fault rng lock");
+        let (d1, d2, d3, d4, frac) =
+            (rng.uniform(), rng.uniform(), rng.uniform(), rng.uniform(), rng.uniform());
+        Draw {
+            disconnect: d1 < self.plan.disconnect_prob,
+            drop: d2 < self.plan.drop_prob,
+            delay: (d3 < self.plan.delay_prob)
+                .then(|| self.plan.max_delay.mul_f64(frac)),
+            corrupt: d4 < self.plan.corrupt_prob,
+        }
+    }
+}
+
+impl ShardTransport for FaultyTransport {
+    fn call_deadline(
+        &self,
+        req: &ShardRequest,
+        deadline: Option<Duration>,
+    ) -> Result<ShardReply, ShardError> {
+        if !self.enabled.load(Ordering::SeqCst) {
+            return self.inner.call_deadline(req, deadline);
+        }
+        let draw = self.draw();
+        if draw.disconnect {
+            self.disconnects.fetch_add(1, Ordering::SeqCst);
+            return Err(ShardError::Unreachable(format!(
+                "injected disconnect from {}",
+                self.inner.describe()
+            )));
+        }
+        if draw.drop {
+            self.drops.fetch_add(1, Ordering::SeqCst);
+            return Err(ShardError::Timeout(format!(
+                "injected drop: no reply from {}",
+                self.inner.describe()
+            )));
+        }
+        if let Some(delay) = draw.delay {
+            self.delays.fetch_add(1, Ordering::SeqCst);
+            match deadline {
+                Some(d) if delay >= d => {
+                    // the delayed call would blow its deadline: the
+                    // real transport surfaces that as a typed timeout
+                    std::thread::sleep(d.min(self.plan.max_delay));
+                    return Err(ShardError::Timeout(format!(
+                        "injected delay exceeded deadline at {}",
+                        self.inner.describe()
+                    )));
+                }
+                _ => std::thread::sleep(delay),
+            }
+        }
+        if draw.corrupt {
+            self.corruptions.fetch_add(1, Ordering::SeqCst);
+            let request_side = !self.corrupt_flip.fetch_xor(true, Ordering::SeqCst);
+            if request_side {
+                // corrupted request frame: the shard's decoder rejects
+                // the body but salvages the id, so an application-level
+                // ERR rides back on a healthy connection
+                return Ok(ShardReply::Err {
+                    message: format!(
+                        "frame error: injected corrupt request frame to {}",
+                        self.inner.describe()
+                    ),
+                });
+            }
+            // corrupted reply frame: the sender's reader can't trust
+            // the stream any more and tears the connection down
+            return Err(ShardError::Unreachable(format!(
+                "injected corrupt reply frame from {}",
+                self.inner.describe()
+            )));
+        }
+        self.inner.call_deadline(req, deadline)
+    }
+
+    fn describe(&self) -> String {
+        format!("faulty:{}", self.inner.describe())
+    }
+}

@@ -4,17 +4,22 @@
 //! Wire layout (all integers little-endian):
 //!
 //! ```text
-//! [len: u32] [request id: u64] [opcode: u8] [body...]
+//! request: [len: u32] [request id: u64] [opcode: u8] [deadline_ms: u32] [body...]
+//! reply:   [len: u32] [request id: u64] [opcode: u8] [body...]
 //! ```
 //!
 //! `len` counts every byte after the length field itself, so a frame
 //! occupies `4 + len` bytes on the wire. Request ids are chosen by the
 //! sender and echoed verbatim in the matching reply, which lets a
 //! transport pipeline many requests over one connection and pair
-//! replies out of band. `len` is validated against
-//! [`MIN_PAYLOAD_BYTES`] / [`MAX_FRAME_BYTES`] *before* any payload
-//! allocation, so a malicious or corrupt header can never drive an
-//! oversized allocation.
+//! replies out of band. Every request carries a relative deadline in
+//! milliseconds (`0` = none): the shard server refuses to start work
+//! whose deadline already passed, and a sender that gives up early can
+//! follow with a `Cancel` frame naming the abandoned request id so the
+//! shard drops the stale reply instead of writing it. `len` is
+//! validated against [`MIN_PAYLOAD_BYTES`] / [`MAX_FRAME_BYTES`]
+//! *before* any payload allocation, so a malicious or corrupt header
+//! can never drive an oversized allocation.
 //!
 //! Variable-length fields inside the body carry their own `u32` counts
 //! (strings are length-prefixed UTF-8; row matrices are a row count
@@ -31,7 +36,10 @@ use std::io::Read;
 /// claiming more are rejected from the 4-byte header alone.
 pub const MAX_FRAME_BYTES: usize = 64 << 20;
 
-/// Smallest legal payload: request id (8) + opcode (1).
+/// Smallest legal payload: request id (8) + opcode (1) — the reply
+/// minimum. Requests additionally carry a 4-byte deadline, but the
+/// shared bound stays at the reply floor so one header check covers
+/// both directions; a 9..13-byte request still fails in the decoder.
 pub const MIN_PAYLOAD_BYTES: usize = 9;
 
 /// A malformed, truncated or oversized frame.
@@ -112,6 +120,14 @@ pub enum ShardRequest {
     },
     /// Liveness probe; the reply carries the shard's health line.
     Health,
+    /// Abandon the in-flight request `target` on this connection: the
+    /// shard suppresses the stale reply (or skips execution if it has
+    /// not started). Best-effort — a reply that already left the shard
+    /// is simply dropped by the sender's id pairing.
+    Cancel {
+        /// request id of the abandoned call
+        target: u64,
+    },
 }
 
 /// One hit on the wire: global corpus id + Hamming distance. Similarity
@@ -176,6 +192,7 @@ const REQ_HEALTH: u8 = 6;
 const REQ_INDEX_PUSH: u8 = 7;
 const REQ_INDEX_DELETE: u8 = 8;
 const REQ_INDEX_COMPACT: u8 = 9;
+const REQ_CANCEL: u8 = 10;
 
 const REP_EMBEDDED: u8 = 65;
 const REP_OK: u8 = 66;
@@ -390,23 +407,39 @@ fn finish(payload: Vec<u8>) -> Vec<u8> {
     out
 }
 
-/// Encode a request into a complete wire frame (length prefix included).
-pub fn encode_request(id: u64, req: &ShardRequest) -> Vec<u8> {
+fn request_opcode(req: &ShardRequest) -> u8 {
+    match req {
+        ShardRequest::Embed { .. } => REQ_EMBED,
+        ShardRequest::IndexBegin { .. } => REQ_INDEX_BEGIN,
+        ShardRequest::IndexRows { .. } => REQ_INDEX_ROWS,
+        ShardRequest::IndexCommit { .. } => REQ_INDEX_COMMIT,
+        ShardRequest::IndexQuery { .. } => REQ_INDEX_QUERY,
+        ShardRequest::IndexPush { .. } => REQ_INDEX_PUSH,
+        ShardRequest::IndexDelete { .. } => REQ_INDEX_DELETE,
+        ShardRequest::IndexCompact { .. } => REQ_INDEX_COMPACT,
+        ShardRequest::Health => REQ_HEALTH,
+        ShardRequest::Cancel { .. } => REQ_CANCEL,
+    }
+}
+
+/// Encode a request into a complete wire frame (length prefix
+/// included). `deadline_ms` is the relative per-request deadline in
+/// milliseconds (`0` = no deadline).
+pub fn encode_request(id: u64, deadline_ms: u32, req: &ShardRequest) -> Vec<u8> {
     let mut b = Vec::new();
     put_u64(&mut b, id);
+    b.push(request_opcode(req));
+    put_u32(&mut b, deadline_ms);
     match req {
         ShardRequest::Embed { variant, rows } => {
-            b.push(REQ_EMBED);
             put_str(&mut b, variant);
             put_rows_f32(&mut b, rows);
         }
         ShardRequest::IndexBegin { name, spec } => {
-            b.push(REQ_INDEX_BEGIN);
             put_str(&mut b, name);
             put_spec(&mut b, spec);
         }
         ShardRequest::IndexRows { name, ids, rows } => {
-            b.push(REQ_INDEX_ROWS);
             put_str(&mut b, name);
             put_u32(&mut b, ids.len() as u32);
             for &id in ids {
@@ -415,17 +448,14 @@ pub fn encode_request(id: u64, req: &ShardRequest) -> Vec<u8> {
             put_rows_f64(&mut b, rows);
         }
         ShardRequest::IndexCommit { name } => {
-            b.push(REQ_INDEX_COMMIT);
             put_str(&mut b, name);
         }
         ShardRequest::IndexQuery { name, k, queries } => {
-            b.push(REQ_INDEX_QUERY);
             put_str(&mut b, name);
             put_u32(&mut b, *k);
             put_rows_f64(&mut b, queries);
         }
         ShardRequest::IndexPush { name, ids, rows } => {
-            b.push(REQ_INDEX_PUSH);
             put_str(&mut b, name);
             put_u32(&mut b, ids.len() as u32);
             for &id in ids {
@@ -434,7 +464,6 @@ pub fn encode_request(id: u64, req: &ShardRequest) -> Vec<u8> {
             put_rows_f64(&mut b, rows);
         }
         ShardRequest::IndexDelete { name, ids } => {
-            b.push(REQ_INDEX_DELETE);
             put_str(&mut b, name);
             put_u32(&mut b, ids.len() as u32);
             for &id in ids {
@@ -442,10 +471,12 @@ pub fn encode_request(id: u64, req: &ShardRequest) -> Vec<u8> {
             }
         }
         ShardRequest::IndexCompact { name } => {
-            b.push(REQ_INDEX_COMPACT);
             put_str(&mut b, name);
         }
-        ShardRequest::Health => b.push(REQ_HEALTH),
+        ShardRequest::Health => {}
+        ShardRequest::Cancel { target } => {
+            put_u64(&mut b, *target);
+        }
     }
     finish(b)
 }
@@ -493,10 +524,12 @@ pub fn encode_reply(id: u64, rep: &ShardReply) -> Vec<u8> {
 }
 
 /// Decode a request payload (the bytes after the length prefix).
-pub fn decode_request(payload: &[u8]) -> Result<(u64, ShardRequest), FrameError> {
+pub fn decode_request(payload: &[u8]) -> Result<(u64, u32, ShardRequest), FrameError> {
     let mut c = Cur { b: payload };
     let id = c.u64()?;
-    let req = match c.u8()? {
+    let op = c.u8()?;
+    let deadline_ms = c.u32()?;
+    let req = match op {
         REQ_EMBED => ShardRequest::Embed { variant: c.str_()?, rows: c.rows_f32()? },
         REQ_INDEX_BEGIN => ShardRequest::IndexBegin { name: c.str_()?, spec: c.spec()? },
         REQ_INDEX_ROWS => {
@@ -512,10 +545,11 @@ pub fn decode_request(payload: &[u8]) -> Result<(u64, ShardRequest), FrameError>
         REQ_INDEX_DELETE => ShardRequest::IndexDelete { name: c.str_()?, ids: c.u64_vec()? },
         REQ_INDEX_COMPACT => ShardRequest::IndexCompact { name: c.str_()? },
         REQ_HEALTH => ShardRequest::Health,
+        REQ_CANCEL => ShardRequest::Cancel { target: c.u64()? },
         other => return Err(FrameError(format!("unknown request opcode {other}"))),
     };
     c.done()?;
-    Ok((id, req))
+    Ok((id, deadline_ms, req))
 }
 
 /// Decode a reply payload (the bytes after the length prefix).
@@ -594,10 +628,10 @@ mod tests {
     use std::io::Cursor;
 
     fn roundtrip_request(req: &ShardRequest) -> ShardRequest {
-        let frame = encode_request(7, req);
+        let frame = encode_request(7, 42, req);
         let payload = read_frame(&mut Cursor::new(&frame)).unwrap().unwrap();
-        let (id, decoded) = decode_request(&payload).unwrap();
-        assert_eq!(id, 7);
+        let (id, deadline_ms, decoded) = decode_request(&payload).unwrap();
+        assert_eq!((id, deadline_ms), (7, 42));
         decoded
     }
 
@@ -761,6 +795,21 @@ mod tests {
     }
 
     #[test]
+    fn cancel_roundtrips_with_deadline() {
+        let req = ShardRequest::Cancel { target: u64::MAX - 3 };
+        let ShardRequest::Cancel { target } = roundtrip_request(&req) else {
+            panic!("wrong request kind");
+        };
+        assert_eq!(target, u64::MAX - 3);
+        // a request with no deadline decodes to deadline_ms == 0
+        let frame = encode_request(11, 0, &ShardRequest::Health);
+        let payload = read_frame(&mut Cursor::new(&frame)).unwrap().unwrap();
+        let (id, deadline_ms, req) = decode_request(&payload).unwrap();
+        assert_eq!((id, deadline_ms), (11, 0));
+        assert!(matches!(req, ShardRequest::Health));
+    }
+
+    #[test]
     fn oversized_and_undersized_headers_rejected() {
         assert!(check_len((MAX_FRAME_BYTES + 1) as u32).is_err());
         assert!(check_len(0).is_err());
@@ -780,7 +829,7 @@ mod tests {
         // EOF mid-header
         assert!(read_frame(&mut Cursor::new(&[9, 0])).unwrap_err().0.contains("header"));
         // EOF mid-payload
-        let mut frame = encode_request(1, &ShardRequest::Health);
+        let mut frame = encode_request(1, 0, &ShardRequest::Health);
         frame.truncate(frame.len() - 1);
         assert!(read_frame(&mut Cursor::new(&frame)).unwrap_err().0.contains("payload"));
     }
@@ -794,17 +843,19 @@ mod tests {
         // body shorter than its declared string length
         let mut payload = 5u64.to_le_bytes().to_vec();
         payload.push(REQ_INDEX_COMMIT);
+        payload.extend_from_slice(&0u32.to_le_bytes()); // deadline_ms
         payload.extend_from_slice(&100u32.to_le_bytes());
         payload.extend_from_slice(b"abc");
         assert!(decode_request(&payload).unwrap_err().0.contains("truncated"));
         // trailing garbage after a well-formed body
-        let frame = encode_request(1, &ShardRequest::Health);
+        let frame = encode_request(1, 0, &ShardRequest::Health);
         let mut payload = frame[4..].to_vec();
         payload.push(0xFF);
         assert!(decode_request(&payload).unwrap_err().0.contains("trailing"));
         // a bogus row count larger than the remaining bytes must not allocate
         let mut payload = 1u64.to_le_bytes().to_vec();
         payload.push(REQ_EMBED);
+        payload.extend_from_slice(&0u32.to_le_bytes()); // deadline_ms
         payload.extend_from_slice(&1u32.to_le_bytes()); // variant len 1
         payload.push(b'v');
         payload.extend_from_slice(&u32::MAX.to_le_bytes()); // absurd row count

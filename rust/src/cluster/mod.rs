@@ -31,6 +31,28 @@
 //! `IndexDelete` tombstones rows, and `IndexCompact` folds tombstones
 //! out shard-locally.
 //!
+//! # Replication
+//!
+//! With [`RouterConfig::replicas`]` = R > 1` every index partition is
+//! stored on `R` *homes* — a deterministic rotation of the build-time
+//! shard list (`partition p` lives at slots `(p + j) mod P`, `j < R`):
+//!
+//! ```text
+//!   P = 4 shards, R = 2          writes fan to ALL homes
+//!   partition 0 → slots {0, 1}   reads hit ANY live home
+//!   partition 1 → slots {1, 2}   slot 2 covers partitions {2, 1}
+//!   partition 2 → slots {2, 3}
+//!   partition 3 → slots {3, 0}
+//! ```
+//!
+//! Builds, `IndexPush`, `IndexDelete` and `IndexCompact` fan out to
+//! every home (always in ascending global-id order, preserving the
+//! exact-merge invariant); queries read from any live replica and
+//! dedup the overlap (replicas hold byte-identical codes), so killing
+//! any single shard leaves answers bit-identical and *complete* —
+//! [`ClusterAnswer::partial`] becomes the exception, raised only when
+//! every home of some partition is gone.
+//!
 //! # Transports
 //!
 //! Both cluster modes speak through one [`ShardTransport`] trait:
@@ -38,30 +60,50 @@
 //! tests) and [`TcpTransport`] (shard processes started with `serve
 //! --shard-of`, dialed by `serve --router`). The TCP mode uses the
 //! length-prefixed binary frames of [`frame`] with per-request ids for
-//! pipelining and a bounded in-flight window for backpressure.
+//! pipelining, a bounded in-flight window for backpressure, per-request
+//! deadlines carried on the wire, and best-effort cancellation of
+//! abandoned calls. [`FaultyTransport`] wraps any transport with a
+//! seeded fault schedule (delays, drops, disconnects, corrupt frames)
+//! for deterministic chaos testing.
 //!
 //! # Failure semantics
 //!
-//! A shard that cannot be reached is marked dead. Embed work re-queues
-//! onto survivors (answers stay complete and bit-identical); index
-//! answers lose the dead shard's slice and carry
-//! [`ClusterAnswer::partial`]` = true`. [`Router::probe`] — run
-//! periodically by [`spawn_health_monitor`] — HEALTH-probes every
-//! shard and re-admits any that answer, which is how a restarted shard
-//! process re-registers.
+//! A shard that cannot be reached ([`ShardError::Unreachable`]) is
+//! marked dead; a deadline expiry ([`ShardError::Timeout`]) reroutes
+//! the request but leaves liveness to the health monitor. Embed work
+//! re-queues onto other shards (answers stay complete and
+//! bit-identical); index queries run coverage rounds over the replica
+//! homes under a per-request retry budget, and when
+//! [`RouterConfig::hedge_after`] is set a slow shard gets raced by a
+//! backup probe on another replica — first answer wins:
+//!
+//! ```text
+//!   query ─▶ slot 2 ──────────× (slow / dead)
+//!             │ hedge_after elapses
+//!             └─▶ slot 3 (replica of partition 2) ──▶ answer
+//!   merge: dedup (hamming, id) pairs, truncate to k  →  exact top-k
+//! ```
+//!
+//! [`Router::probe`] — run periodically by [`spawn_health_monitor`] —
+//! HEALTH-probes every shard and re-admits any that answer, which is
+//! how a restarted shard process re-registers.
 
+pub mod fault;
 pub mod frame;
 pub mod router;
 pub mod shard;
 pub mod tcp;
 pub mod transport;
 
+pub use fault::{FaultCounts, FaultPlan, FaultyTransport};
 pub use frame::{FrameError, ShardReply, ShardRequest, WireHit, MAX_FRAME_BYTES};
 pub use router::{
-    spawn_health_monitor, ClusterAnswer, ClusterHandle, Router, ShardStatus, BUILD_CHUNK_ROWS,
+    spawn_health_monitor, ClusterAnswer, ClusterHandle, Router, RouterConfig, ShardStatus,
+    BUILD_CHUNK_ROWS,
 };
 pub use shard::ShardEngine;
 pub use tcp::serve_shard;
 pub use transport::{
-    LocalTransport, ShardTransport, TcpTransport, TcpTransportConfig, TransportError,
+    LocalTransport, ShardError, ShardTransport, TcpTransport, TcpTransportConfig,
+    TransportError,
 };

@@ -2,7 +2,7 @@
 //! and reassembles answers that are indistinguishable from single-node
 //! results.
 //!
-//! # Partitioning and exactness
+//! # Partitioning, replication and exactness
 //!
 //! * **Embed** batches are split into contiguous row ranges, one per
 //!   live shard. Every row is computed whole on exactly one shard by
@@ -11,36 +11,80 @@
 //!   pool size — so reassembling ranges in row order reproduces the
 //!   single-node batch bit-for-bit at f64.
 //! * **Index corpora** are partitioned round-robin by global row id
-//!   (`shard = id mod live_shards`), streamed in bounded
-//!   [`BUILD_CHUNK_ROWS`] chunks. Each shard keeps the global ids and
-//!   answers queries in global-id terms; because every shard's local
-//!   id order is a subsequence of the global order, merging per-shard
-//!   top-k lists by `(hamming, id)` ascending and truncating to `k`
-//!   yields exactly the single-node top-k with the same tie-break.
+//!   (`partition = id mod P` over the `P` shard slots recorded at
+//!   build time), and every partition is stored on
+//!   [`RouterConfig::replicas`] *homes* — slot positions
+//!   `(partition + j) mod P` for `j < R`, a deterministic rotation of
+//!   the build-time shard list. Builds and every mutation
+//!   (`INDEX PUSH` / `DELETE` / `COMPACT`) fan out to all homes;
+//!   queries read from any live replica. Rows are streamed in bounded
+//!   [`BUILD_CHUNK_ROWS`] chunks, always in ascending global-id order,
+//!   so each home's local id sequence stays a strictly increasing
+//!   subsequence of the global order and per-shard top-k lists merge
+//!   into the exact single-node top-k by `(hamming, id)` ascending.
+//!   Replicas hold byte-identical codes (same spec, same seed), so the
+//!   overlap they contribute to a merge is removed by exact-pair
+//!   dedup before truncating to `k`.
 //!
 //! # Failure semantics
 //!
-//! A transport-level failure marks the shard dead. Embed scatter
-//! re-queues the dead shard's row ranges onto survivors (the batch
-//! still completes, identically, as long as one shard lives). Index
-//! queries skip dead shards and mark the merged answer
-//! [`ClusterAnswer::partial`], because a dead shard's corpus slice is
-//! unreachable. [`Router::probe`] (driven periodically by
-//! [`spawn_health_monitor`]) sends HEALTH frames to every shard, dead
-//! or alive — a shard that answers is (re-)admitted and resumes taking
-//! traffic on the next request.
+//! An [`Unreachable`](super::transport::ShardError::Unreachable)
+//! failure marks the shard dead; a
+//! [`Timeout`](super::transport::ShardError::Timeout) leaves it alive
+//! (the connection may be healthy, the request merely missed its
+//! [`RouterConfig::deadline`]) but reroutes the work. Embed scatter
+//! re-queues failed row ranges onto other shards (the batch still
+//! completes, identically, as long as one shard lives). Index queries
+//! run coverage rounds: every uncovered partition is asked of its
+//! first untried live home, failures consume the per-request
+//! [`RouterConfig::retry_budget`], and the answer is
+//! [`ClusterAnswer::partial`] only when some partition has *no* live
+//! replica left — with `replicas >= 2` a single shard death changes
+//! nothing about the answer. When [`RouterConfig::hedge_after`] is
+//! set, a probe that has not answered within the hedging delay gets a
+//! backup probe on another replica (bounded by a global token pool
+//! sized from the retry budget) and the first answer wins.
+//! [`Router::probe`] (driven periodically by [`spawn_health_monitor`])
+//! sends HEALTH frames to every shard, dead or alive — a shard that
+//! answers is (re-)admitted and resumes taking traffic on the next
+//! request.
 
 use super::frame::{ShardReply, ShardRequest, WireHit};
-use super::transport::{ShardTransport, TransportError};
+use super::transport::{ShardError, ShardTransport};
+use crate::coordinator::Metrics;
 use crate::index::{angular_similarity, IndexSpec, SearchHit};
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex, Weak};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicIsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, OnceLock, Weak};
 use std::time::Duration;
 
 /// Corpus rows per `IndexRows` frame when the router streams a build
 /// to its shards (bounds peak frame size and shard-side buffering).
 pub const BUILD_CHUNK_ROWS: usize = 512;
+
+/// Tunables for a [`Router`]'s fault-tolerance behaviour.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Homes per index partition. Clamped to the shard count at build
+    /// time; `1` reproduces the unreplicated layout exactly.
+    pub replicas: usize,
+    /// Launch a backup probe on another replica when a query shard has
+    /// not answered within this delay. `None` disables hedging.
+    pub hedge_after: Option<Duration>,
+    /// Per-request cap on retried probes, and the size of the global
+    /// hedge token pool — a sick cluster degrades to partial answers
+    /// instead of melting down in retries.
+    pub retry_budget: usize,
+    /// Per-call deadline handed to the transport (`None` = transport
+    /// default).
+    pub deadline: Option<Duration>,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig { replicas: 1, hedge_after: None, retry_budget: 32, deadline: None }
+    }
+}
 
 /// A merged index answer from the cluster.
 #[derive(Debug, Clone)]
@@ -50,8 +94,9 @@ pub struct ClusterAnswer {
     pub hits: Vec<Vec<SearchHit>>,
     /// buckets probed across all answering shards
     pub probed_buckets: usize,
-    /// true when at least one shard holding corpus rows did not
-    /// answer — the hits cover only the reachable partitions
+    /// true when some partition had no live replica answer — the hits
+    /// cover only the reachable partitions. With `replicas >= 2` this
+    /// requires every home of a partition to fail at once.
     pub partial: bool,
 }
 
@@ -73,18 +118,40 @@ struct IndexMeta {
     /// rows-ever-assigned count (a failed push may leave id gaps;
     /// gaps are harmless, ids are never reused)
     rows: usize,
-    /// shard slots that hold a partition of this index; pushes and
-    /// deletes route by `shards[gid % shards.len()]`, the same
-    /// round-robin the build used
+    /// shard slots that hold partitions of this index; partition
+    /// `gid % shards.len()` lives on positions
+    /// `(partition + j) % shards.len()` for `j < replicas`
     shards: Vec<usize>,
+    /// homes per partition, clamped at build time
+    replicas: usize,
+}
+
+impl IndexMeta {
+    /// Slot positions (indexes into `shards`) holding `partition`.
+    fn home_positions(&self, partition: usize) -> impl Iterator<Item = usize> + '_ {
+        let p = self.shards.len();
+        (0..self.replicas).map(move |j| (partition + j) % p)
+    }
+
+    /// Partitions held by the slot at `position`.
+    fn partitions_of(&self, position: usize) -> impl Iterator<Item = usize> + '_ {
+        let p = self.shards.len();
+        (0..self.replicas).map(move |j| (position + p - j) % p)
+    }
 }
 
 /// Scatter-gather front over N shard transports. Cheaply shared as a
 /// [`ClusterHandle`]; all methods take `&self`.
 pub struct Router {
-    transports: Vec<Box<dyn ShardTransport>>,
+    transports: Vec<Arc<dyn ShardTransport>>,
     alive: Vec<AtomicBool>,
     indexes: Mutex<HashMap<String, IndexMeta>>,
+    config: RouterConfig,
+    /// Global pool bounding concurrently outstanding hedge probes.
+    hedge_tokens: Arc<AtomicIsize>,
+    /// Serving metrics, attached by the coordinator when it adopts the
+    /// router; counters are dropped on the floor until then.
+    metrics: OnceLock<Arc<Metrics>>,
 }
 
 /// Shared handle to a [`Router`] — what the coordinator and the CLI
@@ -95,25 +162,71 @@ impl std::fmt::Debug for Router {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Router")
             .field("shards", &self.statuses())
+            .field("config", &self.config)
             .finish()
     }
 }
 
 impl Router {
-    /// Build a router over the given shard transports (at least one).
-    /// All shards start out presumed alive; the first failed call or
-    /// probe corrects that.
+    /// Build a router over the given shard transports (at least one)
+    /// with the default (unreplicated, unhedged) config. All shards
+    /// start out presumed alive; the first failed call or probe
+    /// corrects that.
     pub fn new(transports: Vec<Box<dyn ShardTransport>>) -> Result<Router, String> {
+        Router::with_config(transports, RouterConfig::default())
+    }
+
+    /// Build a router with explicit fault-tolerance tunables.
+    pub fn with_config(
+        transports: Vec<Box<dyn ShardTransport>>,
+        config: RouterConfig,
+    ) -> Result<Router, String> {
         if transports.is_empty() {
             return Err("router needs at least one shard transport".into());
         }
+        let transports: Vec<Arc<dyn ShardTransport>> =
+            transports.into_iter().map(Arc::from).collect();
         let alive = transports.iter().map(|_| AtomicBool::new(true)).collect();
-        Ok(Router { transports, alive, indexes: Mutex::new(HashMap::new()) })
+        let tokens = config.retry_budget.max(1) as isize;
+        Ok(Router {
+            transports,
+            alive,
+            indexes: Mutex::new(HashMap::new()),
+            config,
+            hedge_tokens: Arc::new(AtomicIsize::new(tokens)),
+            metrics: OnceLock::new(),
+        })
     }
 
-    /// Convenience: a router wrapped in its shared handle.
+    /// Convenience: a default-config router wrapped in its shared
+    /// handle.
     pub fn handle(transports: Vec<Box<dyn ShardTransport>>) -> Result<ClusterHandle, String> {
         Router::new(transports).map(Arc::new)
+    }
+
+    /// Convenience: a configured router wrapped in its shared handle.
+    pub fn handle_with_config(
+        transports: Vec<Box<dyn ShardTransport>>,
+        config: RouterConfig,
+    ) -> Result<ClusterHandle, String> {
+        Router::with_config(transports, config).map(Arc::new)
+    }
+
+    /// Adopt a metrics sink for hedge/retry/probe/partial counters.
+    /// The first caller wins; later calls are ignored.
+    pub fn attach_metrics(&self, metrics: Arc<Metrics>) {
+        let _ = self.metrics.set(metrics);
+    }
+
+    fn metric(&self, record: impl Fn(&Metrics)) {
+        if let Some(m) = self.metrics.get() {
+            record(m);
+        }
+    }
+
+    /// The router's fault-tolerance tunables.
+    pub fn config(&self) -> &RouterConfig {
+        &self.config
     }
 
     /// Total shard slots (live or dead).
@@ -148,30 +261,136 @@ impl Router {
         self.alive[shard].store(false, Ordering::SeqCst);
     }
 
+    /// Mark a shard dead only when the failure means shard death; a
+    /// deadline expiry leaves liveness alone (the shard may be healthy
+    /// but slow, and the health monitor arbitrates).
+    fn note_failure(&self, shard: usize, err: &ShardError) {
+        if !err.is_timeout() {
+            self.mark_dead(shard);
+        }
+    }
+
+    fn try_take_hedge_token(&self) -> bool {
+        if self.hedge_tokens.fetch_sub(1, Ordering::SeqCst) > 0 {
+            true
+        } else {
+            self.hedge_tokens.fetch_add(1, Ordering::SeqCst);
+            false
+        }
+    }
+
+    /// Call `shard`, and when hedging is configured launch a backup
+    /// probe on `backup` if the primary has not answered within the
+    /// hedging delay; the first answer wins (the loser finishes on a
+    /// detached thread and is dropped). Returns which shard answered.
+    fn hedged_call(
+        &self,
+        shard: usize,
+        backup: Option<usize>,
+        req: &ShardRequest,
+    ) -> (usize, Result<ShardReply, ShardError>) {
+        let deadline = self.config.deadline;
+        let plan = match (self.config.hedge_after, backup) {
+            (Some(delay), Some(b)) if b != shard => Some((delay, b)),
+            _ => None,
+        };
+        let Some((delay, backup)) = plan else {
+            return (shard, self.transports[shard].call_deadline(req, deadline));
+        };
+        let (tx, rx) = mpsc::channel::<(usize, Result<ShardReply, ShardError>)>();
+        let spawn_probe = |slot: usize, token: Option<Arc<AtomicIsize>>| -> bool {
+            let transport = self.transports[slot].clone();
+            let req = req.clone();
+            let tx = tx.clone();
+            std::thread::Builder::new()
+                .name(format!("strembed-hedge-{slot}"))
+                .spawn(move || {
+                    let out = transport.call_deadline(&req, deadline);
+                    if let Some(tok) = token {
+                        tok.fetch_add(1, Ordering::SeqCst);
+                    }
+                    let _ = tx.send((slot, out));
+                })
+                .is_ok()
+        };
+        if !spawn_probe(shard, None) {
+            // no thread to be had: degrade to a plain inline call
+            return (shard, self.transports[shard].call_deadline(req, deadline));
+        }
+        if let Ok(first) = rx.recv_timeout(delay) {
+            return first;
+        }
+        // primary is slow; hedge on the backup replica under the
+        // global token pool
+        let mut outstanding = 1usize;
+        if self.try_take_hedge_token() {
+            self.metric(|m| m.on_hedged_request());
+            if spawn_probe(backup, Some(self.hedge_tokens.clone())) {
+                outstanding += 1;
+            } else {
+                self.hedge_tokens.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let mut last: Option<(usize, Result<ShardReply, ShardError>)> = None;
+        for _ in 0..outstanding {
+            match rx.recv() {
+                Ok((slot, Ok(reply))) => return (slot, Ok(reply)),
+                Ok(failed) => last = Some(failed),
+                Err(_) => break,
+            }
+        }
+        last.unwrap_or_else(|| {
+            (
+                shard,
+                Err(ShardError::Timeout(format!(
+                    "hedged call to shard {shard} produced no answer"
+                ))),
+            )
+        })
+    }
+
     /// Probe every shard (alive or dead) with a HEALTH request and
     /// update liveness from the outcome. A dead shard that answers is
-    /// re-admitted and resumes taking traffic immediately. Returns the
-    /// refreshed statuses.
+    /// re-admitted and resumes taking traffic immediately. A shard
+    /// whose probe thread could not even be spawned keeps its previous
+    /// liveness for this round (counted in `health_probe_errors`)
+    /// instead of panicking the monitor. Returns the refreshed
+    /// statuses.
     pub fn probe(&self) -> Vec<ShardStatus> {
-        let results: Vec<bool> = std::thread::scope(|s| {
-            let handles: Vec<_> = self
+        let results: Vec<Option<bool>> = std::thread::scope(|s| {
+            let handles: Vec<Option<std::thread::ScopedJoinHandle<'_, bool>>> = self
                 .transports
                 .iter()
-                .map(|t| s.spawn(move || t.call(&ShardRequest::Health).is_ok()))
+                .enumerate()
+                .map(|(i, t)| {
+                    std::thread::Builder::new()
+                        .name(format!("strembed-probe-{i}"))
+                        .spawn_scoped(s, move || t.call(&ShardRequest::Health).is_ok())
+                        .ok()
+                })
                 .collect();
-            handles.into_iter().map(|h| h.join().expect("probe thread")).collect()
+            handles.into_iter().map(|h| h.and_then(|h| h.join().ok())).collect()
         });
-        for (a, ok) in self.alive.iter().zip(&results) {
-            a.store(*ok, Ordering::SeqCst);
+        for (i, outcome) in results.iter().enumerate() {
+            match outcome {
+                Some(ok) => {
+                    let was = self.alive[i].swap(*ok, Ordering::SeqCst);
+                    if *ok && !was {
+                        self.metric(|m| m.on_shard_readmission());
+                    }
+                }
+                None => self.metric(|m| m.on_health_probe_error()),
+            }
         }
         self.statuses()
     }
 
     /// Scatter an embed batch across live shards as contiguous row
     /// ranges and gather the features back in row order. Shards that
-    /// die mid-batch have their ranges re-queued onto survivors, so
-    /// the result is complete — and bit-identical at f64 to a
-    /// single-node run — as long as one shard stays alive.
+    /// die or miss their deadline mid-batch have their ranges re-queued
+    /// onto other shards, so the result is complete — and bit-identical
+    /// at f64 to a single-node run — as long as one shard stays
+    /// reachable.
     pub fn embed_batch(
         &self,
         variant: &str,
@@ -182,17 +401,26 @@ impl Router {
         }
         let mut out: Vec<Option<Vec<f32>>> = vec![None; rows.len()];
         let mut work: Vec<(usize, usize)> = vec![(0, rows.len())];
-        // each retry round needs at least one shard death to recur, so
-        // shard_count rounds after the first always suffice
-        for _round in 0..self.shard_count() + 1 {
+        // shards that failed a range this batch (timeout or corrupt
+        // frame) without being globally dead; deprioritized until no
+        // other shard remains
+        let mut suspect: HashSet<usize> = HashSet::new();
+        // each retry round needs at least one new death/suspect to
+        // recur, so 2*shard_count rounds after the first always suffice
+        for _round in 0..2 * self.shard_count() + 1 {
             if work.is_empty() {
                 break;
             }
-            let live = self.live_shards();
+            let mut live = self.live_shards();
+            if live.iter().all(|s| suspect.contains(s)) {
+                suspect.clear(); // last resort: forgive and retry
+            } else {
+                live.retain(|s| !suspect.contains(s));
+            }
             if live.is_empty() {
                 return Err("embed failed: no live shards".into());
             }
-            // split every outstanding range across the live shards
+            // split every outstanding range across the usable shards
             let mut assignments: Vec<(usize, usize, usize)> = Vec::new();
             for &(start, len) in &work {
                 let per = len.div_ceil(live.len());
@@ -206,29 +434,33 @@ impl Router {
                 }
             }
             work.clear();
-            let results: Vec<(usize, usize, usize, Result<ShardReply, TransportError>)> =
+            let results: Vec<(usize, usize, usize, (usize, Result<ShardReply, ShardError>))> =
                 std::thread::scope(|s| {
                     let handles: Vec<_> = assignments
                         .iter()
                         .map(|&(shard, start, len)| {
-                            let transport = &self.transports[shard];
+                            let live = &live;
                             s.spawn(move || {
                                 let req = ShardRequest::Embed {
                                     variant: variant.to_string(),
                                     rows: rows[start..start + len].to_vec(),
                                 };
-                                (shard, start, len, transport.call(&req))
+                                let backup = live
+                                    .iter()
+                                    .copied()
+                                    .find(|&other| other != shard);
+                                (shard, start, len, self.hedged_call(shard, backup, &req))
                             })
                         })
                         .collect();
                     handles.into_iter().map(|h| h.join().expect("scatter thread")).collect()
                 });
-            for (shard, start, len, result) in results {
+            for (shard, start, len, (answered_by, result)) in results {
                 match result {
                     Ok(ShardReply::Embedded { rows: feats }) => {
                         if feats.len() != len {
                             return Err(format!(
-                                "shard {shard} returned {} rows for a {len}-row range",
+                                "shard {answered_by} returned {} rows for a {len}-row range",
                                 feats.len()
                             ));
                         }
@@ -237,15 +469,26 @@ impl Router {
                         }
                     }
                     Ok(ShardReply::Err { message }) => {
-                        // application error: bad input fails identically
-                        // everywhere, so retrying elsewhere is pointless
-                        return Err(format!("shard {shard}: {message}"));
+                        if message.starts_with("frame error") {
+                            // the frame was damaged in flight, not the
+                            // input: the range is retryable elsewhere
+                            suspect.insert(answered_by);
+                            self.metric(|m| m.on_request_retry());
+                            work.push((start, len));
+                        } else {
+                            // application error: bad input fails
+                            // identically everywhere, so retrying
+                            // elsewhere is pointless
+                            return Err(format!("shard {answered_by}: {message}"));
+                        }
                     }
                     Ok(other) => {
-                        return Err(format!("shard {shard}: unexpected reply {other:?}"));
+                        return Err(format!("shard {answered_by}: unexpected reply {other:?}"));
                     }
-                    Err(_) => {
-                        self.mark_dead(shard);
+                    Err(e) => {
+                        self.note_failure(answered_by, &e);
+                        suspect.insert(answered_by);
+                        self.metric(|m| m.on_request_retry());
                         work.push((start, len));
                     }
                 }
@@ -258,9 +501,11 @@ impl Router {
     }
 
     /// Partition `corpus` round-robin by global row id across the live
-    /// shards and stream each partition out in [`BUILD_CHUNK_ROWS`]
-    /// chunks (begin → rows… → commit). The build is all-or-nothing:
-    /// any shard failure fails it.
+    /// shards, replicate each partition onto
+    /// [`RouterConfig::replicas`] rotated homes, and stream every
+    /// home's rows out in [`BUILD_CHUNK_ROWS`] chunks (begin → rows… →
+    /// commit), in ascending global-id order. The build is
+    /// all-or-nothing: any shard failure fails it.
     pub fn build_index(
         &self,
         name: &str,
@@ -271,11 +516,18 @@ impl Router {
         if live.is_empty() {
             return Err("index build failed: no live shards".into());
         }
-        let mut parts: Vec<(Vec<u64>, Vec<Vec<f64>>)> = vec![Default::default(); live.len()];
+        let p = live.len();
+        let replicas = self.config.replicas.clamp(1, p);
+        // per home-slot buffers; gids ascend, so each buffer's id
+        // sequence is strictly increasing (exact-merge invariant)
+        let mut parts: Vec<(Vec<u64>, Vec<Vec<f64>>)> = vec![Default::default(); p];
         for (gid, row) in corpus.iter().enumerate() {
-            let p = gid % live.len();
-            parts[p].0.push(gid as u64);
-            parts[p].1.push(row.clone());
+            let partition = gid % p;
+            for j in 0..replicas {
+                let pos = (partition + j) % p;
+                parts[pos].0.push(gid as u64);
+                parts[pos].1.push(row.clone());
+            }
         }
         let m = spec.m;
         let results: Vec<(usize, Result<(), String>)> = std::thread::scope(|s| {
@@ -283,10 +535,10 @@ impl Router {
                 .iter()
                 .zip(parts)
                 .map(|(&shard, (ids, rows))| {
-                    let transport = &self.transports[shard];
+                    let transport = self.transports[shard].clone();
                     let spec = spec.clone();
                     s.spawn(move || {
-                        (shard, Router::stream_partition(transport, name, spec, ids, rows))
+                        (shard, Router::stream_partition(&transport, name, spec, ids, rows))
                     })
                 })
                 .collect();
@@ -297,21 +549,21 @@ impl Router {
                 return Err(format!("index build failed on shard {shard}: {e}"));
             }
         }
-        self.indexes
-            .lock()
-            .expect("router indexes lock")
-            .insert(name.to_string(), IndexMeta { m, rows: corpus.len(), shards: live });
+        self.indexes.lock().expect("router indexes lock").insert(
+            name.to_string(),
+            IndexMeta { m, rows: corpus.len(), shards: live, replicas },
+        );
         Ok(corpus.len())
     }
 
     fn stream_partition(
-        transport: &dyn ShardTransport,
+        transport: &Arc<dyn ShardTransport>,
         name: &str,
         spec: IndexSpec,
         ids: Vec<u64>,
         rows: Vec<Vec<f64>>,
     ) -> Result<(), String> {
-        let expect_ok = |reply: Result<ShardReply, TransportError>| match reply {
+        let expect_ok = |reply: Result<ShardReply, ShardError>| match reply {
             Ok(ShardReply::Ok) => Ok(()),
             Ok(ShardReply::Err { message }) => Err(message),
             Ok(other) => Err(format!("unexpected reply {other:?}")),
@@ -340,11 +592,12 @@ impl Router {
         }
     }
 
-    /// Scatter a query batch to every live shard holding a partition of
-    /// `name` and merge the per-shard top-k lists into exact global
-    /// top-k (sort by `(hamming, id)`, truncate to `k`). Shards that
-    /// are dead or fail to answer leave their slice out of the merge
-    /// and mark the answer partial.
+    /// Ask every live replica needed to cover all partitions of `name`
+    /// and merge the per-shard top-k lists into exact global top-k
+    /// (sort by `(hamming, id)`, dedup the replica overlap, truncate to
+    /// `k`). Coverage rounds retry failed partitions on their remaining
+    /// homes under the retry budget; the answer is partial only when a
+    /// partition has no answering replica left.
     pub fn index_query_batch(
         &self,
         name: &str,
@@ -361,63 +614,137 @@ impl Router {
         if queries.is_empty() {
             return Ok(ClusterAnswer { hits: Vec::new(), probed_buckets: 0, partial: false });
         }
-        let (callable, skipped): (Vec<usize>, Vec<usize>) = meta
-            .shards
-            .iter()
-            .copied()
-            .partition(|&i| self.alive[i].load(Ordering::SeqCst));
-        let results: Vec<(usize, Result<ShardReply, TransportError>)> =
-            std::thread::scope(|s| {
-                let handles: Vec<_> = callable
-                    .iter()
-                    .map(|&shard| {
-                        let transport = &self.transports[shard];
-                        s.spawn(move || {
-                            let req = ShardRequest::IndexQuery {
-                                name: name.to_string(),
-                                k: k as u32,
-                                queries: queries.to_vec(),
-                            };
-                            (shard, transport.call(&req))
-                        })
-                    })
-                    .collect();
-                handles.into_iter().map(|h| h.join().expect("query thread")).collect()
-            });
-        let mut partial = !skipped.is_empty();
-        let mut probed_total = 0usize;
+        let p = meta.shards.len();
+        let mut uncovered: BTreeSet<usize> = (0..p).collect();
+        // slot positions that failed this request (transport failure or
+        // an app-level error such as a lost partition)
+        let mut failed_pos: HashSet<usize> = HashSet::new();
         let mut merged: Vec<Vec<(u32, u64)>> = vec![Vec::new(); queries.len()];
+        let mut probed_total = 0usize;
         let mut answered = 0usize;
         let mut first_error: Option<String> = None;
-        for (shard, result) in results {
-            match result {
-                Ok(ShardReply::Hits { probed, hits }) => {
-                    if hits.len() != queries.len() {
+        let mut retries_left = self.config.retry_budget;
+        for round in 0..p * meta.replicas + 2 {
+            if uncovered.is_empty() {
+                break;
+            }
+            // target: for each uncovered partition, its first live
+            // untried home; remember one partition per target so the
+            // hedge backup can come from that partition's replica set
+            let mut targets: BTreeMap<usize, usize> = BTreeMap::new();
+            // partitions an already-chosen target would cover if it
+            // answers — greedily skipping them keeps the fan-out near
+            // one probe per partition instead of one per replica
+            let mut prospective: HashSet<usize> = HashSet::new();
+            for &partition in &uncovered {
+                if prospective.contains(&partition) {
+                    continue;
+                }
+                let home = meta.home_positions(partition).find(|&pos| {
+                    !failed_pos.contains(&pos)
+                        && self.alive[meta.shards[pos]].load(Ordering::SeqCst)
+                });
+                if let Some(pos) = home {
+                    targets.entry(pos).or_insert(partition);
+                    prospective.extend(meta.partitions_of(pos));
+                }
+            }
+            if targets.is_empty() {
+                break; // nothing reachable can extend coverage
+            }
+            if round > 0 {
+                // retries beyond the first round draw from the budget
+                if retries_left == 0 {
+                    break;
+                }
+                while targets.len() > retries_left {
+                    targets.pop_last();
+                }
+                retries_left -= targets.len();
+                for _ in 0..targets.len() {
+                    self.metric(|m| m.on_request_retry());
+                }
+            }
+            let calls: Vec<(usize, usize)> = targets.into_iter().collect();
+            let results: Vec<(usize, (usize, Result<ShardReply, ShardError>))> =
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = calls
+                        .iter()
+                        .map(|&(pos, partition)| {
+                            let meta = &meta;
+                            let failed_pos = &failed_pos;
+                            s.spawn(move || {
+                                let req = ShardRequest::IndexQuery {
+                                    name: name.to_string(),
+                                    k: k as u32,
+                                    queries: queries.to_vec(),
+                                };
+                                // backup replica: the partition's next
+                                // live untried home
+                                let backup = meta
+                                    .home_positions(partition)
+                                    .find(|&b| {
+                                        b != pos
+                                            && !failed_pos.contains(&b)
+                                            && self.alive[meta.shards[b]]
+                                                .load(Ordering::SeqCst)
+                                    })
+                                    .map(|b| meta.shards[b]);
+                                (pos, self.hedged_call(meta.shards[pos], backup, &req))
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().expect("query thread")).collect()
+                });
+            for (pos, (answered_by, result)) in results {
+                // the answer may have come from the hedge backup, which
+                // covers its *own* partitions, not the primary's
+                let answered_pos = meta
+                    .shards
+                    .iter()
+                    .position(|&t| t == answered_by)
+                    .unwrap_or(pos);
+                match result {
+                    Ok(ShardReply::Hits { probed, hits }) => {
+                        if hits.len() != queries.len() {
+                            return Err(format!(
+                                "shard {answered_by} answered {} queries of {}",
+                                hits.len(),
+                                queries.len()
+                            ));
+                        }
+                        answered += 1;
+                        probed_total += probed as usize;
+                        for (per_query, shard_hits) in merged.iter_mut().zip(hits) {
+                            per_query
+                                .extend(shard_hits.iter().map(|h: &WireHit| (h.hamming, h.id)));
+                        }
+                        for covered in meta.partitions_of(answered_pos) {
+                            uncovered.remove(&covered);
+                        }
+                    }
+                    Ok(ShardReply::Err { message }) => {
+                        // the shard is alive but its slice is unusable
+                        // (e.g. a restarted process lost its partition,
+                        // or the frame was corrupted in flight): its
+                        // partitions stay uncovered for other replicas
+                        failed_pos.insert(pos);
+                        first_error.get_or_insert(format!("shard {answered_by}: {message}"));
+                    }
+                    Ok(other) => {
                         return Err(format!(
-                            "shard {shard} answered {} queries of {}",
-                            hits.len(),
-                            queries.len()
+                            "shard {answered_by}: unexpected reply {other:?}"
                         ));
                     }
-                    answered += 1;
-                    probed_total += probed as usize;
-                    for (per_query, shard_hits) in merged.iter_mut().zip(hits) {
-                        per_query.extend(shard_hits.iter().map(|h: &WireHit| (h.hamming, h.id)));
+                    Err(e) => {
+                        // hedged_call only fails after every launched
+                        // probe failed; blame the one whose error came
+                        // back and sideline both positions this request
+                        self.note_failure(answered_by, &e);
+                        failed_pos.insert(pos);
+                        failed_pos.insert(answered_pos);
+                        first_error.get_or_insert(format!("shard {answered_by}: {e}"));
                     }
-                }
-                Ok(ShardReply::Err { message }) => {
-                    // the shard is alive but its slice is unusable
-                    // (e.g. a restarted process lost its partition)
-                    partial = true;
-                    first_error.get_or_insert(format!("shard {shard}: {message}"));
-                }
-                Ok(other) => {
-                    return Err(format!("shard {shard}: unexpected reply {other:?}"));
-                }
-                Err(e) => {
-                    self.mark_dead(shard);
-                    partial = true;
-                    first_error.get_or_insert(format!("shard {shard}: {e}"));
                 }
             }
         }
@@ -426,10 +753,17 @@ impl Router {
                 format!("index query failed: no live shards hold '{name}'")
             }));
         }
+        let partial = !uncovered.is_empty();
+        if partial {
+            self.metric(|m| m.on_partial_answer());
+        }
         let hits = merged
             .into_iter()
             .map(|mut pairs| {
                 pairs.sort_unstable();
+                // replicas answer with byte-identical codes, so overlap
+                // shows up as exact (hamming, id) duplicates
+                pairs.dedup();
                 pairs.truncate(k);
                 pairs
                     .into_iter()
@@ -446,12 +780,14 @@ impl Router {
 
     /// Append rows to the cluster index `name`, returning the assigned
     /// global ids in row order. Ids are reserved under the router's
-    /// index lock, then each row routes to
-    /// `shards[gid % shards.len()]` — the same round-robin the build
-    /// used, so per-shard id order stays a strictly increasing
+    /// index lock, then each row fans out to every home of its
+    /// partition — the same rotation the build used, in ascending id
+    /// order, so per-shard id order stays a strictly increasing
     /// subsequence of the global order and merged queries stay exact.
     /// Any shard failure fails the push (the reserved ids become
-    /// harmless gaps — ids are never reused).
+    /// harmless gaps — ids are never reused, and replicas stay
+    /// consistent because a failed push commits nowhere the caller can
+    /// observe as success).
     pub fn index_push(&self, name: &str, rows: &[Vec<f64>]) -> Result<Vec<u64>, String> {
         let (meta, first_gid) = {
             let mut indexes = self.indexes.lock().expect("router indexes lock");
@@ -464,20 +800,23 @@ impl Router {
         if rows.is_empty() {
             return Ok(Vec::new());
         }
+        let p = meta.shards.len();
         let gids: Vec<u64> = (0..rows.len() as u64).map(|i| first_gid + i).collect();
-        // group the batch per owning shard, preserving id order
-        let mut parts: HashMap<usize, (Vec<u64>, Vec<Vec<f64>>)> = HashMap::new();
+        // group the batch per home shard, preserving ascending id order
+        let mut parts: BTreeMap<usize, (Vec<u64>, Vec<Vec<f64>>)> = BTreeMap::new();
         for (gid, row) in gids.iter().zip(rows) {
-            let shard = meta.shards[*gid as usize % meta.shards.len()];
-            let part = parts.entry(shard).or_default();
-            part.0.push(*gid);
-            part.1.push(row.clone());
+            let partition = *gid as usize % p;
+            for pos in meta.home_positions(partition) {
+                let part = parts.entry(meta.shards[pos]).or_default();
+                part.0.push(*gid);
+                part.1.push(row.clone());
+            }
         }
         let results: Vec<(usize, Result<(), String>)> = std::thread::scope(|s| {
             let handles: Vec<_> = parts
                 .into_iter()
                 .map(|(shard, (ids, rows))| {
-                    let transport = &self.transports[shard];
+                    let transport = self.transports[shard].clone();
                     s.spawn(move || {
                         let mut at = 0;
                         while at < ids.len() {
@@ -513,9 +852,10 @@ impl Router {
     }
 
     /// Tombstone rows of the cluster index `name` by global id; returns
-    /// how many were present and live across all shards. Each id routes
-    /// to its owning shard by the build's round-robin. Any shard
-    /// failure fails the delete.
+    /// how many were present and live. Each id fans out to every home
+    /// of its partition; because writes are all-or-nothing, replicas
+    /// agree, and the per-shard removal counts sum to `replicas` times
+    /// the true count. Any shard failure fails the delete.
     pub fn index_delete(&self, name: &str, ids: &[u64]) -> Result<usize, String> {
         let meta = self
             .indexes
@@ -527,18 +867,18 @@ impl Router {
         if ids.is_empty() {
             return Ok(0);
         }
-        let mut parts: HashMap<usize, Vec<u64>> = HashMap::new();
+        let p = meta.shards.len();
+        let mut parts: BTreeMap<usize, Vec<u64>> = BTreeMap::new();
         for &id in ids {
-            parts
-                .entry(meta.shards[id as usize % meta.shards.len()])
-                .or_default()
-                .push(id);
+            for pos in meta.home_positions(id as usize % p) {
+                parts.entry(meta.shards[pos]).or_default().push(id);
+            }
         }
         let results: Vec<(usize, Result<u64, String>)> = std::thread::scope(|s| {
             let handles: Vec<_> = parts
                 .into_iter()
                 .map(|(shard, ids)| {
-                    let transport = &self.transports[shard];
+                    let transport = self.transports[shard].clone();
                     s.spawn(move || {
                         let reply = transport
                             .call(&ShardRequest::IndexDelete { name: name.to_string(), ids });
@@ -561,7 +901,7 @@ impl Router {
                 Err(e) => return Err(format!("index delete failed on shard {shard}: {e}")),
             }
         }
-        Ok(removed as usize)
+        Ok(removed as usize / meta.replicas)
     }
 
     /// Fully compact the cluster index `name` on every holding shard
@@ -579,7 +919,7 @@ impl Router {
                 .shards
                 .iter()
                 .map(|&shard| {
-                    let transport = &self.transports[shard];
+                    let transport = self.transports[shard].clone();
                     s.spawn(move || {
                         let reply = transport
                             .call(&ShardRequest::IndexCompact { name: name.to_string() });
@@ -626,11 +966,13 @@ impl Router {
 /// Spawn a detached liveness monitor that probes all shards every
 /// `interval` until `stop` is set or the router is dropped. Holds only
 /// a weak reference, so it never keeps a cluster alive by itself.
+/// Returns the spawn error instead of panicking when the OS refuses a
+/// thread — callers degrade to serving without background probing.
 pub fn spawn_health_monitor(
     router: &ClusterHandle,
     interval: Duration,
     stop: Arc<std::sync::atomic::AtomicBool>,
-) -> std::thread::JoinHandle<()> {
+) -> std::io::Result<std::thread::JoinHandle<()>> {
     let weak: Weak<Router> = Arc::downgrade(router);
     std::thread::Builder::new()
         .name("strembed-cluster-health".into())
@@ -655,5 +997,4 @@ pub fn spawn_health_monitor(
                 slept += nap;
             }
         })
-        .expect("spawn health monitor")
 }

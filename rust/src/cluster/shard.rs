@@ -177,6 +177,10 @@ impl ShardEngine {
                     &self.metrics.snapshot(),
                 ),
             },
+            // Cancellation bookkeeping lives in the connection layer
+            // (it must race with the in-flight request); by the time a
+            // Cancel reaches the engine there is nothing left to do.
+            ShardRequest::Cancel { .. } => ShardReply::Ok,
         }
     }
 

@@ -16,17 +16,34 @@
 //!   trusted; an `Err` reply with id 0 is attempted and the connection
 //!   is dropped. The listener keeps serving other connections.
 //!
+//! Decoded requests are dispatched to short-lived worker threads so a
+//! slow query cannot head-of-line-block a `Cancel` (or anything else)
+//! arriving behind it on the same connection; replies share one locked
+//! write half so frames never interleave. A request whose relative
+//! deadline already expired by the time a worker picks it up is
+//! refused without touching the engine, and a request named by a
+//! `Cancel` frame is skipped (or its stale reply suppressed) —
+//! best-effort in both directions, since the sender's id pairing drops
+//! late replies anyway.
+//!
 //! Reads poll with a short timeout so a raised stop flag shuts every
 //! connection thread down promptly — which is also how the cluster
 //! tests kill a shard mid-traffic.
 
-use super::frame::{check_len, decode_request, encode_reply, payload_id, ShardReply};
+use super::frame::{
+    check_len, decode_request, encode_reply, payload_id, ShardReply, ShardRequest,
+};
 use super::shard::ShardEngine;
+use std::collections::HashSet;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Ceiling on remembered cancelled request ids per connection; a full
+/// set is cleared wholesale (cancellation is best-effort).
+const MAX_CANCELED_IDS: usize = 1024;
 
 /// Serve `engine` on `addr` until `stop` becomes true. The bound local
 /// address is passed to `on_bound` before the accept loop starts (bind
@@ -112,9 +129,47 @@ fn read_full(
     Ok(ReadOutcome::Full)
 }
 
+/// Serialize one reply frame onto the shared write half.
+fn write_reply(writer: &Mutex<TcpStream>, id: u64, reply: &ShardReply) -> bool {
+    let mut w = writer.lock().expect("shard conn writer lock");
+    w.write_all(&encode_reply(id, reply)).is_ok()
+}
+
+/// Execute one decoded request and write its reply, honouring the
+/// request's relative deadline and any `Cancel` that raced in.
+fn run_request(
+    engine: &ShardEngine,
+    writer: &Mutex<TcpStream>,
+    canceled: &Mutex<HashSet<u64>>,
+    id: u64,
+    deadline_ms: u32,
+    received: Instant,
+    req: ShardRequest,
+) {
+    if canceled.lock().expect("shard cancel lock").remove(&id) {
+        return; // cancelled before execution started
+    }
+    let reply = if deadline_ms > 0
+        && received.elapsed() >= Duration::from_millis(deadline_ms as u64)
+    {
+        ShardReply::Err { message: "deadline expired before execution on shard".into() }
+    } else {
+        engine.handle(req)
+    };
+    if canceled.lock().expect("shard cancel lock").remove(&id) {
+        return; // cancelled mid-execution: suppress the stale reply
+    }
+    let _ = write_reply(writer, id, &reply);
+}
+
 fn handle_conn(engine: Arc<ShardEngine>, mut stream: TcpStream, stop: Arc<AtomicBool>) {
     let _ = stream.set_read_timeout(Some(Duration::from_millis(25)));
     let _ = stream.set_nodelay(true);
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    let canceled: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
     loop {
         let mut header = [0u8; 4];
         match read_full(&mut stream, &mut header, &stop, true) {
@@ -128,7 +183,7 @@ fn handle_conn(engine: Arc<ShardEngine>, mut stream: TcpStream, stop: Arc<Atomic
                 // the declared length is garbage, so the stream position
                 // is unrecoverable — report and drop this connection
                 let reply = ShardReply::Err { message: e.to_string() };
-                let _ = stream.write_all(&encode_reply(0, &reply));
+                let _ = write_reply(&writer, 0, &reply);
                 return;
             }
         };
@@ -137,16 +192,53 @@ fn handle_conn(engine: Arc<ShardEngine>, mut stream: TcpStream, stop: Arc<Atomic
             Ok(ReadOutcome::Full) => {}
             _ => return,
         }
-        let (id, reply) = match decode_request(&payload) {
-            Ok((id, req)) => (id, engine.handle(req)),
-            // framing was intact, so the connection survives a bad body
-            Err(e) => (
-                payload_id(&payload).unwrap_or(0),
-                ShardReply::Err { message: e.to_string() },
-            ),
+        let (id, deadline_ms, req) = match decode_request(&payload) {
+            Ok(parts) => parts,
+            // framing was intact, so the connection survives a bad
+            // body; the ERR is written inline, before the next frame is
+            // even read, so it can never trail a later reply
+            Err(e) => {
+                let id = payload_id(&payload).unwrap_or(0);
+                let reply = ShardReply::Err { message: e.to_string() };
+                if !write_reply(&writer, id, &reply) {
+                    return;
+                }
+                continue;
+            }
         };
-        if stream.write_all(&encode_reply(id, &reply)).is_err() {
-            return;
+        if let ShardRequest::Cancel { target } = req {
+            {
+                let mut c = canceled.lock().expect("shard cancel lock");
+                if c.len() >= MAX_CANCELED_IDS {
+                    c.clear();
+                }
+                c.insert(target);
+            }
+            if !write_reply(&writer, id, &engine.handle(req)) {
+                return;
+            }
+            continue;
+        }
+        let received = Instant::now();
+        let spawn = std::thread::Builder::new()
+            .name(format!("strembed-shard-req-{id}"))
+            .spawn({
+                let engine = engine.clone();
+                let writer = writer.clone();
+                let canceled = canceled.clone();
+                move || run_request(&engine, &writer, &canceled, id, deadline_ms, received, req)
+            });
+        if let Err(_e) = spawn {
+            // no thread to be had: degrade to the old serial behaviour
+            // (the req was moved into the failed closure and comes back)
+            let mut payload_req = None;
+            if let Ok((rid, rdl, r)) = decode_request(&payload) {
+                debug_assert_eq!((rid, rdl), (id, deadline_ms));
+                payload_req = Some(r);
+            }
+            if let Some(r) = payload_req {
+                run_request(&engine, &writer, &canceled, id, deadline_ms, received, r);
+            }
         }
     }
 }

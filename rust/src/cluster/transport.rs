@@ -14,49 +14,107 @@
 //!   broken connection is re-dialed on the next call — which is exactly
 //!   how a restarted shard re-registers with the router.
 //!
-//! A transport failure ([`TransportError`]) means the shard could not
-//! be reached or the connection died mid-call; the router treats it as
-//! shard death. An application failure travels inside a successful
-//! [`ShardReply::Err`] and leaves the connection healthy.
+//! A third wrapper, [`super::fault::FaultyTransport`], injects seeded
+//! faults around any inner transport for chaos testing.
+//!
+//! A transport failure ([`ShardError`]) comes in two flavours the
+//! router treats differently: [`ShardError::Unreachable`] means the
+//! shard could not be reached or the connection died mid-call (the
+//! router fails over and marks the shard dead), while
+//! [`ShardError::Timeout`] means no reply arrived within the request's
+//! deadline — the connection may still be perfectly healthy, so the
+//! transport keeps it, sends a best-effort `Cancel`, and the router
+//! retries elsewhere without declaring shard death. An application
+//! failure travels inside a successful [`ShardReply::Err`] and leaves
+//! the connection healthy.
 
 use super::frame::{
-    decode_reply, encode_request, read_frame, ShardReply, ShardRequest,
+    check_len, decode_reply, encode_request, ShardReply, ShardRequest,
 };
 use super::shard::ShardEngine;
 use std::collections::HashMap;
+use std::io::Read;
 use std::net::{Shutdown, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-/// The shard behind a transport could not be reached, or the connection
-/// died before a reply arrived. The router interprets this as shard
-/// death and fails over.
+/// A transport-level failure: the shard never produced a reply.
 #[derive(Debug, Clone, PartialEq, Eq)]
-pub struct TransportError(pub String);
+pub enum ShardError {
+    /// No reply within the request's deadline. The connection (if any)
+    /// is kept: a late reply is dropped by id pairing and the in-flight
+    /// request is cancelled best-effort. Retryable on a replica.
+    Timeout(String),
+    /// The shard could not be reached, or the connection died before a
+    /// reply arrived. The router interprets this as shard death.
+    Unreachable(String),
+}
 
-impl std::fmt::Display for TransportError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "transport error: {}", self.0)
+/// Historical name for [`ShardError`]; the cluster grew a typed split
+/// between timeouts and dead shards without renaming every signature.
+pub type TransportError = ShardError;
+
+impl ShardError {
+    /// Whether this failure is a deadline expiry rather than shard
+    /// death.
+    pub fn is_timeout(&self) -> bool {
+        matches!(self, ShardError::Timeout(_))
+    }
+
+    /// The human-readable failure description.
+    pub fn message(&self) -> &str {
+        match self {
+            ShardError::Timeout(m) | ShardError::Unreachable(m) => m,
+        }
     }
 }
 
-impl std::error::Error for TransportError {}
+impl std::fmt::Display for ShardError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardError::Timeout(m) => write!(f, "transport timeout: {m}"),
+            ShardError::Unreachable(m) => write!(f, "transport error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ShardError {}
 
 /// Carrier of shard requests. Implementations must be callable from
 /// many router threads at once.
 pub trait ShardTransport: Send + Sync {
-    /// Deliver one request and wait for its reply. `Err` means the
-    /// shard is unreachable (transport-level death); application errors
-    /// arrive as [`ShardReply::Err`] inside `Ok`.
-    fn call(&self, req: &ShardRequest) -> Result<ShardReply, TransportError>;
+    /// Deliver one request and wait for its reply, giving up after
+    /// `deadline` if one is set (a `None` deadline falls back to the
+    /// transport's own default, which may be unbounded for in-process
+    /// transports). `Err` means the shard produced no reply —
+    /// unreachable or timed out; application errors arrive as
+    /// [`ShardReply::Err`] inside `Ok`.
+    fn call_deadline(
+        &self,
+        req: &ShardRequest,
+        deadline: Option<Duration>,
+    ) -> Result<ShardReply, ShardError>;
+
+    /// Deliver one request under the transport's default deadline.
+    fn call(&self, req: &ShardRequest) -> Result<ShardReply, ShardError> {
+        self.call_deadline(req, None)
+    }
 
     /// Human-readable endpoint label for logs and health reports.
     fn describe(&self) -> String;
 }
 
 impl<T: ShardTransport + ?Sized> ShardTransport for Arc<T> {
-    fn call(&self, req: &ShardRequest) -> Result<ShardReply, TransportError> {
+    fn call_deadline(
+        &self,
+        req: &ShardRequest,
+        deadline: Option<Duration>,
+    ) -> Result<ShardReply, ShardError> {
+        (**self).call_deadline(req, deadline)
+    }
+
+    fn call(&self, req: &ShardRequest) -> Result<ShardReply, ShardError> {
         (**self).call(req)
     }
 
@@ -91,9 +149,16 @@ impl LocalTransport {
 }
 
 impl ShardTransport for LocalTransport {
-    fn call(&self, req: &ShardRequest) -> Result<ShardReply, TransportError> {
+    fn call_deadline(
+        &self,
+        req: &ShardRequest,
+        _deadline: Option<Duration>,
+    ) -> Result<ShardReply, ShardError> {
         if self.down.load(Ordering::SeqCst) {
-            return Err(TransportError(format!("shard '{}' is down", self.engine.name())));
+            return Err(ShardError::Unreachable(format!(
+                "shard '{}' is down",
+                self.engine.name()
+            )));
         }
         Ok(self.engine.handle(req.clone()))
     }
@@ -108,8 +173,7 @@ impl ShardTransport for LocalTransport {
 pub struct TcpTransportConfig {
     /// Dial timeout for (re)connecting to the shard.
     pub connect_timeout: Duration,
-    /// How long one call may wait for its reply before the connection
-    /// is declared dead.
+    /// Default per-call deadline when the caller passes none.
     pub call_timeout: Duration,
     /// Maximum requests in flight on the connection at once; further
     /// callers block until a slot frees (backpressure).
@@ -126,7 +190,14 @@ impl Default for TcpTransportConfig {
     }
 }
 
-type ReplySender = mpsc::Sender<Result<ShardReply, TransportError>>;
+type ReplySender = mpsc::Sender<Result<ShardReply, ShardError>>;
+
+struct PendingCall {
+    tx: ReplySender,
+    /// When the reader thread should expire this call with a typed
+    /// timeout even if the caller stopped listening.
+    expires: Instant,
+}
 
 struct ConnState {
     /// Write half of the live connection, if any. The reader thread
@@ -141,14 +212,18 @@ struct Inner {
     addr: String,
     config: TcpTransportConfig,
     state: Mutex<ConnState>,
-    pending: Mutex<HashMap<u64, ReplySender>>,
+    pending: Mutex<HashMap<u64, PendingCall>>,
     next_id: AtomicU64,
     window: Mutex<usize>,
     window_cv: Condvar,
 }
 
 /// Frame-protocol transport to a shard process, with pipelining, a
-/// bounded in-flight window, and reconnect-on-next-call re-admission.
+/// bounded in-flight window, per-request deadlines (a short
+/// `set_read_timeout` tick on the reader keeps pending calls from
+/// outliving their deadline even when the peer is connected but hung),
+/// best-effort cancellation of abandoned calls, and
+/// reconnect-on-next-call re-admission.
 pub struct TcpTransport {
     inner: Arc<Inner>,
 }
@@ -172,15 +247,19 @@ impl TcpTransport {
     }
 
     /// Ensure a live connection exists, dialing if needed, and write
-    /// one frame on it. Returns the generation the frame rode on.
-    fn write_frame(inner: &Arc<Inner>, frame: &[u8]) -> Result<(), TransportError> {
+    /// one frame on it.
+    fn write_frame(inner: &Arc<Inner>, frame: &[u8]) -> Result<(), ShardError> {
         use std::io::Write;
         let mut state = inner.state.lock().expect("transport state lock");
         if state.stream.is_none() {
             let stream = Inner::dial(inner)?;
-            let reader = stream
-                .try_clone()
-                .map_err(|e| TransportError(format!("clone stream to {}: {e}", inner.addr)))?;
+            let reader = stream.try_clone().map_err(|e| {
+                ShardError::Unreachable(format!("clone stream to {}: {e}", inner.addr))
+            })?;
+            // A short read timeout turns the reader into a poller: each
+            // tick it can expire pending calls whose deadline passed,
+            // so a hung-but-connected shard cannot strand callers.
+            let _ = reader.set_read_timeout(Some(Duration::from_millis(50)));
             state.generation += 1;
             let generation = state.generation;
             let spawn = std::thread::Builder::new()
@@ -190,7 +269,10 @@ impl TcpTransport {
                     move || Inner::read_loop(inner, reader, generation)
                 });
             if let Err(e) = spawn {
-                return Err(TransportError(format!("spawn reader for {}: {e}", inner.addr)));
+                return Err(ShardError::Unreachable(format!(
+                    "spawn reader for {}: {e}",
+                    inner.addr
+                )));
             }
             state.stream = Some(stream);
         }
@@ -199,23 +281,113 @@ impl TcpTransport {
             let generation = state.generation;
             drop(state);
             Inner::teardown(inner, generation, &format!("write to {}: {e}", inner.addr));
-            return Err(TransportError(format!("write to {}: {e}", inner.addr)));
+            return Err(ShardError::Unreachable(format!("write to {}: {e}", inner.addr)));
         }
         Ok(())
+    }
+
+    /// Best-effort: tell the shard to drop the abandoned request
+    /// `target`. Only uses an already-live connection — a timeout must
+    /// never trigger a re-dial — and ignores every failure.
+    fn send_cancel(inner: &Arc<Inner>, target: u64) {
+        use std::io::Write;
+        let mut state = inner.state.lock().expect("transport state lock");
+        if let Some(stream) = state.stream.as_mut() {
+            let id = inner.next_id.fetch_add(1, Ordering::Relaxed);
+            let frame = encode_request(id, 0, &ShardRequest::Cancel { target });
+            let _ = stream.write_all(&frame);
+        }
+    }
+}
+
+/// Incremental frame reader that survives read timeouts: partial
+/// header/payload progress is kept across `WouldBlock`/`TimedOut` so a
+/// polling reader never loses bytes mid-frame.
+struct FrameAccum {
+    header: [u8; 4],
+    header_got: usize,
+    payload: Vec<u8>,
+    payload_got: usize,
+}
+
+enum Poll {
+    /// One complete frame payload.
+    Frame(Vec<u8>),
+    /// The read timed out mid-stream; call again.
+    Tick,
+    /// Clean EOF at a frame boundary.
+    Eof,
+}
+
+impl FrameAccum {
+    fn new() -> Self {
+        FrameAccum { header: [0u8; 4], header_got: 0, payload: Vec::new(), payload_got: 0 }
+    }
+
+    fn poll(&mut self, r: &mut impl Read) -> Result<Poll, String> {
+        loop {
+            if self.header_got < 4 {
+                match r.read(&mut self.header[self.header_got..]) {
+                    Ok(0) => {
+                        return if self.header_got == 0 {
+                            Ok(Poll::Eof)
+                        } else {
+                            Err("truncated frame header".into())
+                        };
+                    }
+                    Ok(n) => {
+                        self.header_got += n;
+                        if self.header_got == 4 {
+                            let len = check_len(u32::from_le_bytes(self.header))
+                                .map_err(|e| e.to_string())?;
+                            self.payload = vec![0u8; len];
+                            self.payload_got = 0;
+                        }
+                    }
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock
+                            || e.kind() == std::io::ErrorKind::TimedOut =>
+                    {
+                        return Ok(Poll::Tick);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(format!("read frame header: {e}")),
+                }
+            } else {
+                match r.read(&mut self.payload[self.payload_got..]) {
+                    Ok(0) => return Err("truncated frame payload".into()),
+                    Ok(n) => {
+                        self.payload_got += n;
+                        if self.payload_got == self.payload.len() {
+                            self.header_got = 0;
+                            return Ok(Poll::Frame(std::mem::take(&mut self.payload)));
+                        }
+                    }
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock
+                            || e.kind() == std::io::ErrorKind::TimedOut =>
+                    {
+                        return Ok(Poll::Tick);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(format!("read frame payload: {e}")),
+                }
+            }
+        }
     }
 }
 
 impl Inner {
-    fn dial(inner: &Arc<Inner>) -> Result<TcpStream, TransportError> {
+    fn dial(inner: &Arc<Inner>) -> Result<TcpStream, ShardError> {
         let mut addrs = inner
             .addr
             .to_socket_addrs()
-            .map_err(|e| TransportError(format!("resolve {}: {e}", inner.addr)))?;
+            .map_err(|e| ShardError::Unreachable(format!("resolve {}: {e}", inner.addr)))?;
         let addr = addrs
             .next()
-            .ok_or_else(|| TransportError(format!("no address for {}", inner.addr)))?;
+            .ok_or_else(|| ShardError::Unreachable(format!("no address for {}", inner.addr)))?;
         let stream = TcpStream::connect_timeout(&addr, inner.config.connect_timeout)
-            .map_err(|e| TransportError(format!("connect {}: {e}", inner.addr)))?;
+            .map_err(|e| ShardError::Unreachable(format!("connect {}: {e}", inner.addr)))?;
         let _ = stream.set_nodelay(true);
         Ok(stream)
     }
@@ -235,22 +407,57 @@ impl Inner {
         }
         let senders: Vec<ReplySender> = {
             let mut pending = inner.pending.lock().expect("transport pending lock");
-            pending.drain().map(|(_, tx)| tx).collect()
+            pending.drain().map(|(_, p)| p.tx).collect()
         };
         for tx in senders {
-            let _ = tx.send(Err(TransportError(why.to_string())));
+            let _ = tx.send(Err(ShardError::Unreachable(why.to_string())));
+        }
+    }
+
+    /// Fail every pending call whose deadline has passed with a typed
+    /// timeout, leaving the connection up. Runs on each reader tick.
+    fn expire_pending(inner: &Arc<Inner>) {
+        let now = Instant::now();
+        let expired: Vec<(u64, ReplySender)> = {
+            let mut pending = inner.pending.lock().expect("transport pending lock");
+            let ids: Vec<u64> = pending
+                .iter()
+                .filter(|(_, p)| now >= p.expires)
+                .map(|(&id, _)| id)
+                .collect();
+            ids.into_iter()
+                .filter_map(|id| pending.remove(&id).map(|p| (id, p.tx)))
+                .collect()
+        };
+        for (id, tx) in expired {
+            let _ = tx.send(Err(ShardError::Timeout(format!(
+                "no reply from {} within the request deadline",
+                inner.addr
+            ))));
+            TcpTransport::send_cancel(inner, id);
         }
     }
 
     /// Reader thread: pair incoming reply frames with pending calls by
-    /// request id until the connection dies.
+    /// request id until the connection dies, expiring overdue calls on
+    /// every poll tick.
     fn read_loop(inner: Arc<Inner>, stream: TcpStream, generation: u64) {
-        let mut reader = std::io::BufReader::new(stream);
+        let mut stream = stream;
+        let mut accum = FrameAccum::new();
         loop {
-            match read_frame(&mut reader) {
-                Ok(Some(payload)) => match decode_reply(&payload) {
+            // exit promptly once a newer connection has replaced ours
+            if inner.state.lock().expect("transport state lock").generation != generation {
+                return;
+            }
+            match accum.poll(&mut stream) {
+                Ok(Poll::Frame(payload)) => match decode_reply(&payload) {
                     Ok((id, reply)) => {
-                        let tx = inner.pending.lock().expect("transport pending lock").remove(&id);
+                        let tx = inner
+                            .pending
+                            .lock()
+                            .expect("transport pending lock")
+                            .remove(&id)
+                            .map(|p| p.tx);
                         if let Some(tx) = tx {
                             let _ = tx.send(Ok(reply));
                         }
@@ -260,7 +467,8 @@ impl Inner {
                         return;
                     }
                 },
-                Ok(None) => {
+                Ok(Poll::Tick) => Inner::expire_pending(&inner),
+                Ok(Poll::Eof) => {
                     Inner::teardown(&inner, generation, "connection closed by shard");
                     return;
                 }
@@ -289,32 +497,47 @@ impl Inner {
 }
 
 impl ShardTransport for TcpTransport {
-    fn call(&self, req: &ShardRequest) -> Result<ShardReply, TransportError> {
+    fn call_deadline(
+        &self,
+        req: &ShardRequest,
+        deadline: Option<Duration>,
+    ) -> Result<ShardReply, ShardError> {
         let inner = &self.inner;
+        let timeout = deadline.unwrap_or(inner.config.call_timeout);
+        let deadline_ms = timeout.as_millis().min(u32::MAX as u128) as u32;
         inner.acquire_window();
         let result = (|| {
             let id = inner.next_id.fetch_add(1, Ordering::Relaxed);
             let (tx, rx) = mpsc::channel();
-            inner.pending.lock().expect("transport pending lock").insert(id, tx);
-            let frame = encode_request(id, req);
+            inner
+                .pending
+                .lock()
+                .expect("transport pending lock")
+                .insert(id, PendingCall { tx, expires: Instant::now() + timeout });
+            let frame = encode_request(id, deadline_ms, req);
             if let Err(e) = TcpTransport::write_frame(inner, &frame) {
                 inner.pending.lock().expect("transport pending lock").remove(&id);
                 return Err(e);
             }
-            match rx.recv_timeout(inner.config.call_timeout) {
+            match rx.recv_timeout(timeout) {
                 Ok(reply) => reply,
                 Err(_) => {
-                    inner.pending.lock().expect("transport pending lock").remove(&id);
-                    let generation =
-                        inner.state.lock().expect("transport state lock").generation;
-                    Inner::teardown(
-                        inner,
-                        generation,
-                        &format!("call to {} timed out", inner.addr),
-                    );
-                    Err(TransportError(format!(
+                    // Deadline expiry is NOT shard death: keep the
+                    // connection (a pipelined neighbour may be fine),
+                    // drop our pending slot so the late reply is
+                    // ignored, and tell the shard to abandon the work.
+                    let was_pending = inner
+                        .pending
+                        .lock()
+                        .expect("transport pending lock")
+                        .remove(&id)
+                        .is_some();
+                    if was_pending {
+                        TcpTransport::send_cancel(inner, id);
+                    }
+                    Err(ShardError::Timeout(format!(
                         "no reply from {} within {:?}",
-                        inner.addr, inner.config.call_timeout
+                        inner.addr, timeout
                     )))
                 }
             }

@@ -42,6 +42,17 @@ pub struct Metrics {
     index_tombstones: AtomicU64,
     /// gauge: lifetime segment merges across all mutable indexes
     index_compactions: AtomicU64,
+    /// cluster: backup probes launched after the hedging delay
+    hedged_requests: AtomicU64,
+    /// cluster: probes retried on another shard/replica
+    request_retries: AtomicU64,
+    /// cluster: health-probe rounds where a probe thread failed to
+    /// spawn (the shard kept its previous liveness)
+    health_probe_errors: AtomicU64,
+    /// cluster: dead shards re-admitted by a successful health probe
+    shard_readmissions: AtomicU64,
+    /// cluster: merged answers that lost at least one partition
+    partial_answers: AtomicU64,
 }
 
 #[derive(Debug, Default, Clone, Copy)]
@@ -104,6 +115,16 @@ pub struct MetricsSnapshot {
     pub index_tombstones: u64,
     /// lifetime segment merges across all mutable indexes (gauge)
     pub index_compactions: u64,
+    /// cluster hedged (backup) probes launched
+    pub hedged_requests: u64,
+    /// cluster probes retried on another shard/replica
+    pub request_retries: u64,
+    /// health-probe threads that could not be spawned
+    pub health_probe_errors: u64,
+    /// dead shards re-admitted by a health probe
+    pub shard_readmissions: u64,
+    /// merged cluster answers that lost at least one partition
+    pub partial_answers: u64,
 }
 
 const RESERVOIR: usize = 100_000;
@@ -132,6 +153,11 @@ impl Metrics {
             index_live_docs: AtomicU64::new(0),
             index_tombstones: AtomicU64::new(0),
             index_compactions: AtomicU64::new(0),
+            hedged_requests: AtomicU64::new(0),
+            request_retries: AtomicU64::new(0),
+            health_probe_errors: AtomicU64::new(0),
+            shard_readmissions: AtomicU64::new(0),
+            partial_answers: AtomicU64::new(0),
         }
     }
 
@@ -215,6 +241,32 @@ impl Metrics {
         self.index_compactions.store(compactions, Ordering::Relaxed);
     }
 
+    /// Record a hedged (backup) probe launched against a replica.
+    pub fn on_hedged_request(&self) {
+        self.hedged_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a probe retried on another shard or replica.
+    pub fn on_request_retry(&self) {
+        self.request_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a health-probe thread that could not be spawned (the
+    /// shard keeps its previous liveness for that round).
+    pub fn on_health_probe_error(&self) {
+        self.health_probe_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a dead shard re-admitted by a successful health probe.
+    pub fn on_shard_readmission(&self) {
+        self.shard_readmissions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a merged cluster answer that lost at least one partition.
+    pub fn on_partial_answer(&self) {
+        self.partial_answers.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Take a snapshot.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let lat = self.latencies.lock().unwrap().clone();
@@ -263,6 +315,11 @@ impl Metrics {
             index_live_docs: self.index_live_docs.load(Ordering::Relaxed),
             index_tombstones: self.index_tombstones.load(Ordering::Relaxed),
             index_compactions: self.index_compactions.load(Ordering::Relaxed),
+            hedged_requests: self.hedged_requests.load(Ordering::Relaxed),
+            request_retries: self.request_retries.load(Ordering::Relaxed),
+            health_probe_errors: self.health_probe_errors.load(Ordering::Relaxed),
+            shard_readmissions: self.shard_readmissions.load(Ordering::Relaxed),
+            partial_answers: self.partial_answers.load(Ordering::Relaxed),
         }
     }
 }
@@ -298,7 +355,8 @@ impl std::fmt::Display for MetricsSnapshot {
              index_builds={} index_queries={} index_mean_probed={:.1} \
              index_ns_per_query={:.0} index_pushes={} index_deletes={} \
              index_segments={} index_live_docs={} index_tombstones={} \
-             index_compactions={}",
+             index_compactions={} hedged_requests={} request_retries={} \
+             health_probe_errors={} shard_readmissions={} partial_answers={}",
             self.uptime,
             self.submitted,
             self.completed,
@@ -322,7 +380,12 @@ impl std::fmt::Display for MetricsSnapshot {
             self.index_segments,
             self.index_live_docs,
             self.index_tombstones,
-            self.index_compactions
+            self.index_compactions,
+            self.hedged_requests,
+            self.request_retries,
+            self.health_probe_errors,
+            self.shard_readmissions,
+            self.partial_answers
         )
     }
 }
@@ -396,6 +459,27 @@ mod tests {
         let text = format!("{s}");
         assert!(text.contains("index_live_docs=113"), "{text}");
         assert!(text.contains("index_compactions=3"), "{text}");
+    }
+
+    #[test]
+    fn cluster_robustness_counters_accumulate_and_format() {
+        let m = Metrics::new();
+        m.on_hedged_request();
+        m.on_request_retry();
+        m.on_request_retry();
+        m.on_health_probe_error();
+        m.on_shard_readmission();
+        m.on_partial_answer();
+        let s = m.snapshot();
+        assert_eq!(s.hedged_requests, 1);
+        assert_eq!(s.request_retries, 2);
+        assert_eq!(s.health_probe_errors, 1);
+        assert_eq!(s.shard_readmissions, 1);
+        assert_eq!(s.partial_answers, 1);
+        let text = format!("{s}");
+        assert!(text.contains("hedged_requests=1"), "{text}");
+        assert!(text.contains("request_retries=2"), "{text}");
+        assert!(text.contains("partial_answers=1"), "{text}");
     }
 
     #[test]

@@ -148,6 +148,11 @@ impl Coordinator {
         cluster: Option<crate::cluster::ClusterHandle>,
     ) -> anyhow::Result<Coordinator> {
         let metrics = Arc::new(Metrics::new());
+        if let Some(router) = &cluster {
+            // the router's hedge/retry/probe/partial counters land in
+            // the same snapshot the HEALTH line reports
+            router.attach_metrics(metrics.clone());
+        }
         let mut variants = HashMap::new();
         let mut workers = Vec::new();
         for (name, spec) in specs {

@@ -268,7 +268,8 @@ fn shard_death_fails_embed_over_and_marks_queries_partial() {
     // re-registration: the shard answers HEALTH again and is re-admitted
     handles[2].set_down(false);
     let stop = Arc::new(AtomicBool::new(false));
-    let monitor = spawn_health_monitor(&router, Duration::from_millis(25), stop.clone());
+    let monitor = spawn_health_monitor(&router, Duration::from_millis(25), stop.clone())
+        .expect("spawn monitor");
     let deadline = std::time::Instant::now() + Duration::from_secs(5);
     while router.live_count() < 4 && std::time::Instant::now() < deadline {
         std::thread::sleep(Duration::from_millis(10));
@@ -437,7 +438,7 @@ fn shard_server_rejects_broken_frames_and_outlives_bad_clients() {
         bad.push(250); // unknown opcode
         bad.extend_from_slice(&[1, 2, 3, 4]);
         conn.write_all(&bad).expect("write malformed request");
-        conn.write_all(&encode_request(8, &ShardRequest::Health)).expect("write health");
+        conn.write_all(&encode_request(8, 0, &ShardRequest::Health)).expect("write health");
         let payload = read_frame(&mut conn).expect("err frame").expect("err reply");
         let (id, reply) = decode_reply(&payload).expect("decode");
         assert_eq!(id, 7, "the request id is salvaged from a malformed body");

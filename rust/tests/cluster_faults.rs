@@ -1,0 +1,474 @@
+//! Chaos tests for the replicated serving tier: seeded fault-injection
+//! sweeps asserting the cluster's exact-answer contract — merged index
+//! answers are bit-identical to a healthy single node whenever a live
+//! replica covers every partition, `partial: true` exactly when one
+//! doesn't, and the whole fault schedule replays identically from the
+//! same seed.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+use strembed::cluster::{
+    ClusterHandle, FaultCounts, FaultPlan, FaultyTransport, LocalTransport, Router, RouterConfig,
+    ShardEngine, ShardRequest, ShardTransport,
+};
+use strembed::coordinator::{BackendSpec, IndexSpec, Precision};
+use strembed::data::synthetic::clustered_rows;
+use strembed::pmodel::StructureKind;
+use strembed::rng::Rng;
+
+const N: usize = 16;
+
+/// The variant set hosted on every shard (mirrors `tests/cluster.rs`;
+/// integration tests cannot share modules).
+fn shard_specs() -> Vec<(String, BackendSpec)> {
+    let spec = BackendSpec::native("circulant", "sign", 8, N, 1)
+        .expect("native spec")
+        .with_precision(Precision::F64)
+        .with_workers(2);
+    vec![("circ-sign".to_string(), spec)]
+}
+
+fn index_spec() -> IndexSpec {
+    IndexSpec::new(StructureKind::Circulant, 64, N).with_seed(7).with_workers(2)
+}
+
+fn id_hamming(hits: &[strembed::coordinator::SearchHit]) -> Vec<(usize, u32)> {
+    hits.iter().map(|h| (h.id, h.hamming)).collect()
+}
+
+/// A same-process cluster with explicit fault-tolerance config,
+/// returning the transport handles so tests can flip the
+/// simulated-death switch.
+fn local_cluster(
+    n: usize,
+    config: RouterConfig,
+) -> (ClusterHandle, Vec<Arc<LocalTransport>>) {
+    let mut handles = Vec::new();
+    let mut transports: Vec<Box<dyn ShardTransport>> = Vec::new();
+    for i in 0..n {
+        let engine =
+            ShardEngine::new(&format!("shard{i}"), shard_specs()).expect("shard engine");
+        let t = Arc::new(LocalTransport::new(Arc::new(engine)));
+        handles.push(t.clone());
+        transports.push(Box::new(t));
+    }
+    (Router::handle_with_config(transports, config).expect("router"), handles)
+}
+
+/// A cluster whose every transport is wrapped in a seeded
+/// [`FaultyTransport`] (injection starts *disabled* so builds run
+/// clean).
+fn faulty_cluster(
+    n: usize,
+    config: RouterConfig,
+    plan: &FaultPlan,
+) -> (ClusterHandle, Vec<Arc<FaultyTransport>>) {
+    let mut faulty = Vec::new();
+    let mut transports: Vec<Box<dyn ShardTransport>> = Vec::new();
+    for i in 0..n {
+        let engine =
+            ShardEngine::new(&format!("chaos{i}"), shard_specs()).expect("shard engine");
+        let inner: Arc<dyn ShardTransport> =
+            Arc::new(LocalTransport::new(Arc::new(engine)));
+        let f = Arc::new(FaultyTransport::new(inner, plan.clone(), i as u64));
+        f.set_enabled(false);
+        faulty.push(f.clone());
+        transports.push(Box::new(f));
+    }
+    (Router::handle_with_config(transports, config).expect("router"), faulty)
+}
+
+/// `covered[p]` = some home of partition `p` is outside the kill set.
+fn coverage(p: usize, replicas: usize, dead: &HashSet<usize>) -> Vec<bool> {
+    let r = replicas.clamp(1, p);
+    (0..p).map(|part| (0..r).any(|j| !dead.contains(&((part + j) % p)))).collect()
+}
+
+/// Structured kill subsets for a `p`-shard cluster: every singleton and
+/// every consecutive pair (the pair that defeats R=2 rotation), never
+/// the whole cluster.
+fn kill_sets(p: usize) -> Vec<Vec<usize>> {
+    let mut sets: Vec<Vec<usize>> = (0..p).map(|s| vec![s]).collect();
+    if p > 2 {
+        sets.extend((0..p).map(|s| vec![s, (s + 1) % p]));
+    }
+    sets
+}
+
+/// The kill-subset sweep of the issue: shards {2,4,7} × replicas
+/// {1,2,3}. For every structured kill set the answer must equal the
+/// single-node top-k restricted to the partitions that still have a
+/// live home — which *is* the full single-node answer when every
+/// partition is covered — and `partial` must be true exactly when some
+/// partition lost all its homes.
+#[test]
+fn kill_subset_sweep_is_exact_over_surviving_partitions() {
+    let mut rng = Rng::new(41);
+    let corpus = clustered_rows(120, N, &mut rng);
+    let mut queries = vec![corpus[3].clone(), corpus[77].clone()];
+    queries.extend(clustered_rows(3, N, &mut rng));
+    let reference =
+        strembed::index::IndexHandle::build(index_spec(), &corpus).expect("reference");
+    // the reference ranking over the *whole* corpus, already in the
+    // cluster's (hamming, id) merge order
+    let (full, _) = reference.query_batch(&queries, corpus.len()).expect("full reference");
+
+    for shards in [2usize, 4, 7] {
+        for replicas in [1usize, 2, 3] {
+            let config = RouterConfig { replicas, ..RouterConfig::default() };
+            let (router, handles) = local_cluster(shards, config);
+            router.build_index("tnn", index_spec(), &corpus).expect("cluster build");
+            for kill in kill_sets(shards) {
+                let dead: HashSet<usize> = kill.iter().copied().collect();
+                for &s in &kill {
+                    handles[s].set_down(true);
+                }
+                let covered = coverage(shards, replicas, &dead);
+                for k in [1usize, 5] {
+                    let ans = router
+                        .index_query_batch("tnn", &queries, k)
+                        .expect("a live replica remains; the query must answer");
+                    assert_eq!(
+                        ans.partial,
+                        covered.iter().any(|c| !c),
+                        "partial flag wrong for kill={kill:?} at {shards} shards r={replicas}"
+                    );
+                    let expect: Vec<Vec<(usize, u32)>> = full
+                        .iter()
+                        .map(|hits| {
+                            hits.iter()
+                                .filter(|h| covered[h.id % shards])
+                                .take(k)
+                                .map(|h| (h.id, h.hamming))
+                                .collect()
+                        })
+                        .collect();
+                    let got: Vec<Vec<(usize, u32)>> =
+                        ans.hits.iter().map(|h| id_hamming(h)).collect();
+                    assert_eq!(
+                        got, expect,
+                        "kill={kill:?} k={k} at {shards} shards r={replicas}"
+                    );
+                }
+                // revive and re-admit before the next kill set
+                for &s in &kill {
+                    handles[s].set_down(false);
+                }
+                router.probe();
+                assert_eq!(router.live_count(), shards, "revived shards re-admitted");
+            }
+        }
+    }
+}
+
+/// The issue's acceptance scenario: a 4-shard cluster at `--replicas 2`
+/// runs the full mutable lifecycle (build → push → delete → compact),
+/// then loses each single shard mid-query-stream — and every answer
+/// stays complete (`partial == false`) and bit-identical to one node.
+#[test]
+fn killing_any_single_shard_with_two_replicas_keeps_answers_complete() {
+    let mut rng = Rng::new(53);
+    let built = clustered_rows(40, N, &mut rng);
+    let pushed = clustered_rows(21, N, &mut rng);
+    let deletes: Vec<u64> = vec![2, 13, 45, 45, 57, 999];
+    let solo = strembed::index::MutableIndex::build(index_spec(), &built).expect("solo build");
+    solo.push_rows(&pushed).expect("solo push");
+    solo.delete_batch(&deletes);
+    let mut queries = vec![built[11].clone(), pushed[4].clone(), built[2].clone()];
+    queries.extend(clustered_rows(2, N, &mut rng));
+    let (want, _) = solo.query_batch(&queries, 9).expect("solo query");
+
+    let config = RouterConfig { replicas: 2, ..RouterConfig::default() };
+    let (router, handles) = local_cluster(4, config);
+    router.build_index("tnn", index_spec(), &built).expect("cluster build");
+    // writes fan to both homes but global ids and delete counts must
+    // read exactly as on one node
+    let ids = router.index_push("tnn", &pushed).expect("cluster push");
+    assert_eq!(ids, (40..61u64).collect::<Vec<_>>());
+    assert_eq!(router.index_delete("tnn", &deletes).expect("cluster delete"), 4);
+    router.index_compact("tnn").expect("cluster compact");
+
+    for victim in 0..4usize {
+        // mid-stream: one healthy answer, then the shard dies between
+        // two queries of the same stream
+        let healthy = router.index_query_batch("tnn", &queries, 9).expect("healthy query");
+        assert!(!healthy.partial);
+        handles[victim].set_down(true);
+        let ans = router.index_query_batch("tnn", &queries, 9).expect("degraded query");
+        assert!(
+            !ans.partial,
+            "r=2 must cover the loss of shard {victim} completely"
+        );
+        for (got, want) in ans.hits.iter().zip(&want) {
+            assert_eq!(
+                id_hamming(got),
+                id_hamming(want),
+                "answer diverged from single node after killing shard {victim}"
+            );
+        }
+        handles[victim].set_down(false);
+        router.probe();
+        assert_eq!(router.live_count(), 4);
+    }
+}
+
+type StormOutcome = Result<(bool, Vec<Vec<(usize, u32)>>), String>;
+
+/// One seeded query storm against a fault-wrapped cluster: clean
+/// replicated build, faults on, then repeated probe + query batches.
+/// Returns every outcome and the per-shard fault counts.
+fn run_storm(
+    shards: usize,
+    replicas: usize,
+    seed: u64,
+    corpus: &[Vec<f64>],
+    queries: &[Vec<f64>],
+    k: usize,
+) -> (Vec<StormOutcome>, Vec<FaultCounts>) {
+    let plan = FaultPlan {
+        seed,
+        disconnect_prob: 0.05,
+        drop_prob: 0.10,
+        delay_prob: 0.15,
+        max_delay: Duration::from_millis(8),
+        corrupt_prob: 0.10,
+    };
+    let config = RouterConfig {
+        replicas,
+        hedge_after: None, // hedging races wall-clock; determinism tests keep it off
+        retry_budget: 16,
+        deadline: Some(Duration::from_millis(4)),
+    };
+    let (router, faulty) = faulty_cluster(shards, config, &plan);
+    router.build_index("tnn", index_spec(), corpus).expect("clean build");
+    for f in &faulty {
+        f.set_enabled(true);
+    }
+    let mut outcomes = Vec::new();
+    for _batch in 0..6 {
+        // the probe both re-admits disconnected shards and exercises
+        // HEALTH frames under fault weather
+        router.probe();
+        let out = router.index_query_batch("tnn", queries, k).map(|ans| {
+            (ans.partial, ans.hits.iter().map(|h| id_hamming(h)).collect::<Vec<_>>())
+        });
+        outcomes.push(out);
+    }
+    let counts = faulty.iter().map(|f| f.counts()).collect();
+    drop(router);
+    (outcomes, counts)
+}
+
+/// Seeded chaos sweep at shards {2,4,7} × replicas {1,2,3}: every
+/// complete answer is bit-identical to the single-node reference, every
+/// partial answer is a subset of the reference ranking, and the entire
+/// storm — outcomes and per-shard fault counts — replays identically
+/// from the same seed.
+#[test]
+fn seeded_chaos_storm_is_deterministic_and_exact_when_complete() {
+    let mut rng = Rng::new(61);
+    let corpus = clustered_rows(120, N, &mut rng);
+    let mut queries = vec![corpus[9].clone(), corpus[100].clone()];
+    queries.extend(clustered_rows(2, N, &mut rng));
+    let k = 7;
+    let reference =
+        strembed::index::IndexHandle::build(index_spec(), &corpus).expect("reference");
+    let (want, _) = reference.query_batch(&queries, k).expect("reference query");
+    let want_pairs: Vec<Vec<(usize, u32)>> = want.iter().map(|h| id_hamming(h)).collect();
+    let (full, _) = reference.query_batch(&queries, corpus.len()).expect("full reference");
+    let full_sets: Vec<HashSet<(usize, u32)>> =
+        full.iter().map(|h| id_hamming(h).into_iter().collect()).collect();
+
+    for shards in [2usize, 4, 7] {
+        for replicas in [1usize, 2, 3] {
+            let seed = 0xC0FFEE ^ (shards as u64 * 31 + replicas as u64);
+            let (outcomes, counts) = run_storm(shards, replicas, seed, &corpus, &queries, k);
+            let mut injected = 0u64;
+            for c in &counts {
+                injected += c.total();
+            }
+            assert!(injected > 0, "the storm must actually inject faults");
+            for (batch, out) in outcomes.iter().enumerate() {
+                let Ok((partial, lists)) = out else {
+                    continue; // every launched probe failed: allowed, replayed below
+                };
+                if *partial {
+                    // partial answers still only ever contain true
+                    // (id, hamming) pairs from the real corpus
+                    for (list, full) in lists.iter().zip(&full_sets) {
+                        for pair in list {
+                            assert!(
+                                full.contains(pair),
+                                "fabricated hit {pair:?} in batch {batch} \
+                                 ({shards} shards r={replicas})"
+                            );
+                        }
+                    }
+                } else {
+                    assert_eq!(
+                        lists, &want_pairs,
+                        "complete answer diverged in batch {batch} \
+                         ({shards} shards r={replicas})"
+                    );
+                }
+            }
+            // replay: an identical cluster under the same seed sees the
+            // exact same faults and produces the exact same outcomes
+            let (replay, replay_counts) =
+                run_storm(shards, replicas, seed, &corpus, &queries, k);
+            assert_eq!(outcomes, replay, "{shards} shards r={replicas} did not replay");
+            assert_eq!(counts, replay_counts, "fault schedule drifted across replays");
+        }
+    }
+}
+
+/// Embed scatter under transient faults (drops only: timeouts never
+/// mark a shard dead) must fail over and stay bit-identical to a
+/// single node.
+#[test]
+fn embed_storm_under_transient_faults_stays_bit_identical() {
+    let mut rng = Rng::new(23);
+    let rows: Vec<Vec<f32>> = clustered_rows(23, N, &mut rng)
+        .iter()
+        .map(|r| r.iter().map(|&v| v as f32).collect())
+        .collect();
+    let solo = ShardEngine::new("solo", shard_specs()).expect("solo engine");
+    let reply = solo.handle(ShardRequest::Embed {
+        variant: "circ-sign".to_string(),
+        rows: rows.clone(),
+    });
+    let strembed::cluster::ShardReply::Embedded { rows: want } = reply else {
+        panic!("solo embed failed");
+    };
+
+    let plan = FaultPlan {
+        seed: 77,
+        drop_prob: 0.3,
+        ..FaultPlan::default()
+    };
+    let (router, faulty) = faulty_cluster(4, RouterConfig::default(), &plan);
+    for f in &faulty {
+        f.set_enabled(true);
+    }
+    let mut succeeded = false;
+    for _attempt in 0..5 {
+        match router.embed_batch("circ-sign", &rows) {
+            Ok(got) => {
+                assert_eq!(got, want, "embed failover changed the output");
+                succeeded = true;
+                break;
+            }
+            Err(_) => continue, // retry budget exhausted this attempt; rare but legal
+        }
+    }
+    assert!(succeeded, "five embed attempts all failed under mild transient faults");
+    let drops: u64 = faulty.iter().map(|f| f.counts().drops).sum();
+    assert!(drops > 0, "the fault plan must actually drop calls");
+    assert_eq!(router.live_count(), 4, "timeouts must never mark shards dead");
+}
+
+/// Write-path faults: a push into a replicated index under injected
+/// disconnects fails with a deterministic error, burns its reserved
+/// ids as a gap, and the next clean push lands findably.
+#[test]
+fn write_faults_fail_pushes_deterministically_and_burn_id_gaps() {
+    let mut rng = Rng::new(67);
+    let built = clustered_rows(40, N, &mut rng);
+    let pushed = clustered_rows(6, N, &mut rng);
+
+    let mut errors = Vec::new();
+    let mut all_counts = Vec::new();
+    for _run in 0..2 {
+        let plan = FaultPlan { seed: 99, disconnect_prob: 1.0, ..FaultPlan::default() };
+        let config = RouterConfig { replicas: 2, ..RouterConfig::default() };
+        let (router, faulty) = faulty_cluster(4, config, &plan);
+        router.build_index("tnn", index_spec(), &built).expect("clean build");
+        for f in &faulty {
+            f.set_enabled(true);
+        }
+        let err = router.index_push("tnn", &pushed).expect_err("every call disconnects");
+        assert!(err.contains("injected disconnect"), "unexpected error: {err}");
+        errors.push(err);
+        all_counts.push(faulty.iter().map(|f| f.counts()).collect::<Vec<_>>());
+
+        // nothing was applied anywhere, but the reserved ids are burned:
+        // the next clean push starts after the gap and stays queryable
+        for f in &faulty {
+            f.set_enabled(false);
+        }
+        router.probe();
+        let ids = router.index_push("tnn", &pushed).expect("clean push");
+        assert_eq!(ids, (46..52u64).collect::<Vec<_>>(), "failed push must leave an id gap");
+        let ans = router.index_query_batch("tnn", &[pushed[0].clone()], 5).expect("query");
+        assert!(!ans.partial);
+        assert!(
+            id_hamming(&ans.hits[0]).contains(&(46usize, 0u32)),
+            "pushed row not findable under its post-gap id"
+        );
+    }
+    assert_eq!(errors[0], errors[1], "write-fault error must be deterministic per seed");
+    assert_eq!(all_counts[0], all_counts[1], "fault counts must replay per seed");
+}
+
+/// The fault schedule is a pure function of `(seed, shard index, call
+/// count)`: same stream replays identically, different shard index or
+/// seed diverges, and a disabled stretch consumes nothing.
+#[test]
+fn fault_schedule_is_pure_function_of_seed_and_shard_index() {
+    let outcomes = |plan: &FaultPlan, shard_index: u64, calls: usize| -> Vec<String> {
+        let engine = ShardEngine::new("unit", shard_specs()).expect("engine");
+        let inner: Arc<dyn ShardTransport> = Arc::new(LocalTransport::new(Arc::new(engine)));
+        let f = FaultyTransport::new(inner, plan.clone(), shard_index);
+        (0..calls)
+            .map(|_| match f.call(&ShardRequest::Health) {
+                Ok(_) => "ok".to_string(),
+                Err(e) => e.to_string(),
+            })
+            .collect()
+    };
+    let plan = FaultPlan {
+        seed: 4242,
+        disconnect_prob: 0.2,
+        drop_prob: 0.2,
+        corrupt_prob: 0.2,
+        ..FaultPlan::default()
+    };
+    let a = outcomes(&plan, 0, 120);
+    assert_eq!(a, outcomes(&plan, 0, 120), "same (seed, shard) must replay");
+    assert_ne!(a, outcomes(&plan, 1, 120), "shard streams must be independent");
+    let reseeded = FaultPlan { seed: 4243, ..plan.clone() };
+    assert_ne!(a, outcomes(&reseeded, 0, 120), "seed must steer the schedule");
+    assert!(a.iter().any(|o| o != "ok"), "the plan must inject something");
+
+    // a disabled stretch is pure pass-through: no faults, no rng draws
+    let engine = ShardEngine::new("unit2", shard_specs()).expect("engine");
+    let inner: Arc<dyn ShardTransport> = Arc::new(LocalTransport::new(Arc::new(engine)));
+    let f = FaultyTransport::new(inner, plan.clone(), 0);
+    let first: Vec<String> = (0..10)
+        .map(|_| match f.call(&ShardRequest::Health) {
+            Ok(_) => "ok".to_string(),
+            Err(e) => e.to_string(),
+        })
+        .collect();
+    assert_eq!(first, a[..10], "prefix must match the reference stream");
+    f.set_enabled(false);
+    let before = f.counts();
+    for _ in 0..50 {
+        let _ = f.call(&ShardRequest::Health);
+    }
+    assert_eq!(f.counts(), before, "disabled transport must inject nothing");
+    f.set_enabled(true);
+    let resumed: Vec<String> = (0..10)
+        .map(|_| match f.call(&ShardRequest::Health) {
+            Ok(_) => "ok".to_string(),
+            Err(e) => e.to_string(),
+        })
+        .collect();
+    assert_eq!(
+        resumed,
+        a[10..20],
+        "a disabled stretch must not advance the fault stream"
+    );
+}

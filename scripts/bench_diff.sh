@@ -21,6 +21,14 @@
 #                                          inproc_ns_per_row
 #                 (kind=search, shards,
 #                  corpus)              -> merged_search_ns_per_query
+#   cluster_faults[]:
+#                 (kind=hedge, shards,
+#                  replicas)            -> unhedged_p50_ns, hedged_p50_ns
+#                                          (p99s are reported but not
+#                                          diffed: single-run tails are
+#                                          too noisy to gate on)
+#                 (kind=write_amp,
+#                  shards, replicas)    -> push_ns_per_row
 #
 # THRESHOLD_PCT defaults to 10 (also overridable via the
 # BENCH_DIFF_THRESHOLD environment variable). Entries present only in
@@ -84,6 +92,14 @@ def tracked(report):
         elif r.get("kind") == "search":
             key = f"cluster/shards{r['shards']}/corpus{r['corpus']}"
             out[f"{key}/merged_search"] = float(r["merged_search_ns_per_query"])
+    for r in report.get("cluster_faults", []):
+        key = f"cluster_faults/shards{r['shards']}/replicas{r['replicas']}"
+        if r.get("kind") == "hedge":
+            # p50 only: single-run p99 tails are too noisy to gate on
+            out[f"{key}/unhedged_p50"] = float(r["unhedged_p50_ns"])
+            out[f"{key}/hedged_p50"] = float(r["hedged_p50_ns"])
+        elif r.get("kind") == "write_amp":
+            out[f"{key}/push"] = float(r["push_ns_per_row"])
     return out
 
 

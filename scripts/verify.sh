@@ -24,6 +24,14 @@ cargo test -q --test cluster
 echo "== lifecycle: cargo test -q --test property_index_lifecycle"
 cargo test -q --test property_index_lifecycle
 
+# The fault-injection chaos suite: seeded drop/delay/corrupt/disconnect
+# sweeps over replicated clusters must stay deterministic per seed and
+# bit-identical to a single node whenever a live replica covers every
+# partition. Gate it explicitly — replication bugs are exactly the kind
+# tier-1 unit tests miss.
+echo "== chaos: cargo test -q --test cluster_faults"
+cargo test -q --test cluster_faults
+
 # Benches are plain binaries (harness = false) that tier-1 never
 # compiles; build them so bench code can't silently rot.
 echo "== cargo bench --no-run (bench code must keep building)"
