@@ -132,6 +132,21 @@ struct ClusterWriteStat {
     push_ns_per_row: f64,
 }
 
+/// One self-healing row: anti-entropy repair throughput (rows/s
+/// streamed back into a wiped, re-admitted replica by
+/// `Router::repair_tick`) plus merged-search latency percentiles while
+/// the replica is still `Rebuilding` (filtered reads) vs fully healed.
+struct ClusterRepairStat {
+    shards: usize,
+    replicas: usize,
+    corpus: usize,
+    repair_rows_per_s: f64,
+    idle_p50_ns: f64,
+    idle_p99_ns: f64,
+    rebuilding_p50_ns: f64,
+    rebuilding_p99_ns: f64,
+}
+
 /// Where the machine-readable report lands: the *workspace* root,
 /// regardless of invocation CWD (cargo runs bench binaries from the
 /// package root `rust/`, so a bare relative path would dodge the
@@ -155,6 +170,7 @@ fn write_bench_json(
     cluster_search: &[ClusterSearchStat],
     cluster_faults: &[ClusterFaultStat],
     cluster_writes: &[ClusterWriteStat],
+    cluster_repair: &[ClusterRepairStat],
 ) {
     let mut s = String::new();
     s.push_str("{\n");
@@ -259,6 +275,23 @@ fn write_bench_json(
             "    {{\"kind\": \"write_amp\", \"shards\": {}, \"replicas\": {}, \
              \"push_ns_per_row\": {:.1}}}{sep}\n",
             r.shards, r.replicas, r.push_ns_per_row
+        ));
+    }
+    s.push_str("  ],\n  \"cluster_repair\": [\n");
+    for (i, r) in cluster_repair.iter().enumerate() {
+        let sep = if i + 1 == cluster_repair.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"shards\": {}, \"replicas\": {}, \"corpus\": {}, \
+             \"repair_rows_per_s\": {:.1}, \"idle_p50_ns\": {:.1}, \"idle_p99_ns\": {:.1}, \
+             \"rebuilding_p50_ns\": {:.1}, \"rebuilding_p99_ns\": {:.1}}}{sep}\n",
+            r.shards,
+            r.replicas,
+            r.corpus,
+            r.repair_rows_per_s,
+            r.idle_p50_ns,
+            r.idle_p99_ns,
+            r.rebuilding_p50_ns,
+            r.rebuilding_p99_ns
         ));
     }
     s.push_str("  ]\n}\n");
@@ -864,6 +897,81 @@ fn main() {
         );
     }
 
+    // cluster self-healing: wipe one shard of a replicated cluster,
+    // re-admit it (probe demotes it to Rebuilding under a long repair
+    // grace), and time `repair_tick` streaming its partitions back from
+    // the live replicas. Merged-search percentiles are sampled while
+    // the replica is still Rebuilding (queries carry the partition
+    // filter and skip it) and compared against the idle cluster.
+    let mut cluster_repair_stats: Vec<ClusterRepairStat> = Vec::new();
+    let mut rrng = Rng::new(11);
+    for repair_rows in [8_000usize, 64_000] {
+        let rcorpus = gaussian_cloud(repair_rows, 64, &mut rrng);
+        let rq = vec![rcorpus[repair_rows / 2].clone()];
+        let mut handles = Vec::new();
+        let transports: Vec<Box<dyn ShardTransport>> = (0..cluster_shards)
+            .map(|i| {
+                let engine =
+                    ShardEngine::new(&format!("heal{i}"), Vec::new()).expect("repair shard");
+                let t = Arc::new(LocalTransport::new(Arc::new(engine)));
+                handles.push(t.clone());
+                Box::new(t) as Box<dyn ShardTransport>
+            })
+            .collect();
+        let config = RouterConfig {
+            replicas: 2,
+            repair_grace: Some(std::time::Duration::from_secs(3_600)),
+            ..RouterConfig::default()
+        };
+        let router = Router::handle_with_config(transports, config).expect("repair router");
+        let metrics = std::sync::Arc::new(strembed::coordinator::Metrics::new());
+        router.attach_metrics(metrics.clone());
+        let spec = IndexSpec::new(StructureKind::Circulant, 256, 64).with_seed(3);
+        router.build_index("bench", spec, &rcorpus).expect("repair build");
+        let repair_tail = || -> (f64, f64) {
+            router.index_query_batch("bench", &rq, 10).expect("warmup repair query");
+            let mut lat: Vec<f64> = (0..200)
+                .map(|_| {
+                    let t0 = std::time::Instant::now();
+                    let ans = router
+                        .index_query_batch("bench", std::hint::black_box(&rq), 10)
+                        .expect("repair query");
+                    std::hint::black_box(ans);
+                    t0.elapsed().as_nanos() as f64
+                })
+                .collect();
+            lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+            (percentile(&lat, 50.0), percentile(&lat, 99.0))
+        };
+        let (i50, i99) = repair_tail();
+        handles[0].set_down(true);
+        router.probe();
+        handles[0].engine().wipe_index("bench");
+        handles[0].set_down(false);
+        router.probe(); // re-admission demotes the wiped shard to Rebuilding
+        let (r50, r99) = repair_tail();
+        let t0 = std::time::Instant::now();
+        let completed = router.repair_tick();
+        let secs = t0.elapsed().as_secs_f64();
+        let streamed = metrics.snapshot().repair_rows_streamed;
+        let rows_per_s = streamed as f64 / secs.max(1e-9);
+        println!(
+            "cluster repair corpus={repair_rows}: {completed} partitions, {streamed} rows \
+             in {secs:.3}s ({rows_per_s:.0} rows/s); search p50 {i50:.0} → {r50:.0} ns, \
+             p99 {i99:.0} → {r99:.0} ns while rebuilding"
+        );
+        cluster_repair_stats.push(ClusterRepairStat {
+            shards: cluster_shards,
+            replicas: 2,
+            corpus: repair_rows,
+            repair_rows_per_s: rows_per_s,
+            idle_p50_ns: i50,
+            idle_p99_ns: i99,
+            rebuilding_p50_ns: r50,
+            rebuilding_p99_ns: r99,
+        });
+    }
+
     write_bench_json(
         &bench_json_path(),
         n,
@@ -877,6 +985,7 @@ fn main() {
         &cluster_search,
         &cluster_fault_stats,
         &cluster_write_stats,
+        &cluster_repair_stats,
     );
 
     // streaming pool scaling on the acceptance config

@@ -102,6 +102,14 @@ fn usage() -> String {
          \x20            [--hedge-after MS] [--deadline-ms MS]         race slow shards with a backup\n\
          \x20                                                          replica probe; per-request\n\
          \x20                                                          deadline on the wire\n\
+         \x20            [--repair-grace-ms MS]                        self-healing: re-home partitions\n\
+         \x20                                                          off shards dead > MS and repair\n\
+         \x20                                                          re-admitted shards from live\n\
+         \x20                                                          replicas before they take reads\n\
+         \x20            [--write-quorum Q]                            accept writes at Q replica acks\n\
+         \x20                                                          per partition (laggards repair\n\
+         \x20                                                          in the background; default:\n\
+         \x20                                                          all homes must ack)\n\
          \x20            [--shard-of ROUTER] [--shard-name S]          run THIS process as a shard\n\
          \x20                                                          executor the router dials\n\n\
          experiments:\n",
@@ -474,7 +482,11 @@ fn cmd_serve_shard(args: &Args) -> Result<String, String> {
 
 /// Fault-tolerance tunables shared by both clustered serve modes:
 /// `--replicas R` homes per index partition, `--hedge-after MS` backup
-/// probes for slow shards, `--deadline-ms MS` per-request deadlines.
+/// probes for slow shards, `--deadline-ms MS` per-request deadlines,
+/// `--repair-grace-ms MS` self-healing (rebalance partitions off
+/// shards dead longer than the grace period and anti-entropy-repair
+/// re-admitted ones), `--write-quorum Q` accept writes at Q acks per
+/// partition instead of all homes (laggards repair in the background).
 fn router_config_from_args(args: &Args) -> Result<RouterConfig, String> {
     let mut config = RouterConfig {
         replicas: args.get_usize("replicas", 1)?.max(1),
@@ -487,6 +499,14 @@ fn router_config_from_args(args: &Args) -> Result<RouterConfig, String> {
     let deadline_ms = args.get_u64("deadline-ms", 0)?;
     if deadline_ms > 0 {
         config.deadline = Some(Duration::from_millis(deadline_ms));
+    }
+    let grace_ms = args.get_u64("repair-grace-ms", 0)?;
+    if grace_ms > 0 {
+        config.repair_grace = Some(Duration::from_millis(grace_ms));
+    }
+    let quorum = args.get_usize("write-quorum", 0)?;
+    if quorum > 0 {
+        config.write_quorum = Some(quorum);
     }
     Ok(config)
 }
@@ -635,6 +655,25 @@ mod tests {
     #[test]
     fn embed_validates_input_len() {
         assert!(run_cmd("embed --n 8 --input 1,2").is_err());
+    }
+
+    #[test]
+    fn router_config_parses_self_healing_knobs() {
+        let args = Args::parse(
+            "serve --shards 4 --replicas 2 --repair-grace-ms 250 --write-quorum 1"
+                .split_whitespace()
+                .map(str::to_string),
+        );
+        let config = router_config_from_args(&args).unwrap();
+        assert_eq!(config.replicas, 2);
+        assert_eq!(config.repair_grace, Some(Duration::from_millis(250)));
+        assert_eq!(config.write_quorum, Some(1));
+        // both knobs default off: zero/absent keeps the strict
+        // all-homes write path and static placement
+        let args = Args::parse("serve --shards 4".split_whitespace().map(str::to_string));
+        let config = router_config_from_args(&args).unwrap();
+        assert_eq!(config.repair_grace, None);
+        assert_eq!(config.write_quorum, None);
     }
 
     #[test]

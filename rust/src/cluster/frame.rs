@@ -94,6 +94,14 @@ pub enum ShardRequest {
         k: u32,
         /// query rows at the f64 oracle precision
         queries: Vec<Vec<f64>>,
+        /// partition modulus for `parts` (`0` when `parts` is empty)
+        shards: u32,
+        /// partitions (`id % shards` classes) the scan is restricted
+        /// to; empty = answer over every local row. The router sends
+        /// the shard's live-credited partitions whenever placement has
+        /// ever changed, so stale or rebuilding rows never pollute a
+        /// merged answer.
+        parts: Vec<u32>,
     },
     /// Append rows to a committed mutable index under router-assigned
     /// global ids (the continuous-ingestion twin of `IndexRows`).
@@ -117,6 +125,43 @@ pub enum ShardRequest {
     IndexCompact {
         /// index name
         name: String,
+    },
+    /// Anti-entropy export: pull one chunk of a partition's live rows
+    /// (ids + packed code words, tombstones folded out) from a replica.
+    /// The stream is cursor-driven — each call returns rows with id
+    /// greater than `after`, and the `PartitionChunk` reply marks the
+    /// final chunk with `done`.
+    PartitionExport {
+        /// index name
+        name: String,
+        /// partition being exported (`gid % shards`)
+        partition: u32,
+        /// partition count of the placement epoch
+        shards: u32,
+        /// resume cursor: only rows with id strictly above this return
+        after: u64,
+        /// maximum rows in this chunk
+        limit: u32,
+    },
+    /// Install one exported chunk on a rebuilding replica. `reset` on
+    /// the first chunk clears the partition's stale rows — creating the
+    /// index from `spec` when it is absent (a wiped shard) — before any
+    /// rows land, so a repair never double-installs ids.
+    PartitionInstall {
+        /// index name
+        name: String,
+        /// index description, so a wiped shard can re-create the index
+        spec: IndexSpec,
+        /// partition being installed (`gid % shards`)
+        partition: u32,
+        /// partition count of the placement epoch
+        shards: u32,
+        /// chunk ids, strictly increasing
+        ids: Vec<u64>,
+        /// packed code words, `words_per_code` per id, copied verbatim
+        words: Vec<u64>,
+        /// clear the partition's stale rows before installing
+        reset: bool,
     },
     /// Liveness probe; the reply carries the shard's health line.
     Health,
@@ -176,6 +221,18 @@ pub enum ShardReply {
         /// rows tombstoned on this shard
         removed: u64,
     },
+    /// One chunk of a partition export stream: ascending live ids plus
+    /// their packed code words (`words.len() == ids.len() *
+    /// words_per_code`). `done` marks the final chunk — an empty `done`
+    /// chunk is a complete, empty partition.
+    PartitionChunk {
+        /// chunk ids, strictly increasing, all above the request cursor
+        ids: Vec<u64>,
+        /// packed code words, copied verbatim from the replica
+        words: Vec<u64>,
+        /// no rows remain beyond this chunk
+        done: bool,
+    },
     /// Application-level failure (the connection stays usable).
     Err {
         /// error text
@@ -193,6 +250,8 @@ const REQ_INDEX_PUSH: u8 = 7;
 const REQ_INDEX_DELETE: u8 = 8;
 const REQ_INDEX_COMPACT: u8 = 9;
 const REQ_CANCEL: u8 = 10;
+const REQ_PARTITION_EXPORT: u8 = 11;
+const REQ_PARTITION_INSTALL: u8 = 12;
 
 const REP_EMBEDDED: u8 = 65;
 const REP_OK: u8 = 66;
@@ -201,6 +260,7 @@ const REP_HITS: u8 = 68;
 const REP_HEALTH: u8 = 69;
 const REP_ERR: u8 = 70;
 const REP_DELETED: u8 = 71;
+const REP_PARTITION_CHUNK: u8 = 72;
 
 /// Validate a frame's declared payload length (from its 4-byte header)
 /// against the protocol bounds before any allocation happens.
@@ -341,6 +401,15 @@ impl<'a> Cur<'a> {
             .collect())
     }
 
+    fn u32_vec(&mut self) -> Result<Vec<u32>, FrameError> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len.saturating_mul(4))?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().expect("4 bytes")))
+            .collect())
+    }
+
     fn u64_vec(&mut self) -> Result<Vec<u64>, FrameError> {
         let len = self.u32()? as usize;
         let bytes = self.take(len.saturating_mul(8))?;
@@ -417,8 +486,24 @@ fn request_opcode(req: &ShardRequest) -> u8 {
         ShardRequest::IndexPush { .. } => REQ_INDEX_PUSH,
         ShardRequest::IndexDelete { .. } => REQ_INDEX_DELETE,
         ShardRequest::IndexCompact { .. } => REQ_INDEX_COMPACT,
+        ShardRequest::PartitionExport { .. } => REQ_PARTITION_EXPORT,
+        ShardRequest::PartitionInstall { .. } => REQ_PARTITION_INSTALL,
         ShardRequest::Health => REQ_HEALTH,
         ShardRequest::Cancel { .. } => REQ_CANCEL,
+    }
+}
+
+fn put_u64_vec(b: &mut Vec<u8>, vals: &[u64]) {
+    put_u32(b, vals.len() as u32);
+    for &v in vals {
+        put_u64(b, v);
+    }
+}
+
+fn put_u32_vec(b: &mut Vec<u8>, vals: &[u32]) {
+    put_u32(b, vals.len() as u32);
+    for &v in vals {
+        put_u32(b, v);
     }
 }
 
@@ -450,10 +535,12 @@ pub fn encode_request(id: u64, deadline_ms: u32, req: &ShardRequest) -> Vec<u8> 
         ShardRequest::IndexCommit { name } => {
             put_str(&mut b, name);
         }
-        ShardRequest::IndexQuery { name, k, queries } => {
+        ShardRequest::IndexQuery { name, k, queries, shards, parts } => {
             put_str(&mut b, name);
             put_u32(&mut b, *k);
             put_rows_f64(&mut b, queries);
+            put_u32(&mut b, *shards);
+            put_u32_vec(&mut b, parts);
         }
         ShardRequest::IndexPush { name, ids, rows } => {
             put_str(&mut b, name);
@@ -472,6 +559,22 @@ pub fn encode_request(id: u64, deadline_ms: u32, req: &ShardRequest) -> Vec<u8> 
         }
         ShardRequest::IndexCompact { name } => {
             put_str(&mut b, name);
+        }
+        ShardRequest::PartitionExport { name, partition, shards, after, limit } => {
+            put_str(&mut b, name);
+            put_u32(&mut b, *partition);
+            put_u32(&mut b, *shards);
+            put_u64(&mut b, *after);
+            put_u32(&mut b, *limit);
+        }
+        ShardRequest::PartitionInstall { name, spec, partition, shards, ids, words, reset } => {
+            put_str(&mut b, name);
+            put_spec(&mut b, spec);
+            put_u32(&mut b, *partition);
+            put_u32(&mut b, *shards);
+            b.push(u8::from(*reset));
+            put_u64_vec(&mut b, ids);
+            put_u64_vec(&mut b, words);
         }
         ShardRequest::Health => {}
         ShardRequest::Cancel { target } => {
@@ -515,6 +618,12 @@ pub fn encode_reply(id: u64, rep: &ShardReply) -> Vec<u8> {
             b.push(REP_DELETED);
             put_u64(&mut b, *removed);
         }
+        ShardReply::PartitionChunk { ids, words, done } => {
+            b.push(REP_PARTITION_CHUNK);
+            b.push(u8::from(*done));
+            put_u64_vec(&mut b, ids);
+            put_u64_vec(&mut b, words);
+        }
         ShardReply::Err { message } => {
             b.push(REP_ERR);
             put_str(&mut b, message);
@@ -536,14 +645,34 @@ pub fn decode_request(payload: &[u8]) -> Result<(u64, u32, ShardRequest), FrameE
             ShardRequest::IndexRows { name: c.str_()?, ids: c.u64_vec()?, rows: c.rows_f64()? }
         }
         REQ_INDEX_COMMIT => ShardRequest::IndexCommit { name: c.str_()? },
-        REQ_INDEX_QUERY => {
-            ShardRequest::IndexQuery { name: c.str_()?, k: c.u32()?, queries: c.rows_f64()? }
-        }
+        REQ_INDEX_QUERY => ShardRequest::IndexQuery {
+            name: c.str_()?,
+            k: c.u32()?,
+            queries: c.rows_f64()?,
+            shards: c.u32()?,
+            parts: c.u32_vec()?,
+        },
         REQ_INDEX_PUSH => {
             ShardRequest::IndexPush { name: c.str_()?, ids: c.u64_vec()?, rows: c.rows_f64()? }
         }
         REQ_INDEX_DELETE => ShardRequest::IndexDelete { name: c.str_()?, ids: c.u64_vec()? },
         REQ_INDEX_COMPACT => ShardRequest::IndexCompact { name: c.str_()? },
+        REQ_PARTITION_EXPORT => ShardRequest::PartitionExport {
+            name: c.str_()?,
+            partition: c.u32()?,
+            shards: c.u32()?,
+            after: c.u64()?,
+            limit: c.u32()?,
+        },
+        REQ_PARTITION_INSTALL => ShardRequest::PartitionInstall {
+            name: c.str_()?,
+            spec: c.spec()?,
+            partition: c.u32()?,
+            shards: c.u32()?,
+            reset: c.u8()? != 0,
+            ids: c.u64_vec()?,
+            words: c.u64_vec()?,
+        },
         REQ_HEALTH => ShardRequest::Health,
         REQ_CANCEL => ShardRequest::Cancel { target: c.u64()? },
         other => return Err(FrameError(format!("unknown request opcode {other}"))),
@@ -579,6 +708,11 @@ pub fn decode_reply(payload: &[u8]) -> Result<(u64, ShardReply), FrameError> {
         REP_HEALTH => ShardReply::Health { line: c.str_()? },
         REP_ERR => ShardReply::Err { message: c.str_()? },
         REP_DELETED => ShardReply::Deleted { removed: c.u64()? },
+        REP_PARTITION_CHUNK => ShardReply::PartitionChunk {
+            done: c.u8()? != 0,
+            ids: c.u64_vec()?,
+            words: c.u64_vec()?,
+        },
         other => return Err(FrameError(format!("unknown reply opcode {other}"))),
     };
     c.done()?;
@@ -715,11 +849,15 @@ mod tests {
             name: "nn".into(),
             k: 5,
             queries: vec![vec![0.25; 4]],
+            shards: 4,
+            parts: vec![1, 3],
         };
-        let ShardRequest::IndexQuery { k, queries, .. } = roundtrip_request(&req) else {
+        let ShardRequest::IndexQuery { k, queries, shards, parts, .. } = roundtrip_request(&req)
+        else {
             panic!("wrong request kind");
         };
         assert_eq!((k, queries.len()), (5, 1));
+        assert_eq!((shards, parts), (4, vec![1, 3]));
         assert!(matches!(roundtrip_request(&ShardRequest::Health), ShardRequest::Health));
 
         let rep = ShardReply::Hits {
@@ -792,6 +930,59 @@ mod tests {
             panic!("wrong reply kind");
         };
         assert_eq!(removed, 3);
+    }
+
+    #[test]
+    fn partition_repair_frames_roundtrip() {
+        let req = ShardRequest::PartitionExport {
+            name: "nn".into(),
+            partition: 2,
+            shards: 4,
+            after: 17,
+            limit: 512,
+        };
+        let ShardRequest::PartitionExport { name, partition, shards, after, limit } =
+            roundtrip_request(&req)
+        else {
+            panic!("wrong request kind");
+        };
+        assert_eq!((name.as_str(), partition, shards), ("nn", 2, 4));
+        assert_eq!((after, limit), (17, 512));
+
+        let req = ShardRequest::PartitionInstall {
+            name: "nn".into(),
+            spec: IndexSpec::new(StructureKind::Circulant, 64, 16).with_seed(7),
+            partition: 3,
+            shards: 4,
+            ids: vec![3, 7, 11],
+            words: vec![u64::MAX, 0, 0xDEAD_BEEF],
+            reset: true,
+        };
+        let ShardRequest::PartitionInstall { name, spec, partition, shards, ids, words, reset } =
+            roundtrip_request(&req)
+        else {
+            panic!("wrong request kind");
+        };
+        assert_eq!((name.as_str(), partition, shards, reset), ("nn", 3, 4, true));
+        assert_eq!((spec.m, spec.n, spec.seed), (64, 16, 7));
+        assert_eq!(ids, vec![3, 7, 11]);
+        assert_eq!(words, vec![u64::MAX, 0, 0xDEAD_BEEF]);
+
+        let rep = ShardReply::PartitionChunk {
+            ids: vec![2, 6],
+            words: vec![1, 2],
+            done: false,
+        };
+        let ShardReply::PartitionChunk { ids, words, done } = roundtrip_reply(&rep) else {
+            panic!("wrong reply kind");
+        };
+        assert_eq!((ids, words, done), (vec![2, 6], vec![1, 2], false));
+        // the empty terminal chunk of an empty partition
+        let rep = ShardReply::PartitionChunk { ids: vec![], words: vec![], done: true };
+        let ShardReply::PartitionChunk { ids, words, done } = roundtrip_reply(&rep) else {
+            panic!("wrong reply kind");
+        };
+        assert!(ids.is_empty() && words.is_empty() && done);
     }
 
     #[test]

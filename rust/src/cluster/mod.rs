@@ -31,15 +31,17 @@
 //! `IndexDelete` tombstones rows, and `IndexCompact` folds tombstones
 //! out shard-locally.
 //!
-//! # Replication
+//! # Replication and epoch-versioned placement
 //!
 //! With [`RouterConfig::replicas`]` = R > 1` every index partition is
-//! stored on `R` *homes* — a deterministic rotation of the build-time
-//! shard list (`partition p` lives at slots `(p + j) mod P`, `j < R`):
+//! stored on `R` *homes*. The assignment map is **mutable** and
+//! versioned by a per-index *placement epoch*: epoch 0 is a
+//! deterministic rotation of the build-time shard list (`partition p`
+//! lives at slots `(p + j) mod P`, `j < R`):
 //!
 //! ```text
 //!   P = 4 shards, R = 2          writes fan to ALL homes
-//!   partition 0 → slots {0, 1}   reads hit ANY live home
+//!   partition 0 → slots {0, 1}   reads hit ANY Live home
 //!   partition 1 → slots {1, 2}   slot 2 covers partitions {2, 1}
 //!   partition 2 → slots {2, 3}
 //!   partition 3 → slots {3, 0}
@@ -52,6 +54,37 @@
 //! any single shard leaves answers bit-identical and *complete* —
 //! [`ClusterAnswer::partial`] becomes the exception, raised only when
 //! every home of some partition is gone.
+//!
+//! # Self-healing
+//!
+//! Each home carries a [`ReplicaState`]: `Live` replicas serve reads,
+//! `Rebuilding` replicas receive writes but are excluded from reads
+//! until anti-entropy repair finishes. With
+//! [`RouterConfig::repair_grace`] set, [`Router::repair_tick`] (run by
+//! [`spawn_health_monitor`] after every probe round) drives the heal
+//! loop:
+//!
+//! ```text
+//!   detect ──▶ re-home ──▶ stream ──▶ install ──▶ promote
+//!   (dead ≥    (epoch+1,   (export    (reset +    (Rebuilding
+//!    grace)     survivors   live rows  chunked     → Live,
+//!               adopt as    from a     installs)   epoch-checked)
+//!               Rebuilding) Live home)
+//! ```
+//!
+//! Re-admitted shards are demoted to `Rebuilding` wherever another
+//! Live copy survives, then repaired from it over the
+//! `PartitionExport` / `PartitionChunk` / `PartitionInstall` frames in
+//! [`REPAIR_CHUNK_ROWS`]-row chunks. When placement has diverged from
+//! the epoch-0 rotation (or any replica is mid-repair), queries carry
+//! an explicit per-shard partition whitelist so a shard never lets
+//! stale rows crowd healthy ones out of its local top-k — answers stay
+//! bit-identical to a single node throughout. With
+//! [`RouterConfig::write_quorum`] set, writes succeed at quorum and
+//! laggard replicas are quarantined to `Rebuilding` for repair instead
+//! of failing the write. [`Router::partition_health`] exposes the
+//! per-partition replica map ([`PartitionHealth`] / [`ReplicaHealth`])
+//! for the CLI `cluster status` view.
 //!
 //! # Transports
 //!
@@ -98,8 +131,8 @@ pub mod transport;
 pub use fault::{FaultCounts, FaultPlan, FaultyTransport};
 pub use frame::{FrameError, ShardReply, ShardRequest, WireHit, MAX_FRAME_BYTES};
 pub use router::{
-    spawn_health_monitor, ClusterAnswer, ClusterHandle, Router, RouterConfig, ShardStatus,
-    BUILD_CHUNK_ROWS,
+    spawn_health_monitor, ClusterAnswer, ClusterHandle, PartitionHealth, ReplicaHealth,
+    ReplicaState, Router, RouterConfig, ShardStatus, BUILD_CHUNK_ROWS, REPAIR_CHUNK_ROWS,
 };
 pub use shard::ShardEngine;
 pub use tcp::serve_shard;

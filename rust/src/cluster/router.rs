@@ -12,19 +12,64 @@
 //!   single-node batch bit-for-bit at f64.
 //! * **Index corpora** are partitioned round-robin by global row id
 //!   (`partition = id mod P` over the `P` shard slots recorded at
-//!   build time), and every partition is stored on
-//!   [`RouterConfig::replicas`] *homes* — slot positions
-//!   `(partition + j) mod P` for `j < R`, a deterministic rotation of
-//!   the build-time shard list. Builds and every mutation
+//!   build time). Placement is an *epoch-versioned, mutable assignment
+//!   map*: each partition carries an explicit list of home shards, and
+//!   each home carries a [`ReplicaState`]. A build seeds the map with
+//!   the deterministic rotation (`homes(partition) = live[(partition +
+//!   j) mod P]` for `j <` [`RouterConfig::replicas`]) at epoch 0, and
+//!   every later re-homing bumps the epoch. Builds and every mutation
 //!   (`INDEX PUSH` / `DELETE` / `COMPACT`) fan out to all homes;
-//!   queries read from any live replica. Rows are streamed in bounded
-//!   [`BUILD_CHUNK_ROWS`] chunks, always in ascending global-id order,
-//!   so each home's local id sequence stays a strictly increasing
-//!   subsequence of the global order and per-shard top-k lists merge
-//!   into the exact single-node top-k by `(hamming, id)` ascending.
-//!   Replicas hold byte-identical codes (same spec, same seed), so the
-//!   overlap they contribute to a merge is removed by exact-pair
-//!   dedup before truncating to `k`.
+//!   queries read only from [`ReplicaState::Live`] homes. Rows are
+//!   streamed in bounded [`BUILD_CHUNK_ROWS`] chunks, always in
+//!   ascending global-id order, so each home's local id sequence stays
+//!   a strictly increasing subsequence of the global order and
+//!   per-shard top-k lists merge into the exact single-node top-k by
+//!   `(hamming, id)` ascending. Replicas hold byte-identical codes
+//!   (same spec, same seed), so the overlap they contribute to a merge
+//!   is removed by exact-pair dedup before truncating to `k`.
+//!
+//! # Self-healing: rebalancing and anti-entropy repair
+//!
+//! With [`RouterConfig::repair_grace`] set the cluster heals itself
+//! after membership changes ([`Router::repair_tick`], driven by
+//! [`spawn_health_monitor`]):
+//!
+//! * **Detect** — a shard dead past the grace period abandons its
+//!   assignments: its homes are dropped from the map and every
+//!   under-replicated partition is topped back up onto the
+//!   least-loaded live survivor as a `Rebuilding` home (epoch bump;
+//!   a partition whose *every* home expired is re-homed too, closing
+//!   the routing hole instead of answering `partial` forever).
+//! * **Re-admission** — a shard that returns from the dead cannot be
+//!   trusted to still hold what it held (it may have lost its disk),
+//!   so each of its homes is demoted to `Rebuilding` — but only where
+//!   another live `Live` replica exists to repair from; a sole
+//!   surviving copy stays `Live` (there is no better source).
+//! * **Stream → install → promote** — every `Rebuilding` home is
+//!   rebuilt by anti-entropy repair: the router pulls the partition's
+//!   live rows (ids + packed code words, tombstones folded out) from a
+//!   `Live` replica in bounded [`REPAIR_CHUNK_ROWS`] chunks
+//!   (`PARTITION EXPORT`), installs them on the target (`PARTITION
+//!   INSTALL`, resetting stale rows first), and only then promotes the
+//!   home back to `Live`. A repair that dies mid-stream leaves the
+//!   home `Rebuilding`; the next tick restarts from the reset, so a
+//!   half-built replica is never readable.
+//!
+//! Reads stay exact throughout: whenever placement has ever changed,
+//! query requests carry the target shard's live-credited partition
+//! list and the shard scopes its top-k scan to exactly those id
+//! classes — stale, rebuilding or orphaned rows can neither appear in
+//! an answer nor crowd healthy rows out of the bounded per-shard
+//! lists.
+//!
+//! # Write quorum
+//!
+//! By default writes are all-or-nothing across a partition's homes
+//! (any failure fails the push/delete). With
+//! [`RouterConfig::write_quorum`]` = Some(q)` a write succeeds once at
+//! least `q` homes (and at least one `Live` home) acknowledge; a
+//! laggard home is marked dirty (`Rebuilding`) and queued for
+//! anti-entropy repair instead of failing the write.
 //!
 //! # Failure semantics
 //!
@@ -36,7 +81,7 @@
 //! re-queues failed row ranges onto other shards (the batch still
 //! completes, identically, as long as one shard lives). Index queries
 //! run coverage rounds: every uncovered partition is asked of its
-//! first untried live home, failures consume the per-request
+//! first untried live `Live` home, failures consume the per-request
 //! [`RouterConfig::retry_budget`], and the answer is
 //! [`ClusterAnswer::partial`] only when some partition has *no* live
 //! replica left — with `replicas >= 2` a single shard death changes
@@ -56,11 +101,15 @@ use crate::index::{angular_similarity, IndexSpec, SearchHit};
 use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicIsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex, OnceLock, Weak};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Corpus rows per `IndexRows` frame when the router streams a build
 /// to its shards (bounds peak frame size and shard-side buffering).
 pub const BUILD_CHUNK_ROWS: usize = 512;
+
+/// Rows per `PARTITION EXPORT` chunk during anti-entropy repair
+/// (bounds peak frame size and the work lost to a mid-stream death).
+pub const REPAIR_CHUNK_ROWS: usize = 1024;
 
 /// Tunables for a [`Router`]'s fault-tolerance behaviour.
 #[derive(Debug, Clone)]
@@ -78,11 +127,32 @@ pub struct RouterConfig {
     /// Per-call deadline handed to the transport (`None` = transport
     /// default).
     pub deadline: Option<Duration>,
+    /// Write quorum per partition: a push/delete succeeds once this
+    /// many homes (and at least one `Live` home) acknowledge, and any
+    /// laggard home is marked dirty and queued for anti-entropy
+    /// repair. `None` keeps the all-or-nothing fan-out (any home
+    /// failure fails the write). Clamped per partition to its home
+    /// count.
+    pub write_quorum: Option<usize>,
+    /// How long a shard may stay dead before the cluster rebalances
+    /// away from it ([`Router::repair_tick`] re-homes its partitions
+    /// onto survivors), and the opt-in switch for anti-entropy repair
+    /// on re-admission. `None` disables membership-driven rebalancing
+    /// and re-admission repair entirely (the pre-self-healing
+    /// behaviour).
+    pub repair_grace: Option<Duration>,
 }
 
 impl Default for RouterConfig {
     fn default() -> Self {
-        RouterConfig { replicas: 1, hedge_after: None, retry_budget: 32, deadline: None }
+        RouterConfig {
+            replicas: 1,
+            hedge_after: None,
+            retry_budget: 32,
+            deadline: None,
+            write_quorum: None,
+            repair_grace: None,
+        }
     }
 }
 
@@ -109,6 +179,57 @@ pub struct ShardStatus {
     pub alive: bool,
 }
 
+/// Repair state of one home (replica) of a partition. Reads come only
+/// from `Live` homes; writes fan out to both states so a rebuilding
+/// replica never misses mutations that race its repair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaState {
+    /// fully consistent; serves reads
+    Live,
+    /// stale or empty; receiving anti-entropy repair, excluded from
+    /// reads until promoted back to `Live`
+    Rebuilding,
+}
+
+impl std::fmt::Display for ReplicaState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReplicaState::Live => write!(f, "live"),
+            ReplicaState::Rebuilding => write!(f, "rebuilding"),
+        }
+    }
+}
+
+/// Health of one home (replica) of a partition, as reported by
+/// [`Router::partition_health`].
+#[derive(Debug, Clone)]
+pub struct ReplicaHealth {
+    /// shard slot holding this replica
+    pub shard: usize,
+    /// transport endpoint label of the shard
+    pub endpoint: String,
+    /// whether the router currently considers the shard alive
+    pub alive: bool,
+    /// repair state of this home
+    pub state: ReplicaState,
+}
+
+/// Per-partition replica health of a cluster index.
+#[derive(Debug, Clone)]
+pub struct PartitionHealth {
+    /// partition (`gid % partitions`)
+    pub partition: usize,
+    /// this partition's homes, in assignment order
+    pub replicas: Vec<ReplicaHealth>,
+}
+
+/// One home slot in the assignment map.
+#[derive(Debug, Clone, Copy)]
+struct Home {
+    shard: usize,
+    state: ReplicaState,
+}
+
 #[derive(Clone)]
 struct IndexMeta {
     /// code length in bits (similarity = `1 - hamming/m`)
@@ -118,26 +239,65 @@ struct IndexMeta {
     /// rows-ever-assigned count (a failed push may leave id gaps;
     /// gaps are harmless, ids are never reused)
     rows: usize,
-    /// shard slots that hold partitions of this index; partition
-    /// `gid % shards.len()` lives on positions
-    /// `(partition + j) % shards.len()` for `j < replicas`
-    shards: Vec<usize>,
-    /// homes per partition, clamped at build time
+    /// index description, kept so repair can re-create the index on a
+    /// wiped shard
+    spec: IndexSpec,
+    /// partition count, fixed at build time (`partition = gid % partitions`)
+    partitions: usize,
+    /// target homes per partition, clamped at build time
     replicas: usize,
+    /// placement version: bumped on every assignment change, so a
+    /// repair that raced a re-homing refuses to promote a stale slot
+    epoch: u64,
+    /// `homes[partition]` = this partition's replica homes
+    homes: Vec<Vec<Home>>,
 }
 
 impl IndexMeta {
-    /// Slot positions (indexes into `shards`) holding `partition`.
-    fn home_positions(&self, partition: usize) -> impl Iterator<Item = usize> + '_ {
-        let p = self.shards.len();
-        (0..self.replicas).map(move |j| (partition + j) % p)
+    /// Partitions this shard serves reads for (it is a `Live` home),
+    /// ascending.
+    fn live_partitions_on(&self, shard: usize) -> Vec<usize> {
+        self.homes
+            .iter()
+            .enumerate()
+            .filter(|(_, homes)| {
+                homes.iter().any(|h| h.shard == shard && h.state == ReplicaState::Live)
+            })
+            .map(|(partition, _)| partition)
+            .collect()
     }
 
-    /// Partitions held by the slot at `position`.
-    fn partitions_of(&self, position: usize) -> impl Iterator<Item = usize> + '_ {
-        let p = self.shards.len();
-        (0..self.replicas).map(move |j| (position + p - j) % p)
+    /// Sorted distinct shards appearing in any home.
+    fn holders(&self) -> Vec<usize> {
+        let mut shards: Vec<usize> = self.homes.iter().flatten().map(|h| h.shard).collect();
+        shards.sort_unstable();
+        shards.dedup();
+        shards
     }
+
+    /// Whether queries must carry per-shard partition filters: true
+    /// once placement has ever changed (orphaned rows may linger on
+    /// ex-homes) or any home is rebuilding (its rows may be stale).
+    /// False for a pristine build, keeping the fast unfiltered scan.
+    fn needs_filter(&self) -> bool {
+        self.epoch > 0
+            || self.homes.iter().flatten().any(|h| h.state != ReplicaState::Live)
+    }
+}
+
+/// One pending anti-entropy repair, snapshotted from the assignment
+/// map so the stream runs without holding the index lock.
+struct RepairJob {
+    name: String,
+    spec: IndexSpec,
+    partitions: usize,
+    epoch: u64,
+    partition: usize,
+    /// rebuilding home being repaired
+    target: usize,
+    /// live replica to stream from; `None` re-homes the partition
+    /// empty (no surviving copy — the routing hole still closes)
+    source: Option<usize>,
 }
 
 /// Scatter-gather front over N shard transports. Cheaply shared as a
@@ -149,6 +309,9 @@ pub struct Router {
     config: RouterConfig,
     /// Global pool bounding concurrently outstanding hedge probes.
     hedge_tokens: Arc<AtomicIsize>,
+    /// When each currently-dead shard was first seen dead — the clock
+    /// [`RouterConfig::repair_grace`] runs against.
+    dead_since: Mutex<Vec<Option<Instant>>>,
     /// Serving metrics, attached by the coordinator when it adopts the
     /// router; counters are dropped on the floor until then.
     metrics: OnceLock<Arc<Metrics>>,
@@ -187,6 +350,7 @@ impl Router {
         let transports: Vec<Arc<dyn ShardTransport>> =
             transports.into_iter().map(Arc::from).collect();
         let alive = transports.iter().map(|_| AtomicBool::new(true)).collect();
+        let dead_since = Mutex::new(vec![None; transports.len()]);
         let tokens = config.retry_budget.max(1) as isize;
         Ok(Router {
             transports,
@@ -194,6 +358,7 @@ impl Router {
             indexes: Mutex::new(HashMap::new()),
             config,
             hedge_tokens: Arc::new(AtomicIsize::new(tokens)),
+            dead_since,
             metrics: OnceLock::new(),
         })
     }
@@ -212,8 +377,8 @@ impl Router {
         Router::with_config(transports, config).map(Arc::new)
     }
 
-    /// Adopt a metrics sink for hedge/retry/probe/partial counters.
-    /// The first caller wins; later calls are ignored.
+    /// Adopt a metrics sink for hedge/retry/probe/partial/repair
+    /// counters. The first caller wins; later calls are ignored.
     pub fn attach_metrics(&self, metrics: Arc<Metrics>) {
         let _ = self.metrics.set(metrics);
     }
@@ -257,8 +422,20 @@ impl Router {
             .collect()
     }
 
+    /// Track when a shard's current death began (the repair-grace
+    /// clock); a live shard has no death timestamp.
+    fn note_liveness(&self, shard: usize, ok: bool) {
+        let mut dead = self.dead_since.lock().expect("router dead-since lock");
+        if ok {
+            dead[shard] = None;
+        } else if dead[shard].is_none() {
+            dead[shard] = Some(Instant::now());
+        }
+    }
+
     fn mark_dead(&self, shard: usize) {
         self.alive[shard].store(false, Ordering::SeqCst);
+        self.note_liveness(shard, false);
     }
 
     /// Mark a shard dead only when the failure means shard death; a
@@ -282,12 +459,16 @@ impl Router {
     /// Call `shard`, and when hedging is configured launch a backup
     /// probe on `backup` if the primary has not answered within the
     /// hedging delay; the first answer wins (the loser finishes on a
-    /// detached thread and is dropped). Returns which shard answered.
+    /// detached thread and is dropped). The backup may carry its own
+    /// request (`backup_req`) when the two shards must be asked
+    /// different things — e.g. per-shard partition filters. Returns
+    /// which shard answered.
     fn hedged_call(
         &self,
         shard: usize,
         backup: Option<usize>,
         req: &ShardRequest,
+        backup_req: Option<&ShardRequest>,
     ) -> (usize, Result<ShardReply, ShardError>) {
         let deadline = self.config.deadline;
         let plan = match (self.config.hedge_after, backup) {
@@ -298,22 +479,23 @@ impl Router {
             return (shard, self.transports[shard].call_deadline(req, deadline));
         };
         let (tx, rx) = mpsc::channel::<(usize, Result<ShardReply, ShardError>)>();
-        let spawn_probe = |slot: usize, token: Option<Arc<AtomicIsize>>| -> bool {
-            let transport = self.transports[slot].clone();
-            let req = req.clone();
-            let tx = tx.clone();
-            std::thread::Builder::new()
-                .name(format!("strembed-hedge-{slot}"))
-                .spawn(move || {
-                    let out = transport.call_deadline(&req, deadline);
-                    if let Some(tok) = token {
-                        tok.fetch_add(1, Ordering::SeqCst);
-                    }
-                    let _ = tx.send((slot, out));
-                })
-                .is_ok()
-        };
-        if !spawn_probe(shard, None) {
+        let spawn_probe =
+            |slot: usize, probe_req: &ShardRequest, token: Option<Arc<AtomicIsize>>| -> bool {
+                let transport = self.transports[slot].clone();
+                let req = probe_req.clone();
+                let tx = tx.clone();
+                std::thread::Builder::new()
+                    .name(format!("strembed-hedge-{slot}"))
+                    .spawn(move || {
+                        let out = transport.call_deadline(&req, deadline);
+                        if let Some(tok) = token {
+                            tok.fetch_add(1, Ordering::SeqCst);
+                        }
+                        let _ = tx.send((slot, out));
+                    })
+                    .is_ok()
+            };
+        if !spawn_probe(shard, req, None) {
             // no thread to be had: degrade to a plain inline call
             return (shard, self.transports[shard].call_deadline(req, deadline));
         }
@@ -325,7 +507,7 @@ impl Router {
         let mut outstanding = 1usize;
         if self.try_take_hedge_token() {
             self.metric(|m| m.on_hedged_request());
-            if spawn_probe(backup, Some(self.hedge_tokens.clone())) {
+            if spawn_probe(backup, backup_req.unwrap_or(req), Some(self.hedge_tokens.clone())) {
                 outstanding += 1;
             } else {
                 self.hedge_tokens.fetch_add(1, Ordering::SeqCst);
@@ -351,11 +533,14 @@ impl Router {
 
     /// Probe every shard (alive or dead) with a HEALTH request and
     /// update liveness from the outcome. A dead shard that answers is
-    /// re-admitted and resumes taking traffic immediately. A shard
-    /// whose probe thread could not even be spawned keeps its previous
-    /// liveness for this round (counted in `health_probe_errors`)
-    /// instead of panicking the monitor. Returns the refreshed
-    /// statuses.
+    /// re-admitted and resumes taking traffic immediately — and, when
+    /// [`RouterConfig::repair_grace`] is set, its homes are demoted to
+    /// `Rebuilding` wherever another live replica can repair them
+    /// (anti-entropy: a returned shard may have lost its state). A
+    /// shard whose probe thread could not even be spawned keeps its
+    /// previous liveness for this round (counted in
+    /// `health_probe_errors`) instead of panicking the monitor.
+    /// Returns the refreshed statuses.
     pub fn probe(&self) -> Vec<ShardStatus> {
         let results: Vec<Option<bool>> = std::thread::scope(|s| {
             let handles: Vec<Option<std::thread::ScopedJoinHandle<'_, bool>>> = self
@@ -371,18 +556,53 @@ impl Router {
                 .collect();
             handles.into_iter().map(|h| h.and_then(|h| h.join().ok())).collect()
         });
+        let mut readmitted: Vec<usize> = Vec::new();
         for (i, outcome) in results.iter().enumerate() {
             match outcome {
                 Some(ok) => {
                     let was = self.alive[i].swap(*ok, Ordering::SeqCst);
+                    self.note_liveness(i, *ok);
                     if *ok && !was {
                         self.metric(|m| m.on_shard_readmission());
+                        readmitted.push(i);
                     }
                 }
                 None => self.metric(|m| m.on_health_probe_error()),
             }
         }
+        if self.config.repair_grace.is_some() {
+            for &shard in &readmitted {
+                self.mark_stale_for_repair(shard);
+            }
+        }
         self.statuses()
+    }
+
+    /// Anti-entropy demotion on re-admission: every home the returned
+    /// shard holds drops to `Rebuilding` — but only where another live
+    /// `Live` replica exists to repair from. A sole surviving copy
+    /// stays `Live`: demoting it would turn intact data into a routing
+    /// hole, and there is no better source to rebuild from anyway.
+    fn mark_stale_for_repair(&self, shard: usize) {
+        let mut indexes = self.indexes.lock().expect("router indexes lock");
+        for meta in indexes.values_mut() {
+            for homes in meta.homes.iter_mut() {
+                let has_other_live = homes.iter().any(|h| {
+                    h.shard != shard
+                        && h.state == ReplicaState::Live
+                        && self.alive[h.shard].load(Ordering::SeqCst)
+                });
+                if !has_other_live {
+                    continue;
+                }
+                if let Some(h) = homes
+                    .iter_mut()
+                    .find(|h| h.shard == shard && h.state == ReplicaState::Live)
+                {
+                    h.state = ReplicaState::Rebuilding;
+                }
+            }
+        }
     }
 
     /// Scatter an embed batch across live shards as contiguous row
@@ -449,7 +669,7 @@ impl Router {
                                     .iter()
                                     .copied()
                                     .find(|&other| other != shard);
-                                (shard, start, len, self.hedged_call(shard, backup, &req))
+                                (shard, start, len, self.hedged_call(shard, backup, &req, None))
                             })
                         })
                         .collect();
@@ -502,10 +722,11 @@ impl Router {
 
     /// Partition `corpus` round-robin by global row id across the live
     /// shards, replicate each partition onto
-    /// [`RouterConfig::replicas`] rotated homes, and stream every
-    /// home's rows out in [`BUILD_CHUNK_ROWS`] chunks (begin → rows… →
-    /// commit), in ascending global-id order. The build is
-    /// all-or-nothing: any shard failure fails it.
+    /// [`RouterConfig::replicas`] rotated homes (the epoch-0 seed of
+    /// the mutable assignment map), and stream every home's rows out
+    /// in [`BUILD_CHUNK_ROWS`] chunks (begin → rows… → commit), in
+    /// ascending global-id order. The build is all-or-nothing: any
+    /// shard failure fails it.
     pub fn build_index(
         &self,
         name: &str,
@@ -549,9 +770,27 @@ impl Router {
                 return Err(format!("index build failed on shard {shard}: {e}"));
             }
         }
+        let homes: Vec<Vec<Home>> = (0..p)
+            .map(|partition| {
+                (0..replicas)
+                    .map(|j| Home {
+                        shard: live[(partition + j) % p],
+                        state: ReplicaState::Live,
+                    })
+                    .collect()
+            })
+            .collect();
         self.indexes.lock().expect("router indexes lock").insert(
             name.to_string(),
-            IndexMeta { m, rows: corpus.len(), shards: live, replicas },
+            IndexMeta {
+                m,
+                rows: corpus.len(),
+                spec,
+                partitions: p,
+                replicas,
+                epoch: 0,
+                homes,
+            },
         );
         Ok(corpus.len())
     }
@@ -595,9 +834,13 @@ impl Router {
     /// Ask every live replica needed to cover all partitions of `name`
     /// and merge the per-shard top-k lists into exact global top-k
     /// (sort by `(hamming, id)`, dedup the replica overlap, truncate to
-    /// `k`). Coverage rounds retry failed partitions on their remaining
-    /// homes under the retry budget; the answer is partial only when a
-    /// partition has no answering replica left.
+    /// `k`). Reads come only from `Live` homes; once placement has
+    /// ever changed, each request carries the target shard's
+    /// live-credited partition list so stale rows on rebuilding or
+    /// ex-home shards cannot pollute the merge. Coverage rounds retry
+    /// failed partitions on their remaining homes under the retry
+    /// budget; the answer is partial only when a partition has no
+    /// answering replica left.
     pub fn index_query_batch(
         &self,
         name: &str,
@@ -614,11 +857,30 @@ impl Router {
         if queries.is_empty() {
             return Ok(ClusterAnswer { hits: Vec::new(), probed_buckets: 0, partial: false });
         }
-        let p = meta.shards.len();
+        let p = meta.partitions;
+        let filtered = meta.needs_filter();
+        // request for one shard: when filtering, scope the scan to the
+        // partitions this answer will be credited for
+        let query_req = |shard: usize| -> ShardRequest {
+            let (shards, parts) = if filtered {
+                let parts: Vec<u32> =
+                    meta.live_partitions_on(shard).into_iter().map(|q| q as u32).collect();
+                (p as u32, parts)
+            } else {
+                (0, Vec::new())
+            };
+            ShardRequest::IndexQuery {
+                name: name.to_string(),
+                k: k as u32,
+                queries: queries.to_vec(),
+                shards,
+                parts,
+            }
+        };
         let mut uncovered: BTreeSet<usize> = (0..p).collect();
-        // slot positions that failed this request (transport failure or
-        // an app-level error such as a lost partition)
-        let mut failed_pos: HashSet<usize> = HashSet::new();
+        // shards that failed this request (transport failure or an
+        // app-level error such as a lost partition)
+        let mut failed_shards: HashSet<usize> = HashSet::new();
         let mut merged: Vec<Vec<(u32, u64)>> = vec![Vec::new(); queries.len()];
         let mut probed_total = 0usize;
         let mut answered = 0usize;
@@ -629,8 +891,8 @@ impl Router {
                 break;
             }
             // target: for each uncovered partition, its first live
-            // untried home; remember one partition per target so the
-            // hedge backup can come from that partition's replica set
+            // untried Live home; remember one partition per target so
+            // the hedge backup can come from that partition's replicas
             let mut targets: BTreeMap<usize, usize> = BTreeMap::new();
             // partitions an already-chosen target would cover if it
             // answers — greedily skipping them keeps the fan-out near
@@ -640,13 +902,14 @@ impl Router {
                 if prospective.contains(&partition) {
                     continue;
                 }
-                let home = meta.home_positions(partition).find(|&pos| {
-                    !failed_pos.contains(&pos)
-                        && self.alive[meta.shards[pos]].load(Ordering::SeqCst)
+                let home = meta.homes[partition].iter().find(|h| {
+                    h.state == ReplicaState::Live
+                        && !failed_shards.contains(&h.shard)
+                        && self.alive[h.shard].load(Ordering::SeqCst)
                 });
-                if let Some(pos) = home {
-                    targets.entry(pos).or_insert(partition);
-                    prospective.extend(meta.partitions_of(pos));
+                if let Some(h) = home {
+                    targets.entry(h.shard).or_insert(partition);
+                    prospective.extend(meta.live_partitions_on(h.shard));
                 }
             }
             if targets.is_empty() {
@@ -666,44 +929,40 @@ impl Router {
                 }
             }
             let calls: Vec<(usize, usize)> = targets.into_iter().collect();
+            let query_req = &query_req;
             let results: Vec<(usize, (usize, Result<ShardReply, ShardError>))> =
                 std::thread::scope(|s| {
                     let handles: Vec<_> = calls
                         .iter()
-                        .map(|&(pos, partition)| {
+                        .map(|&(shard, partition)| {
                             let meta = &meta;
-                            let failed_pos = &failed_pos;
+                            let failed_shards = &failed_shards;
                             s.spawn(move || {
-                                let req = ShardRequest::IndexQuery {
-                                    name: name.to_string(),
-                                    k: k as u32,
-                                    queries: queries.to_vec(),
-                                };
+                                let req = query_req(shard);
                                 // backup replica: the partition's next
-                                // live untried home
-                                let backup = meta
-                                    .home_positions(partition)
-                                    .find(|&b| {
-                                        b != pos
-                                            && !failed_pos.contains(&b)
-                                            && self.alive[meta.shards[b]]
-                                                .load(Ordering::SeqCst)
+                                // live untried Live home
+                                let backup = meta.homes[partition]
+                                    .iter()
+                                    .find(|h| {
+                                        h.shard != shard
+                                            && h.state == ReplicaState::Live
+                                            && !failed_shards.contains(&h.shard)
+                                            && self.alive[h.shard].load(Ordering::SeqCst)
                                     })
-                                    .map(|b| meta.shards[b]);
-                                (pos, self.hedged_call(meta.shards[pos], backup, &req))
+                                    .map(|h| h.shard);
+                                // the backup answers for its own
+                                // partitions, so it needs its own filter
+                                let backup_req = match backup {
+                                    Some(b) if filtered => Some(query_req(b)),
+                                    _ => None,
+                                };
+                                (shard, self.hedged_call(shard, backup, &req, backup_req.as_ref()))
                             })
                         })
                         .collect();
                     handles.into_iter().map(|h| h.join().expect("query thread")).collect()
                 });
-            for (pos, (answered_by, result)) in results {
-                // the answer may have come from the hedge backup, which
-                // covers its *own* partitions, not the primary's
-                let answered_pos = meta
-                    .shards
-                    .iter()
-                    .position(|&t| t == answered_by)
-                    .unwrap_or(pos);
+            for (shard, (answered_by, result)) in results {
                 match result {
                     Ok(ShardReply::Hits { probed, hits }) => {
                         if hits.len() != queries.len() {
@@ -719,7 +978,11 @@ impl Router {
                             per_query
                                 .extend(shard_hits.iter().map(|h: &WireHit| (h.hamming, h.id)));
                         }
-                        for covered in meta.partitions_of(answered_pos) {
+                        // the answer may have come from the hedge
+                        // backup; either way it covers exactly the
+                        // partitions the answering shard serves reads
+                        // for (and, when filtering, was asked about)
+                        for covered in meta.live_partitions_on(answered_by) {
                             uncovered.remove(&covered);
                         }
                     }
@@ -728,7 +991,7 @@ impl Router {
                         // (e.g. a restarted process lost its partition,
                         // or the frame was corrupted in flight): its
                         // partitions stay uncovered for other replicas
-                        failed_pos.insert(pos);
+                        failed_shards.insert(shard);
                         first_error.get_or_insert(format!("shard {answered_by}: {message}"));
                     }
                     Ok(other) => {
@@ -739,10 +1002,10 @@ impl Router {
                     Err(e) => {
                         // hedged_call only fails after every launched
                         // probe failed; blame the one whose error came
-                        // back and sideline both positions this request
+                        // back and sideline both shards this request
                         self.note_failure(answered_by, &e);
-                        failed_pos.insert(pos);
-                        failed_pos.insert(answered_pos);
+                        failed_shards.insert(shard);
+                        failed_shards.insert(answered_by);
                         first_error.get_or_insert(format!("shard {answered_by}: {e}"));
                     }
                 }
@@ -781,13 +1044,17 @@ impl Router {
     /// Append rows to the cluster index `name`, returning the assigned
     /// global ids in row order. Ids are reserved under the router's
     /// index lock, then each row fans out to every home of its
-    /// partition — the same rotation the build used, in ascending id
-    /// order, so per-shard id order stays a strictly increasing
-    /// subsequence of the global order and merged queries stay exact.
-    /// Any shard failure fails the push (the reserved ids become
-    /// harmless gaps — ids are never reused, and replicas stay
+    /// partition (`Live` and `Rebuilding` alike, so a replica under
+    /// repair never misses racing writes), in ascending id order, so
+    /// per-shard id order stays a strictly increasing subsequence of
+    /// the global order and merged queries stay exact. Without a write
+    /// quorum any shard failure fails the push (the reserved ids
+    /// become harmless gaps — ids are never reused, and replicas stay
     /// consistent because a failed push commits nowhere the caller can
-    /// observe as success).
+    /// observe as success). With [`RouterConfig::write_quorum`] set,
+    /// the push succeeds once every touched partition has quorum acks
+    /// and a live ack; laggard homes are marked dirty and queued for
+    /// anti-entropy repair.
     pub fn index_push(&self, name: &str, rows: &[Vec<f64>]) -> Result<Vec<u64>, String> {
         let (meta, first_gid) = {
             let mut indexes = self.indexes.lock().expect("router indexes lock");
@@ -800,14 +1067,14 @@ impl Router {
         if rows.is_empty() {
             return Ok(Vec::new());
         }
-        let p = meta.shards.len();
+        let p = meta.partitions;
         let gids: Vec<u64> = (0..rows.len() as u64).map(|i| first_gid + i).collect();
         // group the batch per home shard, preserving ascending id order
         let mut parts: BTreeMap<usize, (Vec<u64>, Vec<Vec<f64>>)> = BTreeMap::new();
         for (gid, row) in gids.iter().zip(rows) {
             let partition = *gid as usize % p;
-            for pos in meta.home_positions(partition) {
-                let part = parts.entry(meta.shards[pos]).or_default();
+            for home in &meta.homes[partition] {
+                let part = parts.entry(home.shard).or_default();
                 part.0.push(*gid);
                 part.1.push(row.clone());
             }
@@ -843,19 +1110,77 @@ impl Router {
                 .collect();
             handles.into_iter().map(|h| h.join().expect("push thread")).collect()
         });
+        let mut acked: HashSet<usize> = HashSet::new();
+        let mut failures: Vec<(usize, String)> = Vec::new();
         for (shard, result) in results {
-            if let Err(e) = result {
-                return Err(format!("index push failed on shard {shard}: {e}"));
+            match result {
+                Ok(()) => {
+                    acked.insert(shard);
+                }
+                Err(e) => failures.push((shard, e)),
             }
         }
+        if failures.is_empty() {
+            return Ok(gids);
+        }
+        let Some(quorum) = self.config.write_quorum else {
+            let (shard, e) = &failures[0];
+            return Err(format!("index push failed on shard {shard}: {e}"));
+        };
+        // quorum mode: every touched partition needs >= quorum acks
+        // *and* a surviving Live ack (so demoting the laggards can
+        // never leave a partition with zero readable replicas)
+        let touched: BTreeSet<usize> = gids.iter().map(|&g| g as usize % p).collect();
+        for &partition in &touched {
+            let homes = &meta.homes[partition];
+            let need = quorum.clamp(1, homes.len());
+            let acks = homes.iter().filter(|h| acked.contains(&h.shard)).count();
+            let live_acks = homes
+                .iter()
+                .filter(|h| h.state == ReplicaState::Live && acked.contains(&h.shard))
+                .count();
+            if acks < need || live_acks == 0 {
+                let (shard, e) = &failures[0];
+                return Err(format!(
+                    "index push failed on shard {shard}: {e} \
+                     (write quorum {need} not met for partition {partition})"
+                ));
+            }
+        }
+        // quorum met everywhere: the laggards' touched homes go dirty
+        // and queue for anti-entropy repair
+        let dirty: HashSet<usize> = failures.iter().map(|(shard, _)| *shard).collect();
+        self.quarantine(name, &touched, &dirty);
         Ok(gids)
+    }
+
+    /// Demote the `dirty` shards' homes of the given partitions to
+    /// `Rebuilding` (they missed a quorum write) so repair re-streams
+    /// them before they serve reads again.
+    fn quarantine(&self, name: &str, partitions: &BTreeSet<usize>, dirty: &HashSet<usize>) {
+        {
+            let mut indexes = self.indexes.lock().expect("router indexes lock");
+            if let Some(meta) = indexes.get_mut(name) {
+                for &partition in partitions {
+                    for h in meta.homes[partition].iter_mut() {
+                        if dirty.contains(&h.shard) && h.state == ReplicaState::Live {
+                            h.state = ReplicaState::Rebuilding;
+                        }
+                    }
+                }
+            }
+        }
+        self.refresh_under_replicated();
     }
 
     /// Tombstone rows of the cluster index `name` by global id; returns
     /// how many were present and live. Each id fans out to every home
-    /// of its partition; because writes are all-or-nothing, replicas
-    /// agree, and the per-shard removal counts sum to `replicas` times
-    /// the true count. Any shard failure fails the delete.
+    /// of its partition, one request per (partition, home) pair so the
+    /// removal count can come from a single designated `Live` replica
+    /// per partition (replicas agree when consistent; a rebuilding
+    /// home's count is never trusted). Without a write quorum any home
+    /// failure fails the delete; with [`RouterConfig::write_quorum`]
+    /// set the laggard home is marked dirty and queued for repair.
     pub fn index_delete(&self, name: &str, ids: &[u64]) -> Result<usize, String> {
         let meta = self
             .indexes
@@ -867,41 +1192,91 @@ impl Router {
         if ids.is_empty() {
             return Ok(0);
         }
-        let p = meta.shards.len();
-        let mut parts: BTreeMap<usize, Vec<u64>> = BTreeMap::new();
+        let p = meta.partitions;
+        let mut per_part: BTreeMap<usize, Vec<u64>> = BTreeMap::new();
         for &id in ids {
-            for pos in meta.home_positions(id as usize % p) {
-                parts.entry(meta.shards[pos]).or_default().push(id);
-            }
+            per_part.entry(id as usize % p).or_default().push(id);
         }
-        let results: Vec<(usize, Result<u64, String>)> = std::thread::scope(|s| {
-            let handles: Vec<_> = parts
+        let calls: Vec<(usize, usize, Vec<u64>)> = per_part
+            .iter()
+            .flat_map(|(&partition, part_ids)| {
+                meta.homes[partition]
+                    .iter()
+                    .map(move |h| (partition, h.shard, part_ids.clone()))
+            })
+            .collect();
+        let results: Vec<((usize, usize), Result<u64, String>)> = std::thread::scope(|s| {
+            let handles: Vec<_> = calls
                 .into_iter()
-                .map(|(shard, ids)| {
+                .map(|(partition, shard, part_ids)| {
                     let transport = self.transports[shard].clone();
                     s.spawn(move || {
-                        let reply = transport
-                            .call(&ShardRequest::IndexDelete { name: name.to_string(), ids });
+                        let reply = transport.call(&ShardRequest::IndexDelete {
+                            name: name.to_string(),
+                            ids: part_ids,
+                        });
                         let out = match reply {
                             Ok(ShardReply::Deleted { removed }) => Ok(removed),
                             Ok(ShardReply::Err { message }) => Err(message),
                             Ok(other) => Err(format!("unexpected reply {other:?}")),
                             Err(e) => Err(e.to_string()),
                         };
-                        (shard, out)
+                        ((partition, shard), out)
                     })
                 })
                 .collect();
             handles.into_iter().map(|h| h.join().expect("delete thread")).collect()
         });
-        let mut removed = 0u64;
-        for (shard, result) in results {
+        let mut counts: HashMap<(usize, usize), u64> = HashMap::new();
+        let mut failures: Vec<((usize, usize), String)> = Vec::new();
+        for (key, result) in results {
             match result {
-                Ok(n) => removed += n,
-                Err(e) => return Err(format!("index delete failed on shard {shard}: {e}")),
+                Ok(n) => {
+                    counts.insert(key, n);
+                }
+                Err(e) => failures.push((key, e)),
             }
         }
-        Ok(removed as usize / meta.replicas)
+        let mut removed = 0u64;
+        let mut dirty_pairs: Vec<(usize, usize)> = Vec::new();
+        for &partition in per_part.keys() {
+            let homes = &meta.homes[partition];
+            let need = match self.config.write_quorum {
+                Some(q) => q.clamp(1, homes.len()),
+                None => homes.len(),
+            };
+            let acks = homes
+                .iter()
+                .filter(|h| counts.contains_key(&(partition, h.shard)))
+                .count();
+            let live_ack = homes.iter().find(|h| {
+                h.state == ReplicaState::Live && counts.contains_key(&(partition, h.shard))
+            });
+            let (Some(counting), true) = (live_ack, acks >= need) else {
+                return Err(match failures.iter().find(|((part, _), _)| *part == partition) {
+                    Some(((_, shard), e)) => {
+                        format!("index delete failed on shard {shard}: {e}")
+                    }
+                    // every home acked but none is Live: the partition
+                    // is mid-repair with no readable replica yet
+                    None => format!(
+                        "index delete failed: partition {partition} has no live replica"
+                    ),
+                });
+            };
+            removed += counts[&(partition, counting.shard)];
+            for h in homes {
+                if !counts.contains_key(&(partition, h.shard)) {
+                    dirty_pairs.push((partition, h.shard));
+                }
+            }
+        }
+        if !dirty_pairs.is_empty() {
+            let partitions: BTreeSet<usize> = dirty_pairs.iter().map(|&(q, _)| q).collect();
+            let dirty: HashSet<usize> = dirty_pairs.iter().map(|&(_, s)| s).collect();
+            self.quarantine(name, &partitions, &dirty);
+        }
+        Ok(removed as usize)
     }
 
     /// Fully compact the cluster index `name` on every holding shard
@@ -916,9 +1291,9 @@ impl Router {
             .ok_or_else(|| format!("unknown index '{name}'"))?;
         let results: Vec<(usize, Result<(), String>)> = std::thread::scope(|s| {
             let handles: Vec<_> = meta
-                .shards
-                .iter()
-                .map(|&shard| {
+                .holders()
+                .into_iter()
+                .map(|shard| {
                     let transport = self.transports[shard].clone();
                     s.spawn(move || {
                         let reply = transport
@@ -943,6 +1318,280 @@ impl Router {
         Ok(())
     }
 
+    /// One pass of the self-healing driver, normally run by
+    /// [`spawn_health_monitor`] after each probe round: re-home
+    /// partitions away from shards dead past
+    /// [`RouterConfig::repair_grace`], anti-entropy-repair every
+    /// reachable `Rebuilding` home (stream → install → promote), and
+    /// refresh the under-replication gauge. Returns how many repairs
+    /// completed this tick. Safe to call at any time; with nothing to
+    /// heal it is a cheap scan.
+    pub fn repair_tick(&self) -> usize {
+        self.rebalance_expired();
+        let completed = self.run_repairs();
+        self.refresh_under_replicated();
+        completed
+    }
+
+    /// Phase A of [`Router::repair_tick`]: shards dead past the grace
+    /// period abandon their assignments, and every under-replicated
+    /// partition is topped back up onto the least-loaded live survivor
+    /// as a `Rebuilding` home. Each changed index bumps its placement
+    /// epoch.
+    fn rebalance_expired(&self) {
+        let Some(grace) = self.config.repair_grace else {
+            return;
+        };
+        let now = Instant::now();
+        let expired: BTreeSet<usize> = {
+            let dead = self.dead_since.lock().expect("router dead-since lock");
+            (0..self.transports.len())
+                .filter(|&i| !self.alive[i].load(Ordering::SeqCst))
+                .filter(|&i| dead[i].is_some_and(|t| now.duration_since(t) >= grace))
+                .collect()
+        };
+        let alive_now = self.live_shards();
+        let mut rebalanced = 0usize;
+        {
+            let mut indexes = self.indexes.lock().expect("router indexes lock");
+            for meta in indexes.values_mut() {
+                let mut changed = false;
+                for homes in meta.homes.iter_mut() {
+                    let before = homes.len();
+                    homes.retain(|h| !expired.contains(&h.shard));
+                    changed |= homes.len() != before;
+                }
+                // top under-replicated partitions back up from alive
+                // survivors, least-loaded first (deterministic: load,
+                // then shard index)
+                let mut load = vec![0usize; self.transports.len()];
+                for homes in &meta.homes {
+                    for h in homes {
+                        load[h.shard] += 1;
+                    }
+                }
+                for homes in meta.homes.iter_mut() {
+                    while homes.len() < meta.replicas {
+                        let candidate = alive_now
+                            .iter()
+                            .copied()
+                            .filter(|s| {
+                                !expired.contains(s) && !homes.iter().any(|h| h.shard == *s)
+                            })
+                            .min_by_key(|&s| (load[s], s));
+                        let Some(shard) = candidate else {
+                            break;
+                        };
+                        homes.push(Home { shard, state: ReplicaState::Rebuilding });
+                        load[shard] += 1;
+                        changed = true;
+                    }
+                }
+                if changed {
+                    meta.epoch += 1;
+                    rebalanced += 1;
+                }
+            }
+        }
+        for _ in 0..rebalanced {
+            self.metric(|m| m.on_cluster_rebalance());
+        }
+    }
+
+    /// Phase B of [`Router::repair_tick`]: snapshot every reachable
+    /// `Rebuilding` home with its repair source and stream each one
+    /// back to `Live`. Failures leave the home `Rebuilding` for the
+    /// next tick — never half-promoted.
+    fn run_repairs(&self) -> usize {
+        let jobs: Vec<RepairJob> = {
+            let indexes = self.indexes.lock().expect("router indexes lock");
+            let mut jobs = Vec::new();
+            for (name, meta) in indexes.iter() {
+                for (partition, homes) in meta.homes.iter().enumerate() {
+                    for home in homes {
+                        if home.state != ReplicaState::Rebuilding
+                            || !self.alive[home.shard].load(Ordering::SeqCst)
+                        {
+                            continue;
+                        }
+                        let source = homes
+                            .iter()
+                            .find(|h| {
+                                h.shard != home.shard
+                                    && h.state == ReplicaState::Live
+                                    && self.alive[h.shard].load(Ordering::SeqCst)
+                            })
+                            .map(|h| h.shard);
+                        jobs.push(RepairJob {
+                            name: name.clone(),
+                            spec: meta.spec.clone(),
+                            partitions: meta.partitions,
+                            epoch: meta.epoch,
+                            partition,
+                            target: home.shard,
+                            source,
+                        });
+                    }
+                }
+            }
+            jobs
+        };
+        let mut completed = 0usize;
+        for job in jobs {
+            self.metric(|m| m.on_repair_started());
+            match self.repair_one(&job) {
+                Ok(_rows) => {
+                    completed += 1;
+                    self.metric(|m| m.on_repair_completed());
+                }
+                Err(_e) => self.metric(|m| m.on_repair_failed()),
+            }
+        }
+        completed
+    }
+
+    /// Stream one partition from its live source onto the rebuilding
+    /// target (reset first, then bounded chunks), and promote the home
+    /// to `Live` — but only if the placement epoch is unchanged, so a
+    /// repair that raced a re-homing never promotes a stale slot.
+    /// Returns the rows re-streamed.
+    fn repair_one(&self, job: &RepairJob) -> Result<u64, String> {
+        let deadline = self.config.deadline;
+        let install = |ids: Vec<u64>, words: Vec<u64>, reset: bool| -> Result<u64, String> {
+            let req = ShardRequest::PartitionInstall {
+                name: job.name.clone(),
+                spec: job.spec.clone(),
+                partition: job.partition as u32,
+                shards: job.partitions as u32,
+                ids,
+                words,
+                reset,
+            };
+            match self.transports[job.target].call_deadline(&req, deadline) {
+                Ok(ShardReply::Committed { rows }) => Ok(rows),
+                Ok(ShardReply::Err { message }) => Err(message),
+                Ok(other) => Err(format!("unexpected reply {other:?}")),
+                Err(e) => {
+                    self.note_failure(job.target, &e);
+                    Err(e.to_string())
+                }
+            }
+        };
+        let mut streamed = 0u64;
+        match job.source {
+            None => {
+                // no surviving copy: install empty so the partition is
+                // served (empty) instead of staying a routing hole
+                install(Vec::new(), Vec::new(), true)?;
+            }
+            Some(source) => {
+                let mut after = 0u64;
+                let mut first = true;
+                loop {
+                    let req = ShardRequest::PartitionExport {
+                        name: job.name.clone(),
+                        partition: job.partition as u32,
+                        shards: job.partitions as u32,
+                        after,
+                        limit: REPAIR_CHUNK_ROWS as u32,
+                    };
+                    let (ids, words, done) =
+                        match self.transports[source].call_deadline(&req, deadline) {
+                            Ok(ShardReply::PartitionChunk { ids, words, done }) => {
+                                (ids, words, done)
+                            }
+                            Ok(ShardReply::Err { message }) => return Err(message),
+                            Ok(other) => return Err(format!("unexpected reply {other:?}")),
+                            Err(e) => {
+                                self.note_failure(source, &e);
+                                return Err(e.to_string());
+                            }
+                        };
+                    if !done && ids.is_empty() {
+                        return Err("repair stream stalled without progress".into());
+                    }
+                    let next_after = ids.last().copied();
+                    let rows = ids.len() as u64;
+                    install(ids, words, first)?;
+                    first = false;
+                    streamed += rows;
+                    if rows > 0 {
+                        self.metric(|m| m.on_repair_rows(rows));
+                    }
+                    if done {
+                        break;
+                    }
+                    after = next_after.expect("non-empty chunk");
+                }
+            }
+        }
+        let mut indexes = self.indexes.lock().expect("router indexes lock");
+        let meta = indexes
+            .get_mut(&job.name)
+            .ok_or_else(|| format!("unknown index '{}'", job.name))?;
+        if meta.epoch != job.epoch {
+            return Err("placement changed during repair".into());
+        }
+        let slot = meta.homes[job.partition]
+            .iter_mut()
+            .find(|h| h.shard == job.target && h.state == ReplicaState::Rebuilding)
+            .ok_or_else(|| "home re-assigned during repair".to_string())?;
+        slot.state = ReplicaState::Live;
+        Ok(streamed)
+    }
+
+    /// Recompute the `under_replicated_partitions` gauge: partitions
+    /// with fewer `Live` homes than their replica target, across all
+    /// indexes.
+    fn refresh_under_replicated(&self) {
+        let under = {
+            let indexes = self.indexes.lock().expect("router indexes lock");
+            let mut n = 0u64;
+            for meta in indexes.values() {
+                for homes in &meta.homes {
+                    let live =
+                        homes.iter().filter(|h| h.state == ReplicaState::Live).count();
+                    if live < meta.replicas {
+                        n += 1;
+                    }
+                }
+            }
+            n
+        };
+        self.metric(|m| m.set_under_replicated_partitions(under));
+    }
+
+    /// Per-partition replica health of a cluster index: each home's
+    /// shard, endpoint, liveness and repair state, in assignment
+    /// order. `None` for an unknown index.
+    pub fn partition_health(&self, name: &str) -> Option<Vec<PartitionHealth>> {
+        let meta = self.indexes.lock().expect("router indexes lock").get(name).cloned()?;
+        Some(
+            meta.homes
+                .iter()
+                .enumerate()
+                .map(|(partition, homes)| PartitionHealth {
+                    partition,
+                    replicas: homes
+                        .iter()
+                        .map(|h| ReplicaHealth {
+                            shard: h.shard,
+                            endpoint: self.transports[h.shard].describe(),
+                            alive: self.alive[h.shard].load(Ordering::SeqCst),
+                            state: h.state,
+                        })
+                        .collect(),
+                })
+                .collect(),
+        )
+    }
+
+    /// Placement epoch of a cluster index: 0 for a pristine build,
+    /// bumped on every re-homing. `None` for an unknown index.
+    pub fn placement_epoch(&self, name: &str) -> Option<u64> {
+        self.indexes.lock().expect("router indexes lock").get(name).map(|m| m.epoch)
+    }
+
     /// Whether the cluster has an index registered under `name`.
     pub fn has_index(&self, name: &str) -> bool {
         self.indexes.lock().expect("router indexes lock").contains_key(name)
@@ -964,10 +1613,12 @@ impl Router {
 }
 
 /// Spawn a detached liveness monitor that probes all shards every
-/// `interval` until `stop` is set or the router is dropped. Holds only
-/// a weak reference, so it never keeps a cluster alive by itself.
-/// Returns the spawn error instead of panicking when the OS refuses a
-/// thread — callers degrade to serving without background probing.
+/// `interval` until `stop` is set or the router is dropped, then runs
+/// one [`Router::repair_tick`] — so rebalancing and anti-entropy
+/// repair ride the same heartbeat as liveness. Holds only a weak
+/// reference, so it never keeps a cluster alive by itself. Returns the
+/// spawn error instead of panicking when the OS refuses a thread —
+/// callers degrade to serving without background probing.
 pub fn spawn_health_monitor(
     router: &ClusterHandle,
     interval: Duration,
@@ -983,6 +1634,7 @@ pub fn spawn_health_monitor(
             match weak.upgrade() {
                 Some(router) => {
                     router.probe();
+                    router.repair_tick();
                 }
                 None => return,
             }

@@ -136,6 +136,19 @@ impl ShardEngine {
         })
     }
 
+    /// Forget a committed index entirely — rows, tombstones and id
+    /// allocator — as if this shard's disk were wiped. The chaos-test
+    /// hook for the anti-entropy repair path; returns whether the index
+    /// existed.
+    pub fn wipe_index(&self, name: &str) -> bool {
+        let existed =
+            self.indexes.lock().expect("shard indexes lock").remove(name).is_some();
+        if existed {
+            self.refresh_index_gauges();
+        }
+        existed
+    }
+
     /// Re-export the lifecycle gauges, summed over every committed
     /// mutable index on this shard.
     fn refresh_index_gauges(&self) {
@@ -164,12 +177,18 @@ impl ShardEngine {
             }
             ShardRequest::IndexRows { name, ids, rows } => self.index_rows_chunk(name, ids, rows),
             ShardRequest::IndexCommit { name } => self.index_commit(&name),
-            ShardRequest::IndexQuery { name, k, queries } => {
-                self.index_query(&name, k as usize, &queries)
+            ShardRequest::IndexQuery { name, k, queries, shards, parts } => {
+                self.index_query(&name, k as usize, &queries, shards, &parts)
             }
             ShardRequest::IndexPush { name, ids, rows } => self.index_push(&name, &ids, &rows),
             ShardRequest::IndexDelete { name, ids } => self.index_delete(&name, &ids),
             ShardRequest::IndexCompact { name } => self.index_compact(&name),
+            ShardRequest::PartitionExport { name, partition, shards, after, limit } => {
+                self.partition_export(&name, partition, shards, after, limit as usize)
+            }
+            ShardRequest::PartitionInstall { name, spec, partition, shards, ids, words, reset } => {
+                self.partition_install(&name, spec, partition, shards, ids, words, reset)
+            }
             ShardRequest::Health => ShardReply::Health {
                 line: health_line(
                     &self.variant_names(),
@@ -273,24 +292,50 @@ impl ShardEngine {
         self.indexes.lock().expect("shard indexes lock").get(name).cloned()
     }
 
-    fn index_query(&self, name: &str, k: usize, queries: &[Vec<f64>]) -> ShardReply {
+    fn index_query(
+        &self,
+        name: &str,
+        k: usize,
+        queries: &[Vec<f64>],
+        shards: u32,
+        parts: &[u32],
+    ) -> ShardReply {
         let Some(index) = self.index(name) else {
             return ShardReply::Err { message: format!("unknown index '{name}'") };
         };
+        if !parts.is_empty() && shards == 0 {
+            return ShardReply::Err { message: "partition filter needs a nonzero modulus".into() };
+        }
         let start = Instant::now();
         let result = match index.as_ref() {
-            // the mutable index's hits already carry global ids
-            ShardIndex::Live(m) => m.query_batch(queries, k).map(|(per_query, probed)| {
-                let hits = per_query
-                    .into_iter()
-                    .map(|hs| {
-                        hs.into_iter()
-                            .map(|h| WireHit { id: h.id as u64, hamming: h.hamming })
-                            .collect()
-                    })
-                    .collect();
-                (hits, probed)
-            }),
+            // the mutable index's hits already carry global ids; a
+            // non-empty filter scopes the scan to the router-credited
+            // partitions so rebuilding replicas never leak stale rows
+            ShardIndex::Live(m) => {
+                let scan = if parts.is_empty() {
+                    m.query_batch(queries, k)
+                } else {
+                    let modulus = shards as u64;
+                    let keep = move |id: u64| parts.contains(&((id % modulus) as u32));
+                    m.query_batch_where(queries, k, &keep)
+                };
+                scan.map(|(per_query, probed)| {
+                    let hits = per_query
+                        .into_iter()
+                        .map(|hs| {
+                            hs.into_iter()
+                                .map(|h| WireHit { id: h.id as u64, hamming: h.hamming })
+                                .collect()
+                        })
+                        .collect();
+                    (hits, probed)
+                })
+            }
+            ShardIndex::Static { .. } if !parts.is_empty() => {
+                return ShardReply::Err {
+                    message: "partition filters are unsupported on a bucketed index".into(),
+                };
+            }
             ShardIndex::Static { handle, ids } => {
                 handle.query_batch(queries, k).map(|(per_query, probed)| {
                     let hits = per_query
@@ -350,6 +395,109 @@ impl ShardEngine {
         self.metrics.on_index_delete(removed);
         self.refresh_index_gauges();
         ShardReply::Deleted { removed: removed as u64 }
+    }
+
+    /// One pull of an anti-entropy export: live rows of `partition`
+    /// (ids strictly above `after`, tombstones folded out) as packed
+    /// code words, at most `limit` rows, `done` when nothing remains.
+    fn partition_export(
+        &self,
+        name: &str,
+        partition: u32,
+        shards: u32,
+        after: u64,
+        limit: usize,
+    ) -> ShardReply {
+        if shards == 0 || partition >= shards {
+            return ShardReply::Err {
+                message: format!("bad partition {partition} of {shards}"),
+            };
+        }
+        let Some(index) = self.index(name) else {
+            return ShardReply::Err { message: format!("unknown index '{name}'") };
+        };
+        let ShardIndex::Live(m) = index.as_ref() else {
+            return ShardReply::Err {
+                message: format!("index '{name}' is batch-built (bucketed) and immutable"),
+            };
+        };
+        let (modulus, class) = (shards as u64, partition as u64);
+        let (mut ids, mut words) =
+            m.export_packed(|id| id > after && id % modulus == class);
+        let done = ids.len() <= limit;
+        if !done {
+            let wpc = m.words_per_code();
+            ids.truncate(limit);
+            words.truncate(limit * wpc);
+        }
+        ShardReply::PartitionChunk { ids, words, done }
+    }
+
+    /// Install one repair chunk: `reset` first clears the partition's
+    /// stale rows (creating the index from `spec` on a wiped shard),
+    /// then the packed words land verbatim as a sealed segment. Replies
+    /// `Committed` with the rows installed in this chunk.
+    fn partition_install(
+        &self,
+        name: &str,
+        spec: IndexSpec,
+        partition: u32,
+        shards: u32,
+        ids: Vec<u64>,
+        words: Vec<u64>,
+        reset: bool,
+    ) -> ShardReply {
+        if shards == 0 || partition >= shards {
+            return ShardReply::Err {
+                message: format!("bad partition {partition} of {shards}"),
+            };
+        }
+        let index = {
+            let mut map = self.indexes.lock().expect("shard indexes lock");
+            match map.get(name) {
+                Some(index) => index.clone(),
+                None => {
+                    // a wiped shard re-creates the index empty; rows
+                    // arrive solely through the repair stream
+                    let fresh = match MutableIndex::new(spec.clone()) {
+                        Ok(m) => Arc::new(ShardIndex::Live(m)),
+                        Err(e) => {
+                            return ShardReply::Err {
+                                message: format!("install failed: {e}"),
+                            }
+                        }
+                    };
+                    map.insert(name.to_string(), fresh.clone());
+                    fresh
+                }
+            }
+        };
+        let ShardIndex::Live(m) = index.as_ref() else {
+            return ShardReply::Err {
+                message: format!("index '{name}' is batch-built (bucketed) and immutable"),
+            };
+        };
+        let have = m.spec();
+        if have.structure != spec.structure
+            || have.m != spec.m
+            || have.n != spec.n
+            || have.seed != spec.seed
+        {
+            return ShardReply::Err {
+                message: format!("index '{name}' exists with a different spec"),
+            };
+        }
+        if reset {
+            let (modulus, class) = (shards as u64, partition as u64);
+            m.remove_where(|id| id % modulus == class);
+        }
+        match m.install_packed(ids, words) {
+            Ok(rows) => {
+                self.refresh_index_gauges();
+                ShardReply::Committed { rows: rows as u64 }
+            }
+            Err(e) => ShardReply::Err { message: format!("install failed: {e}") },
+        }
     }
 
     fn index_compact(&self, name: &str) -> ShardReply {

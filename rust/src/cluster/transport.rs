@@ -146,6 +146,13 @@ impl LocalTransport {
     pub fn is_down(&self) -> bool {
         self.down.load(Ordering::SeqCst)
     }
+
+    /// The wrapped shard engine. Chaos tests reach through here to wipe
+    /// a shard's index state between death and re-admission, simulating
+    /// a disk loss the anti-entropy repair must heal.
+    pub fn engine(&self) -> &Arc<ShardEngine> {
+        &self.engine
+    }
 }
 
 impl ShardTransport for LocalTransport {

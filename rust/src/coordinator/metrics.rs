@@ -53,6 +53,18 @@ pub struct Metrics {
     shard_readmissions: AtomicU64,
     /// cluster: merged answers that lost at least one partition
     partial_answers: AtomicU64,
+    /// cluster: placement-epoch bumps from grace-period rebalancing
+    cluster_rebalances: AtomicU64,
+    /// cluster: anti-entropy partition repairs begun
+    repairs_started: AtomicU64,
+    /// cluster: repairs that streamed, installed, and promoted
+    repairs_completed: AtomicU64,
+    /// cluster: repairs abandoned mid-stream (replica stays Rebuilding)
+    repairs_failed: AtomicU64,
+    /// cluster: live rows re-streamed by anti-entropy repair
+    repair_rows_streamed: AtomicU64,
+    /// gauge: partitions with fewer Live homes than configured replicas
+    under_replicated_partitions: AtomicU64,
 }
 
 #[derive(Debug, Default, Clone, Copy)]
@@ -125,6 +137,18 @@ pub struct MetricsSnapshot {
     pub shard_readmissions: u64,
     /// merged cluster answers that lost at least one partition
     pub partial_answers: u64,
+    /// placement-epoch bumps from grace-period rebalancing
+    pub cluster_rebalances: u64,
+    /// anti-entropy partition repairs begun
+    pub repairs_started: u64,
+    /// repairs that streamed, installed, and promoted to Live
+    pub repairs_completed: u64,
+    /// repairs abandoned mid-stream (replica left Rebuilding)
+    pub repairs_failed: u64,
+    /// live rows re-streamed by anti-entropy repair
+    pub repair_rows_streamed: u64,
+    /// partitions with fewer Live homes than configured replicas (gauge)
+    pub under_replicated_partitions: u64,
 }
 
 const RESERVOIR: usize = 100_000;
@@ -158,6 +182,12 @@ impl Metrics {
             health_probe_errors: AtomicU64::new(0),
             shard_readmissions: AtomicU64::new(0),
             partial_answers: AtomicU64::new(0),
+            cluster_rebalances: AtomicU64::new(0),
+            repairs_started: AtomicU64::new(0),
+            repairs_completed: AtomicU64::new(0),
+            repairs_failed: AtomicU64::new(0),
+            repair_rows_streamed: AtomicU64::new(0),
+            under_replicated_partitions: AtomicU64::new(0),
         }
     }
 
@@ -267,6 +297,41 @@ impl Metrics {
         self.partial_answers.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record a placement-epoch bump: a grace-period rebalance re-homed
+    /// at least one partition of one index.
+    pub fn on_cluster_rebalance(&self) {
+        self.cluster_rebalances.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an anti-entropy partition repair starting.
+    pub fn on_repair_started(&self) {
+        self.repairs_started.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a repair that streamed, installed, and promoted its
+    /// replica to `Live`.
+    pub fn on_repair_completed(&self) {
+        self.repairs_completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a repair abandoned mid-stream (the replica stays
+    /// `Rebuilding` and is retried on a later tick).
+    pub fn on_repair_failed(&self) {
+        self.repairs_failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `rows` live rows re-streamed by anti-entropy repair.
+    pub fn on_repair_rows(&self, rows: u64) {
+        self.repair_rows_streamed.fetch_add(rows, Ordering::Relaxed);
+    }
+
+    /// Refresh the under-replication gauge: partitions whose `Live`
+    /// home count is below the configured replica count, summed over
+    /// every registered cluster index.
+    pub fn set_under_replicated_partitions(&self, partitions: u64) {
+        self.under_replicated_partitions.store(partitions, Ordering::Relaxed);
+    }
+
     /// Take a snapshot.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let lat = self.latencies.lock().unwrap().clone();
@@ -320,6 +385,12 @@ impl Metrics {
             health_probe_errors: self.health_probe_errors.load(Ordering::Relaxed),
             shard_readmissions: self.shard_readmissions.load(Ordering::Relaxed),
             partial_answers: self.partial_answers.load(Ordering::Relaxed),
+            cluster_rebalances: self.cluster_rebalances.load(Ordering::Relaxed),
+            repairs_started: self.repairs_started.load(Ordering::Relaxed),
+            repairs_completed: self.repairs_completed.load(Ordering::Relaxed),
+            repairs_failed: self.repairs_failed.load(Ordering::Relaxed),
+            repair_rows_streamed: self.repair_rows_streamed.load(Ordering::Relaxed),
+            under_replicated_partitions: self.under_replicated_partitions.load(Ordering::Relaxed),
         }
     }
 }
@@ -356,7 +427,9 @@ impl std::fmt::Display for MetricsSnapshot {
              index_ns_per_query={:.0} index_pushes={} index_deletes={} \
              index_segments={} index_live_docs={} index_tombstones={} \
              index_compactions={} hedged_requests={} request_retries={} \
-             health_probe_errors={} shard_readmissions={} partial_answers={}",
+             health_probe_errors={} shard_readmissions={} partial_answers={} \
+             cluster_rebalances={} repairs_started={} repairs_completed={} \
+             repairs_failed={} repair_rows_streamed={} under_replicated_partitions={}",
             self.uptime,
             self.submitted,
             self.completed,
@@ -385,7 +458,13 @@ impl std::fmt::Display for MetricsSnapshot {
             self.request_retries,
             self.health_probe_errors,
             self.shard_readmissions,
-            self.partial_answers
+            self.partial_answers,
+            self.cluster_rebalances,
+            self.repairs_started,
+            self.repairs_completed,
+            self.repairs_failed,
+            self.repair_rows_streamed,
+            self.under_replicated_partitions
         )
     }
 }
@@ -480,6 +559,32 @@ mod tests {
         assert!(text.contains("hedged_requests=1"), "{text}");
         assert!(text.contains("request_retries=2"), "{text}");
         assert!(text.contains("partial_answers=1"), "{text}");
+    }
+
+    #[test]
+    fn repair_counters_and_under_replication_gauge_export() {
+        let m = Metrics::new();
+        m.on_cluster_rebalance();
+        m.on_repair_started();
+        m.on_repair_started();
+        m.on_repair_completed();
+        m.on_repair_failed();
+        m.on_repair_rows(1024);
+        m.on_repair_rows(76);
+        m.set_under_replicated_partitions(3);
+        let s = m.snapshot();
+        assert_eq!(s.cluster_rebalances, 1);
+        assert_eq!((s.repairs_started, s.repairs_completed, s.repairs_failed), (2, 1, 1));
+        assert_eq!(s.repair_rows_streamed, 1100);
+        assert_eq!(s.under_replicated_partitions, 3);
+        // the gauge overwrites; the counters accumulate
+        m.set_under_replicated_partitions(0);
+        let s = m.snapshot();
+        assert_eq!(s.under_replicated_partitions, 0);
+        assert_eq!(s.repair_rows_streamed, 1100);
+        let text = format!("{s}");
+        assert!(text.contains("repairs_completed=1"), "{text}");
+        assert!(text.contains("under_replicated_partitions=0"), "{text}");
     }
 
     #[test]

@@ -24,6 +24,8 @@
 //! → VARIANTS            ← OK <name,name,...>
 //! → METRICS             ← OK <snapshot text>
 //! → HEALTH              ← OK healthy variants=<...> indexes=<...> <snapshot>
+//! → CLUSTER [name]      ← OK index=<name> epoch=<e> p0=<shard:state:up|down,...> ...
+//!                         (sharded mode only: per-partition replica health)
 //! → QUIT                (closes the connection)
 //! ```
 //!
@@ -148,6 +150,7 @@ fn dispatch(line: &str, c: &Coordinator, state: &mut ConnState) -> String {
         "INDEXES" => format!("OK {}", c.index_names().join(",")),
         "METRICS" => format!("OK {}", c.metrics().snapshot()),
         "HEALTH" => format!("OK {}", c.health_line()),
+        "CLUSTER" => cluster_status(rest, c),
         "EMBED" => {
             let Some((variant, csv)) = rest.split_once(' ') else {
                 return "ERR usage: EMBED <variant> <f32,f32,...>".into();
@@ -178,6 +181,46 @@ fn dispatch(line: &str, c: &Coordinator, state: &mut ConnState) -> String {
         }
         other => format!("ERR unknown command '{other}'"),
     }
+}
+
+/// `CLUSTER [name]`: per-partition replica health of one cluster index
+/// (or of every cluster index when no name is given), one
+/// `index=<name> epoch=<e> p<i>=<shard:state:up|down,...>` group per
+/// index, groups separated by ` | `.
+fn cluster_status(args: &str, c: &Coordinator) -> String {
+    let Some(router) = c.cluster() else {
+        return "ERR not serving a cluster".into();
+    };
+    let name = args.trim();
+    let names =
+        if name.is_empty() { router.index_names() } else { vec![name.to_string()] };
+    if names.is_empty() {
+        return "OK no cluster indexes".into();
+    }
+    let mut groups = Vec::new();
+    for name in &names {
+        let (Some(epoch), Some(partitions)) =
+            (router.placement_epoch(name), router.partition_health(name))
+        else {
+            return format!("ERR unknown index '{name}'");
+        };
+        let rendered: Vec<String> = partitions
+            .iter()
+            .map(|p| {
+                let homes: Vec<String> = p
+                    .replicas
+                    .iter()
+                    .map(|r| {
+                        let link = if r.alive { "up" } else { "down" };
+                        format!("{}:{}:{link}", r.shard, r.state)
+                    })
+                    .collect();
+                format!("p{}={}", p.partition, homes.join(","))
+            })
+            .collect();
+        groups.push(format!("index={name} epoch={epoch} {}", rendered.join(" ")));
+    }
+    format!("OK {}", groups.join(" | "))
 }
 
 fn index_build(args: &str, state: &mut ConnState) -> String {
@@ -436,6 +479,8 @@ mod tests {
         assert!(e.starts_with("ERR"), "{e}");
         let bad = roundtrip(addr, "EMBED v 1,notanumber");
         assert!(bad.starts_with("ERR bad vector"), "{bad}");
+        // single-node coordinators have no cluster to report on
+        assert_eq!(roundtrip(addr, "CLUSTER"), "ERR not serving a cluster");
         stop.store(true, Ordering::Relaxed);
         h.join().unwrap();
     }
@@ -549,6 +594,55 @@ mod tests {
         assert!(send("INDEX PUSH live").starts_with("ERR usage"));
         drop(reader);
         drop(s);
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_cluster_status_reports_partition_health() {
+        use crate::cluster::{LocalTransport, Router, ShardEngine, ShardTransport};
+        let transports: Vec<Box<dyn ShardTransport>> = (0..3)
+            .map(|i| {
+                let engine =
+                    ShardEngine::new(&format!("shard{i}"), Vec::new()).unwrap();
+                Box::new(LocalTransport::new(Arc::new(engine))) as Box<dyn ShardTransport>
+            })
+            .collect();
+        let router = Router::handle(transports).unwrap();
+        let corpus: Vec<Vec<f64>> = (0..9)
+            .map(|i| (0..8).map(|j| ((i * 5 + j) % 9) as f64 - 4.0).collect())
+            .collect();
+        let ispec = crate::index::IndexSpec::new(
+            crate::pmodel::StructureKind::Circulant,
+            32,
+            8,
+        )
+        .with_seed(4);
+        router.build_index("nn", ispec, &corpus).unwrap();
+        let c = Arc::new(
+            Coordinator::start_with_cluster(
+                Vec::new(),
+                CoordinatorConfig::default(),
+                Some(router),
+            )
+            .unwrap(),
+        );
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let (tx, rx) = mpsc::channel();
+        let h = std::thread::spawn(move || {
+            serve_tcp(c, "127.0.0.1:0", stop2, move |addr| {
+                let _ = tx.send(addr);
+            })
+            .unwrap();
+        });
+        let addr = rx.recv().unwrap();
+        let reply = roundtrip(addr, "CLUSTER");
+        assert!(reply.starts_with("OK index=nn epoch=0 p0="), "{reply}");
+        // 3 shards, 1 replica: every partition shows one live home up
+        assert_eq!(reply.matches(":live:up").count(), 3, "{reply}");
+        assert_eq!(roundtrip(addr, "CLUSTER nn"), reply);
+        assert!(roundtrip(addr, "CLUSTER nope").starts_with("ERR unknown index"));
         stop.store(true, Ordering::Relaxed);
         h.join().unwrap();
     }

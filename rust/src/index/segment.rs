@@ -91,16 +91,29 @@ impl Segment {
 
     /// Bounded top-k over this segment's live rows in global-id terms.
     /// Reuses the [`CodeStore`] heap: local ids are in global order, so
-    /// the local tie-break is the global tie-break.
-    fn top_k(&self, qcode: &[u64], k: usize, tombstones: &BTreeSet<u64>) -> Vec<(u32, u64)> {
-        let hits = if tombstones.is_empty() {
-            self.store.top_k(qcode, k)
-        } else {
-            self.store.top_k_of(
+    /// the local tie-break is the global tie-break. `keep` optionally
+    /// restricts the scan to an id class (a cluster partition filter).
+    fn top_k(
+        &self,
+        qcode: &[u64],
+        k: usize,
+        tombstones: &BTreeSet<u64>,
+        keep: Option<&(dyn Fn(u64) -> bool + Sync)>,
+    ) -> Vec<(u32, u64)> {
+        let hits = match keep {
+            None if tombstones.is_empty() => self.store.top_k(qcode, k),
+            _ => self.store.top_k_of(
                 qcode,
                 k,
-                (0..self.rows()).filter(|&i| !tombstones.contains(&self.ids[i])),
-            )
+                (0..self.rows()).filter(|&i| {
+                    let id = self.ids[i];
+                    !tombstones.contains(&id)
+                        && match keep {
+                            None => true,
+                            Some(f) => f(id),
+                        }
+                }),
+            ),
         };
         hits.into_iter().map(|h| (h.hamming, self.ids[h.id])).collect()
     }
@@ -304,6 +317,110 @@ impl MutableIndex {
         Ok(())
     }
 
+    /// Packed words per stored code — the per-row stride of
+    /// [`MutableIndex::export_packed`] / [`MutableIndex::install_packed`]
+    /// payloads.
+    pub fn words_per_code(&self) -> usize {
+        self.codec.words_per_code()
+    }
+
+    /// Snapshot the live rows whose global id satisfies `filter` as a
+    /// raw repair payload: ascending ids plus each row's packed code
+    /// words concatenated ([`MutableIndex::words_per_code`] words per
+    /// row). Tombstoned rows are folded out — this is exactly what
+    /// anti-entropy repair streams from a surviving replica, with no
+    /// re-encoding involved.
+    pub fn export_packed<F: Fn(u64) -> bool>(&self, filter: F) -> (Vec<u64>, Vec<u64>) {
+        let st = self.state.read().expect("lifecycle lock");
+        let wpc = self.codec.words_per_code();
+        let mut rows: Vec<(u64, &Segment, usize)> = Vec::new();
+        for seg in segments_of(&st) {
+            for (i, &id) in seg.ids.iter().enumerate() {
+                if !st.tombstones.contains(&id) && filter(id) {
+                    rows.push((id, seg, i));
+                }
+            }
+        }
+        rows.sort_unstable_by_key(|&(id, _, _)| id);
+        let mut ids = Vec::with_capacity(rows.len());
+        let mut words = Vec::with_capacity(rows.len() * wpc);
+        for (id, seg, i) in rows {
+            ids.push(id);
+            words.extend_from_slice(seg.store.code(i));
+        }
+        (ids, words)
+    }
+
+    /// Install a repair payload produced by
+    /// [`MutableIndex::export_packed`] on a replica: the rows land as
+    /// one sealed segment, packed words copied verbatim (never
+    /// re-encoded), and the id allocator advances past the highest
+    /// installed id. Ids must be strictly increasing and must not
+    /// collide with rows already stored here — callers clear the
+    /// partition first with [`MutableIndex::remove_where`]. Returns the
+    /// rows installed.
+    pub fn install_packed(&self, ids: Vec<u64>, words: Vec<u64>) -> Result<usize, String> {
+        let wpc = self.codec.words_per_code();
+        if words.len() != ids.len() * wpc {
+            return Err(format!(
+                "{} payload words for {} rows of {wpc} words",
+                words.len(),
+                ids.len()
+            ));
+        }
+        if !ids.windows(2).all(|w| w[0] < w[1]) {
+            return Err("installed ids must be strictly increasing".into());
+        }
+        if ids.is_empty() {
+            return Ok(0);
+        }
+        let mut st = self.state.write().expect("lifecycle lock");
+        for &id in &ids {
+            if st.active.contains(id) || st.sealed.iter().any(|seg| seg.contains(id)) {
+                return Err(format!("id {id} is already stored"));
+            }
+        }
+        let rows = ids.len();
+        let next = ids.last().expect("non-empty ids") + 1;
+        let store = CodeStore::from_raw(self.codec.bits(), rows, words)?;
+        st.sealed.push(Segment { ids, store });
+        st.next_id = st.next_id.max(next);
+        Ok(rows)
+    }
+
+    /// Physically remove every stored row whose global id satisfies
+    /// `filter`: segments are rebuilt without the matching rows (packed
+    /// words of survivors copied, like compaction) and matching
+    /// tombstones are discarded with them. Returns the number of live
+    /// rows removed. This is the repair reset — a rebuilding replica
+    /// clears a partition's stale rows before
+    /// [`MutableIndex::install_packed`] streams the authoritative copy
+    /// back in.
+    pub fn remove_where<F: Fn(u64) -> bool>(&self, filter: F) -> usize {
+        let bits = self.codec.bits();
+        let mut st = self.state.write().expect("lifecycle lock");
+        let mut removed: Vec<u64> = Vec::new();
+        let mut rebuild = |seg: &Segment| -> Segment {
+            let mut ids = Vec::with_capacity(seg.rows());
+            let mut store = CodeStore::with_capacity(bits, seg.rows());
+            for (i, &id) in seg.ids.iter().enumerate() {
+                if filter(id) {
+                    removed.push(id);
+                } else {
+                    ids.push(id);
+                    store.push(seg.store.code(i));
+                }
+            }
+            Segment { ids, store }
+        };
+        let sealed: Vec<Segment> = st.sealed.iter().map(&mut rebuild).collect();
+        let active = rebuild(&st.active);
+        st.sealed = sealed;
+        st.sealed.retain(|seg| seg.rows() > 0);
+        st.active = active;
+        removed.iter().filter(|&&id| !st.tombstones.remove(&id)).count()
+    }
+
     /// Tombstone a row. Returns whether `id` was present and live; a
     /// second delete of the same id (or an id never assigned to this
     /// index) is a no-op returning false.
@@ -381,7 +498,7 @@ impl MutableIndex {
         let st = self.state.read().expect("lifecycle lock");
         let segments = segments_of(&st);
         Ok(QueryResult {
-            hits: search_segments(&segments, &st.tombstones, &code, k, self.bits()),
+            hits: search_segments(&segments, &st.tombstones, None, &code, k, self.bits()),
             probed_buckets: segments.len().max(1),
         })
     }
@@ -394,6 +511,30 @@ impl MutableIndex {
         queries: &[Vec<f64>],
         k: usize,
     ) -> Result<(Vec<Vec<SearchHit>>, usize), String> {
+        self.query_batch_filtered(queries, k, None)
+    }
+
+    /// [`MutableIndex::query_batch`] restricted to ids accepted by
+    /// `keep`. This is how a cluster shard scopes its answer to the
+    /// partitions the router will credit it for: rows of a stale,
+    /// rebuilding or orphaned partition are excluded from the top-k
+    /// *scan itself*, so they can neither appear in the answer nor
+    /// crowd healthy rows out of the bounded per-segment lists.
+    pub fn query_batch_where(
+        &self,
+        queries: &[Vec<f64>],
+        k: usize,
+        keep: &(dyn Fn(u64) -> bool + Sync),
+    ) -> Result<(Vec<Vec<SearchHit>>, usize), String> {
+        self.query_batch_filtered(queries, k, Some(keep))
+    }
+
+    fn query_batch_filtered(
+        &self,
+        queries: &[Vec<f64>],
+        k: usize,
+        keep: Option<&(dyn Fn(u64) -> bool + Sync)>,
+    ) -> Result<(Vec<Vec<SearchHit>>, usize), String> {
         for (i, row) in queries.iter().enumerate() {
             if row.len() != self.spec.n {
                 return Err(format!("query {i} has dim {} (want {})", row.len(), self.spec.n));
@@ -404,7 +545,7 @@ impl MutableIndex {
         let segments = segments_of(&st);
         let hits = codes
             .iter()
-            .map(|code| search_segments(&segments, &st.tombstones, code, k, self.bits()))
+            .map(|code| search_segments(&segments, &st.tombstones, keep, code, k, self.bits()))
             .collect();
         Ok((hits, queries.len() * segments.len().max(1)))
     }
@@ -687,6 +828,7 @@ fn segments_of(st: &State) -> Vec<&Segment> {
 fn search_segments(
     segments: &[&Segment],
     tombstones: &BTreeSet<u64>,
+    keep: Option<&(dyn Fn(u64) -> bool + Sync)>,
     qcode: &[u64],
     k: usize,
     bits: usize,
@@ -700,7 +842,7 @@ fn search_segments(
         std::thread::scope(|scope| {
             let handles: Vec<_> = segments
                 .iter()
-                .map(|seg| scope.spawn(move || seg.top_k(qcode, k, tombstones)))
+                .map(|seg| scope.spawn(move || seg.top_k(qcode, k, tombstones, keep)))
                 .collect();
             handles
                 .into_iter()
@@ -708,7 +850,7 @@ fn search_segments(
                 .collect()
         })
     } else {
-        segments.iter().flat_map(|seg| seg.top_k(qcode, k, tombstones)).collect()
+        segments.iter().flat_map(|seg| seg.top_k(qcode, k, tombstones, keep)).collect()
     };
     pairs.sort_unstable();
     pairs.truncate(k);
@@ -892,6 +1034,81 @@ mod tests {
             );
         }
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn export_install_roundtrip_is_packed_word_identical() {
+        let rows = corpus(30, 16, 9);
+        let idx = MutableIndex::new(spec(64, 16)).unwrap().with_seal_rows(8);
+        idx.push_rows(&rows).unwrap();
+        assert!(idx.delete(4)); // 4 ≡ 1 (mod 3): tombstones must fold out of the export
+        assert!(idx.delete(17));
+        let (ids, words) = idx.export_packed(|id| id % 3 == 1);
+        assert!(ids.windows(2).all(|w| w[0] < w[1]));
+        assert!(ids.iter().all(|&id| id % 3 == 1 && id != 4));
+        assert_eq!(ids.len(), 9);
+        assert_eq!(words.len(), ids.len() * idx.words_per_code());
+        // a reference replica ingests the same rows through the encode
+        // path; installing raw words must answer bit-identically
+        let reference = MutableIndex::new(spec(64, 16)).unwrap();
+        let class_rows: Vec<Vec<f64>> = ids.iter().map(|&id| rows[id as usize].clone()).collect();
+        reference.push_rows_with_ids(&ids, &class_rows).unwrap();
+        let installed = MutableIndex::new(spec(64, 16)).unwrap();
+        assert_eq!(installed.install_packed(ids.clone(), words).unwrap(), ids.len());
+        assert_eq!(installed.stats().next_id, ids.last().unwrap() + 1);
+        for q in rows.iter().step_by(4) {
+            assert_eq!(installed.search(q, 5).unwrap(), reference.search(q, 5).unwrap());
+        }
+        // colliding ids are rejected: the reset must come first
+        let (again_ids, again_words) = idx.export_packed(|id| id % 3 == 1);
+        assert!(installed.install_packed(again_ids, again_words).is_err());
+    }
+
+    #[test]
+    fn remove_where_clears_rows_and_their_tombstones() {
+        let rows = corpus(24, 16, 10);
+        let idx = MutableIndex::new(spec(64, 16)).unwrap().with_seal_rows(7);
+        idx.push_rows(&rows).unwrap();
+        assert!(idx.delete(2)); // in the removed class
+        assert!(idx.delete(3)); // outside it
+        let removed = idx.remove_where(|id| id % 2 == 0);
+        assert_eq!(removed, 11, "12 even rows, one already tombstoned");
+        assert_eq!(idx.stats().tombstones, 1, "only the odd tombstone survives");
+        let (ids, _) = idx.export_packed(|_| true);
+        assert!(ids.iter().all(|&id| id % 2 == 1 && id != 3));
+        // the cleared class re-installs without collisions, and answers
+        // match a fresh build over the same live rows
+        let donor = MutableIndex::new(spec(64, 16)).unwrap();
+        donor.push_rows(&rows).unwrap();
+        let (even_ids, even_words) = donor.export_packed(|id| id % 2 == 0);
+        assert_eq!(idx.install_packed(even_ids, even_words).unwrap(), 12);
+        let reference = MutableIndex::new(spec(64, 16)).unwrap();
+        reference.push_rows(&rows).unwrap();
+        assert!(reference.delete(3));
+        for q in rows.iter().step_by(5) {
+            assert_eq!(idx.search(q, 6).unwrap(), reference.search(q, 6).unwrap());
+        }
+    }
+
+    #[test]
+    fn query_batch_where_matches_a_pure_replica_of_the_kept_class() {
+        let rows = corpus(40, 16, 11);
+        let idx = MutableIndex::new(spec(64, 16)).unwrap().with_seal_rows(9);
+        idx.push_rows(&rows).unwrap();
+        assert!(idx.delete(6)); // a kept-class tombstone composes with the filter
+        // a replica holding only the kept class, built through the same
+        // encode path, is the oracle for the filtered scan
+        let kept: Vec<u64> = (0..40u64).filter(|id| id % 4 == 2 && *id != 6).collect();
+        let kept_rows: Vec<Vec<f64>> = kept.iter().map(|&id| rows[id as usize].clone()).collect();
+        let pure = MutableIndex::new(spec(64, 16)).unwrap();
+        pure.push_rows_with_ids(&kept, &kept_rows).unwrap();
+        let queries: Vec<Vec<f64>> = rows.iter().step_by(3).cloned().collect();
+        let (filtered, _) = idx.query_batch_where(&queries, 5, &|id| id % 4 == 2).unwrap();
+        let (oracle, _) = pure.query_batch(&queries, 5).unwrap();
+        assert_eq!(filtered, oracle);
+        // unfiltered answers still see every live row
+        let (all, _) = idx.query_batch(&queries, 5).unwrap();
+        assert_ne!(all, oracle);
     }
 
     #[test]

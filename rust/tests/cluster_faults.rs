@@ -10,10 +10,10 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use strembed::cluster::{
-    ClusterHandle, FaultCounts, FaultPlan, FaultyTransport, LocalTransport, Router, RouterConfig,
-    ShardEngine, ShardRequest, ShardTransport,
+    ClusterHandle, FaultCounts, FaultPlan, FaultyTransport, LocalTransport, ReplicaState,
+    Router, RouterConfig, ShardEngine, ShardRequest, ShardTransport,
 };
-use strembed::coordinator::{BackendSpec, IndexSpec, Precision};
+use strembed::coordinator::{BackendSpec, IndexSpec, Metrics, Precision};
 use strembed::data::synthetic::clustered_rows;
 use strembed::pmodel::StructureKind;
 use strembed::rng::Rng;
@@ -240,6 +240,7 @@ fn run_storm(
         hedge_after: None, // hedging races wall-clock; determinism tests keep it off
         retry_budget: 16,
         deadline: Some(Duration::from_millis(4)),
+        ..RouterConfig::default()
     };
     let (router, faulty) = faulty_cluster(shards, config, &plan);
     router.build_index("tnn", index_spec(), corpus).expect("clean build");
@@ -471,4 +472,376 @@ fn fault_schedule_is_pure_function_of_seed_and_shard_index() {
         a[10..20],
         "a disabled stretch must not advance the fault stream"
     );
+}
+
+/// Every home of every partition of `name` is `Live` (repair done,
+/// nothing quarantined) and holds the full replica target.
+fn assert_fully_live(router: &ClusterHandle, name: &str, replicas: usize) {
+    for p in router.partition_health(name).expect("known index") {
+        assert_eq!(
+            p.replicas.len(),
+            replicas,
+            "partition {} lost a home slot",
+            p.partition
+        );
+        for r in &p.replicas {
+            assert_eq!(
+                r.state,
+                ReplicaState::Live,
+                "partition {} still rebuilding on shard {}",
+                p.partition,
+                r.shard
+            );
+        }
+    }
+}
+
+/// The issue's acceptance scenario: 4 shards at R=2 run the full
+/// mutable lifecycle, then one shard is killed, wiped clean, and
+/// re-admitted. The router repairs its partitions from the live
+/// replicas, every answer along the way is complete and bit-identical
+/// to a single node, and afterwards the healed shard serves reads
+/// alone for its partitions.
+#[test]
+fn wiped_shard_heals_from_live_replicas_bit_identically() {
+    let mut rng = Rng::new(71);
+    let built = clustered_rows(48, N, &mut rng);
+    let pushed = clustered_rows(10, N, &mut rng);
+    let deletes: Vec<u64> = vec![5, 17, 50, 999];
+    let solo = strembed::index::MutableIndex::build(index_spec(), &built).expect("solo build");
+    solo.push_rows(&pushed).expect("solo push");
+    solo.delete_batch(&deletes);
+    let mut queries = vec![built[7].clone(), pushed[3].clone()];
+    queries.extend(clustered_rows(2, N, &mut rng));
+    let (want, _) = solo.query_batch(&queries, 8).expect("solo query");
+    let want_pairs: Vec<Vec<(usize, u32)>> = want.iter().map(|h| id_hamming(h)).collect();
+
+    let config = RouterConfig {
+        replicas: 2,
+        // long grace: this scenario heals through re-admission repair,
+        // never by re-homing the dead shard's partitions
+        repair_grace: Some(Duration::from_secs(3600)),
+        ..RouterConfig::default()
+    };
+    let (router, handles) = local_cluster(4, config);
+    let metrics = Arc::new(Metrics::new());
+    router.attach_metrics(metrics.clone());
+    router.build_index("tnn", index_spec(), &built).expect("cluster build");
+    let ids = router.index_push("tnn", &pushed).expect("cluster push");
+    assert_eq!(ids, (48..58u64).collect::<Vec<_>>());
+    assert_eq!(router.index_delete("tnn", &deletes).expect("cluster delete"), 3);
+    router.index_compact("tnn").expect("cluster compact");
+    let check = |label: &str| {
+        let ans = router.index_query_batch("tnn", &queries, 8).expect(label);
+        assert!(!ans.partial, "{label}: answer must stay complete");
+        let got: Vec<Vec<(usize, u32)>> = ans.hits.iter().map(|h| id_hamming(h)).collect();
+        assert_eq!(got, want_pairs, "{label}: diverged from the single node");
+    };
+    check("healthy");
+
+    // kill shard 2 and keep serving complete answers off its partners
+    handles[2].set_down(true);
+    router.probe();
+    assert_eq!(router.live_count(), 3);
+    check("degraded");
+
+    // wipe its state entirely, then re-admit: the probe demotes its
+    // homes to Rebuilding and the repair tick streams them back
+    assert!(handles[2].engine().wipe_index("tnn"), "wipe must find the index");
+    handles[2].set_down(false);
+    router.probe();
+    assert_eq!(router.live_count(), 4);
+    // reads exclude the rebuilding replica, so answers stay exact even
+    // though the shard is live again with an empty index
+    check("readmitted before repair");
+    let completed = router.repair_tick();
+    assert_eq!(completed, 2, "shard 2 holds two partitions; both must repair");
+    let snap = metrics.snapshot();
+    assert!(snap.repairs_completed >= 2, "repairs_completed={}", snap.repairs_completed);
+    assert_eq!(snap.under_replicated_partitions, 0);
+    assert!(snap.repair_rows_streamed > 0, "repair must re-stream live rows");
+    assert_fully_live(&router, "tnn", 2);
+    check("after repair");
+
+    // force reads onto the healed shard: kill both partners covering
+    // its partitions (p1 homes {1,2}, p2 homes {2,3})
+    handles[1].set_down(true);
+    handles[3].set_down(true);
+    router.probe();
+    check("served by the healed replica alone");
+}
+
+/// Kill → wipe → re-admit sweep at shards {3,4} × replicas {2,3}: the
+/// shard dies mid-query-stream, comes back empty, and after the repair
+/// tick every answer is bit-identical to the single node again with
+/// every home promoted back to `Live`.
+#[test]
+fn wipe_and_readmit_sweep_heals_at_every_cluster_shape() {
+    let mut rng = Rng::new(83);
+    let corpus = clustered_rows(90, N, &mut rng);
+    let mut queries = vec![corpus[13].clone(), corpus[61].clone()];
+    queries.extend(clustered_rows(2, N, &mut rng));
+    let reference =
+        strembed::index::IndexHandle::build(index_spec(), &corpus).expect("reference");
+    let (want, _) = reference.query_batch(&queries, 6).expect("reference query");
+    let want_pairs: Vec<Vec<(usize, u32)>> = want.iter().map(|h| id_hamming(h)).collect();
+
+    for shards in [3usize, 4] {
+        for replicas in [2usize, 3] {
+            let config = RouterConfig {
+                replicas,
+                repair_grace: Some(Duration::from_secs(3600)),
+                ..RouterConfig::default()
+            };
+            let (router, handles) = local_cluster(shards, config);
+            router.build_index("tnn", index_spec(), &corpus).expect("cluster build");
+            for victim in 0..shards {
+                let ctx = format!("{shards} shards r={replicas} victim={victim}");
+                // one healthy answer, then the victim dies between two
+                // queries of the same stream
+                let healthy =
+                    router.index_query_batch("tnn", &queries, 6).expect("healthy query");
+                assert!(!healthy.partial, "{ctx}: healthy");
+                handles[victim].set_down(true);
+                router.probe();
+                let ans =
+                    router.index_query_batch("tnn", &queries, 6).expect("degraded query");
+                assert!(!ans.partial, "{ctx}: replicated partitions must stay covered");
+                let got: Vec<Vec<(usize, u32)>> =
+                    ans.hits.iter().map(|h| id_hamming(h)).collect();
+                assert_eq!(got, want_pairs, "{ctx}: degraded answer diverged");
+
+                assert!(handles[victim].engine().wipe_index("tnn"), "{ctx}: wipe");
+                handles[victim].set_down(false);
+                router.probe();
+                // rotation puts each shard in exactly `replicas` home
+                // lists, and every one of them must stream back
+                let completed = router.repair_tick();
+                assert_eq!(completed, replicas.min(shards), "{ctx}: repairs completed");
+                assert_fully_live(&router, "tnn", replicas.min(shards));
+                let ans =
+                    router.index_query_batch("tnn", &queries, 6).expect("healed query");
+                assert!(!ans.partial, "{ctx}: healed");
+                let got: Vec<Vec<(usize, u32)>> =
+                    ans.hits.iter().map(|h| id_hamming(h)).collect();
+                assert_eq!(got, want_pairs, "{ctx}: healed answer diverged");
+            }
+        }
+    }
+}
+
+/// Satellite: a partition whose every home is dead past the grace
+/// period is re-homed (empty) onto a survivor, so queries stop
+/// reporting `partial`; new writes repopulate it.
+#[test]
+fn expired_zero_home_partitions_rehome_and_stop_reporting_partial() {
+    let mut rng = Rng::new(97);
+    let corpus = clustered_rows(60, N, &mut rng);
+    let queries = vec![corpus[10].clone(), corpus[31].clone()];
+    let reference =
+        strembed::index::IndexHandle::build(index_spec(), &corpus).expect("reference");
+    let (full, _) = reference.query_batch(&queries, corpus.len()).expect("full reference");
+
+    let config = RouterConfig {
+        replicas: 1,
+        repair_grace: Some(Duration::from_millis(50)),
+        ..RouterConfig::default()
+    };
+    let (router, handles) = local_cluster(3, config);
+    let metrics = Arc::new(Metrics::new());
+    router.attach_metrics(metrics.clone());
+    router.build_index("tnn", index_spec(), &corpus).expect("cluster build");
+
+    // unreplicated shard death starts the grace clock; inside the
+    // grace period the partition is a hole and answers say so
+    handles[0].set_down(true);
+    router.probe();
+    let ans = router.index_query_batch("tnn", &queries, 5).expect("degraded query");
+    assert!(ans.partial, "partition 0 has no live home yet");
+
+    std::thread::sleep(Duration::from_millis(80));
+    router.repair_tick();
+    assert_eq!(router.placement_epoch("tnn"), Some(1), "re-homing must bump the epoch");
+    let snap = metrics.snapshot();
+    assert!(snap.cluster_rebalances >= 1);
+    assert_eq!(snap.under_replicated_partitions, 0);
+
+    // the partition now lives (empty) on a survivor: answers are
+    // complete again and equal the reference restricted to the
+    // partitions whose data survived
+    let ans = router.index_query_batch("tnn", &queries, 5).expect("re-homed query");
+    assert!(!ans.partial, "re-homed partitions must stop reporting partial");
+    let expect: Vec<Vec<(usize, u32)>> = full
+        .iter()
+        .map(|hits| {
+            hits.iter().filter(|h| h.id % 3 != 0).take(5).map(|h| (h.id, h.hamming)).collect()
+        })
+        .collect();
+    let got: Vec<Vec<(usize, u32)>> = ans.hits.iter().map(|h| id_hamming(h)).collect();
+    assert_eq!(got, expect, "lost rows must vanish, surviving rows must stay exact");
+
+    // new writes repopulate the re-homed partition and become findable
+    let fresh = clustered_rows(3, N, &mut rng);
+    let ids = router.index_push("tnn", &fresh).expect("push after re-homing");
+    assert_eq!(ids, vec![60, 61, 62]);
+    let ans = router.index_query_batch("tnn", &[fresh[0].clone()], 5).expect("fresh query");
+    assert!(!ans.partial);
+    assert!(
+        id_hamming(&ans.hits[0]).contains(&(60usize, 0u32)),
+        "row 60 (partition 0) must be served from the re-homed replica"
+    );
+}
+
+/// Satellite: with `write_quorum: 1` a push/delete succeeds past a
+/// dead replica home; the laggard is quarantined to `Rebuilding`,
+/// repaired on re-admission, and then serves reads bit-identically.
+#[test]
+fn write_quorum_admits_writes_past_a_dead_replica_then_repairs_it() {
+    let mut rng = Rng::new(103);
+    let built = clustered_rows(42, N, &mut rng);
+    let pushed = clustered_rows(9, N, &mut rng);
+    let deletes: Vec<u64> = vec![4, 44, 999];
+    let solo = strembed::index::MutableIndex::build(index_spec(), &built).expect("solo build");
+    solo.push_rows(&pushed).expect("solo push");
+    solo.delete_batch(&deletes);
+    let mut queries = vec![built[9].clone(), pushed[2].clone()];
+    queries.extend(clustered_rows(2, N, &mut rng));
+    let (want, _) = solo.query_batch(&queries, 7).expect("solo query");
+    let want_pairs: Vec<Vec<(usize, u32)>> = want.iter().map(|h| id_hamming(h)).collect();
+
+    let config = RouterConfig {
+        replicas: 2,
+        write_quorum: Some(1),
+        repair_grace: Some(Duration::from_secs(3600)),
+        ..RouterConfig::default()
+    };
+    let (router, handles) = local_cluster(3, config);
+    let metrics = Arc::new(Metrics::new());
+    router.attach_metrics(metrics.clone());
+    router.build_index("tnn", index_spec(), &built).expect("cluster build");
+
+    // one replica home dies; without the quorum these writes would fail
+    handles[1].set_down(true);
+    router.probe();
+    let ids = router.index_push("tnn", &pushed).expect("quorum push past the dead shard");
+    assert_eq!(ids, (42..51u64).collect::<Vec<_>>());
+    assert_eq!(router.index_delete("tnn", &deletes).expect("quorum delete"), 2);
+    // the laggard's homes (partitions 0 and 1) are quarantined
+    let rebuilding: Vec<(usize, usize)> = router
+        .partition_health("tnn")
+        .expect("known index")
+        .iter()
+        .flat_map(|p| {
+            p.replicas
+                .iter()
+                .filter(|r| r.state == ReplicaState::Rebuilding)
+                .map(|r| (p.partition, r.shard))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    assert_eq!(rebuilding, vec![(0, 1), (1, 1)], "laggard homes must be quarantined");
+    assert!(metrics.snapshot().under_replicated_partitions >= 2);
+    // reads never touch the dirty replica: still exact
+    let ans = router.index_query_batch("tnn", &queries, 7).expect("query past laggard");
+    assert!(!ans.partial);
+    let got: Vec<Vec<(usize, u32)>> = ans.hits.iter().map(|h| id_hamming(h)).collect();
+    assert_eq!(got, want_pairs, "quorum writes must read exactly");
+
+    // re-admit and repair: the missed push and delete stream over
+    handles[1].set_down(false);
+    router.probe();
+    let completed = router.repair_tick();
+    assert_eq!(completed, 2);
+    assert_eq!(metrics.snapshot().under_replicated_partitions, 0);
+    assert_fully_live(&router, "tnn", 2);
+
+    // kill the other holder of partition 1 so the healed replica is
+    // the only read path for it — it must answer bit-identically
+    handles[2].set_down(true);
+    router.probe();
+    let ans = router.index_query_batch("tnn", &queries, 7).expect("healed replica read");
+    assert!(!ans.partial);
+    let got: Vec<Vec<(usize, u32)>> = ans.hits.iter().map(|h| id_hamming(h)).collect();
+    assert_eq!(got, want_pairs, "healed replica diverged from the single node");
+}
+
+/// Satellite: seeded fault storms raging *during* repair leave every
+/// home `Live` or `Rebuilding` with at least one `Live` home per
+/// partition (reads never see a half-built replica), and once the
+/// weather clears the cluster converges back to fully replicated.
+#[test]
+fn fault_storms_during_repair_leave_the_state_machine_consistent() {
+    let mut rng = Rng::new(113);
+    let corpus = clustered_rows(80, N, &mut rng);
+    let queries = vec![corpus[5].clone(), corpus[50].clone()];
+    let plan = FaultPlan {
+        seed: 0xBAD5EED,
+        disconnect_prob: 0.12,
+        drop_prob: 0.10,
+        delay_prob: 0.10,
+        max_delay: Duration::from_millis(6),
+        corrupt_prob: 0.08,
+    };
+    let config = RouterConfig {
+        replicas: 2,
+        write_quorum: Some(1),
+        repair_grace: Some(Duration::from_secs(3600)),
+        retry_budget: 16,
+        deadline: Some(Duration::from_millis(4)),
+        ..RouterConfig::default()
+    };
+    let (router, faulty) = faulty_cluster(4, config, &plan);
+    let metrics = Arc::new(Metrics::new());
+    router.attach_metrics(metrics.clone());
+    router.build_index("tnn", index_spec(), &corpus).expect("clean build");
+    for f in &faulty {
+        f.set_enabled(true);
+    }
+    // storm rounds: quorum writes quarantine laggards, probes re-admit
+    // disconnected shards, and repair ticks race the weather
+    let mut write_failures = 0usize;
+    for round in 0..8 {
+        let rows = clustered_rows(2, N, &mut rng);
+        if router.index_push("tnn", &rows).is_err() {
+            write_failures += 1;
+        }
+        router.probe();
+        router.repair_tick();
+        for p in router.partition_health("tnn").expect("known index") {
+            assert!(
+                p.replicas.iter().any(|r| r.state == ReplicaState::Live),
+                "round {round}: partition {} lost every Live home",
+                p.partition
+            );
+            assert_eq!(p.replicas.len(), 2, "round {round}: home slot count drifted");
+        }
+        // answers, when the storm lets them through, are never errors
+        // of the placement layer: a reply is complete or partial, and
+        // probed counts stay sane
+        if let Ok(ans) = router.index_query_batch("tnn", &queries, 5) {
+            assert_eq!(ans.hits.len(), queries.len());
+        }
+    }
+    let injected: u64 = faulty.iter().map(|f| f.counts().total()).sum();
+    assert!(injected > 0, "the storm must actually inject faults");
+    let _ = write_failures; // either outcome is legal under the seed
+
+    // weather clears: the cluster must converge to fully replicated
+    for f in &faulty {
+        f.set_enabled(false);
+    }
+    router.probe();
+    for _tick in 0..6 {
+        router.repair_tick();
+    }
+    assert_fully_live(&router, "tnn", 2);
+    let snap = metrics.snapshot();
+    assert_eq!(snap.under_replicated_partitions, 0);
+    assert_eq!(
+        snap.repairs_started,
+        snap.repairs_completed + snap.repairs_failed,
+        "every started repair must resolve to completed or failed"
+    );
+    let ans = router.index_query_batch("tnn", &queries, 5).expect("calm query");
+    assert!(!ans.partial, "a fully repaired cluster answers completely");
 }

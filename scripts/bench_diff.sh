@@ -29,6 +29,14 @@
 #                                          too noisy to gate on)
 #                 (kind=write_amp,
 #                  shards, replicas)    -> push_ns_per_row
+#   cluster_repair[]:
+#                 (shards, replicas,
+#                  corpus)              -> repair_ns_per_row (inverse of
+#                                          the reported repair_rows_per_s,
+#                                          so "bigger is worse" matches
+#                                          every other entry),
+#                                          idle_p50_ns, rebuilding_p50_ns
+#                                          (p99s reported, not diffed)
 #
 # THRESHOLD_PCT defaults to 10 (also overridable via the
 # BENCH_DIFF_THRESHOLD environment variable). Entries present only in
@@ -100,6 +108,17 @@ def tracked(report):
             out[f"{key}/hedged_p50"] = float(r["hedged_p50_ns"])
         elif r.get("kind") == "write_amp":
             out[f"{key}/push"] = float(r["push_ns_per_row"])
+    for r in report.get("cluster_repair", []):
+        key = (f"cluster_repair/shards{r['shards']}/replicas{r['replicas']}"
+               f"/corpus{r['corpus']}")
+        rows_per_s = float(r["repair_rows_per_s"])
+        if rows_per_s > 0:
+            # stored as throughput; gate on its inverse so "bigger is
+            # worse" matches every other tracked ns entry
+            out[f"{key}/repair_ns_per_row"] = 1e9 / rows_per_s
+        # p50 only: single-run p99 tails are too noisy to gate on
+        out[f"{key}/idle_p50"] = float(r["idle_p50_ns"])
+        out[f"{key}/rebuilding_p50"] = float(r["rebuilding_p50_ns"])
     return out
 
 

@@ -32,6 +32,14 @@ cargo test -q --test property_index_lifecycle
 echo "== chaos: cargo test -q --test cluster_faults"
 cargo test -q --test cluster_faults
 
+# The self-healing suite rides in the chaos file: wipe-and-re-admit
+# anti-entropy repair, expired-shard re-homing, write-quorum quarantine
+# and fault storms during repair must leave every partition fully Live
+# and answers bit-identical to a single node. Gate the repair tests by
+# name so the heal path can't be silently dropped from the file above.
+echo "== self-healing: cargo test -q --test cluster_faults -- heal repair rehome"
+cargo test -q --test cluster_faults -- heal repair rehome
+
 # Benches are plain binaries (harness = false) that tier-1 never
 # compiles; build them so bench code can't silently rot.
 echo "== cargo bench --no-run (bench code must keep building)"
