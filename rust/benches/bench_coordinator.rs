@@ -36,6 +36,7 @@ fn main() {
                 max_batch: 32,
                 linger: Duration::from_micros(200),
                 queue_capacity: 1 << 16,
+                ..CoordinatorConfig::default()
             },
         )
         .unwrap(),

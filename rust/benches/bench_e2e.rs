@@ -61,6 +61,7 @@ fn main() {
                 max_batch: meta.batch,
                 linger: Duration::from_micros(500),
                 queue_capacity: 1 << 14,
+                ..CoordinatorConfig::default()
             },
         )
         .unwrap(),

@@ -20,9 +20,12 @@
 //! Besides the human-readable tables, the per-family batched-vs-per-row
 //! numbers (both precisions), the staged-vs-fused numbers, the index
 //! search/encode numbers, the mutable-index lifecycle numbers (push
-//! ns/row, 1- vs 8-segment search, compaction ns/row) and the cluster
-//! numbers are written to `BENCH_engine.json` so the perf trajectory
-//! is machine-trackable across PRs.
+//! ns/row, 1- vs 8-segment search, compaction ns/row), the cluster
+//! numbers and the telemetry-overhead numbers (instrumented vs
+//! uninstrumented serving embed, histogram record ns/op — the
+//! instrumented path must stay within 10% of the bare one, gated by
+//! `scripts/bench_diff.sh`) are written to `BENCH_engine.json` so the
+//! perf trajectory is machine-trackable across PRs.
 
 mod common;
 
@@ -147,6 +150,18 @@ struct ClusterRepairStat {
     rebuilding_p99_ns: f64,
 }
 
+/// One telemetry-overhead row of the machine-readable report: ns/row
+/// through the fused serving embed bare vs with the histogram/counter
+/// accounting the coordinator worker performs per batch and per row.
+struct TelemetryStat {
+    batch: usize,
+    /// ns per row with no metrics recording at all
+    uninstrumented_ns: f64,
+    /// ns per row with per-batch histogram + per-row histogram and
+    /// counter recording (the instrumented serving path)
+    instrumented_ns: f64,
+}
+
 /// Where the machine-readable report lands: the *workspace* root,
 /// regardless of invocation CWD (cargo runs bench binaries from the
 /// package root `rust/`, so a bare relative path would dodge the
@@ -171,6 +186,8 @@ fn write_bench_json(
     cluster_faults: &[ClusterFaultStat],
     cluster_writes: &[ClusterWriteStat],
     cluster_repair: &[ClusterRepairStat],
+    telemetry: &[TelemetryStat],
+    hist_record_ns: f64,
 ) {
     let mut s = String::new();
     s.push_str("{\n");
@@ -294,6 +311,21 @@ fn write_bench_json(
             r.rebuilding_p99_ns
         ));
     }
+    s.push_str("  ],\n  \"telemetry\": [\n");
+    for r in telemetry.iter() {
+        s.push_str(&format!(
+            "    {{\"kind\": \"embed\", \"batch\": {}, \
+             \"uninstrumented_ns_per_row\": {:.1}, \"instrumented_ns_per_row\": {:.1}, \
+             \"overhead\": {:.4}}},\n",
+            r.batch,
+            r.uninstrumented_ns,
+            r.instrumented_ns,
+            r.instrumented_ns / r.uninstrumented_ns
+        ));
+    }
+    s.push_str(&format!(
+        "    {{\"kind\": \"hist_record\", \"record_ns_per_op\": {hist_record_ns:.2}}}\n"
+    ));
     s.push_str("  ]\n}\n");
     strembed::util::json::Json::parse(&s).expect("BENCH_engine.json must be valid JSON");
     std::fs::write(path, &s).expect("write BENCH_engine.json");
@@ -972,6 +1004,94 @@ fn main() {
         });
     }
 
+    // telemetry layer: what the observability plumbing costs on the
+    // serving hot path. Re-run the fused serving embed (circulant at
+    // the serving shape) bare, then with exactly the accounting the
+    // coordinator worker performs per request — one duration-histogram
+    // record per batch, one latency-histogram record plus two counter
+    // bumps per row — and a tight histogram-record microbench. The
+    // instrumented path must stay within 10% of the bare one;
+    // scripts/bench_diff.sh gates the ratio.
+    let tele_cfg =
+        EmbeddingConfig::new(StructureKind::Circulant, sm, sn, Nonlinearity::CosSin).with_seed(3);
+    let tele_plan = EmbeddingPlan::shared(tele_cfg);
+    let td = tele_plan.out_dim();
+    let tele_pool = StreamingPool::<f32>::new(tele_plan, default_workers());
+    let embed_hist = strembed::telemetry::Histogram::new();
+    let lat_hist = strembed::telemetry::Histogram::new();
+    let submitted = std::sync::atomic::AtomicU64::new(0);
+    let completed_reqs = std::sync::atomic::AtomicU64::new(0);
+    let mut telemetry_stats: Vec<TelemetryStat> = Vec::new();
+    let mut telemetry_results = Vec::new();
+    for &b in &[8usize, 64, 512] {
+        let mut rng = Rng::new(37 + b as u64);
+        let rows: Vec<Vec<f32>> = (0..b)
+            .map(|_| rng.gaussian_vec(sn).iter().map(|&v| v as f32).collect())
+            .collect();
+        let src = Arc::new(WireRows::new(rows, sn).expect("valid rows"));
+        let warm: Arc<dyn RowSource<f32> + Send + Sync> = src.clone();
+        tele_pool.embed_shards(warm);
+
+        let bare = bench(&format!("telemetry off x{b}"), || {
+            let s: Arc<dyn RowSource<f32> + Send + Sync> = src.clone();
+            let shards = tele_pool.embed_shards(s);
+            let mut out: Vec<Vec<f32>> = Vec::with_capacity(b);
+            for shard in shards {
+                out.extend(shard.feats.chunks_exact(td).map(|c| c.to_vec()));
+            }
+            std::hint::black_box(out);
+        });
+        let instrumented = bench(&format!("telemetry on x{b}"), || {
+            let t0 = std::time::Instant::now();
+            submitted.fetch_add(b as u64, std::sync::atomic::Ordering::Relaxed);
+            let s: Arc<dyn RowSource<f32> + Send + Sync> = src.clone();
+            let shards = tele_pool.embed_shards(s);
+            let mut out: Vec<Vec<f32>> = Vec::with_capacity(b);
+            for shard in shards {
+                out.extend(shard.feats.chunks_exact(td).map(|c| c.to_vec()));
+            }
+            embed_hist.record_duration(t0.elapsed());
+            let per_row = (t0.elapsed().as_nanos() as u64 / b as u64).max(1);
+            for _ in 0..b {
+                lat_hist.record(per_row);
+                completed_reqs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+            std::hint::black_box(out);
+        });
+        telemetry_stats.push(TelemetryStat {
+            batch: b,
+            uninstrumented_ns: bare.ns_per_op / b as f64,
+            instrumented_ns: instrumented.ns_per_op / b as f64,
+        });
+        telemetry_results.push(bare);
+        telemetry_results.push(instrumented);
+    }
+    let mut probe = 0x9e37_79b9_7f4a_7c15u64;
+    let record = bench("telemetry histogram record", || {
+        probe = probe.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        lat_hist.record(std::hint::black_box(probe >> 32));
+    });
+    let record_ns = record.ns_per_op;
+    telemetry_results.push(record);
+    report(
+        &format!("engine: telemetry overhead on the fused serving embed (n={sn}, m={sm}, f32)"),
+        &telemetry_results,
+    );
+    println!();
+    for s in &telemetry_stats {
+        println!(
+            "telemetry batch={}: instrumented {:.0} ns/row vs bare {:.0} ns/row \
+             ({:.3}x overhead)",
+            s.batch,
+            s.instrumented_ns,
+            s.uninstrumented_ns,
+            s.instrumented_ns / s.uninstrumented_ns
+        );
+    }
+    println!("telemetry histogram record: {record_ns:.1} ns/op");
+    // sanity: the accounting above really landed in the instruments
+    assert!(lat_hist.snapshot().count >= submitted.load(std::sync::atomic::Ordering::Relaxed));
+
     write_bench_json(
         &bench_json_path(),
         n,
@@ -986,6 +1106,8 @@ fn main() {
         &cluster_fault_stats,
         &cluster_write_stats,
         &cluster_repair_stats,
+        &telemetry_stats,
+        record_ns,
     );
 
     // streaming pool scaling on the acceptance config

@@ -30,7 +30,9 @@ use crate::cluster::{
     ShardTransport, TcpTransport, TcpTransportConfig,
 };
 use crate::coherence::{coherence_graph, pmodel_stats};
-use crate::coordinator::{serve_tcp, BackendSpec, Coordinator, CoordinatorConfig, Precision};
+use crate::coordinator::{
+    serve_tcp, BackendSpec, Coordinator, CoordinatorConfig, Precision, DEFAULT_TRACE_SAMPLE,
+};
 use crate::eval::{run_experiment, EXPERIMENTS};
 use crate::pmodel::StructureKind;
 use crate::rng::Rng;
@@ -110,6 +112,12 @@ fn usage() -> String {
          \x20                                                          per partition (laggards repair\n\
          \x20                                                          in the background; default:\n\
          \x20                                                          all homes must ack)\n\
+         \x20            [--slow-ms MS] [--trace-sample N]             observability: log requests\n\
+         \x20                                                          slower than MS to stderr\n\
+         \x20                                                          (0 = off) and trace 1-in-N\n\
+         \x20                                                          requests end-to-end (1 = all,\n\
+         \x20                                                          0 = off, default 64; inspect\n\
+         \x20                                                          via TRACE / METRICS JSON)\n\
          \x20            [--shard-of ROUTER] [--shard-name S]          run THIS process as a shard\n\
          \x20                                                          executor the router dials\n\n\
          experiments:\n",
@@ -511,6 +519,18 @@ fn router_config_from_args(args: &Args) -> Result<RouterConfig, String> {
     Ok(config)
 }
 
+/// Observability tunables for the coordinator: `--slow-ms MS` logs any
+/// request slower than MS to stderr (0 = off), `--trace-sample N`
+/// samples one request in N into the end-to-end trace ring dumped by
+/// the TCP `TRACE` command (1 = every request, 0 = off).
+fn coordinator_config_from_args(args: &Args) -> Result<CoordinatorConfig, String> {
+    Ok(CoordinatorConfig {
+        slow_ms: args.get_u64("slow-ms", 0)?,
+        trace_sample: args.get_u64("trace-sample", DEFAULT_TRACE_SAMPLE)?,
+        ..CoordinatorConfig::default()
+    })
+}
+
 fn cmd_serve(args: &Args) -> Result<String, String> {
     if args.options.contains_key("shard-of") {
         return cmd_serve_shard(args);
@@ -564,7 +584,7 @@ fn cmd_serve(args: &Args) -> Result<String, String> {
         }
     }
     let coordinator = Arc::new(
-        Coordinator::start_with_cluster(specs, CoordinatorConfig::default(), cluster.clone())
+        Coordinator::start_with_cluster(specs, coordinator_config_from_args(args)?, cluster.clone())
             .map_err(|e| format!("{e:#}"))?,
     );
     let stop = Arc::new(AtomicBool::new(false));
@@ -674,6 +694,23 @@ mod tests {
         let config = router_config_from_args(&args).unwrap();
         assert_eq!(config.repair_grace, None);
         assert_eq!(config.write_quorum, None);
+    }
+
+    #[test]
+    fn coordinator_config_parses_observability_knobs() {
+        let args = Args::parse(
+            "serve --native --slow-ms 250 --trace-sample 8"
+                .split_whitespace()
+                .map(str::to_string),
+        );
+        let config = coordinator_config_from_args(&args).unwrap();
+        assert_eq!(config.slow_ms, 250);
+        assert_eq!(config.trace_sample, 8);
+        // defaults: slow-query log off, 1-in-64 trace sampling
+        let args = Args::parse("serve --native".split_whitespace().map(str::to_string));
+        let config = coordinator_config_from_args(&args).unwrap();
+        assert_eq!(config.slow_ms, 0);
+        assert_eq!(config.trace_sample, DEFAULT_TRACE_SAMPLE);
     }
 
     #[test]

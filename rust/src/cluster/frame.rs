@@ -27,6 +27,15 @@
 //! decoder checks declared counts against the bytes actually remaining
 //! before allocating, and a decoded body must consume the payload
 //! exactly — trailing bytes are a [`FrameError`], not silently ignored.
+//!
+//! **Trace propagation.** A request frame may carry an optional 9-byte
+//! telemetry trailer after its body: `[TRACE_TAG: u8] [trace id: u64]`.
+//! [`encode_request_traced`] appends it for sampled requests and
+//! [`decode_request_traced`] recognizes it (exactly 9 bytes remaining
+//! after the body, first byte [`TRACE_TAG`]); untraced frames are
+//! byte-identical to the pre-trailer protocol, so tracing costs nothing
+//! on the wire for the unsampled majority and old-style trailing
+//! garbage still fails decoding.
 
 use crate::index::IndexSpec;
 use crate::pmodel::StructureKind;
@@ -41,6 +50,10 @@ pub const MAX_FRAME_BYTES: usize = 64 << 20;
 /// shared bound stays at the reply floor so one header check covers
 /// both directions; a 9..13-byte request still fails in the decoder.
 pub const MIN_PAYLOAD_BYTES: usize = 9;
+
+/// First byte of the optional 9-byte telemetry trailer on request
+/// frames (`[TRACE_TAG] [trace id: u64 LE]` after the body).
+pub const TRACE_TAG: u8 = 0x54;
 
 /// A malformed, truncated or oversized frame.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -511,6 +524,18 @@ fn put_u32_vec(b: &mut Vec<u8>, vals: &[u32]) {
 /// included). `deadline_ms` is the relative per-request deadline in
 /// milliseconds (`0` = no deadline).
 pub fn encode_request(id: u64, deadline_ms: u32, req: &ShardRequest) -> Vec<u8> {
+    encode_request_traced(id, deadline_ms, req, None)
+}
+
+/// Encode a request, appending the telemetry trailer when `trace`
+/// carries the sampled request's trace id. `trace: None` produces a
+/// frame byte-identical to [`encode_request`].
+pub fn encode_request_traced(
+    id: u64,
+    deadline_ms: u32,
+    req: &ShardRequest,
+    trace: Option<u64>,
+) -> Vec<u8> {
     let mut b = Vec::new();
     put_u64(&mut b, id);
     b.push(request_opcode(req));
@@ -581,6 +606,10 @@ pub fn encode_request(id: u64, deadline_ms: u32, req: &ShardRequest) -> Vec<u8> 
             put_u64(&mut b, *target);
         }
     }
+    if let Some(trace_id) = trace {
+        b.push(TRACE_TAG);
+        put_u64(&mut b, trace_id);
+    }
     finish(b)
 }
 
@@ -632,8 +661,21 @@ pub fn encode_reply(id: u64, rep: &ShardReply) -> Vec<u8> {
     finish(b)
 }
 
-/// Decode a request payload (the bytes after the length prefix).
+/// Decode a request payload (the bytes after the length prefix),
+/// dropping any telemetry trailer. Trailing bytes that are not a valid
+/// trailer remain a [`FrameError`].
 pub fn decode_request(payload: &[u8]) -> Result<(u64, u32, ShardRequest), FrameError> {
+    let (id, deadline_ms, req, _) = decode_request_traced(payload)?;
+    Ok((id, deadline_ms, req))
+}
+
+/// Decode a request payload, recognizing the optional telemetry
+/// trailer: exactly 9 bytes remaining after the body, the first being
+/// [`TRACE_TAG`], decode as the sampled request's trace id. Any other
+/// leftover bytes are a [`FrameError`].
+pub fn decode_request_traced(
+    payload: &[u8],
+) -> Result<(u64, u32, ShardRequest, Option<u64>), FrameError> {
     let mut c = Cur { b: payload };
     let id = c.u64()?;
     let op = c.u8()?;
@@ -677,8 +719,14 @@ pub fn decode_request(payload: &[u8]) -> Result<(u64, u32, ShardRequest), FrameE
         REQ_CANCEL => ShardRequest::Cancel { target: c.u64()? },
         other => return Err(FrameError(format!("unknown request opcode {other}"))),
     };
+    let trace = if c.b.len() == 9 && c.b[0] == TRACE_TAG {
+        c.u8()?;
+        Some(c.u64()?)
+    } else {
+        None
+    };
     c.done()?;
-    Ok((id, deadline_ms, req))
+    Ok((id, deadline_ms, req, trace))
 }
 
 /// Decode a reply payload (the bytes after the length prefix).
@@ -998,6 +1046,36 @@ mod tests {
         let (id, deadline_ms, req) = decode_request(&payload).unwrap();
         assert_eq!((id, deadline_ms), (11, 0));
         assert!(matches!(req, ShardRequest::Health));
+    }
+
+    #[test]
+    fn trace_trailer_roundtrips_and_stays_optional() {
+        let req = ShardRequest::Embed { variant: "v".into(), rows: vec![vec![1.0, 2.0]] };
+        // traced frame: trailer decodes to the trace id
+        let frame = encode_request_traced(3, 25, &req, Some(0xABCD_EF01_2345_6789));
+        let payload = read_frame(&mut Cursor::new(&frame)).unwrap().unwrap();
+        let (id, deadline_ms, decoded, trace) = decode_request_traced(&payload).unwrap();
+        assert_eq!((id, deadline_ms, trace), (3, 25, Some(0xABCD_EF01_2345_6789)));
+        assert!(matches!(decoded, ShardRequest::Embed { .. }));
+        // the trailer-dropping decoder still accepts the traced frame
+        let (id, _, _) = decode_request(&payload).unwrap();
+        assert_eq!(id, 3);
+        // untraced frames are byte-identical to the legacy encoding
+        assert_eq!(encode_request_traced(3, 25, &req, None), encode_request(3, 25, &req));
+        let legacy = read_frame(&mut Cursor::new(&encode_request(3, 25, &req)))
+            .unwrap()
+            .unwrap();
+        let (_, _, _, trace) = decode_request_traced(&legacy).unwrap();
+        assert_eq!(trace, None);
+        // 9 trailing bytes without the tag are still an error
+        let mut bad = legacy.clone();
+        bad.extend_from_slice(&[0xFF; 9]);
+        assert!(decode_request_traced(&bad).unwrap_err().0.contains("trailing"));
+        // a short trailer (tag but truncated id) is still an error
+        let mut short = legacy;
+        short.push(TRACE_TAG);
+        short.extend_from_slice(&[0u8; 4]);
+        assert!(decode_request_traced(&short).is_err());
     }
 
     #[test]

@@ -98,6 +98,7 @@ use super::frame::{ShardReply, ShardRequest, WireHit};
 use super::transport::{ShardError, ShardTransport};
 use crate::coordinator::Metrics;
 use crate::index::{angular_similarity, IndexSpec, SearchHit};
+use crate::telemetry::TraceCtx;
 use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicIsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex, OnceLock, Weak};
@@ -463,12 +464,51 @@ impl Router {
     /// request (`backup_req`) when the two shards must be asked
     /// different things — e.g. per-shard partition filters. Returns
     /// which shard answered.
+    ///
+    /// With `trace` set, the leg is recorded as a
+    /// `scatter:shard{answered_by}` span on the trace: `detail` carries
+    /// the caller's retry-round annotation, `hedged` marks a backup
+    /// replica winning the race, and a failed leg is annotated
+    /// `timeout` / `unreachable` — so a dumped trace shows every probe
+    /// the scatter made and why it was made.
     fn hedged_call(
         &self,
         shard: usize,
         backup: Option<usize>,
         req: &ShardRequest,
         backup_req: Option<&ShardRequest>,
+        trace: Option<(&TraceCtx, &str)>,
+    ) -> (usize, Result<ShardReply, ShardError>) {
+        let leg_start = Instant::now();
+        let trace_id = trace.map(|(ctx, _)| ctx.id());
+        let (answered_by, result) =
+            self.hedged_call_inner(shard, backup, req, backup_req, trace_id);
+        if let Some((ctx, extra)) = trace {
+            let mut detail = String::from(extra);
+            if answered_by != shard {
+                if !detail.is_empty() {
+                    detail.push(' ');
+                }
+                detail.push_str("hedged");
+            }
+            if let Err(e) = &result {
+                if !detail.is_empty() {
+                    detail.push(' ');
+                }
+                detail.push_str(if e.is_timeout() { "timeout" } else { "unreachable" });
+            }
+            ctx.span_since(&format!("scatter:shard{answered_by}"), leg_start, &detail);
+        }
+        (answered_by, result)
+    }
+
+    fn hedged_call_inner(
+        &self,
+        shard: usize,
+        backup: Option<usize>,
+        req: &ShardRequest,
+        backup_req: Option<&ShardRequest>,
+        trace_id: Option<u64>,
     ) -> (usize, Result<ShardReply, ShardError>) {
         let deadline = self.config.deadline;
         let plan = match (self.config.hedge_after, backup) {
@@ -476,7 +516,7 @@ impl Router {
             _ => None,
         };
         let Some((delay, backup)) = plan else {
-            return (shard, self.transports[shard].call_deadline(req, deadline));
+            return (shard, self.transports[shard].call_traced(req, deadline, trace_id));
         };
         let (tx, rx) = mpsc::channel::<(usize, Result<ShardReply, ShardError>)>();
         let spawn_probe =
@@ -487,7 +527,7 @@ impl Router {
                 std::thread::Builder::new()
                     .name(format!("strembed-hedge-{slot}"))
                     .spawn(move || {
-                        let out = transport.call_deadline(&req, deadline);
+                        let out = transport.call_traced(&req, deadline, trace_id);
                         if let Some(tok) = token {
                             tok.fetch_add(1, Ordering::SeqCst);
                         }
@@ -497,7 +537,7 @@ impl Router {
             };
         if !spawn_probe(shard, req, None) {
             // no thread to be had: degrade to a plain inline call
-            return (shard, self.transports[shard].call_deadline(req, deadline));
+            return (shard, self.transports[shard].call_traced(req, deadline, trace_id));
         }
         if let Ok(first) = rx.recv_timeout(delay) {
             return first;
@@ -616,6 +656,19 @@ impl Router {
         variant: &str,
         rows: &[Vec<f32>],
     ) -> Result<Vec<Vec<f32>>, String> {
+        self.embed_batch_traced(variant, rows, None)
+    }
+
+    /// [`Router::embed_batch`] with an optional trace context: every
+    /// scatter leg is recorded as a `scatter:shard{i}` span (retry
+    /// rounds, hedges and failures annotated in the detail) and the
+    /// final row-order reassembly as a `merge` span.
+    pub fn embed_batch_traced(
+        &self,
+        variant: &str,
+        rows: &[Vec<f32>],
+        trace: Option<&TraceCtx>,
+    ) -> Result<Vec<Vec<f32>>, String> {
         if rows.is_empty() {
             return Ok(Vec::new());
         }
@@ -654,6 +707,9 @@ impl Router {
                 }
             }
             work.clear();
+            let round_detail =
+                if _round == 0 { String::new() } else { format!("retry-round{_round}") };
+            let round_detail = &round_detail;
             let results: Vec<(usize, usize, usize, (usize, Result<ShardReply, ShardError>))> =
                 std::thread::scope(|s| {
                     let handles: Vec<_> = assignments
@@ -669,7 +725,8 @@ impl Router {
                                     .iter()
                                     .copied()
                                     .find(|&other| other != shard);
-                                (shard, start, len, self.hedged_call(shard, backup, &req, None))
+                                let leg = trace.map(|ctx| (ctx, round_detail.as_str()));
+                                (shard, start, len, self.hedged_call(shard, backup, &req, None, leg))
                             })
                         })
                         .collect();
@@ -717,7 +774,13 @@ impl Router {
         if !work.is_empty() {
             return Err("embed failed: shards kept dying during retries".into());
         }
-        Ok(out.into_iter().map(|r| r.expect("all ranges gathered")).collect())
+        let merge_start = Instant::now();
+        let gathered: Vec<Vec<f32>> =
+            out.into_iter().map(|r| r.expect("all ranges gathered")).collect();
+        if let Some(ctx) = trace {
+            ctx.span_since("merge", merge_start, &format!("rows={}", gathered.len()));
+        }
+        Ok(gathered)
     }
 
     /// Partition `corpus` round-robin by global row id across the live
@@ -847,6 +910,20 @@ impl Router {
         queries: &[Vec<f64>],
         k: usize,
     ) -> Result<ClusterAnswer, String> {
+        self.index_query_batch_traced(name, queries, k, None)
+    }
+
+    /// [`Router::index_query_batch`] with an optional trace context:
+    /// every coverage probe is recorded as a `scatter:shard{i}` span
+    /// (retry rounds, hedges and failures annotated) and the exact
+    /// top-k reassembly as a `merge` span.
+    pub fn index_query_batch_traced(
+        &self,
+        name: &str,
+        queries: &[Vec<f64>],
+        k: usize,
+        trace: Option<&TraceCtx>,
+    ) -> Result<ClusterAnswer, String> {
         let meta = self
             .indexes
             .lock()
@@ -930,6 +1007,9 @@ impl Router {
             }
             let calls: Vec<(usize, usize)> = targets.into_iter().collect();
             let query_req = &query_req;
+            let round_detail =
+                if round == 0 { String::new() } else { format!("retry-round{round}") };
+            let round_detail = &round_detail;
             let results: Vec<(usize, (usize, Result<ShardReply, ShardError>))> =
                 std::thread::scope(|s| {
                     let handles: Vec<_> = calls
@@ -956,7 +1036,17 @@ impl Router {
                                     Some(b) if filtered => Some(query_req(b)),
                                     _ => None,
                                 };
-                                (shard, self.hedged_call(shard, backup, &req, backup_req.as_ref()))
+                                let leg = trace.map(|ctx| (ctx, round_detail.as_str()));
+                                (
+                                    shard,
+                                    self.hedged_call(
+                                        shard,
+                                        backup,
+                                        &req,
+                                        backup_req.as_ref(),
+                                        leg,
+                                    ),
+                                )
                             })
                         })
                         .collect();
@@ -1020,7 +1110,8 @@ impl Router {
         if partial {
             self.metric(|m| m.on_partial_answer());
         }
-        let hits = merged
+        let merge_start = Instant::now();
+        let hits: Vec<Vec<SearchHit>> = merged
             .into_iter()
             .map(|mut pairs| {
                 pairs.sort_unstable();
@@ -1038,6 +1129,14 @@ impl Router {
                     .collect()
             })
             .collect();
+        if let Some(ctx) = trace {
+            let detail = if partial {
+                format!("queries={} partial", queries.len())
+            } else {
+                format!("queries={}", queries.len())
+            };
+            ctx.span_since("merge", merge_start, &detail);
+        }
         Ok(ClusterAnswer { hits, probed_buckets: probed_total, partial })
     }
 

@@ -31,7 +31,7 @@
 //! tests kill a shard mid-traffic.
 
 use super::frame::{
-    check_len, decode_request, encode_reply, payload_id, ShardReply, ShardRequest,
+    check_len, decode_request_traced, encode_reply, payload_id, ShardReply, ShardRequest,
 };
 use super::shard::ShardEngine;
 use std::collections::HashSet;
@@ -192,7 +192,7 @@ fn handle_conn(engine: Arc<ShardEngine>, mut stream: TcpStream, stop: Arc<Atomic
             Ok(ReadOutcome::Full) => {}
             _ => return,
         }
-        let (id, deadline_ms, req) = match decode_request(&payload) {
+        let (id, deadline_ms, req, trace) = match decode_request_traced(&payload) {
             Ok(parts) => parts,
             // framing was intact, so the connection survives a bad
             // body; the ERR is written inline, before the next frame is
@@ -206,6 +206,12 @@ fn handle_conn(engine: Arc<ShardEngine>, mut stream: TcpStream, stop: Arc<Atomic
                 continue;
             }
         };
+        // a trace trailer on the frame means the coordinator sampled
+        // this request; the shard's own metrics count it so a TRACE
+        // inspection on either side sees consistent sampling volume
+        if trace.is_some() {
+            engine.metrics().on_traced_request();
+        }
         if let ShardRequest::Cancel { target } = req {
             {
                 let mut c = canceled.lock().expect("shard cancel lock");
@@ -232,7 +238,7 @@ fn handle_conn(engine: Arc<ShardEngine>, mut stream: TcpStream, stop: Arc<Atomic
             // no thread to be had: degrade to the old serial behaviour
             // (the req was moved into the failed closure and comes back)
             let mut payload_req = None;
-            if let Ok((rid, rdl, r)) = decode_request(&payload) {
+            if let Ok((rid, rdl, r, _trace)) = decode_request_traced(&payload) {
                 debug_assert_eq!((rid, rdl), (id, deadline_ms));
                 payload_req = Some(r);
             }

@@ -29,7 +29,7 @@
 //! the connection healthy.
 
 use super::frame::{
-    check_len, decode_reply, encode_request, ShardReply, ShardRequest,
+    check_len, decode_reply, encode_request, encode_request_traced, ShardReply, ShardRequest,
 };
 use super::shard::ShardEngine;
 use std::collections::HashMap;
@@ -101,6 +101,21 @@ pub trait ShardTransport: Send + Sync {
         self.call_deadline(req, None)
     }
 
+    /// Deliver one request carrying an optional telemetry trace id
+    /// (sampled requests propagate their coordinator-minted id to the
+    /// shard; see `frame::encode_request_traced`). The default ignores
+    /// the id, so transports without wire-level trace support keep
+    /// working.
+    fn call_traced(
+        &self,
+        req: &ShardRequest,
+        deadline: Option<Duration>,
+        trace: Option<u64>,
+    ) -> Result<ShardReply, ShardError> {
+        let _ = trace;
+        self.call_deadline(req, deadline)
+    }
+
     /// Human-readable endpoint label for logs and health reports.
     fn describe(&self) -> String;
 }
@@ -116,6 +131,15 @@ impl<T: ShardTransport + ?Sized> ShardTransport for Arc<T> {
 
     fn call(&self, req: &ShardRequest) -> Result<ShardReply, ShardError> {
         (**self).call(req)
+    }
+
+    fn call_traced(
+        &self,
+        req: &ShardRequest,
+        deadline: Option<Duration>,
+        trace: Option<u64>,
+    ) -> Result<ShardReply, ShardError> {
+        (**self).call_traced(req, deadline, trace)
     }
 
     fn describe(&self) -> String {
@@ -168,6 +192,20 @@ impl ShardTransport for LocalTransport {
             )));
         }
         Ok(self.engine.handle(req.clone()))
+    }
+
+    fn call_traced(
+        &self,
+        req: &ShardRequest,
+        deadline: Option<Duration>,
+        trace: Option<u64>,
+    ) -> Result<ShardReply, ShardError> {
+        // in-process shards have no wire to carry the trailer; account
+        // the traced request on the shard's metrics directly
+        if trace.is_some() && !self.down.load(Ordering::SeqCst) {
+            self.engine.metrics().on_traced_request();
+        }
+        self.call_deadline(req, deadline)
     }
 
     fn describe(&self) -> String {
@@ -509,6 +547,15 @@ impl ShardTransport for TcpTransport {
         req: &ShardRequest,
         deadline: Option<Duration>,
     ) -> Result<ShardReply, ShardError> {
+        self.call_traced(req, deadline, None)
+    }
+
+    fn call_traced(
+        &self,
+        req: &ShardRequest,
+        deadline: Option<Duration>,
+        trace: Option<u64>,
+    ) -> Result<ShardReply, ShardError> {
         let inner = &self.inner;
         let timeout = deadline.unwrap_or(inner.config.call_timeout);
         let deadline_ms = timeout.as_millis().min(u32::MAX as u128) as u32;
@@ -521,7 +568,7 @@ impl ShardTransport for TcpTransport {
                 .lock()
                 .expect("transport pending lock")
                 .insert(id, PendingCall { tx, expires: Instant::now() + timeout });
-            let frame = encode_request(id, deadline_ms, req);
+            let frame = encode_request_traced(id, deadline_ms, req, trace);
             if let Err(e) = TcpTransport::write_frame(inner, &frame) {
                 inner.pending.lock().expect("transport pending lock").remove(&id);
                 return Err(e);

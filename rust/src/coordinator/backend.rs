@@ -40,10 +40,13 @@ use crate::engine::{
 };
 use crate::pmodel::StructureKind;
 use crate::runtime::{Engine, VariantMeta};
+use crate::telemetry::TraceCtx;
 use crate::transform::{EmbeddingConfig, Nonlinearity};
 use anyhow::{anyhow, Result};
 use std::path::PathBuf;
+use std::sync::atomic::AtomicU64;
 use std::sync::Arc;
+use std::time::Instant;
 
 use super::metrics::Metrics;
 
@@ -145,10 +148,17 @@ impl BackendSpec {
                     },
                     Precision::F32 => NativePipe::F32 {
                         pool: StreamingPool::new(plan.clone(), workers),
-                        shadow: metrics.map(|m| ShadowOracle::new(plan.clone(), m)),
+                        shadow: metrics.clone().map(|m| ShadowOracle::new(plan.clone(), m)),
                     },
                 };
-                Ok(Backend::Native(NativeBackend { plan, pipe }))
+                let nb = NativeBackend { plan, pipe };
+                // the pool's utilization cells feed the registry's
+                // pool_busy_workers / pool_queued_chunks Func gauges
+                if let Some(m) = &metrics {
+                    let (busy, queued) = nb.pool_gauge_cells();
+                    m.register_pool_gauges(busy, queued);
+                }
+                Ok(Backend::Native(nb))
             }
             BackendSpec::Cluster { variant, router, .. } => Ok(Backend::Cluster(
                 ClusterBackend { variant: variant.clone(), router: router.clone() },
@@ -340,10 +350,35 @@ impl NativeBackend {
         matches!(&self.pipe, NativePipe::F32 { shadow: Some(_), .. })
     }
 
+    /// The streaming pool's live utilization cells: `(busy_workers,
+    /// queued_chunks)` — wired into the metrics registry as Func gauges
+    /// by [`BackendSpec::build_with_metrics`].
+    pub fn pool_gauge_cells(&self) -> (Arc<AtomicU64>, Arc<AtomicU64>) {
+        match &self.pipe {
+            NativePipe::F64 { pool } => {
+                (pool.busy_workers_cell(), pool.queued_chunks_cell())
+            }
+            NativePipe::F32 { pool, .. } => {
+                (pool.busy_workers_cell(), pool.queued_chunks_cell())
+            }
+        }
+    }
+
     /// Embed a batch through the persistent streaming pool. Public so
     /// cluster shard executors can drive the same fused pipeline the
     /// coordinator workers use.
     pub fn embed_batch(&mut self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        self.embed_batch_traced(rows, None)
+    }
+
+    /// [`NativeBackend::embed_batch`] with an optional trace context:
+    /// the pool dispatch+collect is recorded as a `kernel` span and the
+    /// shard-to-row reassembly as a `merge` span.
+    pub fn embed_batch_traced(
+        &mut self,
+        rows: Vec<Vec<f32>>,
+        trace: Option<&TraceCtx>,
+    ) -> Result<Vec<Vec<f32>>> {
         let n = self.plan.n();
         let d = self.plan.out_dim();
         // take ownership of the payloads — validated, never copied
@@ -353,16 +388,33 @@ impl NativeBackend {
             NativePipe::F64 { pool } => {
                 // widening happens inside each worker's tile transpose;
                 // features narrow once per row on the way out
+                let kernel_start = Instant::now();
                 let shards = pool.embed_shards(src.clone());
-                shards_to_rows(shards, total, d, |chunk| {
+                if let Some(ctx) = trace {
+                    ctx.span_since("kernel", kernel_start, &format!("rows={total} f64"));
+                }
+                let merge_start = Instant::now();
+                let out = shards_to_rows(shards, total, d, |chunk| {
                     chunk.iter().map(|&x| x as f32).collect()
-                })
+                });
+                if let Some(ctx) = trace {
+                    ctx.span_since("merge", merge_start, "");
+                }
+                out
             }
             NativePipe::F32 { pool, shadow } => {
                 // wire rows are read in place by the pool workers:
                 // zero precision conversions and zero staging copies
+                let kernel_start = Instant::now();
                 let shards = pool.embed_shards(src.clone());
+                if let Some(ctx) = trace {
+                    ctx.span_since("kernel", kernel_start, &format!("rows={total} f32"));
+                }
+                let merge_start = Instant::now();
                 let out = shards_to_rows(shards, total, d, |chunk| chunk.to_vec());
+                if let Some(ctx) = trace {
+                    ctx.span_since("merge", merge_start, "");
+                }
                 if let Some(sh) = shadow {
                     sh.sample_batch(&src, &out);
                 }
@@ -397,12 +449,25 @@ impl Backend {
     /// Takes the rows by value: the native path moves them straight
     /// into the pool's shared [`WireRows`] source without copying.
     pub fn embed_batch(&mut self, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        self.embed_batch_traced(rows, None)
+    }
+
+    /// [`Backend::embed_batch`] with an optional trace context: the
+    /// native path records `kernel`/`merge` spans, the cluster path
+    /// records per-shard `scatter:shard{i}` legs and the row-order
+    /// `merge` (and stamps the trace id onto every request frame).
+    pub fn embed_batch_traced(
+        &mut self,
+        rows: Vec<Vec<f32>>,
+        trace: Option<&TraceCtx>,
+    ) -> Result<Vec<Vec<f32>>> {
         match self {
             Backend::Pjrt(engine) => engine.embed_batch(&rows),
-            Backend::Native(nb) => nb.embed_batch(rows),
-            Backend::Cluster(cb) => {
-                cb.router.embed_batch(&cb.variant, &rows).map_err(|e| anyhow!("{e}"))
-            }
+            Backend::Native(nb) => nb.embed_batch_traced(rows, trace),
+            Backend::Cluster(cb) => cb
+                .router
+                .embed_batch_traced(&cb.variant, &rows, trace)
+                .map_err(|e| anyhow!("{e}")),
         }
     }
 }

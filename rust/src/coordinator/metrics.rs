@@ -1,78 +1,106 @@
-//! Serving metrics: counters + latency reservoir with percentile
-//! snapshots.
+//! Serving metrics: a stable `on_*` facade over the
+//! [`crate::telemetry`] registry, plus the sampled request-trace
+//! plumbing and the slow-query log.
+//!
+//! Every counter, gauge and histogram lives in one
+//! [`crate::telemetry::Registry`], so the same cells back three
+//! expositions:
+//!
+//! - the legacy one-line text snapshot ([`MetricsSnapshot`]'s
+//!   `Display`, served by TCP `METRICS` and embedded in `HEALTH`),
+//! - one-line JSON (TCP `METRICS JSON`: every legacy counter plus the
+//!   histograms, parseable by [`crate::util::json::Json`]),
+//! - Prometheus text format (TCP `METRICS PROM`).
+//!
+//! Request latency is recorded into a lock-free log-bucketed
+//! [`crate::telemetry::Histogram`]. (The old `Mutex<Vec<f64>>`
+//! reservoir pushed under a lock on every completion and sorted the
+//! whole reservoir inside `snapshot()`; the histogram records with
+//! relaxed atomic increments and snapshots in O(buckets).)
+//!
+//! # Text grammar
+//!
+//! The `METRICS` line is machine-checkable:
+//!
+//! ```text
+//! metrics-line := field (" " field)*
+//! field        := key "=" value        (no spaces inside a field)
+//! key          := [a-z0-9_]+
+//! value        := number, optionally with a unit suffix ("s", "ms")
+//!                 or in scientific notation ("1.00e-6")
+//! ```
+//!
+//! Field order is fixed (new fields append at the end, never in the
+//! middle), so substring assertions and positional parsers stay valid
+//! across versions. [`parse_metrics_line`] parses it back. The
+//! `HEALTH` line puts `healthy variants=<csv> indexes=<csv> ` in front
+//! of the same grammar (`-` for an empty name list); after stripping
+//! the leading `healthy ` token it parses with the same function.
 
+use crate::telemetry::{
+    AtomicF64, Histogram, Registry, Trace, TraceCtx, TraceRing, TraceSampler,
+};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
-use std::time::Instant;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Default trace sampling period: one trace minted per 64 requests.
+pub const DEFAULT_TRACE_SAMPLE: u64 = 64;
 
 /// Shared metrics sink (cheap to clone via Arc at the call sites).
+/// All recording methods are lock-free; see the module docs.
 #[derive(Debug)]
 pub struct Metrics {
     started: Instant,
-    submitted: AtomicU64,
-    completed: AtomicU64,
-    rejected: AtomicU64,
-    failed: AtomicU64,
-    batches: AtomicU64,
-    batch_rows: AtomicU64,
-    /// per-request latencies in seconds (bounded reservoir)
-    latencies: Mutex<Vec<f64>>,
+    registry: Arc<Registry>,
+    submitted: Arc<AtomicU64>,
+    completed: Arc<AtomicU64>,
+    rejected: Arc<AtomicU64>,
+    failed: Arc<AtomicU64>,
+    batches: Arc<AtomicU64>,
+    batch_rows: Arc<AtomicU64>,
+    /// per-request end-to-end latency in nanoseconds
+    latency_ns: Arc<Histogram>,
     /// rows shadow-checked against the f64 oracle
-    shadow_samples: AtomicU64,
-    /// accumulated shadow error extremes/sums (sampled ~1/256 of f32
-    /// traffic, so the lock is nearly always uncontended)
-    shadow: Mutex<ShadowErr>,
-    /// similarity indexes built and registered
-    index_builds: AtomicU64,
-    /// index queries served (batch queries count every row)
-    index_queries: AtomicU64,
-    /// buckets probed across all index queries (flat scan = 1/query)
-    index_probed_buckets: AtomicU64,
-    /// wall nanoseconds spent in index searches
-    index_query_ns: AtomicU64,
-    /// rows pushed into mutable indexes
-    index_pushes: AtomicU64,
-    /// rows tombstoned in mutable indexes (present-and-live deletes)
-    index_deletes: AtomicU64,
-    /// gauge: segments across all registered mutable indexes
-    index_segments: AtomicU64,
-    /// gauge: live (searchable) docs across all mutable indexes
-    index_live_docs: AtomicU64,
-    /// gauge: tombstoned docs not yet folded out by compaction
-    index_tombstones: AtomicU64,
-    /// gauge: lifetime segment merges across all mutable indexes
-    index_compactions: AtomicU64,
-    /// cluster: backup probes launched after the hedging delay
-    hedged_requests: AtomicU64,
-    /// cluster: probes retried on another shard/replica
-    request_retries: AtomicU64,
-    /// cluster: health-probe rounds where a probe thread failed to
-    /// spawn (the shard kept its previous liveness)
-    health_probe_errors: AtomicU64,
-    /// cluster: dead shards re-admitted by a successful health probe
-    shard_readmissions: AtomicU64,
-    /// cluster: merged answers that lost at least one partition
-    partial_answers: AtomicU64,
-    /// cluster: placement-epoch bumps from grace-period rebalancing
-    cluster_rebalances: AtomicU64,
-    /// cluster: anti-entropy partition repairs begun
-    repairs_started: AtomicU64,
-    /// cluster: repairs that streamed, installed, and promoted
-    repairs_completed: AtomicU64,
-    /// cluster: repairs abandoned mid-stream (replica stays Rebuilding)
-    repairs_failed: AtomicU64,
-    /// cluster: live rows re-streamed by anti-entropy repair
-    repair_rows_streamed: AtomicU64,
-    /// gauge: partitions with fewer Live homes than configured replicas
-    under_replicated_partitions: AtomicU64,
-}
-
-#[derive(Debug, Default, Clone, Copy)]
-struct ShadowErr {
+    shadow_samples: Arc<AtomicU64>,
     /// sum over sampled rows of the row's mean relative error
-    mean_sum: f64,
+    shadow_mean_sum: Arc<AtomicF64>,
     /// max relative error seen over any sampled feature
-    max: f64,
+    shadow_max: Arc<AtomicF64>,
+    index_builds: Arc<AtomicU64>,
+    index_queries: Arc<AtomicU64>,
+    index_probed_buckets: Arc<AtomicU64>,
+    index_query_ns: Arc<AtomicU64>,
+    index_pushes: Arc<AtomicU64>,
+    index_deletes: Arc<AtomicU64>,
+    index_segments: Arc<AtomicU64>,
+    index_live_docs: Arc<AtomicU64>,
+    index_tombstones: Arc<AtomicU64>,
+    index_compactions: Arc<AtomicU64>,
+    hedged_requests: Arc<AtomicU64>,
+    request_retries: Arc<AtomicU64>,
+    health_probe_errors: Arc<AtomicU64>,
+    shard_readmissions: Arc<AtomicU64>,
+    partial_answers: Arc<AtomicU64>,
+    cluster_rebalances: Arc<AtomicU64>,
+    repairs_started: Arc<AtomicU64>,
+    repairs_completed: Arc<AtomicU64>,
+    repairs_failed: Arc<AtomicU64>,
+    repair_rows_streamed: Arc<AtomicU64>,
+    under_replicated_partitions: Arc<AtomicU64>,
+    /// requests that carried a trace id (minted or frame-propagated)
+    traced_requests: Arc<AtomicU64>,
+    /// requests at or over the slow-query threshold
+    slow_queries: Arc<AtomicU64>,
+    /// streaming-pool utilization cells registered by backends, summed
+    /// at render time into one pair of process gauges
+    pool_busy: Arc<Mutex<Vec<Arc<AtomicU64>>>>,
+    pool_queued: Arc<Mutex<Vec<Arc<AtomicU64>>>>,
+    /// finished sampled traces, served by TCP `TRACE [n]`
+    traces: TraceRing,
+    sampler: TraceSampler,
+    /// slow-query threshold in milliseconds (0 = disabled)
+    slow_ms: AtomicU64,
 }
 
 /// Frozen view of the metrics.
@@ -149,46 +177,91 @@ pub struct MetricsSnapshot {
     pub repair_rows_streamed: u64,
     /// partitions with fewer Live homes than configured replicas (gauge)
     pub under_replicated_partitions: u64,
+    /// requests that carried a trace id (minted or frame-propagated)
+    pub traced_requests: u64,
+    /// requests at or over the `--slow-ms` threshold
+    pub slow_queries: u64,
 }
 
-const RESERVOIR: usize = 100_000;
-
 impl Metrics {
-    /// Fresh metrics.
+    /// Fresh metrics backed by a fresh registry.
     pub fn new() -> Metrics {
-        Metrics {
+        let r = Arc::new(Registry::new());
+        let c = |name: &str, help: &str| r.counter(name, help);
+        let g = |name: &str, help: &str| r.gauge(name, help);
+        let pool_busy: Arc<Mutex<Vec<Arc<AtomicU64>>>> = Arc::default();
+        let pool_queued: Arc<Mutex<Vec<Arc<AtomicU64>>>> = Arc::default();
+        let m = Metrics {
             started: Instant::now(),
-            submitted: AtomicU64::new(0),
-            completed: AtomicU64::new(0),
-            rejected: AtomicU64::new(0),
-            failed: AtomicU64::new(0),
-            batches: AtomicU64::new(0),
-            batch_rows: AtomicU64::new(0),
-            latencies: Mutex::new(Vec::new()),
-            shadow_samples: AtomicU64::new(0),
-            shadow: Mutex::new(ShadowErr::default()),
-            index_builds: AtomicU64::new(0),
-            index_queries: AtomicU64::new(0),
-            index_probed_buckets: AtomicU64::new(0),
-            index_query_ns: AtomicU64::new(0),
-            index_pushes: AtomicU64::new(0),
-            index_deletes: AtomicU64::new(0),
-            index_segments: AtomicU64::new(0),
-            index_live_docs: AtomicU64::new(0),
-            index_tombstones: AtomicU64::new(0),
-            index_compactions: AtomicU64::new(0),
-            hedged_requests: AtomicU64::new(0),
-            request_retries: AtomicU64::new(0),
-            health_probe_errors: AtomicU64::new(0),
-            shard_readmissions: AtomicU64::new(0),
-            partial_answers: AtomicU64::new(0),
-            cluster_rebalances: AtomicU64::new(0),
-            repairs_started: AtomicU64::new(0),
-            repairs_completed: AtomicU64::new(0),
-            repairs_failed: AtomicU64::new(0),
-            repair_rows_streamed: AtomicU64::new(0),
-            under_replicated_partitions: AtomicU64::new(0),
-        }
+            submitted: c("submitted", "requests accepted into a queue"),
+            completed: c("completed", "responses delivered"),
+            rejected: c("rejected", "requests shed by backpressure"),
+            failed: c("failed", "requests that failed in the backend"),
+            batches: c("batches", "batches executed"),
+            batch_rows: c("batch_rows", "rows across all executed batches"),
+            latency_ns: r
+                .histogram("request_latency_ns", "end-to-end request latency in nanoseconds"),
+            shadow_samples: c("shadow_samples", "rows shadow-checked against the f64 oracle"),
+            shadow_mean_sum: r
+                .float_gauge("shadow_mean_err_sum", "summed per-row mean relative error"),
+            shadow_max: r.float_gauge("shadow_max_err", "max shadow-checked relative error"),
+            index_builds: c("index_builds", "similarity indexes built"),
+            index_queries: c("index_queries", "index queries served"),
+            index_probed_buckets: c("index_probed_buckets", "buckets probed over all queries"),
+            index_query_ns: c("index_query_ns", "wall nanoseconds spent in index searches"),
+            index_pushes: c("index_pushes", "rows pushed into mutable indexes"),
+            index_deletes: c("index_deletes", "rows tombstoned in mutable indexes"),
+            index_segments: g("index_segments", "segments across mutable indexes"),
+            index_live_docs: g("index_live_docs", "live docs across mutable indexes"),
+            index_tombstones: g("index_tombstones", "tombstones awaiting compaction"),
+            index_compactions: g("index_compactions", "lifetime segment merges"),
+            hedged_requests: c("hedged_requests", "backup probes launched after the hedge delay"),
+            request_retries: c("request_retries", "probes retried on another shard/replica"),
+            health_probe_errors: c("health_probe_errors", "health probes that failed to spawn"),
+            shard_readmissions: c("shard_readmissions", "dead shards re-admitted"),
+            partial_answers: c("partial_answers", "merged answers missing a partition"),
+            cluster_rebalances: c("cluster_rebalances", "placement-epoch rebalances"),
+            repairs_started: c("repairs_started", "anti-entropy repairs begun"),
+            repairs_completed: c("repairs_completed", "repairs promoted to Live"),
+            repairs_failed: c("repairs_failed", "repairs abandoned mid-stream"),
+            repair_rows_streamed: c("repair_rows_streamed", "rows re-streamed by repair"),
+            under_replicated_partitions: g(
+                "under_replicated_partitions",
+                "partitions below the configured replica count",
+            ),
+            traced_requests: c("traced_requests", "requests carrying a trace id"),
+            slow_queries: c("slow_queries", "requests at or over the slow-query threshold"),
+            pool_busy: pool_busy.clone(),
+            pool_queued: pool_queued.clone(),
+            traces: TraceRing::default(),
+            sampler: TraceSampler::new(DEFAULT_TRACE_SAMPLE),
+            slow_ms: AtomicU64::new(0),
+            registry: r.clone(),
+        };
+        // derived metrics, read at render time: the process-wide plan
+        // cache and the summed streaming-pool utilization gauges
+        let cache = crate::engine::PlanCache::global();
+        r.func("plan_cache_hits", "process-wide plan cache hits", || cache.stats().hits);
+        r.func("plan_cache_misses", "process-wide plan cache misses", || cache.stats().misses);
+        r.func("plan_cache_evictions", "process-wide plan cache evictions", || {
+            cache.stats().evictions
+        });
+        r.func("plan_cache_entries", "plans currently cached", || cache.stats().len as u64);
+        let busy = pool_busy;
+        r.func("pool_busy_workers", "streaming-pool workers executing a chunk", move || {
+            busy.lock().unwrap().iter().map(|cell| cell.load(Ordering::Relaxed)).sum()
+        });
+        let queued = pool_queued;
+        r.func("pool_queued_chunks", "dispatched chunks not yet claimed by a worker", move || {
+            queued.lock().unwrap().iter().map(|cell| cell.load(Ordering::Relaxed)).sum()
+        });
+        m
+    }
+
+    /// The backing registry (for exposition and per-layer extras like
+    /// the per-family embed histograms).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
     }
 
     /// Record an accepted request.
@@ -215,10 +288,7 @@ impl Metrics {
     /// Record a completed request with its end-to-end latency.
     pub fn on_complete(&self, latency_secs: f64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
-        let mut g = self.latencies.lock().unwrap();
-        if g.len() < RESERVOIR {
-            g.push(latency_secs);
-        }
+        self.latency_ns.record((latency_secs * 1e9) as u64);
     }
 
     /// Record one f32 row shadow-checked against the f64 oracle:
@@ -226,9 +296,8 @@ impl Metrics {
     /// per-feature relative errors.
     pub fn on_shadow_sample(&self, mean_rel_err: f64, max_rel_err: f64) {
         self.shadow_samples.fetch_add(1, Ordering::Relaxed);
-        let mut g = self.shadow.lock().unwrap();
-        g.mean_sum += mean_rel_err;
-        g.max = g.max.max(max_rel_err);
+        self.shadow_mean_sum.add(mean_rel_err);
+        self.shadow_max.max(max_rel_err);
     }
 
     /// Record a similarity-index build.
@@ -332,15 +401,98 @@ impl Metrics {
         self.under_replicated_partitions.store(partitions, Ordering::Relaxed);
     }
 
+    // --- telemetry: traces, slow queries, per-family histograms ---
+
+    /// Record a request that arrived already carrying a propagated
+    /// trace id (the shard side; coordinator-minted traces count via
+    /// [`Metrics::sample_trace`]).
+    pub fn on_traced_request(&self) {
+        self.traced_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Set the trace sampling period (`--trace-sample N`; 0 disables).
+    pub fn set_trace_sample(&self, every: u64) {
+        self.sampler.set_every(every);
+    }
+
+    /// Set the slow-query threshold in milliseconds (`--slow-ms`;
+    /// 0 disables).
+    pub fn set_slow_ms(&self, ms: u64) {
+        self.slow_ms.store(ms, Ordering::Relaxed);
+    }
+
+    /// Count one request against the sampler; mint a trace context for
+    /// one in every `trace-sample` of them.
+    pub fn sample_trace(&self) -> Option<Arc<TraceCtx>> {
+        let ctx = self.sampler.sample()?;
+        self.traced_requests.fetch_add(1, Ordering::Relaxed);
+        Some(ctx)
+    }
+
+    /// Finish a sampled trace into the ring (served by TCP `TRACE`).
+    pub fn finish_trace(&self, ctx: &TraceCtx, op: &str) {
+        self.traces.push(ctx.finish(op));
+    }
+
+    /// The most recent `n` finished traces, oldest first.
+    pub fn traces_recent(&self, n: usize) -> Vec<Trace> {
+        self.traces.recent(n)
+    }
+
+    /// Check a completed request against the slow-query threshold:
+    /// over-threshold requests bump `slow_queries` and log one stderr
+    /// line. Returns whether the request counted as slow.
+    pub fn observe_slow(&self, op: &str, latency: Duration, trace_id: Option<u64>) -> bool {
+        let ms = self.slow_ms.load(Ordering::Relaxed);
+        if ms == 0 || latency < Duration::from_millis(ms) {
+            return false;
+        }
+        self.slow_queries.fetch_add(1, Ordering::Relaxed);
+        let trace = trace_id.map(|id| format!(" trace_id={id}")).unwrap_or_default();
+        eprintln!(
+            "slow-query op={op} latency_ms={:.3} threshold_ms={ms}{trace}",
+            latency.as_secs_f64() * 1e3
+        );
+        true
+    }
+
+    /// The per-family embed-kernel histogram (`embed_ns_<variant>`),
+    /// registered on first use; records wall nanoseconds per executed
+    /// batch.
+    pub fn embed_hist(&self, variant: &str) -> Arc<Histogram> {
+        self.registry.histogram(
+            &format!("embed_ns_{variant}"),
+            "embed kernel wall nanoseconds per executed batch",
+        )
+    }
+
+    /// Register a streaming pool's utilization cells; every registered
+    /// pool folds into the summed `pool_busy_workers` /
+    /// `pool_queued_chunks` gauges.
+    pub fn register_pool_gauges(&self, busy: Arc<AtomicU64>, queued: Arc<AtomicU64>) {
+        self.pool_busy.lock().unwrap().push(busy);
+        self.pool_queued.lock().unwrap().push(queued);
+    }
+
+    /// One-line JSON exposition of every registered metric
+    /// (TCP `METRICS JSON`).
+    pub fn render_json(&self) -> String {
+        self.registry.render_json()
+    }
+
+    /// Prometheus text-format exposition lines (TCP `METRICS PROM`).
+    pub fn render_prom(&self) -> Vec<String> {
+        self.registry.render_prom()
+    }
+
     /// Take a snapshot.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let lat = self.latencies.lock().unwrap().clone();
+        let lat = self.latency_ns.snapshot();
         let uptime = self.started.elapsed().as_secs_f64().max(1e-9);
         let completed = self.completed.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
         let rows = self.batch_rows.load(Ordering::Relaxed);
         let shadow_samples = self.shadow_samples.load(Ordering::Relaxed);
-        let shadow = *self.shadow.lock().unwrap();
         let index_queries = self.index_queries.load(Ordering::Relaxed);
         let per_query = |total: u64| {
             if index_queries > 0 {
@@ -358,16 +510,16 @@ impl Metrics {
             batches,
             mean_batch_size: if batches > 0 { rows as f64 / batches as f64 } else { 0.0 },
             throughput_rps: completed as f64 / uptime,
-            p50: crate::util::percentile(&lat, 50.0),
-            p90: crate::util::percentile(&lat, 90.0),
-            p99: crate::util::percentile(&lat, 99.0),
+            p50: lat.quantile(0.5) as f64 / 1e9,
+            p90: lat.quantile(0.9) as f64 / 1e9,
+            p99: lat.quantile(0.99) as f64 / 1e9,
             shadow_samples,
             shadow_mean_rel_err: if shadow_samples > 0 {
-                shadow.mean_sum / shadow_samples as f64
+                self.shadow_mean_sum.get() / shadow_samples as f64
             } else {
                 0.0
             },
-            shadow_max_rel_err: shadow.max,
+            shadow_max_rel_err: self.shadow_max.get(),
             index_builds: self.index_builds.load(Ordering::Relaxed),
             index_queries,
             index_mean_probed_buckets: per_query(
@@ -391,6 +543,8 @@ impl Metrics {
             repairs_failed: self.repairs_failed.load(Ordering::Relaxed),
             repair_rows_streamed: self.repair_rows_streamed.load(Ordering::Relaxed),
             under_replicated_partitions: self.under_replicated_partitions.load(Ordering::Relaxed),
+            traced_requests: self.traced_requests.load(Ordering::Relaxed),
+            slow_queries: self.slow_queries.load(Ordering::Relaxed),
         }
     }
 }
@@ -416,6 +570,22 @@ pub fn health_line(variants: &[String], indexes: &[String], snapshot: &MetricsSn
     format!("healthy variants={} indexes={} {}", join(variants), join(indexes), snapshot)
 }
 
+/// Parse a `METRICS` line (or the tail of a `HEALTH` line after its
+/// leading `healthy ` token) back into ordered `(key, value)` pairs.
+/// Returns `None` if any token is not `key=value` — the grammar admits
+/// no bare words.
+pub fn parse_metrics_line(line: &str) -> Option<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    for tok in line.split_whitespace() {
+        let (k, v) = tok.split_once('=')?;
+        if k.is_empty() || v.is_empty() {
+            return None;
+        }
+        out.push((k.to_string(), v.to_string()));
+    }
+    Some(out)
+}
+
 impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
@@ -429,7 +599,8 @@ impl std::fmt::Display for MetricsSnapshot {
              index_compactions={} hedged_requests={} request_retries={} \
              health_probe_errors={} shard_readmissions={} partial_answers={} \
              cluster_rebalances={} repairs_started={} repairs_completed={} \
-             repairs_failed={} repair_rows_streamed={} under_replicated_partitions={}",
+             repairs_failed={} repair_rows_streamed={} under_replicated_partitions={} \
+             traced_requests={} slow_queries={}",
             self.uptime,
             self.submitted,
             self.completed,
@@ -464,7 +635,9 @@ impl std::fmt::Display for MetricsSnapshot {
             self.repairs_completed,
             self.repairs_failed,
             self.repair_rows_streamed,
-            self.under_replicated_partitions
+            self.under_replicated_partitions,
+            self.traced_requests,
+            self.slow_queries
         )
     }
 }
@@ -499,6 +672,8 @@ mod tests {
         assert!(text.contains("completed=1"));
         assert!(text.contains("p99"));
         assert!(text.contains("shadow_samples=0"));
+        assert!(text.contains("traced_requests=0"));
+        assert!(text.contains("slow_queries=0"));
     }
 
     #[test]
@@ -605,5 +780,81 @@ mod tests {
         assert_eq!(s.shadow_samples, 2);
         assert!((s.shadow_mean_rel_err - 2e-6).abs() < 1e-18);
         assert!((s.shadow_max_rel_err - 4e-6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn metrics_line_round_trips_with_stable_field_order() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_complete(0.002);
+        m.on_index_query(3, 3, 9_000);
+        let s = m.snapshot();
+        let fields = parse_metrics_line(&format!("{s}")).expect("grammar holds");
+        let keys: Vec<&str> = fields.iter().map(|(k, _)| k.as_str()).collect();
+        // the documented order: stable, append-only
+        assert_eq!(keys[0], "up");
+        assert_eq!(keys[1], "submitted");
+        assert_eq!(keys[2], "completed");
+        assert_eq!(keys[keys.len() - 2], "traced_requests");
+        assert_eq!(keys[keys.len() - 1], "slow_queries");
+        let get = |k: &str| fields.iter().find(|(key, _)| key == k).map(|(_, v)| v.clone());
+        assert_eq!(get("submitted").as_deref(), Some("1"));
+        assert_eq!(get("completed").as_deref(), Some("1"));
+        assert_eq!(get("index_queries").as_deref(), Some("3"));
+        // the health line parses after stripping its leading token
+        let health = health_line(&["v".into()], &[], &s);
+        let tail = health.strip_prefix("healthy ").unwrap();
+        let hfields = parse_metrics_line(tail).expect("health tail parses");
+        assert_eq!(hfields[0], ("variants".to_string(), "v".to_string()));
+        assert_eq!(hfields[1], ("indexes".to_string(), "-".to_string()));
+        // bare words are rejected
+        assert!(parse_metrics_line("healthy a=1").is_none());
+    }
+
+    #[test]
+    fn json_exposes_legacy_counters_and_histograms() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_complete(0.004);
+        m.on_hedged_request();
+        let json = crate::util::json::Json::parse(&m.render_json()).expect("valid JSON");
+        assert_eq!(json.get("submitted").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(json.get("hedged_requests").and_then(|v| v.as_f64()), Some(1.0));
+        let lat = json.get("request_latency_ns").expect("histogram present");
+        assert_eq!(lat.get("count").and_then(|v| v.as_f64()), Some(1.0));
+        assert!(lat.get("p50").and_then(|v| v.as_f64()).unwrap() > 1e6);
+        assert!(json.get("plan_cache_entries").and_then(|v| v.as_f64()).is_some());
+        assert!(json.get("pool_busy_workers").and_then(|v| v.as_f64()).is_some());
+        // the prometheus text renders the same cells
+        let prom = m.render_prom();
+        assert!(prom.iter().any(|l| l == "submitted 1"), "{prom:?}");
+        assert!(prom.iter().any(|l| l.starts_with("request_latency_ns_count 1")), "{prom:?}");
+    }
+
+    #[test]
+    fn slow_query_threshold_gates_counter() {
+        let m = Metrics::new();
+        // disabled by default
+        assert!(!m.observe_slow("embed", Duration::from_millis(500), None));
+        m.set_slow_ms(10);
+        assert!(!m.observe_slow("embed", Duration::from_millis(9), None));
+        assert!(m.observe_slow("embed", Duration::from_millis(11), Some(3)));
+        assert_eq!(m.snapshot().slow_queries, 1);
+    }
+
+    #[test]
+    fn trace_sampling_mints_and_collects() {
+        let m = Metrics::new();
+        m.set_trace_sample(2);
+        let a = m.sample_trace();
+        let b = m.sample_trace();
+        assert!(a.is_some() && b.is_none());
+        let ctx = a.unwrap();
+        ctx.span_since("queue", ctx.t0(), "");
+        m.finish_trace(&ctx, "embed");
+        let traces = m.traces_recent(8);
+        assert_eq!(traces.len(), 1);
+        assert_eq!(traces[0].op, "embed");
+        assert_eq!(m.snapshot().traced_requests, 1);
     }
 }

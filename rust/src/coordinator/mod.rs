@@ -65,6 +65,8 @@ pub use crate::engine::Precision;
 pub use crate::index::{IndexHandle, IndexSpec, QueryResult, SearchHit};
 pub use backend::{Backend, BackendSpec, ClusterBackend, NativeBackend, SHADOW_SAMPLE_PERIOD};
 pub use batcher::{BatchQueue, QueueError};
-pub use metrics::{health_line, Metrics, MetricsSnapshot};
+pub use metrics::{
+    health_line, parse_metrics_line, Metrics, MetricsSnapshot, DEFAULT_TRACE_SAMPLE,
+};
 pub use server::{Coordinator, CoordinatorConfig, EmbedError, EmbedResponse, IndexAnswer};
 pub use tcp::{serve_tcp, MAX_BUILD_CHUNK_ROWS, MAX_LINE_BYTES};

@@ -8,8 +8,9 @@
 
 use super::backend::BackendSpec;
 use super::batcher::{BatchQueue, QueueError};
-use super::metrics::Metrics;
+use super::metrics::{Metrics, DEFAULT_TRACE_SAMPLE};
 use crate::index::{IndexHandle, IndexSpec, LifecycleStats, MutableIndex, SearchHit};
+use crate::telemetry::TraceCtx;
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -26,6 +27,12 @@ pub struct CoordinatorConfig {
     pub linger: Duration,
     /// bounded queue depth per variant (backpressure beyond this)
     pub queue_capacity: usize,
+    /// slow-query log threshold in milliseconds (0 disables): a request
+    /// slower than this is counted and logged to stderr with its trace
+    /// id when it was sampled
+    pub slow_ms: u64,
+    /// trace one request in every `trace_sample` (0 disables tracing)
+    pub trace_sample: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -34,6 +41,8 @@ impl Default for CoordinatorConfig {
             max_batch: 16,
             linger: Duration::from_millis(2),
             queue_capacity: 1024,
+            slow_ms: 0,
+            trace_sample: DEFAULT_TRACE_SAMPLE,
         }
     }
 }
@@ -79,6 +88,8 @@ impl std::error::Error for EmbedError {}
 struct Pending {
     vector: Vec<f32>,
     enqueued: Instant,
+    /// trace context when the sampler picked this request
+    trace: Option<Arc<TraceCtx>>,
     reply: mpsc::Sender<Result<EmbedResponse, EmbedError>>,
 }
 
@@ -148,6 +159,8 @@ impl Coordinator {
         cluster: Option<crate::cluster::ClusterHandle>,
     ) -> anyhow::Result<Coordinator> {
         let metrics = Arc::new(Metrics::new());
+        metrics.set_trace_sample(config.trace_sample);
+        metrics.set_slow_ms(config.slow_ms);
         if let Some(router) = &cluster {
             // the router's hedge/retry/probe/partial counters land in
             // the same snapshot the HEALTH line reports
@@ -177,6 +190,9 @@ impl Coordinator {
                             return;
                         }
                     };
+                    // per-family embed latency histogram (ns per
+                    // executed batch), registered once per worker
+                    let embed_hist = wmetrics.embed_hist(&wname);
                     while let Some(batch) = wq.pop_batch(max_batch, linger) {
                         if batch.is_empty() {
                             continue;
@@ -185,27 +201,55 @@ impl Coordinator {
                         // split each request into its payload (moved —
                         // not copied — into the backend's shared row
                         // source) and its reply half
+                        let dequeued = Instant::now();
+                        let batch_size = batch.len();
                         let mut payloads = Vec::with_capacity(batch.len());
                         let mut replies = Vec::with_capacity(batch.len());
                         for p in batch {
+                            if let Some(ctx) = &p.trace {
+                                ctx.span_between(
+                                    "queue",
+                                    p.enqueued,
+                                    dequeued,
+                                    &format!("batch={batch_size}"),
+                                );
+                            }
                             payloads.push(p.vector);
-                            replies.push((p.enqueued, p.reply));
+                            replies.push((p.enqueued, p.trace, p.reply));
                         }
-                        match backend.embed_batch(payloads) {
+                        // the first sampled request in the batch stands
+                        // for the whole executed batch: its trace gets
+                        // the backend's kernel/merge (or scatter) spans
+                        let rep =
+                            replies.iter().find_map(|(_, t, _)| t.as_ref()).cloned();
+                        let exec_start = Instant::now();
+                        match backend.embed_batch_traced(payloads, rep.as_deref()) {
                             Ok(features) => {
-                                for ((enqueued, reply), f) in
+                                embed_hist.record_duration(exec_start.elapsed());
+                                for ((enqueued, trace, reply), f) in
                                     replies.into_iter().zip(features)
                                 {
                                     let latency = enqueued.elapsed();
                                     wmetrics.on_complete(latency.as_secs_f64());
+                                    wmetrics.observe_slow(
+                                        "embed",
+                                        latency,
+                                        trace.as_ref().map(|t| t.id()),
+                                    );
+                                    if let Some(ctx) = trace {
+                                        wmetrics.finish_trace(&ctx, "embed");
+                                    }
                                     let _ =
                                         reply.send(Ok(EmbedResponse { features: f, latency }));
                                 }
                             }
                             Err(e) => {
                                 let msg = format!("{e:#}");
-                                for (_, reply) in replies {
+                                for (_, trace, reply) in replies {
                                     wmetrics.on_fail();
+                                    if let Some(ctx) = trace {
+                                        wmetrics.finish_trace(&ctx, "embed");
+                                    }
                                     let _ =
                                         reply.send(Err(EmbedError::Backend(msg.clone())));
                                 }
@@ -272,7 +316,8 @@ impl Coordinator {
             )));
         }
         let (tx, rx) = mpsc::channel();
-        let pending = Pending { vector, enqueued: Instant::now(), reply: tx };
+        let trace = self.metrics.sample_trace();
+        let pending = Pending { vector, enqueued: Instant::now(), trace, reply: tx };
         match v.queue.push(pending) {
             Ok(()) => {
                 self.metrics.on_submit();
@@ -510,18 +555,32 @@ impl Coordinator {
         queries: &[Vec<f32>],
         k: usize,
     ) -> Result<IndexAnswer, EmbedError> {
+        let trace = self.metrics.sample_trace();
+        let finish = |started: Instant, trace: Option<Arc<TraceCtx>>| {
+            let latency = started.elapsed();
+            self.metrics.observe_slow(
+                "index_query",
+                latency,
+                trace.as_ref().map(|t| t.id()),
+            );
+            if let Some(ctx) = trace {
+                self.metrics.finish_trace(&ctx, "index_query");
+            }
+        };
         if let Some(router) = &self.cluster {
             if router.has_index(name) {
                 let wide: Vec<Vec<f64>> =
                     queries.iter().map(|q| q.iter().map(|&v| v as f64).collect()).collect();
                 let started = Instant::now();
-                let ans =
-                    router.index_query_batch(name, &wide, k).map_err(EmbedError::Backend)?;
+                let ans = router
+                    .index_query_batch_traced(name, &wide, k, trace.as_deref())
+                    .map_err(EmbedError::Backend)?;
                 self.metrics.on_index_query(
                     queries.len(),
                     ans.probed_buckets,
                     started.elapsed().as_nanos() as u64,
                 );
+                finish(started, trace);
                 return Ok(IndexAnswer {
                     hits: ans.hits,
                     probed_buckets: ans.probed_buckets,
@@ -538,12 +597,28 @@ impl Coordinator {
                 probed,
                 started.elapsed().as_nanos() as u64,
             );
+            if let Some(ctx) = &trace {
+                ctx.span_since(
+                    "index_scan",
+                    started,
+                    &format!("queries={} probed={probed}", queries.len()),
+                );
+            }
+            finish(started, trace);
             return Ok(IndexAnswer { hits, probed_buckets: probed, partial: false });
         }
         let handle = self.index(name).ok_or_else(|| EmbedError::UnknownIndex(name.to_string()))?;
         let started = Instant::now();
         let (hits, probed) = handle.query_batch_f32(queries, k).map_err(EmbedError::Backend)?;
         self.metrics.on_index_query(queries.len(), probed, started.elapsed().as_nanos() as u64);
+        if let Some(ctx) = &trace {
+            ctx.span_since(
+                "index_scan",
+                started,
+                &format!("queries={} probed={probed}", queries.len()),
+            );
+        }
+        finish(started, trace);
         Ok(IndexAnswer { hits, probed_buckets: probed, partial: false })
     }
 
@@ -586,6 +661,7 @@ mod tests {
                 max_batch,
                 linger: Duration::from_millis(1),
                 queue_capacity: capacity,
+                ..CoordinatorConfig::default()
             },
         )
         .unwrap()

@@ -23,11 +23,24 @@
 //! → INDEXES             ← OK <name,name,...>
 //! → VARIANTS            ← OK <name,name,...>
 //! → METRICS             ← OK <snapshot text>
+//! → METRICS JSON        ← OK <one-line JSON object>   (full registry:
+//!                         every legacy counter plus histograms as
+//!                         {"count","sum","min","max","mean","p50","p90","p99"})
+//! → METRICS PROM        ← OK <n> then n Prometheus exposition lines
+//! → TRACE [n]           ← OK <n> then n trace lines, oldest first:
+//!                         id=<id> op=<op> total_us=<t> spans=<k>
+//!                         <stage>@<start_us>+<dur_us>(<detail>); ...
 //! → HEALTH              ← OK healthy variants=<...> indexes=<...> <snapshot>
 //! → CLUSTER [name]      ← OK index=<name> epoch=<e> p0=<shard:state:up|down,...> ...
 //!                         (sharded mode only: per-partition replica health)
 //! → QUIT                (closes the connection)
 //! ```
+//!
+//! Multi-line replies (`METRICS PROM`, `TRACE`) lead with `OK <count>`
+//! so clients know exactly how many lines follow; every other command
+//! answers on a single line. The legacy `METRICS` text stays
+//! machine-checkable via
+//! [`crate::coordinator::parse_metrics_line`].
 //!
 //! `INDEX BUILD` opens a per-connection staging buffer; `ROWS` lines
 //! stream the corpus in bounded chunks (the same seam the cluster
@@ -148,7 +161,20 @@ fn dispatch(line: &str, c: &Coordinator, state: &mut ConnState) -> String {
         "QUIT" => String::new(),
         "VARIANTS" => format!("OK {}", c.variant_names().join(",")),
         "INDEXES" => format!("OK {}", c.index_names().join(",")),
-        "METRICS" => format!("OK {}", c.metrics().snapshot()),
+        "METRICS" => match rest.trim() {
+            "" => format!("OK {}", c.metrics().snapshot()),
+            "JSON" => format!("OK {}", c.metrics().render_json()),
+            "PROM" => {
+                let lines = c.metrics().render_prom();
+                if lines.is_empty() {
+                    "OK 0".into()
+                } else {
+                    format!("OK {}\n{}", lines.len(), lines.join("\n"))
+                }
+            }
+            other => format!("ERR unknown METRICS mode '{other}'"),
+        },
+        "TRACE" => trace_dump(rest, c),
         "HEALTH" => format!("OK {}", c.health_line()),
         "CLUSTER" => cluster_status(rest, c),
         "EMBED" => {
@@ -180,6 +206,31 @@ fn dispatch(line: &str, c: &Coordinator, state: &mut ConnState) -> String {
             }
         }
         other => format!("ERR unknown command '{other}'"),
+    }
+}
+
+/// Traces returned by a bare `TRACE` (no explicit count).
+const DEFAULT_TRACE_DUMP: usize = 16;
+
+/// `TRACE [n]`: the most recent `n` (default [`DEFAULT_TRACE_DUMP`])
+/// finished traces from the coordinator's bounded ring, one rendered
+/// line each, oldest first, led by an `OK <count>` header line.
+fn trace_dump(args: &str, c: &Coordinator) -> String {
+    let args = args.trim();
+    let n = if args.is_empty() {
+        DEFAULT_TRACE_DUMP
+    } else {
+        match args.parse::<usize>() {
+            Ok(n) if n > 0 => n,
+            _ => return format!("ERR bad trace count '{args}'"),
+        }
+    };
+    let lines: Vec<String> =
+        c.metrics().traces_recent(n).iter().map(|t| t.render()).collect();
+    if lines.is_empty() {
+        "OK 0".into()
+    } else {
+        format!("OK {}\n{}", lines.len(), lines.join("\n"))
     }
 }
 
@@ -643,6 +694,91 @@ mod tests {
         assert_eq!(reply.matches(":live:up").count(), 3, "{reply}");
         assert_eq!(roundtrip(addr, "CLUSTER nn"), reply);
         assert!(roundtrip(addr, "CLUSTER nope").starts_with("ERR unknown index"));
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap();
+    }
+
+    /// Read a multi-line `OK <count>` reply: the header line plus
+    /// exactly `count` payload lines.
+    fn read_multiline(reader: &mut BufReader<TcpStream>) -> (usize, Vec<String>) {
+        let mut header = String::new();
+        reader.read_line(&mut header).unwrap();
+        let header = header.trim();
+        assert!(header.starts_with("OK "), "{header}");
+        let count: usize = header[3..].parse().unwrap();
+        let mut lines = Vec::with_capacity(count);
+        for _ in 0..count {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            lines.push(line.trim().to_string());
+        }
+        (count, lines)
+    }
+
+    #[test]
+    fn tcp_metrics_json_prom_and_trace_dump() {
+        let spec = BackendSpec::native("circulant", "sign", 4, 8, 1).unwrap();
+        let c = Arc::new(
+            Coordinator::start(
+                vec![("v".into(), spec)],
+                CoordinatorConfig { trace_sample: 1, ..CoordinatorConfig::default() },
+            )
+            .unwrap(),
+        );
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let (tx, rx) = mpsc::channel();
+        let h = std::thread::spawn(move || {
+            serve_tcp(c, "127.0.0.1:0", stop2, move |addr| {
+                let _ = tx.send(addr);
+            })
+            .unwrap();
+        });
+        let addr = rx.recv().unwrap();
+        let reply = roundtrip(addr, "EMBED v 0.1,0.2,0.3,0.4,0.5,0.6,0.7,0.8");
+        assert!(reply.starts_with("OK "), "{reply}");
+
+        // METRICS JSON: one line, parses back, carries the legacy
+        // counters and the latency histogram summary
+        let j = roundtrip(addr, "METRICS JSON");
+        assert!(j.starts_with("OK {"), "{j}");
+        let parsed = crate::util::json::Json::parse(&j[3..]).unwrap();
+        assert_eq!(parsed.get("submitted").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(parsed.get("completed").and_then(|v| v.as_f64()), Some(1.0));
+        let hist = parsed.get("request_latency_ns").expect("histogram in JSON");
+        assert_eq!(hist.get("count").and_then(|v| v.as_f64()), Some(1.0));
+        assert!(hist.get("p99").and_then(|v| v.as_f64()).unwrap() > 0.0);
+
+        // METRICS PROM: multi-line exposition with stable content
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"METRICS PROM\n").unwrap();
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        let (count, lines) = read_multiline(&mut reader);
+        assert!(count > 0);
+        assert!(lines.iter().any(|l| l == "submitted 1"), "{lines:?}");
+        assert!(
+            lines.iter().any(|l| l.starts_with("request_latency_ns_count 1")),
+            "{lines:?}"
+        );
+
+        // TRACE: every request is sampled at trace_sample=1, so the
+        // embed above produced a retrievable trace with queue+kernel
+        s.write_all(b"TRACE 8\n").unwrap();
+        let (tcount, tlines) = read_multiline(&mut reader);
+        assert!(tcount >= 1, "{tlines:?}");
+        let t = tlines.last().unwrap();
+        assert!(t.starts_with("id="), "{t}");
+        assert!(t.contains("op=embed"), "{t}");
+        assert!(t.contains("queue@"), "{t}");
+        assert!(t.contains("kernel@"), "{t}");
+        assert!(t.contains("merge@"), "{t}");
+
+        // bad TRACE args are rejected
+        assert!(roundtrip(addr, "TRACE x").starts_with("ERR bad trace count"));
+        assert!(roundtrip(addr, "TRACE 0").starts_with("ERR bad trace count"));
+        assert!(roundtrip(addr, "METRICS NOPE").starts_with("ERR unknown METRICS mode"));
+        drop(reader);
+        drop(s);
         stop.store(true, Ordering::Relaxed);
         h.join().unwrap();
     }

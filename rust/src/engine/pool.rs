@@ -24,7 +24,7 @@
 use super::{
     BatchBuf, BatchExecutor, EmbeddingPlan, EngineScalar, RowSource, BATCH_KERNEL_MAX_LANES,
 };
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -110,6 +110,13 @@ pub struct StreamingPool<S: EngineScalar = f64> {
     next: AtomicUsize,
     /// set by [`StreamingPool::close`]; dispatching afterwards panics
     closed: AtomicBool,
+    /// utilization gauge: workers currently executing a claimed chunk
+    /// (shared with the telemetry registry via
+    /// [`StreamingPool::busy_workers_cell`])
+    busy_workers: Arc<AtomicU64>,
+    /// queue-depth gauge: dispatched chunks not yet claimed by any
+    /// worker
+    queued_chunks: Arc<AtomicU64>,
 }
 
 impl<S: EngineScalar> StreamingPool<S> {
@@ -117,11 +124,15 @@ impl<S: EngineScalar> StreamingPool<S> {
     pub fn new(plan: Arc<EmbeddingPlan>, workers: usize) -> StreamingPool<S> {
         assert!(workers >= 1, "pool needs at least one worker");
         let out_dim = plan.out_dim();
+        let busy_workers = Arc::new(AtomicU64::new(0));
+        let queued_chunks = Arc::new(AtomicU64::new(0));
         let mut txs = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
             let (tx, rx) = mpsc::channel::<Msg<S>>();
             let wplan = plan.clone();
+            let busy = busy_workers.clone();
+            let queued = queued_chunks.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("strembed-engine-{w}"))
                 .spawn(move || {
@@ -143,12 +154,19 @@ impl<S: EngineScalar> StreamingPool<S> {
                                 break;
                             }
                             let end = (start + job.chunk).min(job.rows);
+                            // gauges: the claim moves one chunk from
+                            // "queued" to "busy" for its whole kernel
+                            // pass (each grid chunk is claimed exactly
+                            // once, matching dispatch's increment)
+                            queued.fetch_sub(1, Ordering::Relaxed);
+                            busy.fetch_add(1, Ordering::Relaxed);
                             let mut feats = vec![S::ZERO; (end - start) * d];
                             // whole chunk through one batched planned
                             // pass (split-complex kernels for ≥ 2
                             // rows), rows read directly from the
                             // shared source
                             exec.embed_range_into(&*job.input, start, end, &mut feats);
+                            busy.fetch_sub(1, Ordering::Relaxed);
                             // receiver may have gone away on teardown
                             let _ = job.reply.send(Shard { start, feats });
                         }
@@ -164,7 +182,21 @@ impl<S: EngineScalar> StreamingPool<S> {
             out_dim,
             next: AtomicUsize::new(0),
             closed: AtomicBool::new(false),
+            busy_workers,
+            queued_chunks,
         }
+    }
+
+    /// The live worker-utilization cell (workers currently executing a
+    /// claimed chunk). Backends hand a clone to the telemetry registry
+    /// so dashboards read pool pressure without touching the pool.
+    pub fn busy_workers_cell(&self) -> Arc<AtomicU64> {
+        self.busy_workers.clone()
+    }
+
+    /// The live queue-depth cell (dispatched chunks not yet claimed).
+    pub fn queued_chunks_cell(&self) -> Arc<AtomicU64> {
+        self.queued_chunks.clone()
     }
 
     /// Number of workers.
@@ -222,6 +254,7 @@ impl<S: EngineScalar> StreamingPool<S> {
             rows.div_ceil(workers).clamp(MIN_SHARD_ROWS, BATCH_KERNEL_MAX_LANES)
         };
         let shards = rows.div_ceil(chunk);
+        self.queued_chunks.fetch_add(shards as u64, Ordering::Relaxed);
         let job = Arc::new(Dispatch {
             input,
             rows,
@@ -480,6 +513,23 @@ mod tests {
             }
         }
         assert!(covered.iter().all(|&c| c == 1), "{covered:?}");
+    }
+
+    #[test]
+    fn utilization_gauges_return_to_zero_after_a_batch() {
+        let (pool, _plan) = pool_and_plan(3);
+        let busy = pool.busy_workers_cell();
+        let queued = pool.queued_chunks_cell();
+        assert_eq!((busy.load(Ordering::Relaxed), queued.load(Ordering::Relaxed)), (0, 0));
+        let mut rng = Rng::new(21);
+        let input = Arc::new(BatchBuf::from_rows(
+            &(0..120).map(|_| rng.gaussian_vec(32)).collect::<Vec<_>>(),
+        ));
+        // every shard received ⇒ every claim's busy increment has been
+        // matched by its decrement, and every queued chunk was claimed
+        let _ = pool.embed_batch(&input);
+        assert_eq!(busy.load(Ordering::Relaxed), 0);
+        assert_eq!(queued.load(Ordering::Relaxed), 0);
     }
 
     #[test]

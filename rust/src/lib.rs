@@ -44,7 +44,12 @@
 //!   executors (same-process channels or a length-prefixed TCP frame
 //!   protocol with pipelining and backpressure), merging per-shard
 //!   Hamming top-k exactly and failing embed traffic over to
-//!   survivors on shard death ([`cluster`]).
+//!   survivors on shard death ([`cluster`]),
+//! - structured telemetry: a lock-free metrics registry (atomic
+//!   counters/gauges + log-bucketed histograms with stable text/JSON
+//!   exposition) and sampled end-to-end request traces whose spans
+//!   (queue, kernel, per-shard scatter legs, merge) ride the cluster
+//!   frame protocol ([`telemetry`]).
 //!
 //! Layering: `dsp`/`rng` → `pmodel` → `transform` → **`engine`** →
 //! `index` → `coordinator`/`cluster` → `eval`. The engine is the only
@@ -95,5 +100,6 @@ pub mod pmodel;
 pub mod prop;
 pub mod rng;
 pub mod runtime;
+pub mod telemetry;
 pub mod transform;
 pub mod util;

@@ -1,0 +1,269 @@
+//! Lock-free log-bucketed latency histogram.
+//!
+//! A fixed grid of [`BUCKETS`] atomic counters covers the whole `u64`
+//! range (nanoseconds in practice) HDR-style: values below
+//! 2^[`SUB_BITS`] get exact buckets, and every octave above is split
+//! into 2^[`SUB_BITS`] sub-buckets, bounding the relative quantile
+//! error at `1/2^SUB_BITS` (6.25%). Recording is a handful of relaxed
+//! atomic adds — no locks, no allocation — so concurrent recorders
+//! never block each other, and a snapshot walks the fixed bucket grid
+//! (O([`BUCKETS`]), independent of how many samples were recorded).
+//! This replaces the coordinator's old `Mutex<Vec<f64>>` latency
+//! reservoir, which pushed under a lock and sorted the whole reservoir
+//! inside `snapshot()`.
+//!
+//! Exact `min`/`max` are tracked atomically alongside the buckets and
+//! clamp every reported quantile, so degenerate distributions (two
+//! samples, say) report quantiles inside the observed range instead of
+//! a bucket floor below it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Sub-bucket bits per octave: 16 sub-buckets, ≤ 6.25% relative error.
+pub const SUB_BITS: usize = 4;
+
+const SUB: usize = 1 << SUB_BITS;
+
+/// Total buckets covering all of `u64` at [`SUB_BITS`] precision.
+pub const BUCKETS: usize = (64 - SUB_BITS) * SUB + SUB;
+
+/// Lock-free histogram of `u64` values (nanoseconds by convention).
+pub struct Histogram {
+    buckets: Box<[AtomicU64; BUCKETS]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.snapshot();
+        f.debug_struct("Histogram")
+            .field("count", &s.count)
+            .field("min", &s.min)
+            .field("max", &s.max)
+            .finish()
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Histogram {
+        // Box the bucket array via a Vec to keep the (8 KiB) grid off
+        // the stack of whoever constructs the metric.
+        let v: Vec<AtomicU64> = (0..BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        let buckets: Box<[AtomicU64; BUCKETS]> =
+            v.into_boxed_slice().try_into().expect("BUCKETS-sized grid");
+        Histogram {
+            buckets,
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index of `v` (total order, monotone in `v`).
+    fn index_for(v: u64) -> usize {
+        if v < SUB as u64 {
+            v as usize
+        } else {
+            let h = 63 - v.leading_zeros() as usize;
+            (h - SUB_BITS) * SUB + (v >> (h - SUB_BITS)) as usize
+        }
+    }
+
+    /// Smallest value mapping to bucket `i` (the reported quantile
+    /// floor before min/max clamping).
+    fn lower_bound(i: usize) -> u64 {
+        let (g, s) = (i / SUB, i % SUB);
+        if g == 0 {
+            s as u64
+        } else {
+            ((SUB + s) as u64) << (g - 1)
+        }
+    }
+
+    /// Record one value: five relaxed atomic ops, no locks.
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::index_for(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in nanoseconds.
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Freeze a consistent-enough view (each field is read once; the
+    /// grid walk is O([`BUCKETS`]) regardless of sample count).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let count = self.count.load(Ordering::Relaxed);
+        let min = self.min.load(Ordering::Relaxed);
+        HistogramSnapshot {
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+            min: if count == 0 { 0 } else { min },
+            max: self.max.load(Ordering::Relaxed),
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+        }
+    }
+}
+
+/// Frozen view of a [`Histogram`].
+#[derive(Debug, Clone)]
+pub struct HistogramSnapshot {
+    /// samples recorded
+    pub count: u64,
+    /// sum of recorded values
+    pub sum: u64,
+    /// smallest recorded value (0 when empty)
+    pub min: u64,
+    /// largest recorded value (0 when empty)
+    pub max: u64,
+    /// the full bucket grid ([`BUCKETS`] entries)
+    pub buckets: Vec<u64>,
+}
+
+impl HistogramSnapshot {
+    /// Mean recorded value (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// The `q`-quantile (`q` in `[0, 1]`): the floor of the bucket
+    /// holding the rank-`ceil(q·count)` sample, clamped into
+    /// `[min, max]` so the ≤ 6.25% bucket error never reports a value
+    /// outside the observed range. 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return Histogram::lower_bound(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn buckets_are_monotone_and_cover_u64() {
+        let mut prev = 0usize;
+        for &v in &[0u64, 1, 15, 16, 17, 31, 32, 63, 64, 1000, 1 << 20, u64::MAX / 2, u64::MAX] {
+            let i = Histogram::index_for(v);
+            assert!(i < BUCKETS, "v={v} i={i}");
+            assert!(i >= prev, "index must be monotone in v (v={v})");
+            assert!(Histogram::lower_bound(i) <= v, "floor must not exceed v={v}");
+            prev = i;
+        }
+        // small values are exact
+        for v in 0..(2 * SUB as u64) {
+            assert_eq!(Histogram::lower_bound(Histogram::index_for(v)), v);
+        }
+    }
+
+    #[test]
+    fn quantiles_bounded_by_relative_error_and_clamped() {
+        let h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v * 1000);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1000);
+        assert_eq!(s.min, 1000);
+        assert_eq!(s.max, 1_000_000);
+        for &(q, want) in &[(0.5, 500_000.0), (0.9, 900_000.0), (0.99, 990_000.0)] {
+            let got = s.quantile(q) as f64;
+            let rel = (got - want).abs() / want;
+            assert!(rel <= 1.0 / SUB as f64, "q={q}: got {got}, want ~{want}, rel {rel}");
+        }
+        // two-sample degenerate case: quantiles stay inside [min, max]
+        let h = Histogram::new();
+        h.record(10_000_000);
+        h.record(20_000_000);
+        let s = h.snapshot();
+        assert_eq!(s.quantile(0.5), 10_000_000);
+        assert!(s.quantile(0.99) <= 20_000_000);
+        assert!(s.quantile(0.99) >= 10_000_000);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let s = Histogram::new().snapshot();
+        assert_eq!((s.count, s.sum, s.min, s.max), (0, 0, 0, 0));
+        assert_eq!(s.quantile(0.5), 0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn concurrent_recorders_lose_nothing() {
+        let h = Arc::new(Histogram::new());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record(t * 7 + i);
+                    }
+                })
+            })
+            .collect();
+        // snapshots race against the recorders without blocking them
+        for _ in 0..50 {
+            let s = h.snapshot();
+            assert!(s.count <= 40_000);
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 40_000);
+        assert_eq!(s.buckets.iter().sum::<u64>(), 40_000);
+        assert_eq!(s.buckets.len(), BUCKETS);
+    }
+
+    #[test]
+    fn snapshot_size_is_fixed_regardless_of_samples() {
+        // the O(buckets) regression guard: the snapshot is the fixed
+        // grid — no per-sample state survives into it, unlike the old
+        // reservoir whose snapshot sorted every recorded sample
+        let h = Histogram::new();
+        let few = h.snapshot().buckets.len();
+        for v in 0..200_000u64 {
+            h.record(v);
+        }
+        let many = h.snapshot().buckets.len();
+        assert_eq!(few, BUCKETS);
+        assert_eq!(many, BUCKETS);
+    }
+}

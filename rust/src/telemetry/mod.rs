@@ -1,0 +1,32 @@
+//! Structured telemetry: the lock-free metrics registry, log-bucketed
+//! histograms, and per-request trace plumbing every serving layer
+//! records into.
+//!
+//! Three pieces:
+//!
+//! - [`Histogram`] ([`hist`]) — a fixed grid of atomic buckets with
+//!   ≤ 6.25% relative quantile error; recording is a handful of relaxed
+//!   atomic increments and a snapshot is O(buckets), replacing the old
+//!   mutexed latency reservoir.
+//! - [`Registry`] ([`registry`]) — the single sink counters, gauges,
+//!   histograms and derived metrics register into, rendered in stable
+//!   registration order as Prometheus text (`METRICS PROM`) or one-line
+//!   JSON (`METRICS JSON`).
+//! - [`TraceCtx`] / [`TraceRing`] / [`TraceSampler`] ([`trace`]) —
+//!   sampled per-request trace contexts whose spans (queue wait, kernel
+//!   execution, per-shard scatter legs, merge) are appended by whichever
+//!   layer did the work, collected into a bounded ring served by the TCP
+//!   `TRACE [n]` command. Trace ids propagate across the cluster frame
+//!   protocol as an optional request-frame trailer.
+//!
+//! The coordinator's [`crate::coordinator::Metrics`] facade keeps its
+//! stable `on_*` API and text formats while storing everything here, so
+//! instrumentation points never couple to the registry directly.
+
+pub mod hist;
+pub mod registry;
+pub mod trace;
+
+pub use hist::{Histogram, HistogramSnapshot, BUCKETS, SUB_BITS};
+pub use registry::{sanitize_name, AtomicF64, Registry};
+pub use trace::{SpanRec, Trace, TraceCtx, TraceRing, TraceSampler, TRACE_RING_CAPACITY};

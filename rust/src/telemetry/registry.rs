@@ -1,0 +1,319 @@
+//! The metrics registry: the single sink every serving-layer counter,
+//! gauge and histogram registers into, with stable-ordered text (`PROM`)
+//! and JSON exposition.
+//!
+//! Handles are plain `Arc<AtomicU64>` / [`Arc<Histogram>`] — recording
+//! is lock-free; the registry's mutex is taken only to register a
+//! metric or render an exposition, never on the hot path. Metrics
+//! render in registration order, so both expositions are byte-stable
+//! across calls and machine-checkable by dashboards and
+//! `scripts/bench_diff.sh`.
+
+use super::hist::Histogram;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// An `f64` cell updated by compare-and-swap on its bit pattern.
+/// Non-negative finite floats compare monotonically as `u64` bits, so
+/// `max` needs no loop re-read tricks beyond the CAS itself.
+#[derive(Debug, Default)]
+pub struct AtomicF64(AtomicU64);
+
+impl AtomicF64 {
+    /// A cell holding `v`.
+    pub fn new(v: f64) -> AtomicF64 {
+        AtomicF64(AtomicU64::new(v.to_bits()))
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    /// Store `v`.
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Add `d` (CAS loop; contention is rare for sampled metrics).
+    pub fn add(&self, d: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + d).to_bits();
+            match self.0.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Raise the cell to `v` if larger.
+    pub fn max(&self, v: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        while v > f64::from_bits(cur) {
+            match self.0.compare_exchange_weak(
+                cur,
+                v.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+enum Metric {
+    Counter(Arc<AtomicU64>),
+    Gauge(Arc<AtomicU64>),
+    FloatGauge(Arc<AtomicF64>),
+    Histogram(Arc<Histogram>),
+    Func(Box<dyn Fn() -> u64 + Send + Sync>),
+}
+
+struct Entry {
+    name: String,
+    help: String,
+    metric: Metric,
+}
+
+/// Registration-ordered metric registry (see the module docs).
+#[derive(Default)]
+pub struct Registry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let names: Vec<String> =
+            self.entries.lock().unwrap().iter().map(|e| e.name.clone()).collect();
+        f.debug_struct("Registry").field("metrics", &names).finish()
+    }
+}
+
+/// Metric names are `[a-z0-9_]`: anything else maps to `_` so variant
+/// names like `circulant-sign` form valid Prometheus identifiers.
+pub fn sanitize_name(name: &str) -> String {
+    name.chars()
+        .map(|c| {
+            let c = c.to_ascii_lowercase();
+            if c.is_ascii_alphanumeric() || c == '_' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn register(&self, name: &str, help: &str, make: impl FnOnce() -> Metric) -> usize {
+        let name = sanitize_name(name);
+        let mut g = self.entries.lock().unwrap();
+        if let Some(i) = g.iter().position(|e| e.name == name) {
+            return i;
+        }
+        g.push(Entry { name, help: help.to_string(), metric: make() });
+        g.len() - 1
+    }
+
+    /// Register (or fetch) a monotone counter.
+    pub fn counter(&self, name: &str, help: &str) -> Arc<AtomicU64> {
+        let i = self.register(name, help, || Metric::Counter(Arc::new(AtomicU64::new(0))));
+        match &self.entries.lock().unwrap()[i].metric {
+            Metric::Counter(c) | Metric::Gauge(c) => c.clone(),
+            _ => panic!("metric '{name}' already registered with a different type"),
+        }
+    }
+
+    /// Register (or fetch) a gauge (set, not accumulated).
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<AtomicU64> {
+        let i = self.register(name, help, || Metric::Gauge(Arc::new(AtomicU64::new(0))));
+        match &self.entries.lock().unwrap()[i].metric {
+            Metric::Counter(c) | Metric::Gauge(c) => c.clone(),
+            _ => panic!("metric '{name}' already registered with a different type"),
+        }
+    }
+
+    /// Register an externally-owned atomic as a gauge (e.g. the
+    /// streaming pool's queue-depth cell, bumped by engine workers that
+    /// never see the registry).
+    pub fn register_gauge(&self, name: &str, help: &str, cell: Arc<AtomicU64>) {
+        self.register(name, help, || Metric::Gauge(cell));
+    }
+
+    /// Register (or fetch) a float gauge (exported in scientific
+    /// notation; used for the shadow-oracle error extremes).
+    pub fn float_gauge(&self, name: &str, help: &str) -> Arc<AtomicF64> {
+        let i = self.register(name, help, || Metric::FloatGauge(Arc::new(AtomicF64::new(0.0))));
+        match &self.entries.lock().unwrap()[i].metric {
+            Metric::FloatGauge(c) => c.clone(),
+            _ => panic!("metric '{name}' already registered with a different type"),
+        }
+    }
+
+    /// Register (or fetch) a histogram.
+    pub fn histogram(&self, name: &str, help: &str) -> Arc<Histogram> {
+        let i = self.register(name, help, || Metric::Histogram(Arc::new(Histogram::new())));
+        match &self.entries.lock().unwrap()[i].metric {
+            Metric::Histogram(h) => h.clone(),
+            _ => panic!("metric '{name}' already registered with a different type"),
+        }
+    }
+
+    /// Register a derived metric evaluated at render time (e.g. the
+    /// process-wide plan-cache hit counter, owned by `engine::cache`).
+    pub fn func(&self, name: &str, help: &str, f: impl Fn() -> u64 + Send + Sync + 'static) {
+        self.register(name, help, || Metric::Func(Box::new(f)));
+    }
+
+    /// Render every metric as Prometheus text-format lines, in
+    /// registration order. Histograms render as summaries
+    /// (`_count`/`_sum` plus `quantile` series).
+    pub fn render_prom(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for e in self.entries.lock().unwrap().iter() {
+            match &e.metric {
+                Metric::Counter(c) => {
+                    out.push(format!("# HELP {} {}", e.name, e.help));
+                    out.push(format!("# TYPE {} counter", e.name));
+                    out.push(format!("{} {}", e.name, c.load(Ordering::Relaxed)));
+                }
+                Metric::Gauge(c) => {
+                    out.push(format!("# HELP {} {}", e.name, e.help));
+                    out.push(format!("# TYPE {} gauge", e.name));
+                    out.push(format!("{} {}", e.name, c.load(Ordering::Relaxed)));
+                }
+                Metric::FloatGauge(c) => {
+                    out.push(format!("# HELP {} {}", e.name, e.help));
+                    out.push(format!("# TYPE {} gauge", e.name));
+                    out.push(format!("{} {:e}", e.name, c.get()));
+                }
+                Metric::Func(f) => {
+                    out.push(format!("# HELP {} {}", e.name, e.help));
+                    out.push(format!("# TYPE {} gauge", e.name));
+                    out.push(format!("{} {}", e.name, f()));
+                }
+                Metric::Histogram(h) => {
+                    let s = h.snapshot();
+                    out.push(format!("# HELP {} {}", e.name, e.help));
+                    out.push(format!("# TYPE {} summary", e.name));
+                    for (q, label) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99")] {
+                        out.push(format!(
+                            "{}{{quantile=\"{label}\"}} {}",
+                            e.name,
+                            s.quantile(q)
+                        ));
+                    }
+                    out.push(format!("{}_count {}", e.name, s.count));
+                    out.push(format!("{}_sum {}", e.name, s.sum));
+                }
+            }
+        }
+        out
+    }
+
+    /// Render every metric as one line of JSON, in registration order.
+    /// Scalars render as numbers; histograms as
+    /// `{"count","sum","min","max","mean","p50","p90","p99"}` objects.
+    /// The output parses back through [`crate::util::json::Json`].
+    pub fn render_json(&self) -> String {
+        let mut out = String::from("{");
+        for (i, e) in self.entries.lock().unwrap().iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":", e.name));
+            match &e.metric {
+                Metric::Counter(c) | Metric::Gauge(c) => {
+                    out.push_str(&c.load(Ordering::Relaxed).to_string());
+                }
+                Metric::FloatGauge(c) => out.push_str(&format!("{:e}", c.get())),
+                Metric::Func(f) => out.push_str(&f().to_string()),
+                Metric::Histogram(h) => {
+                    let s = h.snapshot();
+                    out.push_str(&format!(
+                        "{{\"count\":{},\"sum\":{},\"min\":{},\"max\":{},\"mean\":{:.1},\
+                         \"p50\":{},\"p90\":{},\"p99\":{}}}",
+                        s.count,
+                        s.sum,
+                        s.min,
+                        s.max,
+                        s.mean(),
+                        s.quantile(0.5),
+                        s.quantile(0.9),
+                        s.quantile(0.99)
+                    ));
+                }
+            }
+        }
+        out.push('}');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registration_order_is_stable_and_dedup_returns_same_handle() {
+        let r = Registry::new();
+        let a = r.counter("alpha", "first");
+        let _b = r.gauge("beta", "second");
+        let a2 = r.counter("alpha", "first again");
+        a.fetch_add(3, Ordering::Relaxed);
+        assert_eq!(a2.load(Ordering::Relaxed), 3, "same name -> same cell");
+        let prom = r.render_prom();
+        let names: Vec<&String> =
+            prom.iter().filter(|l| !l.starts_with('#')).collect();
+        assert!(names[0].starts_with("alpha "), "{names:?}");
+        assert!(names[1].starts_with("beta "), "{names:?}");
+        assert_eq!(names.len(), 2, "re-registration must not duplicate");
+    }
+
+    #[test]
+    fn json_round_trips_through_the_parser() {
+        let r = Registry::new();
+        r.counter("reqs", "requests").fetch_add(7, Ordering::Relaxed);
+        let h = r.histogram("lat_ns", "latency");
+        h.record(1000);
+        h.record(3000);
+        r.float_gauge("err", "max err").max(2.5e-6);
+        r.func("answer", "derived", || 42);
+        let text = r.render_json();
+        let json = crate::util::json::Json::parse(&text).expect("registry JSON parses");
+        assert_eq!(json.get("reqs").and_then(|v| v.as_f64()), Some(7.0));
+        assert_eq!(json.get("answer").and_then(|v| v.as_f64()), Some(42.0));
+        let lat = json.get("lat_ns").expect("histogram object");
+        assert_eq!(lat.get("count").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(lat.get("min").and_then(|v| v.as_f64()), Some(1000.0));
+        assert_eq!(lat.get("max").and_then(|v| v.as_f64()), Some(3000.0));
+        let err = json.get("err").and_then(|v| v.as_f64()).unwrap();
+        assert!((err - 2.5e-6).abs() < 1e-12, "{err}");
+    }
+
+    #[test]
+    fn sanitize_maps_variant_names_to_identifiers() {
+        assert_eq!(sanitize_name("circulant-sign"), "circulant_sign");
+        assert_eq!(sanitize_name("Embed.NS:v2"), "embed_ns_v2");
+    }
+
+    #[test]
+    fn float_gauge_add_and_max_accumulate() {
+        let c = AtomicF64::new(0.0);
+        c.add(1.5);
+        c.add(2.5);
+        assert!((c.get() - 4.0).abs() < 1e-12);
+        c.max(3.0);
+        assert!((c.get() - 4.0).abs() < 1e-12, "max below current is a no-op");
+        c.max(9.0);
+        assert!((c.get() - 9.0).abs() < 1e-12);
+    }
+}

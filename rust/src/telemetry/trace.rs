@@ -1,0 +1,291 @@
+//! Per-request trace contexts: a trace id minted at the coordinator,
+//! span records appended lock-cheaply from any serving layer (queue
+//! wait, kernel execution, per-shard scatter legs, merge), and a
+//! bounded ring of finished traces dumped by the TCP `TRACE` command.
+//!
+//! Tracing is *sampled*: the [`TraceSampler`] mints a context for one
+//! in every `every` requests (`--trace-sample N`, default 64), so the
+//! hot path's per-request cost is a single relaxed counter increment
+//! for the untraced majority. A sampled request carries its
+//! `Arc<TraceCtx>` alongside the payload; layers that see it append
+//! spans with offsets relative to the mint instant, and the trace id
+//! rides the cluster frame protocol so shard executors can account
+//! traced work (see `cluster::frame`).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// How many finished traces the in-memory ring keeps.
+pub const TRACE_RING_CAPACITY: usize = 256;
+
+/// One recorded stage of a traced request. Offsets are microseconds
+/// from the trace's mint instant.
+#[derive(Debug, Clone)]
+pub struct SpanRec {
+    /// stage label, e.g. `queue`, `kernel`, `scatter:shard2`, `merge`
+    pub stage: String,
+    /// microseconds from trace start to span start
+    pub start_us: u64,
+    /// span duration in microseconds
+    pub dur_us: u64,
+    /// free-form annotation (`hedged`, `timeout: ...`, `batch=4`, ...)
+    pub detail: String,
+}
+
+/// A finished trace: every span a sampled request accumulated on its
+/// way through the serving layers.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    /// the minted trace id
+    pub id: u64,
+    /// request kind (`embed`, `index_query`)
+    pub op: String,
+    /// whole-request wall time in microseconds
+    pub total_us: u64,
+    /// recorded spans, sorted by start offset
+    pub spans: Vec<SpanRec>,
+}
+
+impl Trace {
+    /// One-line rendering for the TCP `TRACE` dump:
+    /// `id=<id> op=<op> total_us=<t> spans=<n> <stage>@<start>+<dur>(<detail>); ...`
+    pub fn render(&self) -> String {
+        let spans: Vec<String> = self
+            .spans
+            .iter()
+            .map(|s| {
+                if s.detail.is_empty() {
+                    format!("{}@{}+{}", s.stage, s.start_us, s.dur_us)
+                } else {
+                    format!("{}@{}+{}({})", s.stage, s.start_us, s.dur_us, s.detail)
+                }
+            })
+            .collect();
+        format!(
+            "id={} op={} total_us={} spans={} {}",
+            self.id,
+            self.op,
+            self.total_us,
+            self.spans.len(),
+            spans.join("; ")
+        )
+    }
+}
+
+/// A live trace being assembled for one sampled request. Layers hold
+/// it as `Arc<TraceCtx>` (or a borrow) and append spans; the
+/// coordinator finishes it into a [`Trace`] when the reply is sent.
+#[derive(Debug)]
+pub struct TraceCtx {
+    id: u64,
+    t0: Instant,
+    spans: Mutex<Vec<SpanRec>>,
+}
+
+impl TraceCtx {
+    /// Mint a context with the given id, starting its clock now.
+    pub fn new(id: u64) -> Arc<TraceCtx> {
+        Arc::new(TraceCtx { id, t0: Instant::now(), spans: Mutex::new(Vec::new()) })
+    }
+
+    /// The minted trace id (propagated on cluster request frames).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The mint instant spans are measured against.
+    pub fn t0(&self) -> Instant {
+        self.t0
+    }
+
+    /// Append a span covering `start..end` (instants clamp to the mint
+    /// instant, so a span started before the trace records offset 0).
+    pub fn span_between(&self, stage: &str, start: Instant, end: Instant, detail: &str) {
+        let start_us = start.saturating_duration_since(self.t0).as_micros() as u64;
+        let dur_us = end.saturating_duration_since(start).as_micros() as u64;
+        self.spans.lock().unwrap().push(SpanRec {
+            stage: stage.to_string(),
+            start_us,
+            dur_us,
+            detail: detail.to_string(),
+        });
+    }
+
+    /// Append a span from `start` to now.
+    pub fn span_since(&self, stage: &str, start: Instant, detail: &str) {
+        self.span_between(stage, start, Instant::now(), detail);
+    }
+
+    /// Freeze into a [`Trace`] (total = elapsed since mint; spans
+    /// sorted by start offset).
+    pub fn finish(&self, op: &str) -> Trace {
+        let mut spans = self.spans.lock().unwrap().clone();
+        spans.sort_by_key(|s| (s.start_us, s.dur_us));
+        Trace {
+            id: self.id,
+            op: op.to_string(),
+            total_us: self.t0.elapsed().as_micros() as u64,
+            spans,
+        }
+    }
+}
+
+/// Bounded ring of finished traces (newest kept, oldest evicted).
+#[derive(Debug)]
+pub struct TraceRing {
+    cap: usize,
+    ring: Mutex<VecDeque<Trace>>,
+}
+
+impl Default for TraceRing {
+    fn default() -> Self {
+        TraceRing::new(TRACE_RING_CAPACITY)
+    }
+}
+
+impl TraceRing {
+    /// A ring holding at most `cap` traces.
+    pub fn new(cap: usize) -> TraceRing {
+        TraceRing { cap: cap.max(1), ring: Mutex::new(VecDeque::new()) }
+    }
+
+    /// Push a finished trace, evicting the oldest beyond capacity.
+    pub fn push(&self, t: Trace) {
+        let mut g = self.ring.lock().unwrap();
+        if g.len() == self.cap {
+            g.pop_front();
+        }
+        g.push_back(t);
+    }
+
+    /// The most recent `n` traces, oldest first.
+    pub fn recent(&self, n: usize) -> Vec<Trace> {
+        let g = self.ring.lock().unwrap();
+        g.iter().skip(g.len().saturating_sub(n)).cloned().collect()
+    }
+
+    /// Finished traces currently held.
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    /// True when no trace has finished yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Deterministic 1-in-N trace sampler: request `k` is traced iff
+/// `k % every == 0` (so the first request is always sampled, which
+/// keeps tests deterministic). `every = 0` disables tracing entirely.
+#[derive(Debug)]
+pub struct TraceSampler {
+    every: AtomicU64,
+    tick: AtomicU64,
+    next_id: AtomicU64,
+}
+
+impl TraceSampler {
+    /// A sampler minting one trace per `every` requests.
+    pub fn new(every: u64) -> TraceSampler {
+        TraceSampler {
+            every: AtomicU64::new(every),
+            tick: AtomicU64::new(0),
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    /// Change the sampling period (`0` disables).
+    pub fn set_every(&self, every: u64) {
+        self.every.store(every, Ordering::Relaxed);
+    }
+
+    /// Current sampling period.
+    pub fn every(&self) -> u64 {
+        self.every.load(Ordering::Relaxed)
+    }
+
+    /// Count one request; mint a context iff it falls on the sampling
+    /// grid. The untraced path is one relaxed increment.
+    pub fn sample(&self) -> Option<Arc<TraceCtx>> {
+        let every = self.every.load(Ordering::Relaxed);
+        if every == 0 {
+            return None;
+        }
+        let tick = self.tick.fetch_add(1, Ordering::Relaxed);
+        if tick % every != 0 {
+            return None;
+        }
+        Some(TraceCtx::new(self.next_id.fetch_add(1, Ordering::Relaxed)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn spans_record_offsets_and_render() {
+        let ctx = TraceCtx::new(7);
+        let t0 = ctx.t0();
+        ctx.span_between("queue", t0, t0 + Duration::from_micros(120), "");
+        ctx.span_between(
+            "kernel",
+            t0 + Duration::from_micros(120),
+            t0 + Duration::from_micros(420),
+            "batch=4",
+        );
+        let tr = ctx.finish("embed");
+        assert_eq!(tr.id, 7);
+        assert_eq!(tr.spans.len(), 2);
+        assert_eq!(tr.spans[0].stage, "queue");
+        assert_eq!(tr.spans[0].start_us, 0);
+        assert_eq!(tr.spans[0].dur_us, 120);
+        assert_eq!(tr.spans[1].start_us, 120);
+        let line = tr.render();
+        assert!(line.starts_with("id=7 op=embed total_us="), "{line}");
+        assert!(line.contains("queue@0+120; kernel@120+300(batch=4)"), "{line}");
+    }
+
+    #[test]
+    fn span_before_mint_clamps_to_zero() {
+        let early = Instant::now();
+        std::thread::sleep(Duration::from_millis(1));
+        let ctx = TraceCtx::new(1);
+        ctx.span_since("queue", early, "");
+        let tr = ctx.finish("embed");
+        assert_eq!(tr.spans[0].start_us, 0);
+        assert!(tr.spans[0].dur_us >= 1000);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_keeps_newest() {
+        let ring = TraceRing::new(3);
+        for id in 0..5u64 {
+            ring.push(TraceCtx::new(id).finish("embed"));
+        }
+        assert_eq!(ring.len(), 3);
+        let ids: Vec<u64> = ring.recent(10).iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![2, 3, 4]);
+        assert_eq!(ring.recent(2).len(), 2);
+        assert_eq!(ring.recent(2)[1].id, 4);
+    }
+
+    #[test]
+    fn sampler_mints_one_in_every_n() {
+        let s = TraceSampler::new(4);
+        let minted: Vec<bool> = (0..8).map(|_| s.sample().is_some()).collect();
+        assert_eq!(minted, vec![true, false, false, false, true, false, false, false]);
+        // ids are distinct and increasing
+        let s = TraceSampler::new(1);
+        let a = s.sample().unwrap();
+        let b = s.sample().unwrap();
+        assert!(b.id() > a.id());
+        // 0 disables
+        let s = TraceSampler::new(0);
+        assert!(s.sample().is_none());
+    }
+}

@@ -36,6 +36,7 @@ fn concurrent_load_all_complete() {
                 max_batch: 8,
                 linger: Duration::from_micros(500),
                 queue_capacity: 10_000,
+                ..CoordinatorConfig::default()
             },
         )
         .unwrap(),
@@ -71,6 +72,7 @@ fn backpressure_rejects_when_saturated() {
             max_batch: 1,
             linger: Duration::from_millis(0),
             queue_capacity: 2,
+            ..CoordinatorConfig::default()
         },
     )
     .unwrap();
@@ -110,6 +112,7 @@ fn f32_serving_exports_shadow_accuracy_metrics() {
                 max_batch: 32,
                 linger: Duration::from_micros(200),
                 queue_capacity: 10_000,
+                ..CoordinatorConfig::default()
             },
         )
         .unwrap(),

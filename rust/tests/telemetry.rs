@@ -1,0 +1,261 @@
+//! Telemetry integration tests: end-to-end trace propagation across
+//! real TCP shard executors (spans cover every probed replica, failed
+//! and retried legs are annotated, a killed shard leaves the answer
+//! exact), plus the machine-checkable `METRICS` surfaces and the
+//! slow-query accounting knob.
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use strembed::cluster::{
+    serve_shard, Router, RouterConfig, ShardEngine, ShardTransport, TcpTransport,
+    TcpTransportConfig,
+};
+use strembed::coordinator::{
+    parse_metrics_line, BackendSpec, Coordinator, CoordinatorConfig, IndexSpec, Precision,
+    SearchHit,
+};
+use strembed::data::synthetic::clustered_rows;
+use strembed::pmodel::StructureKind;
+use strembed::rng::Rng;
+
+const N: usize = 16;
+const SHARDS: usize = 4;
+
+fn shard_specs() -> Vec<(String, BackendSpec)> {
+    vec![(
+        "circ-sign".to_string(),
+        BackendSpec::native("circulant", "sign", 8, N, 1)
+            .expect("native spec")
+            .with_precision(Precision::F64)
+            .with_workers(2),
+    )]
+}
+
+/// Spawn a shard server on an OS-assigned port; keeps the engine
+/// handle so tests can inspect the shard-side metrics (the proof that
+/// a trace id actually crossed the wire).
+fn spawn_tcp_shard(
+    name: &'static str,
+) -> (String, Arc<ShardEngine>, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+    let engine = Arc::new(ShardEngine::new(name, shard_specs()).expect("shard engine"));
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let handle = {
+        let engine = engine.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            serve_shard(engine, "127.0.0.1:0", stop, move |bound| {
+                addr_tx.send(bound).expect("send bound addr");
+            })
+            .expect("serve_shard");
+        })
+    };
+    let bound = addr_rx.recv_timeout(Duration::from_secs(5)).expect("shard bound");
+    (bound.to_string(), engine, stop, handle)
+}
+
+fn tcp_config() -> TcpTransportConfig {
+    TcpTransportConfig {
+        connect_timeout: Duration::from_secs(1),
+        call_timeout: Duration::from_secs(2),
+        window: 4,
+    }
+}
+
+fn id_hamming(hits: &[SearchHit]) -> Vec<(usize, u32)> {
+    hits.iter().map(|h| (h.id, h.hamming)).collect()
+}
+
+/// The tentpole acceptance path: a coordinator sampling every request
+/// (`trace_sample = 1`) over a 4-shard replicated TCP cluster must
+/// produce retrievable traces whose scatter legs name the probed
+/// shards, propagate the trace id onto the shard executors, annotate
+/// a killed shard's failed leg and the covering retry — and keep the
+/// answer exact throughout.
+#[test]
+fn trace_propagates_across_tcp_shards_and_survives_a_kill() {
+    let mut shards = Vec::new();
+    for name in ["telem-a", "telem-b", "telem-c", "telem-d"] {
+        shards.push(spawn_tcp_shard(name));
+    }
+    let transports: Vec<Box<dyn ShardTransport>> = shards
+        .iter()
+        .map(|(addr, _, _, _)| {
+            Box::new(TcpTransport::new(addr.clone(), tcp_config())) as Box<dyn ShardTransport>
+        })
+        .collect();
+    let config = RouterConfig {
+        replicas: 2,
+        deadline: Some(Duration::from_secs(2)),
+        ..RouterConfig::default()
+    };
+    let router = Router::handle_with_config(transports, config).expect("router");
+
+    let mut rng = Rng::new(77);
+    let corpus = clustered_rows(48, N, &mut rng);
+    let spec = IndexSpec::new(StructureKind::Circulant, 64, N).with_seed(7).with_workers(2);
+    router.build_index("tnn", spec.clone(), &corpus).expect("cluster build");
+
+    let mut specs = Vec::new();
+    for (name, shard_spec) in shard_specs() {
+        specs.push((name.clone(), BackendSpec::cluster(&name, &shard_spec, router.clone())));
+    }
+    let coordinator = Coordinator::start_with_cluster(
+        specs,
+        CoordinatorConfig { trace_sample: 1, ..CoordinatorConfig::default() },
+        Some(router.clone()),
+    )
+    .expect("clustered coordinator");
+
+    // --- embed: queue wait + scatter legs + merge in one trace ---
+    let row: Vec<f32> = (0..N).map(|j| j as f32 / N as f32 - 0.5).collect();
+    coordinator.embed_blocking("circ-sign", row).expect("clustered embed");
+    let traces = coordinator.metrics().traces_recent(8);
+    let embed_trace =
+        traces.iter().rev().find(|t| t.op == "embed").expect("embed trace in the ring");
+    let stages: Vec<&str> = embed_trace.spans.iter().map(|s| s.stage.as_str()).collect();
+    assert!(stages.contains(&"queue"), "no queue-wait span: {stages:?}");
+    assert!(
+        stages.iter().any(|s| s.starts_with("scatter:shard")),
+        "no scatter leg span: {stages:?}"
+    );
+    assert!(stages.contains(&"merge"), "no merge span: {stages:?}");
+
+    // --- propagation: the trace trailer reached a shard executor ---
+    let shard_traced: u64 = shards
+        .iter()
+        .map(|(_, engine, _, _)| engine.metrics().snapshot().traced_requests)
+        .sum();
+    assert!(shard_traced >= 1, "no shard executor saw a propagated trace id");
+
+    // --- healthy query: scatter spans cover the probed replicas ---
+    let queries32: Vec<Vec<f32>> = [5usize, 17]
+        .iter()
+        .map(|&i| corpus[i].iter().map(|&v| v as f32).collect())
+        .collect();
+    // widen exactly the way the coordinator widens, so the reference
+    // answer is bit-comparable
+    let wide: Vec<Vec<f64>> = queries32
+        .iter()
+        .map(|q| q.iter().map(|&v| v as f64).collect())
+        .collect();
+    let reference = strembed::index::IndexHandle::build(spec, &corpus).expect("reference");
+    let (want, _) = reference.query_batch(&wide, 7).expect("reference query");
+
+    let full = coordinator.index_query_answer("tnn", &queries32, 7).expect("cluster query");
+    assert!(!full.partial);
+    for (got, want) in full.hits.iter().zip(&want) {
+        assert_eq!(id_hamming(got), id_hamming(want), "cluster query diverged");
+    }
+    let traces = coordinator.metrics().traces_recent(8);
+    let qt = traces
+        .iter()
+        .rev()
+        .find(|t| t.op == "index_query")
+        .expect("index_query trace in the ring");
+    let scatter_shards: BTreeSet<usize> = qt
+        .spans
+        .iter()
+        .filter_map(|s| s.stage.strip_prefix("scatter:shard"))
+        .map(|id| id.parse().expect("shard id in span stage"))
+        .collect();
+    assert!(
+        scatter_shards.iter().all(|&s| s < SHARDS),
+        "span named a shard that does not exist: {scatter_shards:?}"
+    );
+    // 4 partitions at 2 replicas each: complete coverage needs at
+    // least two distinct shard probes, each recorded as a span
+    assert!(scatter_shards.len() >= 2, "probed replicas missing from trace: {}", qt.render());
+    assert!(
+        qt.spans.iter().any(|s| s.stage == "merge" && s.detail.contains("queries=2")),
+        "merge span missing: {}",
+        qt.render()
+    );
+
+    // --- kill shard 0 mid-serving: its partitions re-cover from the
+    // replica homes; the trace records the failed leg and the retry ---
+    let (_, _, stop0, join0) = shards.remove(0);
+    stop0.store(true, Ordering::SeqCst);
+    join0.join().expect("shard 0 join");
+
+    let degraded =
+        coordinator.index_query_answer("tnn", &queries32, 7).expect("degraded query");
+    assert!(!degraded.partial, "replicas=2 must keep the answer complete through a kill");
+    for (got, want) in degraded.hits.iter().zip(&want) {
+        assert_eq!(id_hamming(got), id_hamming(want), "killed shard changed the answer");
+    }
+    let traces = coordinator.metrics().traces_recent(8);
+    let kt = traces
+        .iter()
+        .rev()
+        .find(|t| t.op == "index_query")
+        .expect("post-kill trace in the ring");
+    assert!(
+        kt.spans
+            .iter()
+            .any(|s| s.detail.contains("unreachable") || s.detail.contains("timeout")),
+        "dead shard's failed leg not annotated: {}",
+        kt.render()
+    );
+    assert!(
+        kt.spans.iter().any(|s| s.detail.contains("retry-round")),
+        "covering retry leg not annotated: {}",
+        kt.render()
+    );
+
+    coordinator.shutdown();
+    drop(router);
+    for (_, _, stop, join) in shards {
+        stop.store(true, Ordering::SeqCst);
+        join.join().expect("shard join");
+    }
+}
+
+/// The `--slow-ms` knob lands in the metrics facade, the legacy text
+/// format stays machine-checkable, and the JSON exposition carries the
+/// same counters plus histogram summaries.
+#[test]
+fn slow_query_knob_and_metrics_text_round_trip() {
+    let spec = BackendSpec::native("circulant", "sign", 4, 8, 1)
+        .expect("native spec")
+        .with_precision(Precision::F64)
+        .with_workers(2);
+    let coordinator = Coordinator::start(
+        vec![("v".into(), spec)],
+        CoordinatorConfig { slow_ms: 5, trace_sample: 1, ..CoordinatorConfig::default() },
+    )
+    .expect("coordinator");
+    let row: Vec<f32> = (0..8).map(|j| j as f32 / 8.0).collect();
+    coordinator.embed_blocking("v", row).expect("embed");
+    let m = coordinator.metrics();
+
+    // the config wired the 5 ms threshold into the facade: a 6 ms
+    // latency crosses it, 4 ms does not
+    assert!(m.observe_slow("embed", Duration::from_millis(6), Some(1)));
+    assert!(!m.observe_slow("embed", Duration::from_millis(4), None));
+    let snap = m.snapshot();
+    assert_eq!(snap.slow_queries, 1);
+    assert!(snap.traced_requests >= 1, "trace_sample=1 samples the first request");
+
+    // legacy text: every token is key=value, keys are unique
+    let text = format!("{}", m.snapshot());
+    let fields = parse_metrics_line(&text).expect("metrics text parses");
+    let keys: Vec<&String> = fields.iter().map(|(k, _)| k).collect();
+    let unique: BTreeSet<&String> = keys.iter().copied().collect();
+    assert_eq!(unique.len(), keys.len(), "duplicate metric key in: {text}");
+    assert!(fields.iter().any(|(k, v)| k == "slow_queries" && v == "1"), "{text}");
+
+    // JSON carries the same counter plus the latency histogram object
+    let json = strembed::util::json::Json::parse(&m.render_json()).expect("json parses");
+    assert_eq!(json.get("slow_queries").and_then(|v| v.as_f64()), Some(1.0));
+    let lat = json.get("request_latency_ns").expect("histogram in JSON");
+    assert!(lat.get("count").and_then(|v| v.as_f64()).unwrap() >= 1.0);
+
+    // the sampled embed left a retrievable trace
+    let traces = m.traces_recent(4);
+    assert!(traces.iter().any(|t| t.op == "embed"), "{traces:?}");
+    coordinator.shutdown();
+}

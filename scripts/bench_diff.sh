@@ -37,6 +37,13 @@
 #                                          every other entry),
 #                                          idle_p50_ns, rebuilding_p50_ns
 #                                          (p99s reported, not diffed)
+#   telemetry[]:  (kind=embed, batch)   -> uninstrumented_ns_per_row,
+#                                          instrumented_ns_per_row;
+#                                          additionally a within-report
+#                                          gate fails the run if
+#                                          instrumented/uninstrumented
+#                                          exceeds 1.10 on any batch
+#                 (kind=hist_record)    -> record_ns_per_op
 #
 # THRESHOLD_PCT defaults to 10 (also overridable via the
 # BENCH_DIFF_THRESHOLD environment variable). Entries present only in
@@ -119,13 +126,21 @@ def tracked(report):
         # p50 only: single-run p99 tails are too noisy to gate on
         out[f"{key}/idle_p50"] = float(r["idle_p50_ns"])
         out[f"{key}/rebuilding_p50"] = float(r["rebuilding_p50_ns"])
+    for r in report.get("telemetry", []):
+        if r.get("kind") == "embed":
+            key = f"telemetry/batch{r['batch']}"
+            out[f"{key}/uninstrumented"] = float(r["uninstrumented_ns_per_row"])
+            out[f"{key}/instrumented"] = float(r["instrumented_ns_per_row"])
+        elif r.get("kind") == "hist_record":
+            out["telemetry/hist_record"] = float(r["record_ns_per_op"])
     return out
 
 
 with open(baseline_path) as f:
     base = tracked(json.load(f))
 with open(current_path) as f:
-    cur = tracked(json.load(f))
+    cur_raw = json.load(f)
+cur = tracked(cur_raw)
 
 if not base:
     print(f"bench_diff: no tracked entries in baseline {baseline_path}", file=sys.stderr)
@@ -149,6 +164,30 @@ for name in sorted(base):
 for name in missing:
     print(f"bench_diff: WARNING: '{name}' tracked in baseline but absent "
           f"from {current_path}", file=sys.stderr)
+
+# Within-report observability gate, independent of baseline drift: the
+# instrumented serving embed must stay within 10% of the bare one. A
+# fixed 1.10 ratio, not THRESHOLD — the telemetry-overhead budget is an
+# acceptance criterion, not a tunable regression margin.
+overhead_fails = []
+for r in cur_raw.get("telemetry", []):
+    if r.get("kind") != "embed":
+        continue
+    bare = float(r["uninstrumented_ns_per_row"])
+    inst = float(r["instrumented_ns_per_row"])
+    ratio = inst / bare if bare > 0 else 0.0
+    flag = " <-- OVER BUDGET" if ratio > 1.10 else ""
+    print(f"telemetry overhead batch{r['batch']:<5} "
+          f"{bare:9.1f}ns {inst:9.1f}ns {ratio:6.3f}x{flag}")
+    if ratio > 1.10:
+        overhead_fails.append((r["batch"], ratio))
+
+if overhead_fails:
+    print(f"\nbench_diff: FAIL — telemetry instrumentation exceeds the "
+          f"1.10x overhead budget:", file=sys.stderr)
+    for batch, ratio in overhead_fails:
+        print(f"  batch {batch}: {ratio:.3f}x", file=sys.stderr)
+    sys.exit(1)
 
 if regressions:
     print(f"\nbench_diff: FAIL — {len(regressions)} entr"

@@ -40,6 +40,15 @@ cargo test -q --test cluster_faults
 echo "== self-healing: cargo test -q --test cluster_faults -- heal repair rehome"
 cargo test -q --test cluster_faults -- heal repair rehome
 
+# The observability suite: end-to-end trace propagation across real
+# TCP shard executors (scatter legs span every probed replica, a killed
+# shard's failed leg and covering retry are annotated, answers stay
+# exact) plus the machine-checkable METRICS text/JSON/PROM surfaces and
+# the slow-query knob. Gate it explicitly — tracing regressions don't
+# fail answers, only the ability to debug them.
+echo "== telemetry: cargo test -q --test telemetry"
+cargo test -q --test telemetry
+
 # Benches are plain binaries (harness = false) that tier-1 never
 # compiles; build them so bench code can't silently rot.
 echo "== cargo bench --no-run (bench code must keep building)"
